@@ -1,0 +1,52 @@
+//! Table 3 driver: biased (Eq. 7) vs unbiased two-sample (Eq. 8) HTE.
+//!
+//! Paper finding to reproduce: the unbiased version is ~10% slower
+//! (two probe sets per step), slightly more memory, marginally better
+//! error; the biased version is already sufficient.
+//!
+//!     cargo run --release --example bias_vs_unbiased -- --epochs 2000
+
+use anyhow::Result;
+use hte_pinn::coordinator::{experiment_bias, ExperimentOpts};
+use hte_pinn::runtime::Manifest;
+use hte_pinn::table;
+use hte_pinn::util::args::Args;
+use hte_pinn::util::json::Value;
+
+fn main() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1), &[])?;
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&artifacts)?;
+    let opts = ExperimentOpts {
+        artifact_dir: artifacts,
+        seeds: (0..args.get_parse("seeds", 3u64)?).collect(),
+        epochs: args.get_parse("epochs", 2000usize)?,
+        threads: args.get_parse("threads", 2usize)?,
+        eval_points: args.get_parse("eval-points", 20_000usize)?,
+        lr0: args.get_parse("lr0", 1e-3f32)?,
+    };
+    let dims = args.get_list("dims", &manifest.dims_for("train", "sg2", "unbiased"))?;
+    args.finish()?;
+
+    let rows = experiment_bias(&opts, &manifest, &dims, 16)?;
+    let rendered = table::render("Table 3: biased vs unbiased HTE (V=16)", &rows);
+    println!("{rendered}");
+    // speed ratio check (paper: unbiased ~10% slower)
+    for &d in &dims {
+        let speed = |m: &str| {
+            rows.iter()
+                .find(|r| r.method.starts_with(m) && r.d == d)
+                .map(|r| r.it_per_sec)
+        };
+        if let (Some(b), Some(u)) = (speed("Biased"), speed("Unbiased")) {
+            println!("d={d}: unbiased/biased speed ratio = {:.2} (paper ~0.9)", u / b);
+        }
+    }
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/table3.md", &rendered)?;
+    std::fs::write(
+        "results/table3_rows.json",
+        Value::Arr(rows.iter().map(|r| r.to_json()).collect()).to_json(),
+    )?;
+    Ok(())
+}

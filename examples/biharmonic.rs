@@ -1,0 +1,45 @@
+//! Table 5 driver: fourth-order biharmonic equation via the TVP estimator.
+//!
+//! Paper findings to reproduce: vanilla PINN's cost explodes with d (the
+//! d^4 tensor) and OOMs earliest of all experiments; TVP-HTE (Gaussian
+//! probes, Theorem 3.4) stays fast, and because Gaussian probes put
+//! variance on the diagonal too, it needs a larger V than the
+//! second-order case to match full-PINN error (V=16 underperforms;
+//! V=512/1024 in the paper, scaled V sweep here).
+//!
+//!     cargo run --release --example biharmonic -- --epochs 3000
+
+use anyhow::Result;
+use hte_pinn::coordinator::{experiment_biharmonic, ExperimentOpts};
+use hte_pinn::runtime::Manifest;
+use hte_pinn::table;
+use hte_pinn::util::args::Args;
+use hte_pinn::util::json::Value;
+
+fn main() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1), &[])?;
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&artifacts)?;
+    let opts = ExperimentOpts {
+        artifact_dir: artifacts,
+        seeds: (0..args.get_parse("seeds", 3u64)?).collect(),
+        epochs: args.get_parse("epochs", 3000usize)?,
+        threads: args.get_parse("threads", 2usize)?,
+        eval_points: args.get_parse("eval-points", 20_000usize)?,
+        lr0: args.get_parse("lr0", 1e-3f32)?,
+    };
+    let dims = args.get_list("dims", &manifest.dims_for("train", "bihar", "probe4"))?;
+    let vs = args.get_list("vs", &[4, 16, 64])?;
+    args.finish()?;
+
+    let rows = experiment_biharmonic(&opts, &manifest, &dims, &vs)?;
+    let rendered = table::render("Table 5: biharmonic equation (TVP-HTE)", &rows);
+    println!("{rendered}");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/table5.md", &rendered)?;
+    std::fs::write(
+        "results/table5_rows.json",
+        Value::Arr(rows.iter().map(|r| r.to_json()).collect()).to_json(),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Cross-validation: compiled-artifact backend vs the native Rust engine.
+//!
+//! Trains the same HTE-PINN configuration twice — once through the AOT
+//! XLA artifact (the production path), once through the in-repo
+//! tensor/autodiff/jet engine — and compares convergence.  Two fully
+//! independent implementations of the paper's method agreeing on the
+//! relative-L2 outcome is the strongest correctness signal in the repo.
+//!
+//!     cargo run --release --offline --example native_backend -- --d 10 --epochs 400
+
+use anyhow::Result;
+use hte_pinn::coordinator::{
+    problem_for, EvalPool, MetricsLogger, NativeTrainer, TrainConfig, Trainer,
+};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::runtime::Engine;
+use hte_pinn::util::args::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1), &[])?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let config = TrainConfig {
+        family: "sg2".into(),
+        method: "probe".into(),
+        estimator: Estimator::HteRademacher,
+        d: args.get_parse("d", 10usize)?,
+        v: args.get_parse("v", 16usize)?,
+        epochs: args.get_parse("epochs", 400usize)?,
+        lr0: args.get_parse("lr0", 2e-3f32)?,
+        seed: args.get_parse("seed", 0u64)?,
+        lambda_g: 10.0,
+        log_every: usize::MAX,
+    };
+    args.finish()?;
+
+    let problem = problem_for(&config.family, config.d)?;
+    let pool = EvalPool::generate(problem.domain(), config.d, 4000, 99);
+    let mut logger = MetricsLogger::null();
+
+    println!("== native backend (pure rust tensor/autodiff/jet) ==");
+    let mut native = NativeTrainer::new(config.clone(), 100)?;
+    let ns = native.run(&mut logger)?;
+    let native_rel = native.evaluate(&pool);
+    println!(
+        "  {} steps, {:.1} it/s, final loss {:.4e}, rel L2 {:.4e}",
+        ns.steps, ns.it_per_sec, ns.final_loss, native_rel
+    );
+
+    println!("== compiled backend (AOT XLA artifact over PJRT) ==");
+    let engine = Engine::load(&artifacts)?;
+    let mut compiled = Trainer::new(&engine, config.clone())?;
+    let cs = compiled.run(&mut logger)?;
+    let compiled_rel = compiled.evaluate(&pool)?;
+    println!(
+        "  {} steps, {:.1} it/s, final loss {:.4e}, rel L2 {:.4e}",
+        cs.steps, cs.it_per_sec, cs.final_loss, compiled_rel
+    );
+
+    let ratio = native_rel / compiled_rel;
+    println!("rel-L2 ratio native/compiled = {ratio:.2} (independent impls should land within ~2x)");
+    anyhow::ensure!(
+        (0.4..=2.5).contains(&ratio),
+        "backends disagree: native {native_rel:.3e} vs compiled {compiled_rel:.3e}"
+    );
+    println!("cross-validation OK");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart — the end-to-end validation driver.
+//!
+//! Trains an HTE-PINN on the 100-dimensional two-body Sine-Gordon problem
+//! (Eq. 17/19; ~46k parameters at d=100) for a few thousand Adam steps,
+//! logging the loss curve to `results/quickstart.jsonl`, then reports the
+//! relative L2 error against the exact solution on a 20k-point test pool.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Flags: --d, --v, --epochs, --lr0, --seed, --artifacts, --estimator.
+
+use anyhow::Result;
+use hte_pinn::coordinator::{
+    problem_for, EvalPool, MetricsLogger, TrainConfig, Trainer,
+};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::runtime::Engine;
+use hte_pinn::util::args::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1), &[])?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let config = TrainConfig {
+        family: args.get_or("family", "sg2"),
+        method: "probe".into(),
+        estimator: args.get_or("estimator", "hte").parse::<Estimator>()?,
+        d: args.get_parse("d", 100usize)?,
+        v: args.get_parse("v", 16usize)?,
+        epochs: args.get_parse("epochs", 2000usize)?,
+        lr0: args.get_parse("lr0", 1e-3f32)?,
+        seed: args.get_parse("seed", 0u64)?,
+        lambda_g: 10.0,
+        log_every: 100,
+    };
+    args.finish()?;
+
+    println!("hte-pinn quickstart: {}", config.label());
+    let engine = Engine::load(&artifacts)?;
+    let mut trainer = Trainer::new(&engine, config.clone())?;
+    let mut logger = MetricsLogger::to_file("results/quickstart.jsonl")?;
+    println!("training {} epochs (loss curve -> results/quickstart.jsonl)...", config.epochs);
+    let summary = trainer.run(&mut logger)?;
+    println!(
+        "done: steps={} final_loss={:.4e} speed={:.1} it/s wall={:.1}s",
+        summary.steps, summary.final_loss, summary.it_per_sec, summary.wall_s
+    );
+
+    let problem = problem_for(&config.family, config.d)?;
+    let pool = EvalPool::generate(problem.domain(), config.d, 20_000, config.seed);
+    let rel_l2 = trainer.evaluate(&pool)?;
+    println!("relative L2 error vs exact solution (20k test points): {rel_l2:.4e}");
+    println!("(paper, Table 1 @100D: HTE 6.30E-3±2.88E-3 after 10k epochs on A100)");
+    Ok(())
+}

@@ -1,0 +1,210 @@
+"""AOT compiler: lower every artifact to HLO *text* + write the manifest.
+
+HLO text (NOT ``lowered.compiler_ir("hlo")``'s proto serialization) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate
+links) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Every artifact is a pure function with static shapes and a single
+non-tuple output so the Rust runtime can feed output buffers straight back
+into the next step (DESIGN.md §6).
+
+Usage (from ``python/``):
+    python -m compile.aot --out ../artifacts [--quick] [--heavy]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .exact_solutions import FAMILIES
+from .mlp import param_layout
+from .model import build_eval_fn, build_eval_kernel_fn, build_resval_fn, build_train_fn
+from .optimizer import state_layout
+
+N_RESIDUAL = 100  # residual batch size (paper: 100 points per Adam epoch)
+M_EVAL = 2000  # test-pool batch per eval call (Rust loops the 20k pool)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def input_specs(names, *, d, S, V=None, V2=None, Vg=None, N=None, C=None):
+    """Concrete ShapeDtypeStructs for an artifact's ordered input list."""
+    shapes = {
+        "state": (S,),
+        "x": (N, d),
+        "probes": (V, d),
+        "probes2": (V2 or V, d),
+        "gprobes": (Vg, d),
+        "coeff": (C,),
+        "lam": (1,),
+        "lr": (1,),
+    }
+    return [f32(*shapes[n]) for n in names], [
+        {"name": n, "shape": list(shapes[n]), "dtype": "f32"} for n in names
+    ]
+
+
+def default_specs(quick=False, heavy=False):
+    """The artifact set; each entry is (kind, family, method, d, V, Vg, N)."""
+    specs = []
+
+    def add(kind, family, method, d, V=0, Vg=0, N=N_RESIDUAL):
+        specs.append(dict(kind=kind, family=family, method=method, d=d, V=V, Vg=Vg, N=N))
+
+    if quick:
+        add("train", "sg2", "probe", 10, V=4, N=16)
+        add("train", "sg2", "unbiased", 10, V=4, N=16)
+        add("train", "sg2", "full", 10, N=16)
+        add("train", "bihar", "probe4", 5, V=4, N=16)
+        add("eval", "sg2", "eval", 10, N=256)
+        add("eval", "bihar", "eval", 5, N=256)
+        add("resval", "sg2", "resval", 10, V=4, N=16)
+        add("resval", "bihar", "resval4", 5, V=4, N=16)
+        add("evalk", "sg2", "evalk", 10, N=256)
+        return specs
+
+    sg_dims = [10, 100, 1000]
+    bihar_dims = [5, 10, 20]
+
+    for fam in ("sg2", "sg3"):
+        for d in sg_dims:
+            add("train", fam, "probe", d, V=16)  # HTE / SDGD / exact share this
+            add("eval", fam, "eval", d, N=M_EVAL)
+        for d in (10, 100):
+            add("train", fam, "full", d)  # vanilla-PINN baseline
+    # exact-trace-by-probes validation (V = d)
+    for d in (10, 100):
+        add("train", "sg2", "probe", d, V=d)
+    # Table 2: V sweep at the largest dim
+    for v in (1, 4, 8):
+        add("train", "sg2", "probe", 1000, V=v)
+    # Table 3: unbiased variant
+    for d in sg_dims:
+        add("train", "sg2", "unbiased", d, V=16)
+    # Table 4: gPINN
+    for d in sg_dims:
+        add("train", "sg2", "gpinn_probe", d, V=16, Vg=8)
+    add("train", "sg2", "gpinn_full", 10)
+    # Section 3.5.1 extension: Deep Ritz with HTE gradient-norm estimation
+    for d in (10, 100):
+        add("train", "sg2", "ritz", d, V=8)
+    if heavy:
+        add("train", "sg2", "gpinn_full", 100)
+        add("train", "sg2", "probe", 5000, V=16)
+        add("eval", "sg2", "eval", 5000, N=M_EVAL)
+    # Table 5: biharmonic
+    for d in bihar_dims:
+        for v in (4, 16, 64):
+            add("train", "bihar", "probe4", d, V=v)
+        add("eval", "bihar", "eval", d, N=M_EVAL)
+    for d in (5, 10):
+        add("train", "bihar", "full4", d)
+    # Pallas-kernel-path artifacts (forward-only)
+    add("resval", "sg2", "resval", 100, V=16)
+    add("resval", "bihar", "resval4", 10, V=16)
+    for fam, d in (("sg2", 10), ("sg3", 10), ("bihar", 5)):
+        add("evalk", fam, "evalk", d, N=M_EVAL)
+    return specs
+
+
+def artifact_name(spec):
+    parts = [spec["family"], spec["method"], f"d{spec['d']}"]
+    if spec["V"]:
+        parts.append(f"v{spec['V']}")
+    if spec["Vg"]:
+        parts.append(f"vg{spec['Vg']}")
+    parts.append(f"n{spec['N']}")
+    return "_".join(parts)
+
+
+def build_one(spec):
+    """Returns (fn, example_args, input_spec_json)."""
+    family, method, d = spec["family"], spec["method"], spec["d"]
+    layout, n_params = param_layout(d)
+    S = state_layout(n_params)["size"]
+    C = FAMILIES[family]["n_coeff"](d)
+    common = dict(d=d, S=S, V=spec["V"], Vg=spec["Vg"], N=spec["N"], C=C)
+
+    if spec["kind"] == "train":
+        fn, names = build_train_fn(family, method, d)
+    elif spec["kind"] == "eval":
+        fn, names = build_eval_fn(family, d)
+    elif spec["kind"] == "resval":
+        order = 4 if family == "bihar" else 2
+        fn, names = build_resval_fn(family, d, order)
+    elif spec["kind"] == "evalk":
+        fn, names = build_eval_kernel_fn(family, d)
+    else:
+        raise ValueError(spec["kind"])
+
+    args, ispec = input_specs(names, **common)
+    return fn, args, ispec, n_params, S, C, layout
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="small fast set for tests")
+    ap.add_argument("--heavy", action="store_true", help="add the big-dim artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "hidden": 128, "depth": 4, "entries": []}
+    specs = default_specs(quick=args.quick, heavy=args.heavy)
+    t_all = time.time()
+    for spec in specs:
+        name = artifact_name(spec)
+        t0 = time.time()
+        fn, ex_args, ispec, n_params, S, C, layout = build_one(spec)
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        so = state_layout(n_params)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": spec["kind"],
+                "family": spec["family"],
+                "method": spec["method"],
+                "d": spec["d"],
+                "v": spec["V"],
+                "vg": spec["Vg"],
+                "n": spec["N"],
+                "n_coeff": C,
+                "n_params": n_params,
+                "state_size": S,
+                "state_offsets": {k: so[k] for k in ("params", "m", "v", "t", "loss")},
+                "inputs": ispec,
+                "param_layout": layout,
+            }
+        )
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s", flush=True)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(specs)} artifacts + manifest in {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Exact solutions and *closed-form* forcing terms for the paper's PDEs.
+
+The paper's three benchmark manufactured solutions:
+
+  * two-body Sine-Gordon (Eq. 17):
+        u = (1 - |x|^2) * sum_{i=1}^{d-1} c_i sin(psi_i),
+        psi_i = x_i + cos(x_{i+1}) + x_{i+1} cos(x_i)
+  * three-body Sine-Gordon (Eq. 18):
+        u = (1 - |x|^2) * sum_{i=1}^{d-2} c_i exp(x_i x_{i+1} x_{i+2})
+  * biharmonic (Eq. 26):
+        u = (1 - |x|^2)(4 - |x|^2) * sum_{i=1}^{d-2} c_i exp(x_i x_{i+1} x_{i+2})
+
+The forcing terms are ``g = lap(u) + sin(u)`` (Sine-Gordon, Eq. 19) and
+``g = biharmonic(u)`` (Eq. 27).  The authors evaluate these with autodiff;
+that would re-introduce the O(d^2)/O(d^4) cost into *every* method's train
+step, so we derive the Laplacian and bilaplacian in closed form (full
+derivations in DESIGN.md §2; verified against nested autodiff in
+``python/tests/test_exact_solutions.py`` and against finite differences on
+the Rust side).
+
+All functions take a single point ``x: f32[d]`` and the per-seed
+coefficients ``c`` and are meant to be ``vmap``-ed over a batch.
+
+Notation for the derivations:
+  s = |x|^2, A = 1 - s, so grad A = -2x, lap A = -2d.
+  For a product:  lap(A S) = S lap A + 2 grad A . grad S + A lap S
+                           = -2 d S - 4 x.grad S + (1 - s) lap S.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Two-body Sine-Gordon solution (Eq. 17)
+# ---------------------------------------------------------------------------
+
+def _two_body_parts(x, c):
+    """Common subexpressions: psi_i, alpha_i = dpsi/dx_i, beta_i = dpsi/dx_{i+1}."""
+    xi, xj = x[:-1], x[1:]  # x_i and x_{i+1}, i = 1..d-1
+    psi = xi + jnp.cos(xj) + xj * jnp.cos(xi)
+    alpha = 1.0 - xj * jnp.sin(xi)
+    beta = -jnp.sin(xj) + jnp.cos(xi)
+    return xi, xj, psi, alpha, beta
+
+
+def two_body_u(x, c):
+    _, _, psi, _, _ = _two_body_parts(x, c)
+    s = jnp.dot(x, x)
+    return (1.0 - s) * jnp.dot(c, jnp.sin(psi))
+
+
+def two_body_lap(x, c):
+    """Closed-form Laplacian of Eq. 17.
+
+    With S = sum c_i sin(psi_i):
+      dS/dx_k  = c_k cos(psi_k) alpha_k + c_{k-1} cos(psi_{k-1}) beta_{k-1}
+      lap S    = sum_i c_i [ -sin(psi_i)(alpha_i^2 + beta_i^2)
+                             + cos(psi_i)(-x_{i+1} cos(x_i) - cos(x_{i+1})) ]
+      x.grad S = sum_i c_i cos(psi_i) (x_i alpha_i + x_{i+1} beta_i)
+    """
+    xi, xj, psi, alpha, beta = _two_body_parts(x, c)
+    s = jnp.dot(x, x)
+    sin_psi, cos_psi = jnp.sin(psi), jnp.cos(psi)
+    S = jnp.dot(c, sin_psi)
+    x_dot_grad_s = jnp.dot(c, cos_psi * (xi * alpha + xj * beta))
+    lap_s = jnp.dot(
+        c,
+        -sin_psi * (alpha**2 + beta**2)
+        + cos_psi * (-xj * jnp.cos(xi) - jnp.cos(xj)),
+    )
+    d = x.shape[0]
+    return -2.0 * d * S - 4.0 * x_dot_grad_s + (1.0 - s) * lap_s
+
+
+def two_body_forcing(x, c):
+    """g = lap(u) + sin(u) for the Sine-Gordon equation (Eq. 19)."""
+    return two_body_lap(x, c) + jnp.sin(two_body_u(x, c))
+
+
+# ---------------------------------------------------------------------------
+# Three-body solution (Eq. 18)
+# ---------------------------------------------------------------------------
+
+def _three_body_parts(x, c):
+    """p_i = x_i x_{i+1} x_{i+2}; q_{i,.} its first partials; window views."""
+    a, b, w = x[:-2], x[1:-1], x[2:]
+    p = a * b * w
+    e = jnp.exp(p)
+    qa, qb, qw = b * w, a * w, a * b
+    return a, b, w, p, e, qa, qb, qw
+
+
+def three_body_u(x, c):
+    _, _, _, p, e, _, _, _ = _three_body_parts(x, c)
+    s = jnp.dot(x, x)
+    return (1.0 - s) * jnp.dot(c, e)
+
+
+def three_body_lap(x, c):
+    """Closed-form Laplacian of Eq. 18.
+
+    p_i is multilinear, so d^2 exp(p)/dx_k^2 = q_k^2 exp(p) and
+      lap S    = sum_i c_i e_i (qa^2 + qb^2 + qw^2)
+      x.grad S = sum_i c_i e_i (a qa + b qb + w qw) = 3 sum_i c_i e_i p_i.
+    """
+    a, b, w, p, e, qa, qb, qw = _three_body_parts(x, c)
+    s = jnp.dot(x, x)
+    S = jnp.dot(c, e)
+    x_dot_grad_s = 3.0 * jnp.dot(c, e * p)
+    lap_s = jnp.dot(c, e * (qa**2 + qb**2 + qw**2))
+    d = x.shape[0]
+    return -2.0 * d * S - 4.0 * x_dot_grad_s + (1.0 - s) * lap_s
+
+
+def three_body_forcing(x, c):
+    return three_body_lap(x, c) + jnp.sin(three_body_u(x, c))
+
+
+# ---------------------------------------------------------------------------
+# Biharmonic solution (Eq. 26): u = R(s) S, R = (1-s)(4-s)
+# ---------------------------------------------------------------------------
+
+def biharmonic_u(x, c):
+    _, _, _, _, e, _, _, _ = _three_body_parts(x, c)
+    s = jnp.dot(x, x)
+    return (1.0 - s) * (4.0 - s) * jnp.dot(c, e)
+
+
+def biharmonic_forcing(x, c):
+    """Closed-form bilaplacian of Eq. 26 (full derivation in DESIGN.md).
+
+    Product rule for the bilaplacian:
+      lap^2(R S) = S lap^2 R + 4 grad(lap R).grad S + 2 lap R lap S
+                   + 4 <Hess R, Hess S>_F + 4 grad R.grad(lap S) + R lap^2 S
+
+    Radial factor R(s) with s = |x|^2, R' = 2s - 5, R'' = 2:
+      grad R      = 2 R' x
+      Hess R      = 2 R' I + 8 x x^T
+      lap R       = (4d + 8) s - 10 d
+      grad(lap R) = (8d + 16) x
+      lap^2 R     = 8 d^2 + 16 d
+
+    Interaction factor S = sum_i c_i e_i (e_i = exp(p_i), Q_i = qa^2+qb^2+qw^2,
+    sig2_i = a^2+b^2+w^2); per term, using multilinearity of p and Euler's
+    theorem on the degree-4 homogeneous Q:
+      x.grad S        = 3 sum c_i e_i p_i
+      lap S           = sum c_i e_i Q_i
+      x^T Hess S x    = sum c_i e_i (9 p_i^2 + 6 p_i)
+      x.grad(lap S)   = sum c_i e_i Q_i (3 p_i + 4)
+      lap^2 S         = sum c_i e_i (Q_i^2 + 8 p_i sig2_i + 4 sig2_i)
+    and the cross contractions
+      grad(lap R).grad S   = (8d+16) (x.grad S)
+      <Hess R, Hess S>_F   = 2 R' lap S + 8 x^T Hess S x
+      grad R.grad(lap S)   = 2 R' (x.grad(lap S)).
+    """
+    a, b, w, p, e, qa, qb, qw = _three_body_parts(x, c)
+    s = jnp.dot(x, x)
+    d = x.shape[0]
+    rp = 2.0 * s - 5.0
+    big_r = (1.0 - s) * (4.0 - s)
+
+    big_q = qa**2 + qb**2 + qw**2
+    sig2 = a**2 + b**2 + w**2
+
+    S = jnp.dot(c, e)
+    x_grad_s = 3.0 * jnp.dot(c, e * p)
+    lap_s = jnp.dot(c, e * big_q)
+    xhx = jnp.dot(c, e * (9.0 * p**2 + 6.0 * p))
+    x_grad_lap_s = jnp.dot(c, e * big_q * (3.0 * p + 4.0))
+    lap2_s = jnp.dot(c, e * (big_q**2 + 8.0 * p * sig2 + 4.0 * sig2))
+
+    lap_r = (4.0 * d + 8.0) * s - 10.0 * d
+    lap2_r = 8.0 * d**2 + 16.0 * d
+
+    return (
+        S * lap2_r
+        + 4.0 * (8.0 * d + 16.0) * x_grad_s
+        + 2.0 * lap_r * lap_s
+        + 4.0 * (2.0 * rp * lap_s + 8.0 * xhx)
+        + 4.0 * 2.0 * rp * x_grad_lap_s
+        + big_r * lap2_s
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+FAMILIES = {
+    # name -> (u_exact, forcing, n_coeff(d), hard-constraint kind)
+    "sg2": dict(u=two_body_u, forcing=two_body_forcing, n_coeff=lambda d: d - 1, factor="ball"),
+    "sg3": dict(u=three_body_u, forcing=three_body_forcing, n_coeff=lambda d: d - 2, factor="ball"),
+    "bihar": dict(
+        u=biharmonic_u, forcing=biharmonic_forcing, n_coeff=lambda d: d - 2, factor="shell"
+    ),
+}

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+from .jet_dense import jet_dense, pick_block  # noqa: F401
+from .jet_tanh import jet_tanh  # noqa: F401
+from .residual import residual_sq_bihar, residual_sq_sg  # noqa: F401

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused dense-layer jet propagation.
+
+The affine map is linear, so each of the K+1 Taylor streams maps through
+the same weight matrix; the bias touches only the primal stream.  This is
+the paper's Taylor-mode insight turned into a kernel: all streams share a
+single weight fetch, multiplying the arithmetic intensity by (K+1) relative
+to a plain forward pass — exactly why Taylor mode beats stacked
+reverse-mode AD on memory traffic (Section 3.2.3).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks batch tiles;
+`W` (at the paper's width, 128x128 = one MXU tile) stays VMEM-resident
+across the whole grid, and the (K+1)-stream block is one `[K1*bB, H_in] @
+[H_in, H_out]` MXU matmul.  `interpret=True` here because the CPU PJRT
+plugin cannot execute Mosaic custom-calls; correctness is validated through
+this path (vs `ref.py`) and TPU performance is estimated structurally.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(y_ref, w_ref, b_ref, o_ref):
+    k1, bb, h_in = y_ref.shape
+    y = y_ref[...].reshape(k1 * bb, h_in)
+    z = y @ w_ref[...]
+    z = z.reshape(k1, bb, -1)
+    # Bias feeds only the primal (order-0) stream.
+    z = z.at[0].add(b_ref[...])
+    o_ref[...] = z
+
+
+def pick_block(b, preferred=128):
+    """Largest divisor of b that is <= preferred (keeps the grid exact)."""
+    bb = min(preferred, b)
+    while b % bb != 0:
+        bb -= 1
+    return bb
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def jet_dense(y, w, b, block=128):
+    """y: [K+1, B, H_in], w: [H_in, H_out], b: [H_out] -> [K+1, B, H_out]."""
+    k1, batch, h_in = y.shape
+    h_out = w.shape[1]
+    bb = pick_block(batch, block)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k1, bb, h_in), lambda i: (0, i, 0)),
+            pl.BlockSpec((h_in, h_out), lambda i: (0, 0)),
+            pl.BlockSpec((h_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k1, bb, h_out), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k1, batch, h_out), y.dtype),
+        interpret=True,
+    )(y, w, b)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: fused elementwise tanh-jet (Faà di Bruno to order 4).
+
+Propagates Taylor streams through the tanh nonlinearity using the
+closed-form derivative chain (see ``taylor.tanh_derivatives``).  Purely
+elementwise — VPU work on a real TPU — and fused per batch tile so the jet
+streams never leave VMEM between the matmul and the activation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .jet_dense import pick_block
+
+
+def _kernel(y_ref, o_ref):
+    k1 = y_ref.shape[0]
+    order = k1 - 1
+    y = y_ref[...]
+    u = jnp.tanh(y[0])
+    fp = 1.0 - u * u
+    out = [u]
+    if order >= 1:
+        out.append(fp * y[1])
+    if order >= 2:
+        fpp = -2.0 * u * fp
+        out.append(fpp * y[1] ** 2 + fp * y[2])
+    if order >= 3:
+        fp3 = fp * (6.0 * u * u - 2.0)
+        out.append(fp3 * y[1] ** 3 + 3.0 * fpp * y[1] * y[2] + fp * y[3])
+    if order >= 4:
+        fp4 = fp * u * (16.0 - 24.0 * u * u)
+        out.append(
+            fp4 * y[1] ** 4
+            + 6.0 * fp3 * y[1] ** 2 * y[2]
+            + 3.0 * fpp * y[2] ** 2
+            + 4.0 * fpp * y[1] * y[3]
+            + fp * y[4]
+        )
+    o_ref[...] = jnp.stack(out)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def jet_tanh(y, block=128):
+    """y: [K+1, B, H] -> [K+1, B, H] tanh-jet streams."""
+    k1, batch, h = y.shape
+    bb = pick_block(batch, block)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k1, bb, h), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((k1, bb, h), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k1, batch, h), y.dtype),
+        interpret=True,
+    )(y)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness references: ``pytest`` asserts the Pallas
+(interpret) kernels match these to float tolerance under hypothesis-driven
+shape/order sweeps, and these in turn are validated against
+``jax.experimental.jet`` / ``jax.hessian`` in ``test_taylor.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import taylor
+
+
+def ref_jet_dense(y, w, b):
+    """y: [K+1, B, H_in] -> [K+1, B, H_out]."""
+    streams = [y[k] for k in range(y.shape[0])]
+    out = taylor.jet_linear(streams, w, b)
+    return jnp.stack(out)
+
+
+def ref_jet_tanh(y):
+    streams = [y[k] for k in range(y.shape[0])]
+    return jnp.stack(taylor.jet_tanh(streams))
+
+
+def ref_residual_sq_sg(d2, u0, g):
+    r = jnp.mean(d2, axis=1) + jnp.sin(u0) - g
+    return r * r
+
+
+def ref_residual_sq_bihar(d4, g):
+    r = jnp.mean(d4, axis=1) / 3.0 - g
+    return r * r

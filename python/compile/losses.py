@@ -1,0 +1,264 @@
+"""PINN residual losses: probe-based HTE/SDGD/exact estimators + baselines.
+
+One probe-parameterized residual family serves HTE, SDGD, and the exact
+trace (Section 3.3.1: SDGD *is* HTE under the scaled-basis probe
+distribution).  The probe matrix is produced by the Rust coordinator:
+
+  * HTE (Rademacher):  rows v_k in {-1, +1}^d
+  * HTE (Gaussian):    rows v_k ~ N(0, I)
+  * SDGD:              rows sqrt(d) e_{i_k}, i_k sampled w/o replacement
+  * exact trace:       all d rows sqrt(d) e_i (V = d)
+
+since  mean_k v_k^T (Hess u) v_k  then reproduces each estimator exactly.
+
+The full-Hessian baseline (the paper's "vanilla PINN") is a separate loss
+that materializes ``jax.hessian`` — reproducing the O(d^2) cost the paper
+measures in Tables 1/4/5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import taylor
+from .exact_solutions import FAMILIES
+from .mlp import mlp_forward, mlp_jet, unpack_params
+
+
+# ---------------------------------------------------------------------------
+# Hard-constraint model: u(x) = factor(x) * mlp(x)
+# ---------------------------------------------------------------------------
+
+def factor_value(kind, x):
+    s = jnp.dot(x, x)
+    if kind == "ball":
+        return 1.0 - s
+    if kind == "shell":
+        return (1.0 - s) * (4.0 - s)
+    raise ValueError(kind)
+
+
+def factor_jet(kind, x, v, order):
+    """Jet of the hard-constraint factor along the line x + t v."""
+    s = taylor.sq_norm_jet(x, v, order)
+    one_minus = [1.0 - s[0]] + [-sk for sk in s[1:]]
+    if kind == "ball":
+        return one_minus
+    if kind == "shell":
+        four_minus = [4.0 - s[0]] + [-sk for sk in s[1:]]
+        return taylor.jet_mul(one_minus, four_minus)
+    raise ValueError(kind)
+
+
+def model_forward(params, x, kind):
+    return factor_value(kind, x) * mlp_forward(params, x)
+
+
+def model_jet(params, x, v, order, kind):
+    """Directional jet of the *hard-constrained* model factor(x) * mlp(x)."""
+    net = mlp_jet(params, x, v, order)
+    fac = factor_jet(kind, x, v, order)
+    return taylor.jet_mul(fac, net)
+
+
+def directional_d2(params, x, v, kind):
+    """v^T Hess(u) v  ==  second directional derivative of u along v."""
+    return model_jet(params, x, v, 2, kind)[2]
+
+
+def directional_dk_shared(params, x, probes, order, kind):
+    """All-probe directional derivatives with a shared primal stream.
+
+    The primal activations and the tanh-derivative chain depend only on x,
+    not on the probe, so they are computed once and broadcast across the V
+    probes — cutting the per-step jet FLOPs by ~(1/(K+1))·(V-1)/V plus the
+    whole derivative-chain recomputation vs the naive per-probe vmap
+    (EXPERIMENTS.md §Perf, L2 optimization 1).
+
+    Returns ([u, Du, ...] per probe: shape [V] for k >= 1, scalar u0).
+    """
+    v_count = probes.shape[0]
+    zeros = jnp.zeros((v_count, x.shape[0]), x.dtype)
+    # streams: y0 [d] shared; y1..yK [V, d]
+    ys = [x, probes] + [zeros] * (order - 1)
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        ys = taylor.jet_linear(ys, w, b)
+        if i < n - 1:
+            ys = taylor.jet_tanh_shared(ys, order)
+    net = [y[..., 0] for y in ys]  # u0 scalar, rest [V]
+    # factor jets: fac0 scalar shared, fac1/fac2 per probe [V]
+    s0 = jnp.dot(x, x)
+    s1 = 2.0 * probes @ x
+    s2 = 2.0 * jnp.sum(probes * probes, axis=1)
+    szero = jnp.zeros_like(s1)
+    s_streams = [s0, s1, s2, szero, szero][: order + 1]
+    one_minus = [1.0 - s_streams[0]] + [-sk for sk in s_streams[1:]]
+    if kind == "ball":
+        fac = one_minus
+    else:
+        four_minus = [4.0 - s_streams[0]] + [-sk for sk in s_streams[1:]]
+        fac = taylor.jet_mul(one_minus, four_minus)
+    return taylor.jet_mul(fac, net)
+
+
+def directional_d4(params, x, v, kind):
+    """d^4 u [v,v,v,v]  ==  fourth directional derivative along v."""
+    return model_jet(params, x, v, 4, kind)[4]
+
+
+# ---------------------------------------------------------------------------
+# Residuals
+# ---------------------------------------------------------------------------
+
+def residual_probe_sg(params, x, probes, coeff, family):
+    """Sine-Gordon residual with the probe-based trace estimate.
+
+    r = mean_k v_k^T Hess(u) v_k + sin(u) - g(x).
+
+    Shared-primal jets (see `directional_dk_shared`): one primal stream and
+    tanh-derivative chain serve all V probes.
+    """
+    kind = FAMILIES[family]["factor"]
+    streams = directional_dk_shared(params, x, probes, 2, kind)
+    u0 = streams[0]
+    g = FAMILIES[family]["forcing"](x, coeff)
+    return jnp.mean(streams[2]) + jnp.sin(u0) - g
+
+
+def residual_full_sg(params, x, coeff, family):
+    """Vanilla-PINN residual: materialize the full Hessian (the baseline)."""
+    kind = FAMILIES[family]["factor"]
+    hess = jax.hessian(lambda y: model_forward(params, y, kind))(x)
+    u0 = model_forward(params, x, kind)
+    g = FAMILIES[family]["forcing"](x, coeff)
+    return jnp.trace(hess) + jnp.sin(u0) - g
+
+
+def residual_probe_bihar(params, x, probes, coeff):
+    """Biharmonic residual via the TVP estimator (Theorem 3.4).
+
+    r = (1/3) mean_k d^4 u [v_k,v_k,v_k,v_k] - g(x),  v_k ~ N(0, I),
+    with shared-primal order-4 jets.
+    """
+    kind = FAMILIES["bihar"]["factor"]
+    streams = directional_dk_shared(params, x, probes, 4, kind)
+    g = FAMILIES["bihar"]["forcing"](x, coeff)
+    return jnp.mean(streams[4]) / 3.0 - g
+
+
+def residual_full_bihar(params, x, coeff):
+    """Vanilla biharmonic residual: lap(lap u) with nested full Hessians."""
+    kind = FAMILIES["bihar"]["factor"]
+
+    def lap(y):
+        return jnp.trace(jax.hessian(lambda z: model_forward(params, z, kind))(y))
+
+    bih = jnp.trace(jax.hessian(lap)(x))
+    g = FAMILIES["bihar"]["forcing"](x, coeff)
+    return bih - g
+
+
+# ---------------------------------------------------------------------------
+# Batch losses
+# ---------------------------------------------------------------------------
+
+def loss_probe_sg(params, xs, probes, coeff, family):
+    """Biased HTE loss, Eq. (7): 0.5 * mean_n r_n^2 (probes shared in-batch)."""
+    r = jax.vmap(lambda x: residual_probe_sg(params, x, probes, coeff, family))(xs)
+    return 0.5 * jnp.mean(r * r)
+
+
+def loss_probe_sg_unbiased(params, xs, probes, probes2, coeff, family):
+    """Unbiased two-sample HTE loss, Eq. (8): 0.5 * mean_n r_n rhat_n."""
+    r = jax.vmap(lambda x: residual_probe_sg(params, x, probes, coeff, family))(xs)
+    r2 = jax.vmap(lambda x: residual_probe_sg(params, x, probes2, coeff, family))(xs)
+    return 0.5 * jnp.mean(r * r2)
+
+
+def loss_full_sg(params, xs, coeff, family):
+    r = jax.vmap(lambda x: residual_full_sg(params, x, coeff, family))(xs)
+    return 0.5 * jnp.mean(r * r)
+
+
+def loss_probe_bihar(params, xs, probes, coeff):
+    r = jax.vmap(lambda x: residual_probe_bihar(params, x, probes, coeff))(xs)
+    return 0.5 * jnp.mean(r * r)
+
+
+def loss_full_bihar(params, xs, coeff):
+    r = jax.vmap(lambda x: residual_full_bihar(params, x, coeff))(xs)
+    return 0.5 * jnp.mean(r * r)
+
+
+# ---------------------------------------------------------------------------
+# gPINN (Section 4.2): residual + lambda * |grad_x r|^2 regularization.
+# The gradient norm is itself Hutchinson-estimated (Section 3.5.1):
+# |grad r|^2 = E_w |w . grad r|^2, each w.grad r a single JVP of the
+# (jet-based) residual — keeping the extra cost O(V_g), not O(d).
+# ---------------------------------------------------------------------------
+
+def loss_gpinn_probe_sg(params, xs, probes, gprobes, coeff, family, lam):
+    def r_of_x(x):
+        return residual_probe_sg(params, x, probes, coeff, family)
+
+    def point_loss(x):
+        r = r_of_x(x)
+        dr = jax.vmap(lambda w: jax.jvp(r_of_x, (x,), (w,))[1])(gprobes)
+        return 0.5 * r * r + 0.5 * lam * jnp.mean(dr * dr)
+
+    return jnp.mean(jax.vmap(point_loss)(xs))
+
+
+def loss_gpinn_full_sg(params, xs, coeff, family, lam):
+    """Exact gPINN baseline: full Hessian residual + exact |grad_x r|^2."""
+
+    def r_of_x(x):
+        return residual_full_sg(params, x, coeff, family)
+
+    def point_loss(x):
+        r = r_of_x(x)
+        dr = jax.jacfwd(r_of_x)(x)
+        return 0.5 * r * r + 0.5 * lam * jnp.sum(dr * dr)
+
+    return jnp.mean(jax.vmap(point_loss)(xs))
+
+
+# ---------------------------------------------------------------------------
+# Deep Ritz (Section 3.5.1): HTE for variational energies.
+# For -lap(u) = f on the ball with the hard-constraint model, the Ritz
+# energy is E = mean_x [ 1/2 |grad u|^2 - f u ] (up to the domain volume);
+# |grad u|^2 = E_w |w . grad u|^2 is Hutchinson-estimated with first-order
+# jets — the JVP special case of the TVP machinery.
+# ---------------------------------------------------------------------------
+
+def ritz_energy_point(params, x, probes, coeff, family):
+    """Pointwise Ritz integrand with the probe-estimated gradient norm."""
+    kind = FAMILIES[family]["factor"]
+    streams = directional_dk_shared(params, x, probes, 1, kind)
+    u0 = streams[0]
+    grad_sq = jnp.mean(streams[1] ** 2)  # E_w (w.grad u)^2 == |grad u|^2
+    # manufactured source: f = -lap u_exact  (so the minimizer is u_exact)
+    f = -(FAMILIES[family]["forcing"](x, coeff) - jnp.sin(FAMILIES[family]["u"](x, coeff)))
+    return 0.5 * grad_sq - f * u0
+
+
+def loss_ritz(params, xs, probes, coeff, family="sg2"):
+    """Monte-Carlo Ritz energy over the batch (Deep Ritz with HTE)."""
+    return jnp.mean(
+        jax.vmap(lambda x: ritz_energy_point(params, x, probes, coeff, family))(xs)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: partial sums for the relative L2 error over a test batch
+# ---------------------------------------------------------------------------
+
+def eval_sums(params, xs, coeff, family):
+    """Returns [sum (u - u*)^2, sum u*^2, sum u^2] over the batch."""
+    kind = FAMILIES[family]["factor"]
+    u_exact_fn = FAMILIES[family]["u"]
+    u = jax.vmap(lambda x: model_forward(params, x, kind))(xs)
+    u_star = jax.vmap(lambda x: u_exact_fn(x, coeff))(xs)
+    diff = u - u_star
+    return jnp.stack([jnp.sum(diff * diff), jnp.sum(u_star * u_star), jnp.sum(u * u)])

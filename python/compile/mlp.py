@@ -1,0 +1,75 @@
+"""The paper's PINN backbone: a 4-layer tanh MLP with 128 hidden units.
+
+Parameters live in a single flat ``f32[P]`` vector so the whole optimizer
+state can be packed into one device buffer (see ``optimizer.py`` and
+DESIGN.md §6).  The layout is recorded in the artifact manifest so the Rust
+coordinator can initialize / checkpoint / inspect parameters by offset.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import taylor
+
+HIDDEN = 128
+DEPTH = 4  # number of affine layers: d -> 128 -> 128 -> 128 -> 1
+
+
+def layer_shapes(d, hidden=HIDDEN, depth=DEPTH):
+    """[(W shape, b shape), ...] for the MLP."""
+    dims = [d] + [hidden] * (depth - 1) + [1]
+    return [((dims[i], dims[i + 1]), (dims[i + 1],)) for i in range(depth)]
+
+
+def param_layout(d, hidden=HIDDEN, depth=DEPTH):
+    """Flat-vector layout: list of (name, shape, offset); plus total size."""
+    layout = []
+    off = 0
+    for i, (w_shape, b_shape) in enumerate(layer_shapes(d, hidden, depth)):
+        for name, shape in ((f"w{i + 1}", w_shape), (f"b{i + 1}", b_shape)):
+            size = 1
+            for s in shape:
+                size *= s
+            layout.append({"name": name, "shape": list(shape), "offset": off})
+            off += size
+    return layout, off
+
+
+def unpack_params(flat, d, hidden=HIDDEN, depth=DEPTH):
+    """Flat f32[P] -> [(W, b), ...]."""
+    layout, total = param_layout(d, hidden, depth)
+    assert flat.shape == (total,), (flat.shape, total)
+    tensors = {}
+    for entry in layout:
+        size = 1
+        for s in entry["shape"]:
+            size *= s
+        sl = flat[entry["offset"] : entry["offset"] + size]
+        tensors[entry["name"]] = sl.reshape(entry["shape"])
+    return [(tensors[f"w{i + 1}"], tensors[f"b{i + 1}"]) for i in range(depth)]
+
+
+def mlp_forward(params, x):
+    """Plain forward pass: x [d] -> scalar."""
+    h = x
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i < n - 1:
+            h = jnp.tanh(h)
+    return h[0]
+
+
+def mlp_jet(params, x, v, order):
+    """Taylor-mode forward: directional jet streams of the raw MLP output.
+
+    Returns ``[u, Du[v], D2u[v], ...]`` (scalars) where ``Dk u[v]`` is the
+    k-th directional derivative along ``v``.
+    """
+    ys = taylor.input_line_jet(x, v, order)
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        ys = taylor.jet_linear(ys, w, b)
+        if i < n - 1:
+            ys = taylor.jet_tanh(ys)
+    return [y[0] for y in ys]

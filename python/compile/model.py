@@ -1,0 +1,197 @@
+"""L2 assembly: build the concrete jax functions that become artifacts.
+
+Two execution paths exist for the same math:
+
+  * the **differentiable jnp path** (``taylor.py`` + ``losses.py``) used by
+    every train-step artifact — reverse-mode AD for the theta-gradient runs
+    *through* the hand-rolled Taylor streams;
+  * the **Pallas kernel path** (``kernels/``), forward-only, used by the
+    eval / residual-monitor artifacts and validated in pytest to produce
+    bit-compatible streams (Pallas-interpret calls are not reverse-mode
+    differentiable, which is why the train path uses the jnp twin).
+
+Every builder returns a pure function with static shapes, ready for
+``jax.jit(...).lower(...)`` in ``aot.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels, losses, taylor
+from .exact_solutions import FAMILIES
+from .mlp import HIDDEN, mlp_forward, param_layout, unpack_params
+from .optimizer import make_train_step, state_layout
+
+
+# ---------------------------------------------------------------------------
+# Train-step builders (differentiable jnp path)
+# ---------------------------------------------------------------------------
+
+def build_train_fn(family, method, d):
+    """Returns (fn, input_names).  fn(state, *batch..., lr) -> new state.
+
+    Methods:
+      probe      — Eq. (7) biased HTE / SDGD / exact-by-probes (probe matrix
+                   decides, Section 3.3.1)
+      unbiased   — Eq. (8) two-sample unbiased HTE
+      full       — vanilla-PINN full-Hessian baseline
+      gpinn_probe— Eq. (25) HTE-gPINN (Hutchinson gradient term)
+      gpinn_full — Eq. (24) exact gPINN baseline
+      probe4     — Theorem 3.4 biharmonic TVP-HTE
+      full4      — vanilla biharmonic baseline (nested Hessians)
+    """
+    _, n_params = param_layout(d)
+
+    def with_params(loss):
+        def of_flat(flat, *batch):
+            return loss(unpack_params(flat, d), *batch)
+
+        return of_flat
+
+    if method == "probe":
+        loss = with_params(
+            lambda p, xs, probes, coeff: losses.loss_probe_sg(p, xs, probes, coeff, family)
+        )
+        names = ["state", "x", "probes", "coeff", "lr"]
+    elif method == "unbiased":
+        loss = with_params(
+            lambda p, xs, pr, pr2, coeff: losses.loss_probe_sg_unbiased(
+                p, xs, pr, pr2, coeff, family
+            )
+        )
+        names = ["state", "x", "probes", "probes2", "coeff", "lr"]
+    elif method == "full":
+        loss = with_params(lambda p, xs, coeff: losses.loss_full_sg(p, xs, coeff, family))
+        names = ["state", "x", "coeff", "lr"]
+    elif method == "gpinn_probe":
+        loss = with_params(
+            lambda p, xs, probes, gprobes, coeff, lam: losses.loss_gpinn_probe_sg(
+                p, xs, probes, gprobes, coeff, family, jnp.reshape(lam, ())
+            )
+        )
+        names = ["state", "x", "probes", "gprobes", "coeff", "lam", "lr"]
+    elif method == "gpinn_full":
+        loss = with_params(
+            lambda p, xs, coeff, lam: losses.loss_gpinn_full_sg(
+                p, xs, coeff, family, jnp.reshape(lam, ())
+            )
+        )
+        names = ["state", "x", "coeff", "lam", "lr"]
+    elif method == "ritz":
+        # Deep Ritz with Hutchinson gradient-norm estimation (Section 3.5.1)
+        loss = with_params(
+            lambda p, xs, probes, coeff: losses.loss_ritz(p, xs, probes, coeff, family)
+        )
+        names = ["state", "x", "probes", "coeff", "lr"]
+    elif method == "probe4":
+        assert family == "bihar"
+        loss = with_params(
+            lambda p, xs, probes, coeff: losses.loss_probe_bihar(p, xs, probes, coeff)
+        )
+        names = ["state", "x", "probes", "coeff", "lr"]
+    elif method == "full4":
+        assert family == "bihar"
+        loss = with_params(lambda p, xs, coeff: losses.loss_full_bihar(p, xs, coeff))
+        names = ["state", "x", "coeff", "lr"]
+    else:
+        raise ValueError(method)
+
+    return make_train_step(loss, n_params), names
+
+
+def build_eval_fn(family, d):
+    """fn(state, x_test, coeff) -> f32[3] partial sums for relative L2."""
+    _, n_params = param_layout(d)
+
+    def fn(state, xs, coeff):
+        flat = state[:n_params]
+        return losses.eval_sums(unpack_params(flat, d), xs, coeff, family)
+
+    return fn, ["state", "x", "coeff"]
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel path (forward-only)
+# ---------------------------------------------------------------------------
+
+def kernel_jet_mlp(params, xs, vs, order):
+    """Jet-MLP over point-probe pairs, via the L1 Pallas kernels.
+
+    xs: [B, d] primal points; vs: [B, d] directions (one pair per row).
+    Returns raw-MLP streams, shape [order+1, B].
+    """
+    b, d = xs.shape
+    zeros = jnp.zeros_like(xs)
+    y = jnp.stack([xs, vs] + [zeros] * (order - 1))  # [K+1, B, d]
+    n = len(params)
+    for i, (w, bias) in enumerate(params):
+        y = kernels.jet_dense(y, w, bias)
+        if i < n - 1:
+            y = kernels.jet_tanh(y)
+    return y[:, :, 0]
+
+
+def _kernel_model_streams(params, xs, vs, order, kind):
+    """Hard-constrained model streams: jet_mul(factor jets, kernel MLP jets)."""
+    net = kernel_jet_mlp(params, xs, vs, order)  # [K+1, B]
+    fac = jax.vmap(
+        lambda x, v: jnp.stack(losses.factor_jet(kind, x, v, order)), out_axes=1
+    )(xs, vs)  # [K+1, B]
+    net_streams = [net[k] for k in range(order + 1)]
+    fac_streams = [fac[k] for k in range(order + 1)]
+    return taylor.jet_mul(fac_streams, net_streams)
+
+
+def build_resval_fn(family, d, order):
+    """Forward-only residual-loss monitor via the Pallas kernel path.
+
+    fn(state, x, probes, coeff) -> f32[1] (the Eq. 7 / Thm 3.4 loss value).
+    """
+    _, n_params = param_layout(d)
+    kind = FAMILIES[family]["factor"]
+    forcing = FAMILIES[family]["forcing"]
+
+    def fn(state, xs, probes, coeff):
+        params = unpack_params(state[:n_params], d)
+        n, v = xs.shape[0], probes.shape[0]
+        # Point-probe pair grid, points-major so reshape recovers [N, V].
+        xp = jnp.repeat(xs, v, axis=0)  # [N*V, d]
+        vp = jnp.tile(probes, (n, 1))  # [N*V, d]
+        streams = _kernel_model_streams(params, xp, vp, order, kind)
+        dk = streams[order].reshape(n, v)
+        g = jax.vmap(lambda x: forcing(x, coeff))(xs)
+        if family == "bihar":
+            rsq = kernels.residual_sq_bihar(dk, g)
+        else:
+            u0 = jax.vmap(lambda x: losses.model_forward(params, x, kind))(xs)
+            rsq = kernels.residual_sq_sg(dk, u0, g)
+        return 0.5 * jnp.mean(rsq, keepdims=True)
+
+    return fn, ["state", "x", "probes", "coeff"]
+
+
+def build_eval_kernel_fn(family, d):
+    """Prediction-path eval via the Pallas dense kernel (order-0 streams)."""
+    _, n_params = param_layout(d)
+    kind = FAMILIES[family]["factor"]
+    u_exact_fn = FAMILIES[family]["u"]
+
+    def fn(state, xs, coeff):
+        params = unpack_params(state[:n_params], d)
+        y = xs[None]  # [1, M, d] — single (primal) stream
+        n = len(params)
+        for i, (w, bias) in enumerate(params):
+            y = kernels.jet_dense(y, w, bias)
+            if i < n - 1:
+                y = kernels.jet_tanh(y)
+        raw = y[0, :, 0]
+        fac = jax.vmap(lambda x: losses.factor_value(kind, x))(xs)
+        u = fac * raw
+        u_star = jax.vmap(lambda x: u_exact_fn(x, coeff))(xs)
+        diff = u - u_star
+        return jnp.stack(
+            [jnp.sum(diff * diff), jnp.sum(u_star * u_star), jnp.sum(u * u)]
+        )
+
+    return fn, ["state", "x", "coeff"]

@@ -1,0 +1,79 @@
+"""Packed-state Adam, fully inside the AOT artifact.
+
+State layout (single flat f32 vector, see DESIGN.md §6):
+
+    [ params (P) | adam m (P) | adam v (P) | t (1) | loss_slot (1) ]
+
+The whole optimizer state round-trips through one device buffer, so the
+Rust trainer's steady-state loop is `execute_b(out_prev, x, probes, coeff,
+lr)` with zero host copies; the loss is read back by element offset.
+
+The learning-rate *schedule* (linear decay, per the paper) lives in the
+Rust coordinator: `lr` is an input so one artifact serves any schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def state_layout(n_params):
+    """Offsets of each component in the packed state vector."""
+    return {
+        "params": 0,
+        "m": n_params,
+        "v": 2 * n_params,
+        "t": 3 * n_params,
+        "loss": 3 * n_params + 1,
+        "size": 3 * n_params + 2,
+    }
+
+
+def unpack_state(state, n_params):
+    lo = state_layout(n_params)
+    return (
+        state[lo["params"] : lo["params"] + n_params],
+        state[lo["m"] : lo["m"] + n_params],
+        state[lo["v"] : lo["v"] + n_params],
+        state[lo["t"]],
+        state[lo["loss"]],
+    )
+
+
+def pack_state(params, m, v, t, loss):
+    return jnp.concatenate(
+        [params, m, v, jnp.reshape(t, (1,)), jnp.reshape(loss, (1,))]
+    )
+
+
+def adam_update(params, m, v, t, grads, lr):
+    """One Adam step with bias correction; t is carried as f32."""
+    t = t + 1.0
+    m = BETA1 * m + (1.0 - BETA1) * grads
+    v = BETA2 * v + (1.0 - BETA2) * grads * grads
+    mhat = m / (1.0 - jnp.power(BETA1, t))
+    vhat = v / (1.0 - jnp.power(BETA2, t))
+    params = params - lr * mhat / (jnp.sqrt(vhat) + EPS)
+    return params, m, v, t
+
+
+def make_train_step(loss_of_flat_params, n_params):
+    """Wrap a `loss(flat_params, *batch_inputs)` into a packed-state step.
+
+    Returns step(state, *batch_inputs, lr) -> new packed state with the
+    loss written into the loss slot.
+    """
+
+    def step(state, *args):
+        *batch, lr = args
+        lr = jnp.reshape(lr, ())
+        params, m, v, t, _ = unpack_state(state, n_params)
+        loss, grads = jax.value_and_grad(loss_of_flat_params)(params, *batch)
+        params, m, v, t = adam_update(params, m, v, t, grads, lr)
+        return pack_state(params, m, v, t, loss)
+
+    return step

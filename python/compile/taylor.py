@@ -1,0 +1,181 @@
+"""Taylor-mode (jet) automatic differentiation rules, hand-rolled in jnp.
+
+This is the differentiable twin of the L1 Pallas kernels in
+``kernels/jet_dense.py`` / ``kernels/jet_tanh.py``.  The paper's key
+mechanism (Section 3.2.3) is that the Hessian-vector product
+``v^T (Hess u) v`` is the *second directional derivative* of ``u`` along
+``v`` and can be computed by pushing a truncated Taylor series through the
+network, never materializing the Hessian.  Likewise the biharmonic TVP
+``d^4 u [v,v,v,v]`` is the fourth directional derivative (Theorem 3.4).
+
+We use the *derivative convention*: a jet is a list of streams
+``[y0, y1, ..., yK]`` with ``yk = d^k/dt^k f(x + t v) |_{t=0}``.  This is
+the same convention as ``jax.experimental.jet`` (verified in
+``python/tests/test_taylor.py``).  All rules below are plain jnp, so they
+are reverse-mode differentiable — which the train-step artifacts rely on —
+whereas ``jax.experimental.jet`` and Pallas-interpret calls are not.
+
+Faà di Bruno coefficients used for the order-4 elementwise composition:
+
+    z1 = f'  y1
+    z2 = f'' y1^2 + f' y2
+    z3 = f''' y1^3 + 3 f'' y1 y2 + f' y3
+    z4 = f'''' y1^4 + 6 f''' y1^2 y2 + 3 f'' y2^2 + 4 f'' y1 y3 + f' y4
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+# Binomial table for Leibniz products up to order 4.
+_BINOM = [[math.comb(k, j) for j in range(k + 1)] for k in range(5)]
+
+
+def jet_const(value, order):
+    """Jet of a constant: [c, 0, 0, ...]."""
+    zeros = jnp.zeros_like(value)
+    return [value] + [zeros for _ in range(order)]
+
+
+def jet_linear(ys, w, b=None):
+    """Jet of an affine map ``y @ w + b``.
+
+    The map is linear, so every stream maps independently and the bias only
+    touches the primal stream.  ``ys[k]`` has shape ``[..., H_in]``.
+    """
+    out = [y @ w for y in ys]
+    if b is not None:
+        out[0] = out[0] + b
+    return out
+
+
+def jet_add(fs, gs):
+    return [f + g for f, g in zip(fs, gs)]
+
+
+def jet_scale(fs, alpha):
+    return [alpha * f for f in fs]
+
+
+def jet_mul(fs, gs):
+    """Leibniz rule: ``(fg)_k = sum_j C(k,j) f_j g_{k-j}``."""
+    order = len(fs) - 1
+    assert len(gs) == len(fs)
+    out = []
+    for k in range(order + 1):
+        acc = None
+        for j in range(k + 1):
+            term = _BINOM[k][j] * fs[j] * gs[k - j]
+            acc = term if acc is None else acc + term
+        out.append(acc)
+    return out
+
+
+def _compose_elementwise(derivs, ys):
+    """Faà di Bruno composition ``f(y(t))`` given ``derivs = [f(y0), f'(y0), ...]``.
+
+    ``derivs`` must contain at least ``len(ys)`` entries.
+    """
+    order = len(ys) - 1
+    f = derivs
+    y = ys
+    out = [f[0]]
+    if order >= 1:
+        out.append(f[1] * y[1])
+    if order >= 2:
+        out.append(f[2] * y[1] ** 2 + f[1] * y[2])
+    if order >= 3:
+        out.append(f[3] * y[1] ** 3 + 3.0 * f[2] * y[1] * y[2] + f[1] * y[3])
+    if order >= 4:
+        out.append(
+            f[4] * y[1] ** 4
+            + 6.0 * f[3] * y[1] ** 2 * y[2]
+            + 3.0 * f[2] * y[2] ** 2
+            + 4.0 * f[2] * y[1] * y[3]
+            + f[1] * y[4]
+        )
+    return out
+
+
+def tanh_derivatives(y0, order):
+    """[tanh, tanh', tanh'', tanh''', tanh''''] evaluated at y0.
+
+    Closed forms in terms of ``u = tanh(y0)`` and ``fp = 1 - u^2``:
+        f''   = -2 u fp
+        f'''  = fp (6 u^2 - 2)
+        f'''' = fp u (16 - 24 u^2)
+    """
+    u = jnp.tanh(y0)
+    fp = 1.0 - u * u
+    derivs = [u, fp]
+    if order >= 2:
+        derivs.append(-2.0 * u * fp)
+    if order >= 3:
+        derivs.append(fp * (6.0 * u * u - 2.0))
+    if order >= 4:
+        derivs.append(fp * u * (16.0 - 24.0 * u * u))
+    return derivs
+
+
+def jet_tanh(ys):
+    order = len(ys) - 1
+    return _compose_elementwise(tanh_derivatives(ys[0], order), ys)
+
+
+def jet_sin(ys):
+    order = len(ys) - 1
+    y0 = ys[0]
+    s, c = jnp.sin(y0), jnp.cos(y0)
+    derivs = [s, c, -s, -c, s][: order + 1]
+    return _compose_elementwise(derivs, ys)
+
+
+def jet_exp(ys):
+    order = len(ys) - 1
+    e = jnp.exp(ys[0])
+    return _compose_elementwise([e] * (order + 1), ys)
+
+
+def jet_tanh_shared(ys, order):
+    """tanh-jet with a *shared primal*: ys[0] has shape [..., H] while the
+    derivative streams ys[1:] carry an extra leading probe axis [V, ..., H].
+
+    The tanh derivative chain is computed once from the primal and
+    broadcast across probes — the key redundancy the naive per-probe vmap
+    pays V times (see EXPERIMENTS.md §Perf).
+    """
+    f = tanh_derivatives(ys[0], order)  # each [..., H], broadcasts over V
+    out = [f[0]]
+    y = ys
+    if order >= 1:
+        out.append(f[1] * y[1])
+    if order >= 2:
+        out.append(f[2] * y[1] ** 2 + f[1] * y[2])
+    if order >= 3:
+        out.append(f[3] * y[1] ** 3 + 3.0 * f[2] * y[1] * y[2] + f[1] * y[3])
+    if order >= 4:
+        out.append(
+            f[4] * y[1] ** 4
+            + 6.0 * f[3] * y[1] ** 2 * y[2]
+            + 3.0 * f[2] * y[2] ** 2
+            + 4.0 * f[2] * y[1] * y[3]
+            + f[1] * y[4]
+        )
+    return out
+
+
+def input_line_jet(x, v, order):
+    """Jet of the input line ``t -> x + t v``: streams [x, v, 0, ...]."""
+    zeros = jnp.zeros_like(x)
+    ys = [x, v] + [zeros for _ in range(order - 1)]
+    return ys[: order + 1]
+
+
+def sq_norm_jet(x, v, order):
+    """Jet of ``s(t) = ||x + t v||^2``: [x.x, 2 x.v, 2 v.v, 0, 0]."""
+    s0 = jnp.dot(x, x)
+    s1 = 2.0 * jnp.dot(x, v)
+    s2 = 2.0 * jnp.dot(v, v)
+    streams = [s0, s1, s2, jnp.zeros(()), jnp.zeros(())]
+    return [jnp.asarray(s, x.dtype) for s in streams[: order + 1]]

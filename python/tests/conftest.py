@@ -1,0 +1,44 @@
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_params(key, d, scale=0.3):
+    """Random MLP params (list of (W, b)) for testing."""
+    from compile.mlp import layer_shapes
+
+    params = []
+    for ws, bs in layer_shapes(d):
+        key, k1, k2 = jax.random.split(key, 3)
+        params.append(
+            (jax.random.normal(k1, ws) * scale, jax.random.normal(k2, bs) * 0.1)
+        )
+    return params
+
+
+def make_flat_params(seed, d):
+    """Xavier-uniform flat parameter vector, the same scheme Rust uses."""
+    from compile.mlp import param_layout
+
+    layout, total = param_layout(d)
+    rng = np.random.default_rng(seed)
+    flat = np.zeros(total, np.float32)
+    for e in layout:
+        shape = e["shape"]
+        size = int(np.prod(shape))
+        if len(shape) == 2:
+            lim = np.sqrt(6.0 / (shape[0] + shape[1]))
+            flat[e["offset"] : e["offset"] + size] = rng.uniform(
+                -lim, lim, size
+            ).astype(np.float32)
+    return flat

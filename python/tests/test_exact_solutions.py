@@ -1,0 +1,63 @@
+"""Closed-form forcing terms vs nested autodiff (the ground truth)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.exact_solutions import (
+    FAMILIES,
+    biharmonic_forcing,
+    three_body_lap,
+    two_body_lap,
+)
+
+
+def point_and_coeff(d, seed, n_coeff):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(d) * 0.4, jnp.float32)
+    c = jnp.asarray(rng.standard_normal(n_coeff), jnp.float32)
+    return x, c
+
+
+@settings(deadline=None, max_examples=15)
+@given(d=st.integers(min_value=3, max_value=10), seed=st.integers(0, 10**6))
+def test_two_body_laplacian(d, seed):
+    x, c = point_and_coeff(d, seed, d - 1)
+    lap_ad = jnp.trace(jax.hessian(lambda y: FAMILIES["sg2"]["u"](y, c))(x))
+    np.testing.assert_allclose(two_body_lap(x, c), lap_ad, rtol=1e-3, atol=1e-3)
+
+
+@settings(deadline=None, max_examples=15)
+@given(d=st.integers(min_value=3, max_value=10), seed=st.integers(0, 10**6))
+def test_three_body_laplacian(d, seed):
+    x, c = point_and_coeff(d, seed, d - 2)
+    lap_ad = jnp.trace(jax.hessian(lambda y: FAMILIES["sg3"]["u"](y, c))(x))
+    np.testing.assert_allclose(three_body_lap(x, c), lap_ad, rtol=1e-3, atol=1e-3)
+
+
+@settings(deadline=None, max_examples=8)
+@given(d=st.integers(min_value=3, max_value=7), seed=st.integers(0, 10**6))
+def test_biharmonic_forcing(d, seed):
+    x, c = point_and_coeff(d, seed, d - 2)
+    u = lambda y: FAMILIES["bihar"]["u"](y, c)  # noqa: E731
+    lap = lambda y: jnp.trace(jax.hessian(u)(y))  # noqa: E731
+    bih_ad = jnp.trace(jax.hessian(lap)(x))
+    ours = biharmonic_forcing(x, c)
+    np.testing.assert_allclose(ours, bih_ad, rtol=2e-3, atol=2e-2)
+
+
+def test_hard_constraint_zero_on_boundary():
+    """Exact solutions vanish on the domain boundary (zero Dirichlet)."""
+    d = 6
+    rng = np.random.default_rng(0)
+    c2 = jnp.asarray(rng.standard_normal(d - 1), jnp.float32)
+    c3 = jnp.asarray(rng.standard_normal(d - 2), jnp.float32)
+    x = rng.standard_normal(d)
+    on_unit = jnp.asarray(x / np.linalg.norm(x), jnp.float32)
+    assert abs(float(FAMILIES["sg2"]["u"](on_unit, c2))) < 1e-5
+    assert abs(float(FAMILIES["sg3"]["u"](on_unit, c3))) < 1e-5
+    assert abs(float(FAMILIES["bihar"]["u"](on_unit, c3))) < 1e-4
+    on_two = 2.0 * on_unit
+    assert abs(float(FAMILIES["bihar"]["u"](on_two, c3))) < 1e-3

@@ -1,0 +1,113 @@
+"""Jet algebra (taylor.py) vs jax.experimental.jet and autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.experimental import jet as jjet
+
+from compile import taylor
+from compile.mlp import mlp_forward, mlp_jet
+
+from .conftest import make_params
+
+
+def jet_of(f, x, v, order):
+    """Reference directional jet via jax.experimental.jet."""
+    zeros = [jnp.zeros_like(v) for _ in range(order - 1)]
+    primal, terms = jjet.jet(f, (x,), ((v, *zeros),))
+    return [primal] + list(terms)
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+def test_jet_tanh_matches_jax_jet(order):
+    x = jnp.linspace(-2.0, 2.0, 7)
+    v = jnp.linspace(0.5, -1.5, 7)
+    ys = taylor.input_line_jet(x, v, order)
+    ours = taylor.jet_tanh(ys)
+    ref = jet_of(jnp.tanh, x, v, order)
+    for a, b in zip(ours, ref):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+def test_jet_sin_exp(order):
+    x = jnp.linspace(-1.0, 1.0, 5)
+    v = jnp.linspace(1.0, 2.0, 5)
+    ys = taylor.input_line_jet(x, v, order)
+    for ours_fn, f in ((taylor.jet_sin, jnp.sin), (taylor.jet_exp, jnp.exp)):
+        ours = ours_fn(ys)
+        ref = jet_of(f, x, v, order)
+        for a, b in zip(ours, ref):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+def test_jet_mul_leibniz(order):
+    """(f*g) jets == jet of the product function."""
+    x = jnp.linspace(-1.0, 1.0, 5)
+    v = jnp.linspace(0.3, -0.7, 5)
+    ys = taylor.input_line_jet(x, v, order)
+    fs, gs = taylor.jet_sin(ys), taylor.jet_exp(ys)
+    ours = taylor.jet_mul(fs, gs)
+    ref = jet_of(lambda y: jnp.sin(y) * jnp.exp(y), x, v, order)
+    for a, b in zip(ours, ref):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_tanh_derivative_closed_forms():
+    """tanh', tanh'', tanh''', tanh'''' closed forms vs repeated jax.grad."""
+    y = jnp.linspace(-2.0, 2.0, 11)
+    derivs = taylor.tanh_derivatives(y, 4)
+    fns = [jnp.tanh]
+    for k in range(4):
+        prev = fns[-1]
+        fns.append(jax.grad(lambda t, prev=prev: prev(t)))
+    for k in range(5):
+        ref = jax.vmap(fns[k])(y)
+        np.testing.assert_allclose(derivs[k], ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    d=st.integers(min_value=2, max_value=12),
+    order=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mlp_jet_matches_jax_jet(d, order, seed):
+    """Hand-rolled Taylor-mode through the MLP == jax.experimental.jet."""
+    key = jax.random.PRNGKey(seed)
+    params = make_params(key, d)
+    kx, kv = jax.random.split(jax.random.PRNGKey(seed + 1))
+    x = jax.random.normal(kx, (d,)) * 0.4
+    v = jax.random.normal(kv, (d,))
+    ours = mlp_jet(params, x, v, order)
+    ref = jet_of(lambda y: mlp_forward(params, y), x, v, order)
+    for a, b in zip(ours, ref):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_sq_norm_jet():
+    x = jnp.array([1.0, -2.0, 0.5])
+    v = jnp.array([0.3, 1.0, -1.0])
+    ours = taylor.sq_norm_jet(x, v, 4)
+    ref = jet_of(lambda y: jnp.dot(y, y), x, v, 4)
+    for a, b in zip(ours, ref):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_jets_are_reverse_differentiable():
+    """The whole point of the jnp twin: grad flows through the jet streams."""
+    d = 5
+    params = make_params(jax.random.PRNGKey(0), d)
+    x = jnp.ones((d,)) * 0.1
+    v = jnp.ones((d,))
+
+    def f(w0):
+        p = [(w0, params[0][1])] + params[1:]
+        return mlp_jet(p, x, v, 2)[2]
+
+    g = jax.grad(f)(params[0][0])
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.abs(g).max()) > 0.0

@@ -1,0 +1,85 @@
+//! Ablation: AD-mode cost hierarchy (the Section 3.2.3 claim), natively.
+//!
+//! Computing the Laplacian of the constrained model u(x) three ways:
+//!   * HTE:          V directional jets                    — O(V) passes
+//!   * exact trace:  d basis-vector jets                   — O(d) passes
+//!   * full Hessian: d(d+1)/2 polarization jets, matrix
+//!     materialized                                        — O(d^2) passes
+//! reproducing the paper's scaling argument for why the full-Hessian
+//! route (what vanilla backward-AD PINN materializes) collapses with d
+//! while HTE's cost is dimension-independent.
+
+use hte_pinn::estimators::{Estimator, ProbeGenerator};
+use hte_pinn::nn::{jet_forward, Mlp};
+use hte_pinn::pde::SineGordon2Body;
+use hte_pinn::rng::Xoshiro256pp;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn main() {
+    let mut report = BenchReport::new("ablation: AD schedule cost hierarchy");
+    let v = 16;
+    for d in [16usize, 64, 256] {
+        let mlp = Mlp::init(d, &mut Xoshiro256pp::new(1));
+        let problem = SineGordon2Body::new(d);
+        let mut rng = Xoshiro256pp::new(2);
+        let x: Vec<f32> = (0..d).map(|_| (rng.next_f64() * 0.4 - 0.2) as f32).collect();
+
+        // HTE: V jets, cost independent of d (up to the layer-1 matmul).
+        let mut gen = ProbeGenerator::new(Estimator::HteRademacher, d, v, Xoshiro256pp::new(3));
+        report.push(time_fn(&format!("hte-V{v}/d{d}"), 2, 10, || {
+            let probes = gen.next();
+            let mut acc = 0.0;
+            for k in 0..v {
+                acc += jet_forward(&mlp, &problem, &x, &probes[k * d..(k + 1) * d], 2)[2];
+            }
+            std::hint::black_box(acc / v as f64);
+        }));
+
+        // Exact trace: d basis jets.
+        report.push(time_fn(&format!("exact-trace/d{d}"), 1, 5, || {
+            let mut acc = 0.0;
+            let mut e = vec![0.0f32; d];
+            for i in 0..d {
+                e[i] = 1.0;
+                acc += jet_forward(&mlp, &problem, &x, &e, 2)[2];
+                e[i] = 0.0;
+            }
+            std::hint::black_box(acc);
+        }));
+
+        // Full Hessian materialization via polarization:
+        // H_ij = (D2[e_i + e_j] - D2[e_i] - D2[e_j]) / 2.
+        // O(d^2) jets + O(d^2) memory — only feasible at small d (the point).
+        if d <= 64 {
+            report.push(time_fn(&format!("full-hessian/d{d}"), 1, 3, || {
+                let mut diag = vec![0.0f64; d];
+                let mut e = vec![0.0f32; d];
+                for i in 0..d {
+                    e[i] = 1.0;
+                    diag[i] = jet_forward(&mlp, &problem, &x, &e, 2)[2];
+                    e[i] = 0.0;
+                }
+                let mut hess = vec![0.0f64; d * d];
+                let mut eij = vec![0.0f32; d];
+                for i in 0..d {
+                    hess[i * d + i] = diag[i];
+                    for j in 0..i {
+                        eij[i] = 1.0;
+                        eij[j] = 1.0;
+                        let dij = jet_forward(&mlp, &problem, &x, &eij, 2)[2];
+                        eij[i] = 0.0;
+                        eij[j] = 0.0;
+                        let h = (dij - diag[i] - diag[j]) / 2.0;
+                        hess[i * d + j] = h;
+                        hess[j * d + i] = h;
+                    }
+                }
+                std::hint::black_box(hess.iter().sum::<f64>());
+            }));
+        } else {
+            println!("  full-hessian/d{d}: skipped (O(d^2) jets — the paper's OOM regime)");
+        }
+    }
+    println!("  expected: hte flat-ish in d; exact-trace ~linear; full-hessian ~quadratic");
+    report.finish();
+}

@@ -1,0 +1,66 @@
+//! Ablation: Hutch++ (related work [40]) vs plain Hutchinson at equal
+//! matvec budget, on Hessian-like spectra.
+//!
+//! The paper's related-work section positions Hutch++ as the
+//! variance-optimal upgrade; this bench quantifies when it pays off for
+//! PINN-style Hessians: a lot on spiked/low-rank curvature, little on
+//! diffuse curvature (where the paper's plain Rademacher HTE is already
+//! near-optimal).
+
+use hte_pinn::estimators::{hutchinson_trace, hutchpp_trace};
+use hte_pinn::rng::Xoshiro256pp;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn dense_matvec(a: Vec<f64>, d: usize) -> impl Fn(&[f64]) -> Vec<f64> {
+    move |x: &[f64]| (0..d).map(|i| (0..d).map(|j| a[i * d + j] * x[j]).sum()).collect()
+}
+
+fn spiked(d: usize, spike: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro256pp::new(seed);
+    let u: Vec<f64> = (0..d).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+    let mut a = vec![0.0f64; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            let noise = 0.1 * (rng.next_f64() - 0.5);
+            a[i * d + j] = spike * u[i] * u[j] + noise;
+            a[j * d + i] = a[i * d + j];
+        }
+    }
+    a
+}
+
+fn mse(estimates: &[f64], truth: f64) -> f64 {
+    estimates.iter().map(|e| (e - truth).powi(2)).sum::<f64>() / estimates.len() as f64
+}
+
+fn main() {
+    let d = 48;
+    let budget = 16; // matvecs per estimate
+    let trials = 200;
+    let mut report = BenchReport::new("ablation: hutch++ vs hutchinson");
+    for (name, spike) in [("spiked(10x)", 10.0), ("diffuse", 0.0)] {
+        let a = spiked(d, spike, 1);
+        let truth: f64 = (0..d).map(|i| a[i * d + i]).sum();
+        let mv = dense_matvec(a, d);
+        let hutch: Vec<f64> = (0..trials)
+            .map(|s| hutchinson_trace(&mv, d, budget, &mut Xoshiro256pp::new(100 + s)))
+            .collect();
+        let pp: Vec<f64> = (0..trials)
+            .map(|s| hutchpp_trace(&mv, d, budget / 4, budget / 2, &mut Xoshiro256pp::new(900 + s)))
+            .collect();
+        println!(
+            "  {name}: trace {truth:+.3}  mse hutchinson {:.4e}  mse hutch++ {:.4e}  ratio {:.2}",
+            mse(&hutch, truth),
+            mse(&pp, truth),
+            mse(&hutch, truth) / mse(&pp, truth).max(1e-300)
+        );
+        let mut rng = Xoshiro256pp::new(5);
+        report.push(time_fn(&format!("hutchinson/{name}"), 2, 20, || {
+            std::hint::black_box(hutchinson_trace(&mv, d, budget, &mut rng));
+        }));
+        report.push(time_fn(&format!("hutch++/{name}"), 2, 20, || {
+            std::hint::black_box(hutchpp_trace(&mv, d, budget / 4, budget / 2, &mut rng));
+        }));
+    }
+    report.finish();
+}

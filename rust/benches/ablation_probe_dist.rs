@@ -1,0 +1,66 @@
+//! Ablation: probe distribution — Rademacher vs Gaussian vs SDGD.
+//!
+//! The paper chooses Rademacher for the Hessian trace because it is the
+//! minimum-variance HTE distribution ([50]); Gaussian probes add diagonal
+//! variance (which is why the biharmonic TVP needs a bigger V).  This
+//! bench measures (a) probe-generation throughput and (b) the estimator
+//! variance on a real jet-computed Hessian quadratic form, natively.
+
+use hte_pinn::estimators::{Estimator, ProbeGenerator};
+use hte_pinn::nn::{jet_forward, Mlp};
+use hte_pinn::pde::SineGordon2Body;
+use hte_pinn::rng::Xoshiro256pp;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn main() {
+    let d = 64;
+    let v = 16;
+    let mut report = BenchReport::new("ablation: probe distributions");
+
+    // (a) generation throughput
+    for est in [Estimator::HteRademacher, Estimator::HteGaussian, Estimator::Sdgd] {
+        let mut gen = ProbeGenerator::new(est, d, v, Xoshiro256pp::new(1));
+        let mut buf = vec![0.0f32; v * d];
+        report.push(time_fn(&format!("generate/{}", est.name()), 10, 200, || {
+            gen.fill(&mut buf);
+        }));
+    }
+
+    // (b) estimator variance on the model's actual directional curvature
+    let mlp = Mlp::init(d, &mut Xoshiro256pp::new(2));
+    let problem = SineGordon2Body::new(d);
+    let mut rng = Xoshiro256pp::new(3);
+    let x: Vec<f32> = (0..d).map(|_| (rng.next_f64() * 0.4 - 0.2) as f32).collect();
+    // exact trace via basis jets as ground truth
+    let mut exact = 0.0;
+    for i in 0..d {
+        let mut e = vec![0.0f32; d];
+        e[i] = 1.0;
+        exact += jet_forward(&mlp, &problem, &x, &e, 2)[2];
+    }
+    println!("  exact Laplacian at x: {exact:.5}");
+    for est in [Estimator::HteRademacher, Estimator::HteGaussian, Estimator::Sdgd] {
+        let mut gen = ProbeGenerator::new(est, d, v, Xoshiro256pp::new(4));
+        let trials = 300;
+        let mut vals = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let probes = gen.next();
+            let mut acc = 0.0;
+            for k in 0..v {
+                acc += jet_forward(&mlp, &problem, &x, &probes[k * d..(k + 1) * d], 2)[2];
+            }
+            vals.push(acc / v as f64);
+        }
+        let mean = vals.iter().sum::<f64>() / trials as f64;
+        let var = vals.iter().map(|z| (z - mean).powi(2)).sum::<f64>() / trials as f64;
+        println!(
+            "  {:12} estimator: mean {:+.5} (bias {:+.2e})  variance {:.3e}",
+            est.name(),
+            mean,
+            mean - exact,
+            var
+        );
+    }
+    println!("  expected ordering: var(rademacher) <= var(gaussian); SDGD depends on diag spread");
+    report.finish();
+}

@@ -1,0 +1,66 @@
+//! §Perf: where does a train step's wall time go at the table scales?
+//!
+//! Splits the L3 step into its host-side stages (residual sampling, probe
+//! generation, buffer upload) vs the XLA execution, so the coordinator's
+//! overhead budget (<10% of step time, DESIGN.md §8) is verifiable.
+
+use hte_pinn::coordinator::{TrainConfig, Trainer};
+use hte_pinn::estimators::{Estimator, ProbeGenerator};
+use hte_pinn::pde::{Domain, DomainSampler};
+use hte_pinn::rng::Xoshiro256pp;
+use hte_pinn::runtime::Engine;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let mut report = BenchReport::new("perf: step breakdown");
+    for d in engine.manifest().dims_for("train", "sg2", "probe") {
+        let n = 100;
+        let v = 16;
+        if engine.find_entry("train", "sg2", "probe", d, Some(v)).is_err() {
+            continue;
+        }
+        // host-side stages
+        let mut sampler = DomainSampler::new(Domain::UnitBall, d, Xoshiro256pp::new(1));
+        let mut xs = vec![0.0f32; n * d];
+        report.push(time_fn(&format!("sample-batch/d{d}"), 5, 50, || {
+            sampler.fill_batch(&mut xs);
+        }));
+        let mut gen = ProbeGenerator::new(Estimator::HteRademacher, d, v, Xoshiro256pp::new(2));
+        let mut probes = vec![0.0f32; v * d];
+        report.push(time_fn(&format!("probe-gen/d{d}"), 5, 50, || {
+            gen.fill(&mut probes);
+        }));
+        report.push(time_fn(&format!("upload-x/d{d}"), 5, 50, || {
+            let _ = engine.upload(&xs, &[n, d]).unwrap();
+        }));
+        // full step for comparison
+        let cfg = TrainConfig {
+            family: "sg2".into(),
+            method: "probe".into(),
+            estimator: Estimator::HteRademacher,
+            d,
+            v,
+            epochs: 1,
+            lr0: 1e-3,
+            seed: 0,
+            lambda_g: 10.0,
+            log_every: usize::MAX,
+        };
+        let mut trainer = Trainer::new(&engine, cfg).unwrap();
+        report.push(time_fn(&format!("full-step/d{d}"), 3, 30, || {
+            trainer.step().unwrap();
+        }));
+        // loss readback (full state download — the log_every cost)
+        report.push(time_fn(&format!("loss-readback/d{d}"), 3, 20, || {
+            let _ = trainer.loss().unwrap();
+        }));
+    }
+    report.finish();
+}

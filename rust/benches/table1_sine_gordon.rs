@@ -1,0 +1,55 @@
+//! Bench: Table 1's speed column — per-step cost of PINN (full Hessian)
+//! vs SDGD vs HTE across dimensions, on the compiled artifacts.
+//!
+//! The paper's shape to reproduce: full PINN slows down rapidly with d
+//! (quadratic Hessian), SDGD/HTE stay nearly flat.
+
+use hte_pinn::coordinator::{TrainConfig, Trainer};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::runtime::Engine;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn config(method: &str, est: Estimator, d: usize, v: usize) -> TrainConfig {
+    TrainConfig {
+        family: "sg2".into(),
+        method: method.into(),
+        estimator: est,
+        d,
+        v,
+        epochs: 1,
+        lr0: 1e-3,
+        seed: 0,
+        lambda_g: 10.0,
+        log_every: usize::MAX,
+    }
+}
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let mut report = BenchReport::new("table1: per-step cost, Sine-Gordon");
+    let iters = 30;
+    for d in engine.manifest().dims_for("train", "sg2", "probe") {
+        for (name, method, est, v) in [
+            ("PINN-full", "full", Estimator::FullBasis, 0usize),
+            ("SDGD", "probe", Estimator::Sdgd, 16),
+            ("HTE", "probe", Estimator::HteRademacher, 16),
+        ] {
+            let want_v = if v > 0 { Some(v) } else { None };
+            if engine.find_entry("train", "sg2", method, d, want_v).is_err() {
+                println!("  {name}/d{d}: N.A. (no artifact — the paper's OOM cell)");
+                continue;
+            }
+            let mut trainer = Trainer::new(&engine, config(method, est, d, v)).unwrap();
+            report.push(time_fn(&format!("{name}/d{d}"), 3, iters, || {
+                trainer.step().unwrap();
+            }));
+        }
+    }
+    report.finish();
+}

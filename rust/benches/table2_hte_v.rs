@@ -1,0 +1,42 @@
+//! Bench: Table 2's speed/memory columns — per-step cost of HTE as the
+//! probe batch V grows (paper: speed degrades mildly, memory slightly).
+
+use hte_pinn::coordinator::{rss_mb, TrainConfig, Trainer};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::runtime::Engine;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let d = *engine.manifest().dims_for("train", "sg2", "probe").last().unwrap_or(&1000);
+    let mut report = BenchReport::new("table2: HTE per-step cost vs V");
+    for v in [1usize, 4, 8, 16] {
+        if engine.find_entry("train", "sg2", "probe", d, Some(v)).is_err() {
+            continue;
+        }
+        let cfg = TrainConfig {
+            family: "sg2".into(),
+            method: "probe".into(),
+            estimator: Estimator::HteRademacher,
+            d,
+            v,
+            epochs: 1,
+            lr0: 1e-3,
+            seed: 0,
+            lambda_g: 10.0,
+            log_every: usize::MAX,
+        };
+        let mut trainer = Trainer::new(&engine, cfg).unwrap();
+        report.push(time_fn(&format!("HTE/d{d}/V{v}"), 3, 30, || {
+            trainer.step().unwrap();
+        }));
+        println!("    rss after V={v}: {:.0}MB", rss_mb());
+    }
+    report.finish();
+}

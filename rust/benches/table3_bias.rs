@@ -1,0 +1,51 @@
+//! Bench: Table 3's speed column — biased (one probe set) vs unbiased
+//! (two probe sets) HTE per-step cost.  Paper: unbiased ~10% slower.
+
+use hte_pinn::coordinator::{TrainConfig, Trainer};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::runtime::Engine;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let mut report = BenchReport::new("table3: biased vs unbiased per-step cost");
+    for d in engine.manifest().dims_for("train", "sg2", "unbiased") {
+        let mut timings = Vec::new();
+        for method in ["probe", "unbiased"] {
+            if engine.find_entry("train", "sg2", method, d, Some(16)).is_err() {
+                continue;
+            }
+            let cfg = TrainConfig {
+                family: "sg2".into(),
+                method: method.into(),
+                estimator: Estimator::HteRademacher,
+                d,
+                v: 16,
+                epochs: 1,
+                lr0: 1e-3,
+                seed: 0,
+                lambda_g: 10.0,
+                log_every: usize::MAX,
+            };
+            let mut trainer = Trainer::new(&engine, cfg).unwrap();
+            let t = time_fn(&format!("{method}/d{d}"), 3, 30, || {
+                trainer.step().unwrap();
+            });
+            timings.push(t.clone());
+            report.push(t);
+        }
+        if timings.len() == 2 {
+            println!(
+                "    unbiased/biased step-time ratio at d={d}: {:.2} (paper ~1.1)",
+                timings[1].mean_s / timings[0].mean_s
+            );
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,52 @@
+//! Bench: Table 4's speed column — PINN / gPINN / HTE-PINN / HTE-gPINN
+//! per-step cost.  Paper shape: gPINN ~3x slower than its PINN at the
+//! same fidelity; the HTE variants scale to dims where the full variants
+//! have no artifact (OOM on the paper's A100).
+
+use hte_pinn::coordinator::{TrainConfig, Trainer};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::runtime::Engine;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let mut report = BenchReport::new("table4: gPINN per-step cost");
+    for d in engine.manifest().dims_for("train", "sg2", "gpinn_probe") {
+        let variants: [(&str, &str, Estimator, usize); 4] = [
+            ("PINN", "full", Estimator::FullBasis, 0),
+            ("gPINN", "gpinn_full", Estimator::FullBasis, 0),
+            ("HTE-PINN", "probe", Estimator::HteRademacher, 16),
+            ("HTE-gPINN", "gpinn_probe", Estimator::HteRademacher, 16),
+        ];
+        for (name, method, est, v) in variants {
+            let want_v = if v > 0 { Some(v) } else { None };
+            if engine.find_entry("train", "sg2", method, d, want_v).is_err() {
+                println!("  {name}/d{d}: N.A. (no artifact — the paper's OOM cell)");
+                continue;
+            }
+            let cfg = TrainConfig {
+                family: "sg2".into(),
+                method: method.into(),
+                estimator: est,
+                d,
+                v,
+                epochs: 1,
+                lr0: 1e-3,
+                seed: 0,
+                lambda_g: 10.0,
+                log_every: usize::MAX,
+            };
+            let mut trainer = Trainer::new(&engine, cfg).unwrap();
+            report.push(time_fn(&format!("{name}/d{d}"), 2, 20, || {
+                trainer.step().unwrap();
+            }));
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,63 @@
+//! Bench: Table 5's speed column — vanilla biharmonic PINN (nested full
+//! Hessians) vs TVP-HTE across dims and V.  Paper shape: ~10x speedups
+//! for HTE past 50D, full PINN drops out earliest of all experiments.
+
+use hte_pinn::coordinator::{TrainConfig, Trainer};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::runtime::Engine;
+use hte_pinn::util::bench::{time_fn, BenchReport};
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let mut report = BenchReport::new("table5: biharmonic per-step cost");
+    for d in engine.manifest().dims_for("train", "bihar", "probe4") {
+        if engine.find_entry("train", "bihar", "full4", d, None).is_ok() {
+            let cfg = TrainConfig {
+                family: "bihar".into(),
+                method: "full4".into(),
+                estimator: Estimator::FullBasis,
+                d,
+                v: 0,
+                epochs: 1,
+                lr0: 1e-3,
+                seed: 0,
+                lambda_g: 10.0,
+                log_every: usize::MAX,
+            };
+            let mut trainer = Trainer::new(&engine, cfg).unwrap();
+            report.push(time_fn(&format!("PINN-full4/d{d}"), 2, 10, || {
+                trainer.step().unwrap();
+            }));
+        } else {
+            println!("  PINN-full4/d{d}: N.A. (no artifact — the paper's OOM cell)");
+        }
+        for v in [4usize, 16, 64] {
+            if engine.find_entry("train", "bihar", "probe4", d, Some(v)).is_err() {
+                continue;
+            }
+            let cfg = TrainConfig {
+                family: "bihar".into(),
+                method: "probe4".into(),
+                estimator: Estimator::HteGaussian,
+                d,
+                v,
+                epochs: 1,
+                lr0: 1e-3,
+                seed: 0,
+                lambda_g: 10.0,
+                log_every: usize::MAX,
+            };
+            let mut trainer = Trainer::new(&engine, cfg).unwrap();
+            report.push(time_fn(&format!("TVP-HTE/d{d}/V{v}"), 2, 15, || {
+                trainer.step().unwrap();
+            }));
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,322 @@
+//! Tape-based reverse-mode automatic differentiation over `tensor::Tensor`.
+//!
+//! This is the from-scratch "backward AD" substrate the paper's cost
+//! discussion (Section 3.2.3) is about.  The native training path builds
+//! the HTE residual (whose *forward* high-order derivatives come from the
+//! jet rules, expressed in tape ops) and then reverse-differentiates once
+//! w.r.t. the parameters — exactly the forward-Taylor + single-backward
+//! schedule the paper advocates.
+
+use crate::tensor::Tensor;
+
+/// Index of a node on the tape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Var(pub usize);
+
+type BackwardFn = Box<dyn Fn(&Tensor, &Tape) -> Vec<(usize, Tensor)>>;
+
+struct Node {
+    value: Tensor,
+    backward: Option<BackwardFn>,
+}
+
+/// A linear tape of operations; gradients flow backwards over it.
+#[derive(Default)]
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+impl Tape {
+    pub fn new() -> Self {
+        Self { nodes: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn value(&self, v: Var) -> &Tensor {
+        &self.nodes[v.0].value
+    }
+
+    fn push(&mut self, value: Tensor, backward: Option<BackwardFn>) -> Var {
+        self.nodes.push(Node { value, backward });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// Differentiable input (a leaf whose gradient we want).
+    pub fn input(&mut self, value: Tensor) -> Var {
+        self.push(value, None)
+    }
+
+    /// Non-differentiable constant.
+    pub fn constant(&mut self, value: Tensor) -> Var {
+        self.push(value, None)
+    }
+
+    pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        let value = self.value(a).matmul(self.value(b));
+        self.push(
+            value,
+            Some(Box::new(move |g, tape| {
+                vec![
+                    (a.0, g.matmul_nt(tape.value(b))),
+                    (b.0, tape.value(a).matmul_tn(g)),
+                ]
+            })),
+        )
+    }
+
+    /// Broadcast-add a [n] bias row to a [m, n] matrix.
+    pub fn add_row(&mut self, a: Var, bias: Var) -> Var {
+        let value = self.value(a).add_row(self.value(bias));
+        self.push(
+            value,
+            Some(Box::new(move |g, _| {
+                vec![(a.0, g.clone()), (bias.0, g.sum_rows())]
+            })),
+        )
+    }
+
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let value = self.value(a).add(self.value(b));
+        self.push(
+            value,
+            Some(Box::new(move |g, _| vec![(a.0, g.clone()), (b.0, g.clone())])),
+        )
+    }
+
+    pub fn sub(&mut self, a: Var, b: Var) -> Var {
+        let value = self.value(a).sub(self.value(b));
+        self.push(
+            value,
+            Some(Box::new(move |g, _| vec![(a.0, g.clone()), (b.0, g.scale(-1.0))])),
+        )
+    }
+
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        let value = self.value(a).mul(self.value(b));
+        self.push(
+            value,
+            Some(Box::new(move |g, tape| {
+                vec![(a.0, g.mul(tape.value(b))), (b.0, g.mul(tape.value(a)))]
+            })),
+        )
+    }
+
+    pub fn scale(&mut self, a: Var, alpha: f32) -> Var {
+        let value = self.value(a).scale(alpha);
+        self.push(
+            value,
+            Some(Box::new(move |g, _| vec![(a.0, g.scale(alpha))])),
+        )
+    }
+
+    pub fn tanh(&mut self, a: Var) -> Var {
+        let value = self.value(a).map(|v| v.tanh());
+        self.push(
+            value,
+            Some(Box::new(move |g, tape| {
+                let deriv = tape.value(a).map(|v| {
+                    let t = v.tanh();
+                    1.0 - t * t
+                });
+                vec![(a.0, g.mul(&deriv))]
+            })),
+        )
+    }
+
+    pub fn sin(&mut self, a: Var) -> Var {
+        let value = self.value(a).map(|v| v.sin());
+        self.push(
+            value,
+            Some(Box::new(move |g, tape| {
+                vec![(a.0, g.mul(&tape.value(a).map(|v| v.cos())))]
+            })),
+        )
+    }
+
+    pub fn square(&mut self, a: Var) -> Var {
+        self.mul(a, a)
+    }
+
+    /// Mean over all elements -> scalar.
+    pub fn mean_all(&mut self, a: Var) -> Var {
+        let n = self.value(a).numel() as f32;
+        let value = Tensor::scalar(self.value(a).sum() / n);
+        self.push(
+            value,
+            Some(Box::new(move |g, tape| {
+                let shape = tape.value(a).shape.clone();
+                let gv = g.data[0] / n;
+                vec![(a.0, Tensor::from_vec(&shape, vec![gv; n as usize]))]
+            })),
+        )
+    }
+
+    /// Mean over consecutive groups of `group` rows: [g*k, 1] -> [k, 1].
+    /// (Used to average the per-probe directional derivatives per point.)
+    pub fn group_mean(&mut self, a: Var, group: usize) -> Var {
+        let total = self.value(a).numel();
+        assert_eq!(total % group, 0);
+        let k = total / group;
+        let mut out = Tensor::zeros(&[k, 1]);
+        for (i, chunk) in self.value(a).data.chunks(group).enumerate() {
+            out.data[i] = chunk.iter().sum::<f32>() / group as f32;
+        }
+        self.push(
+            out,
+            Some(Box::new(move |g, _| {
+                let mut ga = Tensor::zeros(&[k * group, 1]);
+                for i in 0..k {
+                    let gv = g.data[i] / group as f32;
+                    for j in 0..group {
+                        ga.data[i * group + j] = gv;
+                    }
+                }
+                vec![(a.0, ga)]
+            })),
+        )
+    }
+
+    /// Reverse pass from a scalar root; returns per-node gradients.
+    pub fn backward(&self, root: Var) -> Vec<Option<Tensor>> {
+        assert_eq!(self.value(root).numel(), 1, "backward root must be scalar");
+        let mut grads: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        grads[root.0] = Some(Tensor::from_vec(&self.value(root).shape.clone(), vec![1.0]));
+        for i in (0..=root.0).rev() {
+            let Some(g) = grads[i].clone() else { continue };
+            if let Some(back) = &self.nodes[i].backward {
+                for (parent, contribution) in back(&g, self) {
+                    match &mut grads[parent] {
+                        Some(acc) => *acc = acc.add(&contribution),
+                        slot => *slot = Some(contribution),
+                    }
+                }
+            }
+        }
+        grads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// d/dx of sum-ish pipelines vs finite differences.
+    fn fd_grad(f: &dyn Fn(&[f32]) -> f32, x: &[f32], h: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(x.len());
+        let mut xp = x.to_vec();
+        for i in 0..x.len() {
+            let orig = xp[i];
+            xp[i] = orig + h;
+            let fp = f(&xp);
+            xp[i] = orig - h;
+            let fm = f(&xp);
+            xp[i] = orig;
+            out.push((fp - fm) / (2.0 * h));
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_tanh_chain_grad_matches_fd() {
+        let w_data = vec![0.3f32, -0.5, 0.2, 0.7, 0.1, -0.4];
+        let x_data = vec![0.5f32, -1.0];
+        let f = |w: &[f32]| -> f32 {
+            let mut tape = Tape::new();
+            let x = tape.constant(Tensor::from_vec(&[1, 2], x_data.clone()));
+            let w = tape.input(Tensor::from_vec(&[2, 3], w.to_vec()));
+            let h = tape.matmul(x, w);
+            let h = tape.tanh(h);
+            let loss = tape.mean_all(h);
+            tape.value(loss).data[0]
+        };
+        let mut tape = Tape::new();
+        let x = tape.constant(Tensor::from_vec(&[1, 2], x_data.clone()));
+        let w = tape.input(Tensor::from_vec(&[2, 3], w_data.clone()));
+        let h = tape.matmul(x, w);
+        let h = tape.tanh(h);
+        let loss = tape.mean_all(h);
+        let grads = tape.backward(loss);
+        let got = &grads[w.0].as_ref().unwrap().data;
+        let want = fd_grad(&f, &w_data, 1e-3);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mul_add_sin_grads_match_fd() {
+        let a_data = vec![0.2f32, -0.8, 1.5];
+        let f = |a: &[f32]| -> f32 {
+            let mut tape = Tape::new();
+            let av = tape.input(Tensor::from_vec(&[3, 1], a.to_vec()));
+            let s = tape.sin(av);
+            let m = tape.mul(s, av);
+            let q = tape.square(m);
+            let loss = tape.mean_all(q);
+            tape.value(loss).data[0]
+        };
+        let mut tape = Tape::new();
+        let av = tape.input(Tensor::from_vec(&[3, 1], a_data.clone()));
+        let s = tape.sin(av);
+        let m = tape.mul(s, av);
+        let q = tape.square(m);
+        let loss = tape.mean_all(q);
+        let grads = tape.backward(loss);
+        let got = &grads[av.0].as_ref().unwrap().data;
+        let want = fd_grad(&f, &a_data, 1e-3);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn group_mean_forward_and_backward() {
+        let mut tape = Tape::new();
+        let a = tape.input(Tensor::from_vec(&[4, 1], vec![1., 3., 5., 7.]));
+        let gm = tape.group_mean(a, 2);
+        assert_eq!(tape.value(gm).data, vec![2., 6.]);
+        let sq = tape.square(gm);
+        let loss = tape.mean_all(sq);
+        let grads = tape.backward(loss);
+        // d/da_i mean_k (mean-group)^2 = (group mean_k) / group  [x 2 / K]
+        let g = &grads[a.0].as_ref().unwrap().data;
+        assert_eq!(g.len(), 4);
+        // loss = (m1^2 + m2^2)/2, m1=(a0+a1)/2 -> dL/da0 = m1/2 = 1.0
+        assert!((g[0] - 1.0).abs() < 1e-6, "{g:?}");
+        assert!((g[2] - 3.0).abs() < 1e-6, "{g:?}");
+    }
+
+    #[test]
+    fn bias_broadcast_grad() {
+        let mut tape = Tape::new();
+        let a = tape.constant(Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]));
+        let b = tape.input(Tensor::from_vec(&[2], vec![0.5, -0.5]));
+        let h = tape.add_row(a, b);
+        let loss = tape.mean_all(h);
+        let grads = tape.backward(loss);
+        let g = &grads[b.0].as_ref().unwrap().data;
+        // each bias element feeds 3 of the 6 mean terms: grad = 3/6 = 0.5
+        assert!((g[0] - 0.5).abs() < 1e-6 && (g[1] - 0.5).abs() < 1e-6, "{g:?}");
+    }
+
+    #[test]
+    fn diamond_graph_accumulates() {
+        // loss = mean( (x*x) + x ) : grad = 2x + 1 (per element / n)
+        let mut tape = Tape::new();
+        let x = tape.input(Tensor::from_vec(&[2, 1], vec![3.0, -1.0]));
+        let xx = tape.square(x);
+        let s = tape.add(xx, x);
+        let loss = tape.mean_all(s);
+        let grads = tape.backward(loss);
+        let g = &grads[x.0].as_ref().unwrap().data;
+        assert!((g[0] - (2.0 * 3.0 + 1.0) / 2.0).abs() < 1e-6);
+        assert!((g[1] - (2.0 * -1.0 + 1.0) / 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,138 @@
+//! Checkpointing: packed state + run metadata, in a simple self-describing
+//! binary format (magic, JSON header, raw little-endian f32 payload).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::TrainConfig;
+use crate::util::json::{num, obj, Value};
+
+const MAGIC: &[u8; 8] = b"HTEPINN1";
+
+#[derive(Clone, Debug)]
+pub struct CheckpointMeta {
+    pub config: TrainConfig,
+    pub step: usize,
+    pub state_len: usize,
+    pub coeff: Vec<f32>,
+}
+
+pub fn save(
+    path: impl AsRef<Path>,
+    config: &TrainConfig,
+    step: usize,
+    coeff: &[f32],
+    state: &[f32],
+) -> Result<()> {
+    let header_val = obj(vec![
+        ("config", config.to_json()),
+        ("step", num(step as f64)),
+        ("state_len", num(state.len() as f64)),
+        (
+            "coeff",
+            Value::Arr(coeff.iter().map(|&c| num(c as f64)).collect()),
+        ),
+    ]);
+    let header = header_val.to_json().into_bytes();
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(&header)?;
+    for v in state {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<(CheckpointMeta, Vec<f32>)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a hte-pinn checkpoint (bad magic)");
+    }
+    let mut len_bytes = [0u8; 8];
+    f.read_exact(&mut len_bytes)?;
+    let header_len = u64::from_le_bytes(len_bytes) as usize;
+    if header_len > 16 * 1024 * 1024 {
+        bail!("absurd checkpoint header size {header_len}");
+    }
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let v = Value::parse(std::str::from_utf8(&header)?)?;
+    let meta = CheckpointMeta {
+        config: TrainConfig::from_json(v.get("config")?)?,
+        step: v.get("step")?.as_usize()?,
+        state_len: v.get("state_len")?.as_usize()?,
+        coeff: v
+            .get("coeff")?
+            .as_arr()?
+            .iter()
+            .map(|c| Ok(c.as_f64()? as f32))
+            .collect::<Result<_>>()?,
+    };
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    if payload.len() != meta.state_len * 4 {
+        bail!("truncated checkpoint: {} bytes for {} floats", payload.len(), meta.state_len);
+    }
+    let state = payload
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok((meta, state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::Estimator;
+
+    fn config() -> TrainConfig {
+        TrainConfig {
+            family: "sg2".into(),
+            method: "probe".into(),
+            estimator: Estimator::HteRademacher,
+            d: 10,
+            v: 4,
+            epochs: 100,
+            lr0: 1e-3,
+            seed: 7,
+            lambda_g: 10.0,
+            log_every: 10,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-{}", std::process::id()));
+        let path = dir.join("run.ckpt");
+        let state: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        let coeff = vec![1.0f32, -2.0];
+        save(&path, &config(), 42, &coeff, &state).unwrap();
+        let (meta, loaded) = load(&path).unwrap();
+        assert_eq!(meta.step, 42);
+        assert_eq!(meta.coeff, coeff);
+        assert_eq!(meta.config.d, 10);
+        assert_eq!(meta.config.estimator, Estimator::HteRademacher);
+        assert_eq!(loaded, state);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,173 @@
+//! TOML experiment configuration for the CLI launcher (parsed with the
+//! in-repo TOML-subset substrate — offline build, no external crates).
+//!
+//! ```toml
+//! artifacts = "artifacts"
+//!
+//! [run]
+//! family = "sg2"
+//! method = "probe"
+//! estimator = "hte"      # hte | hte-gauss | sdgd | exact
+//! d = 100
+//! v = 16
+//! epochs = 2000
+//! lr0 = 1e-3
+//! seeds = [0, 1, 2]
+//! lambda_g = 10.0
+//! log_every = 100
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::TrainConfig;
+use crate::estimators::Estimator;
+use crate::util::json::Value;
+use crate::util::toml;
+
+#[derive(Clone, Debug)]
+pub struct FileConfig {
+    pub artifacts: PathBuf,
+    pub run: RunConfig,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub family: String,
+    pub method: String,
+    pub estimator: Estimator,
+    pub d: usize,
+    pub v: usize,
+    pub epochs: usize,
+    pub lr0: f32,
+    pub seeds: Vec<u64>,
+    pub lambda_g: f32,
+    pub log_every: usize,
+}
+
+fn get_str(map: &BTreeMap<String, Value>, key: &str, default: &str) -> Result<String> {
+    match map.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => Ok(v.as_str()?.to_string()),
+    }
+}
+
+fn get_usize(map: &BTreeMap<String, Value>, key: &str, default: usize) -> Result<usize> {
+    match map.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_usize(),
+    }
+}
+
+fn get_f32(map: &BTreeMap<String, Value>, key: &str, default: f32) -> Result<f32> {
+    match map.get(key) {
+        None => Ok(default),
+        Some(v) => Ok(v.as_f64()? as f32),
+    }
+}
+
+impl FileConfig {
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = toml::parse(text)?;
+        let top = doc.get("").cloned().unwrap_or_default();
+        let run = doc.get("run").context("config needs a [run] section")?;
+        let seeds = match run.get("seeds") {
+            None => vec![0u64],
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_f64()? as u64))
+                .collect::<Result<_>>()?,
+        };
+        Ok(FileConfig {
+            artifacts: PathBuf::from(get_str(&top, "artifacts", "artifacts")?),
+            run: RunConfig {
+                family: run.get("family").context("[run] needs family")?.as_str()?.to_string(),
+                method: get_str(run, "method", "probe")?,
+                estimator: get_str(run, "estimator", "hte")?.parse()?,
+                d: run.get("d").context("[run] needs d")?.as_usize()?,
+                v: get_usize(run, "v", 16)?,
+                epochs: get_usize(run, "epochs", 2000)?,
+                lr0: get_f32(run, "lr0", 1e-3)?,
+                seeds,
+                lambda_g: get_f32(run, "lambda_g", 10.0)?,
+                log_every: get_usize(run, "log_every", 100)?,
+            },
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    /// Expand into one TrainConfig per seed.
+    pub fn train_configs(&self) -> Vec<TrainConfig> {
+        self.run
+            .seeds
+            .iter()
+            .map(|&seed| TrainConfig {
+                family: self.run.family.clone(),
+                method: self.run.method.clone(),
+                estimator: self.run.estimator,
+                d: self.run.d,
+                v: self.run.v,
+                epochs: self.run.epochs,
+                lr0: self.run.lr0,
+                seed,
+                lambda_g: self.run.lambda_g,
+                log_every: self.run.log_every,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_config_with_defaults() {
+        let cfg = FileConfig::parse("[run]\nfamily = \"sg2\"\nd = 100\n").unwrap();
+        assert_eq!(cfg.artifacts, PathBuf::from("artifacts"));
+        assert_eq!(cfg.run.v, 16);
+        assert_eq!(cfg.run.estimator, Estimator::HteRademacher);
+        let configs = cfg.train_configs();
+        assert_eq!(configs.len(), 1);
+        assert_eq!(configs[0].d, 100);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = FileConfig::parse(
+            r#"
+            artifacts = "my_artifacts"
+            [run]
+            family = "bihar"
+            method = "probe4"
+            estimator = "hte-gauss"
+            d = 10
+            v = 64
+            epochs = 500
+            lr0 = 0.002
+            seeds = [1, 2, 3]
+            lambda_g = 100.0
+            log_every = 50
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.run.estimator, Estimator::HteGaussian);
+        assert_eq!(cfg.artifacts, PathBuf::from("my_artifacts"));
+        assert_eq!(cfg.train_configs().len(), 3);
+        assert_eq!(cfg.train_configs()[2].seed, 3);
+    }
+
+    #[test]
+    fn missing_family_is_error() {
+        assert!(FileConfig::parse("[run]\nd = 10\n").is_err());
+        assert!(FileConfig::parse("d = 10\n").is_err());
+    }
+}

@@ -1,0 +1,273 @@
+//! Experiment drivers: one function per paper table.
+//!
+//! Each driver assembles a (method x dimension x seed) config grid,
+//! consults the manifest for which artifacts exist (missing combos become
+//! the paper's "N.A." cells — e.g. vanilla PINN past its OOM dimension),
+//! runs the sweep, and aggregates mean +/- std over seeds.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::sweep::{mean_std, run_sweep, SweepResult};
+use super::trainer::TrainConfig;
+use crate::estimators::Estimator;
+use crate::runtime::Manifest;
+
+/// One aggregated table cell-group (a method at a dimension).
+#[derive(Clone, Debug)]
+pub struct ExperimentRow {
+    pub table: &'static str,
+    pub method: String,
+    pub family: String,
+    pub d: usize,
+    pub v: usize,
+    pub it_per_sec: f64,
+    pub rss_mb: f64,
+    pub err_mean: f64,
+    pub err_std: f64,
+    pub final_loss: f64,
+    pub seeds: usize,
+}
+
+impl ExperimentRow {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{num, obj, s};
+        obj(vec![
+            ("table", s(self.table)),
+            ("method", s(self.method.clone())),
+            ("family", s(self.family.clone())),
+            ("d", num(self.d as f64)),
+            ("v", num(self.v as f64)),
+            ("it_per_sec", num(self.it_per_sec)),
+            ("rss_mb", num(self.rss_mb)),
+            ("err_mean", num(self.err_mean)),
+            ("err_std", num(self.err_std)),
+            ("final_loss", num(self.final_loss)),
+            ("seeds", num(self.seeds as f64)),
+        ])
+    }
+}
+
+fn aggregate(
+    table: &'static str,
+    method: &str,
+    results: &[SweepResult],
+) -> Option<ExperimentRow> {
+    if results.is_empty() {
+        return None;
+    }
+    let errs: Vec<f64> = results.iter().filter_map(|r| r.summary.rel_l2).collect();
+    let (err_mean, err_std) = mean_std(&errs);
+    let speeds: Vec<f64> = results.iter().map(|r| r.summary.it_per_sec).collect();
+    let rss: Vec<f64> = results.iter().map(|r| r.summary.rss_mb).collect();
+    let losses: Vec<f64> = results.iter().map(|r| r.summary.final_loss as f64).collect();
+    let c = &results[0].config;
+    Some(ExperimentRow {
+        table,
+        method: method.to_string(),
+        family: c.family.clone(),
+        d: c.d,
+        v: c.v,
+        it_per_sec: mean_std(&speeds).0,
+        rss_mb: mean_std(&rss).0,
+        err_mean,
+        err_std,
+        final_loss: mean_std(&losses).0,
+        seeds: results.len(),
+    })
+}
+
+pub struct ExperimentOpts {
+    pub artifact_dir: PathBuf,
+    pub seeds: Vec<u64>,
+    pub epochs: usize,
+    pub threads: usize,
+    pub eval_points: usize,
+    pub lr0: f32,
+}
+
+impl ExperimentOpts {
+    fn base(&self, family: &str, method: &str, est: Estimator, d: usize, v: usize, seed: u64) -> TrainConfig {
+        TrainConfig {
+            family: family.into(),
+            method: method.into(),
+            estimator: est,
+            d,
+            v,
+            epochs: self.epochs,
+            lr0: self.lr0,
+            seed,
+            lambda_g: 10.0,
+            log_every: usize::MAX,
+        }
+    }
+
+    fn run_grid(
+        &self,
+        table: &'static str,
+        grid: Vec<(String, Vec<TrainConfig>)>,
+    ) -> Result<Vec<ExperimentRow>> {
+        // Flatten, run once, regroup.
+        let mut flat = Vec::new();
+        let mut spans = Vec::new();
+        for (label, configs) in &grid {
+            spans.push((label.clone(), flat.len(), configs.len()));
+            flat.extend(configs.iter().cloned());
+        }
+        let results = run_sweep(self.artifact_dir.clone(), flat, self.threads, self.eval_points)?;
+        let mut rows = Vec::new();
+        for (label, start, len) in spans {
+            if let Some(row) = aggregate(table, &label, &results[start..start + len]) {
+                rows.push(row);
+            }
+        }
+        Ok(rows)
+    }
+}
+
+/// Table 1: Sine-Gordon two-/three-body; PINN vs SDGD vs HTE across dims.
+pub fn experiment_sine_gordon(
+    opts: &ExperimentOpts,
+    manifest: &Manifest,
+    dims: &[usize],
+    v: usize,
+) -> Result<Vec<ExperimentRow>> {
+    let mut grid = Vec::new();
+    for family in ["sg2", "sg3"] {
+        for &d in dims {
+            // vanilla PINN baseline, where the artifact exists (else "N.A.")
+            if manifest.find("train", family, "full", d, None).is_ok() {
+                let label = format!("PINN/{family}/d{d}");
+                let cfgs = opts
+                    .seeds
+                    .iter()
+                    .map(|&s| opts.base(family, "full", Estimator::FullBasis, d, 0, s))
+                    .collect();
+                grid.push((label, cfgs));
+            }
+            for (name, est) in [("SDGD", Estimator::Sdgd), ("HTE", Estimator::HteRademacher)] {
+                if manifest.find("train", family, "probe", d, Some(v)).is_ok() {
+                    let label = format!("{name}/{family}/d{d}");
+                    let cfgs = opts
+                        .seeds
+                        .iter()
+                        .map(|&s| opts.base(family, "probe", est, d, v, s))
+                        .collect();
+                    grid.push((label, cfgs));
+                }
+            }
+        }
+    }
+    opts.run_grid("table1", grid)
+}
+
+/// Table 2: effect of the HTE batch size V (sg2 at the largest dim).
+pub fn experiment_v_sweep(
+    opts: &ExperimentOpts,
+    manifest: &Manifest,
+    d: usize,
+    vs: &[usize],
+) -> Result<Vec<ExperimentRow>> {
+    let mut grid = Vec::new();
+    for &v in vs {
+        if manifest.find("train", "sg2", "probe", d, Some(v)).is_ok() {
+            let label = format!("HTE/V{v}");
+            let cfgs = opts
+                .seeds
+                .iter()
+                .map(|&s| opts.base("sg2", "probe", Estimator::HteRademacher, d, v, s))
+                .collect();
+            grid.push((label, cfgs));
+        }
+    }
+    opts.run_grid("table2", grid)
+}
+
+/// Table 3: biased (Eq. 7) vs unbiased (Eq. 8) HTE.
+pub fn experiment_bias(
+    opts: &ExperimentOpts,
+    manifest: &Manifest,
+    dims: &[usize],
+    v: usize,
+) -> Result<Vec<ExperimentRow>> {
+    let mut grid = Vec::new();
+    for &d in dims {
+        for (label_base, method) in [("Biased", "probe"), ("Unbiased", "unbiased")] {
+            if manifest.find("train", "sg2", method, d, Some(v)).is_ok() {
+                let label = format!("{label_base}/d{d}");
+                let cfgs = opts
+                    .seeds
+                    .iter()
+                    .map(|&s| opts.base("sg2", method, Estimator::HteRademacher, d, v, s))
+                    .collect();
+                grid.push((label, cfgs));
+            }
+        }
+    }
+    opts.run_grid("table3", grid)
+}
+
+/// Table 4: gPINN — PINN, gPINN, HTE-PINN, HTE-gPINN.
+pub fn experiment_gpinn(
+    opts: &ExperimentOpts,
+    manifest: &Manifest,
+    dims: &[usize],
+    v: usize,
+) -> Result<Vec<ExperimentRow>> {
+    let mut grid = Vec::new();
+    for &d in dims {
+        let variants: [(&str, &str, Estimator, usize); 4] = [
+            ("PINN", "full", Estimator::FullBasis, 0),
+            ("gPINN", "gpinn_full", Estimator::FullBasis, 0),
+            ("HTE-PINN", "probe", Estimator::HteRademacher, v),
+            ("HTE-gPINN", "gpinn_probe", Estimator::HteRademacher, v),
+        ];
+        for (name, method, est, vv) in variants {
+            let want_v = if vv > 0 { Some(vv) } else { None };
+            if manifest.find("train", "sg2", method, d, want_v).is_ok() {
+                let label = format!("{name}/d{d}");
+                let cfgs = opts
+                    .seeds
+                    .iter()
+                    .map(|&s| opts.base("sg2", method, est, d, vv, s))
+                    .collect();
+                grid.push((label, cfgs));
+            }
+        }
+    }
+    opts.run_grid("table4", grid)
+}
+
+/// Table 5: biharmonic — PINN vs TVP-HTE across V.
+pub fn experiment_biharmonic(
+    opts: &ExperimentOpts,
+    manifest: &Manifest,
+    dims: &[usize],
+    vs: &[usize],
+) -> Result<Vec<ExperimentRow>> {
+    let mut grid = Vec::new();
+    for &d in dims {
+        if manifest.find("train", "bihar", "full4", d, None).is_ok() {
+            let label = format!("PINN/d{d}");
+            let cfgs = opts
+                .seeds
+                .iter()
+                .map(|&s| opts.base("bihar", "full4", Estimator::FullBasis, d, 0, s))
+                .collect();
+            grid.push((label, cfgs));
+        }
+        for &v in vs {
+            if manifest.find("train", "bihar", "probe4", d, Some(v)).is_ok() {
+                let label = format!("HTE(V={v})/d{d}");
+                let cfgs = opts
+                    .seeds
+                    .iter()
+                    .map(|&s| opts.base("bihar", "probe4", Estimator::HteGaussian, d, v, s))
+                    .collect();
+                grid.push((label, cfgs));
+            }
+        }
+    }
+    opts.run_grid("table5", grid)
+}

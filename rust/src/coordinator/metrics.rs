@@ -1,0 +1,133 @@
+//! Training metrics: JSONL step log + process RSS probe.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// One logged training step.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub elapsed_s: f64,
+    pub it_per_sec: f64,
+    pub rss_mb: f64,
+}
+
+impl StepRecord {
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"step\":{},\"loss\":{:e},\"lr\":{:e},\"elapsed_s\":{:.3},\"it_per_sec\":{:.3},\"rss_mb\":{:.1}}}",
+            self.step, self.loss, self.lr, self.elapsed_s, self.it_per_sec, self.rss_mb
+        )
+    }
+}
+
+/// Append-only JSONL metrics writer (one JSON object per line).
+pub struct MetricsLogger {
+    out: Option<BufWriter<File>>,
+}
+
+impl MetricsLogger {
+    pub fn to_file(path: impl AsRef<Path>) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self { out: Some(BufWriter::new(File::create(path)?)) })
+    }
+
+    /// A logger that drops everything (for benches / tests).
+    pub fn null() -> Self {
+        Self { out: None }
+    }
+
+    pub fn log(&mut self, record: &StepRecord) -> Result<()> {
+        if let Some(out) = self.out.as_mut() {
+            out.write_all(record.to_jsonl().as_bytes())?;
+            out.write_all(b"\n")?;
+        }
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(out) = self.out.as_mut() {
+            out.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// Current process resident-set size in MB (VmRSS from /proc/self/status).
+/// Stands in for the paper's `nvidia-smi` MB column on this CPU testbed.
+pub fn rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive() {
+        assert!(rss_mb() > 1.0);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hte-pinn-test-{}", std::process::id()));
+        let path = dir.join("metrics.jsonl");
+        let mut logger = MetricsLogger::to_file(&path).unwrap();
+        for step in 0..3 {
+            logger
+                .log(&StepRecord {
+                    step,
+                    loss: 1.0 / (step + 1) as f32,
+                    lr: 1e-3,
+                    elapsed_s: 0.1,
+                    it_per_sec: 100.0,
+                    rss_mb: 42.0,
+                })
+                .unwrap();
+        }
+        logger.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        let parsed = crate::util::json::Value::parse(lines[2]).unwrap();
+        assert_eq!(parsed.get("step").unwrap().as_usize().unwrap(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn null_logger_is_silent() {
+        let mut logger = MetricsLogger::null();
+        logger
+            .log(&StepRecord {
+                step: 0,
+                loss: 0.0,
+                lr: 0.0,
+                elapsed_s: 0.0,
+                it_per_sec: 0.0,
+                rss_mb: 0.0,
+            })
+            .unwrap();
+        logger.flush().unwrap();
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! This is where the repository's "system" lives: residual-point
+//! sampling, probe generation (the estimator identity from Section
+//! 3.3.1), the device-resident Adam stepping loop, the linear LR
+//! schedule, metrics, evaluation against the 20k-point test pool, and the
+//! multi-seed / multi-method sweep runner that regenerates every table in
+//! the paper.
+
+mod experiments;
+mod metrics;
+mod native;
+mod schedule;
+mod sweep;
+mod trainer;
+
+pub use experiments::{
+    experiment_biharmonic, experiment_bias, experiment_gpinn, experiment_sine_gordon,
+    experiment_v_sweep, ExperimentOpts, ExperimentRow,
+};
+pub use metrics::{rss_mb, MetricsLogger, StepRecord};
+pub use native::NativeTrainer;
+pub use schedule::LinearDecay;
+pub use sweep::{mean_std, run_one, run_sweep, SweepResult};
+pub use trainer::{problem_for, EvalPool, RunSummary, TrainConfig, Trainer};

@@ -1,0 +1,179 @@
+//! Native backend: the same training loop with zero XLA in it.
+//!
+//! Runs the Sine-Gordon probe methods entirely through the in-repo
+//! tensor/autodiff/jet engine (`nn::native_loss`) — jet-forward residual,
+//! one reverse pass, Adam.  Purpose: (a) the repo stays usable with no
+//! artifacts at all, (b) an independent implementation cross-validating
+//! the compiled path (see `examples/native_backend.rs`), (c) the
+//! substrate for the AD-mode ablation benches.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::estimators::ProbeGenerator;
+use crate::nn::{adam_step, hte_residual_loss_and_grad, Mlp, NativeBatch};
+use crate::pde::{DomainSampler, PdeProblem};
+use crate::rng::{Normal, Xoshiro256pp};
+
+use super::metrics::{rss_mb, MetricsLogger, StepRecord};
+use super::schedule::LinearDecay;
+use super::trainer::{problem_for, EvalPool, RunSummary, TrainConfig};
+
+pub struct NativeTrainer {
+    pub mlp: Mlp,
+    problem: Box<dyn PdeProblem>,
+    sampler: DomainSampler,
+    probes: ProbeGenerator,
+    schedule: LinearDecay,
+    pub coeff: Vec<f32>,
+    pub config: TrainConfig,
+    pub step_idx: usize,
+    pub last_loss: f32,
+    // Adam state
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: f32,
+    batch_n: usize,
+}
+
+impl NativeTrainer {
+    pub fn new(config: TrainConfig, batch_n: usize) -> Result<Self> {
+        if config.method != "probe" || config.family == "bihar" {
+            bail!(
+                "native backend supports the Sine-Gordon probe methods (got {}/{})",
+                config.family,
+                config.method
+            );
+        }
+        let mut root = Xoshiro256pp::new(config.seed);
+        let problem = problem_for(&config.family, config.d)?;
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        Normal::new().fill_f32(&mut root.fork(1), &mut coeff);
+        let sampler = DomainSampler::new(problem.domain(), config.d, root.fork(2));
+        let probes = ProbeGenerator::new(config.estimator, config.d, config.v, root.fork(3));
+        let mlp = Mlp::init(config.d, &mut root.fork(6));
+        let n_params = mlp.n_params();
+        Ok(Self {
+            mlp,
+            problem,
+            sampler,
+            probes,
+            schedule: LinearDecay::new(config.lr0, config.epochs.max(1)),
+            coeff,
+            config,
+            step_idx: 0,
+            last_loss: f32::NAN,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0.0,
+            batch_n,
+        })
+    }
+
+    pub fn step(&mut self) -> Result<()> {
+        let lr = self.schedule.at(self.step_idx);
+        let xs = self.sampler.batch(self.batch_n);
+        let probes = self.probes.next();
+        let batch = NativeBatch {
+            xs: &xs,
+            probes: &probes,
+            coeff: &self.coeff,
+            n: self.batch_n,
+            v: self.config.v,
+        };
+        let (loss, grad) = hte_residual_loss_and_grad(&self.mlp, self.problem.as_ref(), &batch);
+        let mut flat = self.mlp.pack();
+        adam_step(&mut flat, &mut self.m, &mut self.v, &mut self.t, &grad, lr);
+        self.mlp.unpack_into(&flat);
+        self.last_loss = loss;
+        self.step_idx += 1;
+        Ok(())
+    }
+
+    /// Relative L2 error on an eval pool, fully native.
+    pub fn evaluate(&self, pool: &EvalPool) -> f64 {
+        let d = self.config.d;
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for point in pool.xs.chunks(d) {
+            let u = self.mlp.forward_constrained(point, self.problem.factor(point));
+            let u_star = self.problem.u_exact(point, &self.coeff);
+            num += (u - u_star).powi(2);
+            den += u_star * u_star;
+        }
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    pub fn run(&mut self, logger: &mut MetricsLogger) -> Result<RunSummary> {
+        let start = Instant::now();
+        let epochs = self.config.epochs;
+        for i in 0..epochs {
+            self.step()?;
+            let log_every = self.config.log_every.max(1);
+            if (i + 1) % log_every == 0 || i + 1 == epochs {
+                logger.log(&StepRecord {
+                    step: self.step_idx,
+                    loss: self.last_loss,
+                    lr: self.schedule.at(self.step_idx.saturating_sub(1)),
+                    elapsed_s: start.elapsed().as_secs_f64(),
+                    it_per_sec: self.step_idx as f64 / start.elapsed().as_secs_f64(),
+                    rss_mb: rss_mb(),
+                })?;
+            }
+        }
+        logger.flush()?;
+        let wall = start.elapsed().as_secs_f64();
+        Ok(RunSummary {
+            label: format!("native-{}", self.config.label()),
+            steps: self.step_idx,
+            final_loss: self.last_loss,
+            rel_l2: None,
+            it_per_sec: self.step_idx as f64 / wall,
+            rss_mb: rss_mb(),
+            wall_s: wall,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::Estimator;
+
+    fn config(d: usize, epochs: usize) -> TrainConfig {
+        TrainConfig {
+            family: "sg2".into(),
+            method: "probe".into(),
+            estimator: Estimator::HteRademacher,
+            d,
+            v: 4,
+            epochs,
+            lr0: 2e-3,
+            seed: 5,
+            lambda_g: 10.0,
+            log_every: usize::MAX,
+        }
+    }
+
+    #[test]
+    fn native_training_reduces_error() {
+        let mut trainer = NativeTrainer::new(config(6, 250), 16).unwrap();
+        let pool = EvalPool::generate(trainer.problem.domain(), 6, 500, 9);
+        let before = trainer.evaluate(&pool);
+        let mut logger = MetricsLogger::null();
+        trainer.run(&mut logger).unwrap();
+        let after = trainer.evaluate(&pool);
+        assert!(after < 0.7 * before, "{before} -> {after}");
+        assert!(trainer.last_loss.is_finite());
+    }
+
+    #[test]
+    fn rejects_unsupported_methods() {
+        let mut cfg = config(6, 10);
+        cfg.method = "full".into();
+        assert!(NativeTrainer::new(cfg, 8).is_err());
+        let mut cfg = config(6, 10);
+        cfg.family = "bihar".into();
+        assert!(NativeTrainer::new(cfg, 8).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! Learning-rate schedules.  The paper uses a linear decay from the
+//! initial rate to zero over the full run; living in the coordinator
+//! means one artifact serves any schedule (lr is a step input).
+
+/// lr(step) = lr0 * (1 - step/total), clamped at 0.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearDecay {
+    pub lr0: f32,
+    pub total: usize,
+}
+
+impl LinearDecay {
+    pub fn new(lr0: f32, total: usize) -> Self {
+        assert!(total > 0);
+        Self { lr0, total }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        let frac = 1.0 - step as f32 / self.total as f32;
+        self.lr0 * frac.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decays_linearly_to_zero() {
+        let s = LinearDecay::new(1e-3, 1000);
+        assert_eq!(s.at(0), 1e-3);
+        assert!((s.at(500) - 5e-4).abs() < 1e-9);
+        assert_eq!(s.at(1000), 0.0);
+        assert_eq!(s.at(2000), 0.0); // clamped past the end
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let s = LinearDecay::new(2e-3, 100);
+        let mut prev = f32::MAX;
+        for step in 0..=120 {
+            let lr = s.at(step);
+            assert!(lr <= prev);
+            prev = lr;
+        }
+    }
+}

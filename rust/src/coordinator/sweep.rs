@@ -1,0 +1,129 @@
+//! Multi-run sweep executor.
+//!
+//! `PjRtClient` is thread-local (`Rc`-backed), so parallelism is
+//! thread-per-run with a fresh `Engine` inside each worker; results come
+//! back over a channel.  This is how every paper table is regenerated:
+//! (method x dimension x seed) grids.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use super::metrics::MetricsLogger;
+use super::trainer::{problem_for, EvalPool, RunSummary, TrainConfig, Trainer};
+use crate::runtime::Engine;
+
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub config: TrainConfig,
+    pub summary: RunSummary,
+}
+
+/// Run one config to completion (train + eval) on the given engine.
+pub fn run_one(engine: &Engine, config: &TrainConfig, eval_points: usize) -> Result<SweepResult> {
+    let mut trainer = Trainer::new(engine, config.clone())?;
+    let mut logger = MetricsLogger::null();
+    let mut summary = trainer.run(&mut logger)?;
+    if eval_points > 0 {
+        let problem = problem_for(&config.family, config.d)?;
+        // round the pool up to a multiple of the eval artifact's batch
+        let eval_entry = engine.find_entry("eval", &config.family, "eval", config.d, None)?;
+        let m = eval_entry.n;
+        let n = eval_points.div_ceil(m) * m;
+        let pool = EvalPool::generate(problem.domain(), config.d, n, config.seed);
+        summary.rel_l2 = Some(trainer.evaluate(&pool)?);
+    }
+    Ok(SweepResult { config: config.clone(), summary })
+}
+
+/// Run a grid of configs across `threads` workers (engine per thread).
+pub fn run_sweep(
+    artifact_dir: PathBuf,
+    configs: Vec<TrainConfig>,
+    threads: usize,
+    eval_points: usize,
+) -> Result<Vec<SweepResult>> {
+    let threads = threads.clamp(1, configs.len().max(1));
+    let (job_tx, job_rx) = mpsc::channel::<(usize, TrainConfig)>();
+    let job_rx = std::sync::Arc::new(std::sync::Mutex::new(job_rx));
+    let (res_tx, res_rx) = mpsc::channel::<(usize, Result<SweepResult>)>();
+    let n_jobs = configs.len();
+    for (i, c) in configs.into_iter().enumerate() {
+        job_tx.send((i, c)).unwrap();
+    }
+    drop(job_tx);
+
+    let mut handles = Vec::new();
+    for _ in 0..threads {
+        let job_rx = job_rx.clone();
+        let res_tx = res_tx.clone();
+        let dir = artifact_dir.clone();
+        handles.push(std::thread::spawn(move || {
+            let engine = match Engine::load(&dir) {
+                Ok(e) => e,
+                Err(err) => {
+                    // Report the failure against every job we would take.
+                    while let Ok((i, _)) = job_rx.lock().unwrap().recv() {
+                        res_tx.send((i, Err(anyhow::anyhow!("engine load failed: {err:#}")))).ok();
+                    }
+                    return;
+                }
+            };
+            loop {
+                let job = job_rx.lock().unwrap().recv();
+                let Ok((i, config)) = job else { break };
+                let result = run_one(&engine, &config, eval_points);
+                if res_tx.send((i, result)).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    drop(res_tx);
+
+    let mut slots: Vec<Option<SweepResult>> = (0..n_jobs).map(|_| None).collect();
+    let mut first_err = None;
+    for (i, result) in res_rx {
+        match result {
+            Ok(r) => slots[i] = Some(r),
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    for h in handles {
+        h.join().ok();
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(slots.into_iter().map(|s| s.expect("missing sweep slot")).collect())
+}
+
+/// Aggregate mean / std over a slice of per-seed values.
+pub fn mean_std(values: &[f64]) -> (f64, f64) {
+    if values.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!(m1, 5.0);
+        assert_eq!(s1, 0.0);
+        assert!(mean_std(&[]).0.is_nan());
+    }
+}

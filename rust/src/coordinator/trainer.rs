@@ -1,0 +1,374 @@
+//! The device-resident training loop.
+//!
+//! Steady state is a single `execute_b` per Adam step: the packed
+//! optimizer state (params | m | v | t | loss) lives in a PJRT buffer that
+//! the step's output replaces, so no parameter bytes cross the host
+//! boundary between steps.  The host uploads only what is freshly random
+//! each step — the residual batch, the probe matrix, and the 4-byte lr.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::estimators::{Estimator, ProbeGenerator};
+use crate::pde::{
+    Biharmonic3Body, Domain, DomainSampler, PdeProblem, SineGordon2Body, SineGordon3Body,
+};
+use crate::rng::{Normal, Xoshiro256pp};
+use crate::runtime::{Engine, Entry};
+
+use super::metrics::{rss_mb, MetricsLogger, StepRecord};
+use super::schedule::LinearDecay;
+
+/// Everything needed to reproduce one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub family: String,
+    /// Artifact method: probe | unbiased | full | gpinn_probe | gpinn_full
+    /// | probe4 | full4.
+    pub method: String,
+    /// Probe distribution for probe-driven methods (Section 3.3.1).
+    pub estimator: Estimator,
+    pub d: usize,
+    /// Probe batch V (must match an artifact; 0 for full methods).
+    pub v: usize,
+    pub epochs: usize,
+    pub lr0: f32,
+    pub seed: u64,
+    /// gPINN regularization weight (ignored unless method is gpinn_*).
+    pub lambda_g: f32,
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{num, obj, s, Value};
+        obj(vec![
+            ("family", s(self.family.clone())),
+            ("method", s(self.method.clone())),
+            ("estimator", s(self.estimator.name())),
+            ("d", num(self.d as f64)),
+            ("v", num(self.v as f64)),
+            ("epochs", num(self.epochs as f64)),
+            ("lr0", num(self.lr0 as f64)),
+            ("seed", num(self.seed as f64)),
+            ("lambda_g", num(self.lambda_g as f64)),
+            ("log_every", Value::Num(self.log_every.min(1 << 52) as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::json::Value) -> Result<Self> {
+        Ok(TrainConfig {
+            family: v.get("family")?.as_str()?.to_string(),
+            method: v.get("method")?.as_str()?.to_string(),
+            estimator: v.get("estimator")?.as_str()?.parse()?,
+            d: v.get("d")?.as_usize()?,
+            v: v.get("v")?.as_usize()?,
+            epochs: v.get("epochs")?.as_usize()?,
+            lr0: v.get("lr0")?.as_f64()? as f32,
+            seed: v.get("seed")?.as_f64()? as u64,
+            lambda_g: v.get("lambda_g")?.as_f64()? as f32,
+            log_every: v.get("log_every")?.as_usize()?,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}-d{}-v{}-s{}",
+            self.family,
+            self.method,
+            self.estimator.name(),
+            self.d,
+            self.v,
+            self.seed
+        )
+    }
+}
+
+/// Summary of a finished run (one row-cell of a paper table).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub label: String,
+    pub steps: usize,
+    pub final_loss: f32,
+    pub rel_l2: Option<f64>,
+    pub it_per_sec: f64,
+    pub rss_mb: f64,
+    pub wall_s: f64,
+}
+
+/// Fixed test pool for relative-L2 evaluation (paper: 20k points).
+pub struct EvalPool {
+    pub xs: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl EvalPool {
+    pub fn generate(domain: Domain, d: usize, n: usize, seed: u64) -> Self {
+        let mut sampler = DomainSampler::new(domain, d, Xoshiro256pp::new(seed ^ 0xEEAA));
+        Self { xs: sampler.batch(n), n, d }
+    }
+}
+
+pub fn problem_for(family: &str, d: usize) -> Result<Box<dyn PdeProblem>> {
+    Ok(match family {
+        "sg2" => Box::new(SineGordon2Body::new(d)),
+        "sg3" => Box::new(SineGordon3Body::new(d)),
+        "bihar" => Box::new(Biharmonic3Body::new(d)),
+        other => bail!("unknown family {other}"),
+    })
+}
+
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub entry: Entry,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    state: Option<xla::PjRtBuffer>,
+    coeff_buf: xla::PjRtBuffer,
+    lam_buf: Option<xla::PjRtBuffer>,
+    sampler: DomainSampler,
+    probes: Option<ProbeGenerator>,
+    probes2: Option<ProbeGenerator>,
+    gprobes: Option<ProbeGenerator>,
+    pub schedule: LinearDecay,
+    pub coeff: Vec<f32>,
+    pub config: TrainConfig,
+    pub step_idx: usize,
+    // reusable host staging buffers
+    x_host: Vec<f32>,
+    probe_host: Vec<f32>,
+    probe2_host: Vec<f32>,
+    gprobe_host: Vec<f32>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, config: TrainConfig) -> Result<Self> {
+        let needs_v = config.method.starts_with("probe")
+            || config.method == "unbiased"
+            || config.method == "gpinn_probe"
+            || config.method == "ritz";
+        let v = if needs_v { Some(config.v) } else { None };
+        let entry = engine
+            .find_entry("train", &config.family, &config.method, config.d, v)?
+            .clone();
+        let exe = engine.executable(&entry.name)?;
+
+        let mut root = Xoshiro256pp::new(config.seed);
+        // per-seed solution coefficients c_i ~ N(0, 1)
+        let mut coeff = vec![0.0f32; entry.n_coeff];
+        Normal::new().fill_f32(&mut root.fork(1), &mut coeff);
+        let coeff_buf = engine.upload(&coeff, &[entry.n_coeff])?;
+
+        let problem = problem_for(&config.family, config.d)?;
+        let sampler = DomainSampler::new(problem.domain(), config.d, root.fork(2));
+
+        let make_probe = |est: Estimator, v: usize, rng: Xoshiro256pp| {
+            ProbeGenerator::new(est, config.d, v, rng)
+        };
+        let (mut probes, mut probes2, mut gprobes) = (None, None, None);
+        match config.method.as_str() {
+            "probe" | "probe4" | "ritz" => {
+                probes = Some(make_probe(config.estimator, entry.v, root.fork(3)));
+            }
+            "unbiased" => {
+                probes = Some(make_probe(config.estimator, entry.v, root.fork(3)));
+                probes2 = Some(make_probe(config.estimator, entry.v, root.fork(4)));
+            }
+            "gpinn_probe" => {
+                probes = Some(make_probe(config.estimator, entry.v, root.fork(3)));
+                gprobes = Some(make_probe(
+                    Estimator::HteRademacher,
+                    entry.vg,
+                    root.fork(5),
+                ));
+            }
+            "full" | "full4" | "gpinn_full" => {}
+            other => bail!("unknown method {other}"),
+        }
+        // Thm 3.4: the biharmonic TVP estimator needs Gaussian probes.
+        if config.method == "probe4" && config.estimator == Estimator::HteRademacher {
+            probes = Some(make_probe(Estimator::HteGaussian, entry.v, root.fork(3)));
+        }
+
+        let lam_buf = if entry.inputs.iter().any(|i| i.name == "lam") {
+            Some(engine.upload(&[config.lambda_g], &[1])?)
+        } else {
+            None
+        };
+
+        let schedule = LinearDecay::new(config.lr0, config.epochs.max(1));
+        let mut trainer = Self {
+            engine,
+            x_host: vec![0.0; entry.n * config.d],
+            probe_host: vec![0.0; entry.v * config.d],
+            probe2_host: vec![0.0; entry.v * config.d],
+            gprobe_host: vec![0.0; entry.vg * config.d],
+            entry,
+            exe,
+            state: None,
+            coeff_buf,
+            lam_buf,
+            sampler,
+            probes,
+            probes2,
+            gprobes,
+            schedule,
+            coeff,
+            config,
+            step_idx: 0,
+        };
+        trainer.reset_state(&mut root.fork(6))?;
+        Ok(trainer)
+    }
+
+    /// Xavier-uniform weights, zero biases / moments / counters, packed.
+    fn reset_state(&mut self, rng: &mut Xoshiro256pp) -> Result<()> {
+        let mut host = vec![0.0f32; self.entry.state_size];
+        for p in &self.entry.param_layout {
+            if p.shape.len() == 2 {
+                let (fan_in, fan_out) = (p.shape[0], p.shape[1]);
+                let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+                let size = fan_in * fan_out;
+                for slot in &mut host[p.offset..p.offset + size] {
+                    *slot = ((rng.next_f64() * 2.0 - 1.0) * limit) as f32;
+                }
+            }
+        }
+        self.state = Some(self.engine.upload(&host, &[self.entry.state_size])?);
+        self.step_idx = 0;
+        Ok(())
+    }
+
+    /// One Adam step: sample, probe, execute, swap the state buffer.
+    pub fn step(&mut self) -> Result<()> {
+        let lr = self.schedule.at(self.step_idx);
+        self.sampler.fill_batch(&mut self.x_host);
+        let x_buf = self.engine.upload(&self.x_host, &[self.entry.n, self.config.d])?;
+        let lr_buf = self.engine.upload(&[lr], &[1])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            vec![self.state.as_ref().context("state missing")?, &x_buf];
+        let probe_buf = if let Some(gen) = self.probes.as_mut() {
+            gen.fill(&mut self.probe_host);
+            Some(self.engine.upload(&self.probe_host, &[self.entry.v, self.config.d])?)
+        } else {
+            None
+        };
+        if let Some(buf) = probe_buf.as_ref() {
+            args.push(buf);
+        }
+        let probe2_buf = if let Some(gen) = self.probes2.as_mut() {
+            gen.fill(&mut self.probe2_host);
+            Some(self.engine.upload(&self.probe2_host, &[self.entry.v, self.config.d])?)
+        } else {
+            None
+        };
+        if let Some(buf) = probe2_buf.as_ref() {
+            args.push(buf);
+        }
+        let gprobe_buf = if let Some(gen) = self.gprobes.as_mut() {
+            gen.fill(&mut self.gprobe_host);
+            Some(self.engine.upload(&self.gprobe_host, &[self.entry.vg, self.config.d])?)
+        } else {
+            None
+        };
+        if let Some(buf) = gprobe_buf.as_ref() {
+            args.push(buf);
+        }
+        args.push(&self.coeff_buf);
+        if let Some(lam) = self.lam_buf.as_ref() {
+            args.push(lam);
+        }
+        args.push(&lr_buf);
+
+        let new_state = self.engine.run(&self.exe, &args)?;
+        self.state = Some(new_state);
+        self.step_idx += 1;
+        Ok(())
+    }
+
+    /// Read the last step's loss from the packed state's loss slot.
+    pub fn loss(&self) -> Result<f32> {
+        let state = self.state.as_ref().context("state missing")?;
+        let host = self.engine.download(state)?;
+        Ok(host[self.entry.state_offsets.loss])
+    }
+
+    /// Full packed state (for checkpoints / inspection).
+    pub fn state_host(&self) -> Result<Vec<f32>> {
+        self.engine.download(self.state.as_ref().context("state missing")?)
+    }
+
+    /// Restore a packed state (checkpoint resume).
+    pub fn load_state(&mut self, host: &[f32], step_idx: usize) -> Result<()> {
+        anyhow::ensure!(host.len() == self.entry.state_size, "state size mismatch");
+        self.state = Some(self.engine.upload(host, &[self.entry.state_size])?);
+        self.step_idx = step_idx;
+        Ok(())
+    }
+
+    /// Relative L2 error over an eval pool, batched through the eval
+    /// artifact (the current state buffer is fed in directly).
+    pub fn evaluate(&self, pool: &EvalPool) -> Result<f64> {
+        let eval_entry = self
+            .engine
+            .find_entry("eval", &self.config.family, "eval", self.config.d, None)?;
+        let exe = self.engine.executable(&eval_entry.name)?;
+        let m = eval_entry.n;
+        anyhow::ensure!(pool.n % m == 0, "pool size {} not a multiple of eval batch {m}", pool.n);
+        anyhow::ensure!(
+            eval_entry.state_size == self.entry.state_size,
+            "eval/train state size mismatch"
+        );
+        let state = self.state.as_ref().context("state missing")?;
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for chunk in pool.xs.chunks(m * self.config.d) {
+            let x_buf = self.engine.upload(chunk, &[m, self.config.d])?;
+            let out = self.engine.run(&exe, &[state, &x_buf, &self.coeff_buf])?;
+            let sums = self.engine.download(&out)?;
+            num += sums[0] as f64;
+            den += sums[1] as f64;
+        }
+        Ok((num / den.max(1e-30)).sqrt())
+    }
+
+    /// Drive `epochs` steps with periodic logging; returns the summary.
+    pub fn run(&mut self, logger: &mut MetricsLogger) -> Result<RunSummary> {
+        let start = Instant::now();
+        let mut last_log = Instant::now();
+        let mut last_step = 0usize;
+        let epochs = self.config.epochs;
+        for i in 0..epochs {
+            self.step()?;
+            let log_every = self.config.log_every.max(1);
+            if (i + 1) % log_every == 0 || i + 1 == epochs {
+                let now = Instant::now();
+                let it_per_sec =
+                    (self.step_idx - last_step) as f64 / now.duration_since(last_log).as_secs_f64();
+                logger.log(&StepRecord {
+                    step: self.step_idx,
+                    loss: self.loss()?,
+                    lr: self.schedule.at(self.step_idx.saturating_sub(1)),
+                    elapsed_s: start.elapsed().as_secs_f64(),
+                    it_per_sec,
+                    rss_mb: rss_mb(),
+                })?;
+                last_log = now;
+                last_step = self.step_idx;
+            }
+        }
+        logger.flush()?;
+        let wall = start.elapsed().as_secs_f64();
+        Ok(RunSummary {
+            label: self.config.label(),
+            steps: self.step_idx,
+            final_loss: self.loss()?,
+            rel_l2: None,
+            it_per_sec: self.step_idx as f64 / wall,
+            rss_mb: rss_mb(),
+            wall_s: wall,
+        })
+    }
+}

@@ -1,0 +1,201 @@
+//! Hutch++ (Meyer, Musco, Musco, Woodruff — paper related-work [40]).
+//!
+//! Variance-reduced trace estimation: sketch the dominant range of A with
+//! k matvecs, take the trace exactly on that subspace, and run plain
+//! Hutchinson only on the deflated remainder.  Matvec-optimal; the paper
+//! cites it as the natural upgrade path for HTE-PINN, so we ship it as an
+//! analysis tool + ablation (`rust/benches/ablation_hutchpp.rs`).
+//!
+//! This operates on an explicit matvec closure (the analysis setting);
+//! plugging it into the training loop would need Hessian-*vector*
+//! products `Hv` (not just `vᵀHv`), i.e. forward-over-reverse — listed as
+//! future work in DESIGN.md.
+
+use crate::rng::{fill_rademacher, Xoshiro256pp};
+
+/// Modified Gram-Schmidt orthonormalization of k column vectors (each
+/// length d, column-major in `cols`).  Returns the retained columns.
+fn orthonormalize(cols: &mut Vec<Vec<f64>>) {
+    let mut kept: Vec<Vec<f64>> = Vec::with_capacity(cols.len());
+    for mut c in cols.drain(..) {
+        for q in &kept {
+            let proj: f64 = c.iter().zip(q).map(|(a, b)| a * b).sum();
+            for (ci, qi) in c.iter_mut().zip(q) {
+                *ci -= proj * qi;
+            }
+        }
+        let norm = c.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-10 {
+            for ci in c.iter_mut() {
+                *ci /= norm;
+            }
+            kept.push(c);
+        }
+    }
+    *cols = kept;
+}
+
+fn rademacher_vec(rng: &mut Xoshiro256pp, d: usize) -> Vec<f64> {
+    let mut buf = vec![0.0f32; d];
+    fill_rademacher(rng, &mut buf);
+    buf.into_iter().map(|x| x as f64).collect()
+}
+
+/// Hutch++ trace estimate with `k` sketch matvecs and `m` Hutchinson
+/// probes on the deflated remainder (total budget: 2k + m matvecs).
+pub fn hutchpp_trace(
+    matvec: &dyn Fn(&[f64]) -> Vec<f64>,
+    d: usize,
+    k: usize,
+    m: usize,
+    rng: &mut Xoshiro256pp,
+) -> f64 {
+    // 1. sketch: Q = orth(A S), S Rademacher d x k
+    let mut ys: Vec<Vec<f64>> = (0..k)
+        .map(|_| matvec(&rademacher_vec(rng, d)))
+        .collect();
+    orthonormalize(&mut ys);
+    let q = ys; // orthonormal basis of the sketched range
+
+    // 2. exact trace on the subspace: sum_i q_i^T A q_i
+    let mut trace = 0.0;
+    let aq: Vec<Vec<f64>> = q.iter().map(|qi| matvec(qi)).collect();
+    for (qi, aqi) in q.iter().zip(&aq) {
+        trace += qi.iter().zip(aqi).map(|(a, b)| a * b).sum::<f64>();
+    }
+
+    // 3. Hutchinson on the deflated remainder: g' = (I - QQ^T) g
+    let deflate = |g: &[f64]| -> Vec<f64> {
+        let mut out = g.to_vec();
+        for qi in &q {
+            let proj: f64 = g.iter().zip(qi).map(|(a, b)| a * b).sum();
+            for (o, qv) in out.iter_mut().zip(qi) {
+                *o -= proj * qv;
+            }
+        }
+        out
+    };
+    if m > 0 {
+        let mut acc = 0.0;
+        for _ in 0..m {
+            let g = deflate(&rademacher_vec(rng, d));
+            let ag = matvec(&g);
+            // (I-QQ^T) A (I-QQ^T): deflate the output too
+            let ag = deflate(&ag);
+            acc += g.iter().zip(&ag).map(|(a, b)| a * b).sum::<f64>();
+        }
+        trace += acc / m as f64;
+    }
+    trace
+}
+
+/// Plain Hutchinson with `m` matvecs (for equal-budget comparisons).
+pub fn hutchinson_trace(
+    matvec: &dyn Fn(&[f64]) -> Vec<f64>,
+    d: usize,
+    m: usize,
+    rng: &mut Xoshiro256pp,
+) -> f64 {
+    let mut acc = 0.0;
+    for _ in 0..m {
+        let g = rademacher_vec(rng, d);
+        let ag = matvec(&g);
+        acc += g.iter().zip(&ag).map(|(a, b)| a * b).sum::<f64>();
+    }
+    acc / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_matvec(a: Vec<f64>, d: usize) -> impl Fn(&[f64]) -> Vec<f64> {
+        move |x: &[f64]| {
+            (0..d)
+                .map(|i| (0..d).map(|j| a[i * d + j] * x[j]).sum())
+                .collect()
+        }
+    }
+
+    fn trace_of(a: &[f64], d: usize) -> f64 {
+        (0..d).map(|i| a[i * d + i]).sum()
+    }
+
+    #[test]
+    fn exact_on_low_rank_matrices() {
+        // rank-2 symmetric A: the k=4 sketch captures the whole range, so
+        // Hutch++ is exact regardless of the Hutchinson part.
+        let d = 12;
+        let mut rng = Xoshiro256pp::new(1);
+        let u = rademacher_vec(&mut rng, d);
+        let w = rademacher_vec(&mut rng, d);
+        let mut a = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                a[i * d + j] = 2.0 * u[i] * u[j] - 0.5 * w[i] * w[j];
+            }
+        }
+        let tr = trace_of(&a, d);
+        let mv = dense_matvec(a, d);
+        for seed in 0..5 {
+            let est = hutchpp_trace(&mv, d, 4, 3, &mut Xoshiro256pp::new(seed));
+            assert!((est - tr).abs() < 1e-8, "seed {seed}: {est} vs {tr}");
+        }
+    }
+
+    #[test]
+    fn beats_hutchinson_variance_on_skewed_spectra() {
+        // A = strong rank-1 + small noise: Hutch++ deflates the spike.
+        let d = 24;
+        let mut rng = Xoshiro256pp::new(7);
+        let u = rademacher_vec(&mut rng, d);
+        let mut a = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let noise = 0.05 * ((i * 31 + j * 17) % 13) as f64 / 13.0;
+                let sym = if i <= j { noise } else { 0.0 };
+                a[i * d + j] += 10.0 * u[i] * u[j] + sym;
+                a[j * d + i] += if i < j { sym } else { 0.0 };
+            }
+        }
+        let tr = trace_of(&a, d);
+        let mv = dense_matvec(a, d);
+        let trials = 400;
+        let budget = 12; // total matvecs each
+        let (mut var_h, mut var_pp) = (0.0, 0.0);
+        for s in 0..trials {
+            let h = hutchinson_trace(&mv, d, budget, &mut Xoshiro256pp::new(1000 + s));
+            let pp = hutchpp_trace(&mv, d, 4, budget - 8, &mut Xoshiro256pp::new(5000 + s));
+            var_h += (h - tr).powi(2);
+            var_pp += (pp - tr).powi(2);
+        }
+        assert!(
+            var_pp < 0.5 * var_h,
+            "hutch++ mse {} vs hutchinson mse {}",
+            var_pp / trials as f64,
+            var_h / trials as f64
+        );
+    }
+
+    #[test]
+    fn both_unbiased_on_random_symmetric() {
+        let d = 10;
+        let mut rng = Xoshiro256pp::new(3);
+        let mut a = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in 0..=i {
+                let x = rng.next_f64() * 2.0 - 1.0;
+                a[i * d + j] = x;
+                a[j * d + i] = x;
+            }
+        }
+        let tr = trace_of(&a, d);
+        let mv = dense_matvec(a, d);
+        let trials = 600;
+        let mean_pp: f64 = (0..trials)
+            .map(|s| hutchpp_trace(&mv, d, 3, 4, &mut Xoshiro256pp::new(s)))
+            .sum::<f64>()
+            / trials as f64;
+        assert!((mean_pp - tr).abs() < 0.25, "{mean_pp} vs {tr}");
+    }
+}

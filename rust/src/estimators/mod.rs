@@ -1,0 +1,14 @@
+//! Trace / tensor-contraction estimators: probe generation + variance theory.
+//!
+//! Section 3.3.1's observation — SDGD *is* HTE under a scaled-basis probe
+//! distribution — is load-bearing here: one probe-parameterized artifact
+//! serves HTE, SDGD, and the exact trace, and this module is where the
+//! estimator identity lives on the rust side.
+
+mod hutchpp;
+mod probes;
+mod variance;
+
+pub use hutchpp::{hutchinson_trace, hutchpp_trace};
+pub use probes::{Estimator, ProbeGenerator};
+pub use variance::{hte_rademacher_variance, hte_variance_gaussian_diag, sdgd_variance};

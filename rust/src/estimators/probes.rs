@@ -1,0 +1,192 @@
+//! Probe-matrix generation for every estimator in the paper.
+
+use crate::rng::{
+    fill_rademacher, sample_without_replacement, Normal, Xoshiro256pp,
+};
+
+/// Which trace/TVP estimator drives training (Sections 3.2-3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Estimator {
+    /// HTE with Rademacher probes (min-variance for the Hessian trace).
+    HteRademacher,
+    /// HTE with Gaussian probes (required for the biharmonic TVP, Thm 3.4).
+    HteGaussian,
+    /// SDGD: scaled standard-basis probes sampled without replacement.
+    Sdgd,
+    /// Exact trace: all d scaled basis vectors (V must equal d).
+    FullBasis,
+}
+
+impl Estimator {
+    pub fn name(self) -> &'static str {
+        match self {
+            Estimator::HteRademacher => "hte",
+            Estimator::HteGaussian => "hte-gauss",
+            Estimator::Sdgd => "sdgd",
+            Estimator::FullBasis => "exact",
+        }
+    }
+}
+
+impl std::str::FromStr for Estimator {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "hte" => Estimator::HteRademacher,
+            "hte-gauss" => Estimator::HteGaussian,
+            "sdgd" => Estimator::Sdgd,
+            "exact" => Estimator::FullBasis,
+            other => anyhow::bail!("unknown estimator {other} (hte|hte-gauss|sdgd|exact)"),
+        })
+    }
+}
+
+/// Fills `[V, d]` probe matrices per step.
+pub struct ProbeGenerator {
+    pub estimator: Estimator,
+    pub d: usize,
+    pub v: usize,
+    rng: Xoshiro256pp,
+    normal: Normal,
+}
+
+impl ProbeGenerator {
+    pub fn new(estimator: Estimator, d: usize, v: usize, rng: Xoshiro256pp) -> Self {
+        if estimator == Estimator::FullBasis {
+            assert_eq!(v, d, "FullBasis requires V == d");
+        }
+        Self { estimator, d, v, rng, normal: Normal::new() }
+    }
+
+    /// Fill a row-major [V, d] probe matrix.
+    pub fn fill(&mut self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.v * self.d);
+        match self.estimator {
+            Estimator::HteRademacher => fill_rademacher(&mut self.rng, out),
+            Estimator::HteGaussian => self.normal.fill_f32(&mut self.rng, out),
+            Estimator::Sdgd => {
+                // Without-replacement within each round of min(V, d) rows;
+                // V > d (possible at toy dims) wraps into further rounds —
+                // still unbiased, still a multiset of dimensions.
+                out.fill(0.0);
+                let scale = (self.d as f64).sqrt() as f32;
+                let mut k = 0;
+                while k < self.v {
+                    let take = (self.v - k).min(self.d);
+                    let idx = sample_without_replacement(&mut self.rng, self.d, take);
+                    for &i in &idx {
+                        out[k * self.d + i] = scale;
+                        k += 1;
+                    }
+                }
+            }
+            Estimator::FullBasis => {
+                out.fill(0.0);
+                let scale = (self.d as f64).sqrt() as f32;
+                for k in 0..self.v {
+                    out[k * self.d + k] = scale;
+                }
+            }
+        }
+    }
+
+    pub fn next(&mut self) -> Vec<f32> {
+        let mut buf = vec![0.0f32; self.v * self.d];
+        self.fill(&mut buf);
+        buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_form(a: &[f64], d: usize, v: &[f32]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..d {
+            for j in 0..d {
+                acc += v[i] as f64 * a[i * d + j] * v[j] as f64;
+            }
+        }
+        acc
+    }
+
+    fn trace(a: &[f64], d: usize) -> f64 {
+        (0..d).map(|i| a[i * d + i]).sum()
+    }
+
+    fn random_matrix(d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut n = Normal::new();
+        (0..d * d).map(|_| n.sample(&mut rng)).collect()
+    }
+
+    /// Every estimator's probe-mean quadratic form is an unbiased (or exact)
+    /// trace estimate — the Section 3.3.1 unification, checked numerically.
+    #[test]
+    fn all_estimators_estimate_the_trace() {
+        let d = 12;
+        let a = random_matrix(d, 1);
+        let tr = trace(&a, d);
+        for est in [
+            Estimator::HteRademacher,
+            Estimator::HteGaussian,
+            Estimator::Sdgd,
+        ] {
+            let v = if est == Estimator::Sdgd { 6 } else { 8 };
+            let mut gen = ProbeGenerator::new(est, d, v, Xoshiro256pp::new(2));
+            let trials = 40_000;
+            let mut mean = 0.0;
+            for _ in 0..trials {
+                let probes = gen.next();
+                let est_val: f64 = (0..v)
+                    .map(|k| quad_form(&a, d, &probes[k * d..(k + 1) * d]))
+                    .sum::<f64>()
+                    / v as f64;
+                mean += est_val;
+            }
+            mean /= trials as f64;
+            assert!(
+                (mean - tr).abs() < 0.35,
+                "{}: {mean} vs {tr}",
+                est.name()
+            );
+        }
+    }
+
+    #[test]
+    fn full_basis_is_exact() {
+        let d = 9;
+        let a = random_matrix(d, 3);
+        let mut gen = ProbeGenerator::new(Estimator::FullBasis, d, d, Xoshiro256pp::new(4));
+        let probes = gen.next();
+        let est: f64 = (0..d)
+            .map(|k| quad_form(&a, d, &probes[k * d..(k + 1) * d]))
+            .sum::<f64>()
+            / d as f64;
+        assert!((est - trace(&a, d)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sdgd_rows_are_scaled_distinct_basis_vectors() {
+        let d = 16;
+        let v = 5;
+        let mut gen = ProbeGenerator::new(Estimator::Sdgd, d, v, Xoshiro256pp::new(5));
+        for _ in 0..50 {
+            let probes = gen.next();
+            let mut dims = Vec::new();
+            for k in 0..v {
+                let row = &probes[k * d..(k + 1) * d];
+                let nonzero: Vec<usize> =
+                    (0..d).filter(|&i| row[i] != 0.0).collect();
+                assert_eq!(nonzero.len(), 1);
+                assert!((row[nonzero[0]] - (d as f32).sqrt()).abs() < 1e-6);
+                dims.push(nonzero[0]);
+            }
+            dims.sort_unstable();
+            dims.dedup();
+            assert_eq!(dims.len(), v, "replacement detected");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Variance theory for the trace estimators (Theorems 3.2 / 3.3).
+//!
+//! NOTE (paper erratum, mirrored in `python/tests/test_estimators.py`):
+//! Theorem 3.3 prints `Var = (1/V) sum_{i!=j} A_ij^2`, but its proof drops
+//! the (i=l, j=k) pairing of `E[v_i v_j v_k v_l]`.  The correct value is
+//! `(1/V) sum_{i!=j} A_ij (A_ij + A_ji)` — i.e. `2 sum_{i!=j} A_ij^2 / V`
+//! for symmetric A, which is exactly what makes the paper's own Section
+//! 3.3.2 worked examples come out to 4k^2.  We implement the correct
+//! formula; the qualitative claims (HTE variance comes from off-diagonal
+//! mass, SDGD variance from diagonal spread) are unchanged.
+
+/// Variance of the V-probe Rademacher HTE estimator of Tr(A).
+/// `a` is row-major d x d.
+pub fn hte_rademacher_variance(a: &[f64], d: usize, v: usize) -> f64 {
+    assert_eq!(a.len(), d * d);
+    let mut acc = 0.0;
+    for i in 0..d {
+        for j in 0..d {
+            if i != j {
+                acc += a[i * d + j] * (a[i * d + j] + a[j * d + i]);
+            }
+        }
+    }
+    acc / v as f64
+}
+
+/// Variance of the V-probe *Gaussian* HTE estimator of Tr(A) (symmetric A):
+/// Var[v^T A v] = 2 ||A||_F^2 with diagonal terms contributing too — this
+/// is why the biharmonic TVP (which requires Gaussian probes, Thm 3.4)
+/// needs a larger V (Section 4.3's observation).
+pub fn hte_variance_gaussian_diag(a: &[f64], d: usize, v: usize) -> f64 {
+    assert_eq!(a.len(), d * d);
+    let mut frob_sym = 0.0;
+    for i in 0..d {
+        for j in 0..d {
+            let sym = 0.5 * (a[i * d + j] + a[j * d + i]);
+            frob_sym += sym * sym;
+        }
+    }
+    2.0 * frob_sym / v as f64
+}
+
+/// Variance of the SDGD estimator (B dims sampled *without* replacement):
+/// finite-population sampling variance of the scaled diagonal,
+///   Var = Var_pop(d * A_ii) / B * (d - B) / (d - 1),
+/// equivalent to the enumeration in Theorem 3.2.
+pub fn sdgd_variance(diag: &[f64], b: usize) -> f64 {
+    let d = diag.len();
+    assert!(b >= 1 && b <= d);
+    if d == 1 || b == d {
+        return 0.0;
+    }
+    let scaled: Vec<f64> = diag.iter().map(|&x| x * d as f64).collect();
+    let mean = scaled.iter().sum::<f64>() / d as f64;
+    let pop_var = scaled.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / d as f64;
+    pop_var / b as f64 * (d - b) as f64 / (d - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::{Estimator, ProbeGenerator};
+    use crate::rng::Xoshiro256pp;
+
+    fn empirical_variance(est: Estimator, a: &[f64], d: usize, v: usize, trials: usize) -> f64 {
+        let mut gen = ProbeGenerator::new(est, d, v, Xoshiro256pp::new(77));
+        let mut vals = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let probes = gen.next();
+            let mut acc = 0.0;
+            for k in 0..v {
+                let row = &probes[k * d..(k + 1) * d];
+                for i in 0..d {
+                    for j in 0..d {
+                        acc += row[i] as f64 * a[i * d + j] * row[j] as f64;
+                    }
+                }
+            }
+            vals.push(acc / v as f64);
+        }
+        let mean = vals.iter().sum::<f64>() / trials as f64;
+        vals.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / trials as f64
+    }
+
+    fn symmetric_matrix(d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut a = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in 0..=i {
+                let x = rng.next_f64() * 2.0 - 1.0;
+                a[i * d + j] = x;
+                a[j * d + i] = x;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn rademacher_variance_matches_empirical() {
+        let d = 6;
+        let a = symmetric_matrix(d, 1);
+        for v in [1usize, 4] {
+            let theory = hte_rademacher_variance(&a, d, v);
+            let emp = empirical_variance(Estimator::HteRademacher, &a, d, v, 60_000);
+            assert!(
+                (emp - theory).abs() / theory < 0.08,
+                "V={v}: emp {emp} theory {theory}"
+            );
+        }
+    }
+
+    #[test]
+    fn gaussian_variance_matches_empirical() {
+        let d = 5;
+        let a = symmetric_matrix(d, 2);
+        let theory = hte_variance_gaussian_diag(&a, d, 2);
+        let emp = empirical_variance(Estimator::HteGaussian, &a, d, 2, 120_000);
+        assert!(
+            (emp - theory).abs() / theory < 0.1,
+            "emp {emp} theory {theory}"
+        );
+    }
+
+    #[test]
+    fn sdgd_variance_matches_empirical() {
+        let d = 8;
+        let a = symmetric_matrix(d, 3);
+        let diag: Vec<f64> = (0..d).map(|i| a[i * d + i]).collect();
+        for b in [1usize, 3, 8] {
+            let theory = sdgd_variance(&diag, b);
+            let emp = empirical_variance(Estimator::Sdgd, &a, d, b, 60_000);
+            let tol = 0.08 * theory.max(1e-3);
+            assert!((emp - theory).abs() < tol.max(2e-3), "B={b}: emp {emp} theory {theory}");
+        }
+    }
+
+    /// Section 3.3.2 worked examples: the 4k^2 crossover table.
+    ///
+    /// Convention note: the paper quotes SDGD's variance for the
+    /// *unscaled* sampled entry d^2f/dx_i^2 (4k^2); the properly scaled
+    /// trace estimator d*H_ii carries the extra d^2 = 4, i.e. 16k^2.
+    /// The crossover structure (who is exact where) is identical.
+    #[test]
+    fn section_332_worked_examples() {
+        let k = 3.0f64;
+        let sdgd_scaled = 16.0 * k * k; // d^2 * 4k^2 at d = 2
+        // f = -k x^2 + k y^2 : SDGD(B=1) has variance, HTE exact.
+        let h1 = vec![-2.0 * k, 0.0, 0.0, 2.0 * k];
+        assert!((sdgd_variance(&[h1[0], h1[3]], 1) - sdgd_scaled).abs() < 1e-9);
+        assert_eq!(hte_rademacher_variance(&h1, 2, 1), 0.0);
+        // f = k x y : HTE(V=1) variance 4k^2, SDGD exact.
+        let h2 = vec![0.0, k, k, 0.0];
+        assert!((hte_rademacher_variance(&h2, 2, 1) - 4.0 * k * k).abs() < 1e-9);
+        assert_eq!(sdgd_variance(&[0.0, 0.0], 1), 0.0);
+        // f = k(-x^2 + y^2 + x y) : both nonzero.
+        let h3 = vec![-2.0 * k, k, k, 2.0 * k];
+        assert!((hte_rademacher_variance(&h3, 2, 1) - 4.0 * k * k).abs() < 1e-9);
+        assert!((sdgd_variance(&[h3[0], h3[3]], 1) - sdgd_scaled).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_sampling_has_zero_variance() {
+        let diag = [1.0, -2.0, 3.5];
+        assert_eq!(sdgd_variance(&diag, 3), 0.0);
+    }
+}

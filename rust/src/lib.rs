@@ -1,0 +1,33 @@
+//! # hte-pinn
+//!
+//! Production reproduction of *"Hutchinson Trace Estimation for
+//! High-Dimensional and High-Order Physics-Informed Neural Networks"*
+//! (Hu, Shi, Karniadakis, Kawaguchi; CMAME 2024).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L1** — Pallas jet kernels (`python/compile/kernels/`), AOT-lowered.
+//! * **L2** — JAX model + HTE/SDGD/TVP losses (`python/compile/`),
+//!   AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: the training coordinator.  It owns sampling,
+//!   probe generation, the Adam driving loop (device-resident packed
+//!   state over PJRT), experiment sweeps, metrics, and every benchmark.
+//!
+//! Python never runs at train time: `make artifacts` is the only python
+//! step, and the `hte-pinn` binary is self-contained afterwards.
+
+pub mod autodiff;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod estimators;
+pub mod memmodel;
+pub mod nn;
+pub mod pde;
+pub mod rng;
+pub mod runtime;
+pub mod table;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{Context, Result};

@@ -1,0 +1,213 @@
+//! `hte-pinn` CLI — the launcher for training runs, sweeps, and the
+//! paper-table experiment drivers.
+//!
+//! ```text
+//! hte-pinn info                           # list available artifacts
+//! hte-pinn train --config run.toml        # train (one run per seed)
+//! hte-pinn train --family sg2 --d 100 ... # train from flags
+//! hte-pinn table --which 1 --epochs 2000  # regenerate a paper table
+//! hte-pinn memmodel                       # analytic A100-memory model
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use hte_pinn::checkpoint;
+use hte_pinn::config::FileConfig;
+use hte_pinn::coordinator::{
+    experiment_biharmonic, experiment_bias, experiment_gpinn, experiment_sine_gordon,
+    experiment_v_sweep, problem_for, EvalPool, ExperimentOpts, MetricsLogger, TrainConfig, Trainer,
+};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::memmodel;
+use hte_pinn::runtime::{Engine, Manifest};
+use hte_pinn::table;
+use hte_pinn::util::args::Args;
+use hte_pinn::util::json::Value;
+
+const USAGE: &str = "usage: hte-pinn <info|train|table|memmodel> [flags]
+  info     --artifacts DIR
+  train    --config FILE | [--family sg2 --method probe --estimator hte
+           --d 100 --v 16 --epochs 2000 --lr0 1e-3 --seed 0 --lambda-g 10
+           --log-every 100] --artifacts DIR [--metrics FILE]
+           [--eval-points 20000] [--save FILE]
+  table    --which 1..5 [--epochs N --seeds K --threads T
+           --eval-points M --lr0 LR --out DIR --artifacts DIR]
+  memmodel [--batch 100 --dims 100,1000,10000 --v 16 --order 2]";
+
+fn cmd_info(mut args: Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    args.finish()?;
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "{} artifacts (hidden={}, depth={})",
+        manifest.entries.len(),
+        manifest.hidden,
+        manifest.depth
+    );
+    for e in &manifest.entries {
+        println!(
+            "  {:40} kind={:7} d={:<7} v={:<5} n={:<6} params={}",
+            e.name, e.kind, e.d, e.v, e.n, e.n_params
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let config_path = args.get("config");
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let metrics = args.get("metrics");
+    let eval_points: usize = args.get_parse("eval-points", 20_000)?;
+    let save = args.get("save");
+
+    let (artifact_dir, configs) = match config_path {
+        Some(path) => {
+            let cfg = FileConfig::load(&path)?;
+            (cfg.artifacts.clone(), cfg.train_configs())
+        }
+        None => {
+            let cfg = TrainConfig {
+                family: args.get_or("family", "sg2"),
+                method: args.get_or("method", "probe"),
+                estimator: args.get_or("estimator", "hte").parse::<Estimator>()?,
+                d: args.get_parse("d", 100usize)?,
+                v: args.get_parse("v", 16usize)?,
+                epochs: args.get_parse("epochs", 2000usize)?,
+                lr0: args.get_parse("lr0", 1e-3f32)?,
+                seed: args.get_parse("seed", 0u64)?,
+                lambda_g: args.get_parse("lambda-g", 10.0f32)?,
+                log_every: args.get_parse("log-every", 100usize)?,
+            };
+            (artifacts, vec![cfg])
+        }
+    };
+    args.finish()?;
+
+    let engine = Engine::load(&artifact_dir)?;
+    for cfg in configs {
+        println!("== {} ==", cfg.label());
+        let mut trainer = Trainer::new(&engine, cfg.clone())?;
+        let mut logger = match &metrics {
+            Some(path) => MetricsLogger::to_file(path)?,
+            None => MetricsLogger::null(),
+        };
+        let summary = trainer.run(&mut logger)?;
+        println!(
+            "steps={} final_loss={:.4e} speed={}",
+            summary.steps,
+            summary.final_loss,
+            table::fmt_speed(summary.it_per_sec)
+        );
+        if eval_points > 0 {
+            let problem = problem_for(&cfg.family, cfg.d)?;
+            let eval_entry = engine.find_entry("eval", &cfg.family, "eval", cfg.d, None)?;
+            let n = eval_points.div_ceil(eval_entry.n) * eval_entry.n;
+            let pool = EvalPool::generate(problem.domain(), cfg.d, n, cfg.seed);
+            println!("relative L2 = {:.4e}", trainer.evaluate(&pool)?);
+        }
+        if let Some(path) = &save {
+            checkpoint::save(path, &cfg, trainer.step_idx, &trainer.coeff, &trainer.state_host()?)?;
+            println!("checkpoint -> {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table(mut args: Args) -> Result<()> {
+    let which: u8 = args.get_parse("which", 0u8)?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let epochs: usize = args.get_parse("epochs", 2000)?;
+    let seeds: usize = args.get_parse("seeds", 3)?;
+    let threads: usize = args.get_parse("threads", 2)?;
+    let eval_points: usize = args.get_parse("eval-points", 20_000)?;
+    let lr0: f32 = args.get_parse("lr0", 1e-3)?;
+    let out = PathBuf::from(args.get_or("out", "results"));
+    args.finish()?;
+
+    let manifest = Manifest::load(&artifacts)?;
+    let opts = ExperimentOpts {
+        artifact_dir: artifacts,
+        seeds: (0..seeds as u64).collect(),
+        epochs,
+        threads,
+        eval_points,
+        lr0,
+    };
+    let (title, rows) = match which {
+        1 => {
+            let dims = manifest.dims_for("train", "sg2", "probe");
+            (
+                "Table 1: Sine-Gordon (PINN vs SDGD vs HTE)",
+                experiment_sine_gordon(&opts, &manifest, &dims, 16)?,
+            )
+        }
+        2 => {
+            let d = *manifest.dims_for("train", "sg2", "probe").last().unwrap_or(&1000);
+            (
+                "Table 2: effect of HTE batch size V",
+                experiment_v_sweep(&opts, &manifest, d, &[1, 4, 8, 16])?,
+            )
+        }
+        3 => {
+            let dims = manifest.dims_for("train", "sg2", "unbiased");
+            ("Table 3: biased vs unbiased HTE", experiment_bias(&opts, &manifest, &dims, 16)?)
+        }
+        4 => {
+            let dims = manifest.dims_for("train", "sg2", "gpinn_probe");
+            ("Table 4: gPINN", experiment_gpinn(&opts, &manifest, &dims, 16)?)
+        }
+        5 => {
+            let dims = manifest.dims_for("train", "bihar", "probe4");
+            ("Table 5: biharmonic", experiment_biharmonic(&opts, &manifest, &dims, &[4, 16, 64])?)
+        }
+        other => bail!("unknown table {other} (1..=5)"),
+    };
+    let rendered = table::render(title, &rows);
+    println!("{rendered}");
+    std::fs::create_dir_all(&out)?;
+    std::fs::write(out.join(format!("table{which}.md")), &rendered)?;
+    let rows_json = Value::Arr(rows.iter().map(|r| r.to_json()).collect()).to_json();
+    std::fs::write(out.join(format!("table{which}_rows.json")), rows_json)?;
+    println!("wrote {}/table{which}.md", out.display());
+    Ok(())
+}
+
+fn cmd_memmodel(mut args: Args) -> Result<()> {
+    let batch: usize = args.get_parse("batch", 100)?;
+    let dims = args.get_list("dims", &[100, 1000, 5000, 10_000, 100_000])?;
+    let v: usize = args.get_parse("v", 16)?;
+    let order: usize = args.get_parse("order", 2)?;
+    args.finish()?;
+    println!("analytic memory model (batch={batch}, V={v}, order={order}) — paper shape check");
+    println!("{:>9} | {:>14} | {:>14}", "d", "full PINN", "HTE/SDGD");
+    for &d in &dims {
+        let full = memmodel::full_pinn_bytes(d, batch, order);
+        let hte = memmodel::hte_bytes(d, batch, v, order);
+        let full_str = if full.ooms_80gb() {
+            ">80GB (OOM)".to_string()
+        } else {
+            format!("{:.0}MB", full.mb())
+        };
+        println!("{:>9} | {:>14} | {:>13.0}MB", d, full_str, hte.mb());
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let command = raw.remove(0);
+    let args = Args::parse(raw, &[])?;
+    match command.as_str() {
+        "info" => cmd_info(args),
+        "train" => cmd_train(args),
+        "table" => cmd_table(args),
+        "memmodel" => cmd_memmodel(args),
+        other => bail!("unknown command {other}\n{USAGE}"),
+    }
+}

@@ -1,0 +1,119 @@
+//! The paper's 4-layer, 128-wide tanh MLP, natively.
+
+use crate::rng::Xoshiro256pp;
+use crate::tensor::Tensor;
+
+pub const HIDDEN: usize = 128;
+pub const DEPTH: usize = 4;
+
+/// MLP parameters: (W, b) per layer, d -> 128 -> 128 -> 128 -> 1.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<(Tensor, Tensor)>,
+    pub d: usize,
+}
+
+impl Mlp {
+    pub fn layer_dims(d: usize) -> Vec<(usize, usize)> {
+        let dims = [d, HIDDEN, HIDDEN, HIDDEN, 1];
+        (0..DEPTH).map(|i| (dims[i], dims[i + 1])).collect()
+    }
+
+    /// Xavier-uniform init (same scheme the coordinator packs into the
+    /// artifact state — see `Trainer::reset_state`).
+    pub fn init(d: usize, rng: &mut Xoshiro256pp) -> Self {
+        let layers = Self::layer_dims(d)
+            .into_iter()
+            .map(|(fan_in, fan_out)| {
+                let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+                let w = Tensor::from_vec(
+                    &[fan_in, fan_out],
+                    (0..fan_in * fan_out)
+                        .map(|_| ((rng.next_f64() * 2.0 - 1.0) * limit) as f32)
+                        .collect(),
+                );
+                (w, Tensor::zeros(&[fan_out]))
+            })
+            .collect();
+        Self { layers, d }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|(w, b)| w.numel() + b.numel()).sum()
+    }
+
+    /// Raw forward pass for one point: x [d] -> scalar.
+    pub fn forward(&self, x: &[f32]) -> f32 {
+        let mut h = Tensor::from_vec(&[1, self.d], x.to_vec());
+        let n = self.layers.len();
+        for (i, (w, b)) in self.layers.iter().enumerate() {
+            h = h.matmul(w).add_row(b);
+            if i < n - 1 {
+                h = h.map(|v| v.tanh());
+            }
+        }
+        h.data[0]
+    }
+
+    /// Hard-constrained model: factor(x) * mlp(x).
+    pub fn forward_constrained(&self, x: &[f32], factor: f64) -> f64 {
+        factor * self.forward(x) as f64
+    }
+
+    /// Flatten parameters in the artifact's packing order (w1,b1,...).
+    pub fn pack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params());
+        for (w, b) in &self.layers {
+            out.extend_from_slice(&w.data);
+            out.extend_from_slice(&b.data);
+        }
+        out
+    }
+
+    /// Inverse of `pack`.
+    pub fn unpack_into(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for (w, b) in &mut self.layers {
+            let wn = w.data.len();
+            w.data.copy_from_slice(&flat[off..off + wn]);
+            off += wn;
+            let bn = b.data.len();
+            b.data.copy_from_slice(&flat[off..off + bn]);
+            off += bn;
+        }
+        assert_eq!(off, flat.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_formula() {
+        let d = 10;
+        let mlp = Mlp::init(d, &mut Xoshiro256pp::new(0));
+        let expect = d * 128 + 128 + 2 * (128 * 128 + 128) + 128 + 1;
+        assert_eq!(mlp.n_params(), expect);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Xoshiro256pp::new(1);
+        let mlp = Mlp::init(6, &mut rng);
+        let flat = mlp.pack();
+        let mut other = Mlp::init(6, &mut rng);
+        other.unpack_into(&flat);
+        let x = [0.1f32, -0.2, 0.3, 0.0, 0.5, -0.6];
+        assert_eq!(mlp.forward(&x), other.forward(&x));
+    }
+
+    #[test]
+    fn forward_is_finite_and_nonconstant() {
+        let mlp = Mlp::init(4, &mut Xoshiro256pp::new(2));
+        let a = mlp.forward(&[0.1, 0.2, 0.3, 0.4]);
+        let b = mlp.forward(&[-0.4, 0.0, 0.9, -0.1]);
+        assert!(a.is_finite() && b.is_finite());
+        assert_ne!(a, b);
+    }
+}

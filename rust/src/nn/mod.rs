@@ -1,0 +1,18 @@
+//! Native (pure-Rust) neural network engine.
+//!
+//! Mirrors the Python L1/L2 stack for validation and ablation: the same
+//! 4x128 tanh MLP, the same Taylor-jet propagation rules (orders <= 4),
+//! plus a reverse-mode training path built on the `autodiff` tape.  The
+//! `ablation_ad_mode` bench uses `jet` to reproduce the paper's cost
+//! hierarchy O(V) HTE < O(d) exact trace < O(d^2) Hessian materialization
+//! without any Python or XLA in the loop.
+
+mod jet;
+mod mlp;
+mod native_loss;
+
+pub use jet::{jet_forward, JetStreams};
+pub use mlp::{Mlp, HIDDEN};
+pub use native_loss::{
+    adam_step, hte_residual_loss_and_grad, hte_residual_loss_reference, NativeBatch,
+};

@@ -1,0 +1,322 @@
+//! Native HTE residual loss + parameter gradient (Sine-Gordon families).
+//!
+//! Forward high-order derivatives come from the jet rules written as tape
+//! ops (Taylor mode), then a single reverse pass over the tape produces
+//! the theta-gradient — the same schedule the compiled L2 artifact uses,
+//! so this module both validates the artifact path end-to-end and powers
+//! the no-artifact native trainer / ablation benches.
+
+use crate::autodiff::{Tape, Var};
+use crate::pde::{Domain, PdeProblem};
+use crate::tensor::Tensor;
+
+use super::mlp::Mlp;
+
+/// One training batch for the native path.
+pub struct NativeBatch<'a> {
+    /// Row-major [n, d] residual points.
+    pub xs: &'a [f32],
+    /// Row-major [v, d] probe matrix.
+    pub probes: &'a [f32],
+    /// Solution coefficients.
+    pub coeff: &'a [f32],
+    pub n: usize,
+    pub v: usize,
+}
+
+/// tanh jet (order 2) expressed in tape ops so it is reverse-differentiable.
+fn tape_tanh_jet2(tape: &mut Tape, y: [Var; 3], ones: Var) -> [Var; 3] {
+    let t0 = tape.tanh(y[0]);
+    let t0sq = tape.mul(t0, t0);
+    let f1 = tape.sub(ones, t0sq); // 1 - tanh^2
+    let f2_half = tape.mul(t0, f1);
+    let f2 = tape.scale(f2_half, -2.0); // -2 tanh (1 - tanh^2)
+    let z1 = tape.mul(f1, y[1]);
+    let y1sq = tape.mul(y[1], y[1]);
+    let a = tape.mul(f2, y1sq);
+    let b = tape.mul(f1, y[2]);
+    let z2 = tape.add(a, b);
+    [t0, z1, z2]
+}
+
+/// Order-2 jet MLP on the tape over a [b, d] pair grid.
+/// Returns output streams ([b,1] each) and the parameter Vars.
+fn tape_jet_mlp2(
+    tape: &mut Tape,
+    mlp: &Mlp,
+    x0: Tensor,
+    x1: Tensor,
+    params: &[(Var, Var)],
+) -> [Var; 3] {
+    let b = x0.shape[0];
+    let mut y = [
+        tape.constant(x0),
+        tape.constant(x1),
+        tape.constant(Tensor::zeros(&[b, mlp.d])),
+    ];
+    let n_layers = mlp.layers.len();
+    for (i, &(w, bias)) in params.iter().enumerate() {
+        let z0 = tape.matmul(y[0], w);
+        let z0 = tape.add_row(z0, bias);
+        let z1 = tape.matmul(y[1], w);
+        let z2 = tape.matmul(y[2], w);
+        y = [z0, z1, z2];
+        if i < n_layers - 1 {
+            let width = tape.value(y[0]).shape[1];
+            let ones = tape.constant(Tensor::from_vec(&[b, width], vec![1.0; b * width]));
+            y = tape_tanh_jet2(tape, y, ones);
+        }
+    }
+    y
+}
+
+/// Host-side factor jets (constants w.r.t. the parameters).
+fn factor_jets2(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 3] {
+    let s0: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
+    let s1: f64 = 2.0 * x.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
+    let s2: f64 = 2.0 * v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();
+    match problem.domain() {
+        Domain::UnitBall => [(1.0 - s0) as f32, (-s1) as f32, (-s2) as f32],
+        Domain::Annulus => {
+            // (1-s)(4-s) jets via Leibniz
+            let a = [1.0 - s0, -s1, -s2];
+            let b = [4.0 - s0, -s1, -s2];
+            [
+                (a[0] * b[0]) as f32,
+                (a[0] * b[1] + a[1] * b[0]) as f32,
+                (a[0] * b[2] + 2.0 * a[1] * b[1] + a[2] * b[0]) as f32,
+            ]
+        }
+    }
+}
+
+/// Biased HTE loss (Eq. 7) and its parameter gradient (packed order).
+pub fn hte_residual_loss_and_grad(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> (f32, Vec<f32>) {
+    let (n, v, d) = (batch.n, batch.v, mlp.d);
+    let b = n * v;
+    let mut tape = Tape::new();
+
+    // Parameter leaves.
+    let params: Vec<(Var, Var)> = mlp
+        .layers
+        .iter()
+        .map(|(w, bias)| (tape.input(w.clone()), tape.input(bias.clone())))
+        .collect();
+
+    // Pair grid (point-major): row n*v + k is (x_n, probe_k).
+    let mut x0 = Tensor::zeros(&[b, d]);
+    let mut x1 = Tensor::zeros(&[b, d]);
+    let (mut fac0, mut fac1, mut fac2) =
+        (Tensor::zeros(&[b, 1]), Tensor::zeros(&[b, 1]), Tensor::zeros(&[b, 1]));
+    for i in 0..n {
+        let x = &batch.xs[i * d..(i + 1) * d];
+        for k in 0..v {
+            let probe = &batch.probes[k * d..(k + 1) * d];
+            let row = i * v + k;
+            x0.data[row * d..(row + 1) * d].copy_from_slice(x);
+            x1.data[row * d..(row + 1) * d].copy_from_slice(probe);
+            let f = factor_jets2(problem, x, probe);
+            fac0.data[row] = f[0];
+            fac1.data[row] = f[1];
+            fac2.data[row] = f[2];
+        }
+    }
+
+    let net = tape_jet_mlp2(&mut tape, mlp, x0, x1, &params);
+
+    // Leibniz: D2 u = fac0*net2 + 2 fac1*net1 + fac2*net0.
+    let c0 = tape.constant(fac0);
+    let c1 = tape.constant(fac1);
+    let c2 = tape.constant(fac2);
+    let t_a = tape.mul(c0, net[2]);
+    let t_b0 = tape.mul(c1, net[1]);
+    let t_b = tape.scale(t_b0, 2.0);
+    let t_c = tape.mul(c2, net[0]);
+    let ab = tape.add(t_a, t_b);
+    let d2_pairs = tape.add(ab, t_c); // [b, 1]
+    let d2_mean = tape.group_mean(d2_pairs, v); // [n, 1]
+
+    // Primal-only forward at the points for sin(u).
+    let mut xpts = Tensor::zeros(&[n, d]);
+    xpts.data.copy_from_slice(&batch.xs[..n * d]);
+    let mut h = tape.constant(xpts);
+    let n_layers = mlp.layers.len();
+    for (i, &(w, bias)) in params.iter().enumerate() {
+        let z = tape.matmul(h, w);
+        h = tape.add_row(z, bias);
+        if i < n_layers - 1 {
+            h = tape.tanh(h);
+        }
+    }
+    let fac0_pts = Tensor::from_vec(
+        &[n, 1],
+        (0..n)
+            .map(|i| problem.factor(&batch.xs[i * d..(i + 1) * d]) as f32)
+            .collect(),
+    );
+    let c = tape.constant(fac0_pts);
+    let u0 = tape.mul(c, h);
+    let sin_u0 = tape.sin(u0);
+
+    // Residual and loss.
+    let g = Tensor::from_vec(
+        &[n, 1],
+        (0..n)
+            .map(|i| problem.forcing(&batch.xs[i * d..(i + 1) * d], batch.coeff) as f32)
+            .collect(),
+    );
+    let gc = tape.constant(g);
+    let est = tape.add(d2_mean, sin_u0);
+    let r = tape.sub(est, gc);
+    let rsq = tape.square(r);
+    let mean = tape.mean_all(rsq);
+    let loss = tape.scale(mean, 0.5);
+
+    let grads = tape.backward(loss);
+    let mut flat = Vec::with_capacity(mlp.n_params());
+    for &(w, bias) in &params {
+        let gw = grads[w.0].as_ref().expect("w grad");
+        let gb = grads[bias.0].as_ref().expect("b grad");
+        flat.extend_from_slice(&gw.data);
+        flat.extend_from_slice(&gb.data);
+    }
+    (tape.value(loss).data[0], flat)
+}
+
+/// Loss only, via the (non-tape) jet engine — the FD-check oracle.
+pub fn hte_residual_loss_reference(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> f64 {
+    let (n, v, d) = (batch.n, batch.v, mlp.d);
+    let mut acc = 0.0;
+    for i in 0..n {
+        let x = &batch.xs[i * d..(i + 1) * d];
+        let mut est = 0.0;
+        for k in 0..v {
+            let probe = &batch.probes[k * d..(k + 1) * d];
+            est += super::jet::jet_forward(mlp, problem, x, probe, 2)[2];
+        }
+        est /= v as f64;
+        let u0 = mlp.forward_constrained(x, problem.factor(x));
+        let r = est + u0.sin() - problem.forcing(x, batch.coeff);
+        acc += 0.5 * r * r;
+    }
+    acc / n as f64
+}
+
+/// In-place Adam (matches `python/compile/optimizer.py`).
+pub fn adam_step(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: &mut f32,
+    grad: &[f32],
+    lr: f32,
+) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    *t += 1.0;
+    let bc1 = 1.0 - B1.powf(*t);
+    let bc2 = 1.0 - B2.powf(*t);
+    for i in 0..params.len() {
+        m[i] = B1 * m[i] + (1.0 - B1) * grad[i];
+        v[i] = B2 * v[i] + (1.0 - B2) * grad[i] * grad[i];
+        params[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + EPS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::{DomainSampler, SineGordon2Body};
+    use crate::rng::{fill_rademacher, Normal, Xoshiro256pp};
+
+    fn setup(d: usize, n: usize, v: usize) -> (Mlp, SineGordon2Body, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(11);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = SineGordon2Body::new(d);
+        let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; d - 1];
+        Normal::new().fill_f32(&mut rng, &mut coeff);
+        (mlp, problem, xs, probes, coeff)
+    }
+
+    #[test]
+    fn tape_loss_matches_jet_reference() {
+        let (mlp, problem, xs, probes, coeff) = setup(5, 6, 3);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 6, v: 3 };
+        let (loss, _) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+        let reference = hte_residual_loss_reference(&mlp, &problem, &batch);
+        assert!(
+            (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+            "{loss} vs {reference}"
+        );
+    }
+
+    #[test]
+    fn tape_grad_matches_finite_differences() {
+        let (mut mlp, problem, xs, probes, coeff) = setup(4, 3, 2);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 3, v: 2 };
+        let (_, grad) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+        let flat0 = mlp.pack();
+        // spot-check a spread of parameter coordinates with central FD
+        let idxs = [0usize, 7, 130, 600, flat0.len() - 1, flat0.len() - 200];
+        let h = 1e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            mlp.unpack_into(&fp);
+            let lp = hte_residual_loss_reference(&mlp, &problem, &batch);
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            mlp.unpack_into(&fm);
+            let lm = hte_residual_loss_reference(&mlp, &problem, &batch);
+            mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {i}: tape {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn native_adam_training_decreases_loss() {
+        let (mut mlp, problem, _, _, coeff) = setup(4, 8, 4);
+        let mut rng = Xoshiro256pp::new(21);
+        let mut sampler = DomainSampler::new(Domain::UnitBall, 4, rng.fork(0));
+        let n_params = mlp.n_params();
+        let (mut m, mut v_state) = (vec![0.0f32; n_params], vec![0.0f32; n_params]);
+        let mut t = 0.0f32;
+        // fixed evaluation batch
+        let eval_xs = sampler.batch(16);
+        let mut eval_probes = vec![0.0f32; 8 * 4];
+        fill_rademacher(&mut rng, &mut eval_probes);
+        let eval_batch =
+            NativeBatch { xs: &eval_xs, probes: &eval_probes, coeff: &coeff, n: 16, v: 8 };
+        let first = hte_residual_loss_reference(&mlp, &problem, &eval_batch);
+        for _ in 0..150 {
+            let xs = sampler.batch(8);
+            let mut probes = vec![0.0f32; 4 * 4];
+            fill_rademacher(&mut rng, &mut probes);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 8, v: 4 };
+            let (_, grad) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+            let mut flat = mlp.pack();
+            adam_step(&mut flat, &mut m, &mut v_state, &mut t, &grad, 2e-3);
+            mlp.unpack_into(&flat);
+        }
+        let last = hte_residual_loss_reference(&mlp, &problem, &eval_batch);
+        assert!(last < 0.5 * first, "{first} -> {last}");
+    }
+}

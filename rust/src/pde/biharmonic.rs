@@ -1,0 +1,146 @@
+//! Biharmonic problem (Eqs. 26-28): Delta^2 u = g on the annulus 1 < |x| < 2.
+//!
+//! Exact solution u = R(s) S with s = |x|^2, R = (1-s)(4-s) and
+//! S = sum_i c_i exp(x_i x_{i+1} x_{i+2}).  The closed-form bilaplacian is
+//! assembled from the product rule
+//!   lap^2(R S) = S lap^2 R + 4 grad(lap R).grad S + 2 lap R lap S
+//!                + 4 <Hess R, Hess S>_F + 4 grad R.grad(lap S) + R lap^2 S
+//! with the contractions derived in DESIGN.md §2 (and mirrored in
+//! `python/compile/exact_solutions.py`).
+
+use super::{sq_norm, Domain, PdeProblem};
+
+pub struct Biharmonic3Body {
+    pub d: usize,
+}
+
+/// All the interaction-factor contractions the bilaplacian needs.
+struct Contractions {
+    s: f64,            // S
+    x_grad_s: f64,     // x . grad S
+    lap_s: f64,        // lap S
+    xhx: f64,          // x^T Hess S x
+    x_grad_lap_s: f64, // x . grad(lap S)
+    lap2_s: f64,       // lap^2 S
+}
+
+impl Biharmonic3Body {
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 3);
+        Self { d }
+    }
+
+    fn contractions(&self, x: &[f32], c: &[f32]) -> Contractions {
+        let mut out = Contractions {
+            s: 0.0,
+            x_grad_s: 0.0,
+            lap_s: 0.0,
+            xhx: 0.0,
+            x_grad_lap_s: 0.0,
+            lap2_s: 0.0,
+        };
+        for i in 0..self.d - 2 {
+            let (a, b, w) = (x[i] as f64, x[i + 1] as f64, x[i + 2] as f64);
+            let ci = c[i] as f64;
+            let p = a * b * w;
+            let e = ci * p.exp();
+            let (qa, qb, qw) = (b * w, a * w, a * b);
+            let big_q = qa * qa + qb * qb + qw * qw;
+            let sig2 = a * a + b * b + w * w;
+            out.s += e;
+            out.x_grad_s += 3.0 * e * p;
+            out.lap_s += e * big_q;
+            out.xhx += e * (9.0 * p * p + 6.0 * p);
+            out.x_grad_lap_s += e * big_q * (3.0 * p + 4.0);
+            out.lap2_s += e * (big_q * big_q + 8.0 * p * sig2 + 4.0 * sig2);
+        }
+        out
+    }
+
+    pub fn bilaplacian_exact(&self, x: &[f32], c: &[f32]) -> f64 {
+        let s = sq_norm(x);
+        let d = self.d as f64;
+        let k = self.contractions(x, c);
+        let rp = 2.0 * s - 5.0;
+        let big_r = (1.0 - s) * (4.0 - s);
+        let lap_r = (4.0 * d + 8.0) * s - 10.0 * d;
+        let lap2_r = 8.0 * d * d + 16.0 * d;
+        k.s * lap2_r
+            + 4.0 * (8.0 * d + 16.0) * k.x_grad_s
+            + 2.0 * lap_r * k.lap_s
+            + 4.0 * (2.0 * rp * k.lap_s + 8.0 * k.xhx)
+            + 8.0 * rp * k.x_grad_lap_s
+            + big_r * k.lap2_s
+    }
+}
+
+impl PdeProblem for Biharmonic3Body {
+    fn family(&self) -> &'static str {
+        "bihar"
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn domain(&self) -> Domain {
+        Domain::Annulus
+    }
+    fn n_coeff(&self) -> usize {
+        self.d - 2
+    }
+    fn u_exact(&self, x: &[f32], c: &[f32]) -> f64 {
+        let k = self.contractions(x, c);
+        let s = sq_norm(x);
+        (1.0 - s) * (4.0 - s) * k.s
+    }
+    fn forcing(&self, x: &[f32], c: &[f32]) -> f64 {
+        self.bilaplacian_exact(x, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::fd;
+    use crate::rng::{Normal, Xoshiro256pp};
+
+    #[test]
+    fn bilaplacian_matches_fd() {
+        // f64 central differences of 4th-order operators are noisy; compare
+        // at modest dims with a generous (but still diagnostic) tolerance.
+        for d in [3usize, 5] {
+            let mut rng = Xoshiro256pp::new(d as u64);
+            let mut normal = Normal::new();
+            let x: Vec<f32> = (0..d).map(|_| (normal.sample(&mut rng) * 0.2 + 0.7) as f32).collect();
+            let c: Vec<f32> = (0..d - 2).map(|_| normal.sample(&mut rng) as f32).collect();
+            let pde = Biharmonic3Body::new(d);
+            let ours = pde.bilaplacian_exact(&x, &c);
+            let fd_val = fd::biharmonic(&|y| pde.u_exact(y, &c), &x, 3e-2);
+            let tol = 0.05 * (1.0 + ours.abs());
+            assert!((ours - fd_val).abs() < tol, "d={d}: {ours} vs {fd_val}");
+        }
+    }
+
+    #[test]
+    fn vanishes_on_both_boundary_spheres() {
+        let d = 6;
+        let mut rng = Xoshiro256pp::new(3);
+        let mut normal = Normal::new();
+        let dir: Vec<f64> = (0..d).map(|_| normal.sample(&mut rng)).collect();
+        let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let c: Vec<f32> = (0..d - 2).map(|_| normal.sample(&mut rng) as f32).collect();
+        let pde = Biharmonic3Body::new(d);
+        for radius in [1.0f64, 2.0] {
+            let x: Vec<f32> = dir.iter().map(|&v| (v / norm * radius) as f32).collect();
+            assert!(pde.u_exact(&x, &c).abs() < 1e-4, "r={radius}");
+        }
+    }
+
+    #[test]
+    fn forcing_equals_bilaplacian() {
+        let d = 4;
+        let x = vec![0.8f32, -0.7, 0.6, 0.5];
+        let c = vec![0.3f32, -1.1];
+        let pde = Biharmonic3Body::new(d);
+        assert_eq!(pde.forcing(&x, &c), pde.bilaplacian_exact(&x, &c));
+    }
+}

@@ -1,0 +1,77 @@
+//! PDE problem definitions: exact solutions, closed-form forcings, domains.
+//!
+//! Rust-side mirror of `python/compile/exact_solutions.py` — the
+//! coordinator needs them for test-pool generation, native-backend
+//! training, and validation; the derivations are identical (DESIGN.md §2)
+//! and cross-checked against finite differences in this module's tests.
+
+mod biharmonic;
+mod sampler;
+mod sine_gordon;
+
+pub use biharmonic::Biharmonic3Body;
+pub use sampler::DomainSampler;
+pub use sine_gordon::{SineGordon2Body, SineGordon3Body};
+
+/// The geometry the hard constraint and the sampler are built around.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// Unit ball |x| < 1 (Sine-Gordon problems).
+    UnitBall,
+    /// Annulus 1 < |x| < 2 (biharmonic problem).
+    Annulus,
+}
+
+/// A PDE problem with a manufactured solution.
+pub trait PdeProblem: Send + Sync {
+    /// Human-readable family id, matching the artifact manifest ("sg2", ...).
+    fn family(&self) -> &'static str;
+    fn dim(&self) -> usize;
+    fn domain(&self) -> Domain;
+    /// Number of random solution coefficients c_i.
+    fn n_coeff(&self) -> usize;
+    /// Exact solution u*(x).
+    fn u_exact(&self, x: &[f32], c: &[f32]) -> f64;
+    /// Forcing term g(x) of the PDE (closed form).
+    fn forcing(&self, x: &[f32], c: &[f32]) -> f64;
+    /// Hard-constraint factor (zero on the boundary).
+    fn factor(&self, x: &[f32]) -> f64 {
+        let s: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        match self.domain() {
+            Domain::UnitBall => 1.0 - s,
+            Domain::Annulus => (1.0 - s) * (4.0 - s),
+        }
+    }
+}
+
+pub(crate) fn sq_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64).powi(2)).sum()
+}
+
+#[cfg(test)]
+pub(crate) mod fd {
+    //! Finite-difference oracles for validating the closed-form operators.
+
+    /// Laplacian of f at x via central differences.
+    pub fn laplacian(f: &dyn Fn(&[f32]) -> f64, x: &[f32], h: f32) -> f64 {
+        let mut acc = 0.0;
+        let f0 = f(x);
+        let mut xp = x.to_vec();
+        for i in 0..x.len() {
+            let orig = xp[i];
+            xp[i] = orig + h;
+            let fp = f(&xp);
+            xp[i] = orig - h;
+            let fm = f(&xp);
+            xp[i] = orig;
+            acc += (fp - 2.0 * f0 + fm) / (h as f64 * h as f64);
+        }
+        acc
+    }
+
+    /// Biharmonic of f via Laplacian-of-Laplacian finite differences.
+    pub fn biharmonic(f: &dyn Fn(&[f32]) -> f64, x: &[f32], h: f32) -> f64 {
+        let lap = |y: &[f32]| laplacian(f, y, h);
+        laplacian(&lap, x, h)
+    }
+}

@@ -1,0 +1,61 @@
+//! Residual / test point sampling for the PDE domains.
+
+use super::Domain;
+use crate::rng::{fill_annulus, fill_unit_ball, Normal, Xoshiro256pp};
+
+/// Samples batches of points uniformly from a problem's domain.
+pub struct DomainSampler {
+    pub domain: Domain,
+    pub d: usize,
+    rng: Xoshiro256pp,
+    normal: Normal,
+}
+
+impl DomainSampler {
+    pub fn new(domain: Domain, d: usize, rng: Xoshiro256pp) -> Self {
+        Self { domain, d, rng, normal: Normal::new() }
+    }
+
+    /// Fill a row-major [n, d] batch.
+    pub fn fill_batch(&mut self, out: &mut [f32]) {
+        assert_eq!(out.len() % self.d, 0);
+        for point in out.chunks_mut(self.d) {
+            match self.domain {
+                Domain::UnitBall => fill_unit_ball(&mut self.rng, &mut self.normal, point),
+                Domain::Annulus => fill_annulus(&mut self.rng, &mut self.normal, point),
+            }
+        }
+    }
+
+    pub fn batch(&mut self, n: usize) -> Vec<f32> {
+        let mut buf = vec![0.0f32; n * self.d];
+        self.fill_batch(&mut buf);
+        buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_live_in_their_domain() {
+        for (domain, lo, hi) in [(Domain::UnitBall, 0.0, 1.0), (Domain::Annulus, 1.0, 2.0)] {
+            let d = 12;
+            let mut s = DomainSampler::new(domain, d, Xoshiro256pp::new(1));
+            let batch = s.batch(200);
+            assert_eq!(batch.len(), 200 * d);
+            for point in batch.chunks(d) {
+                let r = point.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+                assert!(r >= lo - 1e-4 && r <= hi + 1e-4, "{domain:?} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = DomainSampler::new(Domain::UnitBall, 5, Xoshiro256pp::new(9));
+        let mut b = DomainSampler::new(Domain::UnitBall, 5, Xoshiro256pp::new(9));
+        assert_eq!(a.batch(16), b.batch(16));
+    }
+}

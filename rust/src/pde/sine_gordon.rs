@@ -1,0 +1,181 @@
+//! Sine-Gordon problems (Eqs. 17-20): Delta u + sin(u) = g on the unit ball.
+
+use super::{sq_norm, Domain, PdeProblem};
+
+/// Two-body interactive solution (Eq. 17):
+/// u = (1-|x|^2) sum_i c_i sin(psi_i), psi_i = x_i + cos(x_{i+1}) + x_{i+1} cos(x_i).
+pub struct SineGordon2Body {
+    pub d: usize,
+}
+
+impl SineGordon2Body {
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 2);
+        Self { d }
+    }
+
+    /// (S, x.grad S, lap S) — the three contractions the Laplacian needs.
+    fn interaction_contractions(&self, x: &[f32], c: &[f32]) -> (f64, f64, f64) {
+        let d = self.d;
+        let (mut s_val, mut x_grad, mut lap) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..d - 1 {
+            let xi = x[i] as f64;
+            let xj = x[i + 1] as f64;
+            let ci = c[i] as f64;
+            let psi = xi + xj.cos() + xj * xi.cos();
+            let alpha = 1.0 - xj * xi.sin();
+            let beta = -xj.sin() + xi.cos();
+            let (sp, cp) = psi.sin_cos();
+            s_val += ci * sp;
+            x_grad += ci * cp * (xi * alpha + xj * beta);
+            lap += ci * (-sp * (alpha * alpha + beta * beta) + cp * (-xj * xi.cos() - xj.cos()));
+        }
+        (s_val, x_grad, lap)
+    }
+
+    pub fn laplacian_exact(&self, x: &[f32], c: &[f32]) -> f64 {
+        let s = sq_norm(x);
+        let (s_val, x_grad, lap_s) = self.interaction_contractions(x, c);
+        -2.0 * self.d as f64 * s_val - 4.0 * x_grad + (1.0 - s) * lap_s
+    }
+}
+
+impl PdeProblem for SineGordon2Body {
+    fn family(&self) -> &'static str {
+        "sg2"
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn domain(&self) -> Domain {
+        Domain::UnitBall
+    }
+    fn n_coeff(&self) -> usize {
+        self.d - 1
+    }
+    fn u_exact(&self, x: &[f32], c: &[f32]) -> f64 {
+        let (s_val, _, _) = self.interaction_contractions(x, c);
+        (1.0 - sq_norm(x)) * s_val
+    }
+    fn forcing(&self, x: &[f32], c: &[f32]) -> f64 {
+        self.laplacian_exact(x, c) + self.u_exact(x, c).sin()
+    }
+}
+
+/// Three-body interactive solution (Eq. 18):
+/// u = (1-|x|^2) sum_i c_i exp(x_i x_{i+1} x_{i+2}).
+pub struct SineGordon3Body {
+    pub d: usize,
+}
+
+impl SineGordon3Body {
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 3);
+        Self { d }
+    }
+
+    fn interaction_contractions(&self, x: &[f32], c: &[f32]) -> (f64, f64, f64) {
+        let d = self.d;
+        let (mut s_val, mut x_grad, mut lap) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..d - 2 {
+            let (a, b, w) = (x[i] as f64, x[i + 1] as f64, x[i + 2] as f64);
+            let ci = c[i] as f64;
+            let p = a * b * w;
+            let e = p.exp();
+            let (qa, qb, qw) = (b * w, a * w, a * b);
+            s_val += ci * e;
+            x_grad += 3.0 * ci * e * p; // Euler: x.grad exp(p) = 3 p exp(p)
+            lap += ci * e * (qa * qa + qb * qb + qw * qw);
+        }
+        (s_val, x_grad, lap)
+    }
+
+    pub fn laplacian_exact(&self, x: &[f32], c: &[f32]) -> f64 {
+        let s = sq_norm(x);
+        let (s_val, x_grad, lap_s) = self.interaction_contractions(x, c);
+        -2.0 * self.d as f64 * s_val - 4.0 * x_grad + (1.0 - s) * lap_s
+    }
+}
+
+impl PdeProblem for SineGordon3Body {
+    fn family(&self) -> &'static str {
+        "sg3"
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn domain(&self) -> Domain {
+        Domain::UnitBall
+    }
+    fn n_coeff(&self) -> usize {
+        self.d - 2
+    }
+    fn u_exact(&self, x: &[f32], c: &[f32]) -> f64 {
+        let (s_val, _, _) = self.interaction_contractions(x, c);
+        (1.0 - sq_norm(x)) * s_val
+    }
+    fn forcing(&self, x: &[f32], c: &[f32]) -> f64 {
+        self.laplacian_exact(x, c) + self.u_exact(x, c).sin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::fd;
+    use crate::rng::{Normal, Xoshiro256pp};
+
+    fn random_point_and_coeff(d: usize, n_coeff: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut normal = Normal::new();
+        let x: Vec<f32> = (0..d).map(|_| (normal.sample(&mut rng) * 0.3) as f32).collect();
+        let c: Vec<f32> = (0..n_coeff).map(|_| normal.sample(&mut rng) as f32).collect();
+        (x, c)
+    }
+
+    #[test]
+    fn two_body_laplacian_matches_fd() {
+        for d in [2usize, 5, 9] {
+            let (x, c) = random_point_and_coeff(d, d - 1, d as u64);
+            let pde = SineGordon2Body::new(d);
+            let fd_lap = fd::laplacian(&|y| pde.u_exact(y, &c), &x, 1e-3);
+            let ours = pde.laplacian_exact(&x, &c);
+            assert!((ours - fd_lap).abs() < 1e-2 * (1.0 + ours.abs()), "d={d}: {ours} vs {fd_lap}");
+        }
+    }
+
+    #[test]
+    fn three_body_laplacian_matches_fd() {
+        for d in [3usize, 6, 10] {
+            let (x, c) = random_point_and_coeff(d, d - 2, d as u64 + 100);
+            let pde = SineGordon3Body::new(d);
+            let fd_lap = fd::laplacian(&|y| pde.u_exact(y, &c), &x, 1e-3);
+            let ours = pde.laplacian_exact(&x, &c);
+            assert!((ours - fd_lap).abs() < 1e-2 * (1.0 + ours.abs()), "d={d}: {ours} vs {fd_lap}");
+        }
+    }
+
+    #[test]
+    fn solutions_vanish_on_boundary() {
+        let d = 7;
+        let (mut x, c) = random_point_and_coeff(d, d - 1, 42);
+        let norm: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        let scale = (1.0 / norm.sqrt()) as f32;
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
+        let sg2 = SineGordon2Body::new(d);
+        assert!(sg2.u_exact(&x, &c).abs() < 1e-5);
+        let sg3 = SineGordon3Body::new(d);
+        assert!(sg3.u_exact(&x, &c[..d - 2]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn forcing_is_lap_plus_sin() {
+        let d = 5;
+        let (x, c) = random_point_and_coeff(d, d - 1, 9);
+        let pde = SineGordon2Body::new(d);
+        let g = pde.forcing(&x, &c);
+        assert!((g - pde.laplacian_exact(&x, &c) - pde.u_exact(&x, &c).sin()).abs() < 1e-12);
+    }
+}

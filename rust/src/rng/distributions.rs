@@ -1,0 +1,218 @@
+//! Sampling distributions used by the paper's estimators and domains.
+
+use super::Xoshiro256pp;
+
+/// Standard normal via Box–Muller (pair cached).
+#[derive(Clone, Debug)]
+pub struct Normal {
+    cached: Option<f64>,
+}
+
+impl Normal {
+    pub fn new() -> Self {
+        Self { cached: None }
+    }
+
+    #[inline]
+    pub fn sample(&mut self, rng: &mut Xoshiro256pp) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return z;
+        }
+        let u1 = rng.next_f64_open();
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = std::f64::consts::TAU * u2;
+        self.cached = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    pub fn fill_f32(&mut self, rng: &mut Xoshiro256pp, out: &mut [f32]) {
+        for slot in out {
+            *slot = self.sample(rng) as f32;
+        }
+    }
+}
+
+impl Default for Normal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Rademacher ±1 entries — the paper's minimum-variance HTE probe choice.
+pub fn fill_rademacher(rng: &mut Xoshiro256pp, out: &mut [f32]) {
+    // 64 signs per u64 draw.
+    let mut bits = 0u64;
+    let mut left = 0u32;
+    for slot in out {
+        if left == 0 {
+            bits = rng.next_u64();
+            left = 64;
+        }
+        *slot = if bits & 1 == 1 { 1.0 } else { -1.0 };
+        bits >>= 1;
+        left -= 1;
+    }
+}
+
+/// Uniform point in the unit ball B^d: gaussian direction x radius U^(1/d).
+pub fn fill_unit_ball(rng: &mut Xoshiro256pp, normal: &mut Normal, point: &mut [f32]) {
+    fill_sphere_scaled(rng, normal, point, 0.0);
+}
+
+/// Uniform point in the annulus 1 < |x| < 2 (the biharmonic domain).
+///
+/// The radius CDF is (r^d - 1) / (2^d - 1); 2^d overflows past d ≈ 1000, so
+/// invert in log space:  r = exp( log( 1 + U (2^d - 1) ) / d ) computed as
+/// r = 2 * exp( log( U + (1-U) 2^{-d} ) / d ), which is exact and stable for
+/// every d (at huge d it degrades gracefully to r = 2 U^{1/d}).
+pub fn fill_annulus(rng: &mut Xoshiro256pp, normal: &mut Normal, point: &mut [f32]) {
+    fill_sphere_scaled(rng, normal, point, 1.0);
+}
+
+fn fill_sphere_scaled(
+    rng: &mut Xoshiro256pp,
+    normal: &mut Normal,
+    point: &mut [f32],
+    inner: f64,
+) {
+    let d = point.len();
+    let mut norm_sq = 0.0f64;
+    for slot in point.iter_mut() {
+        let z = normal.sample(rng);
+        *slot = z as f32;
+        norm_sq += z * z;
+    }
+    let norm = norm_sq.sqrt().max(1e-300);
+    let u = rng.next_f64_open();
+    let r = if inner == 0.0 {
+        // unit ball: r = U^(1/d)
+        (u.ln() / d as f64).exp()
+    } else {
+        // annulus [1, 2]: log-space inversion (see doc comment)
+        let log_arg = (u + (1.0 - u) * (-(d as f64) * std::f64::consts::LN_2).exp()).ln();
+        2.0 * (log_arg / d as f64).exp()
+    };
+    let scale = (r / norm) as f32;
+    for slot in point.iter_mut() {
+        *slot *= scale;
+    }
+}
+
+/// Sample `k` distinct indices from 0..n (SDGD's without-replacement
+/// dimension sampling) via partial Fisher–Yates.
+pub fn sample_without_replacement(rng: &mut Xoshiro256pp, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n);
+    // For small k relative to n, a hash-set-free partial shuffle over a
+    // sparse map keeps this O(k).
+    use std::collections::HashMap;
+    let mut swapped: HashMap<usize, usize> = HashMap::with_capacity(2 * k);
+    let mut out = Vec::with_capacity(k);
+    for i in 0..k {
+        let j = i + rng.next_below((n - i) as u64) as usize;
+        let vi = *swapped.get(&i).unwrap_or(&i);
+        let vj = *swapped.get(&j).unwrap_or(&j);
+        out.push(vj);
+        swapped.insert(j, vi);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256pp::new(11);
+        let mut n = Normal::new();
+        let count = 200_000;
+        let samples: Vec<f64> = (0..count).map(|_| n.sample(&mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / count as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / count as f64;
+        let kurt = samples.iter().map(|x| (x - mean).powi(4)).sum::<f64>() / count as f64;
+        assert!(mean.abs() < 0.01, "{mean}");
+        assert!((var - 1.0).abs() < 0.02, "{var}");
+        assert!((kurt - 3.0).abs() < 0.1, "{kurt}"); // 4th moment of N(0,1)
+    }
+
+    #[test]
+    fn rademacher_signs_and_balance() {
+        let mut rng = Xoshiro256pp::new(5);
+        let mut buf = vec![0.0f32; 100_000];
+        fill_rademacher(&mut rng, &mut buf);
+        assert!(buf.iter().all(|&x| x == 1.0 || x == -1.0));
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn ball_points_inside_and_radius_distribution() {
+        let mut rng = Xoshiro256pp::new(6);
+        let mut n = Normal::new();
+        let d = 10;
+        let mut point = vec![0.0f32; d];
+        let mut radii = Vec::new();
+        for _ in 0..5000 {
+            fill_unit_ball(&mut rng, &mut n, &mut point);
+            let r = point.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!(r <= 1.0 + 1e-6, "{r}");
+            radii.push(r);
+        }
+        // E[r] for uniform ball = d/(d+1)
+        let mean_r = radii.iter().sum::<f64>() / radii.len() as f64;
+        assert!((mean_r - d as f64 / (d + 1) as f64).abs() < 0.01, "{mean_r}");
+    }
+
+    #[test]
+    fn annulus_points_in_shell_small_and_huge_d() {
+        for d in [3usize, 50, 100_000] {
+            let mut rng = Xoshiro256pp::new(8);
+            let mut n = Normal::new();
+            let mut point = vec![0.0f32; d];
+            for _ in 0..20 {
+                fill_annulus(&mut rng, &mut n, &mut point);
+                let r = point.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+                assert!((1.0 - 1e-3..=2.0 + 1e-3).contains(&r), "d={d} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn annulus_radius_cdf_small_d() {
+        // At d=2 the radius CDF is (r^2-1)/3; check the median ~ sqrt(2.5).
+        let mut rng = Xoshiro256pp::new(12);
+        let mut n = Normal::new();
+        let mut point = vec![0.0f32; 2];
+        let mut radii: Vec<f64> = (0..20_000)
+            .map(|_| {
+                fill_annulus(&mut rng, &mut n, &mut point);
+                point.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+            })
+            .collect();
+        radii.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = radii[radii.len() / 2];
+        assert!((median - 2.5f64.sqrt()).abs() < 0.02, "{median}");
+    }
+
+    #[test]
+    fn without_replacement_distinct_and_uniform() {
+        let mut rng = Xoshiro256pp::new(9);
+        let mut counts = vec![0usize; 20];
+        for _ in 0..10_000 {
+            let idx = sample_without_replacement(&mut rng, 20, 5);
+            assert_eq!(idx.len(), 5);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 5, "duplicates in {idx:?}");
+            for i in idx {
+                counts[i] += 1;
+            }
+        }
+        // each index expected 10_000 * 5 / 20 = 2500
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((c as f64 - 2500.0).abs() < 250.0, "idx {i}: {c}");
+        }
+    }
+}

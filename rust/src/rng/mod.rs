@@ -1,0 +1,14 @@
+//! Deterministic RNG substrate, built from scratch.
+//!
+//! Probe generation and residual-point sampling are part of the paper's
+//! algorithm (the estimator *is* its probe distribution), so the
+//! coordinator owns them with a reproducible, seedable generator rather
+//! than an external crate: xoshiro256++ seeded through splitmix64, plus
+//! the distributions the paper needs (Rademacher, standard normal,
+//! uniform-in-ball, uniform-in-annulus — numerically stable in 100k-D).
+
+mod distributions;
+mod xoshiro;
+
+pub use distributions::*;
+pub use xoshiro::Xoshiro256pp;

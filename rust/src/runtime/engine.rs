@@ -1,0 +1,100 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and runs them with device-resident buffers.
+//!
+//! Based on the /opt/xla-example/load_hlo pattern; every artifact has a
+//! single non-tuple output so `execute_b` output buffers feed straight
+//! back into the next step (DESIGN.md §6).
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`): one `Engine` per thread; the
+//! sweep runner creates a fresh engine inside each worker thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Entry, Manifest};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Load the manifest and create a CPU PJRT client.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch from cache) the executable for a manifest entry.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.get(name)?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&computation)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a row-major f32 host buffer.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute and return the single (non-tuple) output buffer.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let mut out = exe.execute_b(args)?;
+        let mut replica = out.pop().context("no output replica")?;
+        let buffer = replica.pop().context("no output buffer")?;
+        anyhow::ensure!(replica.is_empty(), "expected a single output buffer");
+        Ok(buffer)
+    }
+
+    /// Copy a whole f32 buffer back to the host.
+    /// (The CPU PJRT plugin does not implement CopyRawToHost, so this
+    /// goes through a literal — see EXPERIMENTS.md §Perf for the cost.)
+    pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let literal = buf.to_literal_sync()?;
+        Ok(literal.to_vec::<f32>()?)
+    }
+
+    /// Convenience: entry lookup by attributes (see `Manifest::find`).
+    pub fn find_entry(
+        &self,
+        kind: &str,
+        family: &str,
+        method: &str,
+        d: usize,
+        v: Option<usize>,
+    ) -> Result<Entry> {
+        Ok(self.manifest.find(kind, family, method, d, v)?.clone())
+    }
+}

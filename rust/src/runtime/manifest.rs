@@ -1,0 +1,253 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  Parsed from `artifacts/manifest.json` with the in-repo
+//! JSON substrate (offline build: no serde).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub hidden: usize,
+    pub depth: usize,
+    pub entries: Vec<Entry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    /// "train" | "eval" | "resval" | "evalk"
+    pub kind: String,
+    pub family: String,
+    pub method: String,
+    pub d: usize,
+    /// Probe count V (0 when the method takes no probes).
+    pub v: usize,
+    /// gPINN gradient-probe count.
+    pub vg: usize,
+    /// Batch size N (train) or M (eval).
+    pub n: usize,
+    pub n_coeff: usize,
+    pub n_params: usize,
+    pub state_size: usize,
+    pub state_offsets: StateOffsets,
+    pub inputs: Vec<InputSpec>,
+    pub param_layout: Vec<ParamEntry>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct StateOffsets {
+    pub params: usize,
+    pub m: usize,
+    pub v: usize,
+    pub t: usize,
+    pub loss: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+fn usizes(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()?.iter().map(|x| x.as_usize()).collect()
+}
+
+impl Entry {
+    fn from_json(v: &Value) -> Result<Entry> {
+        let so = v.get("state_offsets")?;
+        Ok(Entry {
+            name: v.get("name")?.as_str()?.to_string(),
+            file: v.get("file")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            family: v.get("family")?.as_str()?.to_string(),
+            method: v.get("method")?.as_str()?.to_string(),
+            d: v.get("d")?.as_usize()?,
+            v: v.get("v")?.as_usize()?,
+            vg: v.get("vg")?.as_usize()?,
+            n: v.get("n")?.as_usize()?,
+            n_coeff: v.get("n_coeff")?.as_usize()?,
+            n_params: v.get("n_params")?.as_usize()?,
+            state_size: v.get("state_size")?.as_usize()?,
+            state_offsets: StateOffsets {
+                params: so.get("params")?.as_usize()?,
+                m: so.get("m")?.as_usize()?,
+                v: so.get("v")?.as_usize()?,
+                t: so.get("t")?.as_usize()?,
+                loss: so.get("loss")?.as_usize()?,
+            },
+            inputs: v
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(InputSpec {
+                        name: i.get("name")?.as_str()?.to_string(),
+                        shape: usizes(i.get("shape")?)?,
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<_>>()?,
+            param_layout: v
+                .get("param_layout")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamEntry {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: usizes(p.get("shape")?)?,
+                        offset: p.get("offset")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Value::parse(text).context("parsing manifest.json")?;
+        let manifest = Manifest {
+            version: v.get("version")?.as_usize()?,
+            hidden: v.get("hidden")?.as_usize()?,
+            depth: v.get("depth")?.as_usize()?,
+            entries: v
+                .get("entries")?
+                .as_arr()?
+                .iter()
+                .map(Entry::from_json)
+                .collect::<Result<_>>()?,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = HashMap::new();
+        for e in &self.entries {
+            if let Some(prev) = seen.insert(e.name.clone(), &e.kind) {
+                bail!("duplicate artifact name {} ({} / {})", e.name, prev, e.kind);
+            }
+            if e.state_offsets.loss != e.state_size - 1 {
+                bail!("{}: loss slot must be the last state element", e.name);
+            }
+            if e.state_offsets.t != 3 * e.n_params {
+                bail!("{}: t offset inconsistent with n_params", e.name);
+            }
+            match e.inputs.first() {
+                Some(s) if s.name == "state" && s.shape == vec![e.state_size] => {}
+                other => bail!("{}: first input must be the packed state, got {other:?}", e.name),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    /// Find an entry by attributes; `v = None` matches any probe count.
+    pub fn find(
+        &self,
+        kind: &str,
+        family: &str,
+        method: &str,
+        d: usize,
+        v: Option<usize>,
+    ) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| {
+                e.kind == kind
+                    && e.family == family
+                    && e.method == method
+                    && e.d == d
+                    && v.map_or(true, |v| e.v == v)
+            })
+            .with_context(|| {
+                format!(
+                    "no artifact kind={kind} family={family} method={method} d={d} v={v:?}; rebuild artifacts"
+                )
+            })
+    }
+
+    pub fn dims_for(&self, kind: &str, family: &str, method: &str) -> Vec<usize> {
+        let mut dims: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind && e.family == family && e.method == method)
+            .map(|e| e.d)
+            .collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"{
+      "version": 1, "hidden": 128, "depth": 4,
+      "entries": [{
+        "name": "sg2_probe_d10_v4_n16", "file": "f.hlo.txt",
+        "kind": "train", "family": "sg2", "method": "probe",
+        "d": 10, "v": 4, "vg": 0, "n": 16, "n_coeff": 9,
+        "n_params": 100, "state_size": 302,
+        "state_offsets": {"params": 0, "m": 100, "v": 200, "t": 300, "loss": 301},
+        "inputs": [{"name": "state", "shape": [302], "dtype": "f32"}],
+        "param_layout": [{"name": "w1", "shape": [10, 128], "offset": 0}]
+      }]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(TINY).unwrap();
+        assert!(m.get("sg2_probe_d10_v4_n16").is_ok());
+        assert!(m.get("nope").is_err());
+        assert!(m.find("train", "sg2", "probe", 10, Some(4)).is_ok());
+        assert!(m.find("train", "sg2", "probe", 10, None).is_ok());
+        assert!(m.find("train", "sg2", "probe", 11, None).is_err());
+        assert_eq!(m.dims_for("train", "sg2", "probe"), vec![10]);
+        let e = m.get("sg2_probe_d10_v4_n16").unwrap();
+        assert_eq!(e.param_layout[0].shape, vec![10, 128]);
+        assert_eq!(e.state_offsets.loss, 301);
+    }
+
+    #[test]
+    fn validation_rejects_bad_loss_slot() {
+        let bad = TINY.replace("\"loss\": 301", "\"loss\": 0");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_missing_field() {
+        let bad = TINY.replace("\"kind\": \"train\",", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

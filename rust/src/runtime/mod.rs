@@ -1,0 +1,7 @@
+//! L3 <-> artifact runtime: manifest parsing + PJRT execution engine.
+
+mod engine;
+mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{Entry, InputSpec, Manifest, ParamEntry, StateOffsets};

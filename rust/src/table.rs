@@ -1,0 +1,127 @@
+//! Paper-style table rendering: method rows, per-dimension columns,
+//! `mean±std` scientific-notation cells (matching Tables 1-5's format).
+
+use crate::coordinator::ExperimentRow;
+
+/// Format like the paper: 6.24E-3±2.83E-3.
+pub fn sci(mean: f64, std: f64) -> String {
+    if mean.is_nan() {
+        return "N.A.".to_string();
+    }
+    format!("{mean:.2E}\u{B1}{std:.2E}")
+}
+
+pub fn fmt_speed(it_per_sec: f64) -> String {
+    if it_per_sec.is_nan() {
+        "N.A.".into()
+    } else {
+        format!("{it_per_sec:.2}it/s")
+    }
+}
+
+pub fn fmt_mem(mb: f64) -> String {
+    if mb.is_nan() {
+        "N.A.".into()
+    } else {
+        format!("{mb:.0}MB")
+    }
+}
+
+/// Render a grid: one row group per method, columns are dimensions.
+/// `metric` picks which cell to show per (method, d).
+pub fn render(title: &str, rows: &[ExperimentRow]) -> String {
+    let mut dims: Vec<usize> = rows.iter().map(|r| r.d).collect();
+    dims.sort_unstable();
+    dims.dedup();
+    // method label without the trailing /d{d} discriminator
+    let method_of = |r: &ExperimentRow| -> String {
+        match r.method.rfind("/d") {
+            Some(pos) if r.method[pos + 2..].chars().all(|c| c.is_ascii_digit()) => {
+                r.method[..pos].to_string()
+            }
+            _ => r.method.clone(),
+        }
+    };
+    let mut methods: Vec<String> = Vec::new();
+    for r in rows {
+        let m = method_of(r);
+        if !methods.contains(&m) {
+            methods.push(m);
+        }
+    }
+    let cell = |method: &str, d: usize| -> Option<&ExperimentRow> {
+        rows.iter().find(|r| method_of(r) == method && r.d == d)
+    };
+
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n\n"));
+    out.push_str("| Method | Metric |");
+    for d in &dims {
+        out.push_str(&format!(" {d} D |"));
+    }
+    out.push('\n');
+    out.push_str("|---|---|");
+    for _ in &dims {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for m in &methods {
+        for (metric, f) in [
+            ("Speed", &(|r: &ExperimentRow| fmt_speed(r.it_per_sec)) as &dyn Fn(&ExperimentRow) -> String),
+            ("Memory", &|r: &ExperimentRow| fmt_mem(r.rss_mb)),
+            ("Error", &|r: &ExperimentRow| sci(r.err_mean, r.err_std)),
+        ] {
+            out.push_str(&format!("| {m} | {metric} |"));
+            for &d in &dims {
+                let text = cell(m, d).map_or("N.A.".to_string(), f);
+                out.push_str(&format!(" {text} |"));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(method: &str, d: usize, err: f64) -> ExperimentRow {
+        ExperimentRow {
+            table: "t",
+            method: method.into(),
+            family: "sg2".into(),
+            d,
+            v: 16,
+            it_per_sec: 100.0,
+            rss_mb: 900.0,
+            err_mean: err,
+            err_std: err / 10.0,
+            final_loss: 0.1,
+            seeds: 3,
+        }
+    }
+
+    #[test]
+    fn sci_format_matches_paper_style() {
+        assert_eq!(sci(6.24e-3, 2.83e-3), "6.24E-3\u{B1}2.83E-3");
+        assert_eq!(sci(f64::NAN, 0.0), "N.A.");
+    }
+
+    #[test]
+    fn render_groups_methods_and_dims() {
+        let rows = vec![
+            row("HTE/d10", 10, 1e-3),
+            row("HTE/d100", 100, 2e-3),
+            row("SDGD/d10", 10, 1.5e-3),
+        ];
+        let table = render("Table 1", &rows);
+        assert!(table.contains("| HTE | Error |"));
+        assert!(table.contains("| SDGD | Error |"));
+        assert!(table.contains("1.00E-3"));
+        // SDGD has no d=100 artifact -> N.A. cell
+        assert!(table.contains("N.A."));
+        assert!(table.contains(" 10 D |"));
+        assert!(table.contains(" 100 D |"));
+    }
+}

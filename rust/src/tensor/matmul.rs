@@ -1,0 +1,72 @@
+//! Cache-blocked f32 matmul kernel for the native engine.
+//!
+//! i-k-j loop order (streaming writes over the output row) with k-blocking
+//! so the B panel stays in L1/L2.  Good enough for the native
+//! validation/ablation engine; the production hot path runs through XLA.
+
+const KC: usize = 256;
+
+/// out[m, n] += 0; out = a[m, k] @ b[k, n]
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for i in 0..m {
+            let arow = &a[i * k + k0..i * k + k0 + kb];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (t, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[(k0 + t) * n..(k0 + t + 1) * n];
+                // autovectorizes to fused multiply-adds over the row
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for t in 0..k {
+                    acc += a[i * k + t] * b[t * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_across_shapes_including_blocking_boundary() {
+        let mut seed = 1u64;
+        let mut next = move || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (16, 300, 8), (7, 513, 3)] {
+            let a: Vec<f32> = (0..m * k).map(|_| next()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| next()).collect();
+            let mut out = vec![0.0f32; m * n];
+            matmul_into(&a, &b, &mut out, m, k, n);
+            let want = naive(&a, &b, m, k, n);
+            for (x, y) in out.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3, "({m},{k},{n}): {x} vs {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Minimal dense tensor substrate (f32, row-major) for the native engine.
+//!
+//! Only what the native MLP / autodiff need: blocked matmul, elementwise
+//! ops, reductions.  No views or strides — shapes are small and the
+//! native path is a validation/ablation engine, not the hot path (the hot
+//! path is the compiled XLA artifact).
+
+mod matmul;
+
+pub use matmul::matmul_into;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let numel = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; numel] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// [m, k] @ [k, n] -> [m, n]
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        matmul_into(&self.data, &other.data, &mut out.data, m, k, n);
+        out
+    }
+
+    /// a^T @ b with a: [k, m], b: [k, n] -> [m, n] (for backprop).
+    pub fn matmul_tn(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (k, m) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2);
+        let mut out = Tensor::zeros(&[m, n]);
+        // out[i,j] = sum_t a[t,i] b[t,j]
+        for t in 0..k {
+            let arow = &self.data[t * m..(t + 1) * m];
+            let brow = &other.data[t * n..(t + 1) * n];
+            for i in 0..m {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// a @ b^T with a: [m, k], b: [n, k] -> [m, n] (for backprop).
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += arow[t] * brow[t];
+                }
+                out.data[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "elementwise shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, alpha: f32) -> Tensor {
+        self.map(|v| alpha * v)
+    }
+
+    /// Add a [n] row vector to every row of a [m, n] matrix.
+    pub fn add_row(&self, row: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(row.numel(), self.shape[1]);
+        let n = self.shape[1];
+        let mut out = self.clone();
+        for r in out.data.chunks_mut(n) {
+            for (v, &b) in r.iter_mut().zip(&row.data) {
+                *v += b;
+            }
+        }
+        out
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Sum of a [m, n] matrix over rows -> [n] (bias gradient).
+    pub fn sum_rows(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j] += self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn dot(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.numel(), other.numel());
+        self.data.iter().zip(&other.data).map(|(&a, &b)| a * b).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_hand_values() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_transposed_variants_agree() {
+        let a = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 4], (0..12).map(|i| i as f32).collect());
+        // a^T @ b == transpose(a) matmul b
+        let at = Tensor::from_vec(&[2, 3], vec![1., 3., 5., 2., 4., 6.]);
+        assert_eq!(a.matmul_tn(&b).data, at.matmul(&b).data);
+        // a @ b2^T
+        let b2 = Tensor::from_vec(&[4, 2], (0..8).map(|i| i as f32).collect());
+        let b2t = Tensor::from_vec(&[2, 4], vec![0., 2., 4., 6., 1., 3., 5., 7.]);
+        assert_eq!(a.matmul_nt(&b2).data, a.matmul(&b2t).data);
+    }
+
+    #[test]
+    fn elementwise_and_reductions() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., -2., 3., -4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 2., 2.]);
+        assert_eq!(a.add(&b).data, vec![2., -1., 5., -2.]);
+        assert_eq!(a.mul(&b).data, vec![1., -2., 6., -8.]);
+        assert_eq!(a.scale(2.0).data, vec![2., -4., 6., -8.]);
+        assert_eq!(a.sum(), -2.0);
+        assert_eq!(a.sum_rows().data, vec![4., -6.]);
+        assert_eq!(a.dot(&b), -3.0);
+        let row = Tensor::from_vec(&[2], vec![10., 20.]);
+        assert_eq!(a.add_row(&row).data, vec![11., 18., 13., 16.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 2]);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser (offline substrate; replaces clap).
+//!
+//! Flags are `--name value` (or `--name` for booleans); positional args
+//! collect in order.  Unknown flags are an error, so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else {
+                    let value = iter
+                        .next()
+                        .with_context(|| format!("flag --{name} expects a value"))?;
+                    out.flags.insert(name.to_string(), value);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&mut self, name: &str) -> Option<String> {
+        self.known.push(name.to_string());
+        self.flags.get(name).cloned()
+    }
+
+    pub fn get_or(&mut self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&mut self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(text) => text
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{name}: cannot parse {text:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list flag: `--dims 10,100,1000`.
+    pub fn get_list(&mut self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(text) => text
+                .split(',')
+                .map(|t| t.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--{name}: {e}")))
+                .collect(),
+        }
+    }
+
+    pub fn has(&mut self, name: &str) -> bool {
+        self.known.push(name.to_string());
+        self.bools.iter().any(|b| b == name)
+    }
+
+    /// Call after reading all expected flags: rejects unknown ones.
+    pub fn finish(&self) -> Result<()> {
+        for key in self.flags.keys() {
+            if !self.known.contains(key) {
+                bail!("unknown flag --{key}");
+            }
+        }
+        for key in &self.bools {
+            if !self.known.contains(key) {
+                bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_positionals_and_bools() {
+        let mut args = Args::parse(
+            vecs(&["train", "--d", "100", "--verbose", "--dims", "1,2,3"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(args.positional, vec!["train"]);
+        assert_eq!(args.get_parse("d", 0usize).unwrap(), 100);
+        assert!(args.has("verbose"));
+        assert_eq!(args.get_list("dims", &[]).unwrap(), vec![1, 2, 3]);
+        args.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_is_rejected() {
+        let mut args = Args::parse(vecs(&["--oops", "1"]), &[]).unwrap();
+        let _ = args.get("d");
+        assert!(args.finish().is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vecs(&["--d"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut args = Args::parse(vecs(&[]), &[]).unwrap();
+        assert_eq!(args.get_or("family", "sg2"), "sg2");
+        assert_eq!(args.get_parse("epochs", 2000usize).unwrap(), 2000);
+    }
+}

@@ -1,0 +1,84 @@
+//! Self-contained bench harness (offline substrate; replaces criterion).
+//!
+//! Each `[[bench]]` target is a plain `main()` that calls
+//! `time_fn` / `BenchReport` here: warmup, N timed iterations, mean /
+//! stddev / min, printed in a fixed format that `cargo bench` surfaces.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl Timing {
+    pub fn it_per_sec(&self) -> f64 {
+        1.0 / self.mean_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed calls.
+pub fn time_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    Timing { name: name.to_string(), iters, mean_s: mean, std_s: var.sqrt(), min_s: min }
+}
+
+/// Collects timings and prints a paper-style summary block.
+#[derive(Default)]
+pub struct BenchReport {
+    pub title: String,
+    pub rows: Vec<Timing>,
+}
+
+impl BenchReport {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: Timing) {
+        println!(
+            "  {:40} {:>12.3} ms/iter (±{:.3})  {:>10.2} it/s",
+            t.name,
+            t.mean_s * 1e3,
+            t.std_s * 1e3,
+            t.it_per_sec()
+        );
+        self.rows.push(t);
+    }
+
+    pub fn finish(&self) {
+        println!("== {} : {} rows ==", self.title, self.rows.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_statistics_sane() {
+        let t = time_fn("spin", 1, 5, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s > 0.0);
+        assert!(t.min_s <= t.mean_s);
+        assert!(t.it_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Offline-build substrates: JSON, TOML-subset config parsing, CLI args,
+//! and the bench timing harness (no external crates beyond `xla`/`anyhow`).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod toml;

@@ -1,0 +1,123 @@
+//! TOML-subset parser for experiment configs.
+//!
+//! Supports: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / homogeneous-array values, `#` comments.  That is the
+//! entire surface the config format uses (see `config.rs`); nested tables
+//! and multi-line strings are intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Value;
+
+/// Parse a TOML-subset document into {section -> {key -> Value}}; keys
+/// before any section header land in section "".
+pub fn parse(text: &str) -> Result<BTreeMap<String, BTreeMap<String, Value>>> {
+    let mut out: BTreeMap<String, BTreeMap<String, Value>> = BTreeMap::new();
+    let mut section = String::new();
+    out.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let parsed = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value {:?}", lineno + 1, value.trim()))?;
+        out.get_mut(&section).unwrap().insert(key.trim().to_string(), parsed);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    if text.starts_with('"') {
+        let inner = text
+            .strip_prefix('"')
+            .and_then(|t| t.strip_suffix('"'))
+            .context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let items = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(parse_value)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(n) = text.parse::<f64>() {
+        return Ok(Value::Num(n));
+    }
+    bail!("unsupported TOML value {text:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_config_shape() {
+        let doc = r#"
+            artifacts = "artifacts"   # top-level
+            [run]
+            family = "sg2"            # which PDE
+            d = 100
+            lr0 = 1e-3
+            seeds = [0, 1, 2]
+            deterministic = true
+        "#;
+        let parsed = parse(doc).unwrap();
+        assert_eq!(parsed[""]["artifacts"].as_str().unwrap(), "artifacts");
+        let run = &parsed["run"];
+        assert_eq!(run["family"].as_str().unwrap(), "sg2");
+        assert_eq!(run["d"].as_usize().unwrap(), 100);
+        assert!((run["lr0"].as_f64().unwrap() - 1e-3).abs() < 1e-12);
+        assert_eq!(run["seeds"].as_arr().unwrap().len(), 3);
+        assert_eq!(run["deterministic"], Value::Bool(true));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let parsed = parse("name = \"a#b\"").unwrap();
+        assert_eq!(parsed[""]["name"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @bad").is_err());
+    }
+}
