@@ -10,10 +10,44 @@
 //! while HTE's cost is dimension-independent.
 
 use hte_pinn::estimators::{Estimator, ProbeGenerator};
-use hte_pinn::nn::{jet_forward, Mlp};
-use hte_pinn::pde::SineGordon2Body;
-use hte_pinn::rng::Xoshiro256pp;
+use hte_pinn::nn::{
+    default_threads, hte_residual_loss_and_grad_pairgrid, jet_forward, Mlp, NativeBatch,
+    NativeEngine,
+};
+use hte_pinn::pde::{Domain, DomainSampler, PdeProblem, SineGordon2Body};
+use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
 use hte_pinn::util::bench::{time_fn, BenchReport};
+
+/// Full training-step cost (forward jets + one reverse pass + gradient)
+/// through the two tape formulations, at paper scales.
+fn native_step_section(report: &mut BenchReport) {
+    let n = 16;
+    for d in [10usize, 100, 1000] {
+        for v in [1usize, 16] {
+            let mut rng = Xoshiro256pp::new(4);
+            let mlp = Mlp::init(d, &mut rng);
+            let problem = SineGordon2Body::new(d);
+            let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+            let xs = sampler.batch(n);
+            let mut probes = vec![0.0f32; v * d];
+            fill_rademacher(&mut rng, &mut probes);
+            let mut coeff = vec![0.0f32; problem.n_coeff()];
+            Normal::new().fill_f32(&mut rng, &mut coeff);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+            let iters = if d >= 1000 { 3 } else { 10 };
+            report.push(time_fn(&format!("step-pairgrid/d{d}-v{v}"), 1, iters, || {
+                std::hint::black_box(hte_residual_loss_and_grad_pairgrid(
+                    &mlp, &problem, &batch,
+                ));
+            }));
+            let mut engine = NativeEngine::new(default_threads());
+            let mut grad = Vec::new();
+            report.push(time_fn(&format!("step-batched/d{d}-v{v}"), 1, iters, || {
+                std::hint::black_box(engine.loss_and_grad(&mlp, &problem, &batch, &mut grad));
+            }));
+        }
+    }
+}
 
 fn main() {
     let mut report = BenchReport::new("ablation: AD schedule cost hierarchy");
@@ -81,5 +115,10 @@ fn main() {
         }
     }
     println!("  expected: hte flat-ish in d; exact-trace ~linear; full-hessian ~quadratic");
+    native_step_section(&mut report);
+    println!(
+        "  expected: step-batched beats step-pairgrid, and the gap widens with V \
+         (shared primal amortized across probes)"
+    );
     report.finish();
 }

@@ -1,25 +1,180 @@
 //! §Perf: where does a train step's wall time go at the table scales?
 //!
-//! Splits the L3 step into its host-side stages (residual sampling, probe
-//! generation, buffer upload) vs the XLA execution, so the coordinator's
-//! overhead budget (<10% of step time, DESIGN.md §8) is verifiable.
+//! Two sections (DESIGN.md §8):
+//!
+//! * **native** (always available): the matmul kernel, then the native
+//!   training step at paper scales — d ∈ {10, 100, 1000}, V ∈ {1, 16} —
+//!   timing the pre-refactor pair-grid formulation against the
+//!   probe-batched workspace engine (single- and multi-threaded), with a
+//!   loss parity check against the jet-forward reference.  Results land
+//!   in `BENCH_native.json` next to the manifest (CI uploads it as an
+//!   artifact).
+//! * **artifact** (`--features xla` + `artifacts/`): the L3 step split
+//!   into host-side stages vs XLA execution, so the coordinator's
+//!   overhead budget (<10% of step time, DESIGN.md §8) is verifiable.
 
-use hte_pinn::coordinator::{TrainConfig, Trainer};
-use hte_pinn::estimators::{Estimator, ProbeGenerator};
-use hte_pinn::pde::{Domain, DomainSampler};
-use hte_pinn::rng::Xoshiro256pp;
-use hte_pinn::runtime::Engine;
+use hte_pinn::coordinator::problem_for;
+use hte_pinn::nn::{
+    default_threads, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, Mlp,
+    NativeBatch, NativeEngine,
+};
+use hte_pinn::pde::{Domain, DomainSampler, PdeProblem};
+use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
+use hte_pinn::tensor::matmul_into;
 use hte_pinn::util::bench::{time_fn, BenchReport};
+use hte_pinn::util::json::{num, obj, s, Value};
 
-fn main() {
+fn matmul_section(report: &mut BenchReport) {
+    let mut rng = Xoshiro256pp::new(7);
+    for (m, k, n) in [(256, 100, 128), (256, 128, 128), (1600, 128, 128)] {
+        let a: Vec<f32> = (0..m * k).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        let mut out = vec![0.0f32; m * n];
+        report.push(time_fn(&format!("matmul/{m}x{k}x{n}"), 3, 30, || {
+            matmul_into(&a, &b, &mut out, m, k, n);
+            std::hint::black_box(out[0]);
+        }));
+    }
+}
+
+struct NativeRow {
+    d: usize,
+    v: usize,
+    n: usize,
+    pairgrid_ms: f64,
+    batched_1thread_ms: f64,
+    batched_ms: f64,
+    threads: usize,
+    loss_rel_err: f64,
+}
+
+fn native_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> NativeRow {
+    let mut rng = Xoshiro256pp::new(11);
+    let mlp = Mlp::init(d, &mut rng);
+    let problem = problem_for("sg2", d).expect("sg2 problem");
+    let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+    let xs = sampler.batch(n);
+    let mut probes = vec![0.0f32; v * d];
+    fill_rademacher(&mut rng, &mut probes);
+    let mut coeff = vec![0.0f32; problem.n_coeff()];
+    Normal::new().fill_f32(&mut rng, &mut coeff);
+    let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+
+    let (warmup, iters) = if d >= 1000 { (1, 3) } else if d >= 100 { (2, 10) } else { (3, 30) };
+    let tag = format!("d{d}-v{v}-n{n}");
+
+    let pairgrid = time_fn(&format!("native-step/pairgrid/{tag}"), warmup, iters, || {
+        std::hint::black_box(hte_residual_loss_and_grad_pairgrid(
+            &mlp,
+            problem.as_ref(),
+            &batch,
+        ));
+    });
+    report.push(pairgrid.clone());
+
+    let mut engine1 = NativeEngine::new(1);
+    let mut grad = Vec::new();
+    let batched1 = time_fn(&format!("native-step/batched-t1/{tag}"), warmup, iters, || {
+        std::hint::black_box(engine1.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad));
+    });
+    report.push(batched1.clone());
+
+    let threads = default_threads();
+    let mut engine_mt = NativeEngine::new(threads);
+    let batched = time_fn(
+        &format!("native-step/batched-t{threads}/{tag}"),
+        warmup,
+        iters,
+        || {
+            std::hint::black_box(engine_mt.loss_and_grad(
+                &mlp,
+                problem.as_ref(),
+                &batch,
+                &mut grad,
+            ));
+        },
+    );
+    report.push(batched.clone());
+
+    // parity: optimized-path loss vs the jet-forward reference
+    let loss = engine_mt.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad) as f64;
+    let reference = hte_residual_loss_reference(&mlp, problem.as_ref(), &batch);
+    let loss_rel_err = (loss - reference).abs() / (1.0 + reference.abs());
+
+    NativeRow {
+        d,
+        v,
+        n,
+        pairgrid_ms: pairgrid.mean_s * 1e3,
+        batched_1thread_ms: batched1.mean_s * 1e3,
+        batched_ms: batched.mean_s * 1e3,
+        threads,
+        loss_rel_err,
+    }
+}
+
+fn native_section(report: &mut BenchReport) -> Vec<NativeRow> {
+    let mut rows = Vec::new();
+    for d in [10usize, 100, 1000] {
+        for v in [1usize, 16] {
+            rows.push(native_case(report, d, v, 16));
+        }
+    }
+    // thread-scaling row at the paper's batch size
+    rows.push(native_case(report, 100, 16, 100));
+    rows
+}
+
+fn write_bench_json(rows: &[NativeRow]) {
+    let json_rows: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            let speedup = r.pairgrid_ms / r.batched_ms.max(1e-9);
+            let speedup_1t = r.pairgrid_ms / r.batched_1thread_ms.max(1e-9);
+            obj(vec![
+                ("d", num(r.d as f64)),
+                ("v", num(r.v as f64)),
+                ("n", num(r.n as f64)),
+                ("pairgrid_ms", num(r.pairgrid_ms)),
+                ("batched_1thread_ms", num(r.batched_1thread_ms)),
+                ("batched_ms", num(r.batched_ms)),
+                ("threads", num(r.threads as f64)),
+                ("speedup_vs_pairgrid", num(speedup)),
+                ("speedup_1thread", num(speedup_1t)),
+                ("loss_rel_err", num(r.loss_rel_err)),
+                ("parity_ok", Value::Bool(r.loss_rel_err < 1e-3)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", s("native-step")),
+        (
+            "baseline",
+            s("hte_residual_loss_and_grad_pairgrid (pre-refactor pair-grid tape)"),
+        ),
+        ("optimized", s("NativeEngine (probe-batched, workspace-pooled, threaded)")),
+        ("rows", Value::Arr(json_rows)),
+    ]);
+    let path = "BENCH_native.json";
+    match std::fs::write(path, doc.to_json()) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn artifact_section(report: &mut BenchReport) {
+    use hte_pinn::coordinator::{TrainConfig, Trainer};
+    use hte_pinn::estimators::{Estimator, ProbeGenerator};
+    use hte_pinn::runtime::Engine;
+
     let engine = match Engine::load("artifacts") {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("skipping bench (no artifacts): {e:#}");
+            eprintln!("  skipping artifact section (no artifacts): {e:#}");
             return;
         }
     };
-    let mut report = BenchReport::new("perf: step breakdown");
     for d in engine.manifest().dims_for("train", "sg2", "probe") {
         let n = 100;
         let v = 16;
@@ -62,5 +217,57 @@ fn main() {
             let _ = trainer.loss().unwrap();
         }));
     }
+}
+
+fn main() {
+    let mut report = BenchReport::new("perf: step breakdown");
+    matmul_section(&mut report);
+    let rows = native_section(&mut report);
+    for r in &rows {
+        println!(
+            "  native-step d{} v{} n{}: pairgrid {:.3} ms -> batched {:.3} ms \
+             ({:.2}x, 1-thread {:.2}x), loss rel err {:.2e}",
+            r.d,
+            r.v,
+            r.n,
+            r.pairgrid_ms,
+            r.batched_ms,
+            r.pairgrid_ms / r.batched_ms.max(1e-9),
+            r.pairgrid_ms / r.batched_1thread_ms.max(1e-9),
+            r.loss_rel_err
+        );
+    }
+    write_bench_json(&rows);
+    #[cfg(feature = "xla")]
+    artifact_section(&mut report);
+    #[cfg(not(feature = "xla"))]
+    println!("  (artifact-step rows need --features xla and artifacts/)");
     report.finish();
+
+    // Enforce the acceptance gates (DESIGN.md §8) so CI goes red on a
+    // parity or performance regression, not just quietly uploads JSON.
+    let mut failed = false;
+    for r in &rows {
+        if r.loss_rel_err >= 1e-3 || r.loss_rel_err.is_nan() {
+            eprintln!(
+                "FAIL: loss parity d{} v{} n{}: rel err {:.3e} >= 1e-3",
+                r.d, r.v, r.n, r.loss_rel_err
+            );
+            failed = true;
+        }
+    }
+    if let Some(gate) = rows.iter().find(|r| r.d == 100 && r.v == 16 && r.n == 16) {
+        let speedup = gate.pairgrid_ms / gate.batched_ms.max(1e-9);
+        let enforce = std::env::var_os("HTE_BENCH_NO_SPEEDUP_GATE").is_none();
+        if speedup < 3.0 && enforce {
+            eprintln!(
+                "FAIL: speedup gate at d=100 v=16 n=16: {speedup:.2}x < 3x \
+                 (set HTE_BENCH_NO_SPEEDUP_GATE=1 to report without enforcing)"
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
 }

@@ -6,29 +6,85 @@
 //! jet rules, expressed in tape ops) and then reverse-differentiates once
 //! w.r.t. the parameters — exactly the forward-Taylor + single-backward
 //! schedule the paper advocates.
+//!
+//! Engine notes (DESIGN.md §7):
+//!
+//! * Every node records an `Op` enum, not a boxed closure — dispatch is a
+//!   match, nodes are `Send` (so worker threads can own tapes), and the
+//!   backward pass accumulates straight into pooled gradient buffers.
+//! * All intermediates come from a [`BufferPool`]; [`Tape::reset`] recycles
+//!   them, so a steady-state training step allocates nothing.
+//! * Probe batching is first-class: [`Tape::broadcast_rows`] /
+//!   [`Tape::tile_rows`] connect a probe-independent `[n, c]` primal
+//!   stream to `[n·v, c]` tangent streams, and [`Tape::tanh_jet2`] fuses
+//!   the order-2 tanh jet (one hand-written forward/backward per output
+//!   stream instead of ~9 generic elementwise nodes).
 
-use crate::tensor::Tensor;
+use crate::tensor::{matmul_acc, matmul_nt_acc, matmul_tn_acc, BufferPool, Tensor};
 
 /// Index of a node on the tape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Var(pub usize);
 
-type BackwardFn = Box<dyn Fn(&Tensor, &Tape) -> Vec<(usize, Tensor)>>;
+/// Recorded operation; parents are node indices (always < the node's own).
+enum Op {
+    Leaf,
+    /// value = A @ B
+    Matmul { a: usize, b: usize },
+    /// value = A + row-broadcast bias
+    AddRow { a: usize, bias: usize },
+    Add { a: usize, b: usize },
+    Sub { a: usize, b: usize },
+    Mul { a: usize, b: usize },
+    Scale { a: usize, alpha: f32 },
+    Tanh { a: usize },
+    Sin { a: usize },
+    MeanAll { a: usize },
+    SumAll { a: usize },
+    /// [k*group, 1] -> [k, 1], mean over consecutive groups of rows.
+    GroupMean { a: usize, group: usize },
+    /// [n, c] -> [n*group, c], each row repeated `group` times.
+    BroadcastRows { a: usize, group: usize },
+    /// [v, c] -> [reps*v, c], the whole block repeated `reps` times.
+    TileRows { a: usize },
+    /// t0 = tanh(z0) at [n, c] (primal stream of the fused tanh jet).
+    TanhJetT0 { z0: usize },
+    /// o1 = (1 - t0^2) ⊙ z1 at [n*group, c], t0 row-broadcast by `group`.
+    TanhJetO1 { t0: usize, z1: usize, group: usize },
+    /// o2 = -2 t0 (1 - t0^2) ⊙ z1^2 + (1 - t0^2) ⊙ z2 at [n*group, c].
+    TanhJetO2 { t0: usize, z1: usize, z2: usize, group: usize },
+}
 
 struct Node {
     value: Tensor,
-    backward: Option<BackwardFn>,
+    op: Op,
 }
 
 /// A linear tape of operations; gradients flow backwards over it.
 #[derive(Default)]
 pub struct Tape {
     nodes: Vec<Node>,
+    pool: BufferPool,
+}
+
+/// Get (allocating a zeroed tensor on first touch) the gradient slot for
+/// a parent node.
+fn slot<'g>(
+    grads: &'g mut [Option<Tensor>],
+    idx: usize,
+    shape: &[usize],
+    pool: &mut BufferPool,
+) -> &'g mut Tensor {
+    if grads[idx].is_none() {
+        let numel = shape.iter().product();
+        grads[idx] = Some(Tensor { shape: shape.to_vec(), data: pool.take_zeroed(numel) });
+    }
+    grads[idx].as_mut().expect("slot just initialized")
 }
 
 impl Tape {
     pub fn new() -> Self {
-        Self { nodes: Vec::new() }
+        Self::default()
     }
 
     pub fn len(&self) -> usize {
@@ -43,101 +99,162 @@ impl Tape {
         &self.nodes[v.0].value
     }
 
-    fn push(&mut self, value: Tensor, backward: Option<BackwardFn>) -> Var {
-        self.nodes.push(Node { value, backward });
+    /// Drop all nodes, recycling their buffers into the workspace pool.
+    /// The next graph built on this tape reuses them.
+    pub fn reset(&mut self) {
+        for node in self.nodes.drain(..) {
+            self.pool.give(node.value.data);
+        }
+    }
+
+    /// Recycle a gradient vector returned by [`Tape::backward`].
+    pub fn reclaim(&mut self, grads: Vec<Option<Tensor>>) {
+        for g in grads.into_iter().flatten() {
+            self.pool.give(g.data);
+        }
+    }
+
+    /// Pooled tensor of the given shape, zero-filled.
+    fn alloc(&mut self, shape: &[usize]) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: self.pool.take_zeroed(numel) }
+    }
+
+    fn push(&mut self, value: Tensor, op: Op) -> Var {
+        self.nodes.push(Node { value, op });
         Var(self.nodes.len() - 1)
     }
 
     /// Differentiable input (a leaf whose gradient we want).
     pub fn input(&mut self, value: Tensor) -> Var {
-        self.push(value, None)
+        self.push(value, Op::Leaf)
     }
 
     /// Non-differentiable constant.
     pub fn constant(&mut self, value: Tensor) -> Var {
-        self.push(value, None)
+        self.push(value, Op::Leaf)
+    }
+
+    /// Leaf copied from a host slice into a pooled buffer.
+    pub fn leaf_from_slice(&mut self, shape: &[usize], data: &[f32]) -> Var {
+        let mut t = self.alloc(shape);
+        assert_eq!(t.data.len(), data.len(), "shape/data mismatch");
+        t.data.copy_from_slice(data);
+        self.push(t, Op::Leaf)
+    }
+
+    /// All-zero constant leaf from the pool.
+    pub fn zeros(&mut self, shape: &[usize]) -> Var {
+        let t = self.alloc(shape);
+        self.push(t, Op::Leaf)
+    }
+
+    /// Constant leaf whose pooled (zeroed) buffer is filled by `fill` —
+    /// host-side data lands on the tape without an intermediate `Vec`.
+    pub fn leaf_with(&mut self, shape: &[usize], fill: impl FnOnce(&mut [f32])) -> Var {
+        let mut t = self.alloc(shape);
+        fill(&mut t.data);
+        self.push(t, Op::Leaf)
+    }
+
+    /// Three same-shape constant leaves filled in one host-side pass
+    /// (e.g. the three factor-jet streams share one O(d) evaluation).
+    pub fn leaf3_with(
+        &mut self,
+        shape: &[usize],
+        fill: impl FnOnce(&mut [f32], &mut [f32], &mut [f32]),
+    ) -> [Var; 3] {
+        let mut t0 = self.alloc(shape);
+        let mut t1 = self.alloc(shape);
+        let mut t2 = self.alloc(shape);
+        fill(&mut t0.data, &mut t1.data, &mut t2.data);
+        [
+            self.push(t0, Op::Leaf),
+            self.push(t1, Op::Leaf),
+            self.push(t2, Op::Leaf),
+        ]
     }
 
     pub fn matmul(&mut self, a: Var, b: Var) -> Var {
-        let value = self.value(a).matmul(self.value(b));
-        self.push(
-            value,
-            Some(Box::new(move |g, tape| {
-                vec![
-                    (a.0, g.matmul_nt(tape.value(b))),
-                    (b.0, tape.value(a).matmul_tn(g)),
-                ]
-            })),
-        )
+        let (m, k) = (self.value(a).shape[0], self.value(a).shape[1]);
+        let (k2, n) = (self.value(b).shape[0], self.value(b).shape[1]);
+        assert_eq!(k, k2, "inner dims {k} vs {k2}");
+        let mut out = self.alloc(&[m, n]);
+        matmul_acc(
+            &self.nodes[a.0].value.data,
+            &self.nodes[b.0].value.data,
+            &mut out.data,
+            m,
+            k,
+            n,
+        );
+        self.push(out, Op::Matmul { a: a.0, b: b.0 })
     }
 
     /// Broadcast-add a [n] bias row to a [m, n] matrix.
     pub fn add_row(&mut self, a: Var, bias: Var) -> Var {
-        let value = self.value(a).add_row(self.value(bias));
-        self.push(
-            value,
-            Some(Box::new(move |g, _| {
-                vec![(a.0, g.clone()), (bias.0, g.sum_rows())]
-            })),
-        )
+        let shape = self.value(a).shape.clone();
+        let n = shape[1];
+        assert_eq!(self.value(bias).numel(), n);
+        let mut out = self.alloc(&shape);
+        {
+            let av = &self.nodes[a.0].value.data;
+            let bv = &self.nodes[bias.0].value.data;
+            for (orow, arow) in out.data.chunks_mut(n).zip(av.chunks(n)) {
+                for ((o, &x), &bias_e) in orow.iter_mut().zip(arow).zip(bv) {
+                    *o = x + bias_e;
+                }
+            }
+        }
+        self.push(out, Op::AddRow { a: a.0, bias: bias.0 })
+    }
+
+    fn ew2(&mut self, a: Var, b: Var, op: Op, f: impl Fn(f32, f32) -> f32) -> Var {
+        assert_eq!(self.value(a).shape, self.value(b).shape, "elementwise shape mismatch");
+        let shape = self.value(a).shape.clone();
+        let mut out = self.alloc(&shape);
+        for ((o, &x), &y) in out
+            .data
+            .iter_mut()
+            .zip(&self.nodes[a.0].value.data)
+            .zip(&self.nodes[b.0].value.data)
+        {
+            *o = f(x, y);
+        }
+        self.push(out, op)
+    }
+
+    fn ew1(&mut self, a: Var, op: Op, f: impl Fn(f32) -> f32) -> Var {
+        let shape = self.value(a).shape.clone();
+        let mut out = self.alloc(&shape);
+        for (o, &x) in out.data.iter_mut().zip(&self.nodes[a.0].value.data) {
+            *o = f(x);
+        }
+        self.push(out, op)
     }
 
     pub fn add(&mut self, a: Var, b: Var) -> Var {
-        let value = self.value(a).add(self.value(b));
-        self.push(
-            value,
-            Some(Box::new(move |g, _| vec![(a.0, g.clone()), (b.0, g.clone())])),
-        )
+        self.ew2(a, b, Op::Add { a: a.0, b: b.0 }, |x, y| x + y)
     }
 
     pub fn sub(&mut self, a: Var, b: Var) -> Var {
-        let value = self.value(a).sub(self.value(b));
-        self.push(
-            value,
-            Some(Box::new(move |g, _| vec![(a.0, g.clone()), (b.0, g.scale(-1.0))])),
-        )
+        self.ew2(a, b, Op::Sub { a: a.0, b: b.0 }, |x, y| x - y)
     }
 
     pub fn mul(&mut self, a: Var, b: Var) -> Var {
-        let value = self.value(a).mul(self.value(b));
-        self.push(
-            value,
-            Some(Box::new(move |g, tape| {
-                vec![(a.0, g.mul(tape.value(b))), (b.0, g.mul(tape.value(a)))]
-            })),
-        )
+        self.ew2(a, b, Op::Mul { a: a.0, b: b.0 }, |x, y| x * y)
     }
 
     pub fn scale(&mut self, a: Var, alpha: f32) -> Var {
-        let value = self.value(a).scale(alpha);
-        self.push(
-            value,
-            Some(Box::new(move |g, _| vec![(a.0, g.scale(alpha))])),
-        )
+        self.ew1(a, Op::Scale { a: a.0, alpha }, |x| alpha * x)
     }
 
     pub fn tanh(&mut self, a: Var) -> Var {
-        let value = self.value(a).map(|v| v.tanh());
-        self.push(
-            value,
-            Some(Box::new(move |g, tape| {
-                let deriv = tape.value(a).map(|v| {
-                    let t = v.tanh();
-                    1.0 - t * t
-                });
-                vec![(a.0, g.mul(&deriv))]
-            })),
-        )
+        self.ew1(a, Op::Tanh { a: a.0 }, |x| x.tanh())
     }
 
     pub fn sin(&mut self, a: Var) -> Var {
-        let value = self.value(a).map(|v| v.sin());
-        self.push(
-            value,
-            Some(Box::new(move |g, tape| {
-                vec![(a.0, g.mul(&tape.value(a).map(|v| v.cos())))]
-            })),
-        )
+        self.ew1(a, Op::Sin { a: a.0 }, |x| x.sin())
     }
 
     pub fn square(&mut self, a: Var) -> Var {
@@ -147,15 +264,18 @@ impl Tape {
     /// Mean over all elements -> scalar.
     pub fn mean_all(&mut self, a: Var) -> Var {
         let n = self.value(a).numel() as f32;
-        let value = Tensor::scalar(self.value(a).sum() / n);
-        self.push(
-            value,
-            Some(Box::new(move |g, tape| {
-                let shape = tape.value(a).shape.clone();
-                let gv = g.data[0] / n;
-                vec![(a.0, Tensor::from_vec(&shape, vec![gv; n as usize]))]
-            })),
-        )
+        let s: f32 = self.value(a).data.iter().sum();
+        let mut out = self.alloc(&[]);
+        out.data[0] = s / n;
+        self.push(out, Op::MeanAll { a: a.0 })
+    }
+
+    /// Sum over all elements -> scalar.
+    pub fn sum_all(&mut self, a: Var) -> Var {
+        let s: f32 = self.value(a).data.iter().sum();
+        let mut out = self.alloc(&[]);
+        out.data[0] = s;
+        self.push(out, Op::SumAll { a: a.0 })
     }
 
     /// Mean over consecutive groups of `group` rows: [g*k, 1] -> [k, 1].
@@ -164,42 +284,354 @@ impl Tape {
         let total = self.value(a).numel();
         assert_eq!(total % group, 0);
         let k = total / group;
-        let mut out = Tensor::zeros(&[k, 1]);
-        for (i, chunk) in self.value(a).data.chunks(group).enumerate() {
-            out.data[i] = chunk.iter().sum::<f32>() / group as f32;
+        let mut out = self.alloc(&[k, 1]);
+        for (o, chunk) in out.data.iter_mut().zip(self.nodes[a.0].value.data.chunks(group)) {
+            *o = chunk.iter().sum::<f32>() / group as f32;
         }
-        self.push(
-            out,
-            Some(Box::new(move |g, _| {
-                let mut ga = Tensor::zeros(&[k * group, 1]);
-                for i in 0..k {
-                    let gv = g.data[i] / group as f32;
-                    for j in 0..group {
-                        ga.data[i * group + j] = gv;
-                    }
+        self.push(out, Op::GroupMean { a: a.0, group })
+    }
+
+    /// Repeat each row of a [n, c] matrix `group` times -> [n*group, c].
+    /// Backward is the matching per-group row sum.
+    pub fn broadcast_rows(&mut self, a: Var, group: usize) -> Var {
+        let (n, c) = (self.value(a).shape[0], self.value(a).shape[1]);
+        let mut out = self.alloc(&[n * group, c]);
+        {
+            let av = &self.nodes[a.0].value.data;
+            for (r, orow) in out.data.chunks_mut(c).enumerate() {
+                let p = r / group;
+                orow.copy_from_slice(&av[p * c..(p + 1) * c]);
+            }
+        }
+        self.push(out, Op::BroadcastRows { a: a.0, group })
+    }
+
+    /// Repeat a whole [v, c] block `reps` times -> [reps*v, c].
+    /// Backward sums the per-repetition blocks.
+    pub fn tile_rows(&mut self, a: Var, reps: usize) -> Var {
+        let (v, c) = (self.value(a).shape[0], self.value(a).shape[1]);
+        let mut out = self.alloc(&[reps * v, c]);
+        {
+            let av = &self.nodes[a.0].value.data;
+            for block in out.data.chunks_mut(v * c) {
+                block.copy_from_slice(av);
+            }
+        }
+        self.push(out, Op::TileRows { a: a.0 })
+    }
+
+    /// Fused order-2 tanh jet with a row-broadcast primal stream.
+    ///
+    /// Inputs: `z[0]` at [n, c] (primal), `z[1]`/`z[2]` at [n*group, c]
+    /// (tangent / second streams; row i*group+k belongs to point i).
+    /// Returns `[t0, o1, o2]` with
+    ///   t0 = tanh(z0)                       at [n, c]
+    ///   o1 = f1 ⊙ z1                        at [n*group, c]
+    ///   o2 = f2 ⊙ z1² + f1 ⊙ z2             at [n*group, c]
+    /// where f1 = 1 - t0², f2 = -2 t0 f1 are broadcast by `group`, never
+    /// materialized.  Each output is one tape node with a hand-written
+    /// backward — versus ~9 generic nodes for the unfused composition.
+    pub fn tanh_jet2(&mut self, z: [Var; 3], group: usize) -> [Var; 3] {
+        let (n, c) = (self.value(z[0]).shape[0], self.value(z[0]).shape[1]);
+        let b = n * group;
+        assert_eq!(self.value(z[1]).shape, vec![b, c], "tangent stream shape");
+        assert_eq!(self.value(z[2]).shape, vec![b, c], "second stream shape");
+
+        let t0 = self.ew1(z[0], Op::TanhJetT0 { z0: z[0].0 }, |x| x.tanh());
+
+        let mut o1 = self.alloc(&[b, c]);
+        {
+            let t0d = &self.nodes[t0.0].value.data;
+            let z1d = &self.nodes[z[1].0].value.data;
+            for (r, (orow, zrow)) in o1.data.chunks_mut(c).zip(z1d.chunks(c)).enumerate() {
+                let p = r / group;
+                let trow = &t0d[p * c..(p + 1) * c];
+                for ((o, &z1e), &t) in orow.iter_mut().zip(zrow).zip(trow) {
+                    *o = (1.0 - t * t) * z1e;
                 }
-                vec![(a.0, ga)]
-            })),
-        )
+            }
+        }
+        let o1 = self.push(o1, Op::TanhJetO1 { t0: t0.0, z1: z[1].0, group });
+
+        let mut o2 = self.alloc(&[b, c]);
+        {
+            let t0d = &self.nodes[t0.0].value.data;
+            let z1d = &self.nodes[z[1].0].value.data;
+            let z2d = &self.nodes[z[2].0].value.data;
+            for (r, (orow, (zrow1, zrow2))) in o2
+                .data
+                .chunks_mut(c)
+                .zip(z1d.chunks(c).zip(z2d.chunks(c)))
+                .enumerate()
+            {
+                let p = r / group;
+                let trow = &t0d[p * c..(p + 1) * c];
+                for (((o, &z1e), &z2e), &t) in orow.iter_mut().zip(zrow1).zip(zrow2).zip(trow) {
+                    let f1 = 1.0 - t * t;
+                    let f2 = -2.0 * t * f1;
+                    *o = f2 * z1e * z1e + f1 * z2e;
+                }
+            }
+        }
+        let o2 = self.push(o2, Op::TanhJetO2 { t0: t0.0, z1: z[1].0, z2: z[2].0, group });
+
+        [t0, o1, o2]
     }
 
     /// Reverse pass from a scalar root; returns per-node gradients.
-    pub fn backward(&self, root: Var) -> Vec<Option<Tensor>> {
+    ///
+    /// The returned tensors come from the tape's pool — pass them back via
+    /// [`Tape::reclaim`] in hot loops to keep the step allocation-free.
+    pub fn backward(&mut self, root: Var) -> Vec<Option<Tensor>> {
         assert_eq!(self.value(root).numel(), 1, "backward root must be scalar");
         let mut grads: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
-        grads[root.0] = Some(Tensor::from_vec(&self.value(root).shape.clone(), vec![1.0]));
+        let shape = self.value(root).shape.clone();
+        let mut seed = Tensor { shape, data: self.pool.take_zeroed(1) };
+        seed.data[0] = 1.0;
+        grads[root.0] = Some(seed);
         for i in (0..=root.0).rev() {
-            let Some(g) = grads[i].clone() else { continue };
-            if let Some(back) = &self.nodes[i].backward {
-                for (parent, contribution) in back(&g, self) {
-                    match &mut grads[parent] {
-                        Some(acc) => *acc = acc.add(&contribution),
-                        slot => *slot = Some(contribution),
+            let Some(g) = grads[i].take() else { continue };
+            Self::backprop(&self.nodes, &mut self.pool, i, &g, &mut grads);
+            grads[i] = Some(g);
+        }
+        grads
+    }
+
+    /// Accumulate node `i`'s parent gradients given its own gradient `g`.
+    fn backprop(
+        nodes: &[Node],
+        pool: &mut BufferPool,
+        i: usize,
+        g: &Tensor,
+        grads: &mut [Option<Tensor>],
+    ) {
+        match nodes[i].op {
+            Op::Leaf => {}
+            Op::Matmul { a, b } => {
+                let (m, k) = (nodes[a].value.shape[0], nodes[a].value.shape[1]);
+                let n = nodes[b].value.shape[1];
+                {
+                    let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                    matmul_nt_acc(&g.data, &nodes[b].value.data, &mut ga.data, m, n, k);
+                }
+                {
+                    let gb = slot(grads, b, &nodes[b].value.shape, pool);
+                    matmul_tn_acc(&nodes[a].value.data, &g.data, &mut gb.data, m, k, n);
+                }
+            }
+            Op::AddRow { a, bias } => {
+                {
+                    let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                    for (o, &x) in ga.data.iter_mut().zip(&g.data) {
+                        *o += x;
+                    }
+                }
+                {
+                    let ncols = nodes[bias].value.numel();
+                    let gb = slot(grads, bias, &nodes[bias].value.shape, pool);
+                    for row in g.data.chunks(ncols) {
+                        for (o, &x) in gb.data.iter_mut().zip(row) {
+                            *o += x;
+                        }
+                    }
+                }
+            }
+            Op::Add { a, b } => {
+                {
+                    let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                    for (o, &x) in ga.data.iter_mut().zip(&g.data) {
+                        *o += x;
+                    }
+                }
+                {
+                    let gb = slot(grads, b, &nodes[b].value.shape, pool);
+                    for (o, &x) in gb.data.iter_mut().zip(&g.data) {
+                        *o += x;
+                    }
+                }
+            }
+            Op::Sub { a, b } => {
+                {
+                    let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                    for (o, &x) in ga.data.iter_mut().zip(&g.data) {
+                        *o += x;
+                    }
+                }
+                {
+                    let gb = slot(grads, b, &nodes[b].value.shape, pool);
+                    for (o, &x) in gb.data.iter_mut().zip(&g.data) {
+                        *o -= x;
+                    }
+                }
+            }
+            Op::Mul { a, b } => {
+                {
+                    let bv = &nodes[b].value.data;
+                    let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                    for ((o, &x), &y) in ga.data.iter_mut().zip(&g.data).zip(bv) {
+                        *o += x * y;
+                    }
+                }
+                {
+                    let av = &nodes[a].value.data;
+                    let gb = slot(grads, b, &nodes[b].value.shape, pool);
+                    for ((o, &x), &y) in gb.data.iter_mut().zip(&g.data).zip(av) {
+                        *o += x * y;
+                    }
+                }
+            }
+            Op::Scale { a, alpha } => {
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for (o, &x) in ga.data.iter_mut().zip(&g.data) {
+                    *o += alpha * x;
+                }
+            }
+            Op::Tanh { a } => {
+                // uses the saved output: d tanh = 1 - tanh²
+                let tv = &nodes[i].value.data;
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for ((o, &x), &t) in ga.data.iter_mut().zip(&g.data).zip(tv) {
+                    *o += x * (1.0 - t * t);
+                }
+            }
+            Op::Sin { a } => {
+                let av = &nodes[a].value.data;
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for ((o, &x), &y) in ga.data.iter_mut().zip(&g.data).zip(av) {
+                    *o += x * y.cos();
+                }
+            }
+            Op::MeanAll { a } => {
+                let gv = g.data[0] / nodes[a].value.numel() as f32;
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for o in ga.data.iter_mut() {
+                    *o += gv;
+                }
+            }
+            Op::SumAll { a } => {
+                let gv = g.data[0];
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for o in ga.data.iter_mut() {
+                    *o += gv;
+                }
+            }
+            Op::GroupMean { a, group } => {
+                let inv = 1.0 / group as f32;
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for (idx, o) in ga.data.iter_mut().enumerate() {
+                    *o += g.data[idx / group] * inv;
+                }
+            }
+            Op::BroadcastRows { a, group } => {
+                let c = nodes[a].value.shape[1];
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for (r, grow) in g.data.chunks(c).enumerate() {
+                    let p = r / group;
+                    for (o, &x) in ga.data[p * c..(p + 1) * c].iter_mut().zip(grow) {
+                        *o += x;
+                    }
+                }
+            }
+            Op::TileRows { a } => {
+                let len = nodes[a].value.numel();
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for block in g.data.chunks(len) {
+                    for (o, &x) in ga.data.iter_mut().zip(block) {
+                        *o += x;
+                    }
+                }
+            }
+            Op::TanhJetT0 { z0 } => {
+                let tv = &nodes[i].value.data;
+                let gz0 = slot(grads, z0, &nodes[z0].value.shape, pool);
+                for ((o, &x), &t) in gz0.data.iter_mut().zip(&g.data).zip(tv) {
+                    *o += x * (1.0 - t * t);
+                }
+            }
+            Op::TanhJetO1 { t0, z1, group } => {
+                let c = nodes[t0].value.shape[1];
+                let t0d = &nodes[t0].value.data;
+                let z1d = &nodes[z1].value.data;
+                {
+                    // d/dz1 = bc(f1) ⊙ g
+                    let gz1 = slot(grads, z1, &nodes[z1].value.shape, pool);
+                    for (r, (orow, grow)) in
+                        gz1.data.chunks_mut(c).zip(g.data.chunks(c)).enumerate()
+                    {
+                        let p = r / group;
+                        let trow = &t0d[p * c..(p + 1) * c];
+                        for ((o, &gv), &t) in orow.iter_mut().zip(grow).zip(trow) {
+                            *o += gv * (1.0 - t * t);
+                        }
+                    }
+                }
+                {
+                    // d/dt0 = -2 t0 ⊙ group-sum(g ⊙ z1)
+                    let gt0 = slot(grads, t0, &nodes[t0].value.shape, pool);
+                    for (r, grow) in g.data.chunks(c).enumerate() {
+                        let p = r / group;
+                        let trow = &t0d[p * c..(p + 1) * c];
+                        let zrow = &z1d[r * c..(r + 1) * c];
+                        let orow = &mut gt0.data[p * c..(p + 1) * c];
+                        for (((o, &gv), &z), &t) in orow.iter_mut().zip(grow).zip(zrow).zip(trow)
+                        {
+                            *o += gv * z * (-2.0 * t);
+                        }
+                    }
+                }
+            }
+            Op::TanhJetO2 { t0, z1, z2, group } => {
+                let c = nodes[t0].value.shape[1];
+                let t0d = &nodes[t0].value.data;
+                let z1d = &nodes[z1].value.data;
+                let z2d = &nodes[z2].value.data;
+                {
+                    // d/dz1 = 2 bc(f2) ⊙ z1 ⊙ g
+                    let gz1 = slot(grads, z1, &nodes[z1].value.shape, pool);
+                    for (r, (orow, grow)) in
+                        gz1.data.chunks_mut(c).zip(g.data.chunks(c)).enumerate()
+                    {
+                        let p = r / group;
+                        let trow = &t0d[p * c..(p + 1) * c];
+                        let zrow = &z1d[r * c..(r + 1) * c];
+                        for (((o, &gv), &z), &t) in orow.iter_mut().zip(grow).zip(zrow).zip(trow)
+                        {
+                            let f2 = -2.0 * t * (1.0 - t * t);
+                            *o += gv * 2.0 * f2 * z;
+                        }
+                    }
+                }
+                {
+                    // d/dz2 = bc(f1) ⊙ g
+                    let gz2 = slot(grads, z2, &nodes[z2].value.shape, pool);
+                    for (r, (orow, grow)) in
+                        gz2.data.chunks_mut(c).zip(g.data.chunks(c)).enumerate()
+                    {
+                        let p = r / group;
+                        let trow = &t0d[p * c..(p + 1) * c];
+                        for ((o, &gv), &t) in orow.iter_mut().zip(grow).zip(trow) {
+                            *o += gv * (1.0 - t * t);
+                        }
+                    }
+                }
+                {
+                    // d/dt0 = (6 t0² − 2) ⊙ gsum(g ⊙ z1²) − 2 t0 ⊙ gsum(g ⊙ z2)
+                    let gt0 = slot(grads, t0, &nodes[t0].value.shape, pool);
+                    for (r, grow) in g.data.chunks(c).enumerate() {
+                        let p = r / group;
+                        let trow = &t0d[p * c..(p + 1) * c];
+                        let zrow1 = &z1d[r * c..(r + 1) * c];
+                        let zrow2 = &z2d[r * c..(r + 1) * c];
+                        let orow = &mut gt0.data[p * c..(p + 1) * c];
+                        for ((((o, &gv), &z1e), &z2e), &t) in
+                            orow.iter_mut().zip(grow).zip(zrow1).zip(zrow2).zip(trow)
+                        {
+                            *o += gv * ((6.0 * t * t - 2.0) * z1e * z1e - 2.0 * t * z2e);
+                        }
                     }
                 }
             }
         }
-        grads
     }
 }
 
@@ -318,5 +750,157 @@ mod tests {
         let g = &grads[x.0].as_ref().unwrap().data;
         assert!((g[0] - (2.0 * 3.0 + 1.0) / 2.0).abs() < 1e-6);
         assert!((g[1] - (2.0 * -1.0 + 1.0) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sum_all_forward_and_backward() {
+        let mut tape = Tape::new();
+        let x = tape.input(Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]));
+        let sq = tape.square(x);
+        let loss = tape.sum_all(sq);
+        assert_eq!(tape.value(loss).data[0], 30.0);
+        let grads = tape.backward(loss);
+        let g = &grads[x.0].as_ref().unwrap().data;
+        assert_eq!(g, &vec![2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn broadcast_rows_forward_and_backward() {
+        let mut tape = Tape::new();
+        let a = tape.input(Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]));
+        let bc = tape.broadcast_rows(a, 3);
+        assert_eq!(tape.value(bc).shape, vec![6, 2]);
+        assert_eq!(
+            tape.value(bc).data,
+            vec![1., 2., 1., 2., 1., 2., 3., 4., 3., 4., 3., 4.]
+        );
+        let loss = tape.sum_all(bc);
+        let grads = tape.backward(loss);
+        // each source element feeds 3 copies of itself into the sum
+        assert_eq!(grads[a.0].as_ref().unwrap().data, vec![3.0; 4]);
+    }
+
+    #[test]
+    fn tile_rows_forward_and_backward() {
+        let mut tape = Tape::new();
+        let a = tape.input(Tensor::from_vec(&[2, 1], vec![5., 7.]));
+        let tiled = tape.tile_rows(a, 3);
+        assert_eq!(tape.value(tiled).shape, vec![6, 1]);
+        assert_eq!(tape.value(tiled).data, vec![5., 7., 5., 7., 5., 7.]);
+        let sq = tape.square(tiled);
+        let loss = tape.sum_all(sq);
+        let grads = tape.backward(loss);
+        // d/da sum of 3 copies of a^2 = 3 * 2a
+        let g = &grads[a.0].as_ref().unwrap().data;
+        assert!((g[0] - 30.0).abs() < 1e-5 && (g[1] - 42.0).abs() < 1e-5, "{g:?}");
+    }
+
+    /// The fused tanh jet must match the unfused tape composition, both
+    /// forward values and gradients w.r.t. all three input streams.
+    #[test]
+    fn fused_tanh_jet_matches_unfused_composition() {
+        let n = 2;
+        let group = 3;
+        let c = 2;
+        let b = n * group;
+        let z0_data: Vec<f32> = (0..n * c).map(|i| 0.3 * i as f32 - 0.4).collect();
+        let z1_data: Vec<f32> = (0..b * c).map(|i| 0.17 * i as f32 - 0.9).collect();
+        let z2_data: Vec<f32> = (0..b * c).map(|i| -0.05 * i as f32 + 0.3).collect();
+
+        // fused
+        let mut tape = Tape::new();
+        let z0 = tape.input(Tensor::from_vec(&[n, c], z0_data.clone()));
+        let z1 = tape.input(Tensor::from_vec(&[b, c], z1_data.clone()));
+        let z2 = tape.input(Tensor::from_vec(&[b, c], z2_data.clone()));
+        let [t0, o1, o2] = tape.tanh_jet2([z0, z1, z2], group);
+        let t0bc = tape.broadcast_rows(t0, group);
+        let s1 = tape.add(o1, o2);
+        let s2 = tape.add(s1, t0bc);
+        let sq = tape.square(s2);
+        let loss = tape.mean_all(sq);
+        let fused_val = (
+            tape.value(t0).data.clone(),
+            tape.value(o1).data.clone(),
+            tape.value(o2).data.clone(),
+        );
+        let grads = tape.backward(loss);
+        let fused_g: Vec<Vec<f32>> = [z0, z1, z2]
+            .iter()
+            .map(|v| grads[v.0].as_ref().unwrap().data.clone())
+            .collect();
+
+        // unfused: same math with generic ops and explicit broadcasts
+        let mut ut = Tape::new();
+        let uz0 = ut.input(Tensor::from_vec(&[n, c], z0_data.clone()));
+        let uz1 = ut.input(Tensor::from_vec(&[b, c], z1_data.clone()));
+        let uz2 = ut.input(Tensor::from_vec(&[b, c], z2_data.clone()));
+        let ut0 = ut.tanh(uz0);
+        let ut0bc = ut.broadcast_rows(ut0, group);
+        let t0sq = ut.mul(ut0bc, ut0bc);
+        let ones = ut.constant(Tensor::from_vec(&[b, c], vec![1.0; b * c]));
+        let f1 = ut.sub(ones, t0sq);
+        let f2h = ut.mul(ut0bc, f1);
+        let f2 = ut.scale(f2h, -2.0);
+        let uo1 = ut.mul(f1, uz1);
+        let z1sq = ut.mul(uz1, uz1);
+        let ta = ut.mul(f2, z1sq);
+        let tb = ut.mul(f1, uz2);
+        let uo2 = ut.add(ta, tb);
+        let us1 = ut.add(uo1, uo2);
+        let us2 = ut.add(us1, ut0bc);
+        let usq = ut.square(us2);
+        let uloss = ut.mean_all(usq);
+        let unfused_val = (
+            ut.value(ut0).data.clone(),
+            ut.value(uo1).data.clone(),
+            ut.value(uo2).data.clone(),
+        );
+        let ugrads = ut.backward(uloss);
+        let unfused_g: Vec<Vec<f32>> = [uz0, uz1, uz2]
+            .iter()
+            .map(|v| ugrads[v.0].as_ref().unwrap().data.clone())
+            .collect();
+
+        for (a, bvals) in [
+            (&fused_val.0, &unfused_val.0),
+            (&fused_val.1, &unfused_val.1),
+            (&fused_val.2, &unfused_val.2),
+        ] {
+            for (x, y) in a.iter().zip(bvals) {
+                assert!((x - y).abs() < 1e-5, "forward: {x} vs {y}");
+            }
+        }
+        for (gf, gu) in fused_g.iter().zip(&unfused_g) {
+            for (x, y) in gf.iter().zip(gu) {
+                assert!((x - y).abs() < 1e-4, "grad: {x} vs {y}");
+            }
+        }
+    }
+
+    /// Building, differentiating, resetting and rebuilding on one tape
+    /// must give identical results (workspace reuse is value-transparent).
+    #[test]
+    fn reset_and_rebuild_is_deterministic() {
+        let run = |tape: &mut Tape| -> (f32, Vec<f32>) {
+            let x = tape.leaf_from_slice(&[3, 1], &[0.4, -0.2, 0.9]);
+            let s = tape.sin(x);
+            let m = tape.mul(s, x);
+            let q = tape.square(m);
+            let loss = tape.mean_all(q);
+            let loss_val = tape.value(loss).data[0];
+            let grads = tape.backward(loss);
+            let g = grads[x.0].as_ref().unwrap().data.clone();
+            tape.reclaim(grads);
+            (loss_val, g)
+        };
+        let mut tape = Tape::new();
+        let (l1, g1) = run(&mut tape);
+        tape.reset();
+        let (l2, g2) = run(&mut tape);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1.len(), g2.len());
+        for (a, b) in g1.iter().zip(&g2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

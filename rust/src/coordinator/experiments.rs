@@ -9,45 +9,10 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use super::sweep::{mean_std, run_sweep, SweepResult};
-use super::trainer::TrainConfig;
+use super::spec::{mean_std, ExperimentRow, TrainConfig};
+use super::sweep::{run_sweep, SweepResult};
 use crate::estimators::Estimator;
 use crate::runtime::Manifest;
-
-/// One aggregated table cell-group (a method at a dimension).
-#[derive(Clone, Debug)]
-pub struct ExperimentRow {
-    pub table: &'static str,
-    pub method: String,
-    pub family: String,
-    pub d: usize,
-    pub v: usize,
-    pub it_per_sec: f64,
-    pub rss_mb: f64,
-    pub err_mean: f64,
-    pub err_std: f64,
-    pub final_loss: f64,
-    pub seeds: usize,
-}
-
-impl ExperimentRow {
-    pub fn to_json(&self) -> crate::util::json::Value {
-        use crate::util::json::{num, obj, s};
-        obj(vec![
-            ("table", s(self.table)),
-            ("method", s(self.method.clone())),
-            ("family", s(self.family.clone())),
-            ("d", num(self.d as f64)),
-            ("v", num(self.v as f64)),
-            ("it_per_sec", num(self.it_per_sec)),
-            ("rss_mb", num(self.rss_mb)),
-            ("err_mean", num(self.err_mean)),
-            ("err_std", num(self.err_std)),
-            ("final_loss", num(self.final_loss)),
-            ("seeds", num(self.seeds as f64)),
-        ])
-    }
-}
 
 fn aggregate(
     table: &'static str,

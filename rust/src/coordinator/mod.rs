@@ -2,24 +2,36 @@
 //!
 //! This is where the repository's "system" lives: residual-point
 //! sampling, probe generation (the estimator identity from Section
-//! 3.3.1), the device-resident Adam stepping loop, the linear LR
-//! schedule, metrics, evaluation against the 20k-point test pool, and the
-//! multi-seed / multi-method sweep runner that regenerates every table in
-//! the paper.
+//! 3.3.1), the Adam stepping loops, the linear LR schedule, metrics,
+//! evaluation against the 20k-point test pool, and the multi-seed /
+//! multi-method sweep runner that regenerates every table in the paper.
+//!
+//! Two backends (DESIGN.md §4): the always-available native engine
+//! (`NativeTrainer`, pure Rust) and the compiled-artifact PJRT path
+//! (`Trainer` / sweeps / experiment drivers), which needs the real XLA
+//! runtime and is gated behind `--features xla`.
 
+#[cfg(feature = "xla")]
 mod experiments;
 mod metrics;
 mod native;
 mod schedule;
+mod spec;
+#[cfg(feature = "xla")]
 mod sweep;
+#[cfg(feature = "xla")]
 mod trainer;
 
+#[cfg(feature = "xla")]
 pub use experiments::{
     experiment_biharmonic, experiment_bias, experiment_gpinn, experiment_sine_gordon,
-    experiment_v_sweep, ExperimentOpts, ExperimentRow,
+    experiment_v_sweep, ExperimentOpts,
 };
 pub use metrics::{rss_mb, MetricsLogger, StepRecord};
 pub use native::NativeTrainer;
 pub use schedule::LinearDecay;
-pub use sweep::{mean_std, run_one, run_sweep, SweepResult};
-pub use trainer::{problem_for, EvalPool, RunSummary, TrainConfig, Trainer};
+pub use spec::{mean_std, problem_for, EvalPool, ExperimentRow, RunSummary, TrainConfig};
+#[cfg(feature = "xla")]
+pub use sweep::{run_one, run_sweep, SweepResult};
+#[cfg(feature = "xla")]
+pub use trainer::Trainer;

@@ -6,19 +6,24 @@
 //! artifacts at all, (b) an independent implementation cross-validating
 //! the compiled path (see `examples/native_backend.rs`), (c) the
 //! substrate for the AD-mode ablation benches.
+//!
+//! The step is allocation-free at steady state: the residual batch and
+//! probe matrix are filled into reusable host buffers, the parameter /
+//! Adam-moment vectors persist, and `NativeEngine` owns per-worker tape
+//! workspaces that recycle every intermediate (DESIGN.md §7).
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::estimators::ProbeGenerator;
-use crate::nn::{adam_step, hte_residual_loss_and_grad, Mlp, NativeBatch};
+use crate::nn::{adam_step, Mlp, NativeBatch, NativeEngine};
 use crate::pde::{DomainSampler, PdeProblem};
 use crate::rng::{Normal, Xoshiro256pp};
 
 use super::metrics::{rss_mb, MetricsLogger, StepRecord};
 use super::schedule::LinearDecay;
-use super::trainer::{problem_for, EvalPool, RunSummary, TrainConfig};
+use super::spec::{problem_for, EvalPool, RunSummary, TrainConfig};
 
 pub struct NativeTrainer {
     pub mlp: Mlp,
@@ -26,19 +31,31 @@ pub struct NativeTrainer {
     sampler: DomainSampler,
     probes: ProbeGenerator,
     schedule: LinearDecay,
+    engine: NativeEngine,
     pub coeff: Vec<f32>,
     pub config: TrainConfig,
     pub step_idx: usize,
     pub last_loss: f32,
-    // Adam state
+    // Adam state (flat, packed order) + persistent packed parameters
+    flat: Vec<f32>,
     m: Vec<f32>,
     v: Vec<f32>,
     t: f32,
     batch_n: usize,
+    // reusable host staging buffers
+    xs_host: Vec<f32>,
+    probe_host: Vec<f32>,
+    grad: Vec<f32>,
 }
 
 impl NativeTrainer {
     pub fn new(config: TrainConfig, batch_n: usize) -> Result<Self> {
+        Self::with_threads(config, batch_n, crate::nn::default_threads())
+    }
+
+    /// Like [`NativeTrainer::new`] with an explicit worker-thread count.
+    /// Results are bitwise identical for any `threads` (ordered reduction).
+    pub fn with_threads(config: TrainConfig, batch_n: usize, threads: usize) -> Result<Self> {
         if config.method != "probe" || config.family == "bihar" {
             bail!(
                 "native backend supports the Sine-Gordon probe methods (got {}/{})",
@@ -54,12 +71,18 @@ impl NativeTrainer {
         let probes = ProbeGenerator::new(config.estimator, config.d, config.v, root.fork(3));
         let mlp = Mlp::init(config.d, &mut root.fork(6));
         let n_params = mlp.n_params();
+        let flat = mlp.pack();
         Ok(Self {
+            xs_host: vec![0.0; batch_n * config.d],
+            probe_host: vec![0.0; config.v * config.d],
+            grad: Vec::with_capacity(n_params),
+            flat,
             mlp,
             problem,
             sampler,
             probes,
             schedule: LinearDecay::new(config.lr0, config.epochs.max(1)),
+            engine: NativeEngine::new(threads),
             coeff,
             config,
             step_idx: 0,
@@ -71,21 +94,28 @@ impl NativeTrainer {
         })
     }
 
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+
     pub fn step(&mut self) -> Result<()> {
         let lr = self.schedule.at(self.step_idx);
-        let xs = self.sampler.batch(self.batch_n);
-        let probes = self.probes.next();
+        self.sampler.fill_batch(&mut self.xs_host);
+        self.probes.fill(&mut self.probe_host);
         let batch = NativeBatch {
-            xs: &xs,
-            probes: &probes,
+            xs: &self.xs_host,
+            probes: &self.probe_host,
             coeff: &self.coeff,
             n: self.batch_n,
             v: self.config.v,
         };
-        let (loss, grad) = hte_residual_loss_and_grad(&self.mlp, self.problem.as_ref(), &batch);
-        let mut flat = self.mlp.pack();
-        adam_step(&mut flat, &mut self.m, &mut self.v, &mut self.t, &grad, lr);
-        self.mlp.unpack_into(&flat);
+        let loss =
+            self.engine.loss_and_grad(&self.mlp, self.problem.as_ref(), &batch, &mut self.grad);
+        // re-pack from `mlp` (not the last step's flat) so external edits
+        // to the public field — warm starts, perturbations — are honored
+        self.mlp.pack_into(&mut self.flat);
+        adam_step(&mut self.flat, &mut self.m, &mut self.v, &mut self.t, &self.grad, lr);
+        self.mlp.unpack_into(&self.flat);
         self.last_loss = loss;
         self.step_idx += 1;
         Ok(())
@@ -165,6 +195,20 @@ mod tests {
         let after = trainer.evaluate(&pool);
         assert!(after < 0.7 * before, "{before} -> {after}");
         assert!(trainer.last_loss.is_finite());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_training_bitwise() {
+        let mut a = NativeTrainer::with_threads(config(5, 20), 9, 1).unwrap();
+        let mut b = NativeTrainer::with_threads(config(5, 20), 9, 4).unwrap();
+        for _ in 0..20 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        assert_eq!(a.last_loss.to_bits(), b.last_loss.to_bits());
+        for (x, y) in a.flat.iter().zip(&b.flat) {
+            assert_eq!(x.to_bits(), y.to_bits(), "parameters diverged across thread counts");
+        }
     }
 
     #[test]

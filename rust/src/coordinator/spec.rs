@@ -1,0 +1,204 @@
+//! Backend-agnostic run specification: configs, summaries, eval pools.
+//!
+//! Shared by the native trainer (default build) and the compiled-artifact
+//! `Trainer` (`--features xla`) — keeping these types out of
+//! `trainer.rs` lets the artifact backend be feature-gated without
+//! taking the native path down with it.
+
+use anyhow::{bail, Result};
+
+use crate::estimators::Estimator;
+use crate::pde::{
+    Biharmonic3Body, Domain, DomainSampler, PdeProblem, SineGordon2Body, SineGordon3Body,
+};
+use crate::rng::Xoshiro256pp;
+
+/// Everything needed to reproduce one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub family: String,
+    /// Artifact method: probe | unbiased | full | gpinn_probe | gpinn_full
+    /// | probe4 | full4.
+    pub method: String,
+    /// Probe distribution for probe-driven methods (Section 3.3.1).
+    pub estimator: Estimator,
+    pub d: usize,
+    /// Probe batch V (must match an artifact; 0 for full methods).
+    pub v: usize,
+    pub epochs: usize,
+    pub lr0: f32,
+    pub seed: u64,
+    /// gPINN regularization weight (ignored unless method is gpinn_*).
+    pub lambda_g: f32,
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{num, obj, s, Value};
+        obj(vec![
+            ("family", s(self.family.clone())),
+            ("method", s(self.method.clone())),
+            ("estimator", s(self.estimator.name())),
+            ("d", num(self.d as f64)),
+            ("v", num(self.v as f64)),
+            ("epochs", num(self.epochs as f64)),
+            ("lr0", num(self.lr0 as f64)),
+            ("seed", num(self.seed as f64)),
+            ("lambda_g", num(self.lambda_g as f64)),
+            ("log_every", Value::Num(self.log_every.min(1 << 52) as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::json::Value) -> Result<Self> {
+        Ok(TrainConfig {
+            family: v.get("family")?.as_str()?.to_string(),
+            method: v.get("method")?.as_str()?.to_string(),
+            estimator: v.get("estimator")?.as_str()?.parse()?,
+            d: v.get("d")?.as_usize()?,
+            v: v.get("v")?.as_usize()?,
+            epochs: v.get("epochs")?.as_usize()?,
+            lr0: v.get("lr0")?.as_f64()? as f32,
+            seed: v.get("seed")?.as_f64()? as u64,
+            lambda_g: v.get("lambda_g")?.as_f64()? as f32,
+            log_every: v.get("log_every")?.as_usize()?,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}-d{}-v{}-s{}",
+            self.family,
+            self.method,
+            self.estimator.name(),
+            self.d,
+            self.v,
+            self.seed
+        )
+    }
+}
+
+/// One aggregated table cell-group (a method at a dimension).
+#[derive(Clone, Debug)]
+pub struct ExperimentRow {
+    pub table: &'static str,
+    pub method: String,
+    pub family: String,
+    pub d: usize,
+    pub v: usize,
+    pub it_per_sec: f64,
+    pub rss_mb: f64,
+    pub err_mean: f64,
+    pub err_std: f64,
+    pub final_loss: f64,
+    pub seeds: usize,
+}
+
+impl ExperimentRow {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{num, obj, s};
+        obj(vec![
+            ("table", s(self.table)),
+            ("method", s(self.method.clone())),
+            ("family", s(self.family.clone())),
+            ("d", num(self.d as f64)),
+            ("v", num(self.v as f64)),
+            ("it_per_sec", num(self.it_per_sec)),
+            ("rss_mb", num(self.rss_mb)),
+            ("err_mean", num(self.err_mean)),
+            ("err_std", num(self.err_std)),
+            ("final_loss", num(self.final_loss)),
+            ("seeds", num(self.seeds as f64)),
+        ])
+    }
+}
+
+/// Summary of a finished run (one row-cell of a paper table).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub label: String,
+    pub steps: usize,
+    pub final_loss: f32,
+    pub rel_l2: Option<f64>,
+    pub it_per_sec: f64,
+    pub rss_mb: f64,
+    pub wall_s: f64,
+}
+
+/// Fixed test pool for relative-L2 evaluation (paper: 20k points).
+pub struct EvalPool {
+    pub xs: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl EvalPool {
+    pub fn generate(domain: Domain, d: usize, n: usize, seed: u64) -> Self {
+        let mut sampler = DomainSampler::new(domain, d, Xoshiro256pp::new(seed ^ 0xEEAA));
+        Self { xs: sampler.batch(n), n, d }
+    }
+}
+
+pub fn problem_for(family: &str, d: usize) -> Result<Box<dyn PdeProblem>> {
+    Ok(match family {
+        "sg2" => Box::new(SineGordon2Body::new(d)),
+        "sg3" => Box::new(SineGordon3Body::new(d)),
+        "bihar" => Box::new(Biharmonic3Body::new(d)),
+        other => bail!("unknown family {other}"),
+    })
+}
+
+/// Aggregate mean / std over a slice of per-seed values.
+pub fn mean_std(values: &[f64]) -> (f64, f64) {
+    if values.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!(m1, 5.0);
+        assert_eq!(s1, 0.0);
+        assert!(mean_std(&[]).0.is_nan());
+    }
+
+    #[test]
+    fn train_config_json_roundtrip() {
+        let cfg = TrainConfig {
+            family: "sg2".into(),
+            method: "probe".into(),
+            estimator: Estimator::HteRademacher,
+            d: 10,
+            v: 16,
+            epochs: 100,
+            lr0: 1e-3,
+            seed: 7,
+            lambda_g: 10.0,
+            log_every: 50,
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.label(), cfg.label());
+        assert_eq!(back.epochs, cfg.epochs);
+        assert_eq!(back.log_every, cfg.log_every);
+    }
+
+    #[test]
+    fn problem_for_known_families() {
+        assert!(problem_for("sg2", 4).is_ok());
+        assert!(problem_for("sg3", 4).is_ok());
+        assert!(problem_for("bihar", 4).is_ok());
+        assert!(problem_for("nope", 4).is_err());
+    }
+}

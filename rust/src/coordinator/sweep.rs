@@ -11,7 +11,9 @@ use std::sync::mpsc;
 use anyhow::Result;
 
 use super::metrics::MetricsLogger;
-use super::trainer::{problem_for, EvalPool, RunSummary, TrainConfig, Trainer};
+use super::spec::{problem_for, EvalPool, RunSummary, TrainConfig};
+use super::trainer::Trainer;
+use crate::pde::PdeProblem;
 use crate::runtime::Engine;
 
 #[derive(Clone, Debug)]
@@ -101,29 +103,3 @@ pub fn run_sweep(
     Ok(slots.into_iter().map(|s| s.expect("missing sweep slot")).collect())
 }
 
-/// Aggregate mean / std over a slice of per-seed values.
-pub fn mean_std(values: &[f64]) -> (f64, f64) {
-    if values.is_empty() {
-        return (f64::NAN, f64::NAN);
-    }
-    let n = values.len() as f64;
-    let mean = values.iter().sum::<f64>() / n;
-    let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
-    (mean, var.sqrt())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn mean_std_basics() {
-        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
-        assert!((m - 2.0).abs() < 1e-12);
-        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
-        let (m1, s1) = mean_std(&[5.0]);
-        assert_eq!(m1, 5.0);
-        assert_eq!(s1, 0.0);
-        assert!(mean_std(&[]).0.is_nan());
-    }
-}

@@ -1,4 +1,5 @@
-//! The device-resident training loop.
+//! The device-resident training loop (compiled-artifact backend;
+//! `--features xla`).
 //!
 //! Steady state is a single `execute_b` per Adam step: the packed
 //! optimizer state (params | m | v | t | loss) lives in a PJRT buffer that
@@ -12,114 +13,13 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::estimators::{Estimator, ProbeGenerator};
-use crate::pde::{
-    Biharmonic3Body, Domain, DomainSampler, PdeProblem, SineGordon2Body, SineGordon3Body,
-};
+use crate::pde::{DomainSampler, PdeProblem};
 use crate::rng::{Normal, Xoshiro256pp};
 use crate::runtime::{Engine, Entry};
 
 use super::metrics::{rss_mb, MetricsLogger, StepRecord};
 use super::schedule::LinearDecay;
-
-/// Everything needed to reproduce one training run.
-#[derive(Clone, Debug)]
-pub struct TrainConfig {
-    pub family: String,
-    /// Artifact method: probe | unbiased | full | gpinn_probe | gpinn_full
-    /// | probe4 | full4.
-    pub method: String,
-    /// Probe distribution for probe-driven methods (Section 3.3.1).
-    pub estimator: Estimator,
-    pub d: usize,
-    /// Probe batch V (must match an artifact; 0 for full methods).
-    pub v: usize,
-    pub epochs: usize,
-    pub lr0: f32,
-    pub seed: u64,
-    /// gPINN regularization weight (ignored unless method is gpinn_*).
-    pub lambda_g: f32,
-    pub log_every: usize,
-}
-
-impl TrainConfig {
-    pub fn to_json(&self) -> crate::util::json::Value {
-        use crate::util::json::{num, obj, s, Value};
-        obj(vec![
-            ("family", s(self.family.clone())),
-            ("method", s(self.method.clone())),
-            ("estimator", s(self.estimator.name())),
-            ("d", num(self.d as f64)),
-            ("v", num(self.v as f64)),
-            ("epochs", num(self.epochs as f64)),
-            ("lr0", num(self.lr0 as f64)),
-            ("seed", num(self.seed as f64)),
-            ("lambda_g", num(self.lambda_g as f64)),
-            ("log_every", Value::Num(self.log_every.min(1 << 52) as f64)),
-        ])
-    }
-
-    pub fn from_json(v: &crate::util::json::Value) -> Result<Self> {
-        Ok(TrainConfig {
-            family: v.get("family")?.as_str()?.to_string(),
-            method: v.get("method")?.as_str()?.to_string(),
-            estimator: v.get("estimator")?.as_str()?.parse()?,
-            d: v.get("d")?.as_usize()?,
-            v: v.get("v")?.as_usize()?,
-            epochs: v.get("epochs")?.as_usize()?,
-            lr0: v.get("lr0")?.as_f64()? as f32,
-            seed: v.get("seed")?.as_f64()? as u64,
-            lambda_g: v.get("lambda_g")?.as_f64()? as f32,
-            log_every: v.get("log_every")?.as_usize()?,
-        })
-    }
-
-    pub fn label(&self) -> String {
-        format!(
-            "{}-{}-{}-d{}-v{}-s{}",
-            self.family,
-            self.method,
-            self.estimator.name(),
-            self.d,
-            self.v,
-            self.seed
-        )
-    }
-}
-
-/// Summary of a finished run (one row-cell of a paper table).
-#[derive(Clone, Debug)]
-pub struct RunSummary {
-    pub label: String,
-    pub steps: usize,
-    pub final_loss: f32,
-    pub rel_l2: Option<f64>,
-    pub it_per_sec: f64,
-    pub rss_mb: f64,
-    pub wall_s: f64,
-}
-
-/// Fixed test pool for relative-L2 evaluation (paper: 20k points).
-pub struct EvalPool {
-    pub xs: Vec<f32>,
-    pub n: usize,
-    pub d: usize,
-}
-
-impl EvalPool {
-    pub fn generate(domain: Domain, d: usize, n: usize, seed: u64) -> Self {
-        let mut sampler = DomainSampler::new(domain, d, Xoshiro256pp::new(seed ^ 0xEEAA));
-        Self { xs: sampler.batch(n), n, d }
-    }
-}
-
-pub fn problem_for(family: &str, d: usize) -> Result<Box<dyn PdeProblem>> {
-    Ok(match family {
-        "sg2" => Box::new(SineGordon2Body::new(d)),
-        "sg3" => Box::new(SineGordon3Body::new(d)),
-        "bihar" => Box::new(Biharmonic3Body::new(d)),
-        other => bail!("unknown family {other}"),
-    })
-}
+use super::spec::{problem_for, EvalPool, RunSummary, TrainConfig};
 
 pub struct Trainer<'e> {
     engine: &'e Engine,

@@ -14,7 +14,13 @@
 //!   state over PJRT), experiment sweeps, metrics, and every benchmark.
 //!
 //! Python never runs at train time: `make artifacts` is the only python
-//! step, and the `hte-pinn` binary is self-contained afterwards.
+//! step, and the `hte-pinn` binary is self-contained afterwards.  The
+//! artifact backend is feature-gated (`--features xla`); the default
+//! build ships the pure-Rust native engine only and compiles offline.
+
+// Index-heavy numeric kernels: the explicit loop shape is the point
+// (blocking, row slicing, broadcast-by-index), not an iterator lint miss.
+#![allow(clippy::needless_range_loop)]
 
 pub mod autodiff;
 pub mod checkpoint;

@@ -5,33 +5,42 @@
 //! hte-pinn info                           # list available artifacts
 //! hte-pinn train --config run.toml        # train (one run per seed)
 //! hte-pinn train --family sg2 --d 100 ... # train from flags
+//! hte-pinn train --backend native ...     # pure-Rust engine, no artifacts
 //! hte-pinn table --which 1 --epochs 2000  # regenerate a paper table
 //! hte-pinn memmodel                       # analytic A100-memory model
 //! ```
+//!
+//! The default build carries only the native backend; `table` and the
+//! artifact `train` backend need `--features xla` (DESIGN.md §4).
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+#[cfg(feature = "xla")]
 use hte_pinn::checkpoint;
 use hte_pinn::config::FileConfig;
+#[cfg(feature = "xla")]
+use hte_pinn::coordinator::Trainer;
 use hte_pinn::coordinator::{
-    experiment_biharmonic, experiment_bias, experiment_gpinn, experiment_sine_gordon,
-    experiment_v_sweep, problem_for, EvalPool, ExperimentOpts, MetricsLogger, TrainConfig, Trainer,
+    problem_for, EvalPool, MetricsLogger, NativeTrainer, TrainConfig,
 };
 use hte_pinn::estimators::Estimator;
 use hte_pinn::memmodel;
-use hte_pinn::runtime::{Engine, Manifest};
+use hte_pinn::pde::PdeProblem;
+#[cfg(feature = "xla")]
+use hte_pinn::runtime::Engine;
+use hte_pinn::runtime::Manifest;
 use hte_pinn::table;
 use hte_pinn::util::args::Args;
-use hte_pinn::util::json::Value;
 
 const USAGE: &str = "usage: hte-pinn <info|train|table|memmodel> [flags]
   info     --artifacts DIR
   train    --config FILE | [--family sg2 --method probe --estimator hte
            --d 100 --v 16 --epochs 2000 --lr0 1e-3 --seed 0 --lambda-g 10
-           --log-every 100] --artifacts DIR [--metrics FILE]
-           [--eval-points 20000] [--save FILE]
+           --log-every 100] [--backend native|artifact] [--batch 100]
+           --artifacts DIR [--metrics FILE] [--eval-points 20000]
+           [--save FILE]
   table    --which 1..5 [--epochs N --seeds K --threads T
            --eval-points M --lr0 LR --out DIR --artifacts DIR]
   memmodel [--batch 100 --dims 100,1000,10000 --v 16 --order 2]";
@@ -61,6 +70,9 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let metrics = args.get("metrics");
     let eval_points: usize = args.get_parse("eval-points", 20_000)?;
     let save = args.get("save");
+    let default_backend = if cfg!(feature = "xla") { "artifact" } else { "native" };
+    let backend = args.get_or("backend", default_backend);
+    let batch_n: usize = args.get_parse("batch", 100usize)?;
 
     let (artifact_dir, configs) = match config_path {
         Some(path) => {
@@ -85,37 +97,94 @@ fn cmd_train(mut args: Args) -> Result<()> {
     };
     args.finish()?;
 
-    let engine = Engine::load(&artifact_dir)?;
-    for cfg in configs {
-        println!("== {} ==", cfg.label());
-        let mut trainer = Trainer::new(&engine, cfg.clone())?;
-        let mut logger = match &metrics {
-            Some(path) => MetricsLogger::to_file(path)?,
-            None => MetricsLogger::null(),
-        };
-        let summary = trainer.run(&mut logger)?;
-        println!(
-            "steps={} final_loss={:.4e} speed={}",
-            summary.steps,
-            summary.final_loss,
-            table::fmt_speed(summary.it_per_sec)
-        );
-        if eval_points > 0 {
-            let problem = problem_for(&cfg.family, cfg.d)?;
-            let eval_entry = engine.find_entry("eval", &cfg.family, "eval", cfg.d, None)?;
-            let n = eval_points.div_ceil(eval_entry.n) * eval_entry.n;
-            let pool = EvalPool::generate(problem.domain(), cfg.d, n, cfg.seed);
-            println!("relative L2 = {:.4e}", trainer.evaluate(&pool)?);
+    match backend.as_str() {
+        "native" => {
+            if save.is_some() {
+                bail!("--save stores packed artifact state; not supported by --backend native");
+            }
+            for cfg in configs {
+                println!("== native-{} ==", cfg.label());
+                let mut trainer = NativeTrainer::new(cfg.clone(), batch_n)?;
+                let mut logger = match &metrics {
+                    Some(path) => MetricsLogger::to_file(path)?,
+                    None => MetricsLogger::null(),
+                };
+                let summary = trainer.run(&mut logger)?;
+                println!(
+                    "steps={} final_loss={:.4e} speed={} threads={}",
+                    summary.steps,
+                    summary.final_loss,
+                    table::fmt_speed(summary.it_per_sec),
+                    trainer.threads()
+                );
+                if eval_points > 0 {
+                    let problem = problem_for(&cfg.family, cfg.d)?;
+                    let pool = EvalPool::generate(problem.domain(), cfg.d, eval_points, cfg.seed);
+                    println!("relative L2 = {:.4e}", trainer.evaluate(&pool));
+                }
+            }
+            Ok(())
         }
-        if let Some(path) = &save {
-            checkpoint::save(path, &cfg, trainer.step_idx, &trainer.coeff, &trainer.state_host()?)?;
-            println!("checkpoint -> {path}");
+        "artifact" | "xla" => {
+            #[cfg(feature = "xla")]
+            {
+                let engine = Engine::load(&artifact_dir)?;
+                for cfg in configs {
+                    println!("== {} ==", cfg.label());
+                    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+                    let mut logger = match &metrics {
+                        Some(path) => MetricsLogger::to_file(path)?,
+                        None => MetricsLogger::null(),
+                    };
+                    let summary = trainer.run(&mut logger)?;
+                    println!(
+                        "steps={} final_loss={:.4e} speed={}",
+                        summary.steps,
+                        summary.final_loss,
+                        table::fmt_speed(summary.it_per_sec)
+                    );
+                    if eval_points > 0 {
+                        let problem = problem_for(&cfg.family, cfg.d)?;
+                        let eval_entry =
+                            engine.find_entry("eval", &cfg.family, "eval", cfg.d, None)?;
+                        let n = eval_points.div_ceil(eval_entry.n) * eval_entry.n;
+                        let pool = EvalPool::generate(problem.domain(), cfg.d, n, cfg.seed);
+                        println!("relative L2 = {:.4e}", trainer.evaluate(&pool)?);
+                    }
+                    if let Some(path) = &save {
+                        checkpoint::save(
+                            path,
+                            &cfg,
+                            trainer.step_idx,
+                            &trainer.coeff,
+                            &trainer.state_host()?,
+                        )?;
+                        println!("checkpoint -> {path}");
+                    }
+                }
+                Ok(())
+            }
+            #[cfg(not(feature = "xla"))]
+            {
+                let _ = (artifact_dir, configs);
+                bail!(
+                    "artifact backend requires building with --features xla \
+                     (or use --backend native)"
+                );
+            }
         }
+        other => bail!("unknown backend {other} (native|artifact)"),
     }
-    Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_table(mut args: Args) -> Result<()> {
+    use hte_pinn::coordinator::{
+        experiment_biharmonic, experiment_bias, experiment_gpinn, experiment_sine_gordon,
+        experiment_v_sweep, ExperimentOpts,
+    };
+    use hte_pinn::util::json::Value;
+
     let which: u8 = args.get_parse("which", 0u8)?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let epochs: usize = args.get_parse("epochs", 2000)?;
@@ -172,6 +241,11 @@ fn cmd_table(mut args: Args) -> Result<()> {
     std::fs::write(out.join(format!("table{which}_rows.json")), rows_json)?;
     println!("wrote {}/table{which}.md", out.display());
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_table(_args: Args) -> Result<()> {
+    bail!("`table` drives the compiled-artifact sweeps: rebuild with --features xla")
 }
 
 fn cmd_memmodel(mut args: Args) -> Result<()> {

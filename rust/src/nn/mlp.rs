@@ -62,12 +62,21 @@ impl Mlp {
 
     /// Flatten parameters in the artifact's packing order (w1,b1,...).
     pub fn pack(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.n_params());
-        for (w, b) in &self.layers {
-            out.extend_from_slice(&w.data);
-            out.extend_from_slice(&b.data);
-        }
+        let mut out = vec![0.0; self.n_params()];
+        self.pack_into(&mut out);
         out
+    }
+
+    /// `pack` into a caller-owned buffer (hot loops: no allocation).
+    pub fn pack_into(&self, out: &mut [f32]) {
+        let mut off = 0;
+        for (w, b) in &self.layers {
+            out[off..off + w.data.len()].copy_from_slice(&w.data);
+            off += w.data.len();
+            out[off..off + b.data.len()].copy_from_slice(&b.data);
+            off += b.data.len();
+        }
+        assert_eq!(off, out.len());
     }
 
     /// Inverse of `pack`.

@@ -14,5 +14,6 @@ mod native_loss;
 pub use jet::{jet_forward, JetStreams};
 pub use mlp::{Mlp, HIDDEN};
 pub use native_loss::{
-    adam_step, hte_residual_loss_and_grad, hte_residual_loss_reference, NativeBatch,
+    adam_step, default_threads, hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid,
+    hte_residual_loss_reference, NativeBatch, NativeEngine,
 };

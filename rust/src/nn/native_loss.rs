@@ -5,6 +5,19 @@
 //! the theta-gradient — the same schedule the compiled L2 artifact uses,
 //! so this module both validates the artifact path end-to-end and powers
 //! the no-artifact native trainer / ablation benches.
+//!
+//! Two implementations live here (DESIGN.md §7):
+//!
+//! * [`NativeEngine`] — the production path.  The probe-independent primal
+//!   stream runs once at `[n, ·]`; only the tangent/second jet streams run
+//!   at `[n·v, ·]`, connected by `broadcast_rows`/`tile_rows` tape ops and
+//!   the fused `tanh_jet2` node.  The batch is sharded into fixed-size
+//!   point chunks processed by scoped worker threads, each owning a
+//!   workspace-pooled tape; gradients reduce in task order, so results
+//!   are bitwise identical for any thread count.
+//! * [`hte_residual_loss_and_grad_pairgrid`] — the original duplicated
+//!   `[n·v, d]` pair-grid formulation, kept as the ablation baseline that
+//!   `BENCH_native.json` measures the speedup against.
 
 use crate::autodiff::{Tape, Var};
 use crate::pde::{Domain, PdeProblem};
@@ -24,7 +37,280 @@ pub struct NativeBatch<'a> {
     pub v: usize,
 }
 
-/// tanh jet (order 2) expressed in tape ops so it is reverse-differentiable.
+/// Host-side factor jets (constants w.r.t. the parameters).
+fn factor_jets2(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 3] {
+    let s0: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
+    let s1: f64 = 2.0 * x.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
+    let s2: f64 = 2.0 * v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();
+    match problem.domain() {
+        Domain::UnitBall => [(1.0 - s0) as f32, (-s1) as f32, (-s2) as f32],
+        Domain::Annulus => {
+            // (1-s)(4-s) jets via Leibniz
+            let a = [1.0 - s0, -s1, -s2];
+            let b = [4.0 - s0, -s1, -s2];
+            [
+                (a[0] * b[0]) as f32,
+                (a[0] * b[1] + a[1] * b[0]) as f32,
+                (a[0] * b[2] + 2.0 * a[1] * b[1] + a[2] * b[0]) as f32,
+            ]
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Probe-batched engine
+// ---------------------------------------------------------------------------
+
+/// Residual points per worker task.  Fixed — *not* derived from the
+/// thread count — so the task decomposition, and with it every f32
+/// summation order, is identical no matter how many workers run.
+const CHUNK_POINTS: usize = 4;
+
+/// Reusable native training engine: per-worker tapes (each with its own
+/// buffer pool), per-task gradient buffers, deterministic ordered
+/// reduction.  Create once, call [`NativeEngine::loss_and_grad`] per step.
+pub struct NativeEngine {
+    threads: usize,
+    workers: Vec<Tape>,
+    task_grads: Vec<Vec<f32>>,
+    task_loss: Vec<f64>,
+}
+
+impl NativeEngine {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            workers: Vec::new(),
+            task_grads: Vec::new(),
+            task_loss: Vec::new(),
+        }
+    }
+
+    /// Engine sized to the machine (capped — the chunks are small).
+    pub fn with_default_threads() -> Self {
+        Self::new(default_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Biased HTE loss (Eq. 7) and its parameter gradient (packed order),
+    /// written into `grad` (resized to `mlp.n_params()`).
+    pub fn loss_and_grad(
+        &mut self,
+        mlp: &Mlp,
+        problem: &dyn PdeProblem,
+        batch: &NativeBatch,
+        grad: &mut Vec<f32>,
+    ) -> f32 {
+        let n = batch.n;
+        let n_params = mlp.n_params();
+        let n_tasks = n.div_ceil(CHUNK_POINTS);
+        let threads = self.threads.min(n_tasks).max(1);
+        if self.workers.len() < threads {
+            self.workers.resize_with(threads, Tape::new);
+        }
+        if self.task_grads.len() < n_tasks {
+            self.task_grads.resize_with(n_tasks, Vec::new);
+        }
+        self.task_loss.resize(n_tasks.max(self.task_loss.len()), 0.0);
+
+        let workers = &mut self.workers;
+        let task_grads = &mut self.task_grads[..n_tasks];
+        let task_loss = &mut self.task_loss[..n_tasks];
+        if threads == 1 {
+            let tape = &mut workers[0];
+            for (t, (gbuf, lslot)) in task_grads.iter_mut().zip(task_loss.iter_mut()).enumerate()
+            {
+                let start = t * CHUNK_POINTS;
+                let nc = CHUNK_POINTS.min(n - start);
+                *lslot = chunk_loss_grad(tape, mlp, problem, batch, start, nc, gbuf);
+            }
+        } else {
+            let per = n_tasks.div_ceil(threads);
+            let grad_chunks = task_grads.chunks_mut(per);
+            let loss_chunks = task_loss.chunks_mut(per);
+            std::thread::scope(|s| {
+                for (w, (tape, (gchunk, lchunk))) in
+                    workers.iter_mut().zip(grad_chunks.zip(loss_chunks)).enumerate()
+                {
+                    let first_task = w * per;
+                    s.spawn(move || {
+                        for (j, (gbuf, lslot)) in
+                            gchunk.iter_mut().zip(lchunk.iter_mut()).enumerate()
+                        {
+                            let start = (first_task + j) * CHUNK_POINTS;
+                            let nc = CHUNK_POINTS.min(n - start);
+                            *lslot = chunk_loss_grad(tape, mlp, problem, batch, start, nc, gbuf);
+                        }
+                    });
+                }
+            });
+        }
+
+        // Ordered reduction: task index order, independent of threads.
+        grad.clear();
+        grad.resize(n_params, 0.0);
+        let mut loss_sum = 0.0f64;
+        for t in 0..n_tasks {
+            loss_sum += self.task_loss[t];
+            debug_assert_eq!(self.task_grads[t].len(), n_params);
+            for (o, &x) in grad.iter_mut().zip(&self.task_grads[t]) {
+                *o += x;
+            }
+        }
+        let inv_n = 1.0 / n as f32;
+        for o in grad.iter_mut() {
+            *o *= inv_n;
+        }
+        (loss_sum / n as f64) as f32
+    }
+}
+
+/// Threads to use when the caller has no opinion.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// One task: 0.5 · Σ_{i ∈ chunk} r_i² and its parameter gradient (packed,
+/// unnormalized — the caller divides by n after the ordered reduction).
+fn chunk_loss_grad(
+    tape: &mut Tape,
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+    start: usize,
+    nc: usize,
+    grad_out: &mut Vec<f32>,
+) -> f64 {
+    let (v, d) = (batch.v, mlp.d);
+    let b = nc * v;
+    tape.reset();
+
+    // Parameter leaves (copied into pooled buffers).
+    let params: Vec<(Var, Var)> = mlp
+        .layers
+        .iter()
+        .map(|(w, bias)| {
+            let wv = tape.leaf_from_slice(&w.shape, &w.data);
+            let bv = tape.leaf_from_slice(&bias.shape, &bias.data);
+            (wv, bv)
+        })
+        .collect();
+
+    let xs = &batch.xs[start * d..(start + nc) * d];
+    let x0 = tape.leaf_from_slice(&[nc, d], xs);
+    let probes = tape.leaf_from_slice(&[v, d], batch.probes);
+
+    // Jet MLP.  Primal stream h0 runs once at [nc, ·]; tangent h1 and
+    // second h2 run at [nc·v, ·].  Layer 1's tangent is probes @ W tiled
+    // (the pair grid would recompute those v rows nc times), and its
+    // second stream is exactly zero, so both start cheap.
+    let n_layers = mlp.layers.len();
+    let (w0, b0) = params[0];
+    let z0 = tape.matmul(x0, w0);
+    let mut h0 = tape.add_row(z0, b0);
+    let p1 = tape.matmul(probes, w0);
+    let mut h1 = tape.tile_rows(p1, nc);
+    let width0 = tape.value(h0).shape[1];
+    let mut h2 = tape.zeros(&[b, width0]);
+    if n_layers > 1 {
+        let [a, t1, t2] = tape.tanh_jet2([h0, h1, h2], v);
+        h0 = a;
+        h1 = t1;
+        h2 = t2;
+    }
+    for (i, &(w, bias)) in params.iter().enumerate().skip(1) {
+        let z0 = tape.matmul(h0, w);
+        h0 = tape.add_row(z0, bias);
+        h1 = tape.matmul(h1, w);
+        h2 = tape.matmul(h2, w);
+        if i < n_layers - 1 {
+            let [a, t1, t2] = tape.tanh_jet2([h0, h1, h2], v);
+            h0 = a;
+            h1 = t1;
+            h2 = t2;
+        }
+    }
+    // h0 = net0 [nc, 1], h1 = net1 [b, 1], h2 = net2 [b, 1].
+
+    // Leibniz: D2 u = fac0·net2 + 2 fac1·net1 + fac2·net0.
+    let [c0, c1, c2] = tape.leaf3_with(&[b, 1], |b0, b1, b2| {
+        for i in 0..nc {
+            let x = &batch.xs[(start + i) * d..(start + i + 1) * d];
+            for k in 0..v {
+                let probe = &batch.probes[k * d..(k + 1) * d];
+                let f = factor_jets2(problem, x, probe);
+                let idx = i * v + k;
+                b0[idx] = f[0];
+                b1[idx] = f[1];
+                b2[idx] = f[2];
+            }
+        }
+    });
+    let t_a = tape.mul(c0, h2);
+    let t_b0 = tape.mul(c1, h1);
+    let t_b = tape.scale(t_b0, 2.0);
+    let net0_pairs = tape.broadcast_rows(h0, v);
+    let t_c = tape.mul(c2, net0_pairs);
+    let ab = tape.add(t_a, t_b);
+    let d2_pairs = tape.add(ab, t_c); // [b, 1]
+    let d2_mean = tape.group_mean(d2_pairs, v); // [nc, 1]
+
+    // Residual pieces at the points, reusing the primal stream for u0
+    // (the pair-grid path pays a second full forward pass here).
+    let fac0_pts = tape.leaf_with(&[nc, 1], |buf| {
+        for (i, slot) in buf.iter_mut().enumerate() {
+            *slot = problem.factor(&batch.xs[(start + i) * d..(start + i + 1) * d]) as f32;
+        }
+    });
+    let u0 = tape.mul(fac0_pts, h0);
+    let sin_u0 = tape.sin(u0);
+    let g = tape.leaf_with(&[nc, 1], |buf| {
+        for (i, slot) in buf.iter_mut().enumerate() {
+            *slot = problem
+                .forcing(&batch.xs[(start + i) * d..(start + i + 1) * d], batch.coeff)
+                as f32;
+        }
+    });
+    let est = tape.add(d2_mean, sin_u0);
+    let r = tape.sub(est, g);
+    let rsq = tape.square(r);
+    let sum = tape.sum_all(rsq);
+    let loss = tape.scale(sum, 0.5);
+
+    let grads = tape.backward(loss);
+    grad_out.clear();
+    grad_out.reserve(mlp.n_params());
+    for &(w, bias) in &params {
+        grad_out.extend_from_slice(&grads[w.0].as_ref().expect("w grad").data);
+        grad_out.extend_from_slice(&grads[bias.0].as_ref().expect("b grad").data);
+    }
+    let loss_val = tape.value(loss).data[0] as f64;
+    tape.reclaim(grads);
+    loss_val
+}
+
+/// Biased HTE loss (Eq. 7) and its parameter gradient (packed order),
+/// through the probe-batched engine (single-threaded convenience wrapper;
+/// hot loops should hold a [`NativeEngine`] instead).
+pub fn hte_residual_loss_and_grad(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> (f32, Vec<f32>) {
+    let mut engine = NativeEngine::new(1);
+    let mut grad = Vec::new();
+    let loss = engine.loss_and_grad(mlp, problem, batch, &mut grad);
+    (loss, grad)
+}
+
+// ---------------------------------------------------------------------------
+// Pair-grid baseline (pre-batching formulation, kept for the ablation)
+// ---------------------------------------------------------------------------
+
+/// tanh jet (order 2) expressed in generic tape ops (unfused baseline).
 fn tape_tanh_jet2(tape: &mut Tape, y: [Var; 3], ones: Var) -> [Var; 3] {
     let t0 = tape.tanh(y[0]);
     let t0sq = tape.mul(t0, t0);
@@ -40,8 +326,7 @@ fn tape_tanh_jet2(tape: &mut Tape, y: [Var; 3], ones: Var) -> [Var; 3] {
 }
 
 /// Order-2 jet MLP on the tape over a [b, d] pair grid.
-/// Returns output streams ([b,1] each) and the parameter Vars.
-fn tape_jet_mlp2(
+fn tape_jet_mlp2_pairgrid(
     tape: &mut Tape,
     mlp: &Mlp,
     x0: Tensor,
@@ -70,28 +355,12 @@ fn tape_jet_mlp2(
     y
 }
 
-/// Host-side factor jets (constants w.r.t. the parameters).
-fn factor_jets2(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 3] {
-    let s0: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
-    let s1: f64 = 2.0 * x.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
-    let s2: f64 = 2.0 * v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();
-    match problem.domain() {
-        Domain::UnitBall => [(1.0 - s0) as f32, (-s1) as f32, (-s2) as f32],
-        Domain::Annulus => {
-            // (1-s)(4-s) jets via Leibniz
-            let a = [1.0 - s0, -s1, -s2];
-            let b = [4.0 - s0, -s1, -s2];
-            [
-                (a[0] * b[0]) as f32,
-                (a[0] * b[1] + a[1] * b[0]) as f32,
-                (a[0] * b[2] + 2.0 * a[1] * b[1] + a[2] * b[0]) as f32,
-            ]
-        }
-    }
-}
-
-/// Biased HTE loss (Eq. 7) and its parameter gradient (packed order).
-pub fn hte_residual_loss_and_grad(
+/// The original pair-grid implementation: every stream (including the
+/// probe-independent primal) is materialized and computed at [n·v, ·],
+/// and u0 costs a second full forward pass.  Identical estimator, same
+/// loss up to f32 summation order — kept as the `BENCH_native.json`
+/// baseline and as an independent parity oracle.
+pub fn hte_residual_loss_and_grad_pairgrid(
     mlp: &Mlp,
     problem: &dyn PdeProblem,
     batch: &NativeBatch,
@@ -126,7 +395,7 @@ pub fn hte_residual_loss_and_grad(
         }
     }
 
-    let net = tape_jet_mlp2(&mut tape, mlp, x0, x1, &params);
+    let net = tape_jet_mlp2_pairgrid(&mut tape, mlp, x0, x1, &params);
 
     // Leibniz: D2 u = fac0*net2 + 2 fac1*net1 + fac2*net0.
     let c0 = tape.constant(fac0);
@@ -264,6 +533,82 @@ mod tests {
     }
 
     #[test]
+    fn batched_engine_matches_reference_across_shapes() {
+        // includes the edge cases n = 1 and v = 1, and n not a multiple
+        // of the task chunk size
+        for (d, n, v) in [(3, 1, 1), (4, 1, 5), (4, 2, 1), (5, 6, 3), (8, 9, 4)] {
+            let (mlp, problem, xs, probes, coeff) = setup(d, n, v);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+            let (loss, _) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+            let reference = hte_residual_loss_reference(&mlp, &problem, &batch);
+            assert!(
+                (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+                "(d={d}, n={n}, v={v}): {loss} vs {reference}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_engine_matches_pairgrid_loss_and_grad() {
+        for (d, n, v) in [(4, 1, 1), (4, 3, 2), (6, 5, 4)] {
+            let (mlp, problem, xs, probes, coeff) = setup(d, n, v);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+            let (loss_b, grad_b) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+            let (loss_p, grad_p) = hte_residual_loss_and_grad_pairgrid(&mlp, &problem, &batch);
+            assert!(
+                (loss_b - loss_p).abs() < 1e-4 * (1.0 + loss_p.abs()),
+                "(d={d}, n={n}, v={v}): {loss_b} vs {loss_p}"
+            );
+            assert_eq!(grad_b.len(), grad_p.len());
+            let scale: f32 =
+                grad_p.iter().map(|g| g.abs()).fold(0.0, f32::max).max(1e-6);
+            for (idx, (a, b)) in grad_b.iter().zip(&grad_p).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3 * scale + 1e-5,
+                    "(d={d}, n={n}, v={v}) param {idx}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_gradient_is_bitwise_identical() {
+        let (mlp, problem, xs, probes, coeff) = setup(6, 11, 4);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 11, v: 4 };
+        let mut grads: Vec<(f32, Vec<f32>)> = Vec::new();
+        for threads in [1usize, 2, 3, 7] {
+            let mut engine = NativeEngine::new(threads);
+            let mut grad = Vec::new();
+            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad);
+            grads.push((loss, grad));
+        }
+        let (loss0, g0) = &grads[0];
+        for (loss, g) in &grads[1..] {
+            assert_eq!(loss.to_bits(), loss0.to_bits(), "loss differs across thread counts");
+            assert_eq!(g.len(), g0.len());
+            for (a, b) in g.iter().zip(g0) {
+                assert_eq!(a.to_bits(), b.to_bits(), "gradient differs across thread counts");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_reuse_across_steps_is_deterministic() {
+        let (mlp, problem, xs, probes, coeff) = setup(5, 6, 3);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 6, v: 3 };
+        let mut engine = NativeEngine::new(2);
+        let mut g1 = Vec::new();
+        let l1 = engine.loss_and_grad(&mlp, &problem, &batch, &mut g1);
+        let g1c = g1.clone();
+        let mut g2 = Vec::new();
+        let l2 = engine.loss_and_grad(&mlp, &problem, &batch, &mut g2);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        for (a, b) in g1c.iter().zip(&g2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
     fn tape_grad_matches_finite_differences() {
         let (mut mlp, problem, xs, probes, coeff) = setup(4, 3, 2);
         let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 3, v: 2 };
@@ -292,6 +637,33 @@ mod tests {
     }
 
     #[test]
+    fn pairgrid_grad_matches_finite_differences() {
+        let (mut mlp, problem, xs, probes, coeff) = setup(4, 3, 2);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 3, v: 2 };
+        let (_, grad) = hte_residual_loss_and_grad_pairgrid(&mlp, &problem, &batch);
+        let flat0 = mlp.pack();
+        let idxs = [0usize, 7, 130, 600, flat0.len() - 1];
+        let h = 1e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            mlp.unpack_into(&fp);
+            let lp = hte_residual_loss_reference(&mlp, &problem, &batch);
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            mlp.unpack_into(&fm);
+            let lm = hte_residual_loss_reference(&mlp, &problem, &batch);
+            mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {i}: pairgrid {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
     fn native_adam_training_decreases_loss() {
         let (mut mlp, problem, _, _, coeff) = setup(4, 8, 4);
         let mut rng = Xoshiro256pp::new(21);
@@ -306,12 +678,14 @@ mod tests {
         let eval_batch =
             NativeBatch { xs: &eval_xs, probes: &eval_probes, coeff: &coeff, n: 16, v: 8 };
         let first = hte_residual_loss_reference(&mlp, &problem, &eval_batch);
+        let mut engine = NativeEngine::new(2);
+        let mut grad = Vec::new();
         for _ in 0..150 {
             let xs = sampler.batch(8);
             let mut probes = vec![0.0f32; 4 * 4];
             fill_rademacher(&mut rng, &mut probes);
             let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 8, v: 4 };
-            let (_, grad) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+            engine.loss_and_grad(&mlp, &problem, &batch, &mut grad);
             let mut flat = mlp.pack();
             adam_step(&mut flat, &mut m, &mut v_state, &mut t, &grad, 2e-3);
             mlp.unpack_into(&flat);

@@ -1,7 +1,13 @@
 //! L3 <-> artifact runtime: manifest parsing + PJRT execution engine.
+//!
+//! The manifest is plain JSON and always available; the PJRT `Engine`
+//! needs the real XLA runtime and is gated behind `--features xla`
+//! (default builds resolve the dependency via the in-repo `xla-stub`).
 
+#[cfg(feature = "xla")]
 mod engine;
 mod manifest;
 
+#[cfg(feature = "xla")]
 pub use engine::Engine;
 pub use manifest::{Entry, InputSpec, Manifest, ParamEntry, StateOffsets};

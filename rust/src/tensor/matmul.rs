@@ -1,17 +1,22 @@
-//! Cache-blocked f32 matmul kernel for the native engine.
+//! Cache-blocked f32 matmul kernels for the native engine.
 //!
 //! i-k-j loop order (streaming writes over the output row) with k-blocking
-//! so the B panel stays in L1/L2.  Good enough for the native
-//! validation/ablation engine; the production hot path runs through XLA.
+//! so the B panel stays in L1/L2.  All kernels are branch-free over the
+//! data: an earlier revision skipped `a == 0.0` terms, which looks like a
+//! win for the sparse SDGD probe rows but defeats autovectorization on the
+//! dense activations that dominate the hot path (see the `matmul/…` rows
+//! of `cargo bench --bench perf_breakdown` for the before/after).
+//!
+//! The `_acc` variants accumulate (`out +=`) so reverse-mode gradient
+//! contributions sum directly into pooled buffers without a temporary.
 
 const KC: usize = 256;
 
-/// out[m, n] += 0; out = a[m, k] @ b[k, n]
-pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+/// out[m, n] += a[m, k] @ b[k, n]
+pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
     let mut k0 = 0;
     while k0 < k {
         let kb = KC.min(k - k0);
@@ -19,9 +24,6 @@ pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n:
             let arow = &a[i * k + k0..i * k + k0 + kb];
             let orow = &mut out[i * n..(i + 1) * n];
             for (t, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
                 let brow = &b[(k0 + t) * n..(k0 + t + 1) * n];
                 // autovectorizes to fused multiply-adds over the row
                 for (o, &bv) in orow.iter_mut().zip(brow) {
@@ -31,6 +33,59 @@ pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n:
         }
         k0 += kb;
     }
+}
+
+/// out[m, n] = a[m, k] @ b[k, n]
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    out.fill(0.0);
+    matmul_acc(a, b, out, m, k, n);
+}
+
+/// out[m, n] += a^T @ b with a: [rows, m], b: [rows, n] (weight gradients).
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), rows * m);
+    debug_assert_eq!(b.len(), rows * n);
+    debug_assert_eq!(out.len(), m * n);
+    for t in 0..rows {
+        let arow = &a[t * m..(t + 1) * m];
+        let brow = &b[t * n..(t + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m, n] = a^T @ b with a: [rows, m], b: [rows, n].
+pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, m: usize, n: usize) {
+    out.fill(0.0);
+    matmul_tn_acc(a, b, out, rows, m, n);
+}
+
+/// out[m, n] += a @ b^T with a: [m, k], b: [n, k] (activation gradients).
+pub fn matmul_nt_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (o, brow) in orow.iter_mut().zip(b.chunks_exact(k)) {
+            let mut acc = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// out[m, n] = a @ b^T with a: [m, k], b: [n, k].
+pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    out.fill(0.0);
+    matmul_nt_acc(a, b, out, m, k, n);
 }
 
 #[cfg(test)]
@@ -51,22 +106,65 @@ mod tests {
         out
     }
 
+    fn lcg(seed: &mut u64) -> f32 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    }
+
     #[test]
     fn matches_naive_across_shapes_including_blocking_boundary() {
         let mut seed = 1u64;
-        let mut next = move || {
-            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
-            ((seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
-        };
         for (m, k, n) in [(1, 1, 1), (3, 5, 2), (16, 300, 8), (7, 513, 3)] {
-            let a: Vec<f32> = (0..m * k).map(|_| next()).collect();
-            let b: Vec<f32> = (0..k * n).map(|_| next()).collect();
+            let a: Vec<f32> = (0..m * k).map(|_| lcg(&mut seed)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| lcg(&mut seed)).collect();
             let mut out = vec![0.0f32; m * n];
             matmul_into(&a, &b, &mut out, m, k, n);
             let want = naive(&a, &b, m, k, n);
             for (x, y) in out.iter().zip(&want) {
                 assert!((x - y).abs() < 1e-3, "({m},{k},{n}): {x} vs {y}");
             }
+        }
+    }
+
+    #[test]
+    fn transposed_accumulating_variants_match_naive() {
+        let mut seed = 7u64;
+        let (rows, m, n) = (9, 4, 6);
+        let a: Vec<f32> = (0..rows * m).map(|_| lcg(&mut seed)).collect();
+        let b: Vec<f32> = (0..rows * n).map(|_| lcg(&mut seed)).collect();
+        // a^T @ b against naive over the explicit transpose
+        let mut at = vec![0.0f32; m * rows];
+        for t in 0..rows {
+            for i in 0..m {
+                at[i * rows + t] = a[t * m + i];
+            }
+        }
+        let want_tn = naive(&at, &b, m, rows, n);
+        let mut out = vec![1.0f32; m * n]; // nonzero: _acc must add on top
+        matmul_tn_acc(&a, &b, &mut out, rows, m, n);
+        for (x, y) in out.iter().zip(&want_tn) {
+            assert!((x - (y + 1.0)).abs() < 1e-3, "tn: {x} vs {y}+1");
+        }
+        let mut out2 = vec![0.0f32; m * n];
+        matmul_tn_into(&a, &b, &mut out2, rows, m, n);
+        for (x, y) in out2.iter().zip(&want_tn) {
+            assert!((x - y).abs() < 1e-3, "tn_into: {x} vs {y}");
+        }
+        // a @ b^T: a [m2, k2], b [n2, k2]
+        let (m2, k2, n2) = (5, 8, 3);
+        let a2: Vec<f32> = (0..m2 * k2).map(|_| lcg(&mut seed)).collect();
+        let b2: Vec<f32> = (0..n2 * k2).map(|_| lcg(&mut seed)).collect();
+        let mut b2t = vec![0.0f32; k2 * n2];
+        for j in 0..n2 {
+            for t in 0..k2 {
+                b2t[t * n2 + j] = b2[j * k2 + t];
+            }
+        }
+        let want_nt = naive(&a2, &b2t, m2, k2, n2);
+        let mut out3 = vec![0.0f32; m2 * n2];
+        matmul_nt_into(&a2, &b2, &mut out3, m2, k2, n2);
+        for (x, y) in out3.iter().zip(&want_nt) {
+            assert!((x - y).abs() < 1e-3, "nt: {x} vs {y}");
         }
     }
 }

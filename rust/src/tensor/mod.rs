@@ -1,13 +1,18 @@
 //! Minimal dense tensor substrate (f32, row-major) for the native engine.
 //!
-//! Only what the native MLP / autodiff need: blocked matmul, elementwise
-//! ops, reductions.  No views or strides — shapes are small and the
-//! native path is a validation/ablation engine, not the hot path (the hot
-//! path is the compiled XLA artifact).
+//! Only what the native MLP / autodiff need: blocked matmul (plus `_into`
+//! / `_acc` variants that write into caller-owned buffers), elementwise
+//! ops, reductions, and a `BufferPool` workspace the tape allocates
+//! through so a steady-state training step performs no heap allocation.
+//! No views or strides — shapes are small and regular.
 
 mod matmul;
+mod pool;
 
-pub use matmul::matmul_into;
+pub use matmul::{
+    matmul_acc, matmul_into, matmul_nt_acc, matmul_nt_into, matmul_tn_acc, matmul_tn_into,
+};
+pub use pool::BufferPool;
 
 /// Row-major dense f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -59,21 +64,7 @@ impl Tensor {
         let (k2, n) = (other.shape[0], other.shape[1]);
         assert_eq!(k, k2);
         let mut out = Tensor::zeros(&[m, n]);
-        // out[i,j] = sum_t a[t,i] b[t,j]
-        for t in 0..k {
-            let arow = &self.data[t * m..(t + 1) * m];
-            let brow = &other.data[t * n..(t + 1) * n];
-            for i in 0..m {
-                let av = arow[i];
-                if av == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
+        matmul_tn_acc(&self.data, &other.data, &mut out.data, k, m, n);
         out
     }
 
@@ -85,17 +76,7 @@ impl Tensor {
         let (n, k2) = (other.shape[0], other.shape[1]);
         assert_eq!(k, k2);
         let mut out = Tensor::zeros(&[m, n]);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &other.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for t in 0..k {
-                    acc += arow[t] * brow[t];
-                }
-                out.data[i * n + j] = acc;
-            }
-        }
+        matmul_nt_acc(&self.data, &other.data, &mut out.data, m, k, n);
         out
     }
 

@@ -1,0 +1,81 @@
+//! Reusable f32 buffer pool — the tape's workspace.
+//!
+//! The native training step builds and tears down the same graph every
+//! iteration, so every intermediate has the same size step after step.
+//! Routing allocations through this free-list means the first step pays
+//! for the buffers and every later step reuses them: the hot loop is
+//! allocation-free at steady state.
+//!
+//! Buffers handed out are always zeroed to `len`, so results never depend
+//! on what a recycled buffer previously held — a precondition for the
+//! bit-stable multi-threaded reduction in `nn::native_loss`.
+
+/// LIFO free-list of `Vec<f32>` buffers.
+#[derive(Default)]
+pub struct BufferPool {
+    free: Vec<Vec<f32>>,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of buffers currently parked in the pool.
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    /// Take a buffer of exactly `len` zeroed elements (recycled if possible).
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_and_zeroes() {
+        let mut pool = BufferPool::new();
+        let mut a = pool.take_zeroed(8);
+        assert_eq!(a, vec![0.0; 8]);
+        a.iter_mut().for_each(|v| *v = 3.0);
+        let cap = a.capacity();
+        pool.give(a);
+        assert_eq!(pool.len(), 1);
+        // smaller request reuses the same allocation, fully zeroed
+        let b = pool.take_zeroed(4);
+        assert_eq!(b, vec![0.0; 4]);
+        assert_eq!(b.capacity(), cap);
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn grows_when_needed() {
+        let mut pool = BufferPool::new();
+        pool.give(vec![1.0; 2]);
+        let c = pool.take_zeroed(16);
+        assert_eq!(c.len(), 16);
+        assert!(c.iter().all(|&v| v == 0.0));
+    }
+}

@@ -7,6 +7,7 @@
 
 use hte_pinn::coordinator::{problem_for, EvalPool, MetricsLogger, TrainConfig, Trainer};
 use hte_pinn::estimators::Estimator;
+use hte_pinn::pde::PdeProblem;
 use hte_pinn::runtime::Engine;
 
 fn artifact_dir() -> Option<std::path::PathBuf> {

@@ -1,0 +1,152 @@
+//! Parity suite for the probe-batched native engine (default features —
+//! no artifacts, no XLA).
+//!
+//! Three oracles, per DESIGN.md §7:
+//! * `hte_residual_loss_reference` — f64 jet-forward loss (no tape);
+//! * central finite differences of the reference — gradient oracle;
+//! * `hte_residual_loss_and_grad_pairgrid` — the pre-refactor tape.
+
+use hte_pinn::coordinator::problem_for;
+use hte_pinn::nn::{
+    hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference,
+    Mlp, NativeBatch, NativeEngine,
+};
+use hte_pinn::pde::{Domain, DomainSampler, PdeProblem};
+use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
+
+struct Case {
+    mlp: Mlp,
+    problem: Box<dyn PdeProblem>,
+    xs: Vec<f32>,
+    probes: Vec<f32>,
+    coeff: Vec<f32>,
+    n: usize,
+    v: usize,
+}
+
+impl Case {
+    fn new(d: usize, n: usize, v: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = problem_for("sg2", d).expect("sg2");
+        let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        Normal::new().fill_f32(&mut rng, &mut coeff);
+        Self { mlp, problem, xs, probes, coeff, n, v }
+    }
+
+    fn batch(&self) -> NativeBatch<'_> {
+        NativeBatch {
+            xs: &self.xs,
+            probes: &self.probes,
+            coeff: &self.coeff,
+            n: self.n,
+            v: self.v,
+        }
+    }
+}
+
+/// Optimized-path loss matches the jet-forward reference to 1e-3 relative
+/// tolerance across a (n, v, d) grid including the v = 1 and n = 1 edges.
+#[test]
+fn batched_loss_matches_reference_grid() {
+    for (d, n, v) in [
+        (3, 1, 1),
+        (4, 1, 6),
+        (4, 5, 1),
+        (5, 4, 3),
+        (6, 9, 4),
+        (10, 16, 16),
+    ] {
+        let case = Case::new(d, n, v, 42 + d as u64);
+        let (loss, _) = hte_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
+        let reference = hte_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+        assert!(
+            (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+            "(d={d}, n={n}, v={v}): batched {loss} vs reference {reference}"
+        );
+    }
+}
+
+/// Batched gradients match central finite differences of the f64
+/// reference loss on a spread of parameter coordinates.
+#[test]
+fn batched_grad_matches_finite_differences() {
+    for (d, n, v) in [(4, 3, 2), (5, 1, 3), (4, 6, 1)] {
+        let mut case = Case::new(d, n, v, 7);
+        let (_, grad) =
+            hte_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
+        let flat0 = case.mlp.pack();
+        let idxs = [0usize, 11, 257, flat0.len() / 2, flat0.len() - 1];
+        let h = 1e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            case.mlp.unpack_into(&fp);
+            let lp =
+                hte_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            case.mlp.unpack_into(&fm);
+            let lm =
+                hte_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+            case.mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                "(d={d}, n={n}, v={v}) param {i}: batched {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+}
+
+/// The optimized engine and the pre-refactor pair-grid tape agree on loss
+/// and gradient (independent graph constructions over the same math).
+#[test]
+fn batched_and_pairgrid_agree() {
+    for (d, n, v) in [(4, 2, 2), (6, 7, 3), (8, 5, 16)] {
+        let case = Case::new(d, n, v, 3);
+        let (loss_b, grad_b) =
+            hte_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
+        let (loss_p, grad_p) =
+            hte_residual_loss_and_grad_pairgrid(&case.mlp, case.problem.as_ref(), &case.batch());
+        assert!(
+            (loss_b - loss_p).abs() < 1e-4 * (1.0 + loss_p.abs()),
+            "(d={d}, n={n}, v={v}): {loss_b} vs {loss_p}"
+        );
+        let scale: f32 = grad_p.iter().map(|g| g.abs()).fold(0.0, f32::max).max(1e-6);
+        for (i, (a, b)) in grad_b.iter().zip(&grad_p).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 * scale + 1e-5,
+                "(d={d}, n={n}, v={v}) param {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// Gradient reduction is bit-stable for any worker-thread count, including
+/// thread counts that exceed the number of point chunks.
+#[test]
+fn gradients_bitwise_stable_across_thread_counts() {
+    let case = Case::new(6, 13, 5, 9);
+    let mut baseline: Option<(f32, Vec<f32>)> = None;
+    for threads in [1usize, 2, 4, 16] {
+        let mut engine = NativeEngine::new(threads);
+        let mut grad = Vec::new();
+        let loss = engine.loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad);
+        match &baseline {
+            None => baseline = Some((loss, grad)),
+            Some((l0, g0)) => {
+                assert_eq!(loss.to_bits(), l0.to_bits(), "loss at {threads} threads");
+                assert_eq!(grad.len(), g0.len());
+                for (a, b) in grad.iter().zip(g0) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "grad at {threads} threads");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Offline stub of the `xla-rs` API surface that `hte_pinn`'s artifact
+//! backend uses.
+//!
+//! The real dependency (github.com/LaurentMazare/xla-rs plus the XLA C++
+//! runtime) is not available on crates.io, so this path crate stands in
+//! for it: the `--features xla` build compiles everywhere, and every
+//! entry point fails at runtime with an actionable message.  To run the
+//! compiled-artifact backend for real, replace the `xla` path dependency
+//! in `rust/Cargo.toml` with a local xla-rs checkout — the type and
+//! method names below match the subset of its API the engine calls
+//! (`runtime/engine.rs`), so no code changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: always "XLA runtime not available".
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: built against the in-repo xla stub (no XLA runtime); point the \
+         `xla` path dependency in rust/Cargo.toml at a real xla-rs checkout"
+    )))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// Device-resident buffer handle (stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Host-side literal (stub).
+pub struct Literal(());
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module proto (stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
