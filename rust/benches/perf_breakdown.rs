@@ -1,22 +1,27 @@
 //! §Perf: where does a train step's wall time go at the table scales?
 //!
-//! Two sections (DESIGN.md §8):
+//! Three sections (DESIGN.md §8):
 //!
-//! * **native** (always available): the matmul kernel, then the native
-//!   training step at paper scales — d ∈ {10, 100, 1000}, V ∈ {1, 16} —
-//!   timing the pre-refactor pair-grid formulation against the
-//!   probe-batched workspace engine (single- and multi-threaded), with a
-//!   loss parity check against the jet-forward reference.  Results land
-//!   in `BENCH_native.json` next to the manifest (CI uploads it as an
-//!   artifact).
+//! * **native order 2** (always available): the matmul kernel, then the
+//!   native training step at paper scales — d ∈ {10, 100, 1000},
+//!   V ∈ {1, 16} — timing the pre-refactor pair-grid formulation against
+//!   the probe-batched workspace engine (single- and multi-threaded),
+//!   with a loss parity check against the jet-forward reference.
+//! * **native order 4** (always available): the biharmonic TVP step —
+//!   d ∈ {10, 100}, V ∈ {4, 16} — against an order-2 step at the same
+//!   shape (the streams-cost anchor), with jet-forward loss parity and
+//!   measured `rss_mb` next to the `memmodel` estimates (the OOM
+//!   narrative cross-check).  Both native sections land in
+//!   `BENCH_native.json` (CI uploads it as an artifact).
 //! * **artifact** (`--features xla` + `artifacts/`): the L3 step split
 //!   into host-side stages vs XLA execution, so the coordinator's
 //!   overhead budget (<10% of step time, DESIGN.md §8) is verifiable.
 
-use hte_pinn::coordinator::problem_for;
+use hte_pinn::coordinator::{problem_for, rss_mb};
+use hte_pinn::memmodel;
 use hte_pinn::nn::{
-    default_threads, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, Mlp,
-    NativeBatch, NativeEngine,
+    bihar_residual_loss_reference, default_threads, hte_residual_loss_and_grad_pairgrid,
+    hte_residual_loss_reference, Mlp, NativeBatch, NativeEngine, CHUNK_POINTS,
 };
 use hte_pinn::pde::{Domain, DomainSampler, PdeProblem};
 use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
@@ -125,7 +130,112 @@ fn native_section(report: &mut BenchReport) -> Vec<NativeRow> {
     rows
 }
 
-fn write_bench_json(rows: &[NativeRow]) {
+struct Order4Row {
+    d: usize,
+    v: usize,
+    n: usize,
+    order2_1thread_ms: f64,
+    batched_1thread_ms: f64,
+    batched_ms: f64,
+    threads: usize,
+    loss_rel_err: f64,
+    rss_mb: f64,
+    rss_delta_mb: f64,
+    model_native_mb: f64,
+    model_a100_mb: f64,
+}
+
+fn order4_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> Order4Row {
+    // biharmonic TVP step (Gaussian probes on the annulus, Thm 3.4)
+    let rss_before = rss_mb();
+    let mut rng = Xoshiro256pp::new(13);
+    let mlp = Mlp::init(d, &mut rng);
+    let problem = problem_for("bihar", d).expect("bihar problem");
+    let mut sampler = DomainSampler::new(Domain::Annulus, d, rng.fork(1));
+    let xs = sampler.batch(n);
+    let mut normal = Normal::new();
+    let mut probes = vec![0.0f32; v * d];
+    normal.fill_f32(&mut rng, &mut probes);
+    let mut coeff = vec![0.0f32; problem.n_coeff()];
+    normal.fill_f32(&mut rng, &mut coeff);
+    let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+
+    let (warmup, iters) = if d >= 100 { (2, 10) } else { (3, 30) };
+    let tag = format!("d{d}-v{v}-n{n}");
+    let mut grad = Vec::new();
+
+    let mut engine1 = NativeEngine::new(1);
+    let batched1 = time_fn(&format!("bihar-step/batched-t1/{tag}"), warmup, iters, || {
+        std::hint::black_box(engine1.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad));
+    });
+    report.push(batched1.clone());
+
+    let threads = default_threads();
+    let mut engine_mt = NativeEngine::new(threads);
+    let batched = time_fn(
+        &format!("bihar-step/batched-t{threads}/{tag}"),
+        warmup,
+        iters,
+        || {
+            std::hint::black_box(engine_mt.loss_and_grad(
+                &mlp,
+                problem.as_ref(),
+                &batch,
+                &mut grad,
+            ));
+        },
+    );
+    report.push(batched.clone());
+
+    // order-2 anchor at the same (d, v, n): how much do two extra jet
+    // streams cost?  (memmodel predicts ~(1+4V)/(1+2V) ≈ 2x)
+    let problem2 = problem_for("sg2", d).expect("sg2 problem");
+    let mut sampler2 = DomainSampler::new(Domain::UnitBall, d, rng.fork(2));
+    let xs2 = sampler2.batch(n);
+    let mut probes2 = vec![0.0f32; v * d];
+    fill_rademacher(&mut rng, &mut probes2);
+    let mut coeff2 = vec![0.0f32; problem2.n_coeff()];
+    normal.fill_f32(&mut rng, &mut coeff2);
+    let batch2 = NativeBatch { xs: &xs2, probes: &probes2, coeff: &coeff2, n, v };
+    let mut engine2 = NativeEngine::new(1);
+    let order2 = time_fn(&format!("order2-step/batched-t1/{tag}"), warmup, iters, || {
+        std::hint::black_box(engine2.loss_and_grad(&mlp, problem2.as_ref(), &batch2, &mut grad));
+    });
+    report.push(order2.clone());
+
+    // parity: order-4 tape loss vs the f64 jet-forward reference
+    let loss = engine_mt.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad) as f64;
+    let reference = bihar_residual_loss_reference(&mlp, problem.as_ref(), &batch);
+    let loss_rel_err = (loss - reference).abs() / (1.0 + reference.abs());
+
+    let rss_after = rss_mb();
+    Order4Row {
+        d,
+        v,
+        n,
+        order2_1thread_ms: order2.mean_s * 1e3,
+        batched_1thread_ms: batched1.mean_s * 1e3,
+        batched_ms: batched.mean_s * 1e3,
+        threads,
+        loss_rel_err,
+        rss_mb: rss_after,
+        rss_delta_mb: (rss_after - rss_before).max(0.0),
+        model_native_mb: memmodel::native_tape_bytes(d, CHUNK_POINTS, v, 4, threads).mb(),
+        model_a100_mb: memmodel::hte_bytes(d, n, v, 4).mb(),
+    }
+}
+
+fn order4_section(report: &mut BenchReport) -> Vec<Order4Row> {
+    let mut rows = Vec::new();
+    for d in [10usize, 100] {
+        for v in [4usize, 16] {
+            rows.push(order4_case(report, d, v, 16));
+        }
+    }
+    rows
+}
+
+fn write_bench_json(rows: &[NativeRow], rows4: &[Order4Row]) {
     let json_rows: Vec<Value> = rows
         .iter()
         .map(|r| {
@@ -146,6 +256,30 @@ fn write_bench_json(rows: &[NativeRow]) {
             ])
         })
         .collect();
+    let json_rows4: Vec<Value> = rows4
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("d", num(r.d as f64)),
+                ("v", num(r.v as f64)),
+                ("n", num(r.n as f64)),
+                ("order2_1thread_ms", num(r.order2_1thread_ms)),
+                ("batched_1thread_ms", num(r.batched_1thread_ms)),
+                ("batched_ms", num(r.batched_ms)),
+                ("threads", num(r.threads as f64)),
+                (
+                    "cost_vs_order2",
+                    num(r.batched_1thread_ms / r.order2_1thread_ms.max(1e-9)),
+                ),
+                ("loss_rel_err", num(r.loss_rel_err)),
+                ("parity_ok", Value::Bool(r.loss_rel_err < 1e-3)),
+                ("rss_mb", num(r.rss_mb)),
+                ("rss_delta_mb", num(r.rss_delta_mb)),
+                ("model_native_mb", num(r.model_native_mb)),
+                ("model_a100_mb", num(r.model_a100_mb)),
+            ])
+        })
+        .collect();
     let doc = obj(vec![
         ("bench", s("native-step")),
         (
@@ -154,6 +288,15 @@ fn write_bench_json(rows: &[NativeRow]) {
         ),
         ("optimized", s("NativeEngine (probe-batched, workspace-pooled, threaded)")),
         ("rows", Value::Arr(json_rows)),
+        (
+            "order4",
+            s("biharmonic TVP step (order-4 jets, Gaussian probes); order2_1thread_ms \
+               is the same-shape Sine-Gordon step; rss_mb is the process RSS after the \
+               case (the order-4 section runs before the order-2 sweep, so it is not \
+               inflated by the pair-grid tapes) and rss_delta_mb the case's own growth; \
+               model_* are the memmodel estimates (A100 model includes its ~800MB base)"),
+        ),
+        ("rows_order4", Value::Arr(json_rows4)),
     ]);
     let path = "BENCH_native.json";
     match std::fs::write(path, doc.to_json()) {
@@ -222,6 +365,9 @@ fn artifact_section(report: &mut BenchReport) {
 fn main() {
     let mut report = BenchReport::new("perf: step breakdown");
     matmul_section(&mut report);
+    // order-4 first: its rss_mb cross-check would otherwise read the
+    // allocator high-water mark left behind by the d=1000 pair-grid sweep
+    let rows4 = order4_section(&mut report);
     let rows = native_section(&mut report);
     for r in &rows {
         println!(
@@ -237,7 +383,24 @@ fn main() {
             r.loss_rel_err
         );
     }
-    write_bench_json(&rows);
+    for r in &rows4 {
+        println!(
+            "  bihar-step d{} v{} n{}: {:.3} ms ({:.2}x the order-2 step), \
+             loss rel err {:.2e}, rss {:.0}MB (case delta {:.0}MB; native model \
+             {:.0}MB, A100 model {:.0}MB incl. base)",
+            r.d,
+            r.v,
+            r.n,
+            r.batched_1thread_ms,
+            r.batched_1thread_ms / r.order2_1thread_ms.max(1e-9),
+            r.loss_rel_err,
+            r.rss_mb,
+            r.rss_delta_mb,
+            r.model_native_mb,
+            r.model_a100_mb
+        );
+    }
+    write_bench_json(&rows, &rows4);
     #[cfg(feature = "xla")]
     artifact_section(&mut report);
     #[cfg(not(feature = "xla"))]
@@ -251,6 +414,15 @@ fn main() {
         if r.loss_rel_err >= 1e-3 || r.loss_rel_err.is_nan() {
             eprintln!(
                 "FAIL: loss parity d{} v{} n{}: rel err {:.3e} >= 1e-3",
+                r.d, r.v, r.n, r.loss_rel_err
+            );
+            failed = true;
+        }
+    }
+    for r in &rows4 {
+        if r.loss_rel_err >= 1e-3 || r.loss_rel_err.is_nan() {
+            eprintln!(
+                "FAIL: order-4 loss parity d{} v{} n{}: rel err {:.3e} >= 1e-3",
                 r.d, r.v, r.n, r.loss_rel_err
             );
             failed = true;

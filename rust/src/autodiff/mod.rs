@@ -16,9 +16,10 @@
 //!   them, so a steady-state training step allocates nothing.
 //! * Probe batching is first-class: [`Tape::broadcast_rows`] /
 //!   [`Tape::tile_rows`] connect a probe-independent `[n, c]` primal
-//!   stream to `[n·v, c]` tangent streams, and [`Tape::tanh_jet2`] fuses
-//!   the order-2 tanh jet (one hand-written forward/backward per output
-//!   stream instead of ~9 generic elementwise nodes).
+//!   stream to `[n·v, c]` tangent streams, and [`Tape::tanh_jet2`] /
+//!   [`Tape::tanh_jet4`] fuse the order-2 / order-4 tanh jets (one
+//!   hand-written forward/backward per output stream instead of dozens of
+//!   generic elementwise nodes).
 
 use crate::tensor::{matmul_acc, matmul_nt_acc, matmul_tn_acc, BufferPool, Tensor};
 
@@ -53,6 +54,33 @@ enum Op {
     TanhJetO1 { t0: usize, z1: usize, group: usize },
     /// o2 = -2 t0 (1 - t0^2) ⊙ z1^2 + (1 - t0^2) ⊙ z2 at [n*group, c].
     TanhJetO2 { t0: usize, z1: usize, z2: usize, group: usize },
+    /// o3 = f3 ⊙ z1^3 + 3 f2 ⊙ z1 z2 + f1 ⊙ z3 at [n*group, c]
+    /// (Faà di Bruno order 3; f_k are tanh-derivative factors of t0,
+    /// row-broadcast by `group`).
+    TanhJetO3 { t0: usize, z1: usize, z2: usize, z3: usize, group: usize },
+    /// o4 = f4 ⊙ z1^4 + 6 f3 ⊙ z1^2 z2 + 3 f2 ⊙ z2^2 + 4 f2 ⊙ z1 z3
+    ///      + f1 ⊙ z4 at [n*group, c] (Faà di Bruno order 4).
+    TanhJetO4 { t0: usize, z1: usize, z2: usize, z3: usize, z4: usize, group: usize },
+}
+
+/// tanh derivative factors as functions of t = tanh(y):
+/// f1 = 1 - t², f2 = -2 t f1, f3 = f1 (6t² - 2), f4 = f1 (16t - 24t³)
+/// (the same chain as `nn::jet::tanh_derivs`, kept in f32 for the tape).
+#[inline]
+fn tanh_factors(t: f32) -> (f32, f32, f32, f32) {
+    let f1 = 1.0 - t * t;
+    let f2 = -2.0 * t * f1;
+    let f3 = f1 * (6.0 * t * t - 2.0);
+    let f4 = f1 * (16.0 * t - 24.0 * t * t * t);
+    (f1, f2, f3, f4)
+}
+
+/// d/dt of the tanh factors above (the backward pass through t0):
+/// f1' = -2t, f2' = 6t² - 2, f3' = 16t - 24t³, f4' = 120t⁴ - 120t² + 16.
+#[inline]
+fn tanh_factor_derivs(t: f32) -> (f32, f32, f32, f32) {
+    let t2 = t * t;
+    (-2.0 * t, 6.0 * t2 - 2.0, 16.0 * t - 24.0 * t2 * t, 120.0 * t2 * t2 - 120.0 * t2 + 16.0)
 }
 
 struct Node {
@@ -172,6 +200,28 @@ impl Tape {
             self.push(t0, Op::Leaf),
             self.push(t1, Op::Leaf),
             self.push(t2, Op::Leaf),
+        ]
+    }
+
+    /// Five same-shape constant leaves filled in one host-side pass (the
+    /// order-4 hard-constraint factor jets share one O(d) evaluation).
+    pub fn leaf5_with(
+        &mut self,
+        shape: &[usize],
+        fill: impl FnOnce(&mut [f32], &mut [f32], &mut [f32], &mut [f32], &mut [f32]),
+    ) -> [Var; 5] {
+        let mut t0 = self.alloc(shape);
+        let mut t1 = self.alloc(shape);
+        let mut t2 = self.alloc(shape);
+        let mut t3 = self.alloc(shape);
+        let mut t4 = self.alloc(shape);
+        fill(&mut t0.data, &mut t1.data, &mut t2.data, &mut t3.data, &mut t4.data);
+        [
+            self.push(t0, Op::Leaf),
+            self.push(t1, Op::Leaf),
+            self.push(t2, Op::Leaf),
+            self.push(t3, Op::Leaf),
+            self.push(t4, Op::Leaf),
         ]
     }
 
@@ -376,6 +426,72 @@ impl Tape {
         let o2 = self.push(o2, Op::TanhJetO2 { t0: t0.0, z1: z[1].0, z2: z[2].0, group });
 
         [t0, o1, o2]
+    }
+
+    /// Fused order-4 tanh jet with a row-broadcast primal stream — the
+    /// order-4 sibling of [`Tape::tanh_jet2`] (Faà di Bruno through tanh,
+    /// same convention as `nn::jet::tanh_jet`).
+    ///
+    /// Inputs: `z[0]` at [n, c] (primal), `z[1..=4]` at [n*group, c]
+    /// (derivative streams; row i*group+k belongs to point i).  Returns
+    /// `[t0, o1, o2, o3, o4]` with
+    ///   t0 = tanh(z0)                                     at [n, c]
+    ///   o1 = f1 z1                                        at [n*group, c]
+    ///   o2 = f2 z1² + f1 z2
+    ///   o3 = f3 z1³ + 3 f2 z1 z2 + f1 z3
+    ///   o4 = f4 z1⁴ + 6 f3 z1² z2 + 3 f2 z2² + 4 f2 z1 z3 + f1 z4
+    /// where the factors f1..f4 (see `tanh_factors`) depend only on the
+    /// primal stream and are broadcast by row index, never materialized
+    /// at [n*group, c].  Each output is one tape node with a hand-written
+    /// backward.
+    pub fn tanh_jet4(&mut self, z: [Var; 5], group: usize) -> [Var; 5] {
+        let (n, c) = (self.value(z[0]).shape[0], self.value(z[0]).shape[1]);
+        let b = n * group;
+        for (k, zk) in z.iter().enumerate().skip(1) {
+            assert_eq!(self.value(*zk).shape, vec![b, c], "stream {k} shape");
+        }
+
+        let t0 = self.ew1(z[0], Op::TanhJetT0 { z0: z[0].0 }, |x| x.tanh());
+
+        let mut o1 = self.alloc(&[b, c]);
+        let mut o2 = self.alloc(&[b, c]);
+        let mut o3 = self.alloc(&[b, c]);
+        let mut o4 = self.alloc(&[b, c]);
+        {
+            let t0d = &self.nodes[t0.0].value.data;
+            let z1d = &self.nodes[z[1].0].value.data;
+            let z2d = &self.nodes[z[2].0].value.data;
+            let z3d = &self.nodes[z[3].0].value.data;
+            let z4d = &self.nodes[z[4].0].value.data;
+            for r in 0..b {
+                let p = r / group;
+                for j in 0..c {
+                    let (f1, f2, f3, f4) = tanh_factors(t0d[p * c + j]);
+                    let idx = r * c + j;
+                    let (z1, z2, z3, z4) = (z1d[idx], z2d[idx], z3d[idx], z4d[idx]);
+                    o1.data[idx] = f1 * z1;
+                    o2.data[idx] = f2 * z1 * z1 + f1 * z2;
+                    o3.data[idx] = f3 * z1 * z1 * z1 + 3.0 * f2 * z1 * z2 + f1 * z3;
+                    o4.data[idx] = f4 * z1 * z1 * z1 * z1
+                        + 6.0 * f3 * z1 * z1 * z2
+                        + 3.0 * f2 * z2 * z2
+                        + 4.0 * f2 * z1 * z3
+                        + f1 * z4;
+                }
+            }
+        }
+        let o1 = self.push(o1, Op::TanhJetO1 { t0: t0.0, z1: z[1].0, group });
+        let o2 = self.push(o2, Op::TanhJetO2 { t0: t0.0, z1: z[1].0, z2: z[2].0, group });
+        let o3 = self.push(
+            o3,
+            Op::TanhJetO3 { t0: t0.0, z1: z[1].0, z2: z[2].0, z3: z[3].0, group },
+        );
+        let o4 = self.push(
+            o4,
+            Op::TanhJetO4 { t0: t0.0, z1: z[1].0, z2: z[2].0, z3: z[3].0, z4: z[4].0, group },
+        );
+
+        [t0, o1, o2, o3, o4]
     }
 
     /// Reverse pass from a scalar root; returns per-node gradients.
@@ -631,6 +747,147 @@ impl Tape {
                     }
                 }
             }
+            Op::TanhJetO3 { t0, z1, z2, z3, group } => {
+                let c = nodes[t0].value.shape[1];
+                let rows = nodes[z1].value.shape[0];
+                let t0d = &nodes[t0].value.data;
+                let z1d = &nodes[z1].value.data;
+                let z2d = &nodes[z2].value.data;
+                let z3d = &nodes[z3].value.data;
+                {
+                    // d/dz1 = 3 f3 z1² + 3 f2 z2
+                    let gz1 = slot(grads, z1, &nodes[z1].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (_, f2, f3, _) = tanh_factors(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            gz1.data[idx] += g.data[idx]
+                                * (3.0 * f3 * z1d[idx] * z1d[idx] + 3.0 * f2 * z2d[idx]);
+                        }
+                    }
+                }
+                {
+                    // d/dz2 = 3 f2 z1
+                    let gz2 = slot(grads, z2, &nodes[z2].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (_, f2, _, _) = tanh_factors(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            gz2.data[idx] += g.data[idx] * 3.0 * f2 * z1d[idx];
+                        }
+                    }
+                }
+                {
+                    // d/dz3 = f1
+                    let gz3 = slot(grads, z3, &nodes[z3].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (f1, _, _, _) = tanh_factors(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            gz3.data[idx] += g.data[idx] * f1;
+                        }
+                    }
+                }
+                {
+                    // d/dt0 = gsum(g ⊙ (f3' z1³ + 3 f2' z1 z2 + f1' z3))
+                    let gt0 = slot(grads, t0, &nodes[t0].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (f1p, f2p, f3p, _) = tanh_factor_derivs(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            let (z1e, z2e, z3e) = (z1d[idx], z2d[idx], z3d[idx]);
+                            gt0.data[p * c + j] += g.data[idx]
+                                * (f3p * z1e * z1e * z1e + 3.0 * f2p * z1e * z2e + f1p * z3e);
+                        }
+                    }
+                }
+            }
+            Op::TanhJetO4 { t0, z1, z2, z3, z4, group } => {
+                let c = nodes[t0].value.shape[1];
+                let rows = nodes[z1].value.shape[0];
+                let t0d = &nodes[t0].value.data;
+                let z1d = &nodes[z1].value.data;
+                let z2d = &nodes[z2].value.data;
+                let z3d = &nodes[z3].value.data;
+                let z4d = &nodes[z4].value.data;
+                {
+                    // d/dz1 = 4 f4 z1³ + 12 f3 z1 z2 + 4 f2 z3
+                    let gz1 = slot(grads, z1, &nodes[z1].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (_, f2, f3, f4) = tanh_factors(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            let (z1e, z2e, z3e) = (z1d[idx], z2d[idx], z3d[idx]);
+                            gz1.data[idx] += g.data[idx]
+                                * (4.0 * f4 * z1e * z1e * z1e
+                                    + 12.0 * f3 * z1e * z2e
+                                    + 4.0 * f2 * z3e);
+                        }
+                    }
+                }
+                {
+                    // d/dz2 = 6 f3 z1² + 6 f2 z2
+                    let gz2 = slot(grads, z2, &nodes[z2].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (_, f2, f3, _) = tanh_factors(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            gz2.data[idx] += g.data[idx]
+                                * (6.0 * f3 * z1d[idx] * z1d[idx] + 6.0 * f2 * z2d[idx]);
+                        }
+                    }
+                }
+                {
+                    // d/dz3 = 4 f2 z1
+                    let gz3 = slot(grads, z3, &nodes[z3].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (_, f2, _, _) = tanh_factors(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            gz3.data[idx] += g.data[idx] * 4.0 * f2 * z1d[idx];
+                        }
+                    }
+                }
+                {
+                    // d/dz4 = f1
+                    let gz4 = slot(grads, z4, &nodes[z4].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (f1, _, _, _) = tanh_factors(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            gz4.data[idx] += g.data[idx] * f1;
+                        }
+                    }
+                }
+                {
+                    // d/dt0 = gsum(g ⊙ (f4' z1⁴ + 6 f3' z1² z2 + 3 f2' z2²
+                    //               + 4 f2' z1 z3 + f1' z4))
+                    let gt0 = slot(grads, t0, &nodes[t0].value.shape, pool);
+                    for r in 0..rows {
+                        let p = r / group;
+                        for j in 0..c {
+                            let (f1p, f2p, f3p, f4p) = tanh_factor_derivs(t0d[p * c + j]);
+                            let idx = r * c + j;
+                            let (z1e, z2e, z3e, z4e) =
+                                (z1d[idx], z2d[idx], z3d[idx], z4d[idx]);
+                            gt0.data[p * c + j] += g.data[idx]
+                                * (f4p * z1e * z1e * z1e * z1e
+                                    + 6.0 * f3p * z1e * z1e * z2e
+                                    + 3.0 * f2p * z2e * z2e
+                                    + 4.0 * f2p * z1e * z3e
+                                    + f1p * z4e);
+                        }
+                    }
+                }
+            }
         }
     }
 }
@@ -874,6 +1131,189 @@ mod tests {
             for (x, y) in gf.iter().zip(gu) {
                 assert!((x - y).abs() < 1e-4, "grad: {x} vs {y}");
             }
+        }
+    }
+
+    /// The fused order-4 tanh jet must match the same Faà di Bruno math
+    /// expressed in generic tape ops, forward values and gradients w.r.t.
+    /// all five input streams.
+    #[test]
+    fn fused_tanh_jet4_matches_unfused_composition() {
+        let n = 2;
+        let group = 3;
+        let c = 2;
+        let b = n * group;
+        let z0_data: Vec<f32> = (0..n * c).map(|i| 0.3 * i as f32 - 0.4).collect();
+        let z1_data: Vec<f32> = (0..b * c).map(|i| 0.11 * i as f32 - 0.6).collect();
+        let z2_data: Vec<f32> = (0..b * c).map(|i| -0.07 * i as f32 + 0.4).collect();
+        let z3_data: Vec<f32> = (0..b * c).map(|i| 0.05 * i as f32 - 0.3).collect();
+        let z4_data: Vec<f32> = (0..b * c).map(|i| -0.03 * i as f32 + 0.2).collect();
+
+        // fused
+        let mut tape = Tape::new();
+        let z0 = tape.input(Tensor::from_vec(&[n, c], z0_data.clone()));
+        let z1 = tape.input(Tensor::from_vec(&[b, c], z1_data.clone()));
+        let z2 = tape.input(Tensor::from_vec(&[b, c], z2_data.clone()));
+        let z3 = tape.input(Tensor::from_vec(&[b, c], z3_data.clone()));
+        let z4 = tape.input(Tensor::from_vec(&[b, c], z4_data.clone()));
+        let [t0, o1, o2, o3, o4] = tape.tanh_jet4([z0, z1, z2, z3, z4], group);
+        let t0bc = tape.broadcast_rows(t0, group);
+        let mut s = tape.add(o1, o2);
+        s = tape.add(s, o3);
+        s = tape.add(s, o4);
+        s = tape.add(s, t0bc);
+        let sq = tape.square(s);
+        let loss = tape.mean_all(sq);
+        let fused_val: Vec<Vec<f32>> = [t0, o1, o2, o3, o4]
+            .iter()
+            .map(|v| tape.value(*v).data.clone())
+            .collect();
+        let grads = tape.backward(loss);
+        let fused_g: Vec<Vec<f32>> = [z0, z1, z2, z3, z4]
+            .iter()
+            .map(|v| grads[v.0].as_ref().unwrap().data.clone())
+            .collect();
+
+        // unfused: the same math via generic ops and explicit broadcasts
+        let mut ut = Tape::new();
+        let uz0 = ut.input(Tensor::from_vec(&[n, c], z0_data.clone()));
+        let uz1 = ut.input(Tensor::from_vec(&[b, c], z1_data.clone()));
+        let uz2 = ut.input(Tensor::from_vec(&[b, c], z2_data.clone()));
+        let uz3 = ut.input(Tensor::from_vec(&[b, c], z3_data.clone()));
+        let uz4 = ut.input(Tensor::from_vec(&[b, c], z4_data.clone()));
+        let ut0 = ut.tanh(uz0);
+        let ut0bc = ut.broadcast_rows(ut0, group);
+        let t0sq = ut.mul(ut0bc, ut0bc);
+        let ones = ut.constant(Tensor::from_vec(&[b, c], vec![1.0; b * c]));
+        let f1 = ut.sub(ones, t0sq); // 1 - t²
+        let f2h = ut.mul(ut0bc, f1);
+        let f2 = ut.scale(f2h, -2.0); // -2 t f1
+        let six_t2 = ut.scale(t0sq, 6.0);
+        let twos = ut.scale(ones, 2.0);
+        let poly3 = ut.sub(six_t2, twos);
+        let f3 = ut.mul(f1, poly3); // f1 (6t² - 2)
+        let t0cu = ut.mul(ut0bc, t0sq);
+        let sixteen_t = ut.scale(ut0bc, 16.0);
+        let twenty4_t3 = ut.scale(t0cu, 24.0);
+        let poly4 = ut.sub(sixteen_t, twenty4_t3);
+        let f4 = ut.mul(f1, poly4); // f1 (16t - 24t³)
+
+        let uo1 = ut.mul(f1, uz1);
+        let z1sq = ut.mul(uz1, uz1);
+        let ta = ut.mul(f2, z1sq);
+        let tb = ut.mul(f1, uz2);
+        let uo2 = ut.add(ta, tb);
+        let z1cu = ut.mul(z1sq, uz1);
+        let o3a = ut.mul(f3, z1cu);
+        let z1z2 = ut.mul(uz1, uz2);
+        let o3b0 = ut.mul(f2, z1z2);
+        let o3b = ut.scale(o3b0, 3.0);
+        let o3c = ut.mul(f1, uz3);
+        let o3ab = ut.add(o3a, o3b);
+        let uo3 = ut.add(o3ab, o3c);
+        let z1q = ut.mul(z1sq, z1sq);
+        let o4a = ut.mul(f4, z1q);
+        let z1sqz2 = ut.mul(z1sq, uz2);
+        let o4b0 = ut.mul(f3, z1sqz2);
+        let o4b = ut.scale(o4b0, 6.0);
+        let z2sq = ut.mul(uz2, uz2);
+        let o4c0 = ut.mul(f2, z2sq);
+        let o4c = ut.scale(o4c0, 3.0);
+        let z1z3 = ut.mul(uz1, uz3);
+        let o4d0 = ut.mul(f2, z1z3);
+        let o4d = ut.scale(o4d0, 4.0);
+        let o4e = ut.mul(f1, uz4);
+        let o4ab = ut.add(o4a, o4b);
+        let o4cd = ut.add(o4c, o4d);
+        let o4abcd = ut.add(o4ab, o4cd);
+        let uo4 = ut.add(o4abcd, o4e);
+        let mut us = ut.add(uo1, uo2);
+        us = ut.add(us, uo3);
+        us = ut.add(us, uo4);
+        us = ut.add(us, ut0bc);
+        let usq = ut.square(us);
+        let uloss = ut.mean_all(usq);
+        let unfused_val: Vec<Vec<f32>> = [ut0, uo1, uo2, uo3, uo4]
+            .iter()
+            .map(|v| ut.value(*v).data.clone())
+            .collect();
+        let ugrads = ut.backward(uloss);
+        let unfused_g: Vec<Vec<f32>> = [uz0, uz1, uz2, uz3, uz4]
+            .iter()
+            .map(|v| ugrads[v.0].as_ref().unwrap().data.clone())
+            .collect();
+
+        for (stream, (a, bvals)) in fused_val.iter().zip(&unfused_val).enumerate() {
+            for (x, y) in a.iter().zip(bvals) {
+                assert!((x - y).abs() < 1e-5, "forward stream {stream}: {x} vs {y}");
+            }
+        }
+        for (stream, (gf, gu)) in fused_g.iter().zip(&unfused_g).enumerate() {
+            for (x, y) in gf.iter().zip(gu) {
+                assert!((x - y).abs() < 1e-4, "grad stream {stream}: {x} vs {y}");
+            }
+        }
+    }
+
+    /// End-to-end finite-difference check of the order-4 backward: the
+    /// gradient of a scalar pipeline through `tanh_jet4` w.r.t. every
+    /// element of every input stream.
+    #[test]
+    fn tanh_jet4_grad_matches_fd() {
+        let n = 2;
+        let group = 2;
+        let c = 2;
+        let b = n * group;
+        let lens = [n * c, b * c, b * c, b * c, b * c];
+        let mut flat: Vec<f32> = Vec::new();
+        for (k, &len) in lens.iter().enumerate() {
+            for i in 0..len {
+                flat.push(0.13 * (i as f32 + 1.0) * (1.0 - 0.3 * k as f32) - 0.25);
+            }
+        }
+        let eval = |flat: &[f32]| -> (f32, Vec<Vec<f32>>) {
+            let mut tape = Tape::new();
+            let mut off = 0;
+            let mut vars = Vec::new();
+            for (k, &len) in lens.iter().enumerate() {
+                let shape = if k == 0 { [n, c] } else { [b, c] };
+                vars.push(tape.input(Tensor::from_vec(&shape, flat[off..off + len].to_vec())));
+                off += len;
+            }
+            let z = [vars[0], vars[1], vars[2], vars[3], vars[4]];
+            let [t0, o1, o2, o3, o4] = tape.tanh_jet4(z, group);
+            let t0bc = tape.broadcast_rows(t0, group);
+            let mut s = tape.add(o1, o2);
+            s = tape.add(s, o3);
+            s = tape.add(s, o4);
+            s = tape.add(s, t0bc);
+            let sq = tape.square(s);
+            let loss = tape.mean_all(sq);
+            let loss_val = tape.value(loss).data[0];
+            let grads = tape.backward(loss);
+            let g = vars
+                .iter()
+                .map(|v| grads[v.0].as_ref().unwrap().data.clone())
+                .collect();
+            (loss_val, g)
+        };
+        let (_, grads) = eval(&flat);
+        let h = 1e-3f32;
+        let mut off = 0;
+        for (k, &len) in lens.iter().enumerate() {
+            for i in 0..len {
+                let mut fp = flat.clone();
+                fp[off + i] += h;
+                let mut fm = flat.clone();
+                fm[off + i] -= h;
+                let fd = (eval(&fp).0 - eval(&fm).0) / (2.0 * h);
+                let got = grads[k][i];
+                assert!(
+                    (got - fd).abs() < 2e-3 * (1.0 + fd.abs()) + 2e-3,
+                    "stream {k} elem {i}: tape {got} vs fd {fd}"
+                );
+            }
+            off += len;
         }
     }
 

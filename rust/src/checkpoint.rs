@@ -17,16 +17,21 @@ pub struct CheckpointMeta {
     pub step: usize,
     pub state_len: usize,
     pub coeff: Vec<f32>,
+    /// Residual batch size of the run (None in pre-batch checkpoints and
+    /// on the artifact backend, where the batch is baked into the
+    /// artifact).  The native trainer needs it to resume bit-exactly.
+    pub batch_n: Option<usize>,
 }
 
 pub fn save(
     path: impl AsRef<Path>,
     config: &TrainConfig,
     step: usize,
+    batch_n: Option<usize>,
     coeff: &[f32],
     state: &[f32],
 ) -> Result<()> {
-    let header_val = obj(vec![
+    let mut header_fields = vec![
         ("config", config.to_json()),
         ("step", num(step as f64)),
         ("state_len", num(state.len() as f64)),
@@ -34,7 +39,11 @@ pub fn save(
             "coeff",
             Value::Arr(coeff.iter().map(|&c| num(c as f64)).collect()),
         ),
-    ]);
+    ];
+    if let Some(b) = batch_n {
+        header_fields.push(("batch_n", num(b as f64)));
+    }
+    let header_val = obj(header_fields);
     let header = header_val.to_json().into_bytes();
     if let Some(parent) = path.as_ref().parent() {
         std::fs::create_dir_all(parent)?;
@@ -77,6 +86,10 @@ pub fn load(path: impl AsRef<Path>) -> Result<(CheckpointMeta, Vec<f32>)> {
             .iter()
             .map(|c| Ok(c.as_f64()? as f32))
             .collect::<Result<_>>()?,
+        batch_n: match v.opt("batch_n") {
+            Some(b) => Some(b.as_usize()?),
+            None => None,
+        },
     };
     let mut payload = Vec::new();
     f.read_to_end(&mut payload)?;
@@ -116,13 +129,24 @@ mod tests {
         let path = dir.join("run.ckpt");
         let state: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
         let coeff = vec![1.0f32, -2.0];
-        save(&path, &config(), 42, &coeff, &state).unwrap();
+        save(&path, &config(), 42, Some(16), &coeff, &state).unwrap();
         let (meta, loaded) = load(&path).unwrap();
         assert_eq!(meta.step, 42);
         assert_eq!(meta.coeff, coeff);
         assert_eq!(meta.config.d, 10);
         assert_eq!(meta.config.estimator, Estimator::HteRademacher);
+        assert_eq!(meta.batch_n, Some(16));
         assert_eq!(loaded, state);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_n_is_optional_in_the_header() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-nobatch-{}", std::process::id()));
+        let path = dir.join("run.ckpt");
+        save(&path, &config(), 3, None, &[0.5], &[1.0, 2.0]).unwrap();
+        let (meta, _) = load(&path).unwrap();
+        assert_eq!(meta.batch_n, None);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -15,6 +15,7 @@
 mod experiments;
 mod metrics;
 mod native;
+mod native_experiments;
 mod schedule;
 mod spec;
 #[cfg(feature = "xla")]
@@ -29,6 +30,7 @@ pub use experiments::{
 };
 pub use metrics::{rss_mb, MetricsLogger, StepRecord};
 pub use native::NativeTrainer;
+pub use native_experiments::{experiment_biharmonic_native, NativeExperimentOpts};
 pub use schedule::LinearDecay;
 pub use spec::{mean_std, problem_for, EvalPool, ExperimentRow, RunSummary, TrainConfig};
 #[cfg(feature = "xla")]

@@ -1,22 +1,30 @@
 //! Native backend: the same training loop with zero XLA in it.
 //!
-//! Runs the Sine-Gordon probe methods entirely through the in-repo
-//! tensor/autodiff/jet engine (`nn::native_loss`) — jet-forward residual,
-//! one reverse pass, Adam.  Purpose: (a) the repo stays usable with no
-//! artifacts at all, (b) an independent implementation cross-validating
-//! the compiled path (see `examples/native_backend.rs`), (c) the
-//! substrate for the AD-mode ablation benches.
+//! Runs the Sine-Gordon probe methods (order-2 HTE trace) *and* the
+//! biharmonic probe method (order-4 TVP, Thm 3.4) entirely through the
+//! in-repo tensor/autodiff/jet engine (`nn::native_loss`) — jet-forward
+//! residual, one reverse pass, Adam.  Purpose: (a) the repo stays usable
+//! with no artifacts at all, (b) an independent implementation
+//! cross-validating the compiled path (see `examples/native_backend.rs`),
+//! (c) the substrate for the AD-mode ablation benches.
 //!
 //! The step is allocation-free at steady state: the residual batch and
 //! probe matrix are filled into reusable host buffers, the parameter /
 //! Adam-moment vectors persist, and `NativeEngine` owns per-worker tape
 //! workspaces that recycle every intermediate (DESIGN.md §7).
+//!
+//! Checkpointing: the packed `params | m | v | t` state round-trips
+//! through `checkpoint.rs`, and [`NativeTrainer::resume`] replays the
+//! per-step sampler/probe randomness so a resumed run is bitwise
+//! identical to an uninterrupted one.
 
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::estimators::ProbeGenerator;
+use crate::checkpoint;
+use crate::estimators::{Estimator, ProbeGenerator};
 use crate::nn::{adam_step, Mlp, NativeBatch, NativeEngine};
 use crate::pde::{DomainSampler, PdeProblem};
 use crate::rng::{Normal, Xoshiro256pp};
@@ -56,19 +64,42 @@ impl NativeTrainer {
     /// Like [`NativeTrainer::new`] with an explicit worker-thread count.
     /// Results are bitwise identical for any `threads` (ordered reduction).
     pub fn with_threads(config: TrainConfig, batch_n: usize, threads: usize) -> Result<Self> {
-        if config.method != "probe" || config.family == "bihar" {
+        let bihar = config.family == "bihar";
+        let method_ok = match config.method.as_str() {
+            "probe" => true,
+            // accept the artifact manifest's name for the order-4 method
+            "probe4" => bihar,
+            _ => false,
+        };
+        if !method_ok {
             bail!(
-                "native backend supports the Sine-Gordon probe methods (got {}/{})",
+                "native backend supports the probe methods (got {}/{})",
                 config.family,
                 config.method
             );
         }
+        // Thm 3.4: the order-4 TVP estimator is only unbiased under
+        // Gaussian probes.  The generic Rademacher default is upgraded —
+        // written back into the config so labels, metrics and checkpoints
+        // report the distribution actually used; explicitly incompatible
+        // probe distributions are an error.
+        let mut config = config;
+        if bihar {
+            config.estimator = match config.estimator {
+                Estimator::HteRademacher | Estimator::HteGaussian => Estimator::HteGaussian,
+                other => bail!(
+                    "the biharmonic TVP requires Gaussian probes (Thm 3.4), got {}",
+                    other.name()
+                ),
+            };
+        }
+        let estimator = config.estimator;
         let mut root = Xoshiro256pp::new(config.seed);
         let problem = problem_for(&config.family, config.d)?;
         let mut coeff = vec![0.0f32; problem.n_coeff()];
         Normal::new().fill_f32(&mut root.fork(1), &mut coeff);
         let sampler = DomainSampler::new(problem.domain(), config.d, root.fork(2));
-        let probes = ProbeGenerator::new(config.estimator, config.d, config.v, root.fork(3));
+        let probes = ProbeGenerator::new(estimator, config.d, config.v, root.fork(3));
         let mlp = Mlp::init(config.d, &mut root.fork(6));
         let n_params = mlp.n_params();
         let flat = mlp.pack();
@@ -134,19 +165,24 @@ impl NativeTrainer {
         (num / den.max(1e-30)).sqrt()
     }
 
+    /// Train until `config.epochs` total steps have run.  On a fresh
+    /// trainer that is the whole schedule; on a [`NativeTrainer::resume`]d
+    /// one it is the remaining steps.
     pub fn run(&mut self, logger: &mut MetricsLogger) -> Result<RunSummary> {
         let start = Instant::now();
         let epochs = self.config.epochs;
-        for i in 0..epochs {
+        let start_step = self.step_idx;
+        while self.step_idx < epochs {
             self.step()?;
             let log_every = self.config.log_every.max(1);
-            if (i + 1) % log_every == 0 || i + 1 == epochs {
+            if self.step_idx % log_every == 0 || self.step_idx == epochs {
+                let done = (self.step_idx - start_step) as f64;
                 logger.log(&StepRecord {
                     step: self.step_idx,
                     loss: self.last_loss,
                     lr: self.schedule.at(self.step_idx.saturating_sub(1)),
                     elapsed_s: start.elapsed().as_secs_f64(),
-                    it_per_sec: self.step_idx as f64 / start.elapsed().as_secs_f64(),
+                    it_per_sec: done / start.elapsed().as_secs_f64(),
                     rss_mb: rss_mb(),
                 })?;
             }
@@ -158,10 +194,68 @@ impl NativeTrainer {
             steps: self.step_idx,
             final_loss: self.last_loss,
             rel_l2: None,
-            it_per_sec: self.step_idx as f64 / wall,
+            it_per_sec: (self.step_idx - start_step) as f64 / wall,
             rss_mb: rss_mb(),
             wall_s: wall,
         })
+    }
+
+    /// Packed `params | m | v | t` state — the native mirror of the
+    /// artifact backend's device-resident packed vector (§6), minus the
+    /// loss slot.  Packs from `mlp` (not a cached flat) so external edits
+    /// to the public field are honored.
+    pub fn state_host(&self) -> Vec<f32> {
+        let n = self.mlp.n_params();
+        let mut out = vec![0.0f32; 3 * n + 1];
+        self.mlp.pack_into(&mut out[..n]);
+        out[n..2 * n].copy_from_slice(&self.m);
+        out[2 * n..3 * n].copy_from_slice(&self.v);
+        out[3 * n] = self.t;
+        out
+    }
+
+    /// Write a checkpoint (config + step + batch + coeff + packed state)
+    /// through the `checkpoint.rs` container format.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        checkpoint::save(
+            path,
+            &self.config,
+            self.step_idx,
+            Some(self.batch_n),
+            &self.coeff,
+            &self.state_host(),
+        )
+    }
+
+    /// Rebuild a trainer from a checkpoint so that continuing it is
+    /// **bitwise identical** to never having stopped: the packed Adam
+    /// state is restored, the batch size comes from the checkpoint, and
+    /// the per-step sampler/probe randomness is replayed up to the
+    /// checkpointed step (the replay consumes one batch and one probe
+    /// matrix per step, so the batch size must not change — which is why
+    /// it is stored rather than taken from the caller).
+    pub fn resume(path: impl AsRef<Path>, threads: usize) -> Result<Self> {
+        let (meta, state) = checkpoint::load(path)?;
+        let Some(batch_n) = meta.batch_n else {
+            bail!("checkpoint has no batch_n (artifact-backend or pre-batch checkpoint?)");
+        };
+        let mut tr = Self::with_threads(meta.config, batch_n, threads)?;
+        let n = tr.mlp.n_params();
+        if state.len() != 3 * n + 1 {
+            bail!("checkpoint state has {} floats, expected 3·{n}+1 (params|m|v|t)", state.len());
+        }
+        tr.flat.copy_from_slice(&state[..n]);
+        tr.mlp.unpack_into(&tr.flat);
+        tr.m.copy_from_slice(&state[n..2 * n]);
+        tr.v.copy_from_slice(&state[2 * n..3 * n]);
+        tr.t = state[3 * n];
+        tr.coeff = meta.coeff;
+        for _ in 0..meta.step {
+            tr.sampler.fill_batch(&mut tr.xs_host);
+            tr.probes.fill(&mut tr.probe_host);
+        }
+        tr.step_idx = meta.step;
+        Ok(tr)
     }
 }
 
@@ -183,6 +277,10 @@ mod tests {
             lambda_g: 10.0,
             log_every: usize::MAX,
         }
+    }
+
+    fn bihar_config(d: usize, epochs: usize) -> TrainConfig {
+        TrainConfig { family: "bihar".into(), lr0: 1e-3, v: 8, ..config(d, epochs) }
     }
 
     #[test]
@@ -216,8 +314,96 @@ mod tests {
         let mut cfg = config(6, 10);
         cfg.method = "full".into();
         assert!(NativeTrainer::new(cfg, 8).is_err());
+        // probe4 is the biharmonic method name, not a Sine-Gordon one
         let mut cfg = config(6, 10);
-        cfg.family = "bihar".into();
+        cfg.method = "probe4".into();
         assert!(NativeTrainer::new(cfg, 8).is_err());
+        // the order-4 TVP has no basis-probe variant (Thm 3.4 is Gaussian)
+        let mut cfg = bihar_config(6, 10);
+        cfg.estimator = Estimator::Sdgd;
+        assert!(NativeTrainer::new(cfg, 8).is_err());
+    }
+
+    #[test]
+    fn native_bihar_training_decreases_loss() {
+        use crate::nn::{bihar_residual_loss_reference, NativeBatch};
+        use crate::pde::{Domain, DomainSampler};
+        use crate::rng::{Normal, Xoshiro256pp};
+
+        let mut trainer = NativeTrainer::new(bihar_config(4, 300), 8).unwrap();
+        // fixed f64 jet-forward eval batch, independent of training RNG
+        let mut rng = Xoshiro256pp::new(33);
+        let mut sampler = DomainSampler::new(Domain::Annulus, 4, rng.fork(0));
+        let xs = sampler.batch(16);
+        let mut probes = vec![0.0f32; 8 * 4];
+        Normal::new().fill_f32(&mut rng, &mut probes);
+        let coeff = trainer.coeff.clone();
+        let problem = problem_for("bihar", 4).unwrap();
+        let eval = |mlp: &crate::nn::Mlp| {
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 16, v: 8 };
+            bihar_residual_loss_reference(mlp, problem.as_ref(), &batch)
+        };
+        let before = eval(&trainer.mlp);
+        let mut logger = MetricsLogger::null();
+        trainer.run(&mut logger).unwrap();
+        let after = eval(&trainer.mlp);
+        assert!(trainer.last_loss.is_finite(), "non-finite training loss");
+        assert!(after.is_finite() && after < before, "{before} -> {after}");
+    }
+
+    #[test]
+    fn bihar_thread_count_does_not_change_training_bitwise() {
+        let mut a = NativeTrainer::with_threads(bihar_config(4, 12), 9, 1).unwrap();
+        let mut b = NativeTrainer::with_threads(bihar_config(4, 12), 9, 4).unwrap();
+        for _ in 0..12 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        assert_eq!(a.last_loss.to_bits(), b.last_loss.to_bits());
+        for (x, y) in a.flat.iter().zip(&b.flat) {
+            assert_eq!(x.to_bits(), y.to_bits(), "parameters diverged across thread counts");
+        }
+    }
+
+    /// Checkpoint → resume must be bitwise identical to never stopping,
+    /// for both residual orders.
+    #[test]
+    fn resume_matches_uninterrupted() {
+        for cfg in [config(5, 24), bihar_config(4, 24)] {
+            let dir = std::env::temp_dir()
+                .join(format!("hte-native-ckpt-{}-{}", cfg.family, std::process::id()));
+            let path = dir.join("mid.ckpt");
+
+            let mut straight = NativeTrainer::with_threads(cfg.clone(), 8, 2).unwrap();
+            for _ in 0..24 {
+                straight.step().unwrap();
+            }
+
+            let mut interrupted = NativeTrainer::with_threads(cfg.clone(), 8, 2).unwrap();
+            for _ in 0..11 {
+                interrupted.step().unwrap();
+            }
+            interrupted.save_checkpoint(&path).unwrap();
+            let mut resumed = NativeTrainer::resume(&path, 3).unwrap();
+            assert_eq!(resumed.step_idx, 11);
+            assert_eq!(resumed.batch_n, 8, "batch size restored from the checkpoint");
+            for _ in 0..13 {
+                interrupted.step().unwrap();
+                resumed.step().unwrap();
+            }
+
+            assert_eq!(straight.last_loss.to_bits(), interrupted.last_loss.to_bits());
+            assert_eq!(straight.last_loss.to_bits(), resumed.last_loss.to_bits());
+            let (sf, of, rf) = (straight.mlp.pack(), interrupted.mlp.pack(), resumed.mlp.pack());
+            for ((a, b), c) in sf.iter().zip(&of).zip(&rf) {
+                assert_eq!(a.to_bits(), b.to_bits(), "uninterrupted vs interrupted");
+                assert_eq!(a.to_bits(), c.to_bits(), "uninterrupted vs resumed");
+            }
+            let (ss, rs) = (straight.state_host(), resumed.state_host());
+            for (a, b) in ss.iter().zip(&rs) {
+                assert_eq!(a.to_bits(), b.to_bits(), "Adam state diverged after resume");
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
 }

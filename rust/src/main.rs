@@ -27,6 +27,7 @@ use hte_pinn::coordinator::{
 };
 use hte_pinn::estimators::Estimator;
 use hte_pinn::memmodel;
+use hte_pinn::nn;
 use hte_pinn::pde::PdeProblem;
 #[cfg(feature = "xla")]
 use hte_pinn::runtime::Engine;
@@ -36,13 +37,16 @@ use hte_pinn::util::args::Args;
 
 const USAGE: &str = "usage: hte-pinn <info|train|table|memmodel> [flags]
   info     --artifacts DIR
-  train    --config FILE | [--family sg2 --method probe --estimator hte
-           --d 100 --v 16 --epochs 2000 --lr0 1e-3 --seed 0 --lambda-g 10
-           --log-every 100] [--backend native|artifact] [--batch 100]
-           --artifacts DIR [--metrics FILE] [--eval-points 20000]
-           [--save FILE]
-  table    --which 1..5 [--epochs N --seeds K --threads T
-           --eval-points M --lr0 LR --out DIR --artifacts DIR]
+  train    --config FILE | [--family sg2|sg3|bihar --method probe
+           --estimator hte --d 100 --v 16 --epochs 2000 --lr0 1e-3
+           --seed 0 --lambda-g 10 --log-every 100]
+           [--backend native|artifact] [--batch 100] --artifacts DIR
+           [--metrics FILE] [--eval-points 20000] [--save FILE]
+           [--resume FILE  (native: continue a checkpoint to its epochs)]
+  table    --which 1..5 [--backend native|artifact] [--epochs N --seeds K
+           --threads T --eval-points M --lr0 LR --out DIR]
+           [artifact: --artifacts DIR] [native: --batch N --dims D,..
+           --vs V,..  (table 5 only)]
   memmodel [--batch 100 --dims 100,1000,10000 --v 16 --order 2]";
 
 fn cmd_info(mut args: Args) -> Result<()> {
@@ -70,6 +74,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let metrics = args.get("metrics");
     let eval_points: usize = args.get_parse("eval-points", 20_000)?;
     let save = args.get("save");
+    let resume = args.get("resume");
     let default_backend = if cfg!(feature = "xla") { "artifact" } else { "native" };
     let backend = args.get_or("backend", default_backend);
     let batch_n: usize = args.get_parse("batch", 100usize)?;
@@ -97,14 +102,40 @@ fn cmd_train(mut args: Args) -> Result<()> {
     };
     args.finish()?;
 
+    if save.is_some() && configs.len() > 1 {
+        bail!("--save writes a single checkpoint; runs would clobber it — use one run config");
+    }
     match backend.as_str() {
         "native" => {
-            if save.is_some() {
-                bail!("--save stores packed artifact state; not supported by --backend native");
+            if resume.is_some() && configs.len() > 1 {
+                bail!("--resume continues one checkpointed run; drop the multi-run config");
             }
             for cfg in configs {
-                println!("== native-{} ==", cfg.label());
-                let mut trainer = NativeTrainer::new(cfg.clone(), batch_n)?;
+                let mut trainer = match &resume {
+                    Some(path) => {
+                        let t = NativeTrainer::resume(path, nn::default_threads())?;
+                        println!(
+                            "== native-{} (resumed at step {}) ==",
+                            t.config.label(),
+                            t.step_idx
+                        );
+                        if t.step_idx >= t.config.epochs {
+                            println!(
+                                "checkpoint already completed its {} epochs; evaluating only \
+                                 (final_loss is NaN — the loss is not part of the packed state)",
+                                t.config.epochs
+                            );
+                        }
+                        t
+                    }
+                    None => {
+                        // label comes from the trainer's config: it may
+                        // upgrade the estimator (bihar -> Gaussian probes)
+                        let t = NativeTrainer::new(cfg.clone(), batch_n)?;
+                        println!("== native-{} ==", t.config.label());
+                        t
+                    }
+                };
                 let mut logger = match &metrics {
                     Some(path) => MetricsLogger::to_file(path)?,
                     None => MetricsLogger::null(),
@@ -118,14 +149,23 @@ fn cmd_train(mut args: Args) -> Result<()> {
                     trainer.threads()
                 );
                 if eval_points > 0 {
-                    let problem = problem_for(&cfg.family, cfg.d)?;
-                    let pool = EvalPool::generate(problem.domain(), cfg.d, eval_points, cfg.seed);
+                    let run_cfg = &trainer.config;
+                    let problem = problem_for(&run_cfg.family, run_cfg.d)?;
+                    let pool =
+                        EvalPool::generate(problem.domain(), run_cfg.d, eval_points, run_cfg.seed);
                     println!("relative L2 = {:.4e}", trainer.evaluate(&pool));
+                }
+                if let Some(path) = &save {
+                    trainer.save_checkpoint(path)?;
+                    println!("checkpoint -> {path}");
                 }
             }
             Ok(())
         }
         "artifact" | "xla" => {
+            if resume.is_some() {
+                bail!("--resume is supported by --backend native only");
+            }
             #[cfg(feature = "xla")]
             {
                 let engine = Engine::load(&artifact_dir)?;
@@ -152,10 +192,12 @@ fn cmd_train(mut args: Args) -> Result<()> {
                         println!("relative L2 = {:.4e}", trainer.evaluate(&pool)?);
                     }
                     if let Some(path) = &save {
+                        // batch_n is baked into the artifact, not resumable
                         checkpoint::save(
                             path,
                             &cfg,
                             trainer.step_idx,
+                            None,
                             &trainer.coeff,
                             &trainer.state_host()?,
                         )?;
@@ -177,15 +219,67 @@ fn cmd_train(mut args: Args) -> Result<()> {
     }
 }
 
-#[cfg(feature = "xla")]
 fn cmd_table(mut args: Args) -> Result<()> {
+    let which: u8 = args.get_parse("which", 0u8)?;
+    let default_backend = if cfg!(feature = "xla") { "artifact" } else { "native" };
+    let backend = args.get_or("backend", default_backend);
+    match backend.as_str() {
+        "native" => cmd_table_native(which, args),
+        "artifact" | "xla" => cmd_table_artifact(which, args),
+        other => bail!("unknown table backend {other} (native|artifact)"),
+    }
+}
+
+/// Native (default-build) table driver: Table 5 through the order-4 TVP
+/// engine, no artifacts required.
+fn cmd_table_native(which: u8, mut args: Args) -> Result<()> {
+    use hte_pinn::coordinator::{experiment_biharmonic_native, NativeExperimentOpts};
+    use hte_pinn::util::json::Value;
+
+    if which != 5 {
+        bail!(
+            "the native table driver covers table 5 (biharmonic); \
+             tables 1-4 need --backend artifact (--features xla)"
+        );
+    }
+    let epochs: usize = args.get_parse("epochs", 2000)?;
+    let seeds: usize = args.get_parse("seeds", 3)?;
+    let threads: usize = args.get_parse("threads", 2)?;
+    let eval_points: usize = args.get_parse("eval-points", 20_000)?;
+    let lr0: f32 = args.get_parse("lr0", 1e-3)?;
+    let batch: usize = args.get_parse("batch", 100)?;
+    let dims = args.get_list("dims", &[10, 100])?;
+    let vs = args.get_list("vs", &[4, 16, 64])?;
+    let out = PathBuf::from(args.get_or("out", "results"));
+    args.finish()?;
+
+    let opts = NativeExperimentOpts {
+        seeds: (0..seeds as u64).collect(),
+        epochs,
+        threads,
+        eval_points,
+        lr0,
+        batch_n: batch,
+    };
+    let rows = experiment_biharmonic_native(&opts, &dims, &vs)?;
+    let rendered = table::render("Table 5 (native): biharmonic TVP-HTE, order-4 jets", &rows);
+    println!("{rendered}");
+    std::fs::create_dir_all(&out)?;
+    std::fs::write(out.join("table5_native.md"), &rendered)?;
+    let rows_json = Value::Arr(rows.iter().map(|r| r.to_json()).collect()).to_json();
+    std::fs::write(out.join("table5_native_rows.json"), rows_json)?;
+    println!("wrote {}/table5_native.md", out.display());
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn cmd_table_artifact(which: u8, mut args: Args) -> Result<()> {
     use hte_pinn::coordinator::{
         experiment_biharmonic, experiment_bias, experiment_gpinn, experiment_sine_gordon,
         experiment_v_sweep, ExperimentOpts,
     };
     use hte_pinn::util::json::Value;
 
-    let which: u8 = args.get_parse("which", 0u8)?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let epochs: usize = args.get_parse("epochs", 2000)?;
     let seeds: usize = args.get_parse("seeds", 3)?;
@@ -244,8 +338,11 @@ fn cmd_table(mut args: Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn cmd_table(_args: Args) -> Result<()> {
-    bail!("`table` drives the compiled-artifact sweeps: rebuild with --features xla")
+fn cmd_table_artifact(_which: u8, _args: Args) -> Result<()> {
+    bail!(
+        "the artifact table driver needs --features xla \
+         (table 5 runs natively: --backend native)"
+    )
 }
 
 fn cmd_memmodel(mut args: Args) -> Result<()> {

@@ -67,7 +67,7 @@ fn tanh_jet(streams: &[Tensor], order: usize) -> Vec<Tensor> {
 }
 
 /// Binomial coefficients up to order 4 (Leibniz products).
-const BINOM: [[f64; 5]; 5] = [
+pub const BINOM: [[f64; 5]; 5] = [
     [1.0, 0.0, 0.0, 0.0, 0.0],
     [1.0, 1.0, 0.0, 0.0, 0.0],
     [1.0, 2.0, 1.0, 0.0, 0.0],
@@ -77,7 +77,8 @@ const BINOM: [[f64; 5]; 5] = [
 
 /// Jet of the hard-constraint factor along x + t v, for the problem's
 /// domain geometry (ball: 1-s; annulus: (1-s)(4-s); s = |x|^2).
-fn factor_jet(problem: &dyn PdeProblem, x: &[f32], v: &[f32], order: usize) -> Vec<f64> {
+/// Public so the parity suite can gate it against finite differences.
+pub fn factor_jet(problem: &dyn PdeProblem, x: &[f32], v: &[f32], order: usize) -> Vec<f64> {
     let s0: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
     let s1: f64 = 2.0 * x.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
     let s2: f64 = 2.0 * v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();

@@ -11,9 +11,10 @@ mod jet;
 mod mlp;
 mod native_loss;
 
-pub use jet::{jet_forward, JetStreams};
+pub use jet::{factor_jet, jet_forward, JetStreams};
 pub use mlp::{Mlp, HIDDEN};
 pub use native_loss::{
-    adam_step, default_threads, hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid,
-    hte_residual_loss_reference, NativeBatch, NativeEngine,
+    adam_step, bihar_residual_loss_and_grad, bihar_residual_loss_reference, default_threads,
+    hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference,
+    NativeBatch, NativeEngine, CHUNK_POINTS,
 };

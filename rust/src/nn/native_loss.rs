@@ -1,4 +1,5 @@
-//! Native HTE residual loss + parameter gradient (Sine-Gordon families).
+//! Native HTE/TVP residual losses + parameter gradients (Sine-Gordon
+//! order-2 trace families and the order-4 biharmonic TVP of Thm 3.4).
 //!
 //! Forward high-order derivatives come from the jet rules written as tape
 //! ops (Taylor mode), then a single reverse pass over the tape produces
@@ -57,6 +58,28 @@ fn factor_jets2(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 3] {
     }
 }
 
+/// Order-4 host-side factor jets along x + t v (the `|x|²` jet terminates
+/// at order 2, so the annulus product jet terminates at order 4 — the
+/// same Leibniz combination as `jet::factor_jet`, allocation-free).
+fn factor_jets4(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 5] {
+    let s0: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
+    let s1: f64 = 2.0 * x.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
+    let s2: f64 = 2.0 * v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();
+    let a = [1.0 - s0, -s1, -s2, 0.0, 0.0];
+    match problem.domain() {
+        Domain::UnitBall => [a[0] as f32, a[1] as f32, a[2] as f32, 0.0, 0.0],
+        Domain::Annulus => {
+            let b = [4.0 - s0, -s1, -s2, 0.0, 0.0];
+            let mut out = [0.0f32; 5];
+            for (k, slot) in out.iter_mut().enumerate() {
+                let acc: f64 = (0..=k).map(|j| super::jet::BINOM[k][j] * a[j] * b[k - j]).sum();
+                *slot = acc as f32;
+            }
+            out
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Probe-batched engine
 // ---------------------------------------------------------------------------
@@ -64,7 +87,8 @@ fn factor_jets2(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 3] {
 /// Residual points per worker task.  Fixed — *not* derived from the
 /// thread count — so the task decomposition, and with it every f32
 /// summation order, is identical no matter how many workers run.
-const CHUNK_POINTS: usize = 4;
+/// Public so the memory model / benches can reason about the live tape.
+pub const CHUNK_POINTS: usize = 4;
 
 /// Reusable native training engine: per-worker tapes (each with its own
 /// buffer pool), per-task gradient buffers, deterministic ordered
@@ -95,8 +119,11 @@ impl NativeEngine {
         self.threads
     }
 
-    /// Biased HTE loss (Eq. 7) and its parameter gradient (packed order),
-    /// written into `grad` (resized to `mlp.n_params()`).
+    /// Residual loss and its parameter gradient (packed order), written
+    /// into `grad` (resized to `mlp.n_params()`).  Dispatches on the
+    /// problem family: the biased order-2 HTE loss (Eq. 7) for the
+    /// Sine-Gordon families, the order-4 biharmonic TVP loss (Eq. 23)
+    /// for `bihar`.
     pub fn loss_and_grad(
         &mut self,
         mlp: &Mlp,
@@ -104,6 +131,7 @@ impl NativeEngine {
         batch: &NativeBatch,
         grad: &mut Vec<f32>,
     ) -> f32 {
+        let chunk = chunk_fn_for(problem);
         let n = batch.n;
         let n_params = mlp.n_params();
         let n_tasks = n.div_ceil(CHUNK_POINTS);
@@ -125,7 +153,7 @@ impl NativeEngine {
             {
                 let start = t * CHUNK_POINTS;
                 let nc = CHUNK_POINTS.min(n - start);
-                *lslot = chunk_loss_grad(tape, mlp, problem, batch, start, nc, gbuf);
+                *lslot = chunk(tape, mlp, problem, batch, start, nc, gbuf);
             }
         } else {
             let per = n_tasks.div_ceil(threads);
@@ -142,7 +170,7 @@ impl NativeEngine {
                         {
                             let start = (first_task + j) * CHUNK_POINTS;
                             let nc = CHUNK_POINTS.min(n - start);
-                            *lslot = chunk_loss_grad(tape, mlp, problem, batch, start, nc, gbuf);
+                            *lslot = chunk(tape, mlp, problem, batch, start, nc, gbuf);
                         }
                     });
                 }
@@ -173,6 +201,58 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
 }
 
+/// One residual-chunk worker: builds the tape graph for `nc` points
+/// starting at `start`, returning the unnormalized loss and writing the
+/// packed parameter gradient.  `fn` pointer so the engine can dispatch by
+/// problem family while staying `Send` for the scoped workers.
+type ChunkFn =
+    fn(&mut Tape, &Mlp, &dyn PdeProblem, &NativeBatch, usize, usize, &mut Vec<f32>) -> f64;
+
+/// Pick the residual formulation for a problem: the order-4 biharmonic
+/// TVP (Eq. 23) for the `bihar` family, the order-2 Sine-Gordon HTE
+/// residual (Eq. 7) otherwise.
+fn chunk_fn_for(problem: &dyn PdeProblem) -> ChunkFn {
+    if problem.family() == "bihar" {
+        chunk_loss_grad_bihar
+    } else {
+        chunk_loss_grad
+    }
+}
+
+/// Parameter leaves (copied into pooled buffers).
+fn param_leaves(tape: &mut Tape, mlp: &Mlp) -> Vec<(Var, Var)> {
+    mlp.layers
+        .iter()
+        .map(|(w, bias)| {
+            let wv = tape.leaf_from_slice(&w.shape, &w.data);
+            let bv = tape.leaf_from_slice(&bias.shape, &bias.data);
+            (wv, bv)
+        })
+        .collect()
+}
+
+/// Reverse pass from `loss`, packing the parameter gradients in artifact
+/// order into `grad_out`; returns the chunk loss (f64 for the ordered
+/// reduction).
+fn finish_chunk(
+    tape: &mut Tape,
+    loss: Var,
+    params: &[(Var, Var)],
+    n_params: usize,
+    grad_out: &mut Vec<f32>,
+) -> f64 {
+    let grads = tape.backward(loss);
+    grad_out.clear();
+    grad_out.reserve(n_params);
+    for &(w, bias) in params {
+        grad_out.extend_from_slice(&grads[w.0].as_ref().expect("w grad").data);
+        grad_out.extend_from_slice(&grads[bias.0].as_ref().expect("b grad").data);
+    }
+    let loss_val = tape.value(loss).data[0] as f64;
+    tape.reclaim(grads);
+    loss_val
+}
+
 /// One task: 0.5 · Σ_{i ∈ chunk} r_i² and its parameter gradient (packed,
 /// unnormalized — the caller divides by n after the ordered reduction).
 fn chunk_loss_grad(
@@ -187,17 +267,7 @@ fn chunk_loss_grad(
     let (v, d) = (batch.v, mlp.d);
     let b = nc * v;
     tape.reset();
-
-    // Parameter leaves (copied into pooled buffers).
-    let params: Vec<(Var, Var)> = mlp
-        .layers
-        .iter()
-        .map(|(w, bias)| {
-            let wv = tape.leaf_from_slice(&w.shape, &w.data);
-            let bv = tape.leaf_from_slice(&bias.shape, &bias.data);
-            (wv, bv)
-        })
-        .collect();
+    let params = param_leaves(tape, mlp);
 
     let xs = &batch.xs[start * d..(start + nc) * d];
     let x0 = tape.leaf_from_slice(&[nc, d], xs);
@@ -280,16 +350,111 @@ fn chunk_loss_grad(
     let sum = tape.sum_all(rsq);
     let loss = tape.scale(sum, 0.5);
 
-    let grads = tape.backward(loss);
-    grad_out.clear();
-    grad_out.reserve(mlp.n_params());
-    for &(w, bias) in &params {
-        grad_out.extend_from_slice(&grads[w.0].as_ref().expect("w grad").data);
-        grad_out.extend_from_slice(&grads[bias.0].as_ref().expect("b grad").data);
+    finish_chunk(tape, loss, &params, mlp.n_params(), grad_out)
+}
+
+/// One biharmonic task: the order-4 TVP residual (Eq. 23, Thm 3.4)
+///
+///   r_i = (1/(3V)) Σ_k D⁴u(x_i)[v_k] − g(x_i),  v_k ~ N(0, I),
+///
+/// as 0.5 · Σ_{i ∈ chunk} r_i² plus its packed parameter gradient
+/// (unnormalized — the caller divides by n).  Same probe-batching design
+/// as order 2: the primal stream runs once at [nc, ·], the four
+/// derivative streams at [nc·v, ·] through the fused `tanh_jet4` node.
+fn chunk_loss_grad_bihar(
+    tape: &mut Tape,
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+    start: usize,
+    nc: usize,
+    grad_out: &mut Vec<f32>,
+) -> f64 {
+    let (v, d) = (batch.v, mlp.d);
+    let b = nc * v;
+    tape.reset();
+    let params = param_leaves(tape, mlp);
+
+    let xs = &batch.xs[start * d..(start + nc) * d];
+    let x0 = tape.leaf_from_slice(&[nc, d], xs);
+    let probes = tape.leaf_from_slice(&[v, d], batch.probes);
+
+    // Order-4 jet MLP.  Primal h[0] at [nc, ·]; streams h[1..=4] at
+    // [nc·v, ·].  The input line x + t v is affine, so streams 2..4 enter
+    // layer 1 as exact zeros and the tangent is probes @ W tiled.
+    let n_layers = mlp.layers.len();
+    let (w0, b0) = params[0];
+    let z0 = tape.matmul(x0, w0);
+    let h0 = tape.add_row(z0, b0);
+    let p1 = tape.matmul(probes, w0);
+    let h1 = tape.tile_rows(p1, nc);
+    let width0 = tape.value(h0).shape[1];
+    let h2 = tape.zeros(&[b, width0]);
+    let h3 = tape.zeros(&[b, width0]);
+    let h4 = tape.zeros(&[b, width0]);
+    let mut h = [h0, h1, h2, h3, h4];
+    if n_layers > 1 {
+        h = tape.tanh_jet4(h, v);
     }
-    let loss_val = tape.value(loss).data[0] as f64;
-    tape.reclaim(grads);
-    loss_val
+    for (i, &(w, bias)) in params.iter().enumerate().skip(1) {
+        let z0 = tape.matmul(h[0], w);
+        h[0] = tape.add_row(z0, bias);
+        for stream in h.iter_mut().skip(1) {
+            *stream = tape.matmul(*stream, w);
+        }
+        if i < n_layers - 1 {
+            h = tape.tanh_jet4(h, v);
+        }
+    }
+    // h[0] = net0 [nc, 1]; h[1..=4] = net1..net4 [b, 1].
+
+    // Leibniz through the hard constraint:
+    // D4 u = fac0·net4 + 4 fac1·net3 + 6 fac2·net2 + 4 fac3·net1 + fac4·net0.
+    let [c0, c1, c2, c3, c4] = tape.leaf5_with(&[b, 1], |b0, b1, b2, b3, b4| {
+        for i in 0..nc {
+            let x = &batch.xs[(start + i) * d..(start + i + 1) * d];
+            for k in 0..v {
+                let probe = &batch.probes[k * d..(k + 1) * d];
+                let f = factor_jets4(problem, x, probe);
+                let idx = i * v + k;
+                b0[idx] = f[0];
+                b1[idx] = f[1];
+                b2[idx] = f[2];
+                b3[idx] = f[3];
+                b4[idx] = f[4];
+            }
+        }
+    });
+    let t4 = tape.mul(c0, h[4]);
+    let t3m = tape.mul(c1, h[3]);
+    let t3 = tape.scale(t3m, 4.0);
+    let t2m = tape.mul(c2, h[2]);
+    let t2 = tape.scale(t2m, 6.0);
+    let t1m = tape.mul(c3, h[1]);
+    let t1 = tape.scale(t1m, 4.0);
+    let net0_pairs = tape.broadcast_rows(h[0], v);
+    let t0 = tape.mul(c4, net0_pairs);
+    let s43 = tape.add(t4, t3);
+    let s21 = tape.add(t2, t1);
+    let s4321 = tape.add(s43, s21);
+    let d4_pairs = tape.add(s4321, t0); // [b, 1]
+    let d4_mean = tape.group_mean(d4_pairs, v); // [nc, 1]
+    // Thm 3.4: E_{v~N(0,I)} D⁴u[v] = 3 Δ²u, hence the 1/3.
+    let est = tape.scale(d4_mean, 1.0 / 3.0);
+
+    let g = tape.leaf_with(&[nc, 1], |buf| {
+        for (i, slot) in buf.iter_mut().enumerate() {
+            *slot = problem
+                .forcing(&batch.xs[(start + i) * d..(start + i + 1) * d], batch.coeff)
+                as f32;
+        }
+    });
+    let r = tape.sub(est, g);
+    let rsq = tape.square(r);
+    let sum = tape.sum_all(rsq);
+    let loss = tape.scale(sum, 0.5);
+
+    finish_chunk(tape, loss, &params, mlp.n_params(), grad_out)
 }
 
 /// Biased HTE loss (Eq. 7) and its parameter gradient (packed order),
@@ -479,6 +644,44 @@ pub fn hte_residual_loss_reference(
     acc / n as f64
 }
 
+/// Order-4 biharmonic TVP loss (Eq. 23) and its parameter gradient
+/// (packed order), through the probe-batched engine (single-threaded
+/// convenience wrapper; hot loops should hold a [`NativeEngine`]).
+pub fn bihar_residual_loss_and_grad(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> (f32, Vec<f32>) {
+    debug_assert_eq!(problem.family(), "bihar");
+    let mut engine = NativeEngine::new(1);
+    let mut grad = Vec::new();
+    let loss = engine.loss_and_grad(mlp, problem, batch, &mut grad);
+    (loss, grad)
+}
+
+/// Biharmonic TVP loss only, via the (non-tape) order-4 jet engine — the
+/// FD-check oracle for the native order-4 path.
+pub fn bihar_residual_loss_reference(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> f64 {
+    let (n, v, d) = (batch.n, batch.v, mlp.d);
+    let mut acc = 0.0;
+    for i in 0..n {
+        let x = &batch.xs[i * d..(i + 1) * d];
+        let mut est = 0.0;
+        for k in 0..v {
+            let probe = &batch.probes[k * d..(k + 1) * d];
+            est += super::jet::jet_forward(mlp, problem, x, probe, 4)[4];
+        }
+        est /= 3.0 * v as f64; // Thm 3.4: E[D⁴u[v]] = 3 Δ²u
+        let r = est - problem.forcing(x, batch.coeff);
+        acc += 0.5 * r * r;
+    }
+    acc / n as f64
+}
+
 /// In-place Adam (matches `python/compile/optimizer.py`).
 pub fn adam_step(
     params: &mut [f32],
@@ -504,7 +707,7 @@ pub fn adam_step(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pde::{DomainSampler, SineGordon2Body};
+    use crate::pde::{Biharmonic3Body, DomainSampler, SineGordon2Body};
     use crate::rng::{fill_rademacher, Normal, Xoshiro256pp};
 
     fn setup(d: usize, n: usize, v: usize) -> (Mlp, SineGordon2Body, Vec<f32>, Vec<f32>, Vec<f32>) {
@@ -658,6 +861,91 @@ mod tests {
             assert!(
                 (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
                 "param {i}: pairgrid {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    /// Biharmonic case: annulus points, Gaussian probes (Thm 3.4).
+    fn setup_bihar(
+        d: usize,
+        n: usize,
+        v: usize,
+    ) -> (Mlp, Biharmonic3Body, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(17);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = Biharmonic3Body::new(d);
+        let mut sampler = DomainSampler::new(Domain::Annulus, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; v * d];
+        let mut normal = Normal::new();
+        normal.fill_f32(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        normal.fill_f32(&mut rng, &mut coeff);
+        (mlp, problem, xs, probes, coeff)
+    }
+
+    #[test]
+    fn bihar_engine_matches_reference_across_shapes() {
+        // includes the n = 1 / v = 1 edges and chunk-tail sizes
+        for (d, n, v) in [(3, 1, 1), (4, 1, 5), (4, 2, 1), (5, 6, 3), (8, 9, 4)] {
+            let (mlp, problem, xs, probes, coeff) = setup_bihar(d, n, v);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+            let (loss, _) = bihar_residual_loss_and_grad(&mlp, &problem, &batch);
+            let reference = bihar_residual_loss_reference(&mlp, &problem, &batch);
+            assert!(
+                (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+                "(d={d}, n={n}, v={v}): {loss} vs {reference}"
+            );
+        }
+    }
+
+    #[test]
+    fn bihar_multithreaded_gradient_is_bitwise_identical() {
+        let (mlp, problem, xs, probes, coeff) = setup_bihar(5, 11, 4);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 11, v: 4 };
+        let mut grads: Vec<(f32, Vec<f32>)> = Vec::new();
+        for threads in [1usize, 2, 3, 7] {
+            let mut engine = NativeEngine::new(threads);
+            let mut grad = Vec::new();
+            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad);
+            grads.push((loss, grad));
+        }
+        let (loss0, g0) = &grads[0];
+        for (loss, g) in &grads[1..] {
+            assert_eq!(loss.to_bits(), loss0.to_bits(), "loss differs across thread counts");
+            assert_eq!(g.len(), g0.len());
+            for (a, b) in g.iter().zip(g0) {
+                assert_eq!(a.to_bits(), b.to_bits(), "gradient differs across thread counts");
+            }
+        }
+    }
+
+    #[test]
+    fn bihar_tape_grad_matches_finite_differences() {
+        let (mut mlp, problem, xs, probes, coeff) = setup_bihar(4, 3, 2);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 3, v: 2 };
+        let (_, grad) = bihar_residual_loss_and_grad(&mlp, &problem, &batch);
+        let gmax: f32 = grad.iter().map(|g| g.abs()).fold(0.0, f32::max);
+        let flat0 = mlp.pack();
+        let idxs = [0usize, 7, 130, 600, flat0.len() - 1, flat0.len() - 200];
+        let h = 2e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            mlp.unpack_into(&fp);
+            let lp = bihar_residual_loss_reference(&mlp, &problem, &batch);
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            mlp.unpack_into(&fm);
+            let lm = bihar_residual_loss_reference(&mlp, &problem, &batch);
+            mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            // the loss scale is set by g ~ Δ²u* (large), so the FD noise
+            // floor scales with the gradient magnitude, not with 1
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()) + 1e-2 * gmax,
+                "param {i}: tape {} vs fd {fd}",
                 grad[i]
             );
         }

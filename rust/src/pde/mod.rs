@@ -48,9 +48,10 @@ pub(crate) fn sq_norm(x: &[f32]) -> f64 {
     x.iter().map(|&v| (v as f64).powi(2)).sum()
 }
 
-#[cfg(test)]
-pub(crate) mod fd {
-    //! Finite-difference oracles for validating the closed-form operators.
+pub mod fd {
+    //! Finite-difference oracles for validating the closed-form operators
+    //! (public so the integration parity suite can gate the native
+    //! order-4 engine against them).
 
     /// Laplacian of f at x via central differences.
     pub fn laplacian(f: &dyn Fn(&[f32]) -> f64, x: &[f32], h: f32) -> f64 {

@@ -103,7 +103,8 @@ fn checkpoint_roundtrip_through_trainer() {
     }
     let state = trainer.state_host().unwrap();
     let tmp = std::env::temp_dir().join(format!("hte-int-{}.ckpt", std::process::id()));
-    hte_pinn::checkpoint::save(&tmp, &config, trainer.step_idx, &trainer.coeff, &state).unwrap();
+    hte_pinn::checkpoint::save(&tmp, &config, trainer.step_idx, None, &trainer.coeff, &state)
+        .unwrap();
     let (meta, loaded) = hte_pinn::checkpoint::load(&tmp).unwrap();
     assert_eq!(meta.step, 20);
     assert_eq!(loaded.len(), state.len());

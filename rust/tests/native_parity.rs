@@ -1,17 +1,22 @@
 //! Parity suite for the probe-batched native engine (default features —
-//! no artifacts, no XLA).
+//! no artifacts, no XLA), covering both residual orders.
 //!
-//! Three oracles, per DESIGN.md §7:
-//! * `hte_residual_loss_reference` — f64 jet-forward loss (no tape);
-//! * central finite differences of the reference — gradient oracle;
-//! * `hte_residual_loss_and_grad_pairgrid` — the pre-refactor tape.
+//! Oracles, per DESIGN.md §7:
+//! * `hte_residual_loss_reference` / `bihar_residual_loss_reference` —
+//!   f64 jet-forward losses (no tape);
+//! * central finite differences of those references — gradient oracle;
+//! * `hte_residual_loss_and_grad_pairgrid` — the pre-refactor tape
+//!   (order 2 only);
+//! * `pde::fd` — finite-difference bilaplacian oracle for the order-4
+//!   operator plumbing (factor jets, jets, forcing).
 
 use hte_pinn::coordinator::problem_for;
 use hte_pinn::nn::{
+    bihar_residual_loss_and_grad, bihar_residual_loss_reference, factor_jet,
     hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference,
-    Mlp, NativeBatch, NativeEngine,
+    jet_forward, Mlp, NativeBatch, NativeEngine,
 };
-use hte_pinn::pde::{Domain, DomainSampler, PdeProblem};
+use hte_pinn::pde::{fd, Domain, DomainSampler, PdeProblem};
 use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
 
 struct Case {
@@ -35,6 +40,21 @@ impl Case {
         fill_rademacher(&mut rng, &mut probes);
         let mut coeff = vec![0.0f32; problem.n_coeff()];
         Normal::new().fill_f32(&mut rng, &mut coeff);
+        Self { mlp, problem, xs, probes, coeff, n, v }
+    }
+
+    /// Biharmonic case: annulus points, Gaussian probes (Thm 3.4).
+    fn bihar(d: usize, n: usize, v: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = problem_for("bihar", d).expect("bihar");
+        let mut sampler = DomainSampler::new(Domain::Annulus, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut normal = Normal::new();
+        let mut probes = vec![0.0f32; v * d];
+        normal.fill_f32(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        normal.fill_f32(&mut rng, &mut coeff);
         Self { mlp, problem, xs, probes, coeff, n, v }
     }
 
@@ -63,7 +83,8 @@ fn batched_loss_matches_reference_grid() {
     ] {
         let case = Case::new(d, n, v, 42 + d as u64);
         let (loss, _) = hte_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
-        let reference = hte_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+        let reference =
+            hte_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
         assert!(
             (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
             "(d={d}, n={n}, v={v}): batched {loss} vs reference {reference}"
@@ -125,6 +146,221 @@ fn batched_and_pairgrid_agree() {
                 "(d={d}, n={n}, v={v}) param {i}: {a} vs {b}"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Order-4 biharmonic TVP parity
+// ---------------------------------------------------------------------------
+
+/// Native order-4 loss matches the f64 jet-forward reference to 1e-3
+/// relative across a (d, n, v) grid including the n = 1 / v = 1 edges.
+#[test]
+fn bihar_loss_matches_reference_grid() {
+    for (d, n, v) in [(3, 1, 1), (4, 1, 6), (4, 5, 1), (5, 4, 3), (6, 9, 4), (10, 16, 8)] {
+        let case = Case::bihar(d, n, v, 60 + d as u64);
+        let (loss, _) =
+            bihar_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
+        let reference =
+            bihar_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+        assert!(
+            (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+            "(d={d}, n={n}, v={v}): batched {loss} vs reference {reference}"
+        );
+    }
+}
+
+/// Order-4 parameter gradients match central finite differences of the
+/// f64 reference loss.  The biharmonic forcing is large (Δ²u* ~ d²), so
+/// the FD noise floor scales with the gradient magnitude.
+#[test]
+fn bihar_grad_matches_finite_differences() {
+    for (d, n, v) in [(4, 3, 2), (5, 1, 3), (4, 6, 1)] {
+        let mut case = Case::bihar(d, n, v, 7);
+        let (_, grad) =
+            bihar_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
+        let gmax: f32 = grad.iter().map(|g| g.abs()).fold(0.0, f32::max);
+        let flat0 = case.mlp.pack();
+        let idxs = [0usize, 11, 257, flat0.len() / 2, flat0.len() - 1];
+        let h = 2e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            case.mlp.unpack_into(&fp);
+            let lp =
+                bihar_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            case.mlp.unpack_into(&fm);
+            let lm =
+                bihar_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+            case.mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()) + 1e-2 * gmax,
+                "(d={d}, n={n}, v={v}) param {i}: batched {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+}
+
+/// Order-4 loss/grad results are bitwise identical for 1, 2 and 16
+/// worker threads (fixed chunking + ordered reduction).
+#[test]
+fn bihar_gradients_bitwise_stable_across_thread_counts() {
+    let case = Case::bihar(6, 13, 5, 9);
+    let mut baseline: Option<(f32, Vec<f32>)> = None;
+    for threads in [1usize, 2, 16] {
+        let mut engine = NativeEngine::new(threads);
+        let mut grad = Vec::new();
+        let loss =
+            engine.loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad);
+        match &baseline {
+            None => baseline = Some((loss, grad)),
+            Some((l0, g0)) => {
+                assert_eq!(loss.to_bits(), l0.to_bits(), "loss at {threads} threads");
+                assert_eq!(grad.len(), g0.len());
+                for (a, b) in grad.iter().zip(g0) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "grad at {threads} threads");
+                }
+            }
+        }
+    }
+}
+
+/// Annulus hard-constraint factor jets at order 4: `factor_jet` against
+/// finite differences of φ(t) = (1 − |x+tv|²)(4 − |x+tv|²).  φ is a
+/// quartic polynomial in t, so the five-point stencils below are exact
+/// up to f64 rounding.
+#[test]
+fn annulus_factor_jet4_matches_fd() {
+    let d = 6;
+    let mut rng = Xoshiro256pp::new(19);
+    let mut normal = Normal::new();
+    let problem = problem_for("bihar", d).expect("bihar");
+    // a point near the middle of the annulus and a generic direction
+    let raw: Vec<f64> = (0..d).map(|_| normal.sample(&mut rng)).collect();
+    let norm = raw.iter().map(|a| a * a).sum::<f64>().sqrt();
+    let x: Vec<f32> = raw.iter().map(|&a| (a / norm * 1.5) as f32).collect();
+    let v: Vec<f32> = (0..d).map(|_| normal.sample(&mut rng) as f32).collect();
+
+    let jets = factor_jet(problem.as_ref(), &x, &v, 4);
+    let phi = |t: f64| -> f64 {
+        let mut s = 0.0f64;
+        for (&a, &b) in x.iter().zip(&v) {
+            let y = a as f64 + t * b as f64;
+            s += y * y;
+        }
+        (1.0 - s) * (4.0 - s)
+    };
+    let h = 0.5f64;
+    let (pm2, pm1, p0, pp1, pp2) = (phi(-2.0 * h), phi(-h), phi(0.0), phi(h), phi(2.0 * h));
+    let fd_jets = [
+        p0,
+        (pm2 - 8.0 * pm1 + 8.0 * pp1 - pp2) / (12.0 * h),
+        (-pm2 + 16.0 * pm1 - 30.0 * p0 + 16.0 * pp1 - pp2) / (12.0 * h * h),
+        (pp2 - 2.0 * pp1 + 2.0 * pm1 - pm2) / (2.0 * h * h * h),
+        (pm2 - 4.0 * pm1 + 6.0 * p0 - 4.0 * pp1 + pp2) / (h * h * h * h),
+    ];
+    for (k, (jet, fd_val)) in jets.iter().zip(&fd_jets).enumerate() {
+        assert!(
+            (jet - fd_val).abs() < 1e-7 * (1.0 + fd_val.abs()),
+            "factor jet stream {k}: {jet} vs fd {fd_val}"
+        );
+    }
+}
+
+/// Each order-4 jet stream of the constrained model is the directional
+/// derivative of the stream below it (annulus / biharmonic geometry) —
+/// first-order central differences of the *analytic* lower stream avoid
+/// the eps/h^k noise blow-up of higher-order stencils.
+#[test]
+fn bihar_model_jet_streams_match_fd() {
+    let d = 5;
+    let case = Case::bihar(d, 1, 1, 23);
+    let x = &case.xs[..d];
+    let v: Vec<f32> = case.probes[..d].to_vec();
+    let jets_at = |t: f64| -> Vec<f64> {
+        let xt: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a + (t as f32) * b).collect();
+        jet_forward(&case.mlp, case.problem.as_ref(), &xt, &v, 4)
+    };
+    let jets = jets_at(0.0);
+    let h = 1e-3;
+    let plus = jets_at(h);
+    let minus = jets_at(-h);
+    for k in 0..4 {
+        let fd_val = (plus[k] - minus[k]) / (2.0 * h);
+        let tol = 2e-3 * (1.0 + fd_val.abs()) + 2e-3;
+        assert!(
+            (jets[k + 1] - fd_val).abs() < tol,
+            "stream {}: jet {} vs fd {fd_val}",
+            k + 1,
+            jets[k + 1]
+        );
+    }
+}
+
+/// The bilaplacian of the constrained model, assembled exactly from
+/// order-4 directional jets by polarization
+///   Δ²u = Σ_i u_iiii + 2 Σ_{i<j} u_iijj,
+///   u_iijj = (D⁴u[e_i+e_j] + D⁴u[e_i−e_j] − 2 u_iiii − 2 u_jjjj) / 12,
+/// must agree with the FD bilaplacian oracle (outer `fd::laplacian` over
+/// the jet-exact inner Laplacian, keeping one FD level on the f32 net).
+#[test]
+fn bihar_model_bilaplacian_matches_fd_oracle() {
+    let d = 3;
+    let case = Case::bihar(d, 1, 1, 5);
+    let x = &case.xs[..d];
+    let basis = |i: usize| -> Vec<f32> {
+        let mut e = vec![0.0f32; d];
+        e[i] = 1.0;
+        e
+    };
+    let d4 = |w: &[f32]| jet_forward(&case.mlp, case.problem.as_ref(), x, w, 4)[4];
+    let diag: Vec<f64> = (0..d).map(|i| d4(&basis(i))).collect();
+    let mut lap2: f64 = diag.iter().sum();
+    for i in 0..d {
+        for j in i + 1..d {
+            let mut p = basis(i);
+            p[j] = 1.0;
+            let mut m = basis(i);
+            m[j] = -1.0;
+            let uiijj = (d4(&p) + d4(&m) - 2.0 * diag[i] - 2.0 * diag[j]) / 12.0;
+            lap2 += 2.0 * uiijj;
+        }
+    }
+    // jet-exact Laplacian (order-2 full-basis trace), FD'd once
+    let lap = |y: &[f32]| -> f64 {
+        (0..d)
+            .map(|i| jet_forward(&case.mlp, case.problem.as_ref(), y, &basis(i), 2)[2])
+            .sum()
+    };
+    let fd_val = fd::laplacian(&lap, x, 0.1);
+    // budget: one f32-noise FD level (~0.5 abs) + O(h²) truncation
+    assert!(
+        (lap2 - fd_val).abs() < 0.08 * lap2.abs() + 1.0,
+        "polarized jets {lap2} vs fd bilaplacian {fd_val}"
+    );
+}
+
+/// The closed-form biharmonic forcing (the g side of the native order-4
+/// residual) matches the `pde::fd::biharmonic` oracle on the exact
+/// manufactured solution.
+#[test]
+fn bihar_forcing_matches_fd_bilaplacian_oracle() {
+    for d in [3usize, 5] {
+        let mut rng = Xoshiro256pp::new(100 + d as u64);
+        let mut normal = Normal::new();
+        let problem = problem_for("bihar", d).expect("bihar");
+        let x: Vec<f32> = (0..d).map(|_| (normal.sample(&mut rng) * 0.2 + 0.7) as f32).collect();
+        let c: Vec<f32> = (0..problem.n_coeff()).map(|_| normal.sample(&mut rng) as f32).collect();
+        let ours = problem.forcing(&x, &c);
+        let fd_val = fd::biharmonic(&|y| problem.u_exact(y, &c), &x, 3e-2);
+        assert!(
+            (ours - fd_val).abs() < 0.05 * (1.0 + ours.abs()),
+            "d={d}: forcing {ours} vs fd {fd_val}"
+        );
     }
 }
 
