@@ -20,8 +20,9 @@
 use hte_pinn::coordinator::{problem_for, rss_mb};
 use hte_pinn::memmodel;
 use hte_pinn::nn::{
-    bihar_residual_loss_reference, default_threads, hte_residual_loss_and_grad_pairgrid,
-    hte_residual_loss_reference, Mlp, NativeBatch, NativeEngine, CHUNK_POINTS,
+    bihar_residual_loss_reference, default_threads, gpinn_residual_loss_reference,
+    hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, GpinnResidual, Mlp,
+    NativeBatch, NativeEngine, CHUNK_POINTS,
 };
 use hte_pinn::pde::{Domain, DomainSampler, PdeProblem};
 use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
@@ -29,17 +30,63 @@ use hte_pinn::tensor::matmul_into;
 use hte_pinn::util::bench::{time_fn, BenchReport};
 use hte_pinn::util::json::{num, obj, s, Value};
 
-fn matmul_section(report: &mut BenchReport) {
+/// The pre-microkernel scalar loop (one k-term per pass over the output
+/// row) — the baseline the unrolled kernels must beat on time and match
+/// bitwise.
+fn matmul_scalar_reference(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    out.fill(0.0);
+    for i in 0..m {
+        for t in 0..k {
+            let av = a[i * k + t];
+            let brow = &b[t * n..(t + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+struct MatmulRow {
+    m: usize,
+    k: usize,
+    n: usize,
+    kernel_ms: f64,
+    scalar_ms: f64,
+    bitwise_exact: bool,
+}
+
+fn matmul_section(report: &mut BenchReport) -> Vec<MatmulRow> {
     let mut rng = Xoshiro256pp::new(7);
+    let mut rows = Vec::new();
     for (m, k, n) in [(256, 100, 128), (256, 128, 128), (1600, 128, 128)] {
         let a: Vec<f32> = (0..m * k).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
         let b: Vec<f32> = (0..k * n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
         let mut out = vec![0.0f32; m * n];
-        report.push(time_fn(&format!("matmul/{m}x{k}x{n}"), 3, 30, || {
+        let kernel = time_fn(&format!("matmul/{m}x{k}x{n}"), 3, 30, || {
             matmul_into(&a, &b, &mut out, m, k, n);
             std::hint::black_box(out[0]);
-        }));
+        });
+        report.push(kernel.clone());
+        let mut scalar_out = vec![0.0f32; m * n];
+        let scalar = time_fn(&format!("matmul-scalar/{m}x{k}x{n}"), 3, 30, || {
+            matmul_scalar_reference(&a, &b, &mut scalar_out, m, k, n);
+            std::hint::black_box(scalar_out[0]);
+        });
+        report.push(scalar.clone());
+        // the unroll must not reassociate any accumulation chain
+        let bitwise_exact =
+            out.iter().zip(&scalar_out).all(|(x, y)| x.to_bits() == y.to_bits());
+        rows.push(MatmulRow {
+            m,
+            k,
+            n,
+            kernel_ms: kernel.mean_s * 1e3,
+            scalar_ms: scalar.mean_s * 1e3,
+            bitwise_exact,
+        });
     }
+    rows
 }
 
 struct NativeRow {
@@ -235,7 +282,83 @@ fn order4_section(report: &mut BenchReport) -> Vec<Order4Row> {
     rows
 }
 
-fn write_bench_json(rows: &[NativeRow], rows4: &[Order4Row]) {
+struct GpinnRow {
+    d: usize,
+    v: usize,
+    n: usize,
+    order2_1thread_ms: f64,
+    batched_1thread_ms: f64,
+    loss_rel_err: f64,
+}
+
+/// gPINN (order-3) step through the generic pipeline: cost anchor
+/// against the order-2 trace step at the same shape, parity against the
+/// f64 jet-forward gPINN oracle.
+fn gpinn_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> GpinnRow {
+    let lambda = 1.0f32;
+    let mut rng = Xoshiro256pp::new(15);
+    let mlp = Mlp::init(d, &mut rng);
+    let problem = problem_for("sg2", d).expect("sg2 problem");
+    let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+    let xs = sampler.batch(n);
+    let mut probes = vec![0.0f32; v * d];
+    fill_rademacher(&mut rng, &mut probes);
+    let mut coeff = vec![0.0f32; problem.n_coeff()];
+    Normal::new().fill_f32(&mut rng, &mut coeff);
+    let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+
+    let (warmup, iters) = if d >= 100 { (2, 10) } else { (3, 30) };
+    let tag = format!("d{d}-v{v}-n{n}");
+    let mut grad = Vec::new();
+    let op = GpinnResidual { lambda };
+
+    let mut engine1 = NativeEngine::new(1);
+    let gpinn = time_fn(&format!("gpinn-step/batched-t1/{tag}"), warmup, iters, || {
+        std::hint::black_box(engine1.loss_and_grad_with(
+            &mlp,
+            problem.as_ref(),
+            &op,
+            &batch,
+            &mut grad,
+        ));
+    });
+    report.push(gpinn.clone());
+
+    let mut engine2 = NativeEngine::new(1);
+    let order2 = time_fn(&format!("trace-step/batched-t1/{tag}"), warmup, iters, || {
+        std::hint::black_box(engine2.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad));
+    });
+    report.push(order2.clone());
+
+    let loss =
+        engine1.loss_and_grad_with(&mlp, problem.as_ref(), &op, &batch, &mut grad) as f64;
+    let reference = gpinn_residual_loss_reference(&mlp, problem.as_ref(), &batch, lambda);
+    let loss_rel_err = (loss - reference).abs() / (1.0 + reference.abs());
+
+    GpinnRow {
+        d,
+        v,
+        n,
+        order2_1thread_ms: order2.mean_s * 1e3,
+        batched_1thread_ms: gpinn.mean_s * 1e3,
+        loss_rel_err,
+    }
+}
+
+fn gpinn_section(report: &mut BenchReport) -> Vec<GpinnRow> {
+    let mut rows = Vec::new();
+    for d in [10usize, 100] {
+        rows.push(gpinn_case(report, d, 16, 16));
+    }
+    rows
+}
+
+fn write_bench_json(
+    rows: &[NativeRow],
+    rows4: &[Order4Row],
+    rows_mm: &[MatmulRow],
+    rows_gp: &[GpinnRow],
+) {
     let json_rows: Vec<Value> = rows
         .iter()
         .map(|r| {
@@ -280,14 +403,59 @@ fn write_bench_json(rows: &[NativeRow], rows4: &[Order4Row]) {
             ])
         })
         .collect();
+    let json_rows_mm: Vec<Value> = rows_mm
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("m", num(r.m as f64)),
+                ("k", num(r.k as f64)),
+                ("n", num(r.n as f64)),
+                ("kernel_ms", num(r.kernel_ms)),
+                ("scalar_ms", num(r.scalar_ms)),
+                ("speedup_vs_scalar", num(r.scalar_ms / r.kernel_ms.max(1e-9))),
+                ("bitwise_exact", Value::Bool(r.bitwise_exact)),
+            ])
+        })
+        .collect();
+    let json_rows_gp: Vec<Value> = rows_gp
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("d", num(r.d as f64)),
+                ("v", num(r.v as f64)),
+                ("n", num(r.n as f64)),
+                ("order2_1thread_ms", num(r.order2_1thread_ms)),
+                ("batched_1thread_ms", num(r.batched_1thread_ms)),
+                (
+                    "cost_vs_order2",
+                    num(r.batched_1thread_ms / r.order2_1thread_ms.max(1e-9)),
+                ),
+                ("loss_rel_err", num(r.loss_rel_err)),
+                ("parity_ok", Value::Bool(r.loss_rel_err < 1e-3)),
+            ])
+        })
+        .collect();
     let doc = obj(vec![
         ("bench", s("native-step")),
         (
             "baseline",
             s("hte_residual_loss_and_grad_pairgrid (pre-refactor pair-grid tape)"),
         ),
-        ("optimized", s("NativeEngine (probe-batched, workspace-pooled, threaded)")),
+        ("optimized", s("NativeEngine (generic ResidualOp jet-stream pipeline)")),
+        (
+            "matmul",
+            s("4-wide unrolled accumulator microkernels vs the scalar reference loop; \
+               bitwise_exact gates that the unroll never reassociates an accumulation \
+               chain"),
+        ),
+        ("rows_matmul", Value::Arr(json_rows_mm)),
         ("rows", Value::Arr(json_rows)),
+        (
+            "gpinn",
+            s("gPINN (order-3) step through the generic pipeline vs the same-shape \
+               order-2 trace step; parity is against the f64 jet-forward gPINN oracle"),
+        ),
+        ("rows_gpinn", Value::Arr(json_rows_gp)),
         (
             "order4",
             s("biharmonic TVP step (order-4 jets, Gaussian probes); order2_1thread_ms \
@@ -364,11 +532,35 @@ fn artifact_section(report: &mut BenchReport) {
 
 fn main() {
     let mut report = BenchReport::new("perf: step breakdown");
-    matmul_section(&mut report);
+    let rows_mm = matmul_section(&mut report);
     // order-4 first: its rss_mb cross-check would otherwise read the
     // allocator high-water mark left behind by the d=1000 pair-grid sweep
     let rows4 = order4_section(&mut report);
+    let rows_gp = gpinn_section(&mut report);
     let rows = native_section(&mut report);
+    for r in &rows_mm {
+        println!(
+            "  matmul {}x{}x{}: {:.3} ms vs scalar {:.3} ms ({:.2}x), bitwise exact: {}",
+            r.m,
+            r.k,
+            r.n,
+            r.kernel_ms,
+            r.scalar_ms,
+            r.scalar_ms / r.kernel_ms.max(1e-9),
+            r.bitwise_exact
+        );
+    }
+    for r in &rows_gp {
+        println!(
+            "  gpinn-step d{} v{} n{}: {:.3} ms ({:.2}x the order-2 step), loss rel err {:.2e}",
+            r.d,
+            r.v,
+            r.n,
+            r.batched_1thread_ms,
+            r.batched_1thread_ms / r.order2_1thread_ms.max(1e-9),
+            r.loss_rel_err
+        );
+    }
     for r in &rows {
         println!(
             "  native-step d{} v{} n{}: pairgrid {:.3} ms -> batched {:.3} ms \
@@ -400,7 +592,7 @@ fn main() {
             r.model_a100_mb
         );
     }
-    write_bench_json(&rows, &rows4);
+    write_bench_json(&rows, &rows4, &rows_mm, &rows_gp);
     #[cfg(feature = "xla")]
     artifact_section(&mut report);
     #[cfg(not(feature = "xla"))]
@@ -410,6 +602,38 @@ fn main() {
     // Enforce the acceptance gates (DESIGN.md §8) so CI goes red on a
     // parity or performance regression, not just quietly uploads JSON.
     let mut failed = false;
+    let enforce_speed = std::env::var_os("HTE_BENCH_NO_SPEEDUP_GATE").is_none();
+    for r in &rows_mm {
+        if !r.bitwise_exact {
+            eprintln!(
+                "FAIL: matmul microkernel {}x{}x{} is not bitwise-exact vs the scalar \
+                 reference",
+                r.m, r.k, r.n
+            );
+            failed = true;
+        }
+        // the unroll must not *lose* to the scalar loop (0.8 leaves room
+        // for shared-runner timing noise; same escape hatch as the
+        // pairgrid gate)
+        let speedup = r.scalar_ms / r.kernel_ms.max(1e-9);
+        if speedup < 0.8 && enforce_speed {
+            eprintln!(
+                "FAIL: matmul microkernel {}x{}x{} is slower than the scalar reference \
+                 ({speedup:.2}x; set HTE_BENCH_NO_SPEEDUP_GATE=1 to report without enforcing)",
+                r.m, r.k, r.n
+            );
+            failed = true;
+        }
+    }
+    for r in &rows_gp {
+        if r.loss_rel_err >= 1e-3 || r.loss_rel_err.is_nan() {
+            eprintln!(
+                "FAIL: gpinn loss parity d{} v{} n{}: rel err {:.3e} >= 1e-3",
+                r.d, r.v, r.n, r.loss_rel_err
+            );
+            failed = true;
+        }
+    }
     for r in &rows {
         if r.loss_rel_err >= 1e-3 || r.loss_rel_err.is_nan() {
             eprintln!(

@@ -40,6 +40,7 @@ enum Op {
     Scale { a: usize, alpha: f32 },
     Tanh { a: usize },
     Sin { a: usize },
+    Cos { a: usize },
     MeanAll { a: usize },
     SumAll { a: usize },
     /// [k*group, 1] -> [k, 1], mean over consecutive groups of rows.
@@ -185,44 +186,18 @@ impl Tape {
         self.push(t, Op::Leaf)
     }
 
-    /// Three same-shape constant leaves filled in one host-side pass
-    /// (e.g. the three factor-jet streams share one O(d) evaluation).
-    pub fn leaf3_with(
+    /// `count` same-shape constant leaves filled in one host-side pass
+    /// (e.g. the order+1 hard-constraint factor-jet streams share one
+    /// O(d) evaluation per pair).
+    pub fn leaf_vec_with(
         &mut self,
+        count: usize,
         shape: &[usize],
-        fill: impl FnOnce(&mut [f32], &mut [f32], &mut [f32]),
-    ) -> [Var; 3] {
-        let mut t0 = self.alloc(shape);
-        let mut t1 = self.alloc(shape);
-        let mut t2 = self.alloc(shape);
-        fill(&mut t0.data, &mut t1.data, &mut t2.data);
-        [
-            self.push(t0, Op::Leaf),
-            self.push(t1, Op::Leaf),
-            self.push(t2, Op::Leaf),
-        ]
-    }
-
-    /// Five same-shape constant leaves filled in one host-side pass (the
-    /// order-4 hard-constraint factor jets share one O(d) evaluation).
-    pub fn leaf5_with(
-        &mut self,
-        shape: &[usize],
-        fill: impl FnOnce(&mut [f32], &mut [f32], &mut [f32], &mut [f32], &mut [f32]),
-    ) -> [Var; 5] {
-        let mut t0 = self.alloc(shape);
-        let mut t1 = self.alloc(shape);
-        let mut t2 = self.alloc(shape);
-        let mut t3 = self.alloc(shape);
-        let mut t4 = self.alloc(shape);
-        fill(&mut t0.data, &mut t1.data, &mut t2.data, &mut t3.data, &mut t4.data);
-        [
-            self.push(t0, Op::Leaf),
-            self.push(t1, Op::Leaf),
-            self.push(t2, Op::Leaf),
-            self.push(t3, Op::Leaf),
-            self.push(t4, Op::Leaf),
-        ]
+        fill: impl FnOnce(&mut [Tensor]),
+    ) -> Vec<Var> {
+        let mut ts: Vec<Tensor> = (0..count).map(|_| self.alloc(shape)).collect();
+        fill(&mut ts);
+        ts.into_iter().map(|t| self.push(t, Op::Leaf)).collect()
     }
 
     pub fn matmul(&mut self, a: Var, b: Var) -> Var {
@@ -307,6 +282,10 @@ impl Tape {
         self.ew1(a, Op::Sin { a: a.0 }, |x| x.sin())
     }
 
+    pub fn cos(&mut self, a: Var) -> Var {
+        self.ew1(a, Op::Cos { a: a.0 }, |x| x.cos())
+    }
+
     pub fn square(&mut self, a: Var) -> Var {
         self.mul(a, a)
     }
@@ -370,30 +349,43 @@ impl Tape {
         self.push(out, Op::TileRows { a: a.0 })
     }
 
-    /// Fused order-2 tanh jet with a row-broadcast primal stream.
+    /// Fused tanh jet with a row-broadcast primal stream, at any order
+    /// 1..=4 (Faà di Bruno through tanh, same convention as
+    /// `nn::jet::tanh_jet`).  The order is `z.len() - 1`.
     ///
-    /// Inputs: `z[0]` at [n, c] (primal), `z[1]`/`z[2]` at [n*group, c]
-    /// (tangent / second streams; row i*group+k belongs to point i).
-    /// Returns `[t0, o1, o2]` with
-    ///   t0 = tanh(z0)                       at [n, c]
-    ///   o1 = f1 ⊙ z1                        at [n*group, c]
-    ///   o2 = f2 ⊙ z1² + f1 ⊙ z2             at [n*group, c]
-    /// where f1 = 1 - t0², f2 = -2 t0 f1 are broadcast by `group`, never
-    /// materialized.  Each output is one tape node with a hand-written
-    /// backward — versus ~9 generic nodes for the unfused composition.
-    pub fn tanh_jet2(&mut self, z: [Var; 3], group: usize) -> [Var; 3] {
+    /// Inputs: `z[0]` at [n, c] (primal), `z[1..]` at [n*group, c]
+    /// (derivative streams; row i*group+k belongs to point i).  Returns
+    /// `[t0, o1, ..]` with
+    ///   t0 = tanh(z0)                                     at [n, c]
+    ///   o1 = f1 z1                                        at [n*group, c]
+    ///   o2 = f2 z1² + f1 z2
+    ///   o3 = f3 z1³ + 3 f2 z1 z2 + f1 z3
+    ///   o4 = f4 z1⁴ + 6 f3 z1² z2 + 3 f2 z2² + 4 f2 z1 z3 + f1 z4
+    /// where the factors f1..f4 (see `tanh_factors`) depend only on the
+    /// primal stream and are broadcast by row index, never materialized
+    /// at [n*group, c].  Each output is one tape node with a hand-written
+    /// backward — versus dozens of generic elementwise nodes unfused.
+    pub fn tanh_jet(&mut self, z: &[Var], group: usize) -> Vec<Var> {
+        let order = z.len() - 1;
+        assert!((1..=4).contains(&order), "tanh jet supports orders 1..=4, got {order}");
         let (n, c) = (self.value(z[0]).shape[0], self.value(z[0]).shape[1]);
         let b = n * group;
-        assert_eq!(self.value(z[1]).shape, vec![b, c], "tangent stream shape");
-        assert_eq!(self.value(z[2]).shape, vec![b, c], "second stream shape");
+        for (k, zk) in z.iter().enumerate().skip(1) {
+            assert_eq!(self.value(*zk).shape, vec![b, c], "stream {k} shape");
+        }
 
         let t0 = self.ew1(z[0], Op::TanhJetT0 { z0: z[0].0 }, |x| x.tanh());
 
-        let mut o1 = self.alloc(&[b, c]);
+        // One pass per output stream (no per-element order branches): the
+        // order-2 streams keep the chunked-iterator bodies of the old
+        // fused kernel — the production trace path's codegen is unchanged
+        // — and the order-3/4 streams keep the indexed bodies of the old
+        // order-4 kernel.
+        let mut outs: Vec<Tensor> = (0..order).map(|_| self.alloc(&[b, c])).collect();
         {
             let t0d = &self.nodes[t0.0].value.data;
             let z1d = &self.nodes[z[1].0].value.data;
-            for (r, (orow, zrow)) in o1.data.chunks_mut(c).zip(z1d.chunks(c)).enumerate() {
+            for (r, (orow, zrow)) in outs[0].data.chunks_mut(c).zip(z1d.chunks(c)).enumerate() {
                 let p = r / group;
                 let trow = &t0d[p * c..(p + 1) * c];
                 for ((o, &z1e), &t) in orow.iter_mut().zip(zrow).zip(trow) {
@@ -401,14 +393,11 @@ impl Tape {
                 }
             }
         }
-        let o1 = self.push(o1, Op::TanhJetO1 { t0: t0.0, z1: z[1].0, group });
-
-        let mut o2 = self.alloc(&[b, c]);
-        {
+        if order >= 2 {
             let t0d = &self.nodes[t0.0].value.data;
             let z1d = &self.nodes[z[1].0].value.data;
             let z2d = &self.nodes[z[2].0].value.data;
-            for (r, (orow, (zrow1, zrow2))) in o2
+            for (r, (orow, (zrow1, zrow2))) in outs[1]
                 .data
                 .chunks_mut(c)
                 .zip(z1d.chunks(c).zip(z2d.chunks(c)))
@@ -423,75 +412,79 @@ impl Tape {
                 }
             }
         }
-        let o2 = self.push(o2, Op::TanhJetO2 { t0: t0.0, z1: z[1].0, z2: z[2].0, group });
-
-        [t0, o1, o2]
-    }
-
-    /// Fused order-4 tanh jet with a row-broadcast primal stream — the
-    /// order-4 sibling of [`Tape::tanh_jet2`] (Faà di Bruno through tanh,
-    /// same convention as `nn::jet::tanh_jet`).
-    ///
-    /// Inputs: `z[0]` at [n, c] (primal), `z[1..=4]` at [n*group, c]
-    /// (derivative streams; row i*group+k belongs to point i).  Returns
-    /// `[t0, o1, o2, o3, o4]` with
-    ///   t0 = tanh(z0)                                     at [n, c]
-    ///   o1 = f1 z1                                        at [n*group, c]
-    ///   o2 = f2 z1² + f1 z2
-    ///   o3 = f3 z1³ + 3 f2 z1 z2 + f1 z3
-    ///   o4 = f4 z1⁴ + 6 f3 z1² z2 + 3 f2 z2² + 4 f2 z1 z3 + f1 z4
-    /// where the factors f1..f4 (see `tanh_factors`) depend only on the
-    /// primal stream and are broadcast by row index, never materialized
-    /// at [n*group, c].  Each output is one tape node with a hand-written
-    /// backward.
-    pub fn tanh_jet4(&mut self, z: [Var; 5], group: usize) -> [Var; 5] {
-        let (n, c) = (self.value(z[0]).shape[0], self.value(z[0]).shape[1]);
-        let b = n * group;
-        for (k, zk) in z.iter().enumerate().skip(1) {
-            assert_eq!(self.value(*zk).shape, vec![b, c], "stream {k} shape");
+        if order >= 3 {
+            let t0d = &self.nodes[t0.0].value.data;
+            let z1d = &self.nodes[z[1].0].value.data;
+            let z2d = &self.nodes[z[2].0].value.data;
+            let z3d = &self.nodes[z[3].0].value.data;
+            let o3 = &mut outs[2].data;
+            for r in 0..b {
+                let p = r / group;
+                for j in 0..c {
+                    let (f1, f2, f3, _) = tanh_factors(t0d[p * c + j]);
+                    let idx = r * c + j;
+                    let (z1e, z2e, z3e) = (z1d[idx], z2d[idx], z3d[idx]);
+                    o3[idx] = f3 * z1e * z1e * z1e + 3.0 * f2 * z1e * z2e + f1 * z3e;
+                }
+            }
         }
-
-        let t0 = self.ew1(z[0], Op::TanhJetT0 { z0: z[0].0 }, |x| x.tanh());
-
-        let mut o1 = self.alloc(&[b, c]);
-        let mut o2 = self.alloc(&[b, c]);
-        let mut o3 = self.alloc(&[b, c]);
-        let mut o4 = self.alloc(&[b, c]);
-        {
+        if order >= 4 {
             let t0d = &self.nodes[t0.0].value.data;
             let z1d = &self.nodes[z[1].0].value.data;
             let z2d = &self.nodes[z[2].0].value.data;
             let z3d = &self.nodes[z[3].0].value.data;
             let z4d = &self.nodes[z[4].0].value.data;
+            let o4 = &mut outs[3].data;
             for r in 0..b {
                 let p = r / group;
                 for j in 0..c {
                     let (f1, f2, f3, f4) = tanh_factors(t0d[p * c + j]);
                     let idx = r * c + j;
-                    let (z1, z2, z3, z4) = (z1d[idx], z2d[idx], z3d[idx], z4d[idx]);
-                    o1.data[idx] = f1 * z1;
-                    o2.data[idx] = f2 * z1 * z1 + f1 * z2;
-                    o3.data[idx] = f3 * z1 * z1 * z1 + 3.0 * f2 * z1 * z2 + f1 * z3;
-                    o4.data[idx] = f4 * z1 * z1 * z1 * z1
-                        + 6.0 * f3 * z1 * z1 * z2
-                        + 3.0 * f2 * z2 * z2
-                        + 4.0 * f2 * z1 * z3
-                        + f1 * z4;
+                    let (z1e, z2e, z3e, z4e) = (z1d[idx], z2d[idx], z3d[idx], z4d[idx]);
+                    o4[idx] = f4 * z1e * z1e * z1e * z1e
+                        + 6.0 * f3 * z1e * z1e * z2e
+                        + 3.0 * f2 * z2e * z2e
+                        + 4.0 * f2 * z1e * z3e
+                        + f1 * z4e;
                 }
             }
         }
-        let o1 = self.push(o1, Op::TanhJetO1 { t0: t0.0, z1: z[1].0, group });
-        let o2 = self.push(o2, Op::TanhJetO2 { t0: t0.0, z1: z[1].0, z2: z[2].0, group });
-        let o3 = self.push(
-            o3,
-            Op::TanhJetO3 { t0: t0.0, z1: z[1].0, z2: z[2].0, z3: z[3].0, group },
-        );
-        let o4 = self.push(
-            o4,
-            Op::TanhJetO4 { t0: t0.0, z1: z[1].0, z2: z[2].0, z3: z[3].0, z4: z[4].0, group },
-        );
+        let mut result = Vec::with_capacity(order + 1);
+        result.push(t0);
+        let mut outs = outs.into_iter();
+        let o1 = outs.next().expect("order >= 1");
+        result.push(self.push(o1, Op::TanhJetO1 { t0: t0.0, z1: z[1].0, group }));
+        if order >= 2 {
+            let o2 = outs.next().expect("order >= 2");
+            result.push(self.push(o2, Op::TanhJetO2 { t0: t0.0, z1: z[1].0, z2: z[2].0, group }));
+        }
+        if order >= 3 {
+            let o3 = outs.next().expect("order >= 3");
+            result.push(self.push(
+                o3,
+                Op::TanhJetO3 { t0: t0.0, z1: z[1].0, z2: z[2].0, z3: z[3].0, group },
+            ));
+        }
+        if order >= 4 {
+            let o4 = outs.next().expect("order >= 4");
+            result.push(self.push(
+                o4,
+                Op::TanhJetO4 { t0: t0.0, z1: z[1].0, z2: z[2].0, z3: z[3].0, z4: z[4].0, group },
+            ));
+        }
+        result
+    }
 
-        [t0, o1, o2, o3, o4]
+    /// Order-2 array form of [`Tape::tanh_jet`].
+    pub fn tanh_jet2(&mut self, z: [Var; 3], group: usize) -> [Var; 3] {
+        let out = self.tanh_jet(&z, group);
+        [out[0], out[1], out[2]]
+    }
+
+    /// Order-4 array form of [`Tape::tanh_jet`].
+    pub fn tanh_jet4(&mut self, z: [Var; 5], group: usize) -> [Var; 5] {
+        let out = self.tanh_jet(&z, group);
+        [out[0], out[1], out[2], out[3], out[4]]
     }
 
     /// Reverse pass from a scalar root; returns per-node gradients.
@@ -615,6 +608,13 @@ impl Tape {
                 let ga = slot(grads, a, &nodes[a].value.shape, pool);
                 for ((o, &x), &y) in ga.data.iter_mut().zip(&g.data).zip(av) {
                     *o += x * y.cos();
+                }
+            }
+            Op::Cos { a } => {
+                let av = &nodes[a].value.data;
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for ((o, &x), &y) in ga.data.iter_mut().zip(&g.data).zip(av) {
+                    *o -= x * y.sin();
                 }
             }
             Op::MeanAll { a } => {
@@ -1286,6 +1286,90 @@ mod tests {
             let mut s = tape.add(o1, o2);
             s = tape.add(s, o3);
             s = tape.add(s, o4);
+            s = tape.add(s, t0bc);
+            let sq = tape.square(s);
+            let loss = tape.mean_all(sq);
+            let loss_val = tape.value(loss).data[0];
+            let grads = tape.backward(loss);
+            let g = vars
+                .iter()
+                .map(|v| grads[v.0].as_ref().unwrap().data.clone())
+                .collect();
+            (loss_val, g)
+        };
+        let (_, grads) = eval(&flat);
+        let h = 1e-3f32;
+        let mut off = 0;
+        for (k, &len) in lens.iter().enumerate() {
+            for i in 0..len {
+                let mut fp = flat.clone();
+                fp[off + i] += h;
+                let mut fm = flat.clone();
+                fm[off + i] -= h;
+                let fd = (eval(&fp).0 - eval(&fm).0) / (2.0 * h);
+                let got = grads[k][i];
+                assert!(
+                    (got - fd).abs() < 2e-3 * (1.0 + fd.abs()) + 2e-3,
+                    "stream {k} elem {i}: tape {got} vs fd {fd}"
+                );
+            }
+            off += len;
+        }
+    }
+
+    #[test]
+    fn cos_grad_matches_fd() {
+        let a_data = vec![0.3f32, -1.1, 0.7];
+        let f = |a: &[f32]| -> f32 {
+            let mut tape = Tape::new();
+            let av = tape.input(Tensor::from_vec(&[3, 1], a.to_vec()));
+            let c = tape.cos(av);
+            let m = tape.mul(c, av);
+            let loss = tape.mean_all(m);
+            tape.value(loss).data[0]
+        };
+        let mut tape = Tape::new();
+        let av = tape.input(Tensor::from_vec(&[3, 1], a_data.clone()));
+        let c = tape.cos(av);
+        let m = tape.mul(c, av);
+        let loss = tape.mean_all(m);
+        assert!((tape.value(c).data[0] - 0.3f32.cos()).abs() < 1e-6);
+        let grads = tape.backward(loss);
+        let got = &grads[av.0].as_ref().unwrap().data;
+        let want = fd_grad(&f, &a_data, 1e-3);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+
+    /// The generic order-3 jet (the gPINN stream depth) against finite
+    /// differences of a scalar pipeline through all four input streams.
+    #[test]
+    fn tanh_jet3_grad_matches_fd() {
+        let n = 2;
+        let group = 2;
+        let c = 2;
+        let b = n * group;
+        let lens = [n * c, b * c, b * c, b * c];
+        let mut flat: Vec<f32> = Vec::new();
+        for (k, &len) in lens.iter().enumerate() {
+            for i in 0..len {
+                flat.push(0.11 * (i as f32 + 1.0) * (1.0 - 0.25 * k as f32) - 0.3);
+            }
+        }
+        let eval = |flat: &[f32]| -> (f32, Vec<Vec<f32>>) {
+            let mut tape = Tape::new();
+            let mut off = 0;
+            let mut vars = Vec::new();
+            for (k, &len) in lens.iter().enumerate() {
+                let shape = if k == 0 { [n, c] } else { [b, c] };
+                vars.push(tape.input(Tensor::from_vec(&shape, flat[off..off + len].to_vec())));
+                off += len;
+            }
+            let out = tape.tanh_jet(&vars, group);
+            let t0bc = tape.broadcast_rows(out[0], group);
+            let mut s = tape.add(out[1], out[2]);
+            s = tape.add(s, out[3]);
             s = tape.add(s, t0bc);
             let sq = tape.square(s);
             let loss = tape.mean_all(sq);

@@ -63,19 +63,21 @@ pub fn load(path: impl AsRef<Path>) -> Result<(CheckpointMeta, Vec<f32>)> {
         std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
     );
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic).context("truncated checkpoint: missing magic")?;
     if &magic != MAGIC {
         bail!("not a hte-pinn checkpoint (bad magic)");
     }
     let mut len_bytes = [0u8; 8];
-    f.read_exact(&mut len_bytes)?;
+    f.read_exact(&mut len_bytes).context("truncated checkpoint: missing header length")?;
     let header_len = u64::from_le_bytes(len_bytes) as usize;
     if header_len > 16 * 1024 * 1024 {
         bail!("absurd checkpoint header size {header_len}");
     }
     let mut header = vec![0u8; header_len];
-    f.read_exact(&mut header)?;
-    let v = Value::parse(std::str::from_utf8(&header)?)?;
+    f.read_exact(&mut header).with_context(|| {
+        format!("truncated checkpoint: header claims {header_len} bytes but the file ends first")
+    })?;
+    let v = Value::parse(std::str::from_utf8(&header)?).context("corrupt checkpoint header")?;
     let meta = CheckpointMeta {
         config: TrainConfig::from_json(v.get("config")?)?,
         step: v.get("step")?.as_usize()?,
@@ -93,8 +95,17 @@ pub fn load(path: impl AsRef<Path>) -> Result<(CheckpointMeta, Vec<f32>)> {
     };
     let mut payload = Vec::new();
     f.read_to_end(&mut payload)?;
+    // Header-vs-payload length check: a short payload is a truncated
+    // write, a long one a corrupted/mismatched header — both must be
+    // clean errors, never silently-garbage parameters.
     if payload.len() != meta.state_len * 4 {
-        bail!("truncated checkpoint: {} bytes for {} floats", payload.len(), meta.state_len);
+        bail!(
+            "checkpoint payload is {} bytes but the header promises {} floats ({} bytes) — \
+             truncated or corrupted file",
+            payload.len(),
+            meta.state_len,
+            meta.state_len * 4
+        );
     }
     let state = payload
         .chunks_exact(4)
@@ -157,6 +168,58 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A checkpoint cut off mid-payload (e.g. a killed writer) must fail
+    /// with a clean truncation error — never panic or return short state.
+    #[test]
+    fn truncated_payload_is_a_clean_error() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-trunc-{}", std::process::id()));
+        let path = dir.join("trunc.ckpt");
+        let state: Vec<f32> = (0..500).map(|i| i as f32).collect();
+        save(&path, &config(), 9, Some(8), &[0.1], &state).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut 10 bytes off the payload (not even float-aligned)
+        std::fs::write(&path, &full[..full.len() - 10]).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("truncated") || err.contains("corrupted"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A file cut off inside the JSON header (before the payload even
+    /// starts) is also a clean error, with the header length named.
+    #[test]
+    fn truncated_header_is_a_clean_error() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-trunch-{}", std::process::id()));
+        let path = dir.join("trunc.ckpt");
+        save(&path, &config(), 2, None, &[0.5], &[1.0, 2.0, 3.0]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // keep magic + length word + half the header
+        std::fs::write(&path, &full[..16 + (full.len() - 16) / 4]).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A header whose `state_len` disagrees with the payload (bit-flip,
+    /// mixed-up files) is rejected by the length cross-check.
+    #[test]
+    fn state_len_mismatch_is_a_clean_error() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-len-{}", std::process::id()));
+        let path = dir.join("len.ckpt");
+        let state: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        save(&path, &config(), 1, Some(4), &[0.0], &state).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // append 4 stray bytes: payload no longer matches state_len
+        let mut longer = full.clone();
+        longer.extend_from_slice(&[0u8; 4]);
+        std::fs::write(&path, &longer).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("promises"), "unexpected error: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

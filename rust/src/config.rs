@@ -20,12 +20,17 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::TrainConfig;
 use crate::estimators::Estimator;
 use crate::util::json::Value;
 use crate::util::toml;
+
+/// Problem families the repo knows how to build.  Must stay in sync with
+/// `coordinator::problem_for` — `known_families_match_problem_for` below
+/// gates one direction; extend both when adding a family.
+pub const KNOWN_FAMILIES: [&str; 3] = ["sg2", "sg3", "bihar"];
 
 #[derive(Clone, Debug)]
 pub struct FileConfig {
@@ -81,10 +86,19 @@ impl FileConfig {
                 .map(|x| Ok(x.as_f64()? as u64))
                 .collect::<Result<_>>()?,
         };
+        // Validate the family at parse time so a typo fails here with the
+        // supported set listed, not deep inside the trainer.
+        let family = run.get("family").context("[run] needs family")?.as_str()?.to_string();
+        if !KNOWN_FAMILIES.contains(&family.as_str()) {
+            bail!(
+                "unknown family {family:?} in [run] (supported: {})",
+                KNOWN_FAMILIES.join(" | ")
+            );
+        }
         Ok(FileConfig {
             artifacts: PathBuf::from(get_str(&top, "artifacts", "artifacts")?),
             run: RunConfig {
-                family: run.get("family").context("[run] needs family")?.as_str()?.to_string(),
+                family,
                 method: get_str(run, "method", "probe")?,
                 estimator: get_str(run, "estimator", "hte")?.parse()?,
                 d: run.get("d").context("[run] needs d")?.as_usize()?,
@@ -169,5 +183,28 @@ mod tests {
     fn missing_family_is_error() {
         assert!(FileConfig::parse("[run]\nd = 10\n").is_err());
         assert!(FileConfig::parse("d = 10\n").is_err());
+    }
+
+    /// Every family the parser admits must actually construct through
+    /// `problem_for` (guards the two lists against drifting apart).
+    #[test]
+    fn known_families_match_problem_for() {
+        for family in KNOWN_FAMILIES {
+            assert!(
+                crate::coordinator::problem_for(family, 4).is_ok(),
+                "KNOWN_FAMILIES lists {family} but problem_for rejects it"
+            );
+        }
+    }
+
+    /// A typo'd family fails at parse time with the supported set listed,
+    /// instead of surviving until the trainer rejects it.
+    #[test]
+    fn unknown_family_fails_at_parse_with_supported_list() {
+        let err = FileConfig::parse("[run]\nfamily = \"sg9\"\nd = 10\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sg9"), "{err}");
+        assert!(err.contains("sg2") && err.contains("sg3") && err.contains("bihar"), "{err}");
     }
 }

@@ -15,14 +15,23 @@ pub struct StepRecord {
     pub elapsed_s: f64,
     pub it_per_sec: f64,
     pub rss_mb: f64,
+    /// Theoretical probe-estimator variance at the iterate (Thms
+    /// 3.2/3.3), when cheap enough to compute (small d, order-2
+    /// operator); omitted from the JSONL when `None`.
+    pub probe_var: Option<f64>,
 }
 
 impl StepRecord {
     pub fn to_jsonl(&self) -> String {
-        format!(
-            "{{\"step\":{},\"loss\":{:e},\"lr\":{:e},\"elapsed_s\":{:.3},\"it_per_sec\":{:.3},\"rss_mb\":{:.1}}}",
+        let mut out = format!(
+            "{{\"step\":{},\"loss\":{:e},\"lr\":{:e},\"elapsed_s\":{:.3},\"it_per_sec\":{:.3},\"rss_mb\":{:.1}",
             self.step, self.loss, self.lr, self.elapsed_s, self.it_per_sec, self.rss_mb
-        )
+        );
+        if let Some(pv) = self.probe_var {
+            out.push_str(&format!(",\"probe_var\":{pv:e}"));
+        }
+        out.push('}');
+        out
     }
 }
 
@@ -103,6 +112,7 @@ mod tests {
                     elapsed_s: 0.1,
                     it_per_sec: 100.0,
                     rss_mb: 42.0,
+                    probe_var: if step == 2 { Some(0.25) } else { None },
                 })
                 .unwrap();
         }
@@ -110,8 +120,12 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.trim().lines().collect();
         assert_eq!(lines.len(), 3);
+        let parsed = crate::util::json::Value::parse(lines[1]).unwrap();
+        assert_eq!(parsed.get("step").unwrap().as_usize().unwrap(), 1);
+        assert!(parsed.get("probe_var").is_err(), "probe_var omitted when None");
         let parsed = crate::util::json::Value::parse(lines[2]).unwrap();
         assert_eq!(parsed.get("step").unwrap().as_usize().unwrap(), 2);
+        assert!((parsed.get("probe_var").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -126,6 +140,7 @@ mod tests {
                 elapsed_s: 0.0,
                 it_per_sec: 0.0,
                 rss_mb: 0.0,
+                probe_var: None,
             })
             .unwrap();
         logger.flush().unwrap();

@@ -30,7 +30,9 @@ pub use experiments::{
 };
 pub use metrics::{rss_mb, MetricsLogger, StepRecord};
 pub use native::NativeTrainer;
-pub use native_experiments::{experiment_biharmonic_native, NativeExperimentOpts};
+pub use native_experiments::{
+    experiment_biharmonic_native, experiment_gpinn_native, NativeExperimentOpts,
+};
 pub use schedule::LinearDecay;
 pub use spec::{mean_std, problem_for, EvalPool, ExperimentRow, RunSummary, TrainConfig};
 #[cfg(feature = "xla")]

@@ -24,9 +24,13 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::checkpoint;
-use crate::estimators::{Estimator, ProbeGenerator};
-use crate::nn::{adam_step, Mlp, NativeBatch, NativeEngine};
-use crate::pde::{DomainSampler, PdeProblem};
+use crate::estimators::{
+    hte_rademacher_variance, hte_variance_gaussian_diag, sdgd_variance, Estimator, ProbeGenerator,
+};
+use crate::nn::{
+    adam_step, jet_forward, residual_op_for, Mlp, NativeBatch, NativeEngine, ResidualOp,
+};
+use crate::pde::{DomainSampler, OperatorKind, PdeProblem};
 use crate::rng::{Normal, Xoshiro256pp};
 
 use super::metrics::{rss_mb, MetricsLogger, StepRecord};
@@ -36,6 +40,7 @@ use super::spec::{problem_for, EvalPool, RunSummary, TrainConfig};
 pub struct NativeTrainer {
     pub mlp: Mlp,
     problem: Box<dyn PdeProblem>,
+    op: Box<dyn ResidualOp>,
     sampler: DomainSampler,
     probes: ProbeGenerator,
     schedule: LinearDecay,
@@ -64,38 +69,28 @@ impl NativeTrainer {
     /// Like [`NativeTrainer::new`] with an explicit worker-thread count.
     /// Results are bitwise identical for any `threads` (ordered reduction).
     pub fn with_threads(config: TrainConfig, batch_n: usize, threads: usize) -> Result<Self> {
-        let bihar = config.family == "bihar";
-        let method_ok = match config.method.as_str() {
-            "probe" => true,
-            // accept the artifact manifest's name for the order-4 method
-            "probe4" => bihar,
-            _ => false,
-        };
-        if !method_ok {
-            bail!(
-                "native backend supports the probe methods (got {}/{})",
-                config.family,
-                config.method
-            );
-        }
-        // Thm 3.4: the order-4 TVP estimator is only unbiased under
-        // Gaussian probes.  The generic Rademacher default is upgraded —
-        // written back into the config so labels, metrics and checkpoints
-        // report the distribution actually used; explicitly incompatible
-        // probe distributions are an error.
         let mut config = config;
-        if bihar {
+        let problem = problem_for(&config.family, config.d)?;
+        // One place maps method strings onto residual operators; an
+        // unsupported pair errors with the supported set listed.
+        let op = residual_op_for(problem.as_ref(), &config.method, config.lambda_g)?;
+        // Probe policy comes from the operator (Thm 3.4: the order-4 TVP
+        // estimator is only unbiased under Gaussian probes).  The generic
+        // Rademacher default is upgraded — written back into the config so
+        // labels, metrics and checkpoints report the distribution actually
+        // used; explicitly incompatible probe distributions are an error.
+        if op.requires_gaussian_probes() {
             config.estimator = match config.estimator {
                 Estimator::HteRademacher | Estimator::HteGaussian => Estimator::HteGaussian,
                 other => bail!(
-                    "the biharmonic TVP requires Gaussian probes (Thm 3.4), got {}",
+                    "the {} operator requires Gaussian probes (Thm 3.4), got {}",
+                    op.name(),
                     other.name()
                 ),
             };
         }
         let estimator = config.estimator;
         let mut root = Xoshiro256pp::new(config.seed);
-        let problem = problem_for(&config.family, config.d)?;
         let mut coeff = vec![0.0f32; problem.n_coeff()];
         Normal::new().fill_f32(&mut root.fork(1), &mut coeff);
         let sampler = DomainSampler::new(problem.domain(), config.d, root.fork(2));
@@ -110,6 +105,7 @@ impl NativeTrainer {
             flat,
             mlp,
             problem,
+            op,
             sampler,
             probes,
             schedule: LinearDecay::new(config.lr0, config.epochs.max(1)),
@@ -140,8 +136,13 @@ impl NativeTrainer {
             n: self.batch_n,
             v: self.config.v,
         };
-        let loss =
-            self.engine.loss_and_grad(&self.mlp, self.problem.as_ref(), &batch, &mut self.grad);
+        let loss = self.engine.loss_and_grad_with(
+            &self.mlp,
+            self.problem.as_ref(),
+            self.op.as_ref(),
+            &batch,
+            &mut self.grad,
+        );
         // re-pack from `mlp` (not the last step's flat) so external edits
         // to the public field — warm starts, perturbations — are honored
         self.mlp.pack_into(&mut self.flat);
@@ -150,6 +151,57 @@ impl NativeTrainer {
         self.last_loss = loss;
         self.step_idx += 1;
         Ok(())
+    }
+
+    /// Theoretical variance of the probe trace estimator (Thms 3.2/3.3)
+    /// at the current iterate, evaluated at the first point of the last
+    /// sampled batch: the exact constrained-model Hessian is assembled by
+    /// polarization of directional jets
+    /// (H_ij = (D²u[e_i+e_j] − D²u[e_i] − D²u[e_j]) / 2) and fed to
+    /// `estimators::variance`.  That assembly is O(d²) jet passes, so the
+    /// estimate is only produced at small d (≤ 16, ~150 cheap [1,·] jet
+    /// passes, and only at `log_every` steps); `None` otherwise, and for
+    /// the order-4 TVP operator, whose variance is a fourth-moment
+    /// quantity the theorems do not cover.
+    pub fn probe_variance(&self) -> Option<f64> {
+        const MAX_VARIANCE_D: usize = 16;
+        if self.problem.operator() != OperatorKind::SineGordon {
+            return None;
+        }
+        let d = self.config.d;
+        if d > MAX_VARIANCE_D {
+            return None;
+        }
+        let x = &self.xs_host[..d];
+        let d2 = |w: &[f32]| jet_forward(&self.mlp, self.problem.as_ref(), x, w, 2)[2];
+        let mut basis = vec![0.0f32; d];
+        let mut diag = vec![0.0f64; d];
+        for i in 0..d {
+            basis[i] = 1.0;
+            diag[i] = d2(&basis);
+            basis[i] = 0.0;
+        }
+        let mut hess = vec![0.0f64; d * d];
+        for i in 0..d {
+            hess[i * d + i] = diag[i];
+        }
+        for i in 0..d {
+            for j in i + 1..d {
+                let mut w = vec![0.0f32; d];
+                w[i] = 1.0;
+                w[j] = 1.0;
+                let hij = (d2(&w) - diag[i] - diag[j]) / 2.0;
+                hess[i * d + j] = hij;
+                hess[j * d + i] = hij;
+            }
+        }
+        let v = self.config.v;
+        Some(match self.config.estimator {
+            Estimator::HteRademacher => hte_rademacher_variance(&hess, d, v),
+            Estimator::HteGaussian => hte_variance_gaussian_diag(&hess, d, v),
+            Estimator::Sdgd => sdgd_variance(&diag, v.min(d)),
+            Estimator::FullBasis => 0.0,
+        })
     }
 
     /// Relative L2 error on an eval pool, fully native.
@@ -184,6 +236,7 @@ impl NativeTrainer {
                     elapsed_s: start.elapsed().as_secs_f64(),
                     it_per_sec: done / start.elapsed().as_secs_f64(),
                     rss_mb: rss_mb(),
+                    probe_var: self.probe_variance(),
                 })?;
             }
         }
@@ -283,6 +336,10 @@ mod tests {
         TrainConfig { family: "bihar".into(), lr0: 1e-3, v: 8, ..config(d, epochs) }
     }
 
+    fn gpinn_config(d: usize, epochs: usize) -> TrainConfig {
+        TrainConfig { method: "gpinn".into(), lambda_g: 0.5, ..config(d, epochs) }
+    }
+
     #[test]
     fn native_training_reduces_error() {
         let mut trainer = NativeTrainer::new(config(6, 250), 16).unwrap();
@@ -313,15 +370,80 @@ mod tests {
     fn rejects_unsupported_methods() {
         let mut cfg = config(6, 10);
         cfg.method = "full".into();
-        assert!(NativeTrainer::new(cfg, 8).is_err());
+        let err = NativeTrainer::new(cfg, 8).unwrap_err().to_string();
+        assert!(err.contains("supported"), "{err}");
         // probe4 is the biharmonic method name, not a Sine-Gordon one
         let mut cfg = config(6, 10);
         cfg.method = "probe4".into();
+        assert!(NativeTrainer::new(cfg, 8).is_err());
+        // gPINN needs the order-3 trace pipeline, not the order-4 TVP
+        let mut cfg = bihar_config(6, 10);
+        cfg.method = "gpinn".into();
         assert!(NativeTrainer::new(cfg, 8).is_err());
         // the order-4 TVP has no basis-probe variant (Thm 3.4 is Gaussian)
         let mut cfg = bihar_config(6, 10);
         cfg.estimator = Estimator::Sdgd;
         assert!(NativeTrainer::new(cfg, 8).is_err());
+    }
+
+    #[test]
+    fn gpinn_native_training_decreases_loss() {
+        use crate::nn::{gpinn_residual_loss_reference, NativeBatch};
+        use crate::pde::{Domain, DomainSampler};
+        use crate::rng::{fill_rademacher, Xoshiro256pp};
+
+        let mut trainer = NativeTrainer::new(gpinn_config(5, 250), 8).unwrap();
+        // fixed f64 jet-forward eval batch, independent of training RNG
+        let mut rng = Xoshiro256pp::new(35);
+        let mut sampler = DomainSampler::new(Domain::UnitBall, 5, rng.fork(0));
+        let xs = sampler.batch(16);
+        let mut probes = vec![0.0f32; 8 * 5];
+        fill_rademacher(&mut rng, &mut probes);
+        let coeff = trainer.coeff.clone();
+        let problem = problem_for("sg2", 5).unwrap();
+        let eval = |mlp: &crate::nn::Mlp| {
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 16, v: 8 };
+            gpinn_residual_loss_reference(mlp, problem.as_ref(), &batch, 0.5)
+        };
+        let before = eval(&trainer.mlp);
+        let mut logger = MetricsLogger::null();
+        trainer.run(&mut logger).unwrap();
+        let after = eval(&trainer.mlp);
+        assert!(trainer.last_loss.is_finite(), "non-finite training loss");
+        assert!(after.is_finite() && after < before, "{before} -> {after}");
+    }
+
+    #[test]
+    fn gpinn_thread_count_does_not_change_training_bitwise() {
+        let mut a = NativeTrainer::with_threads(gpinn_config(4, 12), 9, 1).unwrap();
+        let mut b = NativeTrainer::with_threads(gpinn_config(4, 12), 9, 4).unwrap();
+        for _ in 0..12 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        assert_eq!(a.last_loss.to_bits(), b.last_loss.to_bits());
+        for (x, y) in a.flat.iter().zip(&b.flat) {
+            assert_eq!(x.to_bits(), y.to_bits(), "parameters diverged across thread counts");
+        }
+    }
+
+    /// Theorem 3.2/3.3 wiring: at the same iterate (same seed, step 0)
+    /// the Gaussian probe estimator carries strictly more variance than
+    /// Rademacher — Var_gauss = Var_rad + 2 Σ_i H_ii² / V for the
+    /// symmetric Hessian, so the ordering is deterministic.
+    #[test]
+    fn probe_variance_orders_gaussian_above_rademacher() {
+        let rad = NativeTrainer::with_threads(config(6, 5), 8, 1).unwrap();
+        let mut gauss_cfg = config(6, 5);
+        gauss_cfg.estimator = Estimator::HteGaussian;
+        let gauss = NativeTrainer::with_threads(gauss_cfg, 8, 1).unwrap();
+        let vr = rad.probe_variance().expect("small-d sg2 produces a variance");
+        let vg = gauss.probe_variance().expect("small-d sg2 produces a variance");
+        assert!(vr >= 0.0 && vr.is_finite());
+        assert!(vg > vr, "gaussian {vg} should exceed rademacher {vr}");
+        // the TVP operator's variance is out of the theorems' scope
+        let bihar = NativeTrainer::with_threads(bihar_config(4, 5), 8, 1).unwrap();
+        assert!(bihar.probe_variance().is_none());
     }
 
     #[test]
@@ -366,10 +488,10 @@ mod tests {
     }
 
     /// Checkpoint → resume must be bitwise identical to never stopping,
-    /// for both residual orders.
+    /// for every residual operator.
     #[test]
     fn resume_matches_uninterrupted() {
-        for cfg in [config(5, 24), bihar_config(4, 24)] {
+        for cfg in [config(5, 24), bihar_config(4, 24), gpinn_config(4, 24)] {
             let dir = std::env::temp_dir()
                 .join(format!("hte-native-ckpt-{}-{}", cfg.family, std::process::id()));
             let path = dir.join("mid.ckpt");

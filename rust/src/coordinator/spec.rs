@@ -65,8 +65,15 @@ impl TrainConfig {
         })
     }
 
+    /// Whether the run trains the gradient-enhanced residual (either the
+    /// native `gpinn` name or the artifact manifest's `gpinn_probe` /
+    /// `gpinn_full`).
+    pub fn is_gpinn(&self) -> bool {
+        self.method.starts_with("gpinn")
+    }
+
     pub fn label(&self) -> String {
-        format!(
+        let mut label = format!(
             "{}-{}-{}-d{}-v{}-s{}",
             self.family,
             self.method,
@@ -74,7 +81,12 @@ impl TrainConfig {
             self.d,
             self.v,
             self.seed
-        )
+        );
+        if self.is_gpinn() {
+            // λ_g changes the objective, so sweeps need it in the label
+            label.push_str(&format!("-lam{}", self.lambda_g));
+        }
+        label
     }
 }
 
@@ -96,18 +108,22 @@ pub struct ExperimentRow {
 
 impl ExperimentRow {
     pub fn to_json(&self) -> crate::util::json::Value {
-        use crate::util::json::{num, obj, s};
+        use crate::util::json::{num, obj, s, Value};
+        // NaN marks "not measured" (modeled / OOM rows) but is not valid
+        // JSON — serialize those cells as null so the rows files stay
+        // machine-readable.
+        let num_or_null = |x: f64| if x.is_finite() { num(x) } else { Value::Null };
         obj(vec![
             ("table", s(self.table)),
             ("method", s(self.method.clone())),
             ("family", s(self.family.clone())),
             ("d", num(self.d as f64)),
             ("v", num(self.v as f64)),
-            ("it_per_sec", num(self.it_per_sec)),
-            ("rss_mb", num(self.rss_mb)),
-            ("err_mean", num(self.err_mean)),
-            ("err_std", num(self.err_std)),
-            ("final_loss", num(self.final_loss)),
+            ("it_per_sec", num_or_null(self.it_per_sec)),
+            ("rss_mb", num_or_null(self.rss_mb)),
+            ("err_mean", num_or_null(self.err_mean)),
+            ("err_std", num_or_null(self.err_std)),
+            ("final_loss", num_or_null(self.final_loss)),
             ("seeds", num(self.seeds as f64)),
         ])
     }
@@ -172,6 +188,30 @@ mod tests {
         assert_eq!(m1, 5.0);
         assert_eq!(s1, 0.0);
         assert!(mean_std(&[]).0.is_nan());
+    }
+
+    /// Modeled rows carry NaN cells internally; the JSON they serialize
+    /// to must still be strictly parseable (NaN cells become null).
+    #[test]
+    fn experiment_row_with_nan_cells_serializes_to_valid_json() {
+        let row = ExperimentRow {
+            table: "t",
+            method: "model".into(),
+            family: "sg2".into(),
+            d: 10,
+            v: 0,
+            it_per_sec: f64::NAN,
+            rss_mb: 12.5,
+            err_mean: f64::NAN,
+            err_std: f64::NAN,
+            final_loss: f64::NAN,
+            seeds: 0,
+        };
+        let text = row.to_json().to_json();
+        assert!(!text.contains("NaN"), "{text}");
+        let back = crate::util::json::Value::parse(&text).unwrap();
+        assert!(back.get("it_per_sec").unwrap().as_f64().is_err(), "null, not a number");
+        assert!((back.get("rss_mb").unwrap().as_f64().unwrap() - 12.5).abs() < 1e-12);
     }
 
     #[test]

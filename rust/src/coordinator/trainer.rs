@@ -254,6 +254,9 @@ impl<'e> Trainer<'e> {
                     elapsed_s: start.elapsed().as_secs_f64(),
                     it_per_sec,
                     rss_mb: rss_mb(),
+                    // the artifact backend keeps state device-resident;
+                    // no cheap host-side Hessian to feed the theorems
+                    probe_var: None,
                 })?;
                 last_log = now;
                 last_step = self.step_idx;

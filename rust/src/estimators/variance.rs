@@ -163,4 +163,34 @@ mod tests {
         let diag = [1.0, -2.0, 3.5];
         assert_eq!(sdgd_variance(&diag, 3), 0.0);
     }
+
+    /// The paper's SDGD-comparison regime: for anisotropic
+    /// diagonal-dominant (symmetric) Hessians, Gaussian probes carry
+    /// strictly more variance than Rademacher — exactly
+    /// Var_gauss = Var_rad + 2 Σ_i A_ii² / V, since Rademacher probes
+    /// are blind to the diagonal while Gaussian ones are not.
+    #[test]
+    fn gaussian_exceeds_rademacher_on_anisotropic_diagonal() {
+        let d = 6;
+        let v = 4;
+        let mut a = vec![0.0f64; d * d];
+        for i in 0..d {
+            a[i * d + i] = 2.0 * (i as f64 + 1.0); // strongly anisotropic diagonal
+        }
+        a[1] = 0.3; // a dash of symmetric off-diagonal mass
+        a[d] = 0.3;
+        let rad = hte_rademacher_variance(&a, d, v);
+        let gauss = hte_variance_gaussian_diag(&a, d, v);
+        assert!(gauss > rad, "gaussian {gauss} should exceed rademacher {rad}");
+        let diag_mass: f64 = (0..d).map(|i| a[i * d + i] * a[i * d + i]).sum();
+        assert!(
+            (gauss - rad - 2.0 * diag_mass / v as f64).abs() < 1e-9,
+            "identity violated: {gauss} - {rad} vs {}",
+            2.0 * diag_mass / v as f64
+        );
+        // and the empirical generators agree with the ordering
+        let emp_rad = empirical_variance(Estimator::HteRademacher, &a, d, v, 40_000);
+        let emp_gauss = empirical_variance(Estimator::HteGaussian, &a, d, v, 40_000);
+        assert!(emp_gauss > emp_rad, "empirical: {emp_gauss} vs {emp_rad}");
+    }
 }

@@ -37,7 +37,7 @@ use hte_pinn::util::args::Args;
 
 const USAGE: &str = "usage: hte-pinn <info|train|table|memmodel> [flags]
   info     --artifacts DIR
-  train    --config FILE | [--family sg2|sg3|bihar --method probe
+  train    --config FILE | [--family sg2|sg3|bihar --method probe|gpinn
            --estimator hte --d 100 --v 16 --epochs 2000 --lr0 1e-3
            --seed 0 --lambda-g 10 --log-every 100]
            [--backend native|artifact] [--batch 100] --artifacts DIR
@@ -45,8 +45,8 @@ const USAGE: &str = "usage: hte-pinn <info|train|table|memmodel> [flags]
            [--resume FILE  (native: continue a checkpoint to its epochs)]
   table    --which 1..5 [--backend native|artifact] [--epochs N --seeds K
            --threads T --eval-points M --lr0 LR --out DIR]
-           [artifact: --artifacts DIR] [native: --batch N --dims D,..
-           --vs V,..  (table 5 only)]
+           [artifact: --artifacts DIR] [native (tables 4, 5): --batch N
+           --dims D,.. --vs V,.. (table 5) --v V --lambda-g L (table 4)]
   memmodel [--batch 100 --dims 100,1000,10000 --v 16 --order 2]";
 
 fn cmd_info(mut args: Args) -> Result<()> {
@@ -230,18 +230,15 @@ fn cmd_table(mut args: Args) -> Result<()> {
     }
 }
 
-/// Native (default-build) table driver: Table 5 through the order-4 TVP
-/// engine, no artifacts required.
+/// Native (default-build) table driver: Table 4 through the gPINN
+/// residual operator and Table 5 through the order-4 TVP engine, no
+/// artifacts required.
 fn cmd_table_native(which: u8, mut args: Args) -> Result<()> {
-    use hte_pinn::coordinator::{experiment_biharmonic_native, NativeExperimentOpts};
+    use hte_pinn::coordinator::{
+        experiment_biharmonic_native, experiment_gpinn_native, NativeExperimentOpts,
+    };
     use hte_pinn::util::json::Value;
 
-    if which != 5 {
-        bail!(
-            "the native table driver covers table 5 (biharmonic); \
-             tables 1-4 need --backend artifact (--features xla)"
-        );
-    }
     let epochs: usize = args.get_parse("epochs", 2000)?;
     let seeds: usize = args.get_parse("seeds", 3)?;
     let threads: usize = args.get_parse("threads", 2)?;
@@ -249,9 +246,22 @@ fn cmd_table_native(which: u8, mut args: Args) -> Result<()> {
     let lr0: f32 = args.get_parse("lr0", 1e-3)?;
     let batch: usize = args.get_parse("batch", 100)?;
     let dims = args.get_list("dims", &[10, 100])?;
+    // flags that only apply to one table: reject them (instead of
+    // silently using defaults) when given for the other
+    let vs_given = args.get("vs").is_some();
+    let v_given = args.get("v").is_some();
+    let lambda_given = args.get("lambda-g").is_some();
     let vs = args.get_list("vs", &[4, 16, 64])?;
+    let v: usize = args.get_parse("v", 16)?;
+    let lambda_g: f32 = args.get_parse("lambda-g", 1.0)?;
     let out = PathBuf::from(args.get_or("out", "results"));
     args.finish()?;
+    if which == 4 && vs_given {
+        bail!("--vs is the table-5 probe sweep; table 4 takes a single --v");
+    }
+    if which == 5 && (v_given || lambda_given) {
+        bail!("--v/--lambda-g apply to table 4; table 5 sweeps probes via --vs");
+    }
 
     let opts = NativeExperimentOpts {
         seeds: (0..seeds as u64).collect(),
@@ -261,14 +271,29 @@ fn cmd_table_native(which: u8, mut args: Args) -> Result<()> {
         lr0,
         batch_n: batch,
     };
-    let rows = experiment_biharmonic_native(&opts, &dims, &vs)?;
-    let rendered = table::render("Table 5 (native): biharmonic TVP-HTE, order-4 jets", &rows);
+    let (name, title, rows) = match which {
+        4 => (
+            "table4_native",
+            "Table 4 (native): gPINN (HTE-accelerated, jet-stream pipeline)",
+            experiment_gpinn_native(&opts, &dims, v, lambda_g)?,
+        ),
+        5 => (
+            "table5_native",
+            "Table 5 (native): biharmonic TVP-HTE, order-4 jets",
+            experiment_biharmonic_native(&opts, &dims, &vs)?,
+        ),
+        other => bail!(
+            "the native table driver supports --which 4 (gPINN) and 5 (biharmonic); \
+             tables 1-3 need --backend artifact (--features xla); got {other}"
+        ),
+    };
+    let rendered = table::render(title, &rows);
     println!("{rendered}");
     std::fs::create_dir_all(&out)?;
-    std::fs::write(out.join("table5_native.md"), &rendered)?;
+    std::fs::write(out.join(format!("{name}.md")), &rendered)?;
     let rows_json = Value::Arr(rows.iter().map(|r| r.to_json()).collect()).to_json();
-    std::fs::write(out.join("table5_native_rows.json"), rows_json)?;
-    println!("wrote {}/table5_native.md", out.display());
+    std::fs::write(out.join(format!("{name}_rows.json")), rows_json)?;
+    println!("wrote {}/{name}.md", out.display());
     Ok(())
 }
 

@@ -79,6 +79,25 @@ pub fn hte_bytes(d: usize, batch: usize, v: usize, order: usize) -> MemEstimate 
     MemEstimate { bytes: BASE + state_bytes(d) + act + probes + n * d as f64 * F32 }
 }
 
+/// Full-Hessian gPINN baseline (Table 4's exact-gPINN column): the
+/// order-2 full-PINN footprint plus the gradient-of-residual term, whose
+/// reverse pass re-materializes the d×d Hessian evaluation trace once
+/// more — the reason the paper's exact gPINN column goes "N.A." at even
+/// smaller d than the vanilla PINN budget allows.
+pub fn gpinn_full_bytes(d: usize, batch: usize) -> MemEstimate {
+    let base = full_pinn_bytes(d, batch, 2);
+    let extra = batch as f64 * d as f64 * d as f64 * F32 * 1.4;
+    MemEstimate { bytes: base.bytes + extra }
+}
+
+/// Native gPINN tape estimate: the order-3 instantiation of
+/// [`native_tape_bytes`] (four jet streams — primal + D¹..D³ — through
+/// the shared pipeline; the gradient-of-residual contraction adds
+/// leaves, not streams).
+pub fn gpinn_native_tape_bytes(d: usize, chunk: usize, v: usize, threads: usize) -> MemEstimate {
+    native_tape_bytes(d, chunk, v, 3, threads)
+}
+
 /// Native-engine (CPU tape) live-footprint model — what the order-4 rows
 /// of `BENCH_native.json` cross-check against measured `rss_mb`.
 ///
@@ -163,6 +182,23 @@ mod tests {
         let full = full_pinn_bytes(150, 100, 4);
         assert!(v1024.bytes > v16.bytes);
         assert!(v1024.bytes < full.bytes / 5.0);
+    }
+
+    /// The exact-gPINN baseline always costs more than the vanilla PINN
+    /// at the same shape (it adds a Hessian-trace re-materialization),
+    /// while the native gPINN tape sits between the order-2 and order-4
+    /// stream counts and stays flat in d.
+    #[test]
+    fn gpinn_model_orderings() {
+        for d in [100usize, 1000, 5000] {
+            assert!(gpinn_full_bytes(d, 100).bytes > full_pinn_bytes(d, 100, 2).bytes);
+        }
+        assert!(gpinn_full_bytes(20_000, 100).ooms_80gb());
+        let o2 = native_tape_bytes(100, 4, 16, 2, 8);
+        let o3 = gpinn_native_tape_bytes(100, 4, 16, 8);
+        let o4 = native_tape_bytes(100, 4, 16, 4, 8);
+        assert!(o2.bytes < o3.bytes && o3.bytes < o4.bytes);
+        assert!(gpinn_native_tape_bytes(10_000, 4, 16, 8).gb() < 1.0);
     }
 
     #[test]

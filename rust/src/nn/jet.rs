@@ -144,6 +144,33 @@ pub fn jet_forward(
         .collect()
 }
 
+/// f64 gPINN reference pieces at one residual point (the oracle for the
+/// native gPINN operator): returns
+/// `(mean_k D²u[v_k],  mean_k δ_k²)` with
+///   δ_k = D³u[v_k] + cos(u)·Du[v_k] − v_k·∇g,
+/// the k-th per-probe residual's directional derivative along its own
+/// probe — everything from order-3 directional jets, no mixed jets.
+pub fn gpinn_point_reference(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    x: &[f32],
+    probes: &[f32],
+    v: usize,
+    coeff: &[f32],
+) -> (f64, f64) {
+    let d = mlp.d;
+    let u0 = mlp.forward_constrained(x, problem.factor(x));
+    let (mut est, mut gsum) = (0.0f64, 0.0f64);
+    for k in 0..v {
+        let probe = &probes[k * d..(k + 1) * d];
+        let j = jet_forward(mlp, problem, x, probe, 3);
+        est += j[2];
+        let delta = j[3] + u0.cos() * j[1] - problem.forcing_dir(x, probe, coeff);
+        gsum += delta * delta;
+    }
+    (est / v as f64, gsum / v as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +210,37 @@ mod tests {
                 jets[k + 1]
             );
         }
+    }
+
+    /// The gPINN δ term is the directional derivative (along the probe)
+    /// of the per-probe residual r_v(x) = D²u(x)[v] + sin(u(x)) − g(x):
+    /// central differences of r_v along the line x + t v must match it.
+    #[test]
+    fn gpinn_delta_matches_fd_of_per_probe_residual() {
+        let d = 5;
+        let mut rng = Xoshiro256pp::new(8);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = SineGordon2Body::new(d);
+        let x: Vec<f32> = (0..d).map(|_| (rng.next_f64() * 0.4 - 0.2) as f32).collect();
+        let v: Vec<f32> = (0..d).map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }).collect();
+        let coeff: Vec<f32> = (0..d - 1).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        let r_at = |t: f64| -> f64 {
+            let xt: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a + (t as f32) * b).collect();
+            let j = jet_forward(&mlp, &problem, &xt, &v, 2);
+            j[2] + j[0].sin() - problem.forcing(&xt, &coeff)
+        };
+        let h = 1e-3;
+        let fd = (r_at(h) - r_at(-h)) / (2.0 * h);
+        let (_, gmean) = gpinn_point_reference(&mlp, &problem, &x, &v, 1, &coeff);
+        // one probe: gmean = δ²; rebuild δ exactly as the oracle does
+        let j = jet_forward(&mlp, &problem, &x, &v, 3);
+        let u0 = mlp.forward_constrained(&x, problem.factor(&x));
+        let delta = j[3] + u0.cos() * j[1] - problem.forcing_dir(&x, &v, &coeff);
+        assert!(
+            (delta - fd).abs() < 2e-3 * (1.0 + fd.abs()) + 2e-3,
+            "delta {delta} vs fd {fd}"
+        );
+        assert!((gmean - delta * delta).abs() < 1e-9 * (1.0 + delta * delta));
     }
 
     /// Exact Laplacian by full-basis jets == divergence of the analytic

@@ -1,5 +1,5 @@
-//! Native HTE/TVP residual losses + parameter gradients (Sine-Gordon
-//! order-2 trace families and the order-4 biharmonic TVP of Thm 3.4).
+//! Native residual losses + parameter gradients through one generic,
+//! operator-parameterized **jet-stream pipeline**.
 //!
 //! Forward high-order derivatives come from the jet rules written as tape
 //! ops (Taylor mode), then a single reverse pass over the tape produces
@@ -7,23 +7,36 @@
 //! so this module both validates the artifact path end-to-end and powers
 //! the no-artifact native trainer / ablation benches.
 //!
-//! Two implementations live here (DESIGN.md §7):
+//! Architecture (DESIGN.md §7):
 //!
-//! * [`NativeEngine`] — the production path.  The probe-independent primal
-//!   stream runs once at `[n, ·]`; only the tangent/second jet streams run
-//!   at `[n·v, ·]`, connected by `broadcast_rows`/`tile_rows` tape ops and
-//!   the fused `tanh_jet2` node.  The batch is sharded into fixed-size
-//!   point chunks processed by scoped worker threads, each owning a
-//!   workspace-pooled tape; gradients reduce in task order, so results
-//!   are bitwise identical for any thread count.
+//! * [`ResidualOp`] — a pluggable residual operator: its jet order, its
+//!   probe-distribution requirement, and the per-probe contraction that
+//!   turns constrained jet streams into the chunk loss.  The trace
+//!   families ([`TraceResidual`]), the gradient-enhanced PINN
+//!   ([`GpinnResidual`]) and the order-4 biharmonic TVP
+//!   ([`BiharResidual`]) are each ~40-line operators over the shared
+//!   pipeline instead of per-family copies of the whole engine.
+//! * [`NativeEngine`] — the production pipeline every operator runs on.
+//!   The probe-independent primal stream runs once at `[n, ·]`; the
+//!   derivative streams run at `[n·v, ·]`, connected by
+//!   `broadcast_rows`/`tile_rows` tape ops and the fused `tanh_jet`
+//!   node.  The hard constraint is applied by one generic Leibniz
+//!   combination over [`factor_jets`] (orders 2, 3 and 4 share the
+//!   entry).  The batch is sharded into fixed-size point chunks
+//!   processed by scoped worker threads, each owning a workspace-pooled
+//!   tape; gradients reduce in task order, so results are bitwise
+//!   identical for any thread count.
 //! * [`hte_residual_loss_and_grad_pairgrid`] — the original duplicated
 //!   `[n·v, d]` pair-grid formulation, kept as the ablation baseline that
 //!   `BENCH_native.json` measures the speedup against.
 
+use anyhow::{bail, Result};
+
 use crate::autodiff::{Tape, Var};
-use crate::pde::{Domain, PdeProblem};
+use crate::pde::{Domain, OperatorKind, PdeProblem};
 use crate::tensor::Tensor;
 
+use super::jet::BINOM;
 use super::mlp::Mlp;
 
 /// One training batch for the native path.
@@ -38,50 +51,374 @@ pub struct NativeBatch<'a> {
     pub v: usize,
 }
 
-/// Host-side factor jets (constants w.r.t. the parameters).
-fn factor_jets2(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 3] {
-    let s0: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
-    let s1: f64 = 2.0 * x.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
-    let s2: f64 = 2.0 * v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();
-    match problem.domain() {
-        Domain::UnitBall => [(1.0 - s0) as f32, (-s1) as f32, (-s2) as f32],
-        Domain::Annulus => {
-            // (1-s)(4-s) jets via Leibniz
-            let a = [1.0 - s0, -s1, -s2];
-            let b = [4.0 - s0, -s1, -s2];
-            [
-                (a[0] * b[0]) as f32,
-                (a[0] * b[1] + a[1] * b[0]) as f32,
-                (a[0] * b[2] + 2.0 * a[1] * b[1] + a[2] * b[0]) as f32,
-            ]
-        }
-    }
-}
+// ---------------------------------------------------------------------------
+// Hard-constraint factor jets (host side, shared by every order)
+// ---------------------------------------------------------------------------
 
-/// Order-4 host-side factor jets along x + t v (the `|x|²` jet terminates
-/// at order 2, so the annulus product jet terminates at order 4 — the
-/// same Leibniz combination as `jet::factor_jet`, allocation-free).
-fn factor_jets4(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 5] {
+/// Full order-4 jets of the hard-constraint factor along x + t v: the
+/// `|x|²` jet terminates at order 2, so the annulus product jet
+/// terminates at order 4 and every higher entry is exactly zero.
+fn factor_jets5(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f64; 5] {
     let s0: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
     let s1: f64 = 2.0 * x.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
     let s2: f64 = 2.0 * v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();
     let a = [1.0 - s0, -s1, -s2, 0.0, 0.0];
     match problem.domain() {
-        Domain::UnitBall => [a[0] as f32, a[1] as f32, a[2] as f32, 0.0, 0.0],
+        Domain::UnitBall => a,
         Domain::Annulus => {
             let b = [4.0 - s0, -s1, -s2, 0.0, 0.0];
-            let mut out = [0.0f32; 5];
+            let mut out = [0.0f64; 5];
             for (k, slot) in out.iter_mut().enumerate() {
-                let acc: f64 = (0..=k).map(|j| super::jet::BINOM[k][j] * a[j] * b[k - j]).sum();
-                *slot = acc as f32;
+                *slot = (0..=k).map(|j| BINOM[k][j] * a[j] * b[k - j]).sum();
             }
             out
         }
     }
 }
 
+/// Host-side factor jets along x + t v at any order — `N` is the stream
+/// count (order + 1, at most 5).  Orders 2, 3 and 4 all route through
+/// this one entry; the old `factor_jets2`/`factor_jets4` pair is gone.
+pub fn factor_jets<const N: usize>(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f64; N] {
+    assert!(N <= 5, "factor jets terminate at order 4");
+    let full = factor_jets5(problem, x, v);
+    std::array::from_fn(|k| full[k])
+}
+
 // ---------------------------------------------------------------------------
-// Probe-batched engine
+// ResidualOp: the pluggable per-family contraction
+// ---------------------------------------------------------------------------
+
+/// A residual operator plugged into the generic jet-stream pipeline.
+///
+/// The pipeline owns probe batching, the jet MLP, the Leibniz
+/// hard-constraint combination, chunk sharding and the ordered
+/// reduction; an operator only declares its jet order and emits the
+/// chunk loss from the constrained streams a [`ChunkCtx`] hands it.
+/// `Sync` because one operator instance is shared by all worker threads.
+pub trait ResidualOp: Sync {
+    /// Highest directional-derivative stream the contraction needs
+    /// (2 for the trace families, 3 for gPINN, 4 for the TVP).
+    fn order(&self) -> usize;
+
+    /// Whether the estimator is only unbiased under Gaussian probes
+    /// (Thm 3.4's order-4 TVP; trainers upgrade/reject configs on this).
+    fn requires_gaussian_probes(&self) -> bool {
+        false
+    }
+
+    /// Human-readable operator name (labels and error messages).
+    fn name(&self) -> &'static str;
+
+    /// Emit the unnormalized chunk loss `0.5·Σ_{i∈chunk} r_i² [+ extra
+    /// per-point terms]`; the engine divides by n after the ordered
+    /// reduction.
+    fn chunk_loss(&self, tape: &mut Tape, ctx: &mut ChunkCtx) -> Var;
+}
+
+/// Order-2 HTE trace residual (Eq. 7):
+/// r_i = mean_k D²u(x_i)[v_k] + sin(u(x_i)) − g(x_i).
+pub struct TraceResidual;
+
+impl ResidualOp for TraceResidual {
+    fn order(&self) -> usize {
+        2
+    }
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+    fn chunk_loss(&self, tape: &mut Tape, ctx: &mut ChunkCtx) -> Var {
+        let d2_mean = ctx.stream_mean(tape, 2); // [nc, 1]
+        let u0 = ctx.primal(tape); // [nc, 1]
+        let sin_u0 = tape.sin(u0);
+        let g = ctx.forcing_leaf(tape);
+        let est = tape.add(d2_mean, sin_u0);
+        let r = tape.sub(est, g);
+        let rsq = tape.square(r);
+        let sum = tape.sum_all(rsq);
+        tape.scale(sum, 0.5)
+    }
+}
+
+/// Gradient-enhanced PINN (Section 4.2 / 3.5.1): the trace residual plus
+/// λ times the probe-contracted gradient-of-residual term
+///
+///   δ_k = v_k·∇r_k = D³u[v_k] + cos(u)·Du[v_k] − v_k·∇g,
+///
+/// where r_k is the k-th per-probe residual — the contraction reuses the
+/// order-3 tanh-jet nodes already on the tape (no mixed-direction jets).
+/// Per point: L = 0.5·r² + 0.5·λ·mean_k δ_k².
+pub struct GpinnResidual {
+    pub lambda: f32,
+}
+
+impl ResidualOp for GpinnResidual {
+    fn order(&self) -> usize {
+        3
+    }
+    fn name(&self) -> &'static str {
+        "gpinn"
+    }
+    fn chunk_loss(&self, tape: &mut Tape, ctx: &mut ChunkCtx) -> Var {
+        // residual term, exactly as TraceResidual
+        let d2_mean = ctx.stream_mean(tape, 2);
+        let u0 = ctx.primal(tape);
+        let sin_u0 = tape.sin(u0);
+        let g = ctx.forcing_leaf(tape);
+        let est = tape.add(d2_mean, sin_u0);
+        let r = tape.sub(est, g);
+        let rsq = tape.square(r);
+        let rsum = tape.sum_all(rsq);
+        // gradient-of-residual term: δ_k at [nc·v, 1]
+        let u3 = ctx.stream(tape, 3);
+        let u1 = ctx.stream(tape, 1);
+        let cos_u0 = tape.cos(u0);
+        let cos_pairs = tape.broadcast_rows(cos_u0, ctx.v);
+        let adv = tape.mul(cos_pairs, u1);
+        let d3_plus = tape.add(u3, adv);
+        let gdir = ctx.forcing_dir_leaf(tape);
+        let delta = tape.sub(d3_plus, gdir);
+        let dsq = tape.square(delta);
+        let dmean = tape.group_mean(dsq, ctx.v); // [nc, 1]
+        let dsum = tape.sum_all(dmean);
+        let reg = tape.scale(dsum, self.lambda);
+        let total = tape.add(rsum, reg);
+        tape.scale(total, 0.5)
+    }
+}
+
+/// Order-4 biharmonic TVP residual (Eq. 23 / Thm 3.4):
+/// r_i = (1/(3V)) Σ_k D⁴u(x_i)[v_k] − g(x_i), v_k ~ N(0, I).
+pub struct BiharResidual;
+
+impl ResidualOp for BiharResidual {
+    fn order(&self) -> usize {
+        4
+    }
+    fn requires_gaussian_probes(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "bihar-tvp"
+    }
+    fn chunk_loss(&self, tape: &mut Tape, ctx: &mut ChunkCtx) -> Var {
+        let d4_mean = ctx.stream_mean(tape, 4); // [nc, 1]
+        // Thm 3.4: E_{v~N(0,I)} D⁴u[v] = 3 Δ²u, hence the 1/3.
+        let est = tape.scale(d4_mean, 1.0 / 3.0);
+        let g = ctx.forcing_leaf(tape);
+        let r = tape.sub(est, g);
+        let rsq = tape.square(r);
+        let sum = tape.sum_all(rsq);
+        tape.scale(sum, 0.5)
+    }
+}
+
+static TRACE_OP: TraceResidual = TraceResidual;
+static BIHAR_OP: BiharResidual = BiharResidual;
+
+/// The operator a problem family trains under by default (no method
+/// string in sight — pure `OperatorKind` metadata).
+pub fn default_residual_op(problem: &dyn PdeProblem) -> &'static dyn ResidualOp {
+    match problem.operator() {
+        OperatorKind::SineGordon => &TRACE_OP,
+        OperatorKind::Biharmonic => &BIHAR_OP,
+    }
+}
+
+/// Map a (problem, method) pair onto its residual operator — the one
+/// place method strings enter the native pipeline.  Accepts the native
+/// names and the artifact manifest's aliases.
+pub fn residual_op_for(
+    problem: &dyn PdeProblem,
+    method: &str,
+    lambda_g: f32,
+) -> Result<Box<dyn ResidualOp>> {
+    match (problem.operator(), method) {
+        (OperatorKind::SineGordon, "probe") => Ok(Box::new(TraceResidual)),
+        (OperatorKind::SineGordon, "gpinn" | "gpinn_probe") => {
+            Ok(Box::new(GpinnResidual { lambda: lambda_g }))
+        }
+        (OperatorKind::Biharmonic, "probe" | "probe4") => Ok(Box::new(BiharResidual)),
+        (kind, other) => bail!(
+            "method {other} is not supported by the native backend for the {kind:?} operator \
+             (supported: probe | gpinn | gpinn_probe for SineGordon, probe | probe4 for \
+             Biharmonic)"
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ChunkCtx: lazily-built constrained streams handed to the operator
+// ---------------------------------------------------------------------------
+
+/// Per-chunk context for a [`ResidualOp`]: the raw net jet streams plus
+/// lazily-emitted constrained streams (the Leibniz combination
+/// `u_k = Σ_j C(k,j)·fac_j·net_{k−j}` shared by every family) and
+/// host-side point leaves.  Streams an operator never asks for are never
+/// put on the tape.
+pub struct ChunkCtx<'a> {
+    problem: &'a dyn PdeProblem,
+    batch: &'a NativeBatch<'a>,
+    start: usize,
+    d: usize,
+    order: usize,
+    /// Points in this chunk.
+    pub nc: usize,
+    /// Probes per point.
+    pub v: usize,
+    /// net[0] at [nc, ·]; net[1..=order] at [nc·v, ·] (width 1 here).
+    net: Vec<Var>,
+    /// Factor-jet leaves at [nc·v, 1], built on first `stream` call.
+    fac: Vec<Var>,
+    net0_pairs: Option<Var>,
+    u0: Option<Var>,
+    u: Vec<Option<Var>>,
+}
+
+impl<'a> ChunkCtx<'a> {
+    fn new(
+        problem: &'a dyn PdeProblem,
+        batch: &'a NativeBatch<'a>,
+        start: usize,
+        nc: usize,
+        d: usize,
+        order: usize,
+        net: Vec<Var>,
+    ) -> Self {
+        Self {
+            problem,
+            batch,
+            start,
+            d,
+            order,
+            nc,
+            v: batch.v,
+            net,
+            fac: Vec::new(),
+            net0_pairs: None,
+            u0: None,
+            u: vec![None; order + 1],
+        }
+    }
+
+    /// Factor-jet leaves fac[0..=order] at [nc·v, 1], one host pass.
+    fn ensure_fac(&mut self, tape: &mut Tape) {
+        if !self.fac.is_empty() {
+            return;
+        }
+        let b = self.nc * self.v;
+        let count = self.order + 1;
+        let (problem, batch, start, d, nc, v) =
+            (self.problem, self.batch, self.start, self.d, self.nc, self.v);
+        let fac = tape.leaf_vec_with(count, &[b, 1], |ts| {
+            for i in 0..nc {
+                let x = &batch.xs[(start + i) * d..(start + i + 1) * d];
+                for k in 0..v {
+                    let probe = &batch.probes[k * d..(k + 1) * d];
+                    let f = factor_jets5(problem, x, probe);
+                    let idx = i * v + k;
+                    for (j, t) in ts.iter_mut().enumerate() {
+                        t.data[idx] = f[j] as f32;
+                    }
+                }
+            }
+        });
+        self.fac = fac;
+    }
+
+    fn net0_pairs(&mut self, tape: &mut Tape) -> Var {
+        if let Some(vn) = self.net0_pairs {
+            return vn;
+        }
+        let vn = tape.broadcast_rows(self.net[0], self.v);
+        self.net0_pairs = Some(vn);
+        vn
+    }
+
+    /// Constrained primal u(x) = factor(x)·net(x) at [nc, 1], reusing
+    /// the probe-independent primal stream (the pair-grid path paid a
+    /// second full forward pass here).
+    pub fn primal(&mut self, tape: &mut Tape) -> Var {
+        if let Some(u) = self.u0 {
+            return u;
+        }
+        let (problem, batch, start, d, nc) =
+            (self.problem, self.batch, self.start, self.d, self.nc);
+        let fac0 = tape.leaf_with(&[nc, 1], |buf| {
+            for (i, slot) in buf.iter_mut().enumerate() {
+                *slot = problem.factor(&batch.xs[(start + i) * d..(start + i + 1) * d]) as f32;
+            }
+        });
+        let u = tape.mul(fac0, self.net[0]);
+        self.u0 = Some(u);
+        u
+    }
+
+    /// k-th constrained directional-derivative stream
+    /// D^k u(x_i)[v_k] at [nc·v, 1] (Leibniz over the factor jets).
+    pub fn stream(&mut self, tape: &mut Tape, k: usize) -> Var {
+        assert!((1..=self.order).contains(&k), "stream {k} outside 1..={}", self.order);
+        if let Some(u) = self.u[k] {
+            return u;
+        }
+        self.ensure_fac(tape);
+        let n0 = self.net0_pairs(tape);
+        let mut acc: Option<Var> = None;
+        for j in 0..=k {
+            let net = if j == k { n0 } else { self.net[k - j] };
+            let mut term = tape.mul(self.fac[j], net);
+            let c = BINOM[k][j];
+            if c != 1.0 {
+                term = tape.scale(term, c as f32);
+            }
+            acc = Some(match acc {
+                None => term,
+                Some(a) => tape.add(a, term),
+            });
+        }
+        let u = acc.expect("k >= 1 has terms");
+        self.u[k] = Some(u);
+        u
+    }
+
+    /// Probe-mean of the k-th constrained stream: [nc, 1].
+    pub fn stream_mean(&mut self, tape: &mut Tape, k: usize) -> Var {
+        let s = self.stream(tape, k);
+        tape.group_mean(s, self.v)
+    }
+
+    /// Forcing g(x) at the chunk points, [nc, 1].
+    pub fn forcing_leaf(&self, tape: &mut Tape) -> Var {
+        let (problem, batch, start, d, nc) =
+            (self.problem, self.batch, self.start, self.d, self.nc);
+        tape.leaf_with(&[nc, 1], |buf| {
+            for (i, slot) in buf.iter_mut().enumerate() {
+                let x = &batch.xs[(start + i) * d..(start + i + 1) * d];
+                *slot = problem.forcing(x, batch.coeff) as f32;
+            }
+        })
+    }
+
+    /// Directional forcing derivative v_k·∇g at each (point, probe)
+    /// pair, [nc·v, 1] (the gPINN gradient-term leaf).
+    pub fn forcing_dir_leaf(&self, tape: &mut Tape) -> Var {
+        let b = self.nc * self.v;
+        let (problem, batch, start, d, nc, v) =
+            (self.problem, self.batch, self.start, self.d, self.nc, self.v);
+        tape.leaf_with(&[b, 1], |buf| {
+            for i in 0..nc {
+                let x = &batch.xs[(start + i) * d..(start + i + 1) * d];
+                for k in 0..v {
+                    let probe = &batch.probes[k * d..(k + 1) * d];
+                    buf[i * v + k] = problem.forcing_dir(x, probe, batch.coeff) as f32;
+                }
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The generic probe-batched engine
 // ---------------------------------------------------------------------------
 
 /// Residual points per worker task.  Fixed — *not* derived from the
@@ -119,11 +456,10 @@ impl NativeEngine {
         self.threads
     }
 
-    /// Residual loss and its parameter gradient (packed order), written
-    /// into `grad` (resized to `mlp.n_params()`).  Dispatches on the
-    /// problem family: the biased order-2 HTE loss (Eq. 7) for the
-    /// Sine-Gordon families, the order-4 biharmonic TVP loss (Eq. 23)
-    /// for `bihar`.
+    /// Residual loss and its parameter gradient (packed order) under the
+    /// problem family's default operator — see
+    /// [`NativeEngine::loss_and_grad_with`] for an explicit operator
+    /// (gPINN, ablations).
     pub fn loss_and_grad(
         &mut self,
         mlp: &Mlp,
@@ -131,7 +467,20 @@ impl NativeEngine {
         batch: &NativeBatch,
         grad: &mut Vec<f32>,
     ) -> f32 {
-        let chunk = chunk_fn_for(problem);
+        self.loss_and_grad_with(mlp, problem, default_residual_op(problem), batch, grad)
+    }
+
+    /// Residual loss and its parameter gradient (packed order), written
+    /// into `grad` (resized to `mlp.n_params()`), for an explicit
+    /// [`ResidualOp`].  One generic kernel serves every family.
+    pub fn loss_and_grad_with(
+        &mut self,
+        mlp: &Mlp,
+        problem: &dyn PdeProblem,
+        op: &dyn ResidualOp,
+        batch: &NativeBatch,
+        grad: &mut Vec<f32>,
+    ) -> f32 {
         let n = batch.n;
         let n_params = mlp.n_params();
         let n_tasks = n.div_ceil(CHUNK_POINTS);
@@ -153,7 +502,7 @@ impl NativeEngine {
             {
                 let start = t * CHUNK_POINTS;
                 let nc = CHUNK_POINTS.min(n - start);
-                *lslot = chunk(tape, mlp, problem, batch, start, nc, gbuf);
+                *lslot = chunk_loss_grad(tape, mlp, op, problem, batch, start, nc, gbuf);
             }
         } else {
             let per = n_tasks.div_ceil(threads);
@@ -170,7 +519,8 @@ impl NativeEngine {
                         {
                             let start = (first_task + j) * CHUNK_POINTS;
                             let nc = CHUNK_POINTS.min(n - start);
-                            *lslot = chunk(tape, mlp, problem, batch, start, nc, gbuf);
+                            *lslot =
+                                chunk_loss_grad(tape, mlp, op, problem, batch, start, nc, gbuf);
                         }
                     });
                 }
@@ -199,24 +549,6 @@ impl NativeEngine {
 /// Threads to use when the caller has no opinion.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
-}
-
-/// One residual-chunk worker: builds the tape graph for `nc` points
-/// starting at `start`, returning the unnormalized loss and writing the
-/// packed parameter gradient.  `fn` pointer so the engine can dispatch by
-/// problem family while staying `Send` for the scoped workers.
-type ChunkFn =
-    fn(&mut Tape, &Mlp, &dyn PdeProblem, &NativeBatch, usize, usize, &mut Vec<f32>) -> f64;
-
-/// Pick the residual formulation for a problem: the order-4 biharmonic
-/// TVP (Eq. 23) for the `bihar` family, the order-2 Sine-Gordon HTE
-/// residual (Eq. 7) otherwise.
-fn chunk_fn_for(problem: &dyn PdeProblem) -> ChunkFn {
-    if problem.family() == "bihar" {
-        chunk_loss_grad_bihar
-    } else {
-        chunk_loss_grad
-    }
 }
 
 /// Parameter leaves (copied into pooled buffers).
@@ -253,148 +585,39 @@ fn finish_chunk(
     loss_val
 }
 
-/// One task: 0.5 · Σ_{i ∈ chunk} r_i² and its parameter gradient (packed,
-/// unnormalized — the caller divides by n after the ordered reduction).
-fn chunk_loss_grad(
+/// Jet MLP for one chunk: primal stream at [nc, ·], derivative streams
+/// 1..=order at [nc·v, ·].  Layer 1's tangent is probes @ W tiled (the
+/// pair grid would recompute those v rows nc times); the input line
+/// x + t v is affine, so streams ≥ 2 enter layer 1 as exact zeros.
+#[allow(clippy::too_many_arguments)]
+fn jet_mlp_streams(
     tape: &mut Tape,
     mlp: &Mlp,
-    problem: &dyn PdeProblem,
+    params: &[(Var, Var)],
     batch: &NativeBatch,
     start: usize,
     nc: usize,
-    grad_out: &mut Vec<f32>,
-) -> f64 {
+    order: usize,
+) -> Vec<Var> {
     let (v, d) = (batch.v, mlp.d);
     let b = nc * v;
-    tape.reset();
-    let params = param_leaves(tape, mlp);
-
     let xs = &batch.xs[start * d..(start + nc) * d];
     let x0 = tape.leaf_from_slice(&[nc, d], xs);
     let probes = tape.leaf_from_slice(&[v, d], batch.probes);
 
-    // Jet MLP.  Primal stream h0 runs once at [nc, ·]; tangent h1 and
-    // second h2 run at [nc·v, ·].  Layer 1's tangent is probes @ W tiled
-    // (the pair grid would recompute those v rows nc times), and its
-    // second stream is exactly zero, so both start cheap.
     let n_layers = mlp.layers.len();
     let (w0, b0) = params[0];
     let z0 = tape.matmul(x0, w0);
-    let mut h0 = tape.add_row(z0, b0);
+    let mut h: Vec<Var> = Vec::with_capacity(order + 1);
+    h.push(tape.add_row(z0, b0));
     let p1 = tape.matmul(probes, w0);
-    let mut h1 = tape.tile_rows(p1, nc);
-    let width0 = tape.value(h0).shape[1];
-    let mut h2 = tape.zeros(&[b, width0]);
-    if n_layers > 1 {
-        let [a, t1, t2] = tape.tanh_jet2([h0, h1, h2], v);
-        h0 = a;
-        h1 = t1;
-        h2 = t2;
+    h.push(tape.tile_rows(p1, nc));
+    let width0 = tape.value(h[0]).shape[1];
+    for _ in 2..=order {
+        h.push(tape.zeros(&[b, width0]));
     }
-    for (i, &(w, bias)) in params.iter().enumerate().skip(1) {
-        let z0 = tape.matmul(h0, w);
-        h0 = tape.add_row(z0, bias);
-        h1 = tape.matmul(h1, w);
-        h2 = tape.matmul(h2, w);
-        if i < n_layers - 1 {
-            let [a, t1, t2] = tape.tanh_jet2([h0, h1, h2], v);
-            h0 = a;
-            h1 = t1;
-            h2 = t2;
-        }
-    }
-    // h0 = net0 [nc, 1], h1 = net1 [b, 1], h2 = net2 [b, 1].
-
-    // Leibniz: D2 u = fac0·net2 + 2 fac1·net1 + fac2·net0.
-    let [c0, c1, c2] = tape.leaf3_with(&[b, 1], |b0, b1, b2| {
-        for i in 0..nc {
-            let x = &batch.xs[(start + i) * d..(start + i + 1) * d];
-            for k in 0..v {
-                let probe = &batch.probes[k * d..(k + 1) * d];
-                let f = factor_jets2(problem, x, probe);
-                let idx = i * v + k;
-                b0[idx] = f[0];
-                b1[idx] = f[1];
-                b2[idx] = f[2];
-            }
-        }
-    });
-    let t_a = tape.mul(c0, h2);
-    let t_b0 = tape.mul(c1, h1);
-    let t_b = tape.scale(t_b0, 2.0);
-    let net0_pairs = tape.broadcast_rows(h0, v);
-    let t_c = tape.mul(c2, net0_pairs);
-    let ab = tape.add(t_a, t_b);
-    let d2_pairs = tape.add(ab, t_c); // [b, 1]
-    let d2_mean = tape.group_mean(d2_pairs, v); // [nc, 1]
-
-    // Residual pieces at the points, reusing the primal stream for u0
-    // (the pair-grid path pays a second full forward pass here).
-    let fac0_pts = tape.leaf_with(&[nc, 1], |buf| {
-        for (i, slot) in buf.iter_mut().enumerate() {
-            *slot = problem.factor(&batch.xs[(start + i) * d..(start + i + 1) * d]) as f32;
-        }
-    });
-    let u0 = tape.mul(fac0_pts, h0);
-    let sin_u0 = tape.sin(u0);
-    let g = tape.leaf_with(&[nc, 1], |buf| {
-        for (i, slot) in buf.iter_mut().enumerate() {
-            *slot = problem
-                .forcing(&batch.xs[(start + i) * d..(start + i + 1) * d], batch.coeff)
-                as f32;
-        }
-    });
-    let est = tape.add(d2_mean, sin_u0);
-    let r = tape.sub(est, g);
-    let rsq = tape.square(r);
-    let sum = tape.sum_all(rsq);
-    let loss = tape.scale(sum, 0.5);
-
-    finish_chunk(tape, loss, &params, mlp.n_params(), grad_out)
-}
-
-/// One biharmonic task: the order-4 TVP residual (Eq. 23, Thm 3.4)
-///
-///   r_i = (1/(3V)) Σ_k D⁴u(x_i)[v_k] − g(x_i),  v_k ~ N(0, I),
-///
-/// as 0.5 · Σ_{i ∈ chunk} r_i² plus its packed parameter gradient
-/// (unnormalized — the caller divides by n).  Same probe-batching design
-/// as order 2: the primal stream runs once at [nc, ·], the four
-/// derivative streams at [nc·v, ·] through the fused `tanh_jet4` node.
-fn chunk_loss_grad_bihar(
-    tape: &mut Tape,
-    mlp: &Mlp,
-    problem: &dyn PdeProblem,
-    batch: &NativeBatch,
-    start: usize,
-    nc: usize,
-    grad_out: &mut Vec<f32>,
-) -> f64 {
-    let (v, d) = (batch.v, mlp.d);
-    let b = nc * v;
-    tape.reset();
-    let params = param_leaves(tape, mlp);
-
-    let xs = &batch.xs[start * d..(start + nc) * d];
-    let x0 = tape.leaf_from_slice(&[nc, d], xs);
-    let probes = tape.leaf_from_slice(&[v, d], batch.probes);
-
-    // Order-4 jet MLP.  Primal h[0] at [nc, ·]; streams h[1..=4] at
-    // [nc·v, ·].  The input line x + t v is affine, so streams 2..4 enter
-    // layer 1 as exact zeros and the tangent is probes @ W tiled.
-    let n_layers = mlp.layers.len();
-    let (w0, b0) = params[0];
-    let z0 = tape.matmul(x0, w0);
-    let h0 = tape.add_row(z0, b0);
-    let p1 = tape.matmul(probes, w0);
-    let h1 = tape.tile_rows(p1, nc);
-    let width0 = tape.value(h0).shape[1];
-    let h2 = tape.zeros(&[b, width0]);
-    let h3 = tape.zeros(&[b, width0]);
-    let h4 = tape.zeros(&[b, width0]);
-    let mut h = [h0, h1, h2, h3, h4];
     if n_layers > 1 {
-        h = tape.tanh_jet4(h, v);
+        h = tape.tanh_jet(&h, v);
     }
     for (i, &(w, bias)) in params.iter().enumerate().skip(1) {
         let z0 = tape.matmul(h[0], w);
@@ -403,63 +626,42 @@ fn chunk_loss_grad_bihar(
             *stream = tape.matmul(*stream, w);
         }
         if i < n_layers - 1 {
-            h = tape.tanh_jet4(h, v);
+            h = tape.tanh_jet(&h, v);
         }
     }
-    // h[0] = net0 [nc, 1]; h[1..=4] = net1..net4 [b, 1].
+    h
+}
 
-    // Leibniz through the hard constraint:
-    // D4 u = fac0·net4 + 4 fac1·net3 + 6 fac2·net2 + 4 fac3·net1 + fac4·net0.
-    let [c0, c1, c2, c3, c4] = tape.leaf5_with(&[b, 1], |b0, b1, b2, b3, b4| {
-        for i in 0..nc {
-            let x = &batch.xs[(start + i) * d..(start + i + 1) * d];
-            for k in 0..v {
-                let probe = &batch.probes[k * d..(k + 1) * d];
-                let f = factor_jets4(problem, x, probe);
-                let idx = i * v + k;
-                b0[idx] = f[0];
-                b1[idx] = f[1];
-                b2[idx] = f[2];
-                b3[idx] = f[3];
-                b4[idx] = f[4];
-            }
-        }
-    });
-    let t4 = tape.mul(c0, h[4]);
-    let t3m = tape.mul(c1, h[3]);
-    let t3 = tape.scale(t3m, 4.0);
-    let t2m = tape.mul(c2, h[2]);
-    let t2 = tape.scale(t2m, 6.0);
-    let t1m = tape.mul(c3, h[1]);
-    let t1 = tape.scale(t1m, 4.0);
-    let net0_pairs = tape.broadcast_rows(h[0], v);
-    let t0 = tape.mul(c4, net0_pairs);
-    let s43 = tape.add(t4, t3);
-    let s21 = tape.add(t2, t1);
-    let s4321 = tape.add(s43, s21);
-    let d4_pairs = tape.add(s4321, t0); // [b, 1]
-    let d4_mean = tape.group_mean(d4_pairs, v); // [nc, 1]
-    // Thm 3.4: E_{v~N(0,I)} D⁴u[v] = 3 Δ²u, hence the 1/3.
-    let est = tape.scale(d4_mean, 1.0 / 3.0);
-
-    let g = tape.leaf_with(&[nc, 1], |buf| {
-        for (i, slot) in buf.iter_mut().enumerate() {
-            *slot = problem
-                .forcing(&batch.xs[(start + i) * d..(start + i + 1) * d], batch.coeff)
-                as f32;
-        }
-    });
-    let r = tape.sub(est, g);
-    let rsq = tape.square(r);
-    let sum = tape.sum_all(rsq);
-    let loss = tape.scale(sum, 0.5);
-
+/// One chunk task for any [`ResidualOp`]: build the jet streams, hand the
+/// constrained-stream context to the operator's contraction, reverse the
+/// tape.  This is the single kernel the old `chunk_loss_grad` /
+/// `chunk_loss_grad_bihar` pair collapsed into.
+#[allow(clippy::too_many_arguments)]
+fn chunk_loss_grad(
+    tape: &mut Tape,
+    mlp: &Mlp,
+    op: &dyn ResidualOp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+    start: usize,
+    nc: usize,
+    grad_out: &mut Vec<f32>,
+) -> f64 {
+    let order = op.order();
+    tape.reset();
+    let params = param_leaves(tape, mlp);
+    let net = jet_mlp_streams(tape, mlp, &params, batch, start, nc, order);
+    let mut ctx = ChunkCtx::new(problem, batch, start, nc, mlp.d, order, net);
+    let loss = op.chunk_loss(tape, &mut ctx);
     finish_chunk(tape, loss, &params, mlp.n_params(), grad_out)
 }
 
+// ---------------------------------------------------------------------------
+// Convenience wrappers (single-threaded; hot loops hold a NativeEngine)
+// ---------------------------------------------------------------------------
+
 /// Biased HTE loss (Eq. 7) and its parameter gradient (packed order),
-/// through the probe-batched engine (single-threaded convenience wrapper;
-/// hot loops should hold a [`NativeEngine`] instead).
+/// through the probe-batched engine.
 pub fn hte_residual_loss_and_grad(
     mlp: &Mlp,
     problem: &dyn PdeProblem,
@@ -467,13 +669,119 @@ pub fn hte_residual_loss_and_grad(
 ) -> (f32, Vec<f32>) {
     let mut engine = NativeEngine::new(1);
     let mut grad = Vec::new();
-    let loss = engine.loss_and_grad(mlp, problem, batch, &mut grad);
+    let loss = engine.loss_and_grad_with(mlp, problem, &TraceResidual, batch, &mut grad);
     (loss, grad)
+}
+
+/// Order-4 biharmonic TVP loss (Eq. 23) and its parameter gradient
+/// (packed order), through the probe-batched engine.
+pub fn bihar_residual_loss_and_grad(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> (f32, Vec<f32>) {
+    debug_assert_eq!(problem.operator(), OperatorKind::Biharmonic);
+    let mut engine = NativeEngine::new(1);
+    let mut grad = Vec::new();
+    let loss = engine.loss_and_grad_with(mlp, problem, &BiharResidual, batch, &mut grad);
+    (loss, grad)
+}
+
+/// Native gPINN loss (trace residual + λ·probe-contracted
+/// gradient-of-residual) and its parameter gradient (packed order).
+pub fn gpinn_residual_loss_and_grad(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+    lambda: f32,
+) -> (f32, Vec<f32>) {
+    let mut engine = NativeEngine::new(1);
+    let mut grad = Vec::new();
+    let op = GpinnResidual { lambda };
+    let loss = engine.loss_and_grad_with(mlp, problem, &op, batch, &mut grad);
+    (loss, grad)
+}
+
+// ---------------------------------------------------------------------------
+// f64 jet-forward reference oracles (no tape)
+// ---------------------------------------------------------------------------
+
+/// Loss only, via the (non-tape) jet engine — the FD-check oracle.
+pub fn hte_residual_loss_reference(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> f64 {
+    let (n, v, d) = (batch.n, batch.v, mlp.d);
+    let mut acc = 0.0;
+    for i in 0..n {
+        let x = &batch.xs[i * d..(i + 1) * d];
+        let mut est = 0.0;
+        for k in 0..v {
+            let probe = &batch.probes[k * d..(k + 1) * d];
+            est += super::jet::jet_forward(mlp, problem, x, probe, 2)[2];
+        }
+        est /= v as f64;
+        let u0 = mlp.forward_constrained(x, problem.factor(x));
+        let r = est + u0.sin() - problem.forcing(x, batch.coeff);
+        acc += 0.5 * r * r;
+    }
+    acc / n as f64
+}
+
+/// Biharmonic TVP loss only, via the (non-tape) order-4 jet engine — the
+/// FD-check oracle for the native order-4 path.
+pub fn bihar_residual_loss_reference(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> f64 {
+    let (n, v, d) = (batch.n, batch.v, mlp.d);
+    let mut acc = 0.0;
+    for i in 0..n {
+        let x = &batch.xs[i * d..(i + 1) * d];
+        let mut est = 0.0;
+        for k in 0..v {
+            let probe = &batch.probes[k * d..(k + 1) * d];
+            est += super::jet::jet_forward(mlp, problem, x, probe, 4)[4];
+        }
+        est /= 3.0 * v as f64; // Thm 3.4: E[D⁴u[v]] = 3 Δ²u
+        let r = est - problem.forcing(x, batch.coeff);
+        acc += 0.5 * r * r;
+    }
+    acc / n as f64
+}
+
+/// Native gPINN loss only, via the f64 order-3 jet oracle
+/// (`jet::gpinn_point_reference`) — the parity gate for the tape path.
+pub fn gpinn_residual_loss_reference(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+    lambda: f32,
+) -> f64 {
+    let (n, d) = (batch.n, mlp.d);
+    let mut acc = 0.0;
+    for i in 0..n {
+        let x = &batch.xs[i * d..(i + 1) * d];
+        let (est, gmean) =
+            super::jet::gpinn_point_reference(mlp, problem, x, batch.probes, batch.v, batch.coeff);
+        let u0 = mlp.forward_constrained(x, problem.factor(x));
+        let r = est + u0.sin() - problem.forcing(x, batch.coeff);
+        acc += 0.5 * r * r + 0.5 * lambda as f64 * gmean;
+    }
+    acc / n as f64
 }
 
 // ---------------------------------------------------------------------------
 // Pair-grid baseline (pre-batching formulation, kept for the ablation)
 // ---------------------------------------------------------------------------
+
+/// Order-2 factor jets for the pair-grid baseline (host side, f32).
+fn pairgrid_factor_jets2(problem: &dyn PdeProblem, x: &[f32], v: &[f32]) -> [f32; 3] {
+    let f = factor_jets::<3>(problem, x, v);
+    [f[0] as f32, f[1] as f32, f[2] as f32]
+}
 
 /// tanh jet (order 2) expressed in generic tape ops (unfused baseline).
 fn tape_tanh_jet2(tape: &mut Tape, y: [Var; 3], ones: Var) -> [Var; 3] {
@@ -553,7 +861,7 @@ pub fn hte_residual_loss_and_grad_pairgrid(
             let row = i * v + k;
             x0.data[row * d..(row + 1) * d].copy_from_slice(x);
             x1.data[row * d..(row + 1) * d].copy_from_slice(probe);
-            let f = factor_jets2(problem, x, probe);
+            let f = pairgrid_factor_jets2(problem, x, probe);
             fac0.data[row] = f[0];
             fac1.data[row] = f[1];
             fac2.data[row] = f[2];
@@ -619,67 +927,6 @@ pub fn hte_residual_loss_and_grad_pairgrid(
         flat.extend_from_slice(&gb.data);
     }
     (tape.value(loss).data[0], flat)
-}
-
-/// Loss only, via the (non-tape) jet engine — the FD-check oracle.
-pub fn hte_residual_loss_reference(
-    mlp: &Mlp,
-    problem: &dyn PdeProblem,
-    batch: &NativeBatch,
-) -> f64 {
-    let (n, v, d) = (batch.n, batch.v, mlp.d);
-    let mut acc = 0.0;
-    for i in 0..n {
-        let x = &batch.xs[i * d..(i + 1) * d];
-        let mut est = 0.0;
-        for k in 0..v {
-            let probe = &batch.probes[k * d..(k + 1) * d];
-            est += super::jet::jet_forward(mlp, problem, x, probe, 2)[2];
-        }
-        est /= v as f64;
-        let u0 = mlp.forward_constrained(x, problem.factor(x));
-        let r = est + u0.sin() - problem.forcing(x, batch.coeff);
-        acc += 0.5 * r * r;
-    }
-    acc / n as f64
-}
-
-/// Order-4 biharmonic TVP loss (Eq. 23) and its parameter gradient
-/// (packed order), through the probe-batched engine (single-threaded
-/// convenience wrapper; hot loops should hold a [`NativeEngine`]).
-pub fn bihar_residual_loss_and_grad(
-    mlp: &Mlp,
-    problem: &dyn PdeProblem,
-    batch: &NativeBatch,
-) -> (f32, Vec<f32>) {
-    debug_assert_eq!(problem.family(), "bihar");
-    let mut engine = NativeEngine::new(1);
-    let mut grad = Vec::new();
-    let loss = engine.loss_and_grad(mlp, problem, batch, &mut grad);
-    (loss, grad)
-}
-
-/// Biharmonic TVP loss only, via the (non-tape) order-4 jet engine — the
-/// FD-check oracle for the native order-4 path.
-pub fn bihar_residual_loss_reference(
-    mlp: &Mlp,
-    problem: &dyn PdeProblem,
-    batch: &NativeBatch,
-) -> f64 {
-    let (n, v, d) = (batch.n, batch.v, mlp.d);
-    let mut acc = 0.0;
-    for i in 0..n {
-        let x = &batch.xs[i * d..(i + 1) * d];
-        let mut est = 0.0;
-        for k in 0..v {
-            let probe = &batch.probes[k * d..(k + 1) * d];
-            est += super::jet::jet_forward(mlp, problem, x, probe, 4)[4];
-        }
-        est /= 3.0 * v as f64; // Thm 3.4: E[D⁴u[v]] = 3 Δ²u
-        let r = est - problem.forcing(x, batch.coeff);
-        acc += 0.5 * r * r;
-    }
-    acc / n as f64
 }
 
 /// In-place Adam (matches `python/compile/optimizer.py`).
@@ -948,6 +1195,129 @@ mod tests {
                 "param {i}: tape {} vs fd {fd}",
                 grad[i]
             );
+        }
+    }
+
+    #[test]
+    fn gpinn_loss_matches_jet_reference_across_shapes() {
+        for (d, n, v) in [(3, 1, 1), (4, 1, 5), (4, 2, 1), (5, 6, 3)] {
+            let (mlp, problem, xs, probes, coeff) = setup(d, n, v);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+            let lambda = 0.7f32;
+            let (loss, _) = gpinn_residual_loss_and_grad(&mlp, &problem, &batch, lambda);
+            let reference = gpinn_residual_loss_reference(&mlp, &problem, &batch, lambda);
+            assert!(
+                (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+                "(d={d}, n={n}, v={v}): {loss} vs {reference}"
+            );
+        }
+    }
+
+    /// λ = 0 gPINN must equal the plain trace loss exactly (the extra
+    /// streams change nothing but the tape size).
+    #[test]
+    fn gpinn_lambda_zero_equals_trace_loss() {
+        let (mlp, problem, xs, probes, coeff) = setup(5, 6, 3);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 6, v: 3 };
+        let (trace_loss, _) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+        let (gpinn_loss, _) = gpinn_residual_loss_and_grad(&mlp, &problem, &batch, 0.0);
+        assert!(
+            (trace_loss - gpinn_loss).abs() < 1e-5 * (1.0 + trace_loss.abs()),
+            "{trace_loss} vs {gpinn_loss}"
+        );
+    }
+
+    #[test]
+    fn gpinn_grad_matches_finite_differences() {
+        let (mut mlp, problem, xs, probes, coeff) = setup(4, 3, 2);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 3, v: 2 };
+        let lambda = 0.5f32;
+        let (_, grad) = gpinn_residual_loss_and_grad(&mlp, &problem, &batch, lambda);
+        let gmax: f32 = grad.iter().map(|g| g.abs()).fold(0.0, f32::max);
+        let flat0 = mlp.pack();
+        let idxs = [0usize, 7, 130, 600, flat0.len() - 1, flat0.len() - 200];
+        let h = 1e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            mlp.unpack_into(&fp);
+            let lp = gpinn_residual_loss_reference(&mlp, &problem, &batch, lambda);
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            mlp.unpack_into(&fm);
+            let lm = gpinn_residual_loss_reference(&mlp, &problem, &batch, lambda);
+            mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()) + 1e-2 * gmax,
+                "param {i}: tape {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gpinn_multithreaded_gradient_is_bitwise_identical() {
+        let (mlp, problem, xs, probes, coeff) = setup(5, 11, 4);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 11, v: 4 };
+        let op = GpinnResidual { lambda: 1.3 };
+        let mut grads: Vec<(f32, Vec<f32>)> = Vec::new();
+        for threads in [1usize, 2, 3, 7] {
+            let mut engine = NativeEngine::new(threads);
+            let mut grad = Vec::new();
+            let loss = engine.loss_and_grad_with(&mlp, &problem, &op, &batch, &mut grad);
+            grads.push((loss, grad));
+        }
+        let (loss0, g0) = &grads[0];
+        for (loss, g) in &grads[1..] {
+            assert_eq!(loss.to_bits(), loss0.to_bits(), "loss differs across thread counts");
+            assert_eq!(g.len(), g0.len());
+            for (a, b) in g.iter().zip(g0) {
+                assert_eq!(a.to_bits(), b.to_bits(), "gradient differs across thread counts");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_op_selection_and_errors() {
+        let sg = SineGordon2Body::new(4);
+        let bihar = Biharmonic3Body::new(4);
+        assert_eq!(residual_op_for(&sg, "probe", 1.0).unwrap().order(), 2);
+        assert_eq!(residual_op_for(&sg, "gpinn", 1.0).unwrap().order(), 3);
+        assert_eq!(residual_op_for(&sg, "gpinn_probe", 1.0).unwrap().order(), 3);
+        assert_eq!(residual_op_for(&bihar, "probe4", 1.0).unwrap().order(), 4);
+        assert!(residual_op_for(&bihar, "probe4", 1.0).unwrap().requires_gaussian_probes());
+        // probe4 is the biharmonic method name; gPINN has no order-4 jet
+        let err = residual_op_for(&sg, "probe4", 1.0).unwrap_err().to_string();
+        assert!(err.contains("supported"), "{err}");
+        assert!(residual_op_for(&bihar, "gpinn", 1.0).is_err());
+        assert!(residual_op_for(&sg, "full", 1.0).is_err());
+    }
+
+    #[test]
+    fn factor_jets_unified_entry_matches_orders() {
+        let sg = SineGordon2Body::new(4);
+        let bihar = Biharmonic3Body::new(4);
+        let x = [0.4f32, -0.2, 0.1, 0.3];
+        let xa = [0.8f32, -0.7, 0.6, 0.5];
+        let v = [1.0f32, -1.0, 1.0, 1.0];
+        for problem in [&sg as &dyn PdeProblem, &bihar as &dyn PdeProblem] {
+            let p = if problem.family() == "bihar" { &xa } else { &x };
+            let f3 = factor_jets::<3>(problem, p, &v);
+            let f5 = factor_jets::<5>(problem, p, &v);
+            for k in 0..3 {
+                assert_eq!(f3[k].to_bits(), f5[k].to_bits(), "stream {k}");
+            }
+            // cross-check against the jet module's reference factor jet
+            let jref = super::super::jet::factor_jet(problem, p, &v, 4);
+            for k in 0..5 {
+                assert!(
+                    (f5[k] - jref[k]).abs() < 1e-12 * (1.0 + jref[k].abs()),
+                    "stream {k}: {} vs {}",
+                    f5[k],
+                    jref[k]
+                );
+            }
         }
     }
 

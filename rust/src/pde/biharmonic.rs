@@ -8,7 +8,7 @@
 //! with the contractions derived in DESIGN.md §2 (and mirrored in
 //! `python/compile/exact_solutions.py`).
 
-use super::{sq_norm, Domain, PdeProblem};
+use super::{sq_norm, Domain, OperatorKind, PdeProblem};
 
 pub struct Biharmonic3Body {
     pub d: usize,
@@ -83,6 +83,9 @@ impl PdeProblem for Biharmonic3Body {
     }
     fn domain(&self) -> Domain {
         Domain::Annulus
+    }
+    fn operator(&self) -> OperatorKind {
+        OperatorKind::Biharmonic
     }
     fn n_coeff(&self) -> usize {
         self.d - 2

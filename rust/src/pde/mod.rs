@@ -22,18 +22,60 @@ pub enum Domain {
     Annulus,
 }
 
+/// Differential-operator metadata: what the residual pipeline has to
+/// build for a problem family.  This is what the native jet-stream
+/// pipeline dispatches on (instead of matching family strings), and what
+/// the memory model keys its stream counts off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OperatorKind {
+    /// Δu + sin(u) = g — order-2 trace estimate (HTE/SDGD/exact probes).
+    SineGordon,
+    /// Δ²u = g — order-4 TVP estimate (Thm 3.4, Gaussian probes only).
+    Biharmonic,
+}
+
+impl OperatorKind {
+    /// Highest directional-derivative stream the residual contracts.
+    pub fn order(self) -> usize {
+        match self {
+            OperatorKind::SineGordon => 2,
+            OperatorKind::Biharmonic => 4,
+        }
+    }
+
+    /// Whether the estimator is only unbiased under Gaussian probes
+    /// (the order-4 TVP of Thm 3.4 has no Rademacher/basis variant).
+    pub fn requires_gaussian_probes(self) -> bool {
+        matches!(self, OperatorKind::Biharmonic)
+    }
+}
+
 /// A PDE problem with a manufactured solution.
 pub trait PdeProblem: Send + Sync {
     /// Human-readable family id, matching the artifact manifest ("sg2", ...).
     fn family(&self) -> &'static str;
     fn dim(&self) -> usize;
     fn domain(&self) -> Domain;
+    /// The differential operator the residual must estimate.
+    fn operator(&self) -> OperatorKind;
     /// Number of random solution coefficients c_i.
     fn n_coeff(&self) -> usize;
     /// Exact solution u*(x).
     fn u_exact(&self, x: &[f32], c: &[f32]) -> f64;
     /// Forcing term g(x) of the PDE (closed form).
     fn forcing(&self, x: &[f32], c: &[f32]) -> f64;
+    /// Directional derivative v·∇g of the forcing (the host-side leaf of
+    /// the gPINN gradient-of-residual term).  Default: f64 central
+    /// differences of `forcing` along the line x + t v — both the tape
+    /// path and the f64 oracle call this same entry, so the gPINN parity
+    /// is exact regardless of the stencil error; families with cheap
+    /// closed forms may override.
+    fn forcing_dir(&self, x: &[f32], v: &[f32], c: &[f32]) -> f64 {
+        let h = 1e-3f32;
+        let xp: Vec<f32> = x.iter().zip(v).map(|(&a, &b)| a + h * b).collect();
+        let xm: Vec<f32> = x.iter().zip(v).map(|(&a, &b)| a - h * b).collect();
+        (self.forcing(&xp, c) - self.forcing(&xm, c)) / (2.0 * h as f64)
+    }
     /// Hard-constraint factor (zero on the boundary).
     fn factor(&self, x: &[f32]) -> f64 {
         let s: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();

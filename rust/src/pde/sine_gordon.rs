@@ -1,6 +1,6 @@
 //! Sine-Gordon problems (Eqs. 17-20): Delta u + sin(u) = g on the unit ball.
 
-use super::{sq_norm, Domain, PdeProblem};
+use super::{sq_norm, Domain, OperatorKind, PdeProblem};
 
 /// Two-body interactive solution (Eq. 17):
 /// u = (1-|x|^2) sum_i c_i sin(psi_i), psi_i = x_i + cos(x_{i+1}) + x_{i+1} cos(x_i).
@@ -49,6 +49,9 @@ impl PdeProblem for SineGordon2Body {
     }
     fn domain(&self) -> Domain {
         Domain::UnitBall
+    }
+    fn operator(&self) -> OperatorKind {
+        OperatorKind::SineGordon
     }
     fn n_coeff(&self) -> usize {
         self.d - 1
@@ -106,6 +109,9 @@ impl PdeProblem for SineGordon3Body {
     }
     fn domain(&self) -> Domain {
         Domain::UnitBall
+    }
+    fn operator(&self) -> OperatorKind {
+        OperatorKind::SineGordon
     }
     fn n_coeff(&self) -> usize {
         self.d - 2
@@ -168,6 +174,29 @@ mod tests {
         assert!(sg2.u_exact(&x, &c).abs() < 1e-5);
         let sg3 = SineGordon3Body::new(d);
         assert!(sg3.u_exact(&x, &c[..d - 2]).abs() < 1e-5);
+    }
+
+    /// v·∇g (the gPINN host leaf) must equal the per-axis FD gradient
+    /// contracted with v — an independent decomposition of the same
+    /// directional derivative.
+    #[test]
+    fn forcing_dir_matches_axis_gradient_contraction() {
+        let d = 5;
+        let (x, c) = random_point_and_coeff(d, d - 1, 13);
+        let v: Vec<f32> = (0..d).map(|i| if i % 2 == 0 { 1.0 } else { -0.5 }).collect();
+        let pde = SineGordon2Body::new(d);
+        let got = pde.forcing_dir(&x, &v, &c);
+        let h = 1e-3f32;
+        let mut want = 0.0f64;
+        for i in 0..d {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            want += v[i] as f64 * (pde.forcing(&xp, &c) - pde.forcing(&xm, &c))
+                / (2.0 * h as f64);
+        }
+        assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "{got} vs {want}");
     }
 
     #[test]

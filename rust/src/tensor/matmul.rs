@@ -1,11 +1,21 @@
 //! Cache-blocked f32 matmul kernels for the native engine.
 //!
 //! i-k-j loop order (streaming writes over the output row) with k-blocking
-//! so the B panel stays in L1/L2.  All kernels are branch-free over the
-//! data: an earlier revision skipped `a == 0.0` terms, which looks like a
-//! win for the sparse SDGD probe rows but defeats autovectorization on the
-//! dense activations that dominate the hot path (see the `matmul/…` rows
-//! of `cargo bench --bench perf_breakdown` for the before/after).
+//! so the B panel stays in L1/L2, and 4-wide unrolled accumulator
+//! microkernels in every inner loop.  The unroll is always across
+//! *independent* accumulation chains — four k-terms added sequentially
+//! into one output, four output rows sharing one B row, four output
+//! columns sharing one A row — never a reassociation of a single chain,
+//! so every kernel is **bitwise identical** to the scalar reference
+//! (gated by the exactness tests below; the engine's thread-count
+//! determinism depends on it).  The win is memory traffic: the 4-wide
+//! bodies make one pass over the hot row where the scalar loop made four.
+//!
+//! All kernels are branch-free over the data: an earlier revision skipped
+//! `a == 0.0` terms, which looks like a win for the sparse SDGD probe
+//! rows but defeats autovectorization on the dense activations that
+//! dominate the hot path (see the `matmul/…` rows of `cargo bench
+//! --bench perf_breakdown` for the before/after).
 //!
 //! The `_acc` variants accumulate (`out +=`) so reverse-mode gradient
 //! contributions sum directly into pooled buffers without a temporary.
@@ -23,12 +33,34 @@ pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: 
         for i in 0..m {
             let arow = &a[i * k + k0..i * k + k0 + kb];
             let orow = &mut out[i * n..(i + 1) * n];
-            for (t, &av) in arow.iter().enumerate() {
+            let mut t = 0;
+            // 4 k-terms per pass over the output row: the adds into each
+            // output stay sequential (same rounding as the scalar loop),
+            // but orow is loaded/stored once instead of four times
+            while t + 4 <= kb {
+                let (a0, a1, a2, a3) = (arow[t], arow[t + 1], arow[t + 2], arow[t + 3]);
+                let b0 = &b[(k0 + t) * n..(k0 + t + 1) * n];
+                let b1 = &b[(k0 + t + 1) * n..(k0 + t + 2) * n];
+                let b2 = &b[(k0 + t + 2) * n..(k0 + t + 3) * n];
+                let b3 = &b[(k0 + t + 3) * n..(k0 + t + 4) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let mut acc = *o;
+                    acc += a0 * b0[j];
+                    acc += a1 * b1[j];
+                    acc += a2 * b2[j];
+                    acc += a3 * b3[j];
+                    *o = acc;
+                }
+                t += 4;
+            }
+            while t < kb {
+                let av = arow[t];
                 let brow = &b[(k0 + t) * n..(k0 + t + 1) * n];
                 // autovectorizes to fused multiply-adds over the row
                 for (o, &bv) in orow.iter_mut().zip(brow) {
                     *o += av * bv;
                 }
+                t += 1;
             }
         }
         k0 += kb;
@@ -49,11 +81,30 @@ pub fn matmul_tn_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, m: usiz
     for t in 0..rows {
         let arow = &a[t * m..(t + 1) * m];
         let brow = &b[t * n..(t + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
+        let mut i = 0;
+        // 4 output rows per pass over the B row; each output's t-order
+        // accumulation is untouched
+        while i + 4 <= m {
+            let (a0, a1, a2, a3) = (arow[i], arow[i + 1], arow[i + 2], arow[i + 3]);
+            let block = &mut out[i * n..(i + 4) * n];
+            let (r0, rest) = block.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            for (j, &bv) in brow.iter().enumerate() {
+                r0[j] += a0 * bv;
+                r1[j] += a1 * bv;
+                r2[j] += a2 * bv;
+                r3[j] += a3 * bv;
+            }
+            i += 4;
+        }
+        while i < m {
+            let av = arow[i];
             let orow = &mut out[i * n..(i + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
                 *o += av * bv;
             }
+            i += 1;
         }
     }
 }
@@ -72,12 +123,35 @@ pub fn matmul_nt_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, 
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
-        for (o, brow) in orow.iter_mut().zip(b.chunks_exact(k)) {
+        let mut j = 0;
+        // 4 independent dot-product accumulators per pass over the A
+        // row; each accumulator sums in plain k order
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (t, &x) in arow.iter().enumerate() {
+                s0 += x * b0[t];
+                s1 += x * b1[t];
+                s2 += x * b2[t];
+                s3 += x * b3[t];
+            }
+            orow[j] += s0;
+            orow[j + 1] += s1;
+            orow[j + 2] += s2;
+            orow[j + 3] += s3;
+            j += 4;
+        }
+        while j < n {
+            let brow = &b[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for (&x, &y) in arow.iter().zip(brow) {
                 acc += x * y;
             }
-            *o += acc;
+            orow[j] += acc;
+            j += 1;
         }
     }
 }
@@ -91,6 +165,42 @@ pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    // -- scalar references: the pre-microkernel loops, one add at a time --
+
+    fn scalar_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for t in 0..k {
+                let av = a[i * k + t];
+                for j in 0..n {
+                    out[i * n + j] += av * b[t * n + j];
+                }
+            }
+        }
+    }
+
+    fn scalar_tn_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, m: usize, n: usize) {
+        for t in 0..rows {
+            for i in 0..m {
+                let av = a[t * m + i];
+                for j in 0..n {
+                    out[i * n + j] += av * b[t * n + j];
+                }
+            }
+        }
+    }
+
+    fn scalar_nt_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += a[i * k + t] * b[j * k + t];
+                }
+                out[i * n + j] += acc;
+            }
+        }
+    }
 
     fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; m * n];
@@ -109,6 +219,81 @@ mod tests {
     fn lcg(seed: &mut u64) -> f32 {
         *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
         ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    }
+
+    fn fill(seed: &mut u64, len: usize) -> Vec<f32> {
+        (0..len).map(|_| lcg(seed)).collect()
+    }
+
+    fn assert_bitwise(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len());
+        for (idx, (x, y)) in got.iter().zip(want).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} elem {idx}: {x} vs {y}");
+        }
+    }
+
+    /// The unrolled microkernels must be *bitwise* equal to the scalar
+    /// reference loops — the unroll may not reassociate any accumulation
+    /// chain.  Shapes cover all unroll remainders (dims ≡ 0..3 mod 4)
+    /// and the KC blocking boundary.
+    #[test]
+    fn microkernels_bitwise_match_scalar_reference() {
+        let mut seed = 3u64;
+        for (m, k, n) in [
+            (1, 1, 1),
+            (2, 3, 5),
+            (4, 4, 4),
+            (5, 6, 7),
+            (7, 9, 2),
+            (8, 255, 3),
+            (3, 256, 8),
+            (6, 513, 5),
+            (16, 128, 128),
+        ] {
+            let a = fill(&mut seed, m * k);
+            let b = fill(&mut seed, k * n);
+            let init = fill(&mut seed, m * n);
+
+            let mut got = init.clone();
+            matmul_acc(&a, &b, &mut got, m, k, n);
+            let mut want = init.clone();
+            scalar_acc(&a, &b, &mut want, m, k, n);
+            assert_bitwise(&got, &want, &format!("matmul_acc ({m},{k},{n})"));
+
+            // tn: a is [rows=k, m2=m], b is [rows=k, n]
+            let a_tn = fill(&mut seed, k * m);
+            let init_tn = fill(&mut seed, m * n);
+            let mut got = init_tn.clone();
+            matmul_tn_acc(&a_tn, &b, &mut got, k, m, n);
+            let mut want = init_tn.clone();
+            scalar_tn_acc(&a_tn, &b, &mut want, k, m, n);
+            assert_bitwise(&got, &want, &format!("matmul_tn_acc ({k},{m},{n})"));
+
+            // nt: a is [m, k], b is [n, k]
+            let b_nt = fill(&mut seed, n * k);
+            let mut got = init.clone();
+            matmul_nt_acc(&a, &b_nt, &mut got, m, k, n);
+            let mut want = init.clone();
+            scalar_nt_acc(&a, &b_nt, &mut want, m, k, n);
+            assert_bitwise(&got, &want, &format!("matmul_nt_acc ({m},{k},{n})"));
+
+            // _into variants: zero-fill + acc, bitwise too
+            let mut got = vec![1.0f32; m * n];
+            matmul_into(&a, &b, &mut got, m, k, n);
+            let mut want = vec![0.0f32; m * n];
+            scalar_acc(&a, &b, &mut want, m, k, n);
+            assert_bitwise(&got, &want, &format!("matmul_into ({m},{k},{n})"));
+            let mut got = vec![1.0f32; m * n];
+            matmul_tn_into(&a_tn, &b, &mut got, k, m, n);
+            let mut want = vec![0.0f32; m * n];
+            scalar_tn_acc(&a_tn, &b, &mut want, k, m, n);
+            assert_bitwise(&got, &want, &format!("matmul_tn_into ({k},{m},{n})"));
+            let mut got = vec![1.0f32; m * n];
+            matmul_nt_into(&a, &b_nt, &mut got, m, k, n);
+            let mut want = vec![0.0f32; m * n];
+            scalar_nt_acc(&a, &b_nt, &mut want, m, k, n);
+            assert_bitwise(&got, &want, &format!("matmul_nt_into ({m},{k},{n})"));
+        }
     }
 
     #[test]

@@ -13,8 +13,9 @@
 use hte_pinn::coordinator::problem_for;
 use hte_pinn::nn::{
     bihar_residual_loss_and_grad, bihar_residual_loss_reference, factor_jet,
-    hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference,
-    jet_forward, Mlp, NativeBatch, NativeEngine,
+    gpinn_residual_loss_and_grad, gpinn_residual_loss_reference, hte_residual_loss_and_grad,
+    hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, jet_forward, GpinnResidual,
+    Mlp, NativeBatch, NativeEngine,
 };
 use hte_pinn::pde::{fd, Domain, DomainSampler, PdeProblem};
 use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
@@ -145,6 +146,104 @@ fn batched_and_pairgrid_agree() {
                 (a - b).abs() < 1e-3 * scale + 1e-5,
                 "(d={d}, n={n}, v={v}) param {i}: {a} vs {b}"
             );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gPINN (order-3) parity
+// ---------------------------------------------------------------------------
+
+/// Native gPINN loss matches the f64 order-3 jet-forward reference to
+/// 1e-3 relative across a (d, n, v) grid including the n = 1 / v = 1
+/// edges — the acceptance gate for the jet-stream pipeline's third
+/// operator.
+#[test]
+fn gpinn_loss_matches_reference_grid() {
+    let lambda = 0.8f32;
+    for (d, n, v) in [(3, 1, 1), (4, 1, 6), (4, 5, 1), (5, 4, 3), (6, 9, 4), (10, 16, 8)] {
+        let case = Case::new(d, n, v, 77 + d as u64);
+        let (loss, _) =
+            gpinn_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), lambda);
+        let reference =
+            gpinn_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch(), lambda);
+        assert!(
+            (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+            "(d={d}, n={n}, v={v}): batched {loss} vs reference {reference}"
+        );
+    }
+}
+
+/// gPINN parameter gradients match central finite differences of the
+/// f64 reference loss.
+#[test]
+fn gpinn_grad_matches_finite_differences() {
+    let lambda = 0.5f32;
+    for (d, n, v) in [(4, 3, 2), (5, 1, 3), (4, 6, 1)] {
+        let mut case = Case::new(d, n, v, 7);
+        let (_, grad) =
+            gpinn_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), lambda);
+        let gmax: f32 = grad.iter().map(|g| g.abs()).fold(0.0, f32::max);
+        let flat0 = case.mlp.pack();
+        let idxs = [0usize, 11, 257, flat0.len() / 2, flat0.len() - 1];
+        let h = 1e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            case.mlp.unpack_into(&fp);
+            let lp = gpinn_residual_loss_reference(
+                &case.mlp,
+                case.problem.as_ref(),
+                &case.batch(),
+                lambda,
+            );
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            case.mlp.unpack_into(&fm);
+            let lm = gpinn_residual_loss_reference(
+                &case.mlp,
+                case.problem.as_ref(),
+                &case.batch(),
+                lambda,
+            );
+            case.mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()) + 1e-2 * gmax,
+                "(d={d}, n={n}, v={v}) param {i}: batched {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+}
+
+/// gPINN loss/grad results are bitwise identical for 1, 2 and 16 worker
+/// threads (the new operator inherits the fixed chunking + ordered
+/// reduction unchanged).
+#[test]
+fn gpinn_gradients_bitwise_stable_across_thread_counts() {
+    let case = Case::new(6, 13, 5, 9);
+    let op = GpinnResidual { lambda: 1.1 };
+    let mut baseline: Option<(f32, Vec<f32>)> = None;
+    for threads in [1usize, 2, 16] {
+        let mut engine = NativeEngine::new(threads);
+        let mut grad = Vec::new();
+        let loss = engine.loss_and_grad_with(
+            &case.mlp,
+            case.problem.as_ref(),
+            &op,
+            &case.batch(),
+            &mut grad,
+        );
+        match &baseline {
+            None => baseline = Some((loss, grad)),
+            Some((l0, g0)) => {
+                assert_eq!(loss.to_bits(), l0.to_bits(), "loss at {threads} threads");
+                assert_eq!(grad.len(), g0.len());
+                for (a, b) in grad.iter().zip(g0) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "grad at {threads} threads");
+                }
+            }
         }
     }
 }
