@@ -20,8 +20,14 @@
 //!   [`Tape::tanh_jet4`] fuse the order-2 / order-4 tanh jets (one
 //!   hand-written forward/backward per output stream instead of dozens of
 //!   generic elementwise nodes).
+//! * The hot elementwise executors — broadcast-row products, jet factor
+//!   combinations, axpy-style adjoint accumulation — dispatch through
+//!   `tensor::simd` (DESIGN.md §9): the scalar reference by default,
+//!   AVX2/NEON lanes across independent chains under `--features simd`,
+//!   bitwise identical either way.  `tanh`/`sin`/`cos` themselves stay
+//!   scalar libm so values never depend on the dispatch level.
 
-use crate::tensor::{matmul_acc, matmul_nt_acc, matmul_tn_acc, BufferPool, Tensor};
+use crate::tensor::{matmul_acc, matmul_nt_acc, matmul_tn_acc, simd, BufferPool, Tensor};
 
 /// Index of a node on the tape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,6 +44,8 @@ enum Op {
     Sub { a: usize, b: usize },
     Mul { a: usize, b: usize },
     Scale { a: usize, alpha: f32 },
+    /// value = a³ (the Allen–Cahn nonlinearity).
+    Cube { a: usize },
     Tanh { a: usize },
     Sin { a: usize },
     Cos { a: usize },
@@ -64,25 +72,11 @@ enum Op {
     TanhJetO4 { t0: usize, z1: usize, z2: usize, z3: usize, z4: usize, group: usize },
 }
 
-/// tanh derivative factors as functions of t = tanh(y):
-/// f1 = 1 - t², f2 = -2 t f1, f3 = f1 (6t² - 2), f4 = f1 (16t - 24t³)
-/// (the same chain as `nn::jet::tanh_derivs`, kept in f32 for the tape).
-#[inline]
-fn tanh_factors(t: f32) -> (f32, f32, f32, f32) {
-    let f1 = 1.0 - t * t;
-    let f2 = -2.0 * t * f1;
-    let f3 = f1 * (6.0 * t * t - 2.0);
-    let f4 = f1 * (16.0 * t - 24.0 * t * t * t);
-    (f1, f2, f3, f4)
-}
-
-/// d/dt of the tanh factors above (the backward pass through t0):
-/// f1' = -2t, f2' = 6t² - 2, f3' = 16t - 24t³, f4' = 120t⁴ - 120t² + 16.
-#[inline]
-fn tanh_factor_derivs(t: f32) -> (f32, f32, f32, f32) {
-    let t2 = t * t;
-    (-2.0 * t, 6.0 * t2 - 2.0, 16.0 * t - 24.0 * t2 * t, 120.0 * t2 * t2 - 120.0 * t2 + 16.0)
-}
+// The tanh derivative factors f1 = 1 − t², f2 = −2 t f1,
+// f3 = f1 (6t² − 2), f4 = f1 (16t − 24t³) and their t-derivatives (the
+// same chain as `nn::jet::tanh_derivs`, in f32) live as shared
+// scalar/vector expressions in `tensor::simd` — the fused jet nodes
+// below dispatch every factor combination through that layer.
 
 struct Node {
     value: Tensor,
@@ -225,11 +219,7 @@ impl Tape {
         {
             let av = &self.nodes[a.0].value.data;
             let bv = &self.nodes[bias.0].value.data;
-            for (orow, arow) in out.data.chunks_mut(n).zip(av.chunks(n)) {
-                for ((o, &x), &bias_e) in orow.iter_mut().zip(arow).zip(bv) {
-                    *o = x + bias_e;
-                }
-            }
+            simd::add_rows(&mut out.data, av, bv, n);
         }
         self.push(out, Op::AddRow { a: a.0, bias: bias.0 })
     }
@@ -288,6 +278,12 @@ impl Tape {
 
     pub fn square(&mut self, a: Var) -> Var {
         self.mul(a, a)
+    }
+
+    /// Elementwise cube x³ (one node instead of two chained muls — the
+    /// Allen–Cahn reaction term).
+    pub fn cube(&mut self, a: Var) -> Var {
+        self.ew1(a, Op::Cube { a: a.0 }, |x| x * x * x)
     }
 
     /// Mean over all elements -> scalar.
@@ -361,10 +357,11 @@ impl Tape {
     ///   o2 = f2 z1² + f1 z2
     ///   o3 = f3 z1³ + 3 f2 z1 z2 + f1 z3
     ///   o4 = f4 z1⁴ + 6 f3 z1² z2 + 3 f2 z2² + 4 f2 z1 z3 + f1 z4
-    /// where the factors f1..f4 (see `tanh_factors`) depend only on the
-    /// primal stream and are broadcast by row index, never materialized
-    /// at [n*group, c].  Each output is one tape node with a hand-written
-    /// backward — versus dozens of generic elementwise nodes unfused.
+    /// where the factors f1..f4 (shared scalar/SIMD expressions in
+    /// `tensor::simd`) depend only on the primal stream and are broadcast
+    /// by row index, never materialized at [n*group, c].  Each output is
+    /// one tape node with a hand-written backward — versus dozens of
+    /// generic elementwise nodes unfused.
     pub fn tanh_jet(&mut self, z: &[Var], group: usize) -> Vec<Var> {
         let order = z.len() - 1;
         assert!((1..=4).contains(&order), "tanh jet supports orders 1..=4, got {order}");
@@ -376,57 +373,28 @@ impl Tape {
 
         let t0 = self.ew1(z[0], Op::TanhJetT0 { z0: z[0].0 }, |x| x.tanh());
 
-        // One pass per output stream (no per-element order branches): the
-        // order-2 streams keep the chunked-iterator bodies of the old
-        // fused kernel — the production trace path's codegen is unchanged
-        // — and the order-3/4 streams keep the indexed bodies of the old
-        // order-4 kernel.
+        // One SIMD-dispatched pass per output stream (no per-element
+        // order branches); the factor combinations live in
+        // `tensor::simd` so the scalar reference and the vector lanes
+        // share one expression per formula.
         let mut outs: Vec<Tensor> = (0..order).map(|_| self.alloc(&[b, c])).collect();
         {
             let t0d = &self.nodes[t0.0].value.data;
             let z1d = &self.nodes[z[1].0].value.data;
-            for (r, (orow, zrow)) in outs[0].data.chunks_mut(c).zip(z1d.chunks(c)).enumerate() {
-                let p = r / group;
-                let trow = &t0d[p * c..(p + 1) * c];
-                for ((o, &z1e), &t) in orow.iter_mut().zip(zrow).zip(trow) {
-                    *o = (1.0 - t * t) * z1e;
-                }
-            }
+            simd::jet_o1_fwd(&mut outs[0].data, t0d, z1d, group, c);
         }
         if order >= 2 {
             let t0d = &self.nodes[t0.0].value.data;
             let z1d = &self.nodes[z[1].0].value.data;
             let z2d = &self.nodes[z[2].0].value.data;
-            for (r, (orow, (zrow1, zrow2))) in outs[1]
-                .data
-                .chunks_mut(c)
-                .zip(z1d.chunks(c).zip(z2d.chunks(c)))
-                .enumerate()
-            {
-                let p = r / group;
-                let trow = &t0d[p * c..(p + 1) * c];
-                for (((o, &z1e), &z2e), &t) in orow.iter_mut().zip(zrow1).zip(zrow2).zip(trow) {
-                    let f1 = 1.0 - t * t;
-                    let f2 = -2.0 * t * f1;
-                    *o = f2 * z1e * z1e + f1 * z2e;
-                }
-            }
+            simd::jet_o2_fwd(&mut outs[1].data, t0d, z1d, z2d, group, c);
         }
         if order >= 3 {
             let t0d = &self.nodes[t0.0].value.data;
             let z1d = &self.nodes[z[1].0].value.data;
             let z2d = &self.nodes[z[2].0].value.data;
             let z3d = &self.nodes[z[3].0].value.data;
-            let o3 = &mut outs[2].data;
-            for r in 0..b {
-                let p = r / group;
-                for j in 0..c {
-                    let (f1, f2, f3, _) = tanh_factors(t0d[p * c + j]);
-                    let idx = r * c + j;
-                    let (z1e, z2e, z3e) = (z1d[idx], z2d[idx], z3d[idx]);
-                    o3[idx] = f3 * z1e * z1e * z1e + 3.0 * f2 * z1e * z2e + f1 * z3e;
-                }
-            }
+            simd::jet_o3_fwd(&mut outs[2].data, t0d, z1d, z2d, z3d, group, c);
         }
         if order >= 4 {
             let t0d = &self.nodes[t0.0].value.data;
@@ -434,20 +402,7 @@ impl Tape {
             let z2d = &self.nodes[z[2].0].value.data;
             let z3d = &self.nodes[z[3].0].value.data;
             let z4d = &self.nodes[z[4].0].value.data;
-            let o4 = &mut outs[3].data;
-            for r in 0..b {
-                let p = r / group;
-                for j in 0..c {
-                    let (f1, f2, f3, f4) = tanh_factors(t0d[p * c + j]);
-                    let idx = r * c + j;
-                    let (z1e, z2e, z3e, z4e) = (z1d[idx], z2d[idx], z3d[idx], z4d[idx]);
-                    o4[idx] = f4 * z1e * z1e * z1e * z1e
-                        + 6.0 * f3 * z1e * z1e * z2e
-                        + 3.0 * f2 * z2e * z2e
-                        + 4.0 * f2 * z1e * z3e
-                        + f1 * z4e;
-                }
-            }
+            simd::jet_o4_fwd(&mut outs[3].data, t0d, z1d, z2d, z3d, z4d, group, c);
         }
         let mut result = Vec::with_capacity(order + 1);
         result.push(t0);
@@ -531,77 +486,67 @@ impl Tape {
             Op::AddRow { a, bias } => {
                 {
                     let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                    for (o, &x) in ga.data.iter_mut().zip(&g.data) {
-                        *o += x;
-                    }
+                    simd::acc_add(&mut ga.data, &g.data);
                 }
                 {
                     let ncols = nodes[bias].value.numel();
                     let gb = slot(grads, bias, &nodes[bias].value.shape, pool);
                     for row in g.data.chunks(ncols) {
-                        for (o, &x) in gb.data.iter_mut().zip(row) {
-                            *o += x;
-                        }
+                        simd::acc_add(&mut gb.data, row);
                     }
                 }
             }
             Op::Add { a, b } => {
                 {
                     let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                    for (o, &x) in ga.data.iter_mut().zip(&g.data) {
-                        *o += x;
-                    }
+                    simd::acc_add(&mut ga.data, &g.data);
                 }
                 {
                     let gb = slot(grads, b, &nodes[b].value.shape, pool);
-                    for (o, &x) in gb.data.iter_mut().zip(&g.data) {
-                        *o += x;
-                    }
+                    simd::acc_add(&mut gb.data, &g.data);
                 }
             }
             Op::Sub { a, b } => {
                 {
                     let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                    for (o, &x) in ga.data.iter_mut().zip(&g.data) {
-                        *o += x;
-                    }
+                    simd::acc_add(&mut ga.data, &g.data);
                 }
                 {
                     let gb = slot(grads, b, &nodes[b].value.shape, pool);
-                    for (o, &x) in gb.data.iter_mut().zip(&g.data) {
-                        *o -= x;
-                    }
+                    simd::acc_sub(&mut gb.data, &g.data);
                 }
             }
             Op::Mul { a, b } => {
                 {
                     let bv = &nodes[b].value.data;
                     let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                    for ((o, &x), &y) in ga.data.iter_mut().zip(&g.data).zip(bv) {
-                        *o += x * y;
-                    }
+                    simd::acc_mul(&mut ga.data, &g.data, bv);
                 }
                 {
                     let av = &nodes[a].value.data;
                     let gb = slot(grads, b, &nodes[b].value.shape, pool);
-                    for ((o, &x), &y) in gb.data.iter_mut().zip(&g.data).zip(av) {
-                        *o += x * y;
-                    }
+                    simd::acc_mul(&mut gb.data, &g.data, av);
                 }
             }
             Op::Scale { a, alpha } => {
                 let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                for (o, &x) in ga.data.iter_mut().zip(&g.data) {
-                    *o += alpha * x;
+                simd::acc_scaled(&mut ga.data, &g.data, alpha);
+            }
+            Op::Cube { a } => {
+                // d(x³) = 3x²
+                let av = &nodes[a].value.data;
+                let ga = slot(grads, a, &nodes[a].value.shape, pool);
+                for ((o, &x), &y) in ga.data.iter_mut().zip(&g.data).zip(av) {
+                    *o += x * 3.0 * y * y;
                 }
             }
             Op::Tanh { a } => {
-                // uses the saved output: d tanh = 1 - tanh²
+                // uses the saved output: d tanh = 1 - tanh² (= f1, so the
+                // highest-stream jet adjoint kernel serves it at group 1)
                 let tv = &nodes[i].value.data;
+                let len = nodes[a].value.numel();
                 let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                for ((o, &x), &t) in ga.data.iter_mut().zip(&g.data).zip(tv) {
-                    *o += x * (1.0 - t * t);
-                }
+                simd::jet_f1_acc(&mut ga.data, &g.data, tv, 1, len);
             }
             Op::Sin { a } => {
                 let av = &nodes[a].value.data;
@@ -620,16 +565,12 @@ impl Tape {
             Op::MeanAll { a } => {
                 let gv = g.data[0] / nodes[a].value.numel() as f32;
                 let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                for o in ga.data.iter_mut() {
-                    *o += gv;
-                }
+                simd::acc_splat(&mut ga.data, gv);
             }
             Op::SumAll { a } => {
                 let gv = g.data[0];
                 let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                for o in ga.data.iter_mut() {
-                    *o += gv;
-                }
+                simd::acc_splat(&mut ga.data, gv);
             }
             Op::GroupMean { a, group } => {
                 let inv = 1.0 / group as f32;
@@ -641,28 +582,20 @@ impl Tape {
             Op::BroadcastRows { a, group } => {
                 let c = nodes[a].value.shape[1];
                 let ga = slot(grads, a, &nodes[a].value.shape, pool);
-                for (r, grow) in g.data.chunks(c).enumerate() {
-                    let p = r / group;
-                    for (o, &x) in ga.data[p * c..(p + 1) * c].iter_mut().zip(grow) {
-                        *o += x;
-                    }
-                }
+                simd::broadcast_rows_bwd(&mut ga.data, &g.data, group, c);
             }
             Op::TileRows { a } => {
                 let len = nodes[a].value.numel();
                 let ga = slot(grads, a, &nodes[a].value.shape, pool);
                 for block in g.data.chunks(len) {
-                    for (o, &x) in ga.data.iter_mut().zip(block) {
-                        *o += x;
-                    }
+                    simd::acc_add(&mut ga.data, block);
                 }
             }
             Op::TanhJetT0 { z0 } => {
                 let tv = &nodes[i].value.data;
+                let len = nodes[z0].value.numel();
                 let gz0 = slot(grads, z0, &nodes[z0].value.shape, pool);
-                for ((o, &x), &t) in gz0.data.iter_mut().zip(&g.data).zip(tv) {
-                    *o += x * (1.0 - t * t);
-                }
+                simd::jet_f1_acc(&mut gz0.data, &g.data, tv, 1, len);
             }
             Op::TanhJetO1 { t0, z1, group } => {
                 let c = nodes[t0].value.shape[1];
@@ -671,29 +604,12 @@ impl Tape {
                 {
                     // d/dz1 = bc(f1) ⊙ g
                     let gz1 = slot(grads, z1, &nodes[z1].value.shape, pool);
-                    for (r, (orow, grow)) in
-                        gz1.data.chunks_mut(c).zip(g.data.chunks(c)).enumerate()
-                    {
-                        let p = r / group;
-                        let trow = &t0d[p * c..(p + 1) * c];
-                        for ((o, &gv), &t) in orow.iter_mut().zip(grow).zip(trow) {
-                            *o += gv * (1.0 - t * t);
-                        }
-                    }
+                    simd::jet_f1_acc(&mut gz1.data, &g.data, t0d, group, c);
                 }
                 {
                     // d/dt0 = -2 t0 ⊙ group-sum(g ⊙ z1)
                     let gt0 = slot(grads, t0, &nodes[t0].value.shape, pool);
-                    for (r, grow) in g.data.chunks(c).enumerate() {
-                        let p = r / group;
-                        let trow = &t0d[p * c..(p + 1) * c];
-                        let zrow = &z1d[r * c..(r + 1) * c];
-                        let orow = &mut gt0.data[p * c..(p + 1) * c];
-                        for (((o, &gv), &z), &t) in orow.iter_mut().zip(grow).zip(zrow).zip(trow)
-                        {
-                            *o += gv * z * (-2.0 * t);
-                        }
-                    }
+                    simd::jet_o1_bwd_t0(&mut gt0.data, &g.data, z1d, t0d, group, c);
                 }
             }
             Op::TanhJetO2 { t0, z1, z2, group } => {
@@ -704,52 +620,21 @@ impl Tape {
                 {
                     // d/dz1 = 2 bc(f2) ⊙ z1 ⊙ g
                     let gz1 = slot(grads, z1, &nodes[z1].value.shape, pool);
-                    for (r, (orow, grow)) in
-                        gz1.data.chunks_mut(c).zip(g.data.chunks(c)).enumerate()
-                    {
-                        let p = r / group;
-                        let trow = &t0d[p * c..(p + 1) * c];
-                        let zrow = &z1d[r * c..(r + 1) * c];
-                        for (((o, &gv), &z), &t) in orow.iter_mut().zip(grow).zip(zrow).zip(trow)
-                        {
-                            let f2 = -2.0 * t * (1.0 - t * t);
-                            *o += gv * 2.0 * f2 * z;
-                        }
-                    }
+                    simd::jet_f2z1_acc(&mut gz1.data, &g.data, z1d, t0d, 2.0, group, c);
                 }
                 {
                     // d/dz2 = bc(f1) ⊙ g
                     let gz2 = slot(grads, z2, &nodes[z2].value.shape, pool);
-                    for (r, (orow, grow)) in
-                        gz2.data.chunks_mut(c).zip(g.data.chunks(c)).enumerate()
-                    {
-                        let p = r / group;
-                        let trow = &t0d[p * c..(p + 1) * c];
-                        for ((o, &gv), &t) in orow.iter_mut().zip(grow).zip(trow) {
-                            *o += gv * (1.0 - t * t);
-                        }
-                    }
+                    simd::jet_f1_acc(&mut gz2.data, &g.data, t0d, group, c);
                 }
                 {
                     // d/dt0 = (6 t0² − 2) ⊙ gsum(g ⊙ z1²) − 2 t0 ⊙ gsum(g ⊙ z2)
                     let gt0 = slot(grads, t0, &nodes[t0].value.shape, pool);
-                    for (r, grow) in g.data.chunks(c).enumerate() {
-                        let p = r / group;
-                        let trow = &t0d[p * c..(p + 1) * c];
-                        let zrow1 = &z1d[r * c..(r + 1) * c];
-                        let zrow2 = &z2d[r * c..(r + 1) * c];
-                        let orow = &mut gt0.data[p * c..(p + 1) * c];
-                        for ((((o, &gv), &z1e), &z2e), &t) in
-                            orow.iter_mut().zip(grow).zip(zrow1).zip(zrow2).zip(trow)
-                        {
-                            *o += gv * ((6.0 * t * t - 2.0) * z1e * z1e - 2.0 * t * z2e);
-                        }
-                    }
+                    simd::jet_o2_bwd_t0(&mut gt0.data, &g.data, z1d, z2d, t0d, group, c);
                 }
             }
             Op::TanhJetO3 { t0, z1, z2, z3, group } => {
                 let c = nodes[t0].value.shape[1];
-                let rows = nodes[z1].value.shape[0];
                 let t0d = &nodes[t0].value.data;
                 let z1d = &nodes[z1].value.data;
                 let z2d = &nodes[z2].value.data;
@@ -757,58 +642,26 @@ impl Tape {
                 {
                     // d/dz1 = 3 f3 z1² + 3 f2 z2
                     let gz1 = slot(grads, z1, &nodes[z1].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (_, f2, f3, _) = tanh_factors(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            gz1.data[idx] += g.data[idx]
-                                * (3.0 * f3 * z1d[idx] * z1d[idx] + 3.0 * f2 * z2d[idx]);
-                        }
-                    }
+                    simd::jet_o3_bwd_z1(&mut gz1.data, &g.data, z1d, z2d, t0d, group, c);
                 }
                 {
                     // d/dz2 = 3 f2 z1
                     let gz2 = slot(grads, z2, &nodes[z2].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (_, f2, _, _) = tanh_factors(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            gz2.data[idx] += g.data[idx] * 3.0 * f2 * z1d[idx];
-                        }
-                    }
+                    simd::jet_f2z1_acc(&mut gz2.data, &g.data, z1d, t0d, 3.0, group, c);
                 }
                 {
                     // d/dz3 = f1
                     let gz3 = slot(grads, z3, &nodes[z3].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (f1, _, _, _) = tanh_factors(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            gz3.data[idx] += g.data[idx] * f1;
-                        }
-                    }
+                    simd::jet_f1_acc(&mut gz3.data, &g.data, t0d, group, c);
                 }
                 {
                     // d/dt0 = gsum(g ⊙ (f3' z1³ + 3 f2' z1 z2 + f1' z3))
                     let gt0 = slot(grads, t0, &nodes[t0].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (f1p, f2p, f3p, _) = tanh_factor_derivs(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            let (z1e, z2e, z3e) = (z1d[idx], z2d[idx], z3d[idx]);
-                            gt0.data[p * c + j] += g.data[idx]
-                                * (f3p * z1e * z1e * z1e + 3.0 * f2p * z1e * z2e + f1p * z3e);
-                        }
-                    }
+                    simd::jet_o3_bwd_t0(&mut gt0.data, &g.data, z1d, z2d, z3d, t0d, group, c);
                 }
             }
             Op::TanhJetO4 { t0, z1, z2, z3, z4, group } => {
                 let c = nodes[t0].value.shape[1];
-                let rows = nodes[z1].value.shape[0];
                 let t0d = &nodes[t0].value.data;
                 let z1d = &nodes[z1].value.data;
                 let z2d = &nodes[z2].value.data;
@@ -817,75 +670,28 @@ impl Tape {
                 {
                     // d/dz1 = 4 f4 z1³ + 12 f3 z1 z2 + 4 f2 z3
                     let gz1 = slot(grads, z1, &nodes[z1].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (_, f2, f3, f4) = tanh_factors(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            let (z1e, z2e, z3e) = (z1d[idx], z2d[idx], z3d[idx]);
-                            gz1.data[idx] += g.data[idx]
-                                * (4.0 * f4 * z1e * z1e * z1e
-                                    + 12.0 * f3 * z1e * z2e
-                                    + 4.0 * f2 * z3e);
-                        }
-                    }
+                    simd::jet_o4_bwd_z1(&mut gz1.data, &g.data, z1d, z2d, z3d, t0d, group, c);
                 }
                 {
                     // d/dz2 = 6 f3 z1² + 6 f2 z2
                     let gz2 = slot(grads, z2, &nodes[z2].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (_, f2, f3, _) = tanh_factors(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            gz2.data[idx] += g.data[idx]
-                                * (6.0 * f3 * z1d[idx] * z1d[idx] + 6.0 * f2 * z2d[idx]);
-                        }
-                    }
+                    simd::jet_o4_bwd_z2(&mut gz2.data, &g.data, z1d, z2d, t0d, group, c);
                 }
                 {
                     // d/dz3 = 4 f2 z1
                     let gz3 = slot(grads, z3, &nodes[z3].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (_, f2, _, _) = tanh_factors(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            gz3.data[idx] += g.data[idx] * 4.0 * f2 * z1d[idx];
-                        }
-                    }
+                    simd::jet_f2z1_acc(&mut gz3.data, &g.data, z1d, t0d, 4.0, group, c);
                 }
                 {
                     // d/dz4 = f1
                     let gz4 = slot(grads, z4, &nodes[z4].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (f1, _, _, _) = tanh_factors(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            gz4.data[idx] += g.data[idx] * f1;
-                        }
-                    }
+                    simd::jet_f1_acc(&mut gz4.data, &g.data, t0d, group, c);
                 }
                 {
                     // d/dt0 = gsum(g ⊙ (f4' z1⁴ + 6 f3' z1² z2 + 3 f2' z2²
                     //               + 4 f2' z1 z3 + f1' z4))
                     let gt0 = slot(grads, t0, &nodes[t0].value.shape, pool);
-                    for r in 0..rows {
-                        let p = r / group;
-                        for j in 0..c {
-                            let (f1p, f2p, f3p, f4p) = tanh_factor_derivs(t0d[p * c + j]);
-                            let idx = r * c + j;
-                            let (z1e, z2e, z3e, z4e) =
-                                (z1d[idx], z2d[idx], z3d[idx], z4d[idx]);
-                            gt0.data[p * c + j] += g.data[idx]
-                                * (f4p * z1e * z1e * z1e * z1e
-                                    + 6.0 * f3p * z1e * z1e * z2e
-                                    + 3.0 * f2p * z2e * z2e
-                                    + 4.0 * f2p * z1e * z3e
-                                    + f1p * z4e);
-                        }
-                    }
+                    simd::jet_o4_bwd_t0(&mut gt0.data, &g.data, z1d, z2d, z3d, z4d, t0d, group, c);
                 }
             }
         }
@@ -1339,6 +1145,31 @@ mod tests {
         let want = fd_grad(&f, &a_data, 1e-3);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+
+    /// cube = x³ with gradient 3x², against finite differences (the
+    /// Allen–Cahn reaction-term node).
+    #[test]
+    fn cube_grad_matches_fd() {
+        let a_data = vec![0.6f32, -1.2, 0.25];
+        let f = |a: &[f32]| -> f32 {
+            let mut tape = Tape::new();
+            let av = tape.input(Tensor::from_vec(&[3, 1], a.to_vec()));
+            let cb = tape.cube(av);
+            let loss = tape.mean_all(cb);
+            tape.value(loss).data[0]
+        };
+        let mut tape = Tape::new();
+        let av = tape.input(Tensor::from_vec(&[3, 1], a_data.clone()));
+        let cb = tape.cube(av);
+        assert!((tape.value(cb).data[1] - (-1.2f32).powi(3)).abs() < 1e-6);
+        let loss = tape.mean_all(cb);
+        let grads = tape.backward(loss);
+        let got = &grads[av.0].as_ref().unwrap().data;
+        let want = fd_grad(&f, &a_data, 1e-3);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 2e-2 * (1.0 + b.abs()), "{a} vs {b}");
         }
     }
 

@@ -27,10 +27,12 @@ use crate::estimators::Estimator;
 use crate::util::json::Value;
 use crate::util::toml;
 
-/// Problem families the repo knows how to build.  Must stay in sync with
-/// `coordinator::problem_for` — `known_families_match_problem_for` below
-/// gates one direction; extend both when adding a family.
-pub const KNOWN_FAMILIES: [&str; 3] = ["sg2", "sg3", "bihar"];
+/// Problem families the repo knows how to build — THE shared constant
+/// behind every supported-set error (`coordinator::problem_for` quotes
+/// it too, so the parse-time list and the construction-time list cannot
+/// drift).  `known_families_match_problem_for` below gates the sync;
+/// extend both when adding a family.
+pub const KNOWN_FAMILIES: [&str; 4] = ["sg2", "sg3", "ac2", "bihar"];
 
 #[derive(Clone, Debug)]
 pub struct FileConfig {
@@ -205,6 +207,8 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("sg9"), "{err}");
-        assert!(err.contains("sg2") && err.contains("sg3") && err.contains("bihar"), "{err}");
+        for family in KNOWN_FAMILIES {
+            assert!(err.contains(family), "{err} missing {family}");
+        }
     }
 }

@@ -7,9 +7,11 @@
 
 use anyhow::{bail, Result};
 
+use crate::config::KNOWN_FAMILIES;
 use crate::estimators::Estimator;
 use crate::pde::{
-    Biharmonic3Body, Domain, DomainSampler, PdeProblem, SineGordon2Body, SineGordon3Body,
+    AllenCahn2Body, Biharmonic3Body, Domain, DomainSampler, PdeProblem, SineGordon2Body,
+    SineGordon3Body,
 };
 use crate::rng::Xoshiro256pp;
 
@@ -159,8 +161,12 @@ pub fn problem_for(family: &str, d: usize) -> Result<Box<dyn PdeProblem>> {
     Ok(match family {
         "sg2" => Box::new(SineGordon2Body::new(d)),
         "sg3" => Box::new(SineGordon3Body::new(d)),
+        "ac2" => Box::new(AllenCahn2Body::new(d)),
         "bihar" => Box::new(Biharmonic3Body::new(d)),
-        other => bail!("unknown family {other}"),
+        other => bail!(
+            "unknown family {other} (supported: {})",
+            KNOWN_FAMILIES.join(" | ")
+        ),
     })
 }
 
@@ -238,7 +244,13 @@ mod tests {
     fn problem_for_known_families() {
         assert!(problem_for("sg2", 4).is_ok());
         assert!(problem_for("sg3", 4).is_ok());
+        assert!(problem_for("ac2", 4).is_ok());
         assert!(problem_for("bihar", 4).is_ok());
-        assert!(problem_for("nope", 4).is_err());
+        // the error lists the supported set — same shared constant the
+        // config parser uses, so the two lists cannot drift
+        let err = problem_for("nope", 4).unwrap_err().to_string();
+        for family in KNOWN_FAMILIES {
+            assert!(err.contains(family), "{err} missing {family}");
+        }
     }
 }

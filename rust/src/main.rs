@@ -37,7 +37,7 @@ use hte_pinn::util::args::Args;
 
 const USAGE: &str = "usage: hte-pinn <info|train|table|memmodel> [flags]
   info     --artifacts DIR
-  train    --config FILE | [--family sg2|sg3|bihar --method probe|gpinn
+  train    --config FILE | [--family sg2|sg3|ac2|bihar --method probe|hte|gpinn
            --estimator hte --d 100 --v 16 --epochs 2000 --lr0 1e-3
            --seed 0 --lambda-g 10 --log-every 100]
            [--backend native|artifact] [--batch 100] --artifacts DIR

@@ -14,9 +14,10 @@ mod native_loss;
 pub use jet::{factor_jet, gpinn_point_reference, jet_forward, JetStreams};
 pub use mlp::{Mlp, HIDDEN};
 pub use native_loss::{
-    adam_step, bihar_residual_loss_and_grad, bihar_residual_loss_reference, default_residual_op,
+    adam_step, allen_cahn_residual_loss_and_grad, allen_cahn_residual_loss_reference,
+    bihar_residual_loss_and_grad, bihar_residual_loss_reference, default_residual_op,
     default_threads, factor_jets, gpinn_residual_loss_and_grad, gpinn_residual_loss_reference,
     hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference,
-    residual_op_for, BiharResidual, ChunkCtx, GpinnResidual, NativeBatch, NativeEngine,
-    ResidualOp, TraceResidual, CHUNK_POINTS,
+    residual_op_for, AllenCahnResidual, BiharResidual, ChunkCtx, GpinnResidual, NativeBatch,
+    NativeEngine, ResidualOp, TraceResidual, CHUNK_POINTS,
 };

@@ -187,6 +187,33 @@ impl ResidualOp for GpinnResidual {
     }
 }
 
+/// Order-2 Allen–Cahn trace residual (the DESIGN.md §7 add-a-family
+/// worked example): r_i = mean_k D²u(x_i)[v_k] − u(x_i)³ + u(x_i) − g(x_i).
+/// Identical stream shapes to [`TraceResidual`]; only the reaction term
+/// (one `cube` tape node on the [nc, 1] primal) differs.
+pub struct AllenCahnResidual;
+
+impl ResidualOp for AllenCahnResidual {
+    fn order(&self) -> usize {
+        2
+    }
+    fn name(&self) -> &'static str {
+        "allen-cahn"
+    }
+    fn chunk_loss(&self, tape: &mut Tape, ctx: &mut ChunkCtx) -> Var {
+        let d2_mean = ctx.stream_mean(tape, 2); // [nc, 1]
+        let u0 = ctx.primal(tape); // [nc, 1]
+        let u3 = tape.cube(u0);
+        let g = ctx.forcing_leaf(tape);
+        let lin = tape.add(d2_mean, u0);
+        let est = tape.sub(lin, u3);
+        let r = tape.sub(est, g);
+        let rsq = tape.square(r);
+        let sum = tape.sum_all(rsq);
+        tape.scale(sum, 0.5)
+    }
+}
+
 /// Order-4 biharmonic TVP residual (Eq. 23 / Thm 3.4):
 /// r_i = (1/(3V)) Σ_k D⁴u(x_i)[v_k] − g(x_i), v_k ~ N(0, I).
 pub struct BiharResidual;
@@ -214,6 +241,7 @@ impl ResidualOp for BiharResidual {
 }
 
 static TRACE_OP: TraceResidual = TraceResidual;
+static AC_OP: AllenCahnResidual = AllenCahnResidual;
 static BIHAR_OP: BiharResidual = BiharResidual;
 
 /// The operator a problem family trains under by default (no method
@@ -221,28 +249,31 @@ static BIHAR_OP: BiharResidual = BiharResidual;
 pub fn default_residual_op(problem: &dyn PdeProblem) -> &'static dyn ResidualOp {
     match problem.operator() {
         OperatorKind::SineGordon => &TRACE_OP,
+        OperatorKind::AllenCahn => &AC_OP,
         OperatorKind::Biharmonic => &BIHAR_OP,
     }
 }
 
 /// Map a (problem, method) pair onto its residual operator — the one
 /// place method strings enter the native pipeline.  Accepts the native
-/// names and the artifact manifest's aliases.
+/// names, the artifact manifest's aliases, and `hte` as a synonym for
+/// each family's probe estimator.
 pub fn residual_op_for(
     problem: &dyn PdeProblem,
     method: &str,
     lambda_g: f32,
 ) -> Result<Box<dyn ResidualOp>> {
     match (problem.operator(), method) {
-        (OperatorKind::SineGordon, "probe") => Ok(Box::new(TraceResidual)),
+        (OperatorKind::SineGordon, "probe" | "hte") => Ok(Box::new(TraceResidual)),
         (OperatorKind::SineGordon, "gpinn" | "gpinn_probe") => {
             Ok(Box::new(GpinnResidual { lambda: lambda_g }))
         }
-        (OperatorKind::Biharmonic, "probe" | "probe4") => Ok(Box::new(BiharResidual)),
+        (OperatorKind::AllenCahn, "probe" | "hte") => Ok(Box::new(AllenCahnResidual)),
+        (OperatorKind::Biharmonic, "probe" | "probe4" | "hte") => Ok(Box::new(BiharResidual)),
         (kind, other) => bail!(
             "method {other} is not supported by the native backend for the {kind:?} operator \
-             (supported: probe | gpinn | gpinn_probe for SineGordon, probe | probe4 for \
-             Biharmonic)"
+             (supported: probe | hte | gpinn | gpinn_probe for SineGordon, probe | hte for \
+             AllenCahn, probe | probe4 | hte for Biharmonic)"
         ),
     }
 }
@@ -687,6 +718,20 @@ pub fn bihar_residual_loss_and_grad(
     (loss, grad)
 }
 
+/// Allen–Cahn residual loss and its parameter gradient (packed order),
+/// through the probe-batched engine.
+pub fn allen_cahn_residual_loss_and_grad(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> (f32, Vec<f32>) {
+    debug_assert_eq!(problem.operator(), OperatorKind::AllenCahn);
+    let mut engine = NativeEngine::new(1);
+    let mut grad = Vec::new();
+    let loss = engine.loss_and_grad_with(mlp, problem, &AllenCahnResidual, batch, &mut grad);
+    (loss, grad)
+}
+
 /// Native gPINN loss (trace residual + λ·probe-contracted
 /// gradient-of-residual) and its parameter gradient (packed order).
 pub fn gpinn_residual_loss_and_grad(
@@ -724,6 +769,30 @@ pub fn hte_residual_loss_reference(
         est /= v as f64;
         let u0 = mlp.forward_constrained(x, problem.factor(x));
         let r = est + u0.sin() - problem.forcing(x, batch.coeff);
+        acc += 0.5 * r * r;
+    }
+    acc / n as f64
+}
+
+/// Allen–Cahn loss only, via the (non-tape) jet engine — the FD-check
+/// oracle for the `ac2` tape path.
+pub fn allen_cahn_residual_loss_reference(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> f64 {
+    let (n, v, d) = (batch.n, batch.v, mlp.d);
+    let mut acc = 0.0;
+    for i in 0..n {
+        let x = &batch.xs[i * d..(i + 1) * d];
+        let mut est = 0.0;
+        for k in 0..v {
+            let probe = &batch.probes[k * d..(k + 1) * d];
+            est += super::jet::jet_forward(mlp, problem, x, probe, 2)[2];
+        }
+        est /= v as f64;
+        let u0 = mlp.forward_constrained(x, problem.factor(x));
+        let r = est - u0 * u0 * u0 + u0 - problem.forcing(x, batch.coeff);
         acc += 0.5 * r * r;
     }
     acc / n as f64
@@ -954,7 +1023,7 @@ pub fn adam_step(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pde::{Biharmonic3Body, DomainSampler, SineGordon2Body};
+    use crate::pde::{AllenCahn2Body, Biharmonic3Body, DomainSampler, SineGordon2Body};
     use crate::rng::{fill_rademacher, Normal, Xoshiro256pp};
 
     fn setup(d: usize, n: usize, v: usize) -> (Mlp, SineGordon2Body, Vec<f32>, Vec<f32>, Vec<f32>) {
@@ -1281,17 +1350,108 @@ mod tests {
     #[test]
     fn residual_op_selection_and_errors() {
         let sg = SineGordon2Body::new(4);
+        let ac = AllenCahn2Body::new(4);
         let bihar = Biharmonic3Body::new(4);
         assert_eq!(residual_op_for(&sg, "probe", 1.0).unwrap().order(), 2);
         assert_eq!(residual_op_for(&sg, "gpinn", 1.0).unwrap().order(), 3);
         assert_eq!(residual_op_for(&sg, "gpinn_probe", 1.0).unwrap().order(), 3);
         assert_eq!(residual_op_for(&bihar, "probe4", 1.0).unwrap().order(), 4);
         assert!(residual_op_for(&bihar, "probe4", 1.0).unwrap().requires_gaussian_probes());
+        // "hte" aliases each family's probe estimator
+        assert_eq!(residual_op_for(&sg, "hte", 1.0).unwrap().order(), 2);
+        assert_eq!(residual_op_for(&ac, "hte", 1.0).unwrap().order(), 2);
+        assert_eq!(residual_op_for(&ac, "probe", 1.0).unwrap().name(), "allen-cahn");
+        assert_eq!(residual_op_for(&bihar, "hte", 1.0).unwrap().order(), 4);
+        assert!(!residual_op_for(&ac, "hte", 1.0).unwrap().requires_gaussian_probes());
         // probe4 is the biharmonic method name; gPINN has no order-4 jet
         let err = residual_op_for(&sg, "probe4", 1.0).unwrap_err().to_string();
         assert!(err.contains("supported"), "{err}");
         assert!(residual_op_for(&bihar, "gpinn", 1.0).is_err());
+        // the gradient-enhanced contraction is Sine-Gordon-specific
+        assert!(residual_op_for(&ac, "gpinn", 1.0).is_err());
         assert!(residual_op_for(&sg, "full", 1.0).is_err());
+    }
+
+    /// Allen–Cahn case: unit-ball points, Rademacher probes.
+    fn setup_ac(
+        d: usize,
+        n: usize,
+        v: usize,
+    ) -> (Mlp, AllenCahn2Body, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(29);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = AllenCahn2Body::new(d);
+        let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        Normal::new().fill_f32(&mut rng, &mut coeff);
+        (mlp, problem, xs, probes, coeff)
+    }
+
+    #[test]
+    fn allen_cahn_engine_matches_reference_across_shapes() {
+        // same edge grid as the trace family: n = 1, v = 1, chunk tails
+        for (d, n, v) in [(3, 1, 1), (4, 1, 5), (4, 2, 1), (5, 6, 3), (8, 9, 4)] {
+            let (mlp, problem, xs, probes, coeff) = setup_ac(d, n, v);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+            let (loss, _) = allen_cahn_residual_loss_and_grad(&mlp, &problem, &batch);
+            let reference = allen_cahn_residual_loss_reference(&mlp, &problem, &batch);
+            assert!(
+                (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+                "(d={d}, n={n}, v={v}): {loss} vs {reference}"
+            );
+        }
+    }
+
+    #[test]
+    fn allen_cahn_grad_matches_finite_differences() {
+        let (mut mlp, problem, xs, probes, coeff) = setup_ac(4, 3, 2);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 3, v: 2 };
+        let (_, grad) = allen_cahn_residual_loss_and_grad(&mlp, &problem, &batch);
+        let gmax: f32 = grad.iter().map(|g| g.abs()).fold(0.0, f32::max);
+        let flat0 = mlp.pack();
+        let idxs = [0usize, 7, 130, 600, flat0.len() - 1, flat0.len() - 200];
+        let h = 1e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            mlp.unpack_into(&fp);
+            let lp = allen_cahn_residual_loss_reference(&mlp, &problem, &batch);
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            mlp.unpack_into(&fm);
+            let lm = allen_cahn_residual_loss_reference(&mlp, &problem, &batch);
+            mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()) + 1e-2 * gmax,
+                "param {i}: tape {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn allen_cahn_multithreaded_gradient_is_bitwise_identical() {
+        let (mlp, problem, xs, probes, coeff) = setup_ac(6, 11, 4);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 11, v: 4 };
+        let mut grads: Vec<(f32, Vec<f32>)> = Vec::new();
+        for threads in [1usize, 2, 3, 7] {
+            let mut engine = NativeEngine::new(threads);
+            let mut grad = Vec::new();
+            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad);
+            grads.push((loss, grad));
+        }
+        let (loss0, g0) = &grads[0];
+        for (loss, g) in &grads[1..] {
+            assert_eq!(loss.to_bits(), loss0.to_bits(), "loss differs across thread counts");
+            assert_eq!(g.len(), g0.len());
+            for (a, b) in g.iter().zip(g0) {
+                assert_eq!(a.to_bits(), b.to_bits(), "gradient differs across thread counts");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Allen–Cahn problem: Δu − u³ + u = g on the unit ball.
+//!
+//! The manufactured solution reuses the two-body interactive ansatz of
+//! Eq. 17 — u = (1−|x|²) Σᵢ cᵢ sin(ψᵢ) — so the closed-form Laplacian
+//! is shared with `SineGordon2Body`; only the reaction term changes:
+//! g = Δu − u³ + u.  This is the DESIGN.md §7 "add a family" exercise:
+//! the problem here, a ~20-line `AllenCahnResidual` contraction over the
+//! generic jet-stream pipeline (`nn::native_loss`), one `cube` tape op,
+//! and the `ac2` registrations in `config::KNOWN_FAMILIES` /
+//! `coordinator::problem_for` / `nn::residual_op_for`.
+
+use super::sine_gordon::{two_body_u_lap_dual, SineGordon2Body};
+use super::{Domain, OperatorKind, PdeProblem};
+
+/// Two-body-interaction Allen–Cahn problem (`ac2`).
+pub struct AllenCahn2Body {
+    inner: SineGordon2Body,
+}
+
+impl AllenCahn2Body {
+    pub fn new(d: usize) -> Self {
+        Self { inner: SineGordon2Body::new(d) }
+    }
+}
+
+impl PdeProblem for AllenCahn2Body {
+    fn family(&self) -> &'static str {
+        "ac2"
+    }
+    fn dim(&self) -> usize {
+        self.inner.d
+    }
+    fn domain(&self) -> Domain {
+        Domain::UnitBall
+    }
+    fn operator(&self) -> OperatorKind {
+        OperatorKind::AllenCahn
+    }
+    fn n_coeff(&self) -> usize {
+        self.inner.d - 1
+    }
+    fn u_exact(&self, x: &[f32], c: &[f32]) -> f64 {
+        self.inner.u_exact(x, c)
+    }
+    /// g = Δu − u³ + u (the manufactured-solution forcing).
+    fn forcing(&self, x: &[f32], c: &[f32]) -> f64 {
+        let u = self.inner.u_exact(x, c);
+        self.inner.laplacian_exact(x, c) - u * u * u + u
+    }
+    /// Exact v·∇g via duals: Δu − u³ + u evaluated on x + εv.
+    fn forcing_dir(&self, x: &[f32], v: &[f32], c: &[f32]) -> f64 {
+        let (u, lap_u) = two_body_u_lap_dual(self.inner.d, x, v, c);
+        (lap_u - u * u * u + u).du
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::fd;
+    use crate::rng::{Normal, Xoshiro256pp};
+
+    fn random_point_and_coeff(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut normal = Normal::new();
+        let x: Vec<f32> = (0..d).map(|_| (normal.sample(&mut rng) * 0.3) as f32).collect();
+        let c: Vec<f32> = (0..d - 1).map(|_| normal.sample(&mut rng) as f32).collect();
+        (x, c)
+    }
+
+    /// g − (−u³ + u) must be the Laplacian of the manufactured u —
+    /// checked against the FD Laplacian oracle.
+    #[test]
+    fn forcing_is_lap_minus_cube_plus_u() {
+        for d in [2usize, 5, 9] {
+            let (x, c) = random_point_and_coeff(d, 60 + d as u64);
+            let pde = AllenCahn2Body::new(d);
+            let u = pde.u_exact(&x, &c);
+            let lap_part = pde.forcing(&x, &c) + u * u * u - u;
+            let fd_lap = fd::laplacian(&|y| pde.u_exact(y, &c), &x, 1e-3);
+            assert!(
+                (lap_part - fd_lap).abs() < 1e-2 * (1.0 + lap_part.abs()),
+                "d={d}: {lap_part} vs {fd_lap}"
+            );
+        }
+    }
+
+    #[test]
+    fn solution_vanishes_on_boundary() {
+        let d = 6;
+        let (mut x, c) = random_point_and_coeff(d, 11);
+        let norm: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        let scale = (1.0 / norm.sqrt()) as f32;
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
+        let pde = AllenCahn2Body::new(d);
+        assert!(pde.u_exact(&x, &c).abs() < 1e-5);
+    }
+
+    /// The dual-number `forcing_dir` must agree with the 2-eval
+    /// central-difference stencil of the closed-form forcing.
+    #[test]
+    fn closed_form_forcing_dir_matches_stencil() {
+        let h = 1e-3f32;
+        for d in [2usize, 5, 9] {
+            let (x, c) = random_point_and_coeff(d, 90 + d as u64);
+            let v: Vec<f32> =
+                (0..d).map(|i| if i % 2 == 0 { -1.0 } else { 0.5 }).collect();
+            let pde = AllenCahn2Body::new(d);
+            let got = pde.forcing_dir(&x, &v, &c);
+            let xp: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a + h * b).collect();
+            let xm: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a - h * b).collect();
+            let want = (pde.forcing(&xp, &c) - pde.forcing(&xm, &c)) / (2.0 * h as f64);
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "d={d}: {got} vs {want}"
+            );
+        }
+    }
+}

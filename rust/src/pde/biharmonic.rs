@@ -8,10 +8,22 @@
 //! with the contractions derived in DESIGN.md §2 (and mirrored in
 //! `python/compile/exact_solutions.py`).
 
+use super::dual::{sq_norm_dual, Dual};
 use super::{sq_norm, Domain, OperatorKind, PdeProblem};
 
 pub struct Biharmonic3Body {
     pub d: usize,
+}
+
+/// The interaction contractions of [`Contractions`] carried as duals
+/// along x + t v (for the exact `forcing_dir` override).
+struct ContractionsDual {
+    s: Dual,
+    x_grad_s: Dual,
+    lap_s: Dual,
+    xhx: Dual,
+    x_grad_lap_s: Dual,
+    lap2_s: Dual,
 }
 
 /// All the interaction-factor contractions the bilaplacian needs.
@@ -72,6 +84,56 @@ impl Biharmonic3Body {
             + 8.0 * rp * k.x_grad_lap_s
             + big_r * k.lap2_s
     }
+
+    /// [`Biharmonic3Body::contractions`] as duals along x + t v.
+    fn contractions_dual(&self, x: &[f32], v: &[f32], c: &[f32]) -> ContractionsDual {
+        let zero = Dual::con(0.0);
+        let mut out = ContractionsDual {
+            s: zero,
+            x_grad_s: zero,
+            lap_s: zero,
+            xhx: zero,
+            x_grad_lap_s: zero,
+            lap2_s: zero,
+        };
+        for i in 0..self.d - 2 {
+            let a = Dual::new(x[i] as f64, v[i] as f64);
+            let b = Dual::new(x[i + 1] as f64, v[i + 1] as f64);
+            let w = Dual::new(x[i + 2] as f64, v[i + 2] as f64);
+            let ci = c[i] as f64;
+            let p = a * b * w;
+            let e = p.exp().scale(ci);
+            let (qa, qb, qw) = (b * w, a * w, a * b);
+            let big_q = qa * qa + qb * qb + qw * qw;
+            let sig2 = a * a + b * b + w * w;
+            out.s = out.s + e;
+            out.x_grad_s = out.x_grad_s + (e * p).scale(3.0);
+            out.lap_s = out.lap_s + e * big_q;
+            out.xhx = out.xhx + e * ((p * p).scale(9.0) + p.scale(6.0));
+            out.x_grad_lap_s = out.x_grad_lap_s + e * big_q * (p.scale(3.0) + Dual::con(4.0));
+            out.lap2_s =
+                out.lap2_s + e * (big_q * big_q + (p * sig2).scale(8.0) + sig2.scale(4.0));
+        }
+        out
+    }
+
+    /// [`Biharmonic3Body::bilaplacian_exact`] as a dual along x + t v;
+    /// its `du` is the exact v·∇(Δ²u).
+    fn bilaplacian_dual(&self, x: &[f32], v: &[f32], c: &[f32]) -> Dual {
+        let s = sq_norm_dual(x, v);
+        let d = self.d as f64;
+        let k = self.contractions_dual(x, v, c);
+        let rp = s.scale(2.0) - Dual::con(5.0);
+        let big_r = (Dual::con(1.0) - s) * (Dual::con(4.0) - s);
+        let lap_r = s.scale(4.0 * d + 8.0) - Dual::con(10.0 * d);
+        let lap2_r = 8.0 * d * d + 16.0 * d;
+        k.s.scale(lap2_r)
+            + k.x_grad_s.scale(4.0 * (8.0 * d + 16.0))
+            + (lap_r * k.lap_s).scale(2.0)
+            + ((rp * k.lap_s).scale(2.0) + k.xhx.scale(8.0)).scale(4.0)
+            + (rp * k.x_grad_lap_s).scale(8.0)
+            + big_r * k.lap2_s
+    }
 }
 
 impl PdeProblem for Biharmonic3Body {
@@ -97,6 +159,12 @@ impl PdeProblem for Biharmonic3Body {
     }
     fn forcing(&self, x: &[f32], c: &[f32]) -> f64 {
         self.bilaplacian_exact(x, c)
+    }
+    /// Exact v·∇g via duals: g = Δ²u evaluated on x + εv (a 5th-order
+    /// derivative of the manufactured solution the stencil only
+    /// approximated).
+    fn forcing_dir(&self, x: &[f32], v: &[f32], c: &[f32]) -> f64 {
+        self.bilaplacian_dual(x, v, c).du
     }
 }
 
@@ -135,6 +203,32 @@ mod tests {
         for radius in [1.0f64, 2.0] {
             let x: Vec<f32> = dir.iter().map(|&v| (v / norm * radius) as f32).collect();
             assert!(pde.u_exact(&x, &c).abs() < 1e-4, "r={radius}");
+        }
+    }
+
+    /// The dual-number `forcing_dir` (v·∇Δ²u, a 5th-order quantity)
+    /// must agree with the 2-eval central-difference stencil of the
+    /// closed-form bilaplacian along the same line.
+    #[test]
+    fn closed_form_forcing_dir_matches_stencil() {
+        let h = 1e-3f32;
+        for d in [3usize, 5, 8] {
+            let mut rng = Xoshiro256pp::new(40 + d as u64);
+            let mut normal = Normal::new();
+            let x: Vec<f32> = (0..d)
+                .map(|_| (normal.sample(&mut rng) * 0.2 + 0.7) as f32)
+                .collect();
+            let v: Vec<f32> = (0..d).map(|_| normal.sample(&mut rng) as f32).collect();
+            let c: Vec<f32> = (0..d - 2).map(|_| normal.sample(&mut rng) as f32).collect();
+            let pde = Biharmonic3Body::new(d);
+            let got = pde.forcing_dir(&x, &v, &c);
+            let xp: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a + h * b).collect();
+            let xm: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a - h * b).collect();
+            let want = (pde.forcing(&xp, &c) - pde.forcing(&xm, &c)) / (2.0 * h as f64);
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "d={d}: {got} vs {want}"
+            );
         }
     }
 

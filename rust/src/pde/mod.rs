@@ -5,11 +5,15 @@
 //! training, and validation; the derivations are identical (DESIGN.md §2)
 //! and cross-checked against finite differences in this module's tests.
 
+mod allen_cahn;
 mod biharmonic;
+mod dual;
 mod sampler;
 mod sine_gordon;
 
+pub use allen_cahn::AllenCahn2Body;
 pub use biharmonic::Biharmonic3Body;
+pub use dual::Dual;
 pub use sampler::DomainSampler;
 pub use sine_gordon::{SineGordon2Body, SineGordon3Body};
 
@@ -30,6 +34,9 @@ pub enum Domain {
 pub enum OperatorKind {
     /// Δu + sin(u) = g — order-2 trace estimate (HTE/SDGD/exact probes).
     SineGordon,
+    /// Δu − u³ + u = g — order-2 trace estimate with the cubic
+    /// reaction term (the Allen–Cahn `ResidualOp`).
+    AllenCahn,
     /// Δ²u = g — order-4 TVP estimate (Thm 3.4, Gaussian probes only).
     Biharmonic,
 }
@@ -38,7 +45,7 @@ impl OperatorKind {
     /// Highest directional-derivative stream the residual contracts.
     pub fn order(self) -> usize {
         match self {
-            OperatorKind::SineGordon => 2,
+            OperatorKind::SineGordon | OperatorKind::AllenCahn => 2,
             OperatorKind::Biharmonic => 4,
         }
     }
@@ -68,8 +75,12 @@ pub trait PdeProblem: Send + Sync {
     /// the gPINN gradient-of-residual term).  Default: f64 central
     /// differences of `forcing` along the line x + t v — both the tape
     /// path and the f64 oracle call this same entry, so the gPINN parity
-    /// is exact regardless of the stencil error; families with cheap
-    /// closed forms may override.
+    /// is exact regardless of the stencil error.  Every in-repo family
+    /// overrides this with an exact dual-number evaluation of its
+    /// closed-form forcing ([`Dual`]): one evaluation instead of two,
+    /// no truncation error; the default stencil remains for external
+    /// implementors and as the test oracle the overrides are gated
+    /// against.
     fn forcing_dir(&self, x: &[f32], v: &[f32], c: &[f32]) -> f64 {
         let h = 1e-3f32;
         let xp: Vec<f32> = x.iter().zip(v).map(|(&a, &b)| a + h * b).collect();

@@ -1,6 +1,47 @@
 //! Sine-Gordon problems (Eqs. 17-20): Delta u + sin(u) = g on the unit ball.
+//!
+//! `forcing_dir` is overridden with an exact dual-number evaluation of
+//! the closed-form forcing (one pass, no stencil truncation); the
+//! default central-difference implementation remains the test oracle.
 
+use super::dual::{sq_norm_dual, Dual};
 use super::{sq_norm, Domain, OperatorKind, PdeProblem};
+
+/// (S, x·∇S, ΔS) of the two-body interaction factor as duals along
+/// x + t v — the same contractions as
+/// `SineGordon2Body::interaction_contractions`, with the chain rule
+/// carried exactly by [`Dual`] arithmetic.
+fn two_body_contractions_dual(d: usize, x: &[f32], v: &[f32], c: &[f32]) -> (Dual, Dual, Dual) {
+    let (mut s_val, mut x_grad, mut lap) =
+        (Dual::con(0.0), Dual::con(0.0), Dual::con(0.0));
+    for i in 0..d - 1 {
+        let xi = Dual::new(x[i] as f64, v[i] as f64);
+        let xj = Dual::new(x[i + 1] as f64, v[i + 1] as f64);
+        let ci = c[i] as f64;
+        let psi = xi + xj.cos() + xj * xi.cos();
+        let alpha = Dual::con(1.0) - xj * xi.sin();
+        let beta = -xj.sin() + xi.cos();
+        let (sp, cp) = psi.sin_cos();
+        s_val = s_val + sp.scale(ci);
+        x_grad = x_grad + (cp * (xi * alpha + xj * beta)).scale(ci);
+        lap = lap
+            + ((-sp) * (alpha * alpha + beta * beta) + cp * (-(xj * xi.cos()) - xj.cos()))
+                .scale(ci);
+    }
+    (s_val, x_grad, lap)
+}
+
+/// u and Δu of the hard-constrained two-body ansatz as duals along
+/// x + t v.  Shared with the Allen–Cahn family, which reuses this
+/// manufactured solution under a different operator.
+pub(super) fn two_body_u_lap_dual(d: usize, x: &[f32], v: &[f32], c: &[f32]) -> (Dual, Dual) {
+    let s = sq_norm_dual(x, v);
+    let (s_val, x_grad, lap_s) = two_body_contractions_dual(d, x, v, c);
+    let one_minus = Dual::con(1.0) - s;
+    let u = one_minus * s_val;
+    let lap_u = s_val.scale(-2.0 * d as f64) - x_grad.scale(4.0) + one_minus * lap_s;
+    (u, lap_u)
+}
 
 /// Two-body interactive solution (Eq. 17):
 /// u = (1-|x|^2) sum_i c_i sin(psi_i), psi_i = x_i + cos(x_{i+1}) + x_{i+1} cos(x_i).
@@ -63,6 +104,11 @@ impl PdeProblem for SineGordon2Body {
     fn forcing(&self, x: &[f32], c: &[f32]) -> f64 {
         self.laplacian_exact(x, c) + self.u_exact(x, c).sin()
     }
+    /// Exact v·∇g via duals: g = Δu + sin(u) evaluated on x + εv.
+    fn forcing_dir(&self, x: &[f32], v: &[f32], c: &[f32]) -> f64 {
+        let (u, lap_u) = two_body_u_lap_dual(self.d, x, v, c);
+        (lap_u + u.sin()).du
+    }
 }
 
 /// Three-body interactive solution (Eq. 18):
@@ -98,6 +144,31 @@ impl SineGordon3Body {
         let (s_val, x_grad, lap_s) = self.interaction_contractions(x, c);
         -2.0 * self.d as f64 * s_val - 4.0 * x_grad + (1.0 - s) * lap_s
     }
+
+    /// u and Δu as duals along x + t v (the three-body mirror of
+    /// `two_body_u_lap_dual`).
+    fn u_lap_dual(&self, x: &[f32], v: &[f32], c: &[f32]) -> (Dual, Dual) {
+        let d = self.d;
+        let (mut s_val, mut x_grad, mut lap) =
+            (Dual::con(0.0), Dual::con(0.0), Dual::con(0.0));
+        for i in 0..d - 2 {
+            let a = Dual::new(x[i] as f64, v[i] as f64);
+            let b = Dual::new(x[i + 1] as f64, v[i + 1] as f64);
+            let w = Dual::new(x[i + 2] as f64, v[i + 2] as f64);
+            let ci = c[i] as f64;
+            let p = a * b * w;
+            let e = p.exp().scale(ci);
+            let (qa, qb, qw) = (b * w, a * w, a * b);
+            s_val = s_val + e;
+            x_grad = x_grad + (e * p).scale(3.0); // Euler: x·∇exp(p) = 3 p exp(p)
+            lap = lap + e * (qa * qa + qb * qb + qw * qw);
+        }
+        let s = sq_norm_dual(x, v);
+        let one_minus = Dual::con(1.0) - s;
+        let u = one_minus * s_val;
+        let lap_u = s_val.scale(-2.0 * d as f64) - x_grad.scale(4.0) + one_minus * lap;
+        (u, lap_u)
+    }
 }
 
 impl PdeProblem for SineGordon3Body {
@@ -122,6 +193,11 @@ impl PdeProblem for SineGordon3Body {
     }
     fn forcing(&self, x: &[f32], c: &[f32]) -> f64 {
         self.laplacian_exact(x, c) + self.u_exact(x, c).sin()
+    }
+    /// Exact v·∇g via duals: g = Δu + sin(u) evaluated on x + εv.
+    fn forcing_dir(&self, x: &[f32], v: &[f32], c: &[f32]) -> f64 {
+        let (u, lap_u) = self.u_lap_dual(x, v, c);
+        (lap_u + u.sin()).du
     }
 }
 
@@ -197,6 +273,42 @@ mod tests {
                 / (2.0 * h as f64);
         }
         assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "{got} vs {want}");
+    }
+
+    /// The dual-number `forcing_dir` overrides must agree with the old
+    /// 2-eval central-difference stencil of the closed-form forcing —
+    /// the stencil's ~h² truncation is the only expected discrepancy.
+    #[test]
+    fn closed_form_forcing_dir_matches_stencil() {
+        let h = 1e-3f32;
+        for d in [2usize, 5, 9] {
+            let (x, c) = random_point_and_coeff(d, d - 1, 70 + d as u64);
+            let v: Vec<f32> =
+                (0..d).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+            let pde = SineGordon2Body::new(d);
+            let got = pde.forcing_dir(&x, &v, &c);
+            let xp: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a + h * b).collect();
+            let xm: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a - h * b).collect();
+            let want = (pde.forcing(&xp, &c) - pde.forcing(&xm, &c)) / (2.0 * h as f64);
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "sg2 d={d}: {got} vs {want}"
+            );
+        }
+        for d in [3usize, 6, 10] {
+            let (x, c) = random_point_and_coeff(d, d - 2, 170 + d as u64);
+            let v: Vec<f32> =
+                (0..d).map(|i| if i % 3 == 0 { -0.5 } else { 1.0 }).collect();
+            let pde = SineGordon3Body::new(d);
+            let got = pde.forcing_dir(&x, &v, &c);
+            let xp: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a + h * b).collect();
+            let xm: Vec<f32> = x.iter().zip(&v).map(|(&a, &b)| a - h * b).collect();
+            let want = (pde.forcing(&xp, &c) - pde.forcing(&xm, &c)) / (2.0 * h as f64);
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "sg3 d={d}: {got} vs {want}"
+            );
+        }
     }
 
     #[test]

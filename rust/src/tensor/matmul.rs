@@ -19,11 +19,47 @@
 //!
 //! The `_acc` variants accumulate (`out +=`) so reverse-mode gradient
 //! contributions sum directly into pooled buffers without a temporary.
+//!
+//! Every public entry point dispatches on the cached
+//! [`super::simd::SimdLevel`]: with the `simd` cargo feature and a
+//! vector level detected, the body comes from `tensor::simd` (AVX2 /
+//! NEON, lanes across independent chains only, no FMA contraction —
+//! bitwise identical to the `_scalar` kernels below, which remain the
+//! reference implementation and the only code path of the default
+//! build).
+
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+use super::simd;
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+use super::simd::SimdLevel;
 
 const KC: usize = 256;
 
 /// out[m, n] += a[m, k] @ b[k, n]
 pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::simd_level() == SimdLevel::Avx2 {
+            // SAFETY: the Avx2 level is only installed after runtime
+            // detection succeeded.
+            unsafe { simd::matmul_acc_avx2(a, b, out, m, k, n) };
+            return;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        if simd::simd_level() == SimdLevel::Neon {
+            // SAFETY: NEON is part of the aarch64 baseline.
+            unsafe { simd::matmul_acc_neon(a, b, out, m, k, n) };
+            return;
+        }
+    }
+    matmul_acc_scalar(a, b, out, m, k, n)
+}
+
+/// Scalar reference body of [`matmul_acc`] (4-wide unrolled across
+/// independent chains; the bitwise ground truth for every SIMD level).
+pub fn matmul_acc_scalar(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -75,6 +111,35 @@ pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n:
 
 /// out[m, n] += a^T @ b with a: [rows, m], b: [rows, n] (weight gradients).
 pub fn matmul_tn_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, m: usize, n: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::simd_level() == SimdLevel::Avx2 {
+            // SAFETY: the Avx2 level is only installed after runtime
+            // detection succeeded.
+            unsafe { simd::matmul_tn_acc_avx2(a, b, out, rows, m, n) };
+            return;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        if simd::simd_level() == SimdLevel::Neon {
+            // SAFETY: NEON is part of the aarch64 baseline.
+            unsafe { simd::matmul_tn_acc_neon(a, b, out, rows, m, n) };
+            return;
+        }
+    }
+    matmul_tn_acc_scalar(a, b, out, rows, m, n)
+}
+
+/// Scalar reference body of [`matmul_tn_acc`].
+pub fn matmul_tn_acc_scalar(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+) {
     debug_assert_eq!(a.len(), rows * m);
     debug_assert_eq!(b.len(), rows * n);
     debug_assert_eq!(out.len(), m * n);
@@ -117,6 +182,29 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, m: usi
 
 /// out[m, n] += a @ b^T with a: [m, k], b: [n, k] (activation gradients).
 pub fn matmul_nt_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::simd_level() == SimdLevel::Avx2 {
+            // SAFETY: the Avx2 level is only installed after runtime
+            // detection succeeded.
+            unsafe { simd::matmul_nt_acc_avx2(a, b, out, m, k, n) };
+            return;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        if simd::simd_level() == SimdLevel::Neon {
+            // SAFETY: NEON is part of the aarch64 baseline.
+            unsafe { simd::matmul_nt_acc_neon(a, b, out, m, k, n) };
+            return;
+        }
+    }
+    matmul_nt_acc_scalar(a, b, out, m, k, n)
+}
+
+/// Scalar reference body of [`matmul_nt_acc`] (independent dot-product
+/// accumulators; each sums in plain k order, added to `out` once).
+pub fn matmul_nt_acc_scalar(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
@@ -235,9 +323,22 @@ mod tests {
     /// The unrolled microkernels must be *bitwise* equal to the scalar
     /// reference loops — the unroll may not reassociate any accumulation
     /// chain.  Shapes cover all unroll remainders (dims ≡ 0..3 mod 4)
-    /// and the KC blocking boundary.
+    /// and the KC blocking boundary.  Run through the public dispatchers
+    /// at both the forced-scalar and the detected SIMD level, so the
+    /// vector bodies are held to the same reference.
     #[test]
     fn microkernels_bitwise_match_scalar_reference() {
+        use crate::tensor::simd::{detect_simd_level, force_simd_level, simd_level_guard, SimdLevel};
+        let _guard = simd_level_guard();
+        let prior = crate::tensor::simd::simd_level();
+        for level in [SimdLevel::Scalar, detect_simd_level()] {
+            force_simd_level(level);
+            check_dispatch_matches_reference();
+        }
+        force_simd_level(prior);
+    }
+
+    fn check_dispatch_matches_reference() {
         let mut seed = 3u64;
         for (m, k, n) in [
             (1, 1, 1),

@@ -8,11 +8,14 @@
 
 mod matmul;
 mod pool;
+pub mod simd;
 
 pub use matmul::{
-    matmul_acc, matmul_into, matmul_nt_acc, matmul_nt_into, matmul_tn_acc, matmul_tn_into,
+    matmul_acc, matmul_acc_scalar, matmul_into, matmul_nt_acc, matmul_nt_acc_scalar,
+    matmul_nt_into, matmul_tn_acc, matmul_tn_acc_scalar, matmul_tn_into,
 };
 pub use pool::BufferPool;
+pub use simd::{detect_simd_level, force_simd_level, simd_level, simd_level_guard, SimdLevel};
 
 /// Row-major dense f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,1879 @@
+//! Runtime-dispatched SIMD layer for the native hot path.
+//!
+//! Everything the jet-stream pipeline spends time on — the six matmul
+//! variants and the tape's elementwise executors (broadcast-row
+//! products, jet factor combinations, axpy-style adjoint accumulation)
+//! — funnels through the kernels in this module.  A [`SimdLevel`] is
+//! detected once at startup (`is_x86_feature_detected!("avx2")` on
+//! x86_64; NEON is part of the aarch64 baseline), overridable with
+//! `HTE_SIMD=scalar|avx2|neon` for testing, and every kernel picks its
+//! body off that level.  The vector bodies exist only under the `simd`
+//! cargo feature; the default build always resolves to the scalar
+//! reference.
+//!
+//! **The lane-independence rule** (DESIGN.md §9).  Every kernel here is
+//! **bitwise identical** to its scalar reference, because vector lanes
+//! are only ever laid across *independent* accumulation chains — output
+//! columns of a matmul row, elements of an elementwise map, columns of a
+//! per-group row reduction — never across the terms of a single chain.
+//! Within a lane the operation sequence is exactly the scalar sequence:
+//! explicit mul-then-add (`_mm256_mul_ps` + `_mm256_add_ps`, never a
+//! fused `fmadd`, whose single rounding would change the low bits), and
+//! the same expression association as the scalar code.  That invariant
+//! is what lets the engine's 1/2/16-thread bitwise determinism survive
+//! vectorization, and it is enforced by the `to_bits` property tests
+//! below and the `rows_simd` gate of `benches/perf_breakdown.rs`.
+//!
+//! Transcendentals stay scalar libm: `tanh`, `sin` and `cos` values are
+//! byte-for-byte those of the scalar engine, so only polynomial factor
+//! combinations are vectorized.
+//!
+//! Layout note: kernels take raw `[rows*c]` slices with an explicit
+//! `group` so the primal-stream factors (shape `[n, c]`) can be
+//! broadcast by row index `p = r / group` against `[n*group, c]`
+//! derivative streams without materializing them — the same convention
+//! as the fused tanh-jet tape ops they serve.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The instruction set the dispatched kernels run with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Reference implementation; always available.
+    Scalar,
+    /// 8-lane f32 via `std::arch::x86_64` (requires the `simd` feature
+    /// and a runtime `avx2` detection hit).
+    Avx2,
+    /// 4-lane f32 via `std::arch::aarch64` (requires the `simd` feature;
+    /// NEON is part of the aarch64 baseline, so no runtime probe).
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Whether this level actually vectorizes (the perf gates exempt the
+    /// scalar fallback).
+    pub fn is_vector(self) -> bool {
+        !matches!(self, SimdLevel::Scalar)
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Avx2 => 2,
+            SimdLevel::Neon => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> Self {
+        match code {
+            2 => SimdLevel::Avx2,
+            3 => SimdLevel::Neon,
+            _ => SimdLevel::Scalar,
+        }
+    }
+}
+
+/// 0 = uninitialized; otherwise a `SimdLevel::code`.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// The best level this build + host supports, ignoring `HTE_SIMD`.
+#[allow(unreachable_code)]
+pub fn detect_simd_level() -> SimdLevel {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        return SimdLevel::Neon;
+    }
+    SimdLevel::Scalar
+}
+
+/// Resolve an `HTE_SIMD` override against what is actually available:
+/// a level the build/host cannot run falls back to the detected one.
+fn level_from_env(var: Option<&str>, detected: SimdLevel) -> SimdLevel {
+    match var {
+        Some("scalar") => SimdLevel::Scalar,
+        Some("avx2") if detected == SimdLevel::Avx2 => SimdLevel::Avx2,
+        Some("neon") if detected == SimdLevel::Neon => SimdLevel::Neon,
+        Some(other) => {
+            eprintln!(
+                "HTE_SIMD={other:?} is not available in this build/host \
+                 (detected: {}); using the detected level",
+                detected.name()
+            );
+            detected
+        }
+        None => detected,
+    }
+}
+
+/// The level every kernel dispatches on.  Detected once (honoring
+/// `HTE_SIMD`) and cached; [`force_simd_level`] replaces the cache.
+pub fn simd_level() -> SimdLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => {
+            let env = std::env::var("HTE_SIMD").ok();
+            let level = level_from_env(env.as_deref(), detect_simd_level());
+            LEVEL.store(level.code(), Ordering::Relaxed);
+            level
+        }
+        code => SimdLevel::from_code(code),
+    }
+}
+
+/// Install a dispatch level (the programmatic equivalent of `HTE_SIMD`,
+/// for the property tests and the simd-vs-scalar bench rows).  Requests
+/// the build/host cannot satisfy degrade to `Scalar`; the level actually
+/// installed is returned.  Because every level produces bitwise
+/// identical results, flipping this mid-run never changes any output —
+/// but tests that *time or compare* levels should serialize through
+/// [`simd_level_guard`].
+pub fn force_simd_level(level: SimdLevel) -> SimdLevel {
+    let applied = match level {
+        SimdLevel::Scalar => SimdLevel::Scalar,
+        requested => {
+            if detect_simd_level() == requested {
+                requested
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+    };
+    LEVEL.store(applied.code(), Ordering::Relaxed);
+    applied
+}
+
+/// Serializes tests/benches that flip the dispatch level with
+/// [`force_simd_level`] (poisoning is ignored: the guarded state is a
+/// single atomic).
+pub fn simd_level_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Lane abstraction: every kernel body is written once, generically
+// ---------------------------------------------------------------------------
+
+/// A register of `N` f32 lanes.  The `f32` impl (N = 1) *is* the scalar
+/// reference; the vector impls must perform the identical operation
+/// sequence per lane (plain mul/add/sub — no FMA contraction).
+///
+/// All methods are `unsafe` for uniformity with the `std::arch`
+/// intrinsics they wrap; `ld`/`st` additionally require `p` valid for
+/// `N` f32 reads/writes.
+trait Lanes: Copy {
+    const N: usize;
+    unsafe fn ld(p: *const f32) -> Self;
+    unsafe fn st(self, p: *mut f32);
+    unsafe fn splat(v: f32) -> Self;
+    unsafe fn mul(self, o: Self) -> Self;
+    unsafe fn add(self, o: Self) -> Self;
+    unsafe fn sub(self, o: Self) -> Self;
+}
+
+impl Lanes for f32 {
+    const N: usize = 1;
+    #[inline(always)]
+    unsafe fn ld(p: *const f32) -> Self {
+        *p
+    }
+    #[inline(always)]
+    unsafe fn st(self, p: *mut f32) {
+        *p = self;
+    }
+    #[inline(always)]
+    unsafe fn splat(v: f32) -> Self {
+        v
+    }
+    #[inline(always)]
+    unsafe fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    #[inline(always)]
+    unsafe fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline(always)]
+    unsafe fn sub(self, o: Self) -> Self {
+        self - o
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod lanes_avx2 {
+    use super::Lanes;
+    use std::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+        _mm256_sub_ps,
+    };
+
+    /// 8 f32 lanes.  Deliberately no `_mm256_fmadd_ps` anywhere: fused
+    /// contraction rounds once where the scalar reference rounds twice.
+    #[derive(Clone, Copy)]
+    pub struct V8(__m256);
+
+    impl Lanes for V8 {
+        const N: usize = 8;
+        #[inline(always)]
+        unsafe fn ld(p: *const f32) -> Self {
+            V8(_mm256_loadu_ps(p))
+        }
+        #[inline(always)]
+        unsafe fn st(self, p: *mut f32) {
+            _mm256_storeu_ps(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            V8(_mm256_set1_ps(v))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            V8(_mm256_mul_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            V8(_mm256_add_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, o: Self) -> Self {
+            V8(_mm256_sub_ps(self.0, o.0))
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use lanes_avx2::V8;
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod lanes_neon {
+    use super::Lanes;
+    use std::arch::aarch64::{
+        float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32, vsubq_f32,
+    };
+
+    /// 4 f32 lanes.  No `vfmaq_f32`: same no-contraction rule as AVX2.
+    #[derive(Clone, Copy)]
+    pub struct V4(float32x4_t);
+
+    impl Lanes for V4 {
+        const N: usize = 4;
+        #[inline(always)]
+        unsafe fn ld(p: *const f32) -> Self {
+            V4(vld1q_f32(p))
+        }
+        #[inline(always)]
+        unsafe fn st(self, p: *mut f32) {
+            vst1q_f32(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            V4(vdupq_n_f32(v))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            V4(vmulq_f32(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            V4(vaddq_f32(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, o: Self) -> Self {
+            V4(vsubq_f32(self.0, o.0))
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+use lanes_neon::V4;
+
+/// Stamp out the public dispatcher for a generic kernel body: AVX2 /
+/// NEON when the detected level says so (the `simd` feature compiled the
+/// bodies in), the f32 lane instantiation — the scalar reference —
+/// otherwise.
+macro_rules! dispatch_kernel {
+    ($(#[$meta:meta])* $name:ident => $body:ident ( $($arg:ident : $ty:ty),* $(,)? )) => {
+        $(#[$meta])*
+        #[allow(clippy::too_many_arguments)]
+        pub fn $name($($arg: $ty),*) {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                if simd_level() == SimdLevel::Avx2 {
+                    #[target_feature(enable = "avx2")]
+                    #[allow(clippy::too_many_arguments)]
+                    unsafe fn vector($($arg: $ty),*) {
+                        $body::<V8>($($arg),*)
+                    }
+                    // SAFETY: the Avx2 level is only ever installed after
+                    // `is_x86_feature_detected!("avx2")` succeeded.
+                    unsafe { vector($($arg),*) };
+                    return;
+                }
+            }
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            {
+                if simd_level() == SimdLevel::Neon {
+                    // SAFETY: NEON is part of the aarch64 baseline.
+                    unsafe { $body::<V4>($($arg),*) };
+                    return;
+                }
+            }
+            // SAFETY: the f32 lane impl is plain scalar arithmetic over
+            // in-bounds indices (the bodies debug_assert the lengths).
+            unsafe { $body::<f32>($($arg),*) }
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// tanh factor expressions (shared by the vector main loops and the
+// scalar remainder lanes — one source of truth per formula)
+// ---------------------------------------------------------------------------
+
+/// f1 = 1 − t².
+#[inline(always)]
+unsafe fn f1_of<L: Lanes>(t: L) -> L {
+    L::splat(1.0).sub(t.mul(t))
+}
+
+/// f2 = −2·t·f1.
+#[inline(always)]
+unsafe fn f2_of<L: Lanes>(t: L, f1: L) -> L {
+    L::splat(-2.0).mul(t).mul(f1)
+}
+
+/// f3 = f1·(6·t·t − 2).
+#[inline(always)]
+unsafe fn f3_of<L: Lanes>(t: L, f1: L) -> L {
+    f1.mul(L::splat(6.0).mul(t).mul(t).sub(L::splat(2.0)))
+}
+
+/// f4 = f1·(16·t − 24·t·t·t).
+#[inline(always)]
+unsafe fn f4_of<L: Lanes>(t: L, f1: L) -> L {
+    f1.mul(L::splat(16.0).mul(t).sub(L::splat(24.0).mul(t).mul(t).mul(t)))
+}
+
+/// f1' = −2·t.
+#[inline(always)]
+unsafe fn f1p_of<L: Lanes>(t: L) -> L {
+    L::splat(-2.0).mul(t)
+}
+
+/// f2' = 6·t² − 2.
+#[inline(always)]
+unsafe fn f2p_of<L: Lanes>(t2: L) -> L {
+    L::splat(6.0).mul(t2).sub(L::splat(2.0))
+}
+
+/// f3' = 16·t − 24·t²·t.
+#[inline(always)]
+unsafe fn f3p_of<L: Lanes>(t: L, t2: L) -> L {
+    L::splat(16.0).mul(t).sub(L::splat(24.0).mul(t2).mul(t))
+}
+
+/// f4' = 120·t²·t² − 120·t² + 16.
+#[inline(always)]
+unsafe fn f4p_of<L: Lanes>(t2: L) -> L {
+    L::splat(120.0)
+        .mul(t2)
+        .mul(t2)
+        .sub(L::splat(120.0).mul(t2))
+        .add(L::splat(16.0))
+}
+
+// ---------------------------------------------------------------------------
+// Flat axpy-style kernels (adjoint accumulation)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+unsafe fn acc_add_body<L: Lanes>(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let op = out.as_mut_ptr();
+    let xp = x.as_ptr();
+    let mut j = 0;
+    while j + L::N <= n {
+        L::ld(op.add(j)).add(L::ld(xp.add(j))).st(op.add(j));
+        j += L::N;
+    }
+    while j < n {
+        *op.add(j) += *xp.add(j);
+        j += 1;
+    }
+}
+
+dispatch_kernel! {
+    /// out += x.
+    acc_add => acc_add_body(out: &mut [f32], x: &[f32])
+}
+
+#[inline(always)]
+unsafe fn acc_sub_body<L: Lanes>(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let op = out.as_mut_ptr();
+    let xp = x.as_ptr();
+    let mut j = 0;
+    while j + L::N <= n {
+        L::ld(op.add(j)).sub(L::ld(xp.add(j))).st(op.add(j));
+        j += L::N;
+    }
+    while j < n {
+        *op.add(j) -= *xp.add(j);
+        j += 1;
+    }
+}
+
+dispatch_kernel! {
+    /// out -= x.
+    acc_sub => acc_sub_body(out: &mut [f32], x: &[f32])
+}
+
+#[inline(always)]
+unsafe fn acc_scaled_body<L: Lanes>(out: &mut [f32], x: &[f32], alpha: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len();
+    let op = out.as_mut_ptr();
+    let xp = x.as_ptr();
+    let va = L::splat(alpha);
+    let mut j = 0;
+    while j + L::N <= n {
+        L::ld(op.add(j)).add(va.mul(L::ld(xp.add(j)))).st(op.add(j));
+        j += L::N;
+    }
+    while j < n {
+        *op.add(j) += alpha * *xp.add(j);
+        j += 1;
+    }
+}
+
+dispatch_kernel! {
+    /// out += alpha·x.
+    acc_scaled => acc_scaled_body(out: &mut [f32], x: &[f32], alpha: f32)
+}
+
+#[inline(always)]
+unsafe fn acc_mul_body<L: Lanes>(out: &mut [f32], g: &[f32], y: &[f32]) {
+    debug_assert_eq!(out.len(), g.len());
+    debug_assert_eq!(out.len(), y.len());
+    let n = out.len();
+    let op = out.as_mut_ptr();
+    let gp = g.as_ptr();
+    let yp = y.as_ptr();
+    let mut j = 0;
+    while j + L::N <= n {
+        L::ld(op.add(j))
+            .add(L::ld(gp.add(j)).mul(L::ld(yp.add(j))))
+            .st(op.add(j));
+        j += L::N;
+    }
+    while j < n {
+        *op.add(j) += *gp.add(j) * *yp.add(j);
+        j += 1;
+    }
+}
+
+dispatch_kernel! {
+    /// out += g ⊙ y (the product-rule adjoint).
+    acc_mul => acc_mul_body(out: &mut [f32], g: &[f32], y: &[f32])
+}
+
+#[inline(always)]
+unsafe fn acc_splat_body<L: Lanes>(out: &mut [f32], v: f32) {
+    let n = out.len();
+    let op = out.as_mut_ptr();
+    let vv = L::splat(v);
+    let mut j = 0;
+    while j + L::N <= n {
+        L::ld(op.add(j)).add(vv).st(op.add(j));
+        j += L::N;
+    }
+    while j < n {
+        *op.add(j) += v;
+        j += 1;
+    }
+}
+
+dispatch_kernel! {
+    /// out += v (broadcast constant; the mean/sum adjoints).
+    acc_splat => acc_splat_body(out: &mut [f32], v: f32)
+}
+
+#[inline(always)]
+unsafe fn add_rows_body<L: Lanes>(out: &mut [f32], a: &[f32], bias: &[f32], c: usize) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(bias.len(), c);
+    let rows = if c == 0 { 0 } else { out.len() / c };
+    let bp = bias.as_ptr();
+    for r in 0..rows {
+        let op = out.as_mut_ptr().add(r * c);
+        let ap = a.as_ptr().add(r * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(ap.add(j)).add(L::ld(bp.add(j))).st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) = *ap.add(j) + *bp.add(j);
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// out[r, ·] = a[r, ·] + bias (row-broadcast bias add, forward).
+    add_rows => add_rows_body(out: &mut [f32], a: &[f32], bias: &[f32], c: usize)
+}
+
+#[inline(always)]
+unsafe fn broadcast_rows_bwd_body<L: Lanes>(ga: &mut [f32], g: &[f32], group: usize, c: usize) {
+    debug_assert_eq!(g.len(), ga.len() * group);
+    let rows = if c == 0 { 0 } else { g.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = ga.as_mut_ptr().add(p * c);
+        let gp = g.as_ptr().add(r * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j)).add(L::ld(gp.add(j))).st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += *gp.add(j);
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// ga[p, ·] += Σ over the group's g rows, in ascending row order
+    /// (the `broadcast_rows` adjoint — each column is an independent
+    /// chain, the r-order of the per-column sums is preserved).
+    broadcast_rows_bwd => broadcast_rows_bwd_body(ga: &mut [f32], g: &[f32], group: usize, c: usize)
+}
+
+// ---------------------------------------------------------------------------
+// Fused tanh-jet forward kernels (factor combinations, t0 broadcast by
+// row index p = r / group)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+unsafe fn o1_expr<L: Lanes>(t: L, z1: L) -> L {
+    f1_of(t).mul(z1)
+}
+
+#[inline(always)]
+unsafe fn jet_o1_fwd_body<L: Lanes>(o: &mut [f32], t0: &[f32], z1: &[f32], group: usize, c: usize) {
+    debug_assert_eq!(o.len(), z1.len());
+    debug_assert_eq!(o.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { o.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = o.as_mut_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            o1_expr::<L>(L::ld(tp.add(j)), L::ld(z1p.add(j))).st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) = o1_expr::<f32>(*tp.add(j), *z1p.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// o1 = f1 ⊙ z1 (order-1 tanh-jet stream).
+    jet_o1_fwd => jet_o1_fwd_body(o: &mut [f32], t0: &[f32], z1: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o2_expr<L: Lanes>(t: L, z1: L, z2: L) -> L {
+    let f1 = f1_of(t);
+    let f2 = f2_of(t, f1);
+    f2.mul(z1).mul(z1).add(f1.mul(z2))
+}
+
+#[inline(always)]
+unsafe fn jet_o2_fwd_body<L: Lanes>(
+    o: &mut [f32],
+    t0: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(o.len(), z1.len());
+    debug_assert_eq!(o.len(), z2.len());
+    debug_assert_eq!(o.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { o.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = o.as_mut_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            o2_expr::<L>(L::ld(tp.add(j)), L::ld(z1p.add(j)), L::ld(z2p.add(j))).st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) = o2_expr::<f32>(*tp.add(j), *z1p.add(j), *z2p.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// o2 = f2 ⊙ z1² + f1 ⊙ z2.
+    jet_o2_fwd => jet_o2_fwd_body(o: &mut [f32], t0: &[f32], z1: &[f32], z2: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o3_expr<L: Lanes>(t: L, z1: L, z2: L, z3: L) -> L {
+    let f1 = f1_of(t);
+    let f2 = f2_of(t, f1);
+    let f3 = f3_of(t, f1);
+    f3.mul(z1)
+        .mul(z1)
+        .mul(z1)
+        .add(L::splat(3.0).mul(f2).mul(z1).mul(z2))
+        .add(f1.mul(z3))
+}
+
+#[inline(always)]
+unsafe fn jet_o3_fwd_body<L: Lanes>(
+    o: &mut [f32],
+    t0: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    z3: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(o.len(), z1.len());
+    debug_assert_eq!(o.len(), z2.len());
+    debug_assert_eq!(o.len(), z3.len());
+    debug_assert_eq!(o.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { o.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = o.as_mut_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let z3p = z3.as_ptr().add(r * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            o3_expr::<L>(
+                L::ld(tp.add(j)),
+                L::ld(z1p.add(j)),
+                L::ld(z2p.add(j)),
+                L::ld(z3p.add(j)),
+            )
+            .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) = o3_expr::<f32>(*tp.add(j), *z1p.add(j), *z2p.add(j), *z3p.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// o3 = f3 ⊙ z1³ + 3 f2 ⊙ z1 z2 + f1 ⊙ z3.
+    jet_o3_fwd => jet_o3_fwd_body(o: &mut [f32], t0: &[f32], z1: &[f32], z2: &[f32], z3: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o4_expr<L: Lanes>(t: L, z1: L, z2: L, z3: L, z4: L) -> L {
+    let f1 = f1_of(t);
+    let f2 = f2_of(t, f1);
+    let f3 = f3_of(t, f1);
+    let f4 = f4_of(t, f1);
+    f4.mul(z1)
+        .mul(z1)
+        .mul(z1)
+        .mul(z1)
+        .add(L::splat(6.0).mul(f3).mul(z1).mul(z1).mul(z2))
+        .add(L::splat(3.0).mul(f2).mul(z2).mul(z2))
+        .add(L::splat(4.0).mul(f2).mul(z1).mul(z3))
+        .add(f1.mul(z4))
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn jet_o4_fwd_body<L: Lanes>(
+    o: &mut [f32],
+    t0: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    z3: &[f32],
+    z4: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(o.len(), z1.len());
+    debug_assert_eq!(o.len(), z2.len());
+    debug_assert_eq!(o.len(), z3.len());
+    debug_assert_eq!(o.len(), z4.len());
+    debug_assert_eq!(o.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { o.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = o.as_mut_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let z3p = z3.as_ptr().add(r * c);
+        let z4p = z4.as_ptr().add(r * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            o4_expr::<L>(
+                L::ld(tp.add(j)),
+                L::ld(z1p.add(j)),
+                L::ld(z2p.add(j)),
+                L::ld(z3p.add(j)),
+                L::ld(z4p.add(j)),
+            )
+            .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) =
+                o4_expr::<f32>(*tp.add(j), *z1p.add(j), *z2p.add(j), *z3p.add(j), *z4p.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// o4 = f4 ⊙ z1⁴ + 6 f3 ⊙ z1² z2 + 3 f2 ⊙ z2² + 4 f2 ⊙ z1 z3 + f1 ⊙ z4.
+    jet_o4_fwd => jet_o4_fwd_body(o: &mut [f32], t0: &[f32], z1: &[f32], z2: &[f32], z3: &[f32], z4: &[f32], group: usize, c: usize)
+}
+
+// ---------------------------------------------------------------------------
+// Fused tanh-jet backward kernels
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+unsafe fn f1_acc_expr<L: Lanes>(g: L, t: L) -> L {
+    g.mul(f1_of(t))
+}
+
+#[inline(always)]
+unsafe fn jet_f1_acc_body<L: Lanes>(
+    gz: &mut [f32],
+    g: &[f32],
+    t0: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(gz.len(), g.len());
+    debug_assert_eq!(gz.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { gz.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = gz.as_mut_ptr().add(r * c);
+        let gp = g.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(f1_acc_expr::<L>(L::ld(gp.add(j)), L::ld(tp.add(j))))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += f1_acc_expr::<f32>(*gp.add(j), *tp.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gz += g ⊙ bc(f1) — the z_k adjoint of the highest stream, and the
+    /// plain tanh adjoint (group = 1, t0 = saved tanh values).
+    jet_f1_acc => jet_f1_acc_body(gz: &mut [f32], g: &[f32], t0: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn f2z1_expr<L: Lanes>(g: L, z1: L, t: L, coeff: L) -> L {
+    let f1 = f1_of(t);
+    let f2 = f2_of(t, f1);
+    g.mul(coeff).mul(f2).mul(z1)
+}
+
+#[inline(always)]
+unsafe fn jet_f2z1_acc_body<L: Lanes>(
+    gz: &mut [f32],
+    g: &[f32],
+    z1: &[f32],
+    t0: &[f32],
+    coeff: f32,
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(gz.len(), g.len());
+    debug_assert_eq!(gz.len(), z1.len());
+    debug_assert_eq!(gz.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { gz.len() / c };
+    let vc = L::splat(coeff);
+    for r in 0..rows {
+        let p = r / group;
+        let op = gz.as_mut_ptr().add(r * c);
+        let gp = g.as_ptr().add(r * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(f2z1_expr::<L>(L::ld(gp.add(j)), L::ld(z1p.add(j)), L::ld(tp.add(j)), vc))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += f2z1_expr::<f32>(*gp.add(j), *z1p.add(j), *tp.add(j), coeff);
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gz += g·coeff·f2·z1 — the shared shape of the O2 z1 (coeff 2),
+    /// O3 z2 (coeff 3) and O4 z3 (coeff 4) adjoints.
+    jet_f2z1_acc => jet_f2z1_acc_body(gz: &mut [f32], g: &[f32], z1: &[f32], t0: &[f32], coeff: f32, group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o1_t0_expr<L: Lanes>(g: L, z1: L, t: L) -> L {
+    g.mul(z1).mul(L::splat(-2.0).mul(t))
+}
+
+#[inline(always)]
+unsafe fn jet_o1_bwd_t0_body<L: Lanes>(
+    gt0: &mut [f32],
+    g: &[f32],
+    z1: &[f32],
+    t0: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(g.len(), z1.len());
+    debug_assert_eq!(g.len(), gt0.len() * group);
+    debug_assert_eq!(gt0.len(), t0.len());
+    let rows = if c == 0 { 0 } else { g.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = gt0.as_mut_ptr().add(p * c);
+        let gp = g.as_ptr().add(r * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(o1_t0_expr::<L>(L::ld(gp.add(j)), L::ld(z1p.add(j)), L::ld(tp.add(j))))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += o1_t0_expr::<f32>(*gp.add(j), *z1p.add(j), *tp.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gt0[p] += g·z1·(−2t) group-summed in ascending row order
+    /// (columns are independent chains; the r-order per column matches
+    /// the scalar reference).
+    jet_o1_bwd_t0 => jet_o1_bwd_t0_body(gt0: &mut [f32], g: &[f32], z1: &[f32], t0: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o2_t0_expr<L: Lanes>(g: L, z1: L, z2: L, t: L) -> L {
+    let a = L::splat(6.0)
+        .mul(t)
+        .mul(t)
+        .sub(L::splat(2.0))
+        .mul(z1)
+        .mul(z1);
+    let b = L::splat(2.0).mul(t).mul(z2);
+    g.mul(a.sub(b))
+}
+
+#[inline(always)]
+unsafe fn jet_o2_bwd_t0_body<L: Lanes>(
+    gt0: &mut [f32],
+    g: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    t0: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(g.len(), z1.len());
+    debug_assert_eq!(g.len(), z2.len());
+    debug_assert_eq!(g.len(), gt0.len() * group);
+    let rows = if c == 0 { 0 } else { g.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = gt0.as_mut_ptr().add(p * c);
+        let gp = g.as_ptr().add(r * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(o2_t0_expr::<L>(
+                    L::ld(gp.add(j)),
+                    L::ld(z1p.add(j)),
+                    L::ld(z2p.add(j)),
+                    L::ld(tp.add(j)),
+                ))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += o2_t0_expr::<f32>(*gp.add(j), *z1p.add(j), *z2p.add(j), *tp.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gt0[p] += g·((6t²−2)·z1² − 2t·z2), group-summed in row order.
+    jet_o2_bwd_t0 => jet_o2_bwd_t0_body(gt0: &mut [f32], g: &[f32], z1: &[f32], z2: &[f32], t0: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o3_z1_expr<L: Lanes>(g: L, z1: L, z2: L, t: L) -> L {
+    let f1 = f1_of(t);
+    let f2 = f2_of(t, f1);
+    let f3 = f3_of(t, f1);
+    g.mul(
+        L::splat(3.0)
+            .mul(f3)
+            .mul(z1)
+            .mul(z1)
+            .add(L::splat(3.0).mul(f2).mul(z2)),
+    )
+}
+
+#[inline(always)]
+unsafe fn jet_o3_bwd_z1_body<L: Lanes>(
+    gz1: &mut [f32],
+    g: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    t0: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(gz1.len(), g.len());
+    debug_assert_eq!(gz1.len(), z1.len());
+    debug_assert_eq!(gz1.len(), z2.len());
+    debug_assert_eq!(gz1.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { gz1.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = gz1.as_mut_ptr().add(r * c);
+        let gp = g.as_ptr().add(r * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(o3_z1_expr::<L>(
+                    L::ld(gp.add(j)),
+                    L::ld(z1p.add(j)),
+                    L::ld(z2p.add(j)),
+                    L::ld(tp.add(j)),
+                ))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += o3_z1_expr::<f32>(*gp.add(j), *z1p.add(j), *z2p.add(j), *tp.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gz1 += g·(3 f3 z1² + 3 f2 z2) (order-3 z1 adjoint).
+    jet_o3_bwd_z1 => jet_o3_bwd_z1_body(gz1: &mut [f32], g: &[f32], z1: &[f32], z2: &[f32], t0: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o3_t0_expr<L: Lanes>(g: L, z1: L, z2: L, z3: L, t: L) -> L {
+    let t2 = t.mul(t);
+    let f1p = f1p_of(t);
+    let f2p = f2p_of(t2);
+    let f3p = f3p_of(t, t2);
+    g.mul(
+        f3p.mul(z1)
+            .mul(z1)
+            .mul(z1)
+            .add(L::splat(3.0).mul(f2p).mul(z1).mul(z2))
+            .add(f1p.mul(z3)),
+    )
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn jet_o3_bwd_t0_body<L: Lanes>(
+    gt0: &mut [f32],
+    g: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    z3: &[f32],
+    t0: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(g.len(), z1.len());
+    debug_assert_eq!(g.len(), z2.len());
+    debug_assert_eq!(g.len(), z3.len());
+    debug_assert_eq!(g.len(), gt0.len() * group);
+    let rows = if c == 0 { 0 } else { g.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = gt0.as_mut_ptr().add(p * c);
+        let gp = g.as_ptr().add(r * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let z3p = z3.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(o3_t0_expr::<L>(
+                    L::ld(gp.add(j)),
+                    L::ld(z1p.add(j)),
+                    L::ld(z2p.add(j)),
+                    L::ld(z3p.add(j)),
+                    L::ld(tp.add(j)),
+                ))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += o3_t0_expr::<f32>(
+                *gp.add(j),
+                *z1p.add(j),
+                *z2p.add(j),
+                *z3p.add(j),
+                *tp.add(j),
+            );
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gt0[p] += g·(f3' z1³ + 3 f2' z1 z2 + f1' z3), group-summed in
+    /// row order.
+    jet_o3_bwd_t0 => jet_o3_bwd_t0_body(gt0: &mut [f32], g: &[f32], z1: &[f32], z2: &[f32], z3: &[f32], t0: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o4_z1_expr<L: Lanes>(g: L, z1: L, z2: L, z3: L, t: L) -> L {
+    let f1 = f1_of(t);
+    let f2 = f2_of(t, f1);
+    let f3 = f3_of(t, f1);
+    let f4 = f4_of(t, f1);
+    g.mul(
+        L::splat(4.0)
+            .mul(f4)
+            .mul(z1)
+            .mul(z1)
+            .mul(z1)
+            .add(L::splat(12.0).mul(f3).mul(z1).mul(z2))
+            .add(L::splat(4.0).mul(f2).mul(z3)),
+    )
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn jet_o4_bwd_z1_body<L: Lanes>(
+    gz1: &mut [f32],
+    g: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    z3: &[f32],
+    t0: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(gz1.len(), g.len());
+    debug_assert_eq!(gz1.len(), z1.len());
+    debug_assert_eq!(gz1.len(), z2.len());
+    debug_assert_eq!(gz1.len(), z3.len());
+    debug_assert_eq!(gz1.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { gz1.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = gz1.as_mut_ptr().add(r * c);
+        let gp = g.as_ptr().add(r * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let z3p = z3.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(o4_z1_expr::<L>(
+                    L::ld(gp.add(j)),
+                    L::ld(z1p.add(j)),
+                    L::ld(z2p.add(j)),
+                    L::ld(z3p.add(j)),
+                    L::ld(tp.add(j)),
+                ))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += o4_z1_expr::<f32>(
+                *gp.add(j),
+                *z1p.add(j),
+                *z2p.add(j),
+                *z3p.add(j),
+                *tp.add(j),
+            );
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gz1 += g·(4 f4 z1³ + 12 f3 z1 z2 + 4 f2 z3) (order-4 z1 adjoint).
+    jet_o4_bwd_z1 => jet_o4_bwd_z1_body(gz1: &mut [f32], g: &[f32], z1: &[f32], z2: &[f32], z3: &[f32], t0: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o4_z2_expr<L: Lanes>(g: L, z1: L, z2: L, t: L) -> L {
+    let f1 = f1_of(t);
+    let f2 = f2_of(t, f1);
+    let f3 = f3_of(t, f1);
+    g.mul(
+        L::splat(6.0)
+            .mul(f3)
+            .mul(z1)
+            .mul(z1)
+            .add(L::splat(6.0).mul(f2).mul(z2)),
+    )
+}
+
+#[inline(always)]
+unsafe fn jet_o4_bwd_z2_body<L: Lanes>(
+    gz2: &mut [f32],
+    g: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    t0: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(gz2.len(), g.len());
+    debug_assert_eq!(gz2.len(), z1.len());
+    debug_assert_eq!(gz2.len(), z2.len());
+    debug_assert_eq!(gz2.len(), t0.len() * group);
+    let rows = if c == 0 { 0 } else { gz2.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = gz2.as_mut_ptr().add(r * c);
+        let gp = g.as_ptr().add(r * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(o4_z2_expr::<L>(
+                    L::ld(gp.add(j)),
+                    L::ld(z1p.add(j)),
+                    L::ld(z2p.add(j)),
+                    L::ld(tp.add(j)),
+                ))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += o4_z2_expr::<f32>(*gp.add(j), *z1p.add(j), *z2p.add(j), *tp.add(j));
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gz2 += g·(6 f3 z1² + 6 f2 z2) (order-4 z2 adjoint).
+    jet_o4_bwd_z2 => jet_o4_bwd_z2_body(gz2: &mut [f32], g: &[f32], z1: &[f32], z2: &[f32], t0: &[f32], group: usize, c: usize)
+}
+
+#[inline(always)]
+unsafe fn o4_t0_expr<L: Lanes>(g: L, z1: L, z2: L, z3: L, z4: L, t: L) -> L {
+    let t2 = t.mul(t);
+    let f1p = f1p_of(t);
+    let f2p = f2p_of(t2);
+    let f3p = f3p_of(t, t2);
+    let f4p = f4p_of(t2);
+    g.mul(
+        f4p.mul(z1)
+            .mul(z1)
+            .mul(z1)
+            .mul(z1)
+            .add(L::splat(6.0).mul(f3p).mul(z1).mul(z1).mul(z2))
+            .add(L::splat(3.0).mul(f2p).mul(z2).mul(z2))
+            .add(L::splat(4.0).mul(f2p).mul(z1).mul(z3))
+            .add(f1p.mul(z4)),
+    )
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn jet_o4_bwd_t0_body<L: Lanes>(
+    gt0: &mut [f32],
+    g: &[f32],
+    z1: &[f32],
+    z2: &[f32],
+    z3: &[f32],
+    z4: &[f32],
+    t0: &[f32],
+    group: usize,
+    c: usize,
+) {
+    debug_assert_eq!(g.len(), z1.len());
+    debug_assert_eq!(g.len(), z2.len());
+    debug_assert_eq!(g.len(), z3.len());
+    debug_assert_eq!(g.len(), z4.len());
+    debug_assert_eq!(g.len(), gt0.len() * group);
+    let rows = if c == 0 { 0 } else { g.len() / c };
+    for r in 0..rows {
+        let p = r / group;
+        let op = gt0.as_mut_ptr().add(p * c);
+        let gp = g.as_ptr().add(r * c);
+        let z1p = z1.as_ptr().add(r * c);
+        let z2p = z2.as_ptr().add(r * c);
+        let z3p = z3.as_ptr().add(r * c);
+        let z4p = z4.as_ptr().add(r * c);
+        let tp = t0.as_ptr().add(p * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j))
+                .add(o4_t0_expr::<L>(
+                    L::ld(gp.add(j)),
+                    L::ld(z1p.add(j)),
+                    L::ld(z2p.add(j)),
+                    L::ld(z3p.add(j)),
+                    L::ld(z4p.add(j)),
+                    L::ld(tp.add(j)),
+                ))
+                .st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += o4_t0_expr::<f32>(
+                *gp.add(j),
+                *z1p.add(j),
+                *z2p.add(j),
+                *z3p.add(j),
+                *z4p.add(j),
+                *tp.add(j),
+            );
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// gt0[p] += g·(f4' z1⁴ + 6 f3' z1² z2 + 3 f2' z2² + 4 f2' z1 z3 +
+    /// f1' z4), group-summed in row order.
+    jet_o4_bwd_t0 => jet_o4_bwd_t0_body(gt0: &mut [f32], g: &[f32], z1: &[f32], z2: &[f32], z3: &[f32], z4: &[f32], t0: &[f32], group: usize, c: usize)
+}
+
+// ---------------------------------------------------------------------------
+// Matmul bodies (generic over lanes; dispatched from tensor::matmul).
+// Unlike the elementwise kernels above these are compiled only for the
+// simd feature: the default build's matmul path is the hand-written
+// scalar reference in `tensor::matmul` (whose slice iterators are the
+// autovectorization-friendly shape the §8 gates were tuned on), so
+// these bodies would otherwise be dead code under `-D warnings`.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+const KC: usize = 256;
+
+/// out[m, n] += a[m, k] @ b[k, n] — lane-parallel across output columns,
+/// 4 k-terms per pass over the output row; each output element's chain
+/// is the scalar one (o + a0·b0 + a1·b1 + a2·b2 + a3·b3 in t order).
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline(always)]
+unsafe fn matmul_acc_lanes<L: Lanes>(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for i in 0..m {
+            let arow = a.as_ptr().add(i * k + k0);
+            let op = out.as_mut_ptr().add(i * n);
+            let mut t = 0;
+            while t + 4 <= kb {
+                let a0 = *arow.add(t);
+                let a1 = *arow.add(t + 1);
+                let a2 = *arow.add(t + 2);
+                let a3 = *arow.add(t + 3);
+                let b0 = b.as_ptr().add((k0 + t) * n);
+                let b1 = b.as_ptr().add((k0 + t + 1) * n);
+                let b2 = b.as_ptr().add((k0 + t + 2) * n);
+                let b3 = b.as_ptr().add((k0 + t + 3) * n);
+                let va0 = L::splat(a0);
+                let va1 = L::splat(a1);
+                let va2 = L::splat(a2);
+                let va3 = L::splat(a3);
+                let mut j = 0;
+                while j + L::N <= n {
+                    let mut acc = L::ld(op.add(j));
+                    acc = acc.add(va0.mul(L::ld(b0.add(j))));
+                    acc = acc.add(va1.mul(L::ld(b1.add(j))));
+                    acc = acc.add(va2.mul(L::ld(b2.add(j))));
+                    acc = acc.add(va3.mul(L::ld(b3.add(j))));
+                    acc.st(op.add(j));
+                    j += L::N;
+                }
+                while j < n {
+                    let mut acc = *op.add(j);
+                    acc += a0 * *b0.add(j);
+                    acc += a1 * *b1.add(j);
+                    acc += a2 * *b2.add(j);
+                    acc += a3 * *b3.add(j);
+                    *op.add(j) = acc;
+                    j += 1;
+                }
+                t += 4;
+            }
+            while t < kb {
+                let av = *arow.add(t);
+                let vav = L::splat(av);
+                let bp = b.as_ptr().add((k0 + t) * n);
+                let mut j = 0;
+                while j + L::N <= n {
+                    L::ld(op.add(j)).add(vav.mul(L::ld(bp.add(j)))).st(op.add(j));
+                    j += L::N;
+                }
+                while j < n {
+                    *op.add(j) += av * *bp.add(j);
+                    j += 1;
+                }
+                t += 1;
+            }
+        }
+        k0 += kb;
+    }
+}
+
+/// out[m, n] += a^T @ b with a: [rows, m], b: [rows, n] — lane-parallel
+/// across the B row, 4 output rows per pass; per-element chains stay in
+/// t (row) order.
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline(always)]
+unsafe fn matmul_tn_lanes<L: Lanes>(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), rows * m);
+    debug_assert_eq!(b.len(), rows * n);
+    debug_assert_eq!(out.len(), m * n);
+    for t in 0..rows {
+        let arow = a.as_ptr().add(t * m);
+        let brow = b.as_ptr().add(t * n);
+        let mut i = 0;
+        while i + 4 <= m {
+            let va0 = L::splat(*arow.add(i));
+            let va1 = L::splat(*arow.add(i + 1));
+            let va2 = L::splat(*arow.add(i + 2));
+            let va3 = L::splat(*arow.add(i + 3));
+            let r0 = out.as_mut_ptr().add(i * n);
+            let r1 = out.as_mut_ptr().add((i + 1) * n);
+            let r2 = out.as_mut_ptr().add((i + 2) * n);
+            let r3 = out.as_mut_ptr().add((i + 3) * n);
+            let mut j = 0;
+            while j + L::N <= n {
+                let bv = L::ld(brow.add(j));
+                L::ld(r0.add(j)).add(va0.mul(bv)).st(r0.add(j));
+                L::ld(r1.add(j)).add(va1.mul(bv)).st(r1.add(j));
+                L::ld(r2.add(j)).add(va2.mul(bv)).st(r2.add(j));
+                L::ld(r3.add(j)).add(va3.mul(bv)).st(r3.add(j));
+                j += L::N;
+            }
+            while j < n {
+                let bv = *brow.add(j);
+                *r0.add(j) += *arow.add(i) * bv;
+                *r1.add(j) += *arow.add(i + 1) * bv;
+                *r2.add(j) += *arow.add(i + 2) * bv;
+                *r3.add(j) += *arow.add(i + 3) * bv;
+                j += 1;
+            }
+            i += 4;
+        }
+        while i < m {
+            let av = *arow.add(i);
+            let vav = L::splat(av);
+            let orow = out.as_mut_ptr().add(i * n);
+            let mut j = 0;
+            while j + L::N <= n {
+                L::ld(orow.add(j)).add(vav.mul(L::ld(brow.add(j)))).st(orow.add(j));
+                j += L::N;
+            }
+            while j < n {
+                *orow.add(j) += av * *brow.add(j);
+                j += 1;
+            }
+            i += 1;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+std::thread_local! {
+    /// Per-thread transpose panel for the NT kernel ([k, L::N] at most);
+    /// grows once and is reused, so steady-state steps stay
+    /// allocation-free (each engine worker owns its own).
+    static NT_PANEL: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// out[m, n] += a @ b^T with a: [m, k], b: [n, k] — a block of lane-many
+/// b rows is transposed into a contiguous [k, N] panel so each lane owns
+/// one output column's dot chain, accumulated in plain t order and added
+/// to `out` exactly once (the scalar reference's rounding).
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline(always)]
+unsafe fn matmul_nt_lanes<L: Lanes>(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    NT_PANEL.with(|cell| {
+        let mut panel = cell.borrow_mut();
+        panel.clear();
+        panel.resize(k * L::N, 0.0);
+        // SAFETY: indices stay inside the debug_asserted slice shapes
+        // (the closure body is a fresh safety context inside this
+        // unsafe fn).
+        unsafe {
+            let mut j0 = 0;
+            while j0 + L::N <= n {
+                for l in 0..L::N {
+                    let brow = b.as_ptr().add((j0 + l) * k);
+                    for t in 0..k {
+                        *panel.as_mut_ptr().add(t * L::N + l) = *brow.add(t);
+                    }
+                }
+                let pp = panel.as_ptr();
+                for i in 0..m {
+                    let arow = a.as_ptr().add(i * k);
+                    let mut acc = L::splat(0.0);
+                    for t in 0..k {
+                        acc = acc.add(L::splat(*arow.add(t)).mul(L::ld(pp.add(t * L::N))));
+                    }
+                    let op = out.as_mut_ptr().add(i * n + j0);
+                    L::ld(op).add(acc).st(op);
+                }
+                j0 += L::N;
+            }
+            for j in j0..n {
+                let brow = b.as_ptr().add(j * k);
+                for i in 0..m {
+                    let arow = a.as_ptr().add(i * k);
+                    let mut acc = 0.0f32;
+                    for t in 0..k {
+                        acc += *arow.add(t) * *brow.add(t);
+                    }
+                    *out.as_mut_ptr().add(i * n + j) += acc;
+                }
+            }
+        }
+    });
+}
+
+// The matmul entry points live in `tensor::matmul`; these wrappers give
+// them (and the property tests) monomorphized vector bodies to dispatch
+// to.
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod matmul_avx2 {
+    use super::{matmul_acc_lanes, matmul_nt_lanes, matmul_tn_lanes, V8};
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (the `Avx2` dispatch level).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        matmul_acc_lanes::<V8>(a, b, out, m, k, n)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (the `Avx2` dispatch level).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_tn_acc(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        rows: usize,
+        m: usize,
+        n: usize,
+    ) {
+        matmul_tn_lanes::<V8>(a, b, out, rows, m, n)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (the `Avx2` dispatch level).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_nt_acc(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        matmul_nt_lanes::<V8>(a, b, out, m, k, n)
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub use matmul_avx2::{
+    matmul_acc as matmul_acc_avx2, matmul_nt_acc as matmul_nt_acc_avx2,
+    matmul_tn_acc as matmul_tn_acc_avx2,
+};
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod matmul_neon {
+    use super::{matmul_acc_lanes, matmul_nt_lanes, matmul_tn_lanes, V4};
+
+    /// # Safety
+    /// NEON is part of the aarch64 baseline; the pointer/length contracts
+    /// are the `debug_assert`ed slice shapes.
+    pub unsafe fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        matmul_acc_lanes::<V4>(a, b, out, m, k, n)
+    }
+
+    /// # Safety
+    /// See [`matmul_acc`].
+    pub unsafe fn matmul_tn_acc(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        rows: usize,
+        m: usize,
+        n: usize,
+    ) {
+        matmul_tn_lanes::<V4>(a, b, out, rows, m, n)
+    }
+
+    /// # Safety
+    /// See [`matmul_acc`].
+    pub unsafe fn matmul_nt_acc(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        matmul_nt_lanes::<V4>(a, b, out, m, k, n)
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+pub use matmul_neon::{
+    matmul_acc as matmul_acc_neon, matmul_nt_acc as matmul_nt_acc_neon,
+    matmul_tn_acc as matmul_tn_acc_neon,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(seed: &mut u64) -> f32 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    }
+
+    fn fill(seed: &mut u64, len: usize) -> Vec<f32> {
+        (0..len).map(|_| lcg(seed)).collect()
+    }
+
+    fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what} length");
+        for (idx, (x, y)) in got.iter().zip(want).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} elem {idx}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn level_env_override_resolution() {
+        let det = detect_simd_level();
+        assert_eq!(level_from_env(Some("scalar"), det), SimdLevel::Scalar);
+        assert_eq!(level_from_env(None, det), det);
+        // an unavailable level falls back to the detected one
+        assert_eq!(level_from_env(Some("nonsense"), det), det);
+        if det != SimdLevel::Avx2 {
+            assert_eq!(level_from_env(Some("avx2"), det), det);
+        } else {
+            assert_eq!(level_from_env(Some("avx2"), det), SimdLevel::Avx2);
+        }
+    }
+
+    #[test]
+    fn force_level_validates_against_host() {
+        let _guard = simd_level_guard();
+        let prior = simd_level();
+        assert_eq!(force_simd_level(SimdLevel::Scalar), SimdLevel::Scalar);
+        let det = detect_simd_level();
+        // forcing the detected level sticks; forcing the *other* vector
+        // level degrades to scalar
+        assert_eq!(force_simd_level(det), det);
+        let other = match det {
+            SimdLevel::Avx2 => SimdLevel::Neon,
+            _ => SimdLevel::Avx2,
+        };
+        assert_eq!(force_simd_level(other), SimdLevel::Scalar);
+        force_simd_level(prior);
+    }
+
+    /// Every elementwise kernel, dispatched at the forced vector level,
+    /// must be bitwise identical to its forced-scalar run — across
+    /// remainder-heavy shapes (c not a multiple of any lane width) and
+    /// group broadcasts.
+    #[test]
+    fn elementwise_kernels_bitwise_match_scalar_dispatch() {
+        let _guard = simd_level_guard();
+        let prior = simd_level();
+        let vector = detect_simd_level();
+        let mut seed = 9u64;
+        for (n, group, c) in [
+            (1, 1, 1),
+            (2, 3, 5),
+            (3, 2, 7),
+            (2, 4, 8),
+            (1, 5, 17),
+            (3, 3, 33),
+            (2, 2, 128),
+        ] {
+            let b = n * group;
+            let t0 = fill(&mut seed, n * c);
+            let g = fill(&mut seed, b * c);
+            let z1 = fill(&mut seed, b * c);
+            let z2 = fill(&mut seed, b * c);
+            let z3 = fill(&mut seed, b * c);
+            let z4 = fill(&mut seed, b * c);
+            let init = fill(&mut seed, b * c);
+            let init_n = fill(&mut seed, n * c);
+            let bias = fill(&mut seed, c);
+            let alpha = lcg(&mut seed);
+
+            // (name, closure writing its result into a fresh buffer)
+            type Kernel<'a> = (&'a str, Box<dyn Fn() -> Vec<f32> + 'a>);
+            let kernels: Vec<Kernel<'_>> = vec![
+                ("acc_add", Box::new(|| {
+                    let mut o = init.clone();
+                    acc_add(&mut o, &g);
+                    o
+                })),
+                ("acc_sub", Box::new(|| {
+                    let mut o = init.clone();
+                    acc_sub(&mut o, &g);
+                    o
+                })),
+                ("acc_scaled", Box::new(|| {
+                    let mut o = init.clone();
+                    acc_scaled(&mut o, &g, alpha);
+                    o
+                })),
+                ("acc_mul", Box::new(|| {
+                    let mut o = init.clone();
+                    acc_mul(&mut o, &g, &z1);
+                    o
+                })),
+                ("acc_splat", Box::new(|| {
+                    let mut o = init.clone();
+                    acc_splat(&mut o, alpha);
+                    o
+                })),
+                ("add_rows", Box::new(|| {
+                    let mut o = vec![0.0; b * c];
+                    add_rows(&mut o, &g, &bias, c);
+                    o
+                })),
+                ("broadcast_rows_bwd", Box::new(|| {
+                    let mut o = init_n.clone();
+                    broadcast_rows_bwd(&mut o, &g, group, c);
+                    o
+                })),
+                ("jet_o1_fwd", Box::new(|| {
+                    let mut o = vec![0.0; b * c];
+                    jet_o1_fwd(&mut o, &t0, &z1, group, c);
+                    o
+                })),
+                ("jet_o2_fwd", Box::new(|| {
+                    let mut o = vec![0.0; b * c];
+                    jet_o2_fwd(&mut o, &t0, &z1, &z2, group, c);
+                    o
+                })),
+                ("jet_o3_fwd", Box::new(|| {
+                    let mut o = vec![0.0; b * c];
+                    jet_o3_fwd(&mut o, &t0, &z1, &z2, &z3, group, c);
+                    o
+                })),
+                ("jet_o4_fwd", Box::new(|| {
+                    let mut o = vec![0.0; b * c];
+                    jet_o4_fwd(&mut o, &t0, &z1, &z2, &z3, &z4, group, c);
+                    o
+                })),
+                ("jet_f1_acc", Box::new(|| {
+                    let mut o = init.clone();
+                    jet_f1_acc(&mut o, &g, &t0, group, c);
+                    o
+                })),
+                ("jet_f2z1_acc", Box::new(|| {
+                    let mut o = init.clone();
+                    jet_f2z1_acc(&mut o, &g, &z1, &t0, 3.0, group, c);
+                    o
+                })),
+                ("jet_o1_bwd_t0", Box::new(|| {
+                    let mut o = init_n.clone();
+                    jet_o1_bwd_t0(&mut o, &g, &z1, &t0, group, c);
+                    o
+                })),
+                ("jet_o2_bwd_t0", Box::new(|| {
+                    let mut o = init_n.clone();
+                    jet_o2_bwd_t0(&mut o, &g, &z1, &z2, &t0, group, c);
+                    o
+                })),
+                ("jet_o3_bwd_z1", Box::new(|| {
+                    let mut o = init.clone();
+                    jet_o3_bwd_z1(&mut o, &g, &z1, &z2, &t0, group, c);
+                    o
+                })),
+                ("jet_o3_bwd_t0", Box::new(|| {
+                    let mut o = init_n.clone();
+                    jet_o3_bwd_t0(&mut o, &g, &z1, &z2, &z3, &t0, group, c);
+                    o
+                })),
+                ("jet_o4_bwd_z1", Box::new(|| {
+                    let mut o = init.clone();
+                    jet_o4_bwd_z1(&mut o, &g, &z1, &z2, &z3, &t0, group, c);
+                    o
+                })),
+                ("jet_o4_bwd_z2", Box::new(|| {
+                    let mut o = init.clone();
+                    jet_o4_bwd_z2(&mut o, &g, &z1, &z2, &t0, group, c);
+                    o
+                })),
+                ("jet_o4_bwd_t0", Box::new(|| {
+                    let mut o = init_n.clone();
+                    jet_o4_bwd_t0(&mut o, &g, &z1, &z2, &z3, &z4, &t0, group, c);
+                    o
+                })),
+            ];
+            for (name, run) in &kernels {
+                force_simd_level(SimdLevel::Scalar);
+                let scalar = run();
+                force_simd_level(vector);
+                let vectorized = run();
+                assert_bits(
+                    &vectorized,
+                    &scalar,
+                    &format!("{name} (n={n}, group={group}, c={c}, level={})", vector.name()),
+                );
+            }
+        }
+        force_simd_level(prior);
+    }
+
+    /// The generic matmul bodies, dispatched at the vector level, match
+    /// the forced-scalar dispatch bitwise over remainder-heavy shapes.
+    #[test]
+    fn matmul_lanes_bitwise_match_scalar_dispatch() {
+        let _guard = simd_level_guard();
+        let prior = simd_level();
+        let vector = detect_simd_level();
+        let mut seed = 23u64;
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 8, 8),
+            (5, 13, 9),
+            (7, 257, 19),
+            (12, 64, 33),
+            (6, 130, 128),
+        ] {
+            let a = fill(&mut seed, m * k);
+            let b = fill(&mut seed, k * n);
+            let a_tn = fill(&mut seed, k * m);
+            let b_nt = fill(&mut seed, n * k);
+            let init = fill(&mut seed, m * n);
+
+            let run = |which: usize| -> Vec<f32> {
+                let mut o = init.clone();
+                match which {
+                    0 => crate::tensor::matmul_acc(&a, &b, &mut o, m, k, n),
+                    1 => crate::tensor::matmul_tn_acc(&a_tn, &b, &mut o, k, m, n),
+                    _ => crate::tensor::matmul_nt_acc(&a, &b_nt, &mut o, m, k, n),
+                }
+                o
+            };
+            for which in 0..3 {
+                force_simd_level(SimdLevel::Scalar);
+                let scalar = run(which);
+                force_simd_level(vector);
+                let vectorized = run(which);
+                assert_bits(
+                    &vectorized,
+                    &scalar,
+                    &format!("matmul variant {which} ({m},{k},{n}) level={}", vector.name()),
+                );
+            }
+        }
+        force_simd_level(prior);
+    }
+}

@@ -12,6 +12,7 @@
 
 use hte_pinn::coordinator::problem_for;
 use hte_pinn::nn::{
+    allen_cahn_residual_loss_and_grad, allen_cahn_residual_loss_reference,
     bihar_residual_loss_and_grad, bihar_residual_loss_reference, factor_jet,
     gpinn_residual_loss_and_grad, gpinn_residual_loss_reference, hte_residual_loss_and_grad,
     hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, jet_forward, GpinnResidual,
@@ -19,6 +20,9 @@ use hte_pinn::nn::{
 };
 use hte_pinn::pde::{fd, Domain, DomainSampler, PdeProblem};
 use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
+use hte_pinn::tensor::{
+    detect_simd_level, force_simd_level, simd_level, simd_level_guard, SimdLevel,
+};
 
 struct Case {
     mlp: Mlp,
@@ -35,6 +39,21 @@ impl Case {
         let mut rng = Xoshiro256pp::new(seed);
         let mlp = Mlp::init(d, &mut rng);
         let problem = problem_for("sg2", d).expect("sg2");
+        let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        Normal::new().fill_f32(&mut rng, &mut coeff);
+        Self { mlp, problem, xs, probes, coeff, n, v }
+    }
+
+    /// Allen–Cahn case: unit-ball points, Rademacher probes, the `ac2`
+    /// manufactured solution.
+    fn allen_cahn(d: usize, n: usize, v: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = problem_for("ac2", d).expect("ac2");
         let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
         let xs = sampler.batch(n);
         let mut probes = vec![0.0f32; v * d];
@@ -461,6 +480,131 @@ fn bihar_forcing_matches_fd_bilaplacian_oracle() {
             "d={d}: forcing {ours} vs fd {fd_val}"
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Allen–Cahn (order-2, cubic reaction) parity — the DESIGN.md §7
+// add-a-family worked example's acceptance tests
+// ---------------------------------------------------------------------------
+
+/// Native Allen–Cahn loss matches the f64 jet-forward reference to 1e-3
+/// relative across a (d, n, v) grid including the n = 1 / v = 1 edges.
+#[test]
+fn allen_cahn_loss_matches_reference_grid() {
+    for (d, n, v) in [(3, 1, 1), (4, 1, 6), (4, 5, 1), (5, 4, 3), (6, 9, 4), (10, 16, 16)] {
+        let case = Case::allen_cahn(d, n, v, 52 + d as u64);
+        let (loss, _) =
+            allen_cahn_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
+        let reference =
+            allen_cahn_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+        assert!(
+            (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+            "(d={d}, n={n}, v={v}): batched {loss} vs reference {reference}"
+        );
+    }
+}
+
+/// Allen–Cahn loss/grad results are bitwise identical for 1, 2 and 16
+/// worker threads (fixed chunking + ordered reduction, fourth operator).
+#[test]
+fn allen_cahn_gradients_bitwise_stable_across_thread_counts() {
+    let case = Case::allen_cahn(6, 13, 5, 9);
+    let mut baseline: Option<(f32, Vec<f32>)> = None;
+    for threads in [1usize, 2, 16] {
+        let mut engine = NativeEngine::new(threads);
+        let mut grad = Vec::new();
+        let loss = engine.loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad);
+        match &baseline {
+            None => baseline = Some((loss, grad)),
+            Some((l0, g0)) => {
+                assert_eq!(loss.to_bits(), l0.to_bits(), "loss at {threads} threads");
+                assert_eq!(grad.len(), g0.len());
+                for (a, b) in grad.iter().zip(g0) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "grad at {threads} threads");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD dispatch parity (DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+/// A full engine step — every residual operator, at 1 and 3 worker
+/// threads — produces bitwise identical loss and gradients whether the
+/// kernels dispatch at the forced-scalar level or at the detected vector
+/// level.  (In the default build both levels are scalar and this is
+/// trivially green; under `--features simd` on AVX2/NEON hosts it is the
+/// end-to-end form of the kernel `to_bits` property tests.)
+#[test]
+fn engine_step_bitwise_identical_across_simd_levels() {
+    let _guard = simd_level_guard();
+    let prior = simd_level();
+    let vector = detect_simd_level();
+    let cases = [
+        Case::new(6, 11, 4, 31),
+        Case::allen_cahn(6, 11, 4, 32),
+        Case::bihar(5, 11, 4, 33),
+    ];
+    for case in &cases {
+        for threads in [1usize, 3] {
+            let run = |level: SimdLevel| -> (f32, Vec<f32>) {
+                force_simd_level(level);
+                let mut engine = NativeEngine::new(threads);
+                let mut grad = Vec::new();
+                let loss = engine.loss_and_grad(
+                    &case.mlp,
+                    case.problem.as_ref(),
+                    &case.batch(),
+                    &mut grad,
+                );
+                (loss, grad)
+            };
+            let (loss_s, grad_s) = run(SimdLevel::Scalar);
+            let (loss_v, grad_v) = run(vector);
+            assert_eq!(
+                loss_s.to_bits(),
+                loss_v.to_bits(),
+                "{} loss differs between scalar and {} at {threads} threads",
+                case.problem.family(),
+                vector.name()
+            );
+            assert_eq!(grad_s.len(), grad_v.len());
+            for (a, b) in grad_s.iter().zip(&grad_v) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} grad differs between scalar and {} at {threads} threads",
+                    case.problem.family(),
+                    vector.name()
+                );
+            }
+        }
+    }
+    // gPINN goes through loss_and_grad_with (explicit operator)
+    let case = Case::new(5, 9, 3, 34);
+    let op = GpinnResidual { lambda: 0.9 };
+    let run = |level: SimdLevel| -> (f32, Vec<f32>) {
+        force_simd_level(level);
+        let mut engine = NativeEngine::new(2);
+        let mut grad = Vec::new();
+        let loss = engine.loss_and_grad_with(
+            &case.mlp,
+            case.problem.as_ref(),
+            &op,
+            &case.batch(),
+            &mut grad,
+        );
+        (loss, grad)
+    };
+    let (loss_s, grad_s) = run(SimdLevel::Scalar);
+    let (loss_v, grad_v) = run(vector);
+    assert_eq!(loss_s.to_bits(), loss_v.to_bits(), "gpinn loss differs across levels");
+    for (a, b) in grad_s.iter().zip(&grad_v) {
+        assert_eq!(a.to_bits(), b.to_bits(), "gpinn grad differs across levels");
+    }
+    force_simd_level(prior);
 }
 
 /// Gradient reduction is bit-stable for any worker-thread count, including
