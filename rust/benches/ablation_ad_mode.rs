@@ -43,7 +43,9 @@ fn native_step_section(report: &mut BenchReport) {
             let mut engine = NativeEngine::new(default_threads());
             let mut grad = Vec::new();
             report.push(time_fn(&format!("step-batched/d{d}-v{v}"), 1, iters, || {
-                std::hint::black_box(engine.loss_and_grad(&mlp, &problem, &batch, &mut grad));
+                std::hint::black_box(
+                    engine.loss_and_grad(&mlp, &problem, &batch, &mut grad).unwrap(),
+                );
             }));
         }
     }

@@ -20,6 +20,12 @@
 //!   measured `rss_mb` next to the `memmodel` estimates (the OOM
 //!   narrative cross-check).  Both native sections land in
 //!   `BENCH_native.json` (CI uploads it as an artifact).
+//! * **shard** (always available): one step through the shard-plan
+//!   execution layer (DESIGN.md §10) — in-process backends at 1/2/4
+//!   threads and a 2-worker loopback TCP cluster — with a hard
+//!   `to_bits` gate on loss + gradient vs the 1-thread run (the
+//!   executor-independence guarantee) and informational scaling times
+//!   (`rows_shard`).
 //! * **artifact** (`--features xla` + `artifacts/`): the L3 step split
 //!   into host-side stages vs XLA execution, so the coordinator's
 //!   overhead budget (<10% of step time, DESIGN.md §8) is verifiable.
@@ -137,7 +143,9 @@ fn native_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> Native
     let mut engine1 = NativeEngine::new(1);
     let mut grad = Vec::new();
     let batched1 = time_fn(&format!("native-step/batched-t1/{tag}"), warmup, iters, || {
-        std::hint::black_box(engine1.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad));
+        std::hint::black_box(
+            engine1.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap(),
+        );
     });
     report.push(batched1.clone());
 
@@ -148,18 +156,16 @@ fn native_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> Native
         warmup,
         iters,
         || {
-            std::hint::black_box(engine_mt.loss_and_grad(
-                &mlp,
-                problem.as_ref(),
-                &batch,
-                &mut grad,
-            ));
+            std::hint::black_box(
+                engine_mt.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap(),
+            );
         },
     );
     report.push(batched.clone());
 
     // parity: optimized-path loss vs the jet-forward reference
-    let loss = engine_mt.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad) as f64;
+    let loss =
+        engine_mt.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap() as f64;
     let reference = hte_residual_loss_reference(&mlp, problem.as_ref(), &batch);
     let loss_rel_err = (loss - reference).abs() / (1.0 + reference.abs());
 
@@ -223,7 +229,9 @@ fn order4_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> Order4
 
     let mut engine1 = NativeEngine::new(1);
     let batched1 = time_fn(&format!("bihar-step/batched-t1/{tag}"), warmup, iters, || {
-        std::hint::black_box(engine1.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad));
+        std::hint::black_box(
+            engine1.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap(),
+        );
     });
     report.push(batched1.clone());
 
@@ -234,12 +242,9 @@ fn order4_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> Order4
         warmup,
         iters,
         || {
-            std::hint::black_box(engine_mt.loss_and_grad(
-                &mlp,
-                problem.as_ref(),
-                &batch,
-                &mut grad,
-            ));
+            std::hint::black_box(
+                engine_mt.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap(),
+            );
         },
     );
     report.push(batched.clone());
@@ -256,12 +261,15 @@ fn order4_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> Order4
     let batch2 = NativeBatch { xs: &xs2, probes: &probes2, coeff: &coeff2, n, v };
     let mut engine2 = NativeEngine::new(1);
     let order2 = time_fn(&format!("order2-step/batched-t1/{tag}"), warmup, iters, || {
-        std::hint::black_box(engine2.loss_and_grad(&mlp, problem2.as_ref(), &batch2, &mut grad));
+        std::hint::black_box(
+            engine2.loss_and_grad(&mlp, problem2.as_ref(), &batch2, &mut grad).unwrap(),
+        );
     });
     report.push(order2.clone());
 
     // parity: order-4 tape loss vs the f64 jet-forward reference
-    let loss = engine_mt.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad) as f64;
+    let loss =
+        engine_mt.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap() as f64;
     let reference = bihar_residual_loss_reference(&mlp, problem.as_ref(), &batch);
     let loss_rel_err = (loss - reference).abs() / (1.0 + reference.abs());
 
@@ -324,24 +332,25 @@ fn gpinn_case(report: &mut BenchReport, d: usize, v: usize, n: usize) -> GpinnRo
 
     let mut engine1 = NativeEngine::new(1);
     let gpinn = time_fn(&format!("gpinn-step/batched-t1/{tag}"), warmup, iters, || {
-        std::hint::black_box(engine1.loss_and_grad_with(
-            &mlp,
-            problem.as_ref(),
-            &op,
-            &batch,
-            &mut grad,
-        ));
+        std::hint::black_box(
+            engine1
+                .loss_and_grad_with(&mlp, problem.as_ref(), &op, &batch, &mut grad)
+                .unwrap(),
+        );
     });
     report.push(gpinn.clone());
 
     let mut engine2 = NativeEngine::new(1);
     let order2 = time_fn(&format!("trace-step/batched-t1/{tag}"), warmup, iters, || {
-        std::hint::black_box(engine2.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad));
+        std::hint::black_box(
+            engine2.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap(),
+        );
     });
     report.push(order2.clone());
 
-    let loss =
-        engine1.loss_and_grad_with(&mlp, problem.as_ref(), &op, &batch, &mut grad) as f64;
+    let loss = engine1
+        .loss_and_grad_with(&mlp, problem.as_ref(), &op, &batch, &mut grad)
+        .unwrap() as f64;
     let reference = gpinn_residual_loss_reference(&mlp, problem.as_ref(), &batch, lambda);
     let loss_rel_err = (loss - reference).abs() / (1.0 + reference.abs());
 
@@ -359,6 +368,144 @@ fn gpinn_section(report: &mut BenchReport) -> Vec<GpinnRow> {
     let mut rows = Vec::new();
     for d in [10usize, 100] {
         rows.push(gpinn_case(report, d, 16, 16));
+    }
+    rows
+}
+
+struct ShardRow {
+    backend: String,
+    parallelism: usize,
+    step_ms: f64,
+    bitwise_exact: bool,
+}
+
+/// Record one shard-backend row, bitwise-gating loss + gradient against
+/// the first (1-thread) row.
+fn record_shard_row(
+    rows: &mut Vec<ShardRow>,
+    reference: &mut Option<(f32, Vec<f32>)>,
+    backend: String,
+    parallelism: usize,
+    step_ms: f64,
+    loss: f32,
+    grad: &[f32],
+) {
+    let bitwise_exact = match reference {
+        None => {
+            *reference = Some((loss, grad.to_vec()));
+            true
+        }
+        Some((l0, g0)) => {
+            loss.to_bits() == l0.to_bits()
+                && grad.len() == g0.len()
+                && grad.iter().zip(g0.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
+        }
+    };
+    rows.push(ShardRow { backend, parallelism, step_ms, bitwise_exact });
+}
+
+/// §10 rows: one sg2 step through the shard-plan execution layer under
+/// different backends — in-process at 1/2/4 threads and a 2-worker
+/// loopback TCP cluster — every row's loss + full gradient gated
+/// `to_bits`-equal to the 1-thread run.  The bitwise gate is hard;
+/// scaling numbers are informational (shared CI runners have ~2 cores,
+/// and the loopback row pays params+gradients over TCP per step).
+fn shard_section(report: &mut BenchReport) -> Vec<ShardRow> {
+    use hte_pinn::coordinator::TrainConfig;
+    use hte_pinn::estimators::Estimator;
+    use hte_pinn::runtime::{serve_conns, JobSpec, TcpClusterBackend};
+
+    let (d, v, n) = (100usize, 16usize, 32usize);
+    let mut rng = Xoshiro256pp::new(19);
+    let mlp = Mlp::init(d, &mut rng);
+    let problem = problem_for("sg2", d).expect("sg2 problem");
+    let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+    let xs = sampler.batch(n);
+    let mut probes = vec![0.0f32; v * d];
+    fill_rademacher(&mut rng, &mut probes);
+    let mut coeff = vec![0.0f32; problem.n_coeff()];
+    Normal::new().fill_f32(&mut rng, &mut coeff);
+    let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+    let tag = format!("d{d}-v{v}-n{n}");
+
+    let mut rows = Vec::new();
+    let mut reference: Option<(f32, Vec<f32>)> = None;
+
+    for threads in [1usize, 2, 4] {
+        let mut engine = NativeEngine::new(threads);
+        let mut grad = Vec::new();
+        let timing = time_fn(&format!("shard-step/threads{threads}/{tag}"), 2, 10, || {
+            std::hint::black_box(
+                engine.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap(),
+            );
+        });
+        report.push(timing.clone());
+        let loss = engine.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap();
+        record_shard_row(
+            &mut rows,
+            &mut reference,
+            format!("threads={threads}"),
+            threads,
+            timing.mean_s * 1e3,
+            loss,
+            &grad,
+        );
+    }
+
+    // 2-worker loopback TCP cluster (in-process listener threads, the
+    // real wire protocol).  Skipped with a note if loopback sockets are
+    // unavailable in the sandbox — the bitwise gate for TCP still runs
+    // in the test suite either way.
+    let workers = 2usize;
+    let addrs: Vec<String> = (0..workers)
+        .filter_map(|_| {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").ok()?;
+            let addr = listener.local_addr().ok()?.to_string();
+            std::thread::spawn(move || {
+                let _ = serve_conns(listener, 2, Some(1));
+            });
+            Some(addr)
+        })
+        .collect();
+    let cfg = TrainConfig {
+        family: "sg2".into(),
+        method: "probe".into(),
+        estimator: Estimator::HteRademacher,
+        d,
+        v,
+        epochs: 1,
+        lr0: 1e-3,
+        seed: 0,
+        lambda_g: 10.0,
+        log_every: usize::MAX,
+    };
+    let connect = if addrs.len() == workers {
+        TcpClusterBackend::connect(&addrs, JobSpec::from_config(&cfg))
+    } else {
+        Err(anyhow::anyhow!("could not bind {workers} loopback listeners"))
+    };
+    match connect {
+        Ok(backend) => {
+            let mut engine = NativeEngine::with_backend(Box::new(backend));
+            let mut grad = Vec::new();
+            let timing = time_fn(&format!("shard-step/tcp-workers{workers}/{tag}"), 2, 10, || {
+                std::hint::black_box(
+                    engine.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap(),
+                );
+            });
+            report.push(timing.clone());
+            let loss = engine.loss_and_grad(&mlp, problem.as_ref(), &batch, &mut grad).unwrap();
+            record_shard_row(
+                &mut rows,
+                &mut reference,
+                format!("tcp-workers={workers}"),
+                workers,
+                timing.mean_s * 1e3,
+                loss,
+                &grad,
+            );
+        }
+        Err(e) => eprintln!("  skipping tcp shard row (loopback unavailable?): {e:#}"),
     }
     rows
 }
@@ -511,8 +658,9 @@ fn simd_section(report: &mut BenchReport) -> (SimdLevel, Vec<SimdRow>) {
         let run_step = |grad_out: &mut [f32]| {
             let mut engine = engine.borrow_mut();
             let mut grad = grad_buf.borrow_mut();
-            let loss =
-                engine.loss_and_grad_with(&mlp, problem.as_ref(), op.as_ref(), &batch, &mut grad);
+            let loss = engine
+                .loss_and_grad_with(&mlp, problem.as_ref(), op.as_ref(), &batch, &mut grad)
+                .unwrap();
             grad_out[0] = loss;
             grad_out[1..].copy_from_slice(&grad);
         };
@@ -537,6 +685,7 @@ fn write_bench_json(
     rows4: &[Order4Row],
     rows_mm: &[MatmulRow],
     rows_gp: &[GpinnRow],
+    rows_shard: &[ShardRow],
 ) {
     let json_rows: Vec<Value> = rows
         .iter()
@@ -614,6 +763,17 @@ fn write_bench_json(
             ])
         })
         .collect();
+    let json_rows_shard: Vec<Value> = rows_shard
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("backend", s(r.backend.clone())),
+                ("parallelism", num(r.parallelism as f64)),
+                ("step_ms", num(r.step_ms)),
+                ("bitwise_exact", Value::Bool(r.bitwise_exact)),
+            ])
+        })
+        .collect();
     let json_rows_simd: Vec<Value> = rows_simd
         .iter()
         .map(|r| {
@@ -667,6 +827,14 @@ fn write_bench_json(
                model_* are the memmodel estimates (A100 model includes its ~800MB base)"),
         ),
         ("rows_order4", Value::Arr(json_rows4)),
+        (
+            "shard",
+            s("one sg2 step through the shard-plan execution layer (DESIGN.md §10): \
+               in-process backends at 1/2/4 threads and a 2-worker loopback TCP cluster; \
+               bitwise_exact gates loss + gradient to_bits equality against the 1-thread \
+               run (the executor-independence guarantee), step_ms is informational"),
+        ),
+        ("rows_shard", Value::Arr(json_rows_shard)),
     ]);
     let path = "BENCH_native.json";
     match std::fs::write(path, doc.to_json()) {
@@ -740,6 +908,7 @@ fn main() {
     // allocator high-water mark left behind by the d=1000 pair-grid sweep
     let rows4 = order4_section(&mut report);
     let rows_gp = gpinn_section(&mut report);
+    let rows_shard = shard_section(&mut report);
     let rows = native_section(&mut report);
     println!("  simd dispatch level: {}", simd_level_used.name());
     for r in &rows_simd {
@@ -808,7 +977,21 @@ fn main() {
             r.model_a100_mb
         );
     }
-    write_bench_json(simd_level_used, &rows_simd, &rows, &rows4, &rows_mm, &rows_gp);
+    for r in &rows_shard {
+        println!(
+            "  shard-step {} (x{}): {:.3} ms, bitwise vs 1-thread: {}",
+            r.backend, r.parallelism, r.step_ms, r.bitwise_exact
+        );
+    }
+    write_bench_json(
+        simd_level_used,
+        &rows_simd,
+        &rows,
+        &rows4,
+        &rows_mm,
+        &rows_gp,
+        &rows_shard,
+    );
     #[cfg(feature = "xla")]
     artifact_section(&mut report);
     #[cfg(not(feature = "xla"))]
@@ -890,6 +1073,17 @@ fn main() {
             eprintln!(
                 "FAIL: order-4 loss parity d{} v{} n{}: rel err {:.3e} >= 1e-3",
                 r.d, r.v, r.n, r.loss_rel_err
+            );
+            failed = true;
+        }
+    }
+    for r in &rows_shard {
+        // the executor-independence invariant is never waivable: any
+        // backend, any parallelism, same bits
+        if !r.bitwise_exact {
+            eprintln!(
+                "FAIL: shard backend {} (x{}) is not bitwise-exact vs the 1-thread run",
+                r.backend, r.parallelism
             );
             failed = true;
         }

@@ -34,6 +34,45 @@ use crate::util::toml;
 /// extend both when adding a family.
 pub const KNOWN_FAMILIES: [&str; 4] = ["sg2", "sg3", "ac2", "bihar"];
 
+/// Execution backends the CLI accepts — the shared constant behind
+/// every `--backend` error (`train` and `table` both parse through
+/// [`parse_backend`], so the accepted set and the error text cannot
+/// drift).
+pub const KNOWN_BACKENDS: [&str; 2] = ["native", "artifact"];
+
+/// A parsed `--backend` value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Native,
+    Artifact,
+}
+
+/// One place maps backend strings onto [`Backend`]; a typo errors with
+/// the supported set listed, exactly like [`KNOWN_FAMILIES`] errors.
+pub fn parse_backend(s: &str) -> Result<Backend> {
+    match s {
+        "native" => Ok(Backend::Native),
+        // `xla` is the historical alias for the compiled-artifact path
+        "artifact" | "xla" => Ok(Backend::Artifact),
+        other => bail!("unknown backend {other} (supported: {})", KNOWN_BACKENDS.join(" | ")),
+    }
+}
+
+/// `table --which` values the native driver serves (tables 1-3 need the
+/// artifact backend); [`unknown_native_table`] builds the shared
+/// supported-set error.
+pub const NATIVE_TABLES: [&str; 3] = ["4", "5", "ac"];
+
+/// The error for a `table --which` value the native driver does not
+/// serve, quoting [`NATIVE_TABLES`].
+pub fn unknown_native_table(which: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "the native table driver supports --which {} (4 = gPINN, 5 = biharmonic, \
+         ac = Allen-Cahn); tables 1-3 need --backend artifact (--features xla); got {which}",
+        NATIVE_TABLES.join(" | ")
+    )
+}
+
 #[derive(Clone, Debug)]
 pub struct FileConfig {
     pub artifacts: PathBuf,
@@ -196,6 +235,34 @@ mod tests {
                 crate::coordinator::problem_for(family, 4).is_ok(),
                 "KNOWN_FAMILIES lists {family} but problem_for rejects it"
             );
+        }
+    }
+
+    /// Both directions of the `--backend` constant: every listed value
+    /// parses, and a typo's error quotes the whole supported set.
+    #[test]
+    fn known_backends_parse_and_errors_list_the_set() {
+        assert_eq!(parse_backend("native").unwrap(), Backend::Native);
+        assert_eq!(parse_backend("artifact").unwrap(), Backend::Artifact);
+        for backend in KNOWN_BACKENDS {
+            assert!(parse_backend(backend).is_ok(), "KNOWN_BACKENDS lists {backend}");
+        }
+        // historical alias stays accepted but is not advertised
+        assert_eq!(parse_backend("xla").unwrap(), Backend::Artifact);
+        let err = parse_backend("nativ").unwrap_err().to_string();
+        assert!(err.contains("nativ"), "{err}");
+        for backend in KNOWN_BACKENDS {
+            assert!(err.contains(backend), "{err} missing {backend}");
+        }
+    }
+
+    /// The native `table --which` error quotes every supported driver.
+    #[test]
+    fn unknown_native_table_error_lists_the_set() {
+        let err = unknown_native_table("7").to_string();
+        assert!(err.contains('7'), "{err}");
+        for which in NATIVE_TABLES {
+            assert!(err.contains(which), "{err} missing {which}");
         }
     }
 

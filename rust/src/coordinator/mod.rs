@@ -31,7 +31,8 @@ pub use experiments::{
 pub use metrics::{rss_mb, MetricsLogger, StepRecord};
 pub use native::NativeTrainer;
 pub use native_experiments::{
-    experiment_biharmonic_native, experiment_gpinn_native, NativeExperimentOpts,
+    experiment_allen_cahn_native, experiment_biharmonic_native, experiment_gpinn_native,
+    NativeExperimentOpts,
 };
 pub use schedule::LinearDecay;
 pub use spec::{mean_std, problem_for, EvalPool, ExperimentRow, RunSummary, TrainConfig};

@@ -32,6 +32,7 @@ use crate::nn::{
 };
 use crate::pde::{DomainSampler, PdeProblem};
 use crate::rng::{Normal, Xoshiro256pp};
+use crate::runtime::{InProcessBackend, ShardBackend};
 
 use super::metrics::{rss_mb, MetricsLogger, StepRecord};
 use super::schedule::LinearDecay;
@@ -43,6 +44,12 @@ pub struct NativeTrainer {
     op: Box<dyn ResidualOp>,
     sampler: DomainSampler,
     probes: ProbeGenerator,
+    /// Second independent probe stream (RNG fork 4) for two-sample
+    /// operators (Eq. 8 `unbiased`); fills the second half of
+    /// `probe_host`.
+    probes2: Option<ProbeGenerator>,
+    /// Total probe rows per step: `op.probe_sets() · config.v`.
+    probe_rows: usize,
     schedule: LinearDecay,
     engine: NativeEngine,
     pub coeff: Vec<f32>,
@@ -69,6 +76,19 @@ impl NativeTrainer {
     /// Like [`NativeTrainer::new`] with an explicit worker-thread count.
     /// Results are bitwise identical for any `threads` (ordered reduction).
     pub fn with_threads(config: TrainConfig, batch_n: usize, threads: usize) -> Result<Self> {
+        Self::with_backend(config, batch_n, Box::new(InProcessBackend::new(threads)))
+    }
+
+    /// Like [`NativeTrainer::new`] over an explicit shard backend —
+    /// in-process threads or a TCP worker cluster
+    /// (`runtime::TcpClusterBackend`).  The shard plan and the RNG
+    /// streams are backend-independent, so results are bitwise identical
+    /// whichever executor runs the shards (DESIGN.md §10).
+    pub fn with_backend(
+        config: TrainConfig,
+        batch_n: usize,
+        backend: Box<dyn ShardBackend>,
+    ) -> Result<Self> {
         let mut config = config;
         let problem = problem_for(&config.family, config.d)?;
         // One place maps method strings onto residual operators; an
@@ -89,18 +109,37 @@ impl NativeTrainer {
                 ),
             };
         }
+        // Two-sample operators (Eq. 8) draw a second independent probe
+        // matrix per step; only the Hutchinson distributions make sense
+        // for a product of two estimates (basis probes are deterministic,
+        // so the two "independent" samples would coincide).
+        if op.probe_sets() == 2 {
+            match config.estimator {
+                Estimator::HteRademacher | Estimator::HteGaussian => {}
+                other => bail!(
+                    "the {} operator draws two independent probe matrices (Eq. 8); it needs \
+                     an hte or hte-gauss estimator, got {}",
+                    op.name(),
+                    other.name()
+                ),
+            }
+        }
         let estimator = config.estimator;
         let mut root = Xoshiro256pp::new(config.seed);
         let mut coeff = vec![0.0f32; problem.n_coeff()];
         Normal::new().fill_f32(&mut root.fork(1), &mut coeff);
         let sampler = DomainSampler::new(problem.domain(), config.d, root.fork(2));
         let probes = ProbeGenerator::new(estimator, config.d, config.v, root.fork(3));
+        // fork tag 4 mirrors the artifact trainer's probes2 stream
+        let probes2 = (op.probe_sets() == 2)
+            .then(|| ProbeGenerator::new(estimator, config.d, config.v, root.fork(4)));
+        let probe_rows = op.probe_sets() * config.v;
         let mlp = Mlp::init(config.d, &mut root.fork(6));
         let n_params = mlp.n_params();
         let flat = mlp.pack();
         Ok(Self {
             xs_host: vec![0.0; batch_n * config.d],
-            probe_host: vec![0.0; config.v * config.d],
+            probe_host: vec![0.0; probe_rows * config.d],
             grad: Vec::with_capacity(n_params),
             flat,
             mlp,
@@ -108,8 +147,10 @@ impl NativeTrainer {
             op,
             sampler,
             probes,
+            probes2,
+            probe_rows,
             schedule: LinearDecay::new(config.lr0, config.epochs.max(1)),
-            engine: NativeEngine::new(threads),
+            engine: NativeEngine::with_backend(backend),
             coeff,
             config,
             step_idx: 0,
@@ -125,16 +166,33 @@ impl NativeTrainer {
         self.engine.threads()
     }
 
+    /// Human-readable executor description ("threads=4",
+    /// "tcp-cluster(workers=2)").
+    pub fn executor(&self) -> String {
+        self.engine.backend_label()
+    }
+
+    /// Draw this step's probe matrices into `probe_host` — one fill per
+    /// independent probe set, each from its own RNG stream (resume
+    /// replays exactly these fills).
+    fn fill_probes(&mut self) {
+        let vd = self.config.v * self.config.d;
+        self.probes.fill(&mut self.probe_host[..vd]);
+        if let Some(p2) = self.probes2.as_mut() {
+            p2.fill(&mut self.probe_host[vd..]);
+        }
+    }
+
     pub fn step(&mut self) -> Result<()> {
         let lr = self.schedule.at(self.step_idx);
         self.sampler.fill_batch(&mut self.xs_host);
-        self.probes.fill(&mut self.probe_host);
+        self.fill_probes();
         let batch = NativeBatch {
             xs: &self.xs_host,
             probes: &self.probe_host,
             coeff: &self.coeff,
             n: self.batch_n,
-            v: self.config.v,
+            v: self.probe_rows,
         };
         let loss = self.engine.loss_and_grad_with(
             &self.mlp,
@@ -142,7 +200,7 @@ impl NativeTrainer {
             self.op.as_ref(),
             &batch,
             &mut self.grad,
-        );
+        )?;
         // re-pack from `mlp` (not the last step's flat) so external edits
         // to the public field — warm starts, perturbations — are honored
         self.mlp.pack_into(&mut self.flat);
@@ -292,11 +350,26 @@ impl NativeTrainer {
     /// matrix per step, so the batch size must not change — which is why
     /// it is stored rather than taken from the caller).
     pub fn resume(path: impl AsRef<Path>, threads: usize) -> Result<Self> {
+        Self::resume_with_backend(path, |_| Ok(Box::new(InProcessBackend::new(threads))))
+    }
+
+    /// [`NativeTrainer::resume`] over an explicit shard backend; the
+    /// closure sees the checkpointed config (a cluster backend needs it
+    /// for the job-spec handshake before the trainer exists).  Replay
+    /// consumes the same sampler/probe RNG streams whatever the backend
+    /// — the ShardPlan and the randomness are executor-independent, so
+    /// a run checkpointed on one machine resumes bit-exactly on a
+    /// cluster and vice versa (same ISA, DESIGN.md §10).
+    pub fn resume_with_backend(
+        path: impl AsRef<Path>,
+        make_backend: impl FnOnce(&TrainConfig) -> Result<Box<dyn ShardBackend>>,
+    ) -> Result<Self> {
         let (meta, state) = checkpoint::load(path)?;
         let Some(batch_n) = meta.batch_n else {
             bail!("checkpoint has no batch_n (artifact-backend or pre-batch checkpoint?)");
         };
-        let mut tr = Self::with_threads(meta.config, batch_n, threads)?;
+        let backend = make_backend(&meta.config)?;
+        let mut tr = Self::with_backend(meta.config, batch_n, backend)?;
         let n = tr.mlp.n_params();
         if state.len() != 3 * n + 1 {
             bail!("checkpoint state has {} floats, expected 3·{n}+1 (params|m|v|t)", state.len());
@@ -309,7 +382,7 @@ impl NativeTrainer {
         tr.coeff = meta.coeff;
         for _ in 0..meta.step {
             tr.sampler.fill_batch(&mut tr.xs_host);
-            tr.probes.fill(&mut tr.probe_host);
+            tr.fill_probes();
         }
         tr.step_idx = meta.step;
         Ok(tr)
@@ -346,6 +419,10 @@ mod tests {
 
     fn ac_config(d: usize, epochs: usize) -> TrainConfig {
         TrainConfig { family: "ac2".into(), method: "hte".into(), ..config(d, epochs) }
+    }
+
+    fn unbiased_config(d: usize, epochs: usize) -> TrainConfig {
+        TrainConfig { method: "unbiased".into(), ..config(d, epochs) }
     }
 
     #[test]
@@ -396,6 +473,54 @@ mod tests {
         let mut cfg = bihar_config(6, 10);
         cfg.estimator = Estimator::Sdgd;
         assert!(NativeTrainer::new(cfg, 8).is_err());
+        // Eq. 8 needs two *random* probe sets: basis estimators are
+        // deterministic, so "two independent samples" would coincide
+        let mut cfg = unbiased_config(6, 10);
+        cfg.estimator = Estimator::Sdgd;
+        let err = NativeTrainer::new(cfg, 8).unwrap_err().to_string();
+        assert!(err.contains("independent probe"), "{err}");
+        let mut cfg = unbiased_config(6, 10);
+        cfg.estimator = Estimator::FullBasis;
+        cfg.v = 6;
+        assert!(NativeTrainer::new(cfg, 8).is_err());
+        // the unbiased loss is the Sine-Gordon Table 3 experiment
+        let mut cfg = ac_config(6, 10);
+        cfg.method = "unbiased".into();
+        assert!(NativeTrainer::new(cfg, 8).is_err());
+        let mut cfg = bihar_config(6, 10);
+        cfg.method = "unbiased".into();
+        assert!(NativeTrainer::new(cfg, 8).is_err());
+    }
+
+    /// Eq. 8 end to end: training under the two-sample product loss
+    /// reduces the eval error, and the second probe stream is drawn
+    /// (probe buffer holds 2·V rows).
+    #[test]
+    fn unbiased_native_training_reduces_error() {
+        let mut trainer = NativeTrainer::new(unbiased_config(6, 250), 16).unwrap();
+        assert_eq!(trainer.probe_rows, 2 * trainer.config.v);
+        assert_eq!(trainer.probe_host.len(), 2 * trainer.config.v * 6);
+        let pool = EvalPool::generate(trainer.problem.domain(), 6, 500, 9);
+        let before = trainer.evaluate(&pool);
+        let mut logger = MetricsLogger::null();
+        trainer.run(&mut logger).unwrap();
+        let after = trainer.evaluate(&pool);
+        assert!(after < 0.7 * before, "{before} -> {after}");
+        assert!(trainer.last_loss.is_finite());
+    }
+
+    #[test]
+    fn unbiased_thread_count_does_not_change_training_bitwise() {
+        let mut a = NativeTrainer::with_threads(unbiased_config(5, 20), 9, 1).unwrap();
+        let mut b = NativeTrainer::with_threads(unbiased_config(5, 20), 9, 4).unwrap();
+        for _ in 0..20 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        assert_eq!(a.last_loss.to_bits(), b.last_loss.to_bits());
+        for (x, y) in a.flat.iter().zip(&b.flat) {
+            assert_eq!(x.to_bits(), y.to_bits(), "parameters diverged across thread counts");
+        }
     }
 
     #[test]
@@ -532,7 +657,13 @@ mod tests {
     /// for every residual operator.
     #[test]
     fn resume_matches_uninterrupted() {
-        for cfg in [config(5, 24), bihar_config(4, 24), gpinn_config(4, 24), ac_config(4, 24)] {
+        for cfg in [
+            config(5, 24),
+            bihar_config(4, 24),
+            gpinn_config(4, 24),
+            ac_config(4, 24),
+            unbiased_config(4, 24),
+        ] {
             let dir = std::env::temp_dir()
                 .join(format!("hte-native-ckpt-{}-{}", cfg.family, std::process::id()));
             let path = dir.join("mid.ckpt");

@@ -3,9 +3,10 @@
 //!
 //! The artifact drivers in `experiments.rs` stay the reference path for
 //! Tables 1-4; this module covers the gradient-enhanced table (Table 4,
-//! through the gPINN residual operator) and the order-4 biharmonic table
-//! (Table 5) through `NativeTrainer`, so a clean checkout can reproduce
-//! both headline results end to end.
+//! through the gPINN residual operator), the order-4 biharmonic table
+//! (Table 5) and the Allen–Cahn exact-vs-HTE sweep (`table --which ac`)
+//! through `NativeTrainer`, so a clean checkout can reproduce the
+//! headline results end to end.
 
 use anyhow::Result;
 
@@ -103,6 +104,91 @@ pub fn experiment_gpinn_native(
                 "gpinn-full (model)".to_string()
             },
             family: "sg2".into(),
+            d,
+            v: 0,
+            it_per_sec: f64::NAN,
+            rss_mb: full.mb(),
+            err_mean: f64::NAN,
+            err_std: f64::NAN,
+            final_loss: f64::NAN,
+            seeds: 0,
+        });
+    }
+    Ok(rows)
+}
+
+/// Allen–Cahn table (native): exact trace vs HTE on `ac2`, mirroring
+/// the Table 4 driver shape (`table --which ac`).
+///
+/// The exact-trace row (full-basis probes, V = d) is the same objective
+/// as a full-Hessian Allen–Cahn PINN — the exact Laplacian through jets
+/// — so it actually runs on this CPU testbed; the modeled full-Hessian
+/// memory row is appended per dimension (the paper's OOM narrative at
+/// large d, order 2).
+pub fn experiment_allen_cahn_native(
+    opts: &NativeExperimentOpts,
+    dims: &[usize],
+    v: usize,
+) -> Result<Vec<ExperimentRow>> {
+    let mut rows = Vec::new();
+    for &d in dims {
+        let variants: [(&str, Estimator, usize); 2] = [
+            ("ac-pinn (exact trace)", Estimator::FullBasis, d),
+            ("ac-hte", Estimator::HteRademacher, v),
+        ];
+        for (name, estimator, vv) in variants {
+            let mut errs = Vec::new();
+            let mut speeds = Vec::new();
+            let mut rss = Vec::new();
+            let mut losses = Vec::new();
+            for &seed in &opts.seeds {
+                let cfg = TrainConfig {
+                    family: "ac2".into(),
+                    method: "hte".into(),
+                    estimator,
+                    d,
+                    v: vv,
+                    epochs: opts.epochs,
+                    lr0: opts.lr0,
+                    seed,
+                    lambda_g: 10.0,
+                    log_every: usize::MAX,
+                };
+                let mut trainer = NativeTrainer::with_threads(cfg, opts.batch_n, opts.threads)?;
+                let mut logger = MetricsLogger::null();
+                let summary = trainer.run(&mut logger)?;
+                let domain = problem_for("ac2", d)?.domain();
+                let pool = EvalPool::generate(domain, d, opts.eval_points, seed);
+                errs.push(trainer.evaluate(&pool));
+                speeds.push(summary.it_per_sec);
+                rss.push(summary.rss_mb);
+                losses.push(summary.final_loss as f64);
+            }
+            let (err_mean, err_std) = mean_std(&errs);
+            rows.push(ExperimentRow {
+                table: "tableac-native",
+                method: format!("{name} (V={vv})"),
+                family: "ac2".into(),
+                d,
+                v: vv,
+                it_per_sec: mean_std(&speeds).0,
+                rss_mb: mean_std(&rss).0,
+                err_mean,
+                err_std,
+                final_loss: mean_std(&losses).0,
+                seeds: opts.seeds.len(),
+            });
+        }
+        // The full-Hessian order-2 baseline, from the memory model.
+        let full = memmodel::full_pinn_bytes(d, opts.batch_n, 2);
+        rows.push(ExperimentRow {
+            table: "tableac-native",
+            method: if full.ooms_80gb() {
+                "ac-full (model: OOM >80GB)".to_string()
+            } else {
+                "ac-full (model)".to_string()
+            },
+            family: "ac2".into(),
             d,
             v: 0,
             it_per_sec: f64::NAN,
@@ -216,6 +302,35 @@ mod tests {
         assert!(rows[0].err_mean.is_finite());
         assert!(rows[2].method.starts_with("full4-pinn"));
         assert!(rows[2].err_mean.is_nan());
+    }
+
+    /// The Allen–Cahn sweep mirrors the Table-4 driver shape: an
+    /// exact-trace row (V = d), an HTE row, and the modeled full-Hessian
+    /// row, per dimension.
+    #[test]
+    fn tiny_native_tableac_sweep() {
+        let opts = NativeExperimentOpts {
+            seeds: vec![0],
+            epochs: 3,
+            threads: 2,
+            eval_points: 50,
+            lr0: 1e-3,
+            batch_n: 4,
+        };
+        let rows = experiment_allen_cahn_native(&opts, &[4], 2).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].method.starts_with("ac-pinn (exact trace)"));
+        assert_eq!(rows[0].v, 4, "exact row uses the full basis V = d");
+        assert!(rows[1].method.starts_with("ac-hte"));
+        assert_eq!(rows[1].v, 2);
+        for row in &rows[..2] {
+            assert!(row.it_per_sec > 0.0);
+            assert!(row.err_mean.is_finite());
+            assert!(row.final_loss.is_finite());
+        }
+        assert!(rows[2].method.starts_with("ac-full"));
+        assert!(rows[2].err_mean.is_nan());
+        assert!(rows[2].rss_mb > 0.0);
     }
 
     /// The Table-4 sweep yields the four runnable method rows (exact and

@@ -18,13 +18,24 @@ pub enum Estimator {
 }
 
 impl Estimator {
+    /// Every estimator with its CLI/config name — THE shared constant
+    /// behind the `--estimator` flag: both [`Estimator::name`] and the
+    /// `FromStr` parse walk it, so the accepted set and the
+    /// supported-set error text cannot drift (same pattern as
+    /// `config::KNOWN_FAMILIES`).
+    pub const ALL: [(Estimator, &'static str); 4] = [
+        (Estimator::HteRademacher, "hte"),
+        (Estimator::HteGaussian, "hte-gauss"),
+        (Estimator::Sdgd, "sdgd"),
+        (Estimator::FullBasis, "exact"),
+    ];
+
     pub fn name(self) -> &'static str {
-        match self {
-            Estimator::HteRademacher => "hte",
-            Estimator::HteGaussian => "hte-gauss",
-            Estimator::Sdgd => "sdgd",
-            Estimator::FullBasis => "exact",
-        }
+        Self::ALL
+            .iter()
+            .find(|(e, _)| *e == self)
+            .map(|(_, name)| *name)
+            .expect("every estimator variant is listed in Estimator::ALL")
     }
 }
 
@@ -32,13 +43,13 @@ impl std::str::FromStr for Estimator {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        Ok(match s {
-            "hte" => Estimator::HteRademacher,
-            "hte-gauss" => Estimator::HteGaussian,
-            "sdgd" => Estimator::Sdgd,
-            "exact" => Estimator::FullBasis,
-            other => anyhow::bail!("unknown estimator {other} (hte|hte-gauss|sdgd|exact)"),
-        })
+        for (estimator, name) in Estimator::ALL {
+            if name == s {
+                return Ok(estimator);
+            }
+        }
+        let names: Vec<&str> = Estimator::ALL.iter().map(|(_, name)| *name).collect();
+        anyhow::bail!("unknown estimator {s} (supported: {})", names.join(" | "))
     }
 }
 
@@ -101,6 +112,22 @@ impl ProbeGenerator {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Both directions of the shared `--estimator` constant: every
+    /// listed name round-trips through parse + name(), and a typo's
+    /// error quotes the whole supported set.
+    #[test]
+    fn estimator_names_round_trip_and_errors_list_the_set() {
+        for (estimator, name) in Estimator::ALL {
+            assert_eq!(name.parse::<Estimator>().unwrap(), estimator);
+            assert_eq!(estimator.name(), name);
+        }
+        let err = "hte-gaus".parse::<Estimator>().unwrap_err().to_string();
+        assert!(err.contains("hte-gaus"), "{err}");
+        for (_, name) in Estimator::ALL {
+            assert!(err.contains(name), "{err} missing {name}");
+        }
+    }
 
     fn quad_form(a: &[f64], d: usize, v: &[f32]) -> f64 {
         let mut acc = 0.0;

@@ -6,6 +6,9 @@
 //! hte-pinn train --config run.toml        # train (one run per seed)
 //! hte-pinn train --family sg2 --d 100 ... # train from flags
 //! hte-pinn train --backend native ...     # pure-Rust engine, no artifacts
+//! hte-pinn train --backend native --workers 2   # shard over 2 local worker
+//!                                               # processes, bitwise-identical
+//! hte-pinn worker --listen 0.0.0.0:7070   # serve shards to a remote trainer
 //! hte-pinn table --which 1 --epochs 2000  # regenerate a paper table
 //! hte-pinn memmodel                       # analytic A100-memory model
 //! ```
@@ -15,11 +18,11 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 #[cfg(feature = "xla")]
 use hte_pinn::checkpoint;
-use hte_pinn::config::FileConfig;
+use hte_pinn::config::{parse_backend, unknown_native_table, Backend, FileConfig};
 #[cfg(feature = "xla")]
 use hte_pinn::coordinator::Trainer;
 use hte_pinn::coordinator::{
@@ -31,22 +34,28 @@ use hte_pinn::nn;
 use hte_pinn::pde::PdeProblem;
 #[cfg(feature = "xla")]
 use hte_pinn::runtime::Engine;
-use hte_pinn::runtime::Manifest;
+use hte_pinn::runtime::{
+    serve, InProcessBackend, JobSpec, LocalWorkerPool, Manifest, ShardBackend, TcpClusterBackend,
+};
 use hte_pinn::table;
 use hte_pinn::util::args::Args;
 
-const USAGE: &str = "usage: hte-pinn <info|train|table|memmodel> [flags]
+const USAGE: &str = "usage: hte-pinn <info|train|worker|table|memmodel> [flags]
   info     --artifacts DIR
-  train    --config FILE | [--family sg2|sg3|ac2|bihar --method probe|hte|gpinn
-           --estimator hte --d 100 --v 16 --epochs 2000 --lr0 1e-3
-           --seed 0 --lambda-g 10 --log-every 100]
+  train    --config FILE | [--family sg2|sg3|ac2|bihar
+           --method probe|hte|unbiased|gpinn --estimator hte --d 100 --v 16
+           --epochs 2000 --lr0 1e-3 --seed 0 --lambda-g 10 --log-every 100]
            [--backend native|artifact] [--batch 100] --artifacts DIR
            [--metrics FILE] [--eval-points 20000] [--save FILE]
            [--resume FILE  (native: continue a checkpoint to its epochs)]
-  table    --which 1..5 [--backend native|artifact] [--epochs N --seeds K
+           [native sharding: --workers N (spawn N local worker processes)
+           | --worker-addrs HOST:PORT,..  (connect to running workers);
+           results are bitwise identical to a single-process run]
+  worker   --listen HOST:PORT [--threads T]   (serve shards; port 0 = auto)
+  table    --which 1..5|ac [--backend native|artifact] [--epochs N --seeds K
            --threads T --eval-points M --lr0 LR --out DIR]
-           [artifact: --artifacts DIR] [native (tables 4, 5): --batch N
-           --dims D,.. --vs V,.. (table 5) --v V --lambda-g L (table 4)]
+           [artifact: --artifacts DIR] [native (4, 5, ac): --batch N
+           --dims D,.. --vs V,.. (table 5) --v V (4, ac) --lambda-g L (4)]
   memmodel [--batch 100 --dims 100,1000,10000 --v 16 --order 2]";
 
 fn cmd_info(mut args: Args) -> Result<()> {
@@ -78,6 +87,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let default_backend = if cfg!(feature = "xla") { "artifact" } else { "native" };
     let backend = args.get_or("backend", default_backend);
     let batch_n: usize = args.get_parse("batch", 100usize)?;
+    let workers: usize = args.get_parse("workers", 0usize)?;
+    let worker_addrs = args.get("worker-addrs");
 
     let (artifact_dir, configs) = match config_path {
         Some(path) => {
@@ -105,15 +116,51 @@ fn cmd_train(mut args: Args) -> Result<()> {
     if save.is_some() && configs.len() > 1 {
         bail!("--save writes a single checkpoint; runs would clobber it — use one run config");
     }
-    match backend.as_str() {
-        "native" => {
+    match parse_backend(&backend)? {
+        Backend::Native => {
             if resume.is_some() && configs.len() > 1 {
                 bail!("--resume continues one checkpointed run; drop the multi-run config");
             }
+            if workers > 0 && worker_addrs.is_some() {
+                bail!(
+                    "--workers spawns local worker processes, --worker-addrs connects to \
+                     running ones — give one or the other"
+                );
+            }
+            // Spawned workers outlive every run of this invocation; the
+            // pool kills its children on drop.  The machine's thread
+            // budget is split across the workers — N workers each at the
+            // full default would oversubscribe the one machine this flag
+            // targets N times over.
+            let worker_pool = if workers > 0 {
+                let threads_per_worker = (nn::default_threads() / workers).max(1);
+                Some(LocalWorkerPool::spawn(workers, threads_per_worker)?)
+            } else {
+                None
+            };
+            let cluster_addrs: Option<Vec<String>> = match (&worker_pool, &worker_addrs) {
+                (Some(p), _) => Some(p.addrs.clone()),
+                (None, Some(list)) => Some(
+                    list.split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect(),
+                ),
+                (None, None) => None,
+            };
+            let make_backend = |cfg: &TrainConfig| -> Result<Box<dyn ShardBackend>> {
+                match &cluster_addrs {
+                    Some(addrs) => Ok(Box::new(TcpClusterBackend::connect(
+                        addrs,
+                        JobSpec::from_config(cfg),
+                    )?)),
+                    None => Ok(Box::new(InProcessBackend::new(nn::default_threads()))),
+                }
+            };
             for cfg in configs {
                 let mut trainer = match &resume {
                     Some(path) => {
-                        let t = NativeTrainer::resume(path, nn::default_threads())?;
+                        let t = NativeTrainer::resume_with_backend(path, &make_backend)?;
                         println!(
                             "== native-{} (resumed at step {}) ==",
                             t.config.label(),
@@ -131,7 +178,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
                     None => {
                         // label comes from the trainer's config: it may
                         // upgrade the estimator (bihar -> Gaussian probes)
-                        let t = NativeTrainer::new(cfg.clone(), batch_n)?;
+                        let shard_backend = make_backend(&cfg)?;
+                        let t = NativeTrainer::with_backend(cfg, batch_n, shard_backend)?;
                         println!("== native-{} ==", t.config.label());
                         t
                     }
@@ -142,11 +190,11 @@ fn cmd_train(mut args: Args) -> Result<()> {
                 };
                 let summary = trainer.run(&mut logger)?;
                 println!(
-                    "steps={} final_loss={:.4e} speed={} threads={}",
+                    "steps={} final_loss={:.4e} speed={} executor={}",
                     summary.steps,
                     summary.final_loss,
                     table::fmt_speed(summary.it_per_sec),
-                    trainer.threads()
+                    trainer.executor()
                 );
                 if eval_points > 0 {
                     let run_cfg = &trainer.config;
@@ -162,9 +210,12 @@ fn cmd_train(mut args: Args) -> Result<()> {
             }
             Ok(())
         }
-        "artifact" | "xla" => {
+        Backend::Artifact => {
             if resume.is_some() {
                 bail!("--resume is supported by --backend native only");
+            }
+            if workers > 0 || worker_addrs.is_some() {
+                bail!("--workers/--worker-addrs shard the native backend only");
             }
             #[cfg(feature = "xla")]
             {
@@ -215,27 +266,47 @@ fn cmd_train(mut args: Args) -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown backend {other} (native|artifact)"),
     }
 }
 
+/// `hte-pinn worker --listen HOST:PORT [--threads T]`: serve shard work
+/// to a remote `train --worker-addrs` coordinator (or a local
+/// `--workers N` parent).  Prints `listening on <addr>` once bound —
+/// with port 0 the kernel picks a free port and the printed address is
+/// how the parent learns it.
+fn cmd_worker(mut args: Args) -> Result<()> {
+    let listen = args.get("listen");
+    let threads: usize = args.get_parse("threads", nn::default_threads())?;
+    args.finish()?;
+    let Some(listen) = listen else {
+        bail!("worker needs --listen HOST:PORT (port 0 picks a free port)\n{USAGE}");
+    };
+    let listener = std::net::TcpListener::bind(&listen)
+        .with_context(|| format!("binding the worker listener on {listen}"))?;
+    let addr = listener.local_addr()?;
+    println!("listening on {addr}");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    serve(listener, threads)
+}
+
 fn cmd_table(mut args: Args) -> Result<()> {
-    let which: u8 = args.get_parse("which", 0u8)?;
+    let which = args.get_or("which", "0");
     let default_backend = if cfg!(feature = "xla") { "artifact" } else { "native" };
     let backend = args.get_or("backend", default_backend);
-    match backend.as_str() {
-        "native" => cmd_table_native(which, args),
-        "artifact" | "xla" => cmd_table_artifact(which, args),
-        other => bail!("unknown table backend {other} (native|artifact)"),
+    match parse_backend(&backend)? {
+        Backend::Native => cmd_table_native(&which, args),
+        Backend::Artifact => cmd_table_artifact(&which, args),
     }
 }
 
 /// Native (default-build) table driver: Table 4 through the gPINN
-/// residual operator and Table 5 through the order-4 TVP engine, no
-/// artifacts required.
-fn cmd_table_native(which: u8, mut args: Args) -> Result<()> {
+/// residual operator, Table 5 through the order-4 TVP engine, and the
+/// Allen–Cahn exact-vs-HTE sweep (`--which ac`), no artifacts required.
+fn cmd_table_native(which: &str, mut args: Args) -> Result<()> {
     use hte_pinn::coordinator::{
-        experiment_biharmonic_native, experiment_gpinn_native, NativeExperimentOpts,
+        experiment_allen_cahn_native, experiment_biharmonic_native, experiment_gpinn_native,
+        NativeExperimentOpts,
     };
     use hte_pinn::util::json::Value;
 
@@ -256,11 +327,14 @@ fn cmd_table_native(which: u8, mut args: Args) -> Result<()> {
     let lambda_g: f32 = args.get_parse("lambda-g", 1.0)?;
     let out = PathBuf::from(args.get_or("out", "results"));
     args.finish()?;
-    if which == 4 && vs_given {
-        bail!("--vs is the table-5 probe sweep; table 4 takes a single --v");
+    if (which == "4" || which == "ac") && vs_given {
+        bail!("--vs is the table-5 probe sweep; tables 4 and ac take a single --v");
     }
-    if which == 5 && (v_given || lambda_given) {
+    if which == "5" && (v_given || lambda_given) {
         bail!("--v/--lambda-g apply to table 4; table 5 sweeps probes via --vs");
+    }
+    if which == "ac" && lambda_given {
+        bail!("--lambda-g is the table-4 gPINN weight; the ac sweep has no gradient term");
     }
 
     let opts = NativeExperimentOpts {
@@ -272,20 +346,22 @@ fn cmd_table_native(which: u8, mut args: Args) -> Result<()> {
         batch_n: batch,
     };
     let (name, title, rows) = match which {
-        4 => (
+        "4" => (
             "table4_native",
             "Table 4 (native): gPINN (HTE-accelerated, jet-stream pipeline)",
             experiment_gpinn_native(&opts, &dims, v, lambda_g)?,
         ),
-        5 => (
+        "5" => (
             "table5_native",
             "Table 5 (native): biharmonic TVP-HTE, order-4 jets",
             experiment_biharmonic_native(&opts, &dims, &vs)?,
         ),
-        other => bail!(
-            "the native table driver supports --which 4 (gPINN) and 5 (biharmonic); \
-             tables 1-3 need --backend artifact (--features xla); got {other}"
+        "ac" => (
+            "tableac_native",
+            "Table AC (native): Allen-Cahn exact trace vs HTE (jet-stream pipeline)",
+            experiment_allen_cahn_native(&opts, &dims, v)?,
         ),
+        other => return Err(unknown_native_table(other)),
     };
     let rendered = table::render(title, &rows);
     println!("{rendered}");
@@ -298,13 +374,16 @@ fn cmd_table_native(which: u8, mut args: Args) -> Result<()> {
 }
 
 #[cfg(feature = "xla")]
-fn cmd_table_artifact(which: u8, mut args: Args) -> Result<()> {
+fn cmd_table_artifact(which: &str, mut args: Args) -> Result<()> {
     use hte_pinn::coordinator::{
         experiment_biharmonic, experiment_bias, experiment_gpinn, experiment_sine_gordon,
         experiment_v_sweep, ExperimentOpts,
     };
     use hte_pinn::util::json::Value;
 
+    let which: u8 = which
+        .parse()
+        .with_context(|| format!("--which {which:?}: the artifact driver takes a table 1..=5"))?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let epochs: usize = args.get_parse("epochs", 2000)?;
     let seeds: usize = args.get_parse("seeds", 3)?;
@@ -363,10 +442,10 @@ fn cmd_table_artifact(which: u8, mut args: Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn cmd_table_artifact(_which: u8, _args: Args) -> Result<()> {
+fn cmd_table_artifact(_which: &str, _args: Args) -> Result<()> {
     bail!(
         "the artifact table driver needs --features xla \
-         (table 5 runs natively: --backend native)"
+         (tables 4, 5 and ac run natively: --backend native)"
     )
 }
 
@@ -402,6 +481,7 @@ fn main() -> Result<()> {
     match command.as_str() {
         "info" => cmd_info(args),
         "train" => cmd_train(args),
+        "worker" => cmd_worker(args),
         "table" => cmd_table(args),
         "memmodel" => cmd_memmodel(args),
         other => bail!("unknown command {other}\n{USAGE}"),

@@ -42,6 +42,16 @@ impl Mlp {
         self.layers.iter().map(|(w, b)| w.numel() + b.numel()).sum()
     }
 
+    /// Parameter count of the architecture at input dimension `d`,
+    /// without constructing a net — cluster workers validate a
+    /// coordinator's job spec against this before any weights move.
+    pub fn n_params_for(d: usize) -> usize {
+        Self::layer_dims(d)
+            .into_iter()
+            .map(|(fan_in, fan_out)| fan_in * fan_out + fan_out)
+            .sum()
+    }
+
     /// Raw forward pass for one point: x [d] -> scalar.
     pub fn forward(&self, x: &[f32]) -> f32 {
         let mut h = Tensor::from_vec(&[1, self.d], x.to_vec());
@@ -104,6 +114,7 @@ mod tests {
         let mlp = Mlp::init(d, &mut Xoshiro256pp::new(0));
         let expect = d * 128 + 128 + 2 * (128 * 128 + 128) + 128 + 1;
         assert_eq!(mlp.n_params(), expect);
+        assert_eq!(Mlp::n_params_for(d), expect, "instance-free count must agree");
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub use native_loss::{
     bihar_residual_loss_and_grad, bihar_residual_loss_reference, default_residual_op,
     default_threads, factor_jets, gpinn_residual_loss_and_grad, gpinn_residual_loss_reference,
     hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference,
-    residual_op_for, AllenCahnResidual, BiharResidual, ChunkCtx, GpinnResidual, NativeBatch,
-    NativeEngine, ResidualOp, TraceResidual, CHUNK_POINTS,
+    residual_op_for, shard_loss_grad, unbiased_residual_loss_and_grad,
+    unbiased_residual_loss_reference, AllenCahnResidual, BiharResidual, ChunkCtx, GpinnResidual,
+    NativeBatch, NativeEngine, ResidualOp, TraceResidual, UnbiasedTrace, CHUNK_POINTS,
 };

@@ -10,9 +10,11 @@
 //! Architecture (DESIGN.md §7):
 //!
 //! * [`ResidualOp`] — a pluggable residual operator: its jet order, its
-//!   probe-distribution requirement, and the per-probe contraction that
-//!   turns constrained jet streams into the chunk loss.  The trace
-//!   families ([`TraceResidual`]), the gradient-enhanced PINN
+//!   probe policy (distribution requirement, independent probe-set
+//!   count), and the per-probe contraction that turns constrained jet
+//!   streams into the chunk loss.  The trace families
+//!   ([`TraceResidual`]), the unbiased two-sample loss
+//!   ([`UnbiasedTrace`], Eq. 8), the gradient-enhanced PINN
 //!   ([`GpinnResidual`]) and the order-4 biharmonic TVP
 //!   ([`BiharResidual`]) are each ~40-line operators over the shared
 //!   pipeline instead of per-family copies of the whole engine.
@@ -22,10 +24,14 @@
 //!   `broadcast_rows`/`tile_rows` tape ops and the fused `tanh_jet`
 //!   node.  The hard constraint is applied by one generic Leibniz
 //!   combination over [`factor_jets`] (orders 2, 3 and 4 share the
-//!   entry).  The batch is sharded into fixed-size point chunks
-//!   processed by scoped worker threads, each owning a workspace-pooled
-//!   tape; gradients reduce in task order, so results are bitwise
-//!   identical for any thread count.
+//!   entry).  Execution goes through the shard layer
+//!   (`runtime::shard`, DESIGN.md §10): a deterministic
+//!   [`crate::runtime::ShardPlan`] over fixed-size point chunks, a
+//!   pluggable [`crate::runtime::ShardBackend`] (in-process scoped
+//!   threads by default, a TCP worker cluster via
+//!   [`NativeEngine::with_backend`]), and a shard-index-ordered
+//!   reduction — so results are bitwise identical for any thread *or
+//!   worker* count.
 //! * [`hte_residual_loss_and_grad_pairgrid`] — the original duplicated
 //!   `[n·v, d]` pair-grid formulation, kept as the ablation baseline that
 //!   `BENCH_native.json` measures the speedup against.
@@ -34,6 +40,9 @@ use anyhow::{bail, Result};
 
 use crate::autodiff::{Tape, Var};
 use crate::pde::{Domain, OperatorKind, PdeProblem};
+use crate::runtime::{
+    merge_shard_results, InProcessBackend, Shard, ShardBackend, ShardJob, ShardPlan, ShardResult,
+};
 use crate::tensor::Tensor;
 
 use super::jet::BINOM;
@@ -107,8 +116,27 @@ pub trait ResidualOp: Sync {
         false
     }
 
+    /// Independent probe matrices the contraction consumes per step.
+    /// 1 for every single-estimate operator; 2 for the unbiased
+    /// two-sample loss (Eq. 8), whose batch carries both matrices
+    /// stacked as `[2·V, d]` (rows `0..V` = first set, `V..2V` =
+    /// second).  Trainers size the probe buffer and fork one RNG stream
+    /// per set off this.
+    fn probe_sets(&self) -> usize {
+        1
+    }
+
     /// Human-readable operator name (labels and error messages).
     fn name(&self) -> &'static str;
+
+    /// Operator-level scalar weight, if the operator has one (gPINN's
+    /// λ).  The cluster backend compares this against the λ its workers
+    /// were handshaken with, so a rank-0 operator configured differently
+    /// from the job spec fails loudly instead of silently training with
+    /// the workers' value.
+    fn lambda_g(&self) -> Option<f32> {
+        None
+    }
 
     /// Emit the unnormalized chunk loss `0.5·Σ_{i∈chunk} r_i² [+ extra
     /// per-point terms]`; the engine divides by n after the ordered
@@ -140,6 +168,65 @@ impl ResidualOp for TraceResidual {
     }
 }
 
+/// Unbiased two-sample trace residual (Eq. 8, Table 3): the product of
+/// two *independent* Hutchinson estimates of the same residual,
+///
+///   L = (1/2N) Σ_i r_i·r̂_i,
+///   r_i = mean_{k<V}   D²u(x_i)[v_k]  + sin(u(x_i)) − g(x_i),
+///   r̂_i = mean_{V≤k<2V} D²u(x_i)[v_k] + sin(u(x_i)) − g(x_i),
+///
+/// so E[L] recovers the exact-trace residual loss without the
+/// single-sample variance bias of Eq. 7 (E[r·r̂] = E[r]·E[r̂]).  The
+/// batch's probe matrix holds both sets stacked ([`ResidualOp::probe_sets`]
+/// = 2); the half-means come from constant 2/0 masks under the existing
+/// `group_mean` (weight 2 over half the group = the half-mean), so no
+/// new tape op is needed and the reverse pass yields the product-rule
+/// gradient 0.5·(r̂·∇r + r·∇r̂) for free.
+pub struct UnbiasedTrace;
+
+impl ResidualOp for UnbiasedTrace {
+    fn order(&self) -> usize {
+        2
+    }
+    fn probe_sets(&self) -> usize {
+        2
+    }
+    fn name(&self) -> &'static str {
+        "unbiased-trace"
+    }
+    fn chunk_loss(&self, tape: &mut Tape, ctx: &mut ChunkCtx) -> Var {
+        let (nc, v) = (ctx.nc, ctx.v);
+        assert!(v >= 2 && v % 2 == 0, "unbiased trace needs two stacked probe sets, got v={v}");
+        let half = v / 2;
+        let s2 = ctx.stream(tape, 2); // [nc·v, 1]
+        // weight-2 masks: group_mean over all v rows of (2·s on one half,
+        // 0 on the other) is exactly that half's mean (2/v = 1/half)
+        let mask_a = tape.leaf_with(&[nc * v, 1], |buf| {
+            for (idx, slot) in buf.iter_mut().enumerate() {
+                *slot = if idx % v < half { 2.0 } else { 0.0 };
+            }
+        });
+        let mask_b = tape.leaf_with(&[nc * v, 1], |buf| {
+            for (idx, slot) in buf.iter_mut().enumerate() {
+                *slot = if idx % v < half { 0.0 } else { 2.0 };
+            }
+        });
+        let wa = tape.mul(s2, mask_a);
+        let est_a = tape.group_mean(wa, v); // [nc, 1]
+        let wb = tape.mul(s2, mask_b);
+        let est_b = tape.group_mean(wb, v); // [nc, 1]
+        let u0 = ctx.primal(tape);
+        let sin_u0 = tape.sin(u0);
+        let g = ctx.forcing_leaf(tape);
+        let common = tape.sub(sin_u0, g); // sin(u) − g, shared by r and r̂
+        let r = tape.add(est_a, common);
+        let r_hat = tape.add(est_b, common);
+        let prod = tape.mul(r, r_hat);
+        let sum = tape.sum_all(prod);
+        tape.scale(sum, 0.5)
+    }
+}
+
 /// Gradient-enhanced PINN (Section 4.2 / 3.5.1): the trace residual plus
 /// λ times the probe-contracted gradient-of-residual term
 ///
@@ -158,6 +245,9 @@ impl ResidualOp for GpinnResidual {
     }
     fn name(&self) -> &'static str {
         "gpinn"
+    }
+    fn lambda_g(&self) -> Option<f32> {
+        Some(self.lambda)
     }
     fn chunk_loss(&self, tape: &mut Tape, ctx: &mut ChunkCtx) -> Var {
         // residual term, exactly as TraceResidual
@@ -265,6 +355,7 @@ pub fn residual_op_for(
 ) -> Result<Box<dyn ResidualOp>> {
     match (problem.operator(), method) {
         (OperatorKind::SineGordon, "probe" | "hte") => Ok(Box::new(TraceResidual)),
+        (OperatorKind::SineGordon, "unbiased") => Ok(Box::new(UnbiasedTrace)),
         (OperatorKind::SineGordon, "gpinn" | "gpinn_probe") => {
             Ok(Box::new(GpinnResidual { lambda: lambda_g }))
         }
@@ -272,8 +363,8 @@ pub fn residual_op_for(
         (OperatorKind::Biharmonic, "probe" | "probe4" | "hte") => Ok(Box::new(BiharResidual)),
         (kind, other) => bail!(
             "method {other} is not supported by the native backend for the {kind:?} operator \
-             (supported: probe | hte | gpinn | gpinn_probe for SineGordon, probe | hte for \
-             AllenCahn, probe | probe4 | hte for Biharmonic)"
+             (supported: probe | hte | unbiased | gpinn | gpinn_probe for SineGordon, probe | \
+             hte for AllenCahn, probe | probe4 | hte for Biharmonic)"
         ),
     }
 }
@@ -449,42 +540,53 @@ impl<'a> ChunkCtx<'a> {
 }
 
 // ---------------------------------------------------------------------------
-// The generic probe-batched engine
+// The generic probe-batched engine (a facade over the shard layer)
 // ---------------------------------------------------------------------------
 
-/// Residual points per worker task.  Fixed — *not* derived from the
-/// thread count — so the task decomposition, and with it every f32
-/// summation order, is identical no matter how many workers run.
-/// Public so the memory model / benches can reason about the live tape.
+/// Residual points per shard.  Fixed — *not* derived from the executor
+/// count — so the shard decomposition ([`ShardPlan`]), and with it every
+/// f32 summation order, is identical no matter how many threads or
+/// worker processes run.  Public so the memory model / benches can
+/// reason about the live tape.
 pub const CHUNK_POINTS: usize = 4;
 
-/// Reusable native training engine: per-worker tapes (each with its own
-/// buffer pool), per-task gradient buffers, deterministic ordered
-/// reduction.  Create once, call [`NativeEngine::loss_and_grad`] per step.
+/// Reusable native training engine: a [`ShardPlan`] per step, a
+/// pluggable [`ShardBackend`] (in-process threads by default, a TCP
+/// worker cluster via [`NativeEngine::with_backend`]), and the
+/// shard-index-ordered reduction.  Create once, call
+/// [`NativeEngine::loss_and_grad`] per step.  Which backend runs the
+/// shards never changes the resulting bits (same-ISA caveat for remote
+/// workers: DESIGN.md §10).
 pub struct NativeEngine {
-    threads: usize,
-    workers: Vec<Tape>,
-    task_grads: Vec<Vec<f32>>,
-    task_loss: Vec<f64>,
+    backend: Box<dyn ShardBackend>,
+    results: Vec<ShardResult>,
 }
 
 impl NativeEngine {
+    /// In-process engine with `threads` worker threads.
     pub fn new(threads: usize) -> Self {
-        Self {
-            threads: threads.max(1),
-            workers: Vec::new(),
-            task_grads: Vec::new(),
-            task_loss: Vec::new(),
-        }
+        Self::with_backend(Box::new(InProcessBackend::new(threads)))
     }
 
-    /// Engine sized to the machine (capped — the chunks are small).
+    /// Engine over an explicit shard backend (remote clusters, tests).
+    pub fn with_backend(backend: Box<dyn ShardBackend>) -> Self {
+        Self { backend, results: Vec::new() }
+    }
+
+    /// Engine sized to the machine (capped — the shards are small).
     pub fn with_default_threads() -> Self {
         Self::new(default_threads())
     }
 
+    /// Concurrent executors of the current backend (threads or worker
+    /// processes).
     pub fn threads(&self) -> usize {
-        self.threads
+        self.backend.parallelism()
+    }
+
+    /// Human-readable executor description for run banners.
+    pub fn backend_label(&self) -> String {
+        self.backend.label()
     }
 
     /// Residual loss and its parameter gradient (packed order) under the
@@ -497,13 +599,16 @@ impl NativeEngine {
         problem: &dyn PdeProblem,
         batch: &NativeBatch,
         grad: &mut Vec<f32>,
-    ) -> f32 {
+    ) -> Result<f32> {
         self.loss_and_grad_with(mlp, problem, default_residual_op(problem), batch, grad)
     }
 
     /// Residual loss and its parameter gradient (packed order), written
     /// into `grad` (resized to `mlp.n_params()`), for an explicit
-    /// [`ResidualOp`].  One generic kernel serves every family.
+    /// [`ResidualOp`].  One generic kernel serves every family; one
+    /// shard plan + ordered merge serves every backend.  Errors only
+    /// surface from fallible backends (a remote worker dying mid-step);
+    /// the in-process backend cannot fail.
     pub fn loss_and_grad_with(
         &mut self,
         mlp: &Mlp,
@@ -511,69 +616,11 @@ impl NativeEngine {
         op: &dyn ResidualOp,
         batch: &NativeBatch,
         grad: &mut Vec<f32>,
-    ) -> f32 {
-        let n = batch.n;
-        let n_params = mlp.n_params();
-        let n_tasks = n.div_ceil(CHUNK_POINTS);
-        let threads = self.threads.min(n_tasks).max(1);
-        if self.workers.len() < threads {
-            self.workers.resize_with(threads, Tape::new);
-        }
-        if self.task_grads.len() < n_tasks {
-            self.task_grads.resize_with(n_tasks, Vec::new);
-        }
-        self.task_loss.resize(n_tasks.max(self.task_loss.len()), 0.0);
-
-        let workers = &mut self.workers;
-        let task_grads = &mut self.task_grads[..n_tasks];
-        let task_loss = &mut self.task_loss[..n_tasks];
-        if threads == 1 {
-            let tape = &mut workers[0];
-            for (t, (gbuf, lslot)) in task_grads.iter_mut().zip(task_loss.iter_mut()).enumerate()
-            {
-                let start = t * CHUNK_POINTS;
-                let nc = CHUNK_POINTS.min(n - start);
-                *lslot = chunk_loss_grad(tape, mlp, op, problem, batch, start, nc, gbuf);
-            }
-        } else {
-            let per = n_tasks.div_ceil(threads);
-            let grad_chunks = task_grads.chunks_mut(per);
-            let loss_chunks = task_loss.chunks_mut(per);
-            std::thread::scope(|s| {
-                for (w, (tape, (gchunk, lchunk))) in
-                    workers.iter_mut().zip(grad_chunks.zip(loss_chunks)).enumerate()
-                {
-                    let first_task = w * per;
-                    s.spawn(move || {
-                        for (j, (gbuf, lslot)) in
-                            gchunk.iter_mut().zip(lchunk.iter_mut()).enumerate()
-                        {
-                            let start = (first_task + j) * CHUNK_POINTS;
-                            let nc = CHUNK_POINTS.min(n - start);
-                            *lslot =
-                                chunk_loss_grad(tape, mlp, op, problem, batch, start, nc, gbuf);
-                        }
-                    });
-                }
-            });
-        }
-
-        // Ordered reduction: task index order, independent of threads.
-        grad.clear();
-        grad.resize(n_params, 0.0);
-        let mut loss_sum = 0.0f64;
-        for t in 0..n_tasks {
-            loss_sum += self.task_loss[t];
-            debug_assert_eq!(self.task_grads[t].len(), n_params);
-            for (o, &x) in grad.iter_mut().zip(&self.task_grads[t]) {
-                *o += x;
-            }
-        }
-        let inv_n = 1.0 / n as f32;
-        for o in grad.iter_mut() {
-            *o *= inv_n;
-        }
-        (loss_sum / n as f64) as f32
+    ) -> Result<f32> {
+        let plan = ShardPlan::for_batch(batch.n);
+        let job = ShardJob { mlp, problem, op, batch };
+        self.backend.run_shards(&plan, &job, &mut self.results)?;
+        merge_shard_results(&self.results, batch.n, mlp.n_params(), grad)
     }
 }
 
@@ -663,21 +710,22 @@ fn jet_mlp_streams(
     h
 }
 
-/// One chunk task for any [`ResidualOp`]: build the jet streams, hand the
+/// One shard task for any [`ResidualOp`]: build the jet streams, hand the
 /// constrained-stream context to the operator's contraction, reverse the
-/// tape.  This is the single kernel the old `chunk_loss_grad` /
-/// `chunk_loss_grad_bihar` pair collapsed into.
-#[allow(clippy::too_many_arguments)]
-fn chunk_loss_grad(
+/// tape.  This is the single kernel every [`ShardBackend`] runs — it
+/// consumes a [`Shard`] (an entry of the executor-independent
+/// [`ShardPlan`]), never a thread or worker id, so the bits it produces
+/// depend only on the shard itself.
+pub fn shard_loss_grad(
     tape: &mut Tape,
     mlp: &Mlp,
     op: &dyn ResidualOp,
     problem: &dyn PdeProblem,
     batch: &NativeBatch,
-    start: usize,
-    nc: usize,
+    shard: &Shard,
     grad_out: &mut Vec<f32>,
 ) -> f64 {
+    let (start, nc) = (shard.start, shard.nc);
     let order = op.order();
     tape.reset();
     let params = param_leaves(tape, mlp);
@@ -700,7 +748,9 @@ pub fn hte_residual_loss_and_grad(
 ) -> (f32, Vec<f32>) {
     let mut engine = NativeEngine::new(1);
     let mut grad = Vec::new();
-    let loss = engine.loss_and_grad_with(mlp, problem, &TraceResidual, batch, &mut grad);
+    let loss = engine
+        .loss_and_grad_with(mlp, problem, &TraceResidual, batch, &mut grad)
+        .expect("in-process shard backend cannot fail");
     (loss, grad)
 }
 
@@ -714,7 +764,9 @@ pub fn bihar_residual_loss_and_grad(
     debug_assert_eq!(problem.operator(), OperatorKind::Biharmonic);
     let mut engine = NativeEngine::new(1);
     let mut grad = Vec::new();
-    let loss = engine.loss_and_grad_with(mlp, problem, &BiharResidual, batch, &mut grad);
+    let loss = engine
+        .loss_and_grad_with(mlp, problem, &BiharResidual, batch, &mut grad)
+        .expect("in-process shard backend cannot fail");
     (loss, grad)
 }
 
@@ -728,7 +780,25 @@ pub fn allen_cahn_residual_loss_and_grad(
     debug_assert_eq!(problem.operator(), OperatorKind::AllenCahn);
     let mut engine = NativeEngine::new(1);
     let mut grad = Vec::new();
-    let loss = engine.loss_and_grad_with(mlp, problem, &AllenCahnResidual, batch, &mut grad);
+    let loss = engine
+        .loss_and_grad_with(mlp, problem, &AllenCahnResidual, batch, &mut grad)
+        .expect("in-process shard backend cannot fail");
+    (loss, grad)
+}
+
+/// Unbiased two-sample trace loss (Eq. 8) and its parameter gradient
+/// (packed order), through the probe-batched engine.  `batch.probes`
+/// must hold the two independent probe matrices stacked ([2·V, d]).
+pub fn unbiased_residual_loss_and_grad(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> (f32, Vec<f32>) {
+    let mut engine = NativeEngine::new(1);
+    let mut grad = Vec::new();
+    let loss = engine
+        .loss_and_grad_with(mlp, problem, &UnbiasedTrace, batch, &mut grad)
+        .expect("in-process shard backend cannot fail");
     (loss, grad)
 }
 
@@ -743,7 +813,9 @@ pub fn gpinn_residual_loss_and_grad(
     let mut engine = NativeEngine::new(1);
     let mut grad = Vec::new();
     let op = GpinnResidual { lambda };
-    let loss = engine.loss_and_grad_with(mlp, problem, &op, batch, &mut grad);
+    let loss = engine
+        .loss_and_grad_with(mlp, problem, &op, batch, &mut grad)
+        .expect("in-process shard backend cannot fail");
     (loss, grad)
 }
 
@@ -794,6 +866,39 @@ pub fn allen_cahn_residual_loss_reference(
         let u0 = mlp.forward_constrained(x, problem.factor(x));
         let r = est - u0 * u0 * u0 + u0 - problem.forcing(x, batch.coeff);
         acc += 0.5 * r * r;
+    }
+    acc / n as f64
+}
+
+/// Unbiased two-sample loss (Eq. 8) only, via the (non-tape) f64 jet
+/// engine — the FD-check oracle for the `unbiased` tape path.  The two
+/// probe sets are the stacked halves of `batch.probes`.
+pub fn unbiased_residual_loss_reference(
+    mlp: &Mlp,
+    problem: &dyn PdeProblem,
+    batch: &NativeBatch,
+) -> f64 {
+    let (n, v, d) = (batch.n, batch.v, mlp.d);
+    assert!(v >= 2 && v % 2 == 0, "unbiased trace needs two stacked probe sets, got v={v}");
+    let half = v / 2;
+    let mut acc = 0.0;
+    for i in 0..n {
+        let x = &batch.xs[i * d..(i + 1) * d];
+        let (mut est_a, mut est_b) = (0.0, 0.0);
+        for k in 0..v {
+            let probe = &batch.probes[k * d..(k + 1) * d];
+            let d2 = super::jet::jet_forward(mlp, problem, x, probe, 2)[2];
+            if k < half {
+                est_a += d2;
+            } else {
+                est_b += d2;
+            }
+        }
+        est_a /= half as f64;
+        est_b /= half as f64;
+        let u0 = mlp.forward_constrained(x, problem.factor(x));
+        let common = u0.sin() - problem.forcing(x, batch.coeff);
+        acc += 0.5 * (est_a + common) * (est_b + common);
     }
     acc / n as f64
 }
@@ -1098,7 +1203,7 @@ mod tests {
         for threads in [1usize, 2, 3, 7] {
             let mut engine = NativeEngine::new(threads);
             let mut grad = Vec::new();
-            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad);
+            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad).unwrap();
             grads.push((loss, grad));
         }
         let (loss0, g0) = &grads[0];
@@ -1117,10 +1222,10 @@ mod tests {
         let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 6, v: 3 };
         let mut engine = NativeEngine::new(2);
         let mut g1 = Vec::new();
-        let l1 = engine.loss_and_grad(&mlp, &problem, &batch, &mut g1);
+        let l1 = engine.loss_and_grad(&mlp, &problem, &batch, &mut g1).unwrap();
         let g1c = g1.clone();
         let mut g2 = Vec::new();
-        let l2 = engine.loss_and_grad(&mlp, &problem, &batch, &mut g2);
+        let l2 = engine.loss_and_grad(&mlp, &problem, &batch, &mut g2).unwrap();
         assert_eq!(l1.to_bits(), l2.to_bits());
         for (a, b) in g1c.iter().zip(&g2) {
             assert_eq!(a.to_bits(), b.to_bits());
@@ -1224,7 +1329,7 @@ mod tests {
         for threads in [1usize, 2, 3, 7] {
             let mut engine = NativeEngine::new(threads);
             let mut grad = Vec::new();
-            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad);
+            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad).unwrap();
             grads.push((loss, grad));
         }
         let (loss0, g0) = &grads[0];
@@ -1334,7 +1439,9 @@ mod tests {
         for threads in [1usize, 2, 3, 7] {
             let mut engine = NativeEngine::new(threads);
             let mut grad = Vec::new();
-            let loss = engine.loss_and_grad_with(&mlp, &problem, &op, &batch, &mut grad);
+            let loss = engine
+                .loss_and_grad_with(&mlp, &problem, &op, &batch, &mut grad)
+                .unwrap();
             grads.push((loss, grad));
         }
         let (loss0, g0) = &grads[0];
@@ -1357,6 +1464,15 @@ mod tests {
         assert_eq!(residual_op_for(&sg, "gpinn_probe", 1.0).unwrap().order(), 3);
         assert_eq!(residual_op_for(&bihar, "probe4", 1.0).unwrap().order(), 4);
         assert!(residual_op_for(&bihar, "probe4", 1.0).unwrap().requires_gaussian_probes());
+        // the unbiased two-sample loss consumes two probe matrices
+        let unbiased = residual_op_for(&sg, "unbiased", 1.0).unwrap();
+        assert_eq!(unbiased.order(), 2);
+        assert_eq!(unbiased.probe_sets(), 2);
+        assert_eq!(residual_op_for(&sg, "probe", 1.0).unwrap().probe_sets(), 1);
+        // Eq. 8 is the Sine-Gordon Table 3 experiment; other families
+        // keep their single-sample losses
+        assert!(residual_op_for(&ac, "unbiased", 1.0).is_err());
+        assert!(residual_op_for(&bihar, "unbiased", 1.0).is_err());
         // "hte" aliases each family's probe estimator
         assert_eq!(residual_op_for(&sg, "hte", 1.0).unwrap().order(), 2);
         assert_eq!(residual_op_for(&ac, "hte", 1.0).unwrap().order(), 2);
@@ -1441,7 +1557,109 @@ mod tests {
         for threads in [1usize, 2, 3, 7] {
             let mut engine = NativeEngine::new(threads);
             let mut grad = Vec::new();
-            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad);
+            let loss = engine.loss_and_grad(&mlp, &problem, &batch, &mut grad).unwrap();
+            grads.push((loss, grad));
+        }
+        let (loss0, g0) = &grads[0];
+        for (loss, g) in &grads[1..] {
+            assert_eq!(loss.to_bits(), loss0.to_bits(), "loss differs across thread counts");
+            assert_eq!(g.len(), g0.len());
+            for (a, b) in g.iter().zip(g0) {
+                assert_eq!(a.to_bits(), b.to_bits(), "gradient differs across thread counts");
+            }
+        }
+    }
+
+    /// Unbiased case: the probe matrix holds two independent stacked
+    /// sets, `v` counts probes per set (batch.v = 2·v total rows).
+    fn setup_unbiased(
+        d: usize,
+        n: usize,
+        v: usize,
+    ) -> (Mlp, SineGordon2Body, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(47);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = SineGordon2Body::new(d);
+        let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; 2 * v * d];
+        fill_rademacher(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; d - 1];
+        Normal::new().fill_f32(&mut rng, &mut coeff);
+        (mlp, problem, xs, probes, coeff)
+    }
+
+    #[test]
+    fn unbiased_engine_matches_reference_across_shapes() {
+        // per-set V down to 1 (2 total rows), plus chunk-tail batch sizes
+        for (d, n, v) in [(3, 1, 1), (4, 1, 4), (4, 2, 1), (5, 6, 3), (8, 9, 4)] {
+            let (mlp, problem, xs, probes, coeff) = setup_unbiased(d, n, v);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v: 2 * v };
+            let (loss, _) = unbiased_residual_loss_and_grad(&mlp, &problem, &batch);
+            let reference = unbiased_residual_loss_reference(&mlp, &problem, &batch);
+            assert!(
+                (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+                "(d={d}, n={n}, v={v}): {loss} vs {reference}"
+            );
+        }
+    }
+
+    /// With both probe sets holding the *same* rows, r = r̂ and the
+    /// product loss collapses to the biased Eq. 7 loss over one set.
+    #[test]
+    fn unbiased_with_identical_probe_sets_equals_biased_trace() {
+        let (mlp, problem, xs, probes, coeff) = setup(5, 6, 3);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 6, v: 3 };
+        let (biased, _) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+        let mut stacked = probes.clone();
+        stacked.extend_from_slice(&probes);
+        let batch2 = NativeBatch { xs: &xs, probes: &stacked, coeff: &coeff, n: 6, v: 6 };
+        let (unbiased, _) = unbiased_residual_loss_and_grad(&mlp, &problem, &batch2);
+        assert!(
+            (biased - unbiased).abs() < 1e-5 * (1.0 + biased.abs()),
+            "{biased} vs {unbiased}"
+        );
+    }
+
+    #[test]
+    fn unbiased_grad_matches_finite_differences() {
+        let (mut mlp, problem, xs, probes, coeff) = setup_unbiased(4, 3, 2);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 3, v: 4 };
+        let (_, grad) = unbiased_residual_loss_and_grad(&mlp, &problem, &batch);
+        let gmax: f32 = grad.iter().map(|g| g.abs()).fold(0.0, f32::max);
+        let flat0 = mlp.pack();
+        let idxs = [0usize, 7, 130, 600, flat0.len() - 1, flat0.len() - 200];
+        let h = 1e-3f32;
+        for &i in &idxs {
+            let mut fp = flat0.clone();
+            fp[i] += h;
+            mlp.unpack_into(&fp);
+            let lp = unbiased_residual_loss_reference(&mlp, &problem, &batch);
+            let mut fm = flat0.clone();
+            fm[i] -= h;
+            mlp.unpack_into(&fm);
+            let lm = unbiased_residual_loss_reference(&mlp, &problem, &batch);
+            mlp.unpack_into(&flat0);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()) + 1e-2 * gmax,
+                "param {i}: tape {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn unbiased_multithreaded_gradient_is_bitwise_identical_across_shards() {
+        let (mlp, problem, xs, probes, coeff) = setup_unbiased(5, 11, 4);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 11, v: 8 };
+        let mut grads: Vec<(f32, Vec<f32>)> = Vec::new();
+        for threads in [1usize, 2, 3, 7] {
+            let mut engine = NativeEngine::new(threads);
+            let mut grad = Vec::new();
+            let loss = engine
+                .loss_and_grad_with(&mlp, &problem, &UnbiasedTrace, &batch, &mut grad)
+                .unwrap();
             grads.push((loss, grad));
         }
         let (loss0, g0) = &grads[0];
@@ -1503,7 +1721,7 @@ mod tests {
             let mut probes = vec![0.0f32; 4 * 4];
             fill_rademacher(&mut rng, &mut probes);
             let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 8, v: 4 };
-            engine.loss_and_grad(&mlp, &problem, &batch, &mut grad);
+            engine.loss_and_grad(&mlp, &problem, &batch, &mut grad).unwrap();
             let mut flat = mlp.pack();
             adam_step(&mut flat, &mut m, &mut v_state, &mut t, &grad, 2e-3);
             mlp.unpack_into(&flat);

@@ -1,0 +1,1169 @@
+//! TCP cluster transport for the shard layer: `hte-pinn worker` serve
+//! loop, the rank-0 [`TcpClusterBackend`], and the framed wire protocol
+//! between them (DESIGN.md §10).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bitwise determinism.**  A worker runs the *same*
+//!    [`shard_loss_grad`](crate::nn::shard_loss_grad) kernel on the
+//!    *same* [`ShardPlan`] shards a local thread would, and returns
+//!    per-shard results tagged by shard index; rank 0 merges them with
+//!    the same shard-index-ordered reduction the in-process backend
+//!    feeds.  Probe/batch randomness never leaves rank 0 — workers
+//!    receive the sampled batch, so RNG streams (and checkpoint-resume
+//!    replay) are executor-independent by construction.  The guarantee
+//!    holds across processes on the same ISA; heterogeneous ISAs differ
+//!    in libm last bits (DESIGN.md §9).
+//! 2. **No hangs.**  Every frame is length-prefixed; a dead peer is an
+//!    EOF or reset, surfaced as a clear `anyhow` diagnostic naming the
+//!    worker, and reads carry a generous timeout
+//!    (`HTE_WORKER_TIMEOUT_SECS`, default 600) so a wedged-but-open
+//!    socket cannot block training forever.
+//! 3. **No serde dependency.**  The container format is hand-rolled
+//!    little-endian framing (`[magic u32][tag u8][len u64][payload]`)
+//!    with f32/f64 values shipped as raw bit patterns — exactly the
+//!    bits, nothing reinterpreted.
+//!
+//! Protocol (one coordinator per worker at a time):
+//!
+//! ```text
+//! coordinator                         worker
+//!   HELLO {version, family, method,
+//!          lambda_g, d, n_params}  ->
+//!                                  <- HELLO_ACK {op, chunk_points, threads}
+//!                                     (or ERROR {message})
+//!   per step:
+//!   STEP {step, shard_lo..hi, n, v,
+//!         chunk_points, base, params,
+//!         xs-slice, probes, coeff} ->
+//!                                  <- RESULT {step, [index, loss, grad]*}
+//!                                     (or ERROR {message})
+//!   (connection drop = goodbye)
+//! ```
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::ops::Range;
+use std::path::Path;
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{problem_for, TrainConfig};
+use crate::nn::{residual_op_for, Mlp, NativeBatch, ResidualOp, CHUNK_POINTS};
+use crate::pde::PdeProblem;
+use crate::rng::Xoshiro256pp;
+
+use super::shard::{prepare_results, ShardBackend, ShardJob, ShardPlan, ShardResult};
+
+/// Bumped whenever a frame layout changes; a version mismatch is a hard
+/// handshake error (shipping shards to a differently-planned binary
+/// would silently break the bitwise guarantee).
+pub const PROTOCOL_VERSION: u32 = 1;
+
+const FRAME_MAGIC: u32 = 0x4854_4550; // "HTEP"
+/// Hard cap against garbage peers / corrupted length words.
+const MAX_FRAME: u64 = 1 << 33;
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_STEP: u8 = 3;
+const TAG_RESULT: u8 = 4;
+const TAG_ERROR: u8 = 5;
+
+fn worker_timeout() -> Duration {
+    let secs = std::env::var("HTE_WORKER_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(600);
+    Duration::from_secs(secs.max(1))
+}
+
+// ---------------------------------------------------------------------------
+// Wire encoding (hand-rolled little-endian, bit-exact floats)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f32(&mut self, x: f32) {
+        self.u32(x.to_bits());
+    }
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        self.buf.reserve(xs.len() * 4);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated frame payload: wanted {n} bytes at offset {}, frame has {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> Result<&'a str> {
+        let n = self.u32()? as usize;
+        std::str::from_utf8(self.bytes(n)?).context("non-UTF8 string in frame")
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.f32s_into(&mut out)?;
+        Ok(out)
+    }
+    /// Decode into a caller-owned buffer (the rank-0 gather reuses each
+    /// shard's gradient Vec across steps — no steady-state allocation).
+    fn f32s_into(&mut self, out: &mut Vec<f32>) -> Result<()> {
+        let n = self.u64()? as usize;
+        let raw = self.bytes(n.checked_mul(4).context("absurd f32 array length")?)?;
+        out.clear();
+        out.reserve(n);
+        out.extend(raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+fn write_frame(stream: &mut TcpStream, tag: u8, payload: &[u8]) -> std::io::Result<()> {
+    let mut head = [0u8; 13];
+    head[..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    head[4] = tag;
+    head[5..].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    stream.write_all(&head)?;
+    stream.write_all(payload)?;
+    stream.flush()
+}
+
+/// Read one frame; `Ok(None)` on a clean EOF *between* frames (the peer
+/// said goodbye by closing), an error on anything torn mid-frame.
+fn read_frame_or_eof(stream: &mut TcpStream) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut head = [0u8; 13];
+    let mut got = 0usize;
+    while got < head.len() {
+        let k = stream.read(&mut head[got..]).context("reading frame header")?;
+        if k == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("peer closed the connection mid-frame header");
+        }
+        got += k;
+    }
+    let magic = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    if magic != FRAME_MAGIC {
+        bail!("bad frame magic {magic:#010x} — peer is not an hte-pinn shard endpoint");
+    }
+    let tag = head[4];
+    let len = u64::from_le_bytes([
+        head[5], head[6], head[7], head[8], head[9], head[10], head[11], head[12],
+    ]);
+    if len > MAX_FRAME {
+        bail!("absurd frame length {len} (corrupted stream?)");
+    }
+    // Grow the payload buffer only as fast as bytes actually arrive: a
+    // garbage peer sending a huge length word cannot make us pre-allocate
+    // gigabytes — it would have to stream the bytes (and the read
+    // timeout bounds how long it may take).
+    let len = len as usize;
+    const READ_CHUNK: usize = 1 << 20;
+    let mut payload: Vec<u8> = Vec::with_capacity(len.min(READ_CHUNK));
+    while payload.len() < len {
+        let take = (len - payload.len()).min(READ_CHUNK);
+        let start = payload.len();
+        payload.resize(start + take, 0);
+        stream
+            .read_exact(&mut payload[start..])
+            .context("peer closed the connection mid-frame")?;
+    }
+    Ok(Some((tag, payload)))
+}
+
+/// Read one frame, treating EOF as an error (rank 0 waiting on results).
+fn read_frame(stream: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
+    read_frame_or_eof(stream)?
+        .context("peer closed the connection (worker process died or was killed?)")
+}
+
+fn send_error(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+    let mut e = Enc::default();
+    e.str(msg);
+    write_frame(stream, TAG_ERROR, &e.buf)
+}
+
+// ---------------------------------------------------------------------------
+// Job spec (what a worker needs to rebuild problem/op/net)
+// ---------------------------------------------------------------------------
+
+/// Everything a worker needs to reconstruct the residual job locally:
+/// the problem family, the method string (one shared
+/// `residual_op_for` mapping on both ends), the gPINN weight, and the
+/// dimensions to validate against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub family: String,
+    pub method: String,
+    pub lambda_g: f32,
+    pub d: usize,
+    pub n_params: usize,
+}
+
+impl JobSpec {
+    pub fn from_config(config: &TrainConfig) -> Self {
+        JobSpec {
+            family: config.family.clone(),
+            method: config.method.clone(),
+            lambda_g: config.lambda_g,
+            d: config.d,
+            n_params: Mlp::n_params_for(config.d),
+        }
+    }
+}
+
+fn encode_hello(spec: &JobSpec) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u32(PROTOCOL_VERSION);
+    e.str(&spec.family);
+    e.str(&spec.method);
+    e.f32(spec.lambda_g);
+    e.u64(spec.d as u64);
+    e.u64(spec.n_params as u64);
+    e.buf
+}
+
+/// Point span `[base, end)` of shard range `lo..hi` in an `n`-point
+/// plan.  Shared by rank 0 (to slice the xs broadcast) and the worker
+/// (to validate and rebase) so the two sides cannot disagree.
+fn point_span(lo: usize, hi: usize, n: usize) -> (usize, usize) {
+    let n_shards = n.div_ceil(CHUNK_POINTS);
+    let base = (lo * CHUNK_POINTS).min(n);
+    let end = if hi == n_shards { n } else { (hi * CHUNK_POINTS).min(n) };
+    (base, end)
+}
+
+/// Params, probes and coeff go to every worker; the residual points do
+/// not — each worker receives only the contiguous xs slice its shard
+/// assignment covers (the dominant per-point broadcast cost scales as
+/// `n·d` total instead of `workers·n·d`).  Slicing changes no bits:
+/// the worker rebases its shards onto the slice, and every shard reads
+/// exactly the floats it would have read from the full batch.  Encodes
+/// into a caller-owned buffer so the per-step broadcast allocates
+/// nothing at steady state.
+fn encode_step_into(
+    e: &mut Enc,
+    step: u64,
+    range: &Range<usize>,
+    params: &[f32],
+    batch: &NativeBatch,
+    d: usize,
+) {
+    let (base, end) = point_span(range.start, range.end, batch.n);
+    e.buf.clear();
+    e.u64(step);
+    e.u64(range.start as u64);
+    e.u64(range.end as u64);
+    e.u64(batch.n as u64);
+    e.u64(batch.v as u64);
+    e.u64(CHUNK_POINTS as u64);
+    e.u64(base as u64);
+    e.f32s(params);
+    e.f32s(&batch.xs[base * d..end * d]);
+    e.f32s(batch.probes);
+    e.f32s(batch.coeff);
+}
+
+// ---------------------------------------------------------------------------
+// Rank 0: the cluster backend
+// ---------------------------------------------------------------------------
+
+struct WorkerConn {
+    stream: TcpStream,
+    addr: String,
+}
+
+/// `TcpStream::connect` with the module's timeout (the OS default can
+/// block for minutes against a black-holed address); tries every
+/// resolved socket address.
+fn connect_worker(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let resolved: Vec<SocketAddr> = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving worker address {addr}"))?
+        .collect();
+    let mut last_err: Option<std::io::Error> = None;
+    for sa in &resolved {
+        match TcpStream::connect_timeout(sa, timeout) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(match last_err {
+        Some(e) => anyhow::Error::from(e).context(format!("connecting to worker {addr}")),
+        None => anyhow::anyhow!("worker address {addr} resolved to no socket addresses"),
+    })
+}
+
+/// [`ShardBackend`] over TCP worker processes.  Connect once with a
+/// [`JobSpec`]; each step broadcasts the packed parameters + sampled
+/// batch with a contiguous shard assignment per worker, then gathers
+/// per-shard results.  The caller's shard-index-ordered merge makes the
+/// reduction bitwise identical to a single-process run for any worker
+/// count (same-ISA caveat: DESIGN.md §10).
+pub struct TcpClusterBackend {
+    conns: Vec<WorkerConn>,
+    spec: JobSpec,
+    /// Operator name every worker resolved during the handshake.
+    op_name: String,
+    step: u64,
+    params_buf: Vec<f32>,
+    step_buf: Enc,
+}
+
+impl TcpClusterBackend {
+    /// Connect to `addrs` and handshake the job spec with each worker.
+    pub fn connect(addrs: &[String], spec: JobSpec) -> Result<Self> {
+        if addrs.is_empty() {
+            bail!("a worker cluster needs at least one worker address");
+        }
+        let timeout = worker_timeout();
+        let mut conns = Vec::new();
+        let mut op_name: Option<String> = None;
+        for addr in addrs {
+            let stream = connect_worker(addr, timeout)?;
+            stream.set_nodelay(true).ok();
+            // both directions: a wedged peer must error out, not block
+            // write_all forever (the read timeout alone would not cover
+            // a full TCP send buffer)
+            stream.set_read_timeout(Some(timeout)).ok();
+            stream.set_write_timeout(Some(timeout)).ok();
+            let mut conn = WorkerConn { stream, addr: addr.clone() };
+            write_frame(&mut conn.stream, TAG_HELLO, &encode_hello(&spec))
+                .with_context(|| format!("sending the job spec to worker {addr}"))?;
+            let (tag, payload) = read_frame(&mut conn.stream)
+                .with_context(|| format!("waiting for worker {addr}'s handshake ack"))?;
+            match tag {
+                TAG_HELLO_ACK => {
+                    let mut d = Dec::new(&payload);
+                    let name = d.str()?.to_string();
+                    let chunk = d.u64()? as usize;
+                    let _worker_threads = d.u64()?;
+                    if chunk != CHUNK_POINTS {
+                        bail!(
+                            "worker {addr} shards batches into {chunk}-point chunks but this \
+                             coordinator uses {CHUNK_POINTS} — mixed binary versions would \
+                             break the bitwise shard plan"
+                        );
+                    }
+                    match &op_name {
+                        None => op_name = Some(name),
+                        Some(expect) if *expect == name => {}
+                        Some(expect) => bail!(
+                            "worker {addr} resolved operator {name} but earlier workers \
+                             resolved {expect} — mixed worker builds?"
+                        ),
+                    }
+                }
+                TAG_ERROR => {
+                    let mut d = Dec::new(&payload);
+                    bail!("worker {addr} rejected the job spec: {}", d.str()?);
+                }
+                other => bail!("worker {addr} sent unexpected frame tag {other} during handshake"),
+            }
+            conns.push(conn);
+        }
+        Ok(Self {
+            conns,
+            spec,
+            op_name: op_name.expect("at least one worker acked"),
+            step: 0,
+            params_buf: Vec::new(),
+            step_buf: Enc::default(),
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.conns.len()
+    }
+}
+
+fn decode_result_into(
+    payload: &[u8],
+    step: u64,
+    range: &Range<usize>,
+    addr: &str,
+    out: &mut [ShardResult],
+    filled: &mut [bool],
+) -> Result<()> {
+    let mut d = Dec::new(payload);
+    let echo = d.u64()?;
+    if echo != step {
+        bail!("worker {addr} answered step {echo}, expected step {step} — protocol out of sync");
+    }
+    let count = d.u64()? as usize;
+    if count != range.len() {
+        bail!(
+            "worker {addr} returned {count} shards, expected {} (assignment {range:?})",
+            range.len()
+        );
+    }
+    for _ in 0..count {
+        let index = d.u64()? as usize;
+        if !range.contains(&index) {
+            bail!("worker {addr} returned shard {index} outside its assignment {range:?}");
+        }
+        if filled[index] {
+            bail!("worker {addr} returned shard {index} twice");
+        }
+        let loss = d.f64()?;
+        let slot = &mut out[index];
+        slot.index = index;
+        slot.loss = loss;
+        d.f32s_into(&mut slot.grad)?;
+        filled[index] = true;
+    }
+    Ok(())
+}
+
+impl ShardBackend for TcpClusterBackend {
+    fn run_shards(
+        &mut self,
+        plan: &ShardPlan,
+        job: &ShardJob,
+        out: &mut Vec<ShardResult>,
+    ) -> Result<()> {
+        if job.op.name() != self.op_name {
+            bail!(
+                "cluster workers were configured for the {} operator (method {:?}) but this \
+                 step runs {} — reconnect the cluster with the matching job spec",
+                self.op_name,
+                self.spec.method,
+                job.op.name()
+            );
+        }
+        if let Some(lambda) = job.op.lambda_g() {
+            // compare bits: the workers rebuilt their operator from the
+            // spec's exact f32
+            if lambda.to_bits() != self.spec.lambda_g.to_bits() {
+                bail!(
+                    "this step's {} operator has lambda_g = {lambda} but the cluster was \
+                     handshaken with {} — reconnect with the matching job spec",
+                    job.op.name(),
+                    self.spec.lambda_g
+                );
+            }
+        }
+        let n_params = job.mlp.n_params();
+        if n_params != self.spec.n_params {
+            bail!(
+                "job has {n_params} parameters but the cluster was connected for {} — \
+                 reconnect with the matching job spec",
+                self.spec.n_params
+            );
+        }
+        let n_tasks = plan.len();
+        prepare_results(out, n_tasks);
+        self.step += 1;
+        let step = self.step;
+        self.params_buf.resize(n_params, 0.0);
+        job.mlp.pack_into(&mut self.params_buf);
+        let ranges = plan.assignment(self.conns.len());
+        // Broadcast first: every worker starts computing while rank 0 is
+        // still writing to the next one.
+        for (conn, range) in self.conns.iter_mut().zip(&ranges) {
+            let d = self.spec.d;
+            encode_step_into(&mut self.step_buf, step, range, &self.params_buf, job.batch, d);
+            write_frame(&mut conn.stream, TAG_STEP, &self.step_buf.buf).with_context(|| {
+                format!(
+                    "sending step {step} (shards {range:?}) to worker {} — did the worker die?",
+                    conn.addr
+                )
+            })?;
+        }
+        // Gather; merge ordering is the caller's shard-index reduction,
+        // so gather order only affects latency, never bits.
+        let mut filled = vec![false; n_tasks];
+        for (conn, range) in self.conns.iter_mut().zip(&ranges) {
+            let (tag, payload) = read_frame(&mut conn.stream).with_context(|| {
+                format!(
+                    "waiting for step-{step} results from worker {} (shards {range:?}) — if \
+                     the worker died, restart it and rerun",
+                    conn.addr
+                )
+            })?;
+            match tag {
+                TAG_RESULT => {
+                    decode_result_into(&payload, step, range, &conn.addr, out, &mut filled)?
+                }
+                TAG_ERROR => {
+                    let mut d = Dec::new(&payload);
+                    bail!("worker {} failed on step {step}: {}", conn.addr, d.str()?);
+                }
+                other => bail!("worker {} sent unexpected frame tag {other}", conn.addr),
+            }
+        }
+        if let Some(missing) = filled.iter().position(|f| !f) {
+            bail!("no worker returned shard {missing} of step {step}");
+        }
+        Ok(())
+    }
+
+    fn parallelism(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn label(&self) -> String {
+        format!("tcp-cluster(workers={})", self.conns.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+struct WorkerState {
+    mlp: Mlp,
+    problem: Box<dyn PdeProblem>,
+    op: Box<dyn ResidualOp>,
+    backend: super::shard::InProcessBackend,
+    results: Vec<ShardResult>,
+    n_params: usize,
+    d: usize,
+    // persistent per-step scratch (mirrors rank 0's recycled buffers:
+    // at steady state a worker step performs no payload allocation)
+    params: Vec<f32>,
+    xs: Vec<f32>,
+    probes: Vec<f32>,
+    coeff: Vec<f32>,
+    reply: Enc,
+}
+
+fn build_state(
+    family: &str,
+    method: &str,
+    lambda_g: f32,
+    d: usize,
+    n_params: usize,
+    threads: usize,
+) -> Result<WorkerState> {
+    let problem = problem_for(family, d)?;
+    let op = residual_op_for(problem.as_ref(), method, lambda_g)?;
+    let expect = Mlp::n_params_for(d);
+    if n_params != expect {
+        bail!(
+            "coordinator expects {n_params} parameters but this worker's MLP at d={d} has \
+             {expect} — mixed binary versions?"
+        );
+    }
+    // Weights are overwritten by the first STEP's params; the init
+    // values never matter, so a fixed throwaway seed is fine.
+    let mlp = Mlp::init(d, &mut Xoshiro256pp::new(0));
+    Ok(WorkerState {
+        mlp,
+        problem,
+        op,
+        backend: super::shard::InProcessBackend::new(threads),
+        results: Vec::new(),
+        n_params,
+        d,
+        params: Vec::new(),
+        xs: Vec::new(),
+        probes: Vec::new(),
+        coeff: Vec::new(),
+        reply: Enc::default(),
+    })
+}
+
+/// The fixed-size prefix of a STEP frame; the four float arrays decode
+/// straight into [`WorkerState`]'s persistent scratch buffers.
+struct StepHeader {
+    step: u64,
+    lo: usize,
+    hi: usize,
+    n: usize,
+    v: usize,
+    chunk: usize,
+    /// First batch point covered by the xs slice (= the range's span).
+    base: usize,
+}
+
+fn decode_step_into(payload: &[u8], st: &mut WorkerState) -> Result<StepHeader> {
+    let mut d = Dec::new(payload);
+    let header = StepHeader {
+        step: d.u64()?,
+        lo: d.u64()? as usize,
+        hi: d.u64()? as usize,
+        n: d.u64()? as usize,
+        v: d.u64()? as usize,
+        chunk: d.u64()? as usize,
+        base: d.u64()? as usize,
+    };
+    d.f32s_into(&mut st.params)?;
+    d.f32s_into(&mut st.xs)?;
+    d.f32s_into(&mut st.probes)?;
+    d.f32s_into(&mut st.coeff)?;
+    Ok(header)
+}
+
+/// Run one STEP, leaving the RESULT payload in `st.reply`.
+fn run_step(st: &mut WorkerState, payload: &[u8]) -> Result<()> {
+    let h = decode_step_into(payload, st)?;
+    if h.chunk != CHUNK_POINTS {
+        bail!(
+            "coordinator shards into {}-point chunks, this worker uses {CHUNK_POINTS} — \
+             mixed binary versions would break the bitwise shard plan",
+            h.chunk
+        );
+    }
+    if st.params.len() != st.n_params {
+        bail!("step carries {} parameters, job spec said {}", st.params.len(), st.n_params);
+    }
+    if st.probes.len() != h.v * st.d {
+        bail!("probe matrix has {} coords for v={} at d={}", st.probes.len(), h.v, st.d);
+    }
+    if st.coeff.len() != st.problem.n_coeff() {
+        bail!(
+            "step carries {} solution coefficients, the {} problem has {}",
+            st.coeff.len(),
+            st.problem.family(),
+            st.problem.n_coeff()
+        );
+    }
+    let n_shards = h.n.div_ceil(CHUNK_POINTS);
+    if h.lo > h.hi || h.hi > n_shards {
+        bail!("shard range {}..{} outside the {n_shards}-shard plan", h.lo, h.hi);
+    }
+    // The coordinator ships only this assignment's xs slice; rebase the
+    // shards onto it.  Same floats in the same order as the full-batch
+    // plan, so the per-shard bits are unchanged.
+    let (base, end) = point_span(h.lo, h.hi, h.n);
+    if h.base != base {
+        bail!("step's xs slice starts at point {} but the shard range implies {base}", h.base);
+    }
+    let n_local = end - base;
+    if st.xs.len() != n_local * st.d {
+        bail!("xs slice has {} coords for {n_local} points at d={}", st.xs.len(), st.d);
+    }
+    let local_plan = ShardPlan::with_chunk(n_local, CHUNK_POINTS);
+    if local_plan.len() != h.hi - h.lo {
+        bail!(
+            "xs slice of {n_local} points yields {} shards, assignment {}..{} expects {}",
+            local_plan.len(),
+            h.lo,
+            h.hi,
+            h.hi - h.lo
+        );
+    }
+    st.mlp.unpack_into(&st.params);
+    let batch =
+        NativeBatch { xs: &st.xs, probes: &st.probes, coeff: &st.coeff, n: n_local, v: h.v };
+    let job = ShardJob {
+        mlp: &st.mlp,
+        problem: st.problem.as_ref(),
+        op: st.op.as_ref(),
+        batch: &batch,
+    };
+    st.backend.run_shards(&local_plan, &job, &mut st.results)?;
+    st.reply.buf.clear();
+    st.reply.u64(h.step);
+    st.reply.u64(st.results.len() as u64);
+    for r in &st.results {
+        // local shard j is global shard lo + j
+        st.reply.u64((h.lo + r.index) as u64);
+        st.reply.f64(r.loss);
+        st.reply.f32s(&r.grad);
+    }
+    Ok(())
+}
+
+fn handle_coordinator(mut stream: TcpStream, threads: usize) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Same generous timeout rank 0 uses, on both directions: a
+    // coordinator silent (or not reading) for that long is presumed
+    // dead (power loss, partition), the session ends with a logged
+    // error and the worker returns to accepting — a half-open
+    // connection can never wedge the worker's sequential accept loop.
+    stream.set_read_timeout(Some(worker_timeout())).ok();
+    stream.set_write_timeout(Some(worker_timeout())).ok();
+    let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
+        return Ok(()); // connected and left without a word (port scan)
+    };
+    if tag != TAG_HELLO {
+        let _ = send_error(&mut stream, "expected a hello frame");
+        bail!("expected a hello frame, got tag {tag}");
+    }
+    let mut d = Dec::new(&payload);
+    let version = d.u32()?;
+    if version != PROTOCOL_VERSION {
+        let msg = format!(
+            "coordinator speaks shard protocol v{version}, this worker speaks \
+             v{PROTOCOL_VERSION}"
+        );
+        let _ = send_error(&mut stream, &msg);
+        bail!("{msg}");
+    }
+    let family = d.str()?.to_string();
+    let method = d.str()?.to_string();
+    let lambda_g = d.f32()?;
+    let dim = d.u64()? as usize;
+    let n_params = d.u64()? as usize;
+    let mut st = match build_state(&family, &method, lambda_g, dim, n_params, threads) {
+        Ok(st) => st,
+        Err(e) => {
+            // ship the full context chain — this is how `problem_for` /
+            // `residual_op_for` supported-set errors reach the operator
+            let _ = send_error(&mut stream, &format!("{e:#}"));
+            return Err(e);
+        }
+    };
+    let mut ack = Enc::default();
+    ack.str(st.op.name());
+    ack.u64(CHUNK_POINTS as u64);
+    ack.u64(threads as u64);
+    write_frame(&mut stream, TAG_HELLO_ACK, &ack.buf).context("sending hello ack")?;
+    loop {
+        let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
+            return Ok(()); // clean goodbye: coordinator closed
+        };
+        match tag {
+            TAG_STEP => match run_step(&mut st, &payload) {
+                Ok(()) => write_frame(&mut stream, TAG_RESULT, &st.reply.buf)
+                    .context("sending results")?,
+                Err(e) => {
+                    send_error(&mut stream, &format!("{e:#}")).context("sending error")?;
+                    return Err(e);
+                }
+            },
+            other => {
+                let _ = send_error(&mut stream, &format!("unexpected frame tag {other}"));
+                bail!("unexpected frame tag {other}");
+            }
+        }
+    }
+}
+
+/// Blocking worker loop behind `hte-pinn worker --listen`: accept
+/// coordinators one at a time, forever.  Each coordinator session runs
+/// its shards with `threads` in-process worker threads (the thread
+/// count never changes the bits — see [`ShardPlan`]).
+pub fn serve(listener: TcpListener, threads: usize) -> Result<()> {
+    serve_conns(listener, threads, None)
+}
+
+/// Like [`serve`], stopping after `max_conns` coordinator sessions
+/// when given — tests run loopback workers on in-process threads this
+/// way.
+pub fn serve_conns(listener: TcpListener, threads: usize, max_conns: Option<usize>) -> Result<()> {
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream.context("accepting a coordinator connection")?;
+        let peer = match stream.peer_addr() {
+            Ok(addr) => addr.to_string(),
+            Err(_) => "?".into(),
+        };
+        if let Err(e) = handle_coordinator(stream, threads) {
+            eprintln!("worker: session with {peer} ended with an error: {e:#}");
+        }
+        served += 1;
+        if let Some(max) = max_conns {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Local worker processes (`train --workers N`)
+// ---------------------------------------------------------------------------
+
+/// `N` `hte-pinn worker` child processes on loopback ports, spawned for
+/// `train --workers N` and killed on drop.  Each child prints
+/// `listening on <addr>` once bound (port 0 = kernel-assigned), which
+/// is how the parent learns the addresses without a port race.
+pub struct LocalWorkerPool {
+    children: Vec<Child>,
+    /// Kept open so a worker writing to stdout never hits a closed pipe.
+    _stdouts: Vec<BufReader<ChildStdout>>,
+    pub addrs: Vec<String>,
+}
+
+impl LocalWorkerPool {
+    /// Spawn from the currently running binary (the `train` path).
+    pub fn spawn(n: usize, threads: usize) -> Result<Self> {
+        let exe = std::env::current_exe().context("locating the hte-pinn binary")?;
+        Self::spawn_with(&exe, n, threads)
+    }
+
+    /// Spawn from an explicit binary path (tests use
+    /// `env!("CARGO_BIN_EXE_hte-pinn")`).
+    pub fn spawn_with(program: &Path, n: usize, threads: usize) -> Result<Self> {
+        if n == 0 {
+            bail!("--workers needs at least 1 worker process");
+        }
+        let mut pool =
+            LocalWorkerPool { children: Vec::new(), _stdouts: Vec::new(), addrs: Vec::new() };
+        for i in 0..n {
+            let mut child = Command::new(program)
+                .args(["worker", "--listen", "127.0.0.1:0", "--threads"])
+                .arg(threads.to_string())
+                .stdout(Stdio::piped())
+                .spawn()
+                .with_context(|| format!("spawning local worker {i} from {program:?}"))?;
+            let stdout = child.stdout.take().expect("stdout was piped");
+            let mut reader = BufReader::new(stdout);
+            let mut line = String::new();
+            reader
+                .read_line(&mut line)
+                .with_context(|| format!("reading local worker {i}'s listen address"))?;
+            let Some(addr) = line.trim().strip_prefix("listening on ") else {
+                let _ = child.kill();
+                bail!("local worker {i} printed {line:?} instead of its listen address");
+            };
+            pool.addrs.push(addr.to_string());
+            pool.children.push(child);
+            pool._stdouts.push(reader);
+        }
+        Ok(pool)
+    }
+
+    /// Kill worker `i` (the error-path tests: a dead worker must surface
+    /// a clear diagnostic, not a hang).
+    pub fn kill_one(&mut self, i: usize) {
+        if let Some(child) = self.children.get_mut(i) {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+impl Drop for LocalWorkerPool {
+    fn drop(&mut self) {
+        for child in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeTrainer;
+    use crate::estimators::Estimator;
+    use crate::nn::{default_residual_op, NativeEngine};
+    use crate::pde::{Domain, DomainSampler};
+    use crate::rng::{fill_rademacher, Normal};
+
+    /// Loopback worker on an in-process thread: real TCP, no child
+    /// process.  Serves `conns` coordinator sessions then exits.
+    fn spawn_test_worker(threads: usize, conns: usize) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        std::thread::spawn(move || {
+            let _ = serve_conns(listener, threads, Some(conns));
+        });
+        addr
+    }
+
+    fn train_config(family: &str, method: &str, d: usize, epochs: usize) -> TrainConfig {
+        let estimator =
+            if family == "bihar" { Estimator::HteGaussian } else { Estimator::HteRademacher };
+        TrainConfig {
+            family: family.into(),
+            method: method.into(),
+            estimator,
+            d,
+            v: 4,
+            epochs,
+            lr0: 2e-3,
+            seed: 5,
+            lambda_g: 10.0,
+            log_every: usize::MAX,
+        }
+    }
+
+    /// The xs-slice spans of a step's assignments tile the batch
+    /// exactly: contiguous, disjoint, complete — for any worker count.
+    #[test]
+    fn shard_point_spans_tile_the_batch() {
+        for n in [1usize, 4, 5, 11, 16, 17] {
+            let plan = ShardPlan::for_batch(n);
+            for workers in 1..=4 {
+                let mut next = 0usize;
+                for r in plan.assignment(workers) {
+                    let (base, end) = point_span(r.start, r.end, n);
+                    if r.is_empty() {
+                        assert_eq!(base, end, "empty assignment must get an empty span");
+                    } else {
+                        assert_eq!(base, next, "n={n} workers={workers}: span gap");
+                        assert!(end > base);
+                        next = end;
+                    }
+                }
+                assert_eq!(next, n, "n={n} workers={workers}: spans must cover the batch");
+            }
+        }
+    }
+
+    /// The worker-side rebasing invariant the bitwise guarantee rests
+    /// on: a local plan over an assignment's xs slice has exactly the
+    /// global slice's shards, shifted by the span base.
+    #[test]
+    fn shard_local_rebased_plan_matches_global_slice() {
+        for n in [1usize, 5, 11, 16] {
+            let plan = ShardPlan::for_batch(n);
+            for workers in 1..=3 {
+                for r in plan.assignment(workers) {
+                    let (base, end) = point_span(r.start, r.end, n);
+                    let local = ShardPlan::with_chunk(end - base, CHUNK_POINTS);
+                    assert_eq!(local.len(), r.len());
+                    let global = &plan.shards()[r.clone()];
+                    for (j, (ls, gs)) in local.shards().iter().zip(global).enumerate() {
+                        assert_eq!(ls.index, j, "local indices start at 0");
+                        assert_eq!(base + ls.start, gs.start, "rebased start must agree");
+                        assert_eq!(ls.nc, gs.nc, "shard sizes must agree");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact() {
+        let mut e = Enc::default();
+        e.u32(7);
+        e.str("sg2");
+        e.f32(f32::from_bits(0x7f80_0001)); // a signaling NaN survives
+        e.f64(-0.0);
+        e.f32s(&[1.5, -2.25, f32::NEG_INFINITY]);
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.u32().unwrap(), 7);
+        assert_eq!(d.str().unwrap(), "sg2");
+        assert_eq!(d.f32().unwrap().to_bits(), 0x7f80_0001);
+        assert_eq!(d.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        let xs = d.f32s().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2], f32::NEG_INFINITY);
+        // over-reading is a clean error, not a panic
+        assert!(d.u64().is_err());
+    }
+
+    /// The acceptance gate: engine-level loss + full gradient over the
+    /// TCP cluster backend are bitwise identical to the in-process
+    /// backend, for every residual family and multiple worker counts.
+    #[test]
+    fn shard_cluster_loopback_matches_in_process_bitwise() {
+        for (family, method, domain, gaussian) in [
+            ("sg2", "probe", Domain::UnitBall, false),
+            ("bihar", "probe4", Domain::Annulus, true),
+            ("ac2", "hte", Domain::UnitBall, false),
+        ] {
+            let (d, n, v) = (4usize, 11usize, 4usize);
+            let mut rng = Xoshiro256pp::new(61);
+            let mlp = Mlp::init(d, &mut rng);
+            let problem = problem_for(family, d).unwrap();
+            let mut sampler = DomainSampler::new(domain, d, rng.fork(1));
+            let xs = sampler.batch(n);
+            let mut probes = vec![0.0f32; v * d];
+            if gaussian {
+                Normal::new().fill_f32(&mut rng, &mut probes);
+            } else {
+                fill_rademacher(&mut rng, &mut probes);
+            }
+            let mut coeff = vec![0.0f32; problem.n_coeff()];
+            Normal::new().fill_f32(&mut rng, &mut coeff);
+            let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+            let op = default_residual_op(problem.as_ref());
+
+            let mut ref_engine = NativeEngine::new(3);
+            let mut ref_grad = Vec::new();
+            let ref_loss = ref_engine
+                .loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut ref_grad)
+                .unwrap();
+
+            let mut cfg = train_config(family, method, d, 1);
+            cfg.v = v;
+            for workers in [1usize, 2, 3] {
+                let addrs: Vec<String> = (0..workers).map(|_| spawn_test_worker(2, 1)).collect();
+                let backend =
+                    TcpClusterBackend::connect(&addrs, JobSpec::from_config(&cfg)).unwrap();
+                let mut engine = NativeEngine::with_backend(Box::new(backend));
+                assert_eq!(engine.threads(), workers);
+                let mut grad = Vec::new();
+                let loss = engine
+                    .loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad)
+                    .unwrap();
+                assert_eq!(
+                    loss.to_bits(),
+                    ref_loss.to_bits(),
+                    "{family}: loss differs over tcp with {workers} workers"
+                );
+                assert_eq!(grad.len(), ref_grad.len());
+                for (a, b) in grad.iter().zip(&ref_grad) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{family}: gradient differs over tcp with {workers} workers"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Whole-trainer parity: N steps of Adam over a 2-worker loopback
+    /// cluster leave byte-identical parameters vs in-process threads.
+    #[test]
+    fn shard_cluster_trainer_steps_match_in_process_bitwise() {
+        let cfg = train_config("sg2", "probe", 5, 8);
+        let mut local = NativeTrainer::with_threads(cfg.clone(), 9, 3).unwrap();
+        let addrs: Vec<String> = (0..2).map(|_| spawn_test_worker(2, 1)).collect();
+        let backend = TcpClusterBackend::connect(&addrs, JobSpec::from_config(&cfg)).unwrap();
+        let mut remote = NativeTrainer::with_backend(cfg, 9, Box::new(backend)).unwrap();
+        assert!(remote.executor().contains("tcp-cluster"));
+        for _ in 0..8 {
+            local.step().unwrap();
+            remote.step().unwrap();
+        }
+        assert_eq!(local.last_loss.to_bits(), remote.last_loss.to_bits());
+        let (a, b) = (local.mlp.pack(), remote.mlp.pack());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "parameters diverged over the cluster");
+        }
+    }
+
+    /// A worker that dies mid-run must surface a diagnostic naming the
+    /// worker — never hang the training loop.
+    #[test]
+    fn shard_cluster_dead_worker_is_a_clear_error() {
+        // this "worker" acks the handshake, then drops the connection
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let Ok(Some((tag, _payload))) = read_frame_or_eof(&mut stream) else { return };
+            assert_eq!(tag, TAG_HELLO);
+            let mut ack = Enc::default();
+            ack.str("trace");
+            ack.u64(CHUNK_POINTS as u64);
+            ack.u64(1);
+            let _ = write_frame(&mut stream, TAG_HELLO_ACK, &ack.buf);
+            // connection drops here — the coordinator's next read EOFs
+        });
+        let healthy = spawn_test_worker(1, 1);
+        let cfg = train_config("sg2", "probe", 4, 1);
+        let backend =
+            TcpClusterBackend::connect(&[addr.clone(), healthy], JobSpec::from_config(&cfg))
+                .unwrap();
+        let mut trainer = NativeTrainer::with_backend(cfg, 9, Box::new(backend)).unwrap();
+        let err = format!("{:#}", trainer.step().unwrap_err());
+        assert!(err.contains("worker"), "diagnostic must name the worker: {err}");
+        assert!(err.contains(&addr), "diagnostic must include the address: {err}");
+    }
+
+    /// An operator whose λ differs from the handshaken job spec must
+    /// fail loudly, not silently train with the workers' λ.
+    #[test]
+    fn shard_cluster_rejects_mismatched_lambda() {
+        use crate::nn::GpinnResidual;
+        let addr = spawn_test_worker(1, 1);
+        let mut cfg = train_config("sg2", "gpinn", 4, 1);
+        cfg.lambda_g = 10.0;
+        let backend = TcpClusterBackend::connect(&[addr], JobSpec::from_config(&cfg)).unwrap();
+        let mut engine = NativeEngine::with_backend(Box::new(backend));
+
+        let (d, n, v) = (4usize, 5usize, 2usize);
+        let mut rng = Xoshiro256pp::new(71);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = problem_for("sg2", d).unwrap();
+        let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        Normal::new().fill_f32(&mut rng, &mut coeff);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v };
+
+        let wrong = GpinnResidual { lambda: 5.0 };
+        let mut grad = Vec::new();
+        let err = engine
+            .loss_and_grad_with(&mlp, problem.as_ref(), &wrong, &batch, &mut grad)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("lambda_g"), "{err}");
+        // the matching operator goes through
+        let right = GpinnResidual { lambda: 10.0 };
+        engine.loss_and_grad_with(&mlp, problem.as_ref(), &right, &batch, &mut grad).unwrap();
+    }
+
+    /// A bad job spec is rejected during the handshake with the
+    /// supported-set error text from the worker's own validation.
+    #[test]
+    fn shard_cluster_handshake_rejects_unknown_family_and_method() {
+        let addr = spawn_test_worker(1, 1);
+        let mut cfg = train_config("sg2", "probe", 4, 1);
+        cfg.family = "sg9".into();
+        let err = TcpClusterBackend::connect(&[addr], JobSpec::from_config(&cfg))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sg9"), "{err}");
+        assert!(err.contains("supported"), "{err}");
+
+        let addr = spawn_test_worker(1, 1);
+        let mut cfg = train_config("sg2", "probe", 4, 1);
+        cfg.method = "probe4".into();
+        let err = TcpClusterBackend::connect(&[addr], JobSpec::from_config(&cfg))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("probe4"), "{err}");
+    }
+}

@@ -1,13 +1,25 @@
-//! L3 <-> artifact runtime: manifest parsing + PJRT execution engine.
+//! L3 runtime substrate: the shard-plan execution layer (scheduling
+//! from in-process threads to TCP worker processes, bitwise
+//! deterministic — DESIGN.md §10), plus the artifact manifest/PJRT
+//! engine.
 //!
-//! The manifest is plain JSON and always available; the PJRT `Engine`
-//! needs the real XLA runtime and is gated behind `--features xla`
-//! (default builds resolve the dependency via the in-repo `xla-stub`).
+//! The shard layer and the manifest are always available; the PJRT
+//! `Engine` needs the real XLA runtime and is gated behind `--features
+//! xla` (default builds resolve the dependency via the in-repo
+//! `xla-stub`).
 
+mod cluster;
 #[cfg(feature = "xla")]
 mod engine;
 mod manifest;
+mod shard;
 
+pub use cluster::{
+    serve, serve_conns, JobSpec, LocalWorkerPool, TcpClusterBackend, PROTOCOL_VERSION,
+};
 #[cfg(feature = "xla")]
 pub use engine::Engine;
 pub use manifest::{Entry, InputSpec, Manifest, ParamEntry, StateOffsets};
+pub use shard::{
+    merge_shard_results, InProcessBackend, Shard, ShardBackend, ShardJob, ShardPlan, ShardResult,
+};

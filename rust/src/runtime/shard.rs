@@ -1,0 +1,420 @@
+//! Shard-plan execution layer: ONE scheduler from in-process threads to
+//! multi-process workers, bitwise-deterministic.
+//!
+//! The native residual pipeline decomposes a batch into fixed-size point
+//! chunks and reduces per-chunk losses/gradients in chunk order
+//! (DESIGN.md §7).  This module makes that decomposition an explicit,
+//! executor-independent artifact:
+//!
+//! * [`ShardPlan`] — the deterministic chunk assignment, computed once
+//!   from the batch size and [`crate::nn::CHUNK_POINTS`].  It is a pure
+//!   function of the *problem shape*, never of how many executors exist,
+//!   so every f32 summation order — and therefore every trained bit —
+//!   is identical for 1 thread, 16 threads, or 4 remote worker
+//!   processes.
+//! * [`ShardBackend`] — the one scheduling abstraction.  A backend runs
+//!   the shards of a plan and reports a [`ShardResult`] (loss partial +
+//!   gradient slice) *tagged by shard index*; the caller (the
+//!   `NativeEngine` facade in `nn::native_loss`) merges results in
+//!   shard-index order, so the reduction is the same no matter which
+//!   executor produced which shard.
+//! * [`InProcessBackend`] — the scoped-thread pool that used to live
+//!   inline in `NativeEngine`, rehosted behind the trait with its
+//!   per-worker workspace-pooled tapes intact.
+//!
+//! The TCP cluster backend (`runtime::cluster`) implements the same
+//! trait over worker processes; rank 0 still merges in shard-index
+//! order, which extends the thread-count-determinism guarantee across
+//! the process boundary (same-ISA caveat: DESIGN.md §9/§10).
+
+use anyhow::{bail, Result};
+
+use crate::autodiff::Tape;
+use crate::nn::{shard_loss_grad, Mlp, NativeBatch, ResidualOp, CHUNK_POINTS};
+use crate::pde::PdeProblem;
+
+/// One unit of residual work: a contiguous run of batch points.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Position in the plan — the merge key.  Results are reduced in
+    /// increasing `index`, whoever computed them.
+    pub index: usize,
+    /// First batch point of the shard.
+    pub start: usize,
+    /// Points in the shard (`CHUNK_POINTS`, except a shorter tail).
+    pub nc: usize,
+}
+
+/// The deterministic chunk decomposition of one batch: a pure function
+/// of `(n, chunk_points)`.  Executor counts never enter — that is the
+/// whole determinism argument, so keep it that way.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Batch points covered by the plan.
+    pub n: usize,
+    /// Points per shard the plan was built with.
+    pub chunk_points: usize,
+    shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// The plan every engine step uses: fixed [`CHUNK_POINTS`]-sized
+    /// shards over the batch.
+    pub fn for_batch(n: usize) -> Self {
+        Self::with_chunk(n, CHUNK_POINTS)
+    }
+
+    /// Plan with an explicit chunk size (tests; the engine always uses
+    /// [`ShardPlan::for_batch`]).
+    pub fn with_chunk(n: usize, chunk_points: usize) -> Self {
+        assert!(chunk_points > 0, "chunk_points must be positive");
+        let n_tasks = n.div_ceil(chunk_points);
+        let shards = (0..n_tasks)
+            .map(|t| {
+                let start = t * chunk_points;
+                Shard { index: t, start, nc: chunk_points.min(n - start) }
+            })
+            .collect();
+        Self { n, chunk_points, shards }
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Contiguous shard ranges for `workers` executors: worker `w` owns
+    /// `assignment(workers)[w]`.  Deterministic given the worker count;
+    /// results are merged by shard index, so the *assignment* only
+    /// affects who computes what, never the reduced bits.
+    pub fn assignment(&self, workers: usize) -> Vec<std::ops::Range<usize>> {
+        let w = workers.max(1);
+        let per = self.len().div_ceil(w);
+        (0..w)
+            .map(|i| (i * per).min(self.len())..((i + 1) * per).min(self.len()))
+            .collect()
+    }
+
+    /// Sub-plan holding shards `range` of this plan, *indices
+    /// preserved* — a worker runs a slice and its results still merge
+    /// by global shard index.
+    pub fn slice(&self, range: std::ops::Range<usize>) -> ShardPlan {
+        ShardPlan {
+            n: self.n,
+            chunk_points: self.chunk_points,
+            shards: self.shards[range].to_vec(),
+        }
+    }
+}
+
+/// Everything a backend needs to run one step's shards.  In-process
+/// backends consume the live references; remote backends additionally
+/// need the job spec they were connected with (`runtime::cluster`) to
+/// have told their workers how to rebuild `problem`/`op`.
+pub struct ShardJob<'a> {
+    pub mlp: &'a Mlp,
+    pub problem: &'a dyn PdeProblem,
+    pub op: &'a dyn ResidualOp,
+    pub batch: &'a NativeBatch<'a>,
+}
+
+/// Loss partial + gradient slice of one shard, tagged by shard index.
+#[derive(Clone, Debug, Default)]
+pub struct ShardResult {
+    pub index: usize,
+    /// Unnormalized chunk loss (f64, summed in index order upstream).
+    pub loss: f64,
+    /// Parameter-gradient contribution (packed order, unnormalized).
+    pub grad: Vec<f32>,
+}
+
+/// A shard executor.  Implementations must fill `out[i]` with the result
+/// of `plan.shards()[i]` (same order — `out[i].index ==
+/// plan.shards()[i].index`); the caller performs the shard-index-ordered
+/// reduction.  `out` is caller-owned so backends can recycle the
+/// per-shard gradient buffers across steps.
+pub trait ShardBackend {
+    /// Run every shard of `plan` for `job`, filling `out` (resized to
+    /// `plan.len()`).
+    fn run_shards(
+        &mut self,
+        plan: &ShardPlan,
+        job: &ShardJob,
+        out: &mut Vec<ShardResult>,
+    ) -> Result<()>;
+
+    /// Concurrent executors (threads or worker processes) — informational
+    /// only; never feeds the plan.
+    fn parallelism(&self) -> usize;
+
+    /// Human-readable executor description for run banners.
+    fn label(&self) -> String;
+}
+
+/// Resize `out` to `n` slots, keeping existing gradient buffers for
+/// reuse.
+pub(crate) fn prepare_results(out: &mut Vec<ShardResult>, n: usize) {
+    out.resize_with(n, ShardResult::default);
+}
+
+/// The in-process executor: scoped worker threads over per-worker
+/// workspace-pooled tapes — the scheduling that used to live inline in
+/// `NativeEngine`, now one `ShardBackend` among others.
+pub struct InProcessBackend {
+    threads: usize,
+    workers: Vec<Tape>,
+}
+
+impl InProcessBackend {
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1), workers: Vec::new() }
+    }
+
+    /// Backend sized to the machine (capped — the shards are small).
+    pub fn with_default_threads() -> Self {
+        Self::new(crate::nn::default_threads())
+    }
+}
+
+fn run_one_shard(tape: &mut Tape, job: &ShardJob, shard: &Shard, slot: &mut ShardResult) {
+    slot.index = shard.index;
+    slot.loss =
+        shard_loss_grad(tape, job.mlp, job.op, job.problem, job.batch, shard, &mut slot.grad);
+}
+
+impl ShardBackend for InProcessBackend {
+    fn run_shards(
+        &mut self,
+        plan: &ShardPlan,
+        job: &ShardJob,
+        out: &mut Vec<ShardResult>,
+    ) -> Result<()> {
+        let shards = plan.shards();
+        let n_tasks = shards.len();
+        prepare_results(out, n_tasks);
+        let threads = self.threads.min(n_tasks).max(1);
+        if self.workers.len() < threads {
+            self.workers.resize_with(threads, Tape::new);
+        }
+        if threads == 1 {
+            // no thread handoff for tiny batches / single-thread runs;
+            // identical bits either way (same shards, same order)
+            let tape = &mut self.workers[0];
+            for (slot, shard) in out.iter_mut().zip(shards) {
+                run_one_shard(tape, job, shard, slot);
+            }
+        } else {
+            let per = n_tasks.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (tape, (ochunk, schunk)) in
+                    self.workers.iter_mut().zip(out.chunks_mut(per).zip(shards.chunks(per)))
+                {
+                    s.spawn(move || {
+                        for (slot, shard) in ochunk.iter_mut().zip(schunk) {
+                            run_one_shard(tape, job, shard, slot);
+                        }
+                    });
+                }
+            });
+        }
+        Ok(())
+    }
+
+    fn parallelism(&self) -> usize {
+        self.threads
+    }
+
+    fn label(&self) -> String {
+        format!("threads={}", self.threads)
+    }
+}
+
+/// Shard-index-ordered reduction shared by every consumer of
+/// [`ShardBackend`] output: sum losses (f64) and gradients (f32) in
+/// increasing shard index, then normalize by the batch size.  This is
+/// THE reduction — single-process and cluster runs call this same code
+/// on the same per-shard bits, which is what makes them byte-identical.
+pub fn merge_shard_results(
+    results: &[ShardResult],
+    n: usize,
+    n_params: usize,
+    grad: &mut Vec<f32>,
+) -> Result<f32> {
+    grad.clear();
+    grad.resize(n_params, 0.0);
+    let mut loss_sum = 0.0f64;
+    for (t, r) in results.iter().enumerate() {
+        if r.index != t {
+            bail!("shard results out of order: slot {t} holds shard {}", r.index);
+        }
+        if r.grad.len() != n_params {
+            bail!(
+                "shard {t} returned {} gradient floats, expected {n_params}",
+                r.grad.len()
+            );
+        }
+        loss_sum += r.loss;
+        for (o, &x) in grad.iter_mut().zip(&r.grad) {
+            *o += x;
+        }
+    }
+    let inv_n = 1.0 / n as f32;
+    for o in grad.iter_mut() {
+        *o *= inv_n;
+    }
+    Ok((loss_sum / n as f64) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{hte_residual_loss_and_grad, NativeEngine, TraceResidual};
+    use crate::pde::{Domain, DomainSampler, SineGordon2Body};
+    use crate::rng::{fill_rademacher, Normal, Xoshiro256pp};
+
+    #[test]
+    fn shard_plan_covers_batch_with_fixed_chunks() {
+        for n in [1usize, 3, 4, 5, 9, 16, 17] {
+            let plan = ShardPlan::for_batch(n);
+            assert_eq!(plan.n, n);
+            assert_eq!(plan.chunk_points, CHUNK_POINTS);
+            assert_eq!(plan.len(), n.div_ceil(CHUNK_POINTS));
+            let mut covered = 0;
+            for (t, shard) in plan.shards().iter().enumerate() {
+                assert_eq!(shard.index, t);
+                assert_eq!(shard.start, t * CHUNK_POINTS);
+                assert!(shard.nc >= 1 && shard.nc <= CHUNK_POINTS);
+                covered += shard.nc;
+            }
+            assert_eq!(covered, n, "shards must partition the batch");
+        }
+    }
+
+    /// The plan is a pure function of the batch shape: executor counts
+    /// never enter, so two plans for the same batch are identical.
+    #[test]
+    fn shard_plan_is_independent_of_executors() {
+        let a = ShardPlan::for_batch(11);
+        let b = ShardPlan::for_batch(11);
+        assert_eq!(a.shards(), b.shards());
+        // the assignment distributes the *same* shards for any worker
+        // count — disjoint, contiguous, complete
+        for workers in 1..=5 {
+            let ranges = a.assignment(workers);
+            assert_eq!(ranges.len(), workers);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next.min(a.len()));
+                assert!(r.end >= r.start && r.end <= a.len());
+                next = r.end.max(next);
+            }
+            assert_eq!(next, a.len(), "assignment must cover every shard");
+        }
+    }
+
+    #[test]
+    fn shard_plan_slice_preserves_global_indices() {
+        let plan = ShardPlan::for_batch(10); // 3 shards of 4,4,2
+        let tail = plan.slice(1..3);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail.shards()[0].index, 1);
+        assert_eq!(tail.shards()[1].index, 2);
+        assert_eq!(tail.shards()[1].nc, 2);
+        assert_eq!(tail.n, plan.n, "slices keep the full-batch context");
+    }
+
+    fn sg_case(
+        d: usize,
+        n: usize,
+        v: usize,
+    ) -> (Mlp, SineGordon2Body, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(41);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = SineGordon2Body::new(d);
+        let mut sampler = DomainSampler::new(Domain::UnitBall, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; d - 1];
+        Normal::new().fill_f32(&mut rng, &mut coeff);
+        (mlp, problem, xs, probes, coeff)
+    }
+
+    /// The rehosted thread pool produces exactly the bits the engine
+    /// facade reports, for any thread count, and a sliced plan produces
+    /// the same per-shard results as the full plan.
+    #[test]
+    fn in_process_backend_shards_match_engine_bitwise() {
+        let (mlp, problem, xs, probes, coeff) = sg_case(5, 11, 3);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 11, v: 3 };
+        let (loss_ref, grad_ref) = hte_residual_loss_and_grad(&mlp, &problem, &batch);
+
+        let plan = ShardPlan::for_batch(11);
+        let job = ShardJob { mlp: &mlp, problem: &problem, op: &TraceResidual, batch: &batch };
+        for threads in [1usize, 2, 5] {
+            let mut backend = InProcessBackend::new(threads);
+            let mut results = Vec::new();
+            backend.run_shards(&plan, &job, &mut results).unwrap();
+            assert_eq!(results.len(), plan.len());
+            let mut grad = Vec::new();
+            let loss = merge_shard_results(&results, 11, mlp.n_params(), &mut grad).unwrap();
+            assert_eq!(loss.to_bits(), loss_ref.to_bits(), "threads={threads}");
+            for (a, b) in grad.iter().zip(&grad_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+
+            // a worker running only the tail slice reports the same
+            // per-shard bits the full run produced
+            let sub = plan.slice(1..plan.len());
+            let mut sub_results = Vec::new();
+            backend.run_shards(&sub, &job, &mut sub_results).unwrap();
+            for (r_sub, r_full) in sub_results.iter().zip(&results[1..]) {
+                assert_eq!(r_sub.index, r_full.index);
+                assert_eq!(r_sub.loss.to_bits(), r_full.loss.to_bits());
+                for (a, b) in r_sub.grad.iter().zip(&r_full.grad) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_rejects_out_of_order_and_short_results() {
+        let ok = ShardResult { index: 0, loss: 1.0, grad: vec![1.0, 2.0] };
+        let mut grad = Vec::new();
+        let loss = merge_shard_results(&[ok.clone()], 2, 2, &mut grad).unwrap();
+        assert!((loss - 0.5).abs() < 1e-7);
+        assert_eq!(grad, vec![0.5, 1.0]);
+        let misordered = ShardResult { index: 1, ..ok.clone() };
+        assert!(merge_shard_results(&[misordered], 2, 2, &mut grad).is_err());
+        let short = ShardResult { grad: vec![1.0], ..ok };
+        let err = merge_shard_results(&[short], 2, 2, &mut grad).unwrap_err().to_string();
+        assert!(err.contains("expected 2"), "{err}");
+    }
+
+    /// `NativeEngine::with_backend` is the same engine: the facade over
+    /// an explicit backend matches the default-constructed one bitwise.
+    #[test]
+    fn engine_facade_over_explicit_backend_shards_bitwise() {
+        let (mlp, problem, xs, probes, coeff) = sg_case(4, 9, 2);
+        let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n: 9, v: 2 };
+        let mut default_engine = NativeEngine::new(3);
+        let mut explicit = NativeEngine::with_backend(Box::new(InProcessBackend::new(3)));
+        let (mut g1, mut g2) = (Vec::new(), Vec::new());
+        let l1 = default_engine.loss_and_grad(&mlp, &problem, &batch, &mut g1).unwrap();
+        let l2 = explicit.loss_and_grad(&mlp, &problem, &batch, &mut g2).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        for (a, b) in g1.iter().zip(&g2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(explicit.threads(), 3);
+        assert!(explicit.backend_label().contains("threads=3"));
+    }
+}

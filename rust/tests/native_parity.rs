@@ -15,8 +15,9 @@ use hte_pinn::nn::{
     allen_cahn_residual_loss_and_grad, allen_cahn_residual_loss_reference,
     bihar_residual_loss_and_grad, bihar_residual_loss_reference, factor_jet,
     gpinn_residual_loss_and_grad, gpinn_residual_loss_reference, hte_residual_loss_and_grad,
-    hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, jet_forward, GpinnResidual,
-    Mlp, NativeBatch, NativeEngine,
+    hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, jet_forward,
+    unbiased_residual_loss_and_grad, unbiased_residual_loss_reference, GpinnResidual, Mlp,
+    NativeBatch, NativeEngine,
 };
 use hte_pinn::pde::{fd, Domain, DomainSampler, PdeProblem};
 use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
@@ -61,6 +62,19 @@ impl Case {
         let mut coeff = vec![0.0f32; problem.n_coeff()];
         Normal::new().fill_f32(&mut rng, &mut coeff);
         Self { mlp, problem, xs, probes, coeff, n, v }
+    }
+
+    /// Unbiased (Eq. 8) case: sg2 with two independent probe sets of
+    /// `v` rows each, stacked into a [2·v, d] matrix (`Case::v` is the
+    /// total row count the batch reports).
+    fn unbiased(d: usize, n: usize, v: usize, seed: u64) -> Self {
+        let mut case = Self::new(d, n, v, seed);
+        let mut rng = Xoshiro256pp::new(seed ^ 0x5EED);
+        let mut second = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut second);
+        case.probes.extend_from_slice(&second);
+        case.v = 2 * v;
+        case
     }
 
     /// Biharmonic case: annulus points, Gaussian probes (Thm 3.4).
@@ -247,13 +261,9 @@ fn gpinn_gradients_bitwise_stable_across_thread_counts() {
     for threads in [1usize, 2, 16] {
         let mut engine = NativeEngine::new(threads);
         let mut grad = Vec::new();
-        let loss = engine.loss_and_grad_with(
-            &case.mlp,
-            case.problem.as_ref(),
-            &op,
-            &case.batch(),
-            &mut grad,
-        );
+        let loss = engine
+            .loss_and_grad_with(&case.mlp, case.problem.as_ref(), &op, &case.batch(), &mut grad)
+            .unwrap();
         match &baseline {
             None => baseline = Some((loss, grad)),
             Some((l0, g0)) => {
@@ -332,8 +342,9 @@ fn bihar_gradients_bitwise_stable_across_thread_counts() {
     for threads in [1usize, 2, 16] {
         let mut engine = NativeEngine::new(threads);
         let mut grad = Vec::new();
-        let loss =
-            engine.loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad);
+        let loss = engine
+            .loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad)
+            .unwrap();
         match &baseline {
             None => baseline = Some((loss, grad)),
             Some((l0, g0)) => {
@@ -504,6 +515,80 @@ fn allen_cahn_loss_matches_reference_grid() {
     }
 }
 
+/// Unbiased two-sample loss (Eq. 8) matches the f64 jet-forward oracle
+/// over a (d, n, v) grid, including the one-probe-per-set edge.
+#[test]
+fn unbiased_loss_matches_reference_grid() {
+    for (d, n, v) in [(3, 1, 1), (4, 5, 1), (5, 4, 3), (6, 9, 4)] {
+        let case = Case::unbiased(d, n, v, 57 + d as u64);
+        let (loss, _) =
+            unbiased_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
+        let reference =
+            unbiased_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+        assert!(
+            (loss as f64 - reference).abs() < 1e-3 * (1.0 + reference.abs()),
+            "(d={d}, n={n}, v={v}): batched {loss} vs reference {reference}"
+        );
+    }
+}
+
+/// Unbiased-loss gradients match central finite differences of the f64
+/// reference (the product-rule gradient 0.5·(r̂·∇r + r·∇r̂)).
+#[test]
+fn unbiased_grad_matches_finite_differences() {
+    let mut case = Case::unbiased(4, 3, 2, 11);
+    let (_, grad) =
+        unbiased_residual_loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch());
+    let gmax: f32 = grad.iter().map(|g| g.abs()).fold(0.0, f32::max);
+    let flat0 = case.mlp.pack();
+    let idxs = [0usize, 7, 130, 600, flat0.len() - 1, flat0.len() - 200];
+    let h = 1e-3f32;
+    for &i in &idxs {
+        let mut fp = flat0.clone();
+        fp[i] += h;
+        case.mlp.unpack_into(&fp);
+        let lp = unbiased_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+        let mut fm = flat0.clone();
+        fm[i] -= h;
+        case.mlp.unpack_into(&fm);
+        let lm = unbiased_residual_loss_reference(&case.mlp, case.problem.as_ref(), &case.batch());
+        case.mlp.unpack_into(&flat0);
+        let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+        assert!(
+            (grad[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()) + 1e-2 * gmax,
+            "param {i}: tape {} vs fd {fd}",
+            grad[i]
+        );
+    }
+}
+
+/// Unbiased loss/grad results are bitwise identical for 1, 2 and 16
+/// worker threads (the fifth operator inherits the shard plan + ordered
+/// reduction unchanged).
+#[test]
+fn unbiased_gradients_bitwise_stable_across_thread_counts_and_shards() {
+    let case = Case::unbiased(6, 13, 5, 9);
+    let op = hte_pinn::nn::UnbiasedTrace;
+    let mut baseline: Option<(f32, Vec<f32>)> = None;
+    for threads in [1usize, 2, 16] {
+        let mut engine = NativeEngine::new(threads);
+        let mut grad = Vec::new();
+        let loss = engine
+            .loss_and_grad_with(&case.mlp, case.problem.as_ref(), &op, &case.batch(), &mut grad)
+            .unwrap();
+        match &baseline {
+            None => baseline = Some((loss, grad)),
+            Some((l0, g0)) => {
+                assert_eq!(loss.to_bits(), l0.to_bits(), "loss at {threads} threads");
+                assert_eq!(grad.len(), g0.len());
+                for (a, b) in grad.iter().zip(g0) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "grad at {threads} threads");
+                }
+            }
+        }
+    }
+}
+
 /// Allen–Cahn loss/grad results are bitwise identical for 1, 2 and 16
 /// worker threads (fixed chunking + ordered reduction, fourth operator).
 #[test]
@@ -513,7 +598,9 @@ fn allen_cahn_gradients_bitwise_stable_across_thread_counts() {
     for threads in [1usize, 2, 16] {
         let mut engine = NativeEngine::new(threads);
         let mut grad = Vec::new();
-        let loss = engine.loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad);
+        let loss = engine
+            .loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad)
+            .unwrap();
         match &baseline {
             None => baseline = Some((loss, grad)),
             Some((l0, g0)) => {
@@ -553,12 +640,9 @@ fn engine_step_bitwise_identical_across_simd_levels() {
                 force_simd_level(level);
                 let mut engine = NativeEngine::new(threads);
                 let mut grad = Vec::new();
-                let loss = engine.loss_and_grad(
-                    &case.mlp,
-                    case.problem.as_ref(),
-                    &case.batch(),
-                    &mut grad,
-                );
+                let loss = engine
+                    .loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad)
+                    .unwrap();
                 (loss, grad)
             };
             let (loss_s, grad_s) = run(SimdLevel::Scalar);
@@ -589,13 +673,9 @@ fn engine_step_bitwise_identical_across_simd_levels() {
         force_simd_level(level);
         let mut engine = NativeEngine::new(2);
         let mut grad = Vec::new();
-        let loss = engine.loss_and_grad_with(
-            &case.mlp,
-            case.problem.as_ref(),
-            &op,
-            &case.batch(),
-            &mut grad,
-        );
+        let loss = engine
+            .loss_and_grad_with(&case.mlp, case.problem.as_ref(), &op, &case.batch(), &mut grad)
+            .unwrap();
         (loss, grad)
     };
     let (loss_s, grad_s) = run(SimdLevel::Scalar);
@@ -616,7 +696,9 @@ fn gradients_bitwise_stable_across_thread_counts() {
     for threads in [1usize, 2, 4, 16] {
         let mut engine = NativeEngine::new(threads);
         let mut grad = Vec::new();
-        let loss = engine.loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad);
+        let loss = engine
+            .loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad)
+            .unwrap();
         match &baseline {
             None => baseline = Some((loss, grad)),
             Some((l0, g0)) => {

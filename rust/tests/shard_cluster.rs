@@ -1,0 +1,95 @@
+//! Cross-process shard determinism: real `hte-pinn worker` processes
+//! (spawned from the built binary via `CARGO_BIN_EXE_hte-pinn`) serving
+//! a TCP cluster backend, gated `to_bits` against the in-process
+//! backend, plus the dead-worker error path.
+//!
+//! The broader loopback matrix (every family × worker counts 1/2/3)
+//! runs against in-test TCP servers in `runtime::cluster`'s unit tests;
+//! this file is the end-to-end proof that the guarantee survives actual
+//! process boundaries and the CLI worker entry point.
+
+use std::path::Path;
+
+use hte_pinn::coordinator::{NativeTrainer, TrainConfig};
+use hte_pinn::estimators::Estimator;
+use hte_pinn::runtime::{JobSpec, LocalWorkerPool, TcpClusterBackend};
+
+fn worker_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_hte-pinn"))
+}
+
+fn config(family: &str, method: &str, d: usize, epochs: usize) -> TrainConfig {
+    let estimator =
+        if family == "bihar" { Estimator::HteGaussian } else { Estimator::HteRademacher };
+    TrainConfig {
+        family: family.into(),
+        method: method.into(),
+        estimator,
+        d,
+        v: 4,
+        epochs,
+        lr0: 2e-3,
+        seed: 5,
+        lambda_g: 10.0,
+        log_every: usize::MAX,
+    }
+}
+
+/// Two real worker processes train sg2 bitwise-identically to the
+/// in-process engine: same losses, same parameters, same Adam state.
+#[test]
+fn shard_two_worker_processes_train_sg2_bitwise_identical() {
+    let cfg = config("sg2", "probe", 5, 6);
+    let mut local = NativeTrainer::with_threads(cfg.clone(), 9, 3).expect("local trainer");
+
+    let pool = LocalWorkerPool::spawn_with(worker_bin(), 2, 2).expect("spawn 2 workers");
+    let backend = TcpClusterBackend::connect(&pool.addrs, JobSpec::from_config(&cfg))
+        .expect("connect 2-worker cluster");
+    assert_eq!(backend.workers(), 2);
+    let mut remote = NativeTrainer::with_backend(cfg, 9, Box::new(backend)).expect("remote");
+    assert!(remote.executor().contains("workers=2"), "{}", remote.executor());
+
+    for step in 0..6 {
+        local.step().expect("local step");
+        remote.step().expect("remote step");
+        assert_eq!(
+            local.last_loss.to_bits(),
+            remote.last_loss.to_bits(),
+            "loss diverged at step {step}"
+        );
+    }
+    let (a, b) = (local.state_host(), remote.state_host());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits(), "packed params|m|v|t state diverged");
+    }
+}
+
+/// The kill-one-worker error path: after a worker process dies mid-run,
+/// the next step fails with a diagnostic that names the worker — it
+/// must not hang and must not return garbage.
+#[test]
+fn shard_killed_worker_process_surfaces_clear_diagnostic() {
+    let cfg = config("sg2", "probe", 4, 4);
+    let mut pool = LocalWorkerPool::spawn_with(worker_bin(), 2, 1).expect("spawn 2 workers");
+    let dead_addr = pool.addrs[0].clone();
+    let backend = TcpClusterBackend::connect(&pool.addrs, JobSpec::from_config(&cfg))
+        .expect("connect cluster");
+    let mut trainer = NativeTrainer::with_backend(cfg, 9, Box::new(backend)).expect("trainer");
+    trainer.step().expect("both workers alive: the step succeeds");
+
+    pool.kill_one(0);
+    let mut saw_error = None;
+    // the write to the dead worker can land in the kernel buffer before
+    // the RST comes back, so the failure may take one extra step to
+    // surface — but it must surface, never hang
+    for _ in 0..3 {
+        if let Err(e) = trainer.step() {
+            saw_error = Some(format!("{e:#}"));
+            break;
+        }
+    }
+    let err = saw_error.expect("a step after the kill must fail");
+    assert!(err.contains("worker"), "diagnostic must name the worker: {err}");
+    assert!(err.contains(&dead_addr), "diagnostic must include the address: {err}");
+}
