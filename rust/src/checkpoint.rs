@@ -45,16 +45,34 @@ pub fn save(
     }
     let header_val = obj(header_fields);
     let header = header_val.to_json().into_bytes();
-    if let Some(parent) = path.as_ref().parent() {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u64).to_le_bytes())?;
-    f.write_all(&header)?;
-    for v in state {
-        f.write_all(&v.to_le_bytes())?;
+    // Atomic write: stream to `<path>.tmp`, fsync, then rename over the
+    // target.  A writer killed at any instant leaves either the old
+    // checkpoint or the new one — never a torn file (autosave counts on
+    // this: the crash it exists for would otherwise destroy the very
+    // checkpoint it's overwriting).
+    let tmp = path.with_extension(match path.extension() {
+        Some(ext) => format!("{}.tmp", ext.to_string_lossy()),
+        None => "tmp".to_string(),
+    });
+    {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating checkpoint temp file {tmp:?}"))?;
+        let mut f = std::io::BufWriter::new(file);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(&header)?;
+        for v in state {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        let file = f.into_inner().context("flushing checkpoint temp file")?;
+        file.sync_all().context("syncing checkpoint temp file")?;
     }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} into place as {path:?}"))?;
     Ok(())
 }
 
@@ -158,6 +176,35 @@ mod tests {
         save(&path, &config(), 3, None, &[0.5], &[1.0, 2.0]).unwrap();
         let (meta, _) = load(&path).unwrap();
         assert_eq!(meta.batch_n, None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The atomic-write guarantee: every byte of a save goes to
+    /// `<path>.tmp` until the final rename, so a writer killed at any
+    /// instant leaves the previous good checkpoint untouched.
+    #[test]
+    fn killed_writer_leaves_the_old_checkpoint_intact() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-atomic-{}", std::process::id()));
+        let path = dir.join("run.ckpt");
+        let old_state: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        save(&path, &config(), 10, Some(8), &[0.5], &old_state).unwrap();
+        // a completed save leaves no temp file behind
+        let tmp = dir.join("run.ckpt.tmp");
+        assert!(!tmp.exists(), "save must clean up its temp file via rename");
+        // simulate a writer killed mid-save: a torn temp file is all a
+        // crash can produce, because the target is only touched by the
+        // final rename
+        std::fs::write(&tmp, b"HTEPINN1 torn mid-write").unwrap();
+        let (meta, loaded) = load(&path).unwrap();
+        assert_eq!(meta.step, 10);
+        assert_eq!(loaded, old_state, "the old checkpoint must survive a torn save");
+        // the next save overwrites the stale temp file and completes
+        let new_state: Vec<f32> = (0..64).map(|i| -(i as f32)).collect();
+        save(&path, &config(), 11, Some(8), &[0.5], &new_state).unwrap();
+        assert!(!tmp.exists());
+        let (meta, loaded) = load(&path).unwrap();
+        assert_eq!(meta.step, 11);
+        assert_eq!(loaded, new_state);
         std::fs::remove_dir_all(&dir).ok();
     }
 

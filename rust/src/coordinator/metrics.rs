@@ -19,6 +19,10 @@ pub struct StepRecord {
     /// 3.2/3.3), when cheap enough to compute (small d, order-2
     /// operator); omitted from the JSONL when `None`.
     pub probe_var: Option<f64>,
+    /// Cumulative cluster-recovery events (worker deaths survived by
+    /// shard reassignment, rejoins, respawns) up to this step; omitted
+    /// from the JSONL for fault-free runs.
+    pub recoveries: Option<usize>,
 }
 
 impl StepRecord {
@@ -29,6 +33,9 @@ impl StepRecord {
         );
         if let Some(pv) = self.probe_var {
             out.push_str(&format!(",\"probe_var\":{pv:e}"));
+        }
+        if let Some(r) = self.recoveries {
+            out.push_str(&format!(",\"recoveries\":{r}"));
         }
         out.push('}');
         out
@@ -113,6 +120,7 @@ mod tests {
                     it_per_sec: 100.0,
                     rss_mb: 42.0,
                     probe_var: if step == 2 { Some(0.25) } else { None },
+                    recoveries: if step == 2 { Some(3) } else { None },
                 })
                 .unwrap();
         }
@@ -126,6 +134,7 @@ mod tests {
         let parsed = crate::util::json::Value::parse(lines[2]).unwrap();
         assert_eq!(parsed.get("step").unwrap().as_usize().unwrap(), 2);
         assert!((parsed.get("probe_var").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(parsed.get("recoveries").unwrap().as_usize().unwrap(), 3);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -141,6 +150,7 @@ mod tests {
                 it_per_sec: 0.0,
                 rss_mb: 0.0,
                 probe_var: None,
+                recoveries: None,
             })
             .unwrap();
         logger.flush().unwrap();

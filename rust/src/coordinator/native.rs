@@ -18,7 +18,7 @@
 //! per-step sampler/probe randomness so a resumed run is bitwise
 //! identical to an uninterrupted one.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -56,6 +56,15 @@ pub struct NativeTrainer {
     pub config: TrainConfig,
     pub step_idx: usize,
     pub last_loss: f32,
+    /// Backend recovery events (worker deaths, shard reassignments,
+    /// rejoins) observed so far — recovery changes latency, never bits,
+    /// so it is *reported* here rather than affecting results.
+    pub recoveries: usize,
+    pub recovery_log: Vec<String>,
+    /// `train --save-every N`: checkpoint to `.0` every `.1` steps
+    /// during [`NativeTrainer::run`] (atomic writes — a crash mid-save
+    /// cannot destroy the previous checkpoint).
+    autosave: Option<(PathBuf, usize)>,
     // Adam state (flat, packed order) + persistent packed parameters
     flat: Vec<f32>,
     m: Vec<f32>,
@@ -155,6 +164,9 @@ impl NativeTrainer {
             config,
             step_idx: 0,
             last_loss: f32::NAN,
+            recoveries: 0,
+            recovery_log: Vec::new(),
+            autosave: None,
             m: vec![0.0; n_params],
             v: vec![0.0; n_params],
             t: 0.0,
@@ -170,6 +182,14 @@ impl NativeTrainer {
     /// "tcp-cluster(workers=2)").
     pub fn executor(&self) -> String {
         self.engine.backend_label()
+    }
+
+    /// Checkpoint to `path` every `every` steps during
+    /// [`NativeTrainer::run`] — a crashed run then loses at most
+    /// `every` steps, and resuming from the autosave is bitwise
+    /// identical to never having crashed.
+    pub fn autosave_every(&mut self, path: impl AsRef<Path>, every: usize) {
+        self.autosave = Some((path.as_ref().to_path_buf(), every.max(1)));
     }
 
     /// Draw this step's probe matrices into `probe_host` — one fill per
@@ -200,7 +220,14 @@ impl NativeTrainer {
             self.op.as_ref(),
             &batch,
             &mut self.grad,
-        )?;
+        );
+        // drain recovery events before propagating any error, so even a
+        // fatal step (all workers dead) leaves its history in the log
+        for event in self.engine.take_backend_events() {
+            self.recoveries += 1;
+            self.recovery_log.push(event);
+        }
+        let loss = loss?;
         // re-pack from `mlp` (not the last step's flat) so external edits
         // to the public field — warm starts, perturbations — are honored
         self.mlp.pack_into(&mut self.flat);
@@ -288,6 +315,12 @@ impl NativeTrainer {
         let start_step = self.step_idx;
         while self.step_idx < epochs {
             self.step()?;
+            if let Some((path, every)) = &self.autosave {
+                if self.step_idx % every == 0 {
+                    let path = path.clone();
+                    self.save_checkpoint(&path)?;
+                }
+            }
             let log_every = self.config.log_every.max(1);
             if self.step_idx % log_every == 0 || self.step_idx == epochs {
                 let done = (self.step_idx - start_step) as f64;
@@ -299,6 +332,7 @@ impl NativeTrainer {
                     it_per_sec: done / start.elapsed().as_secs_f64(),
                     rss_mb: rss_mb(),
                     probe_var: self.probe_variance(),
+                    recoveries: (self.recoveries > 0).then_some(self.recoveries),
                 })?;
             }
         }
@@ -699,5 +733,40 @@ mod tests {
             }
             std::fs::remove_dir_all(&dir).ok();
         }
+    }
+
+    /// `--save-every` autosave: run() drops a checkpoint every N steps,
+    /// and resuming from the latest autosave is bitwise identical to the
+    /// run that never crashed.
+    #[test]
+    fn autosave_resume_matches_uninterrupted() {
+        let cfg = config(5, 16);
+        let dir = std::env::temp_dir()
+            .join(format!("hte-native-autosave-{}", std::process::id()));
+        let path = dir.join("auto.ckpt");
+
+        let mut straight = NativeTrainer::with_threads(cfg.clone(), 8, 2).unwrap();
+        for _ in 0..16 {
+            straight.step().unwrap();
+        }
+
+        // the "crashed" run: autosaves every 7 steps (→ steps 7, 14),
+        // then the process is gone — only the autosave survives
+        let mut crashed = NativeTrainer::with_threads(cfg, 8, 2).unwrap();
+        crashed.autosave_every(&path, 7);
+        crashed.run(&mut MetricsLogger::null()).unwrap();
+        drop(crashed);
+
+        let mut resumed = NativeTrainer::resume(&path, 3).unwrap();
+        assert_eq!(resumed.step_idx, 14, "latest autosave is at step 14");
+        for _ in 0..2 {
+            resumed.step().unwrap();
+        }
+
+        assert_eq!(straight.last_loss.to_bits(), resumed.last_loss.to_bits());
+        for (a, b) in straight.state_host().iter().zip(&resumed.state_host()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "autosave-resumed run diverged");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

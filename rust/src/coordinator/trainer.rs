@@ -257,6 +257,7 @@ impl<'e> Trainer<'e> {
                     // the artifact backend keeps state device-resident;
                     // no cheap host-side Hessian to feed the theorems
                     probe_var: None,
+                    recoveries: None,
                 })?;
                 last_log = now;
                 last_step = self.step_idx;

@@ -17,6 +17,8 @@
 //! artifact `train` backend need `--features xla` (DESIGN.md §4).
 
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -35,7 +37,8 @@ use hte_pinn::pde::PdeProblem;
 #[cfg(feature = "xla")]
 use hte_pinn::runtime::Engine;
 use hte_pinn::runtime::{
-    serve, InProcessBackend, JobSpec, LocalWorkerPool, Manifest, ShardBackend, TcpClusterBackend,
+    env_rank, serve, serve_conns_with_faults, ClusterOpts, FaultPlan, InProcessBackend, JobSpec,
+    LocalWorkerPool, Manifest, ShardBackend, TcpClusterBackend,
 };
 use hte_pinn::table;
 use hte_pinn::util::args::Args;
@@ -47,11 +50,20 @@ const USAGE: &str = "usage: hte-pinn <info|train|worker|table|memmodel> [flags]
            --epochs 2000 --lr0 1e-3 --seed 0 --lambda-g 10 --log-every 100]
            [--backend native|artifact] [--batch 100] --artifacts DIR
            [--metrics FILE] [--eval-points 20000] [--save FILE]
+           [--save-every N  (native: autosave --save FILE every N steps)]
            [--resume FILE  (native: continue a checkpoint to its epochs)]
            [native sharding: --workers N (spawn N local worker processes)
            | --worker-addrs HOST:PORT,..  (connect to running workers);
-           results are bitwise identical to a single-process run]
+           results are bitwise identical to a single-process run, even
+           across mid-run worker deaths (shards reassign to survivors)]
+           [cluster tuning: --max-worker-retries R (default 3)
+           --rejoin-interval-secs S (default 30) --connect-timeout-secs C
+           --handshake-timeout-secs H --step-timeout-secs T (defaults
+           10/10/600); flags win over the HTE_* env knobs]
   worker   --listen HOST:PORT [--threads T]   (serve shards; port 0 = auto)
+           [--fault SPEC  (inject faults for chaos testing — grammar
+           rank=K, die_after_steps=N, stall_secs=S@STEP, drop_conn@STEP,
+           corrupt_frame@STEP; also read from HTE_FAULT)]
   table    --which 1..5|ac [--backend native|artifact] [--epochs N --seeds K
            --threads T --eval-points M --lr0 LR --out DIR]
            [artifact: --artifacts DIR] [native (4, 5, ac): --batch N
@@ -89,6 +101,36 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let batch_n: usize = args.get_parse("batch", 100usize)?;
     let workers: usize = args.get_parse("workers", 0usize)?;
     let worker_addrs = args.get("worker-addrs");
+    let save_every: usize = args.get_parse("save-every", 0usize)?;
+
+    // Cluster recovery knobs: flags win over the HTE_* env vars, env
+    // over defaults.  Deadlines clamp to 1 s (0 means "forever" to the
+    // OS); the rejoin interval may be 0 (re-dial dead workers every
+    // step).
+    let parse_secs = |flag: &str, text: &str| -> Result<u64> {
+        text.parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("--{flag}: cannot parse {text:?}: {e}"))
+    };
+    let mut cluster_opts = ClusterOpts::from_env();
+    if let Some(s) = args.get("connect-timeout-secs") {
+        cluster_opts.deadlines.connect =
+            Duration::from_secs(parse_secs("connect-timeout-secs", &s)?.max(1));
+    }
+    if let Some(s) = args.get("handshake-timeout-secs") {
+        cluster_opts.deadlines.handshake =
+            Duration::from_secs(parse_secs("handshake-timeout-secs", &s)?.max(1));
+    }
+    if let Some(s) = args.get("step-timeout-secs") {
+        cluster_opts.deadlines.step =
+            Duration::from_secs(parse_secs("step-timeout-secs", &s)?.max(1));
+    }
+    if let Some(s) = args.get("max-worker-retries") {
+        cluster_opts.max_worker_retries = parse_secs("max-worker-retries", &s)? as u32;
+    }
+    if let Some(s) = args.get("rejoin-interval-secs") {
+        cluster_opts.rejoin_interval =
+            Duration::from_secs(parse_secs("rejoin-interval-secs", &s)?);
+    }
 
     let (artifact_dir, configs) = match config_path {
         Some(path) => {
@@ -116,6 +158,9 @@ fn cmd_train(mut args: Args) -> Result<()> {
     if save.is_some() && configs.len() > 1 {
         bail!("--save writes a single checkpoint; runs would clobber it — use one run config");
     }
+    if save_every > 0 && save.is_none() {
+        bail!("--save-every autosaves to the --save FILE path; add --save");
+    }
     match parse_backend(&backend)? {
         Backend::Native => {
             if resume.is_some() && configs.len() > 1 {
@@ -134,12 +179,17 @@ fn cmd_train(mut args: Args) -> Result<()> {
             // targets N times over.
             let worker_pool = if workers > 0 {
                 let threads_per_worker = (nn::default_threads() / workers).max(1);
-                Some(LocalWorkerPool::spawn(workers, threads_per_worker)?)
+                // behind Arc<Mutex<..>> so the backend's respawner hook
+                // can revive crashed children mid-run
+                Some(Arc::new(Mutex::new(LocalWorkerPool::spawn(
+                    workers,
+                    threads_per_worker,
+                )?)))
             } else {
                 None
             };
             let cluster_addrs: Option<Vec<String>> = match (&worker_pool, &worker_addrs) {
-                (Some(p), _) => Some(p.addrs.clone()),
+                (Some(p), _) => Some(p.lock().unwrap().addrs.clone()),
                 (None, Some(list)) => Some(
                     list.split(',')
                         .map(|s| s.trim().to_string())
@@ -150,10 +200,20 @@ fn cmd_train(mut args: Args) -> Result<()> {
             };
             let make_backend = |cfg: &TrainConfig| -> Result<Box<dyn ShardBackend>> {
                 match &cluster_addrs {
-                    Some(addrs) => Ok(Box::new(TcpClusterBackend::connect(
-                        addrs,
-                        JobSpec::from_config(cfg),
-                    )?)),
+                    Some(addrs) => {
+                        let mut backend = TcpClusterBackend::connect_with(
+                            addrs,
+                            JobSpec::from_config(cfg),
+                            cluster_opts.clone(),
+                        )?;
+                        if let Some(pool) = &worker_pool {
+                            let pool = Arc::clone(pool);
+                            backend.set_respawner(Box::new(move |addr: &str| {
+                                pool.lock().unwrap().respawn_addr(addr)
+                            }));
+                        }
+                        Ok(Box::new(backend))
+                    }
                     None => Ok(Box::new(InProcessBackend::new(nn::default_threads()))),
                 }
             };
@@ -184,6 +244,11 @@ fn cmd_train(mut args: Args) -> Result<()> {
                         t
                     }
                 };
+                if save_every > 0 {
+                    if let Some(path) = &save {
+                        trainer.autosave_every(path, save_every);
+                    }
+                }
                 let mut logger = match &metrics {
                     Some(path) => MetricsLogger::to_file(path)?,
                     None => MetricsLogger::null(),
@@ -196,6 +261,12 @@ fn cmd_train(mut args: Args) -> Result<()> {
                     table::fmt_speed(summary.it_per_sec),
                     trainer.executor()
                 );
+                if trainer.recoveries > 0 {
+                    println!(
+                        "recoveries={} (worker deaths survived by shard reassignment)",
+                        trainer.recoveries
+                    );
+                }
                 if eval_points > 0 {
                     let run_cfg = &trainer.config;
                     let problem = problem_for(&run_cfg.family, run_cfg.d)?;
@@ -216,6 +287,9 @@ fn cmd_train(mut args: Args) -> Result<()> {
             }
             if workers > 0 || worker_addrs.is_some() {
                 bail!("--workers/--worker-addrs shard the native backend only");
+            }
+            if save_every > 0 {
+                bail!("--save-every autosaves mid-run on the native backend only");
             }
             #[cfg(feature = "xla")]
             {
@@ -277,6 +351,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
 fn cmd_worker(mut args: Args) -> Result<()> {
     let listen = args.get("listen");
     let threads: usize = args.get_parse("threads", nn::default_threads())?;
+    let fault = args.get("fault");
     args.finish()?;
     let Some(listen) = listen else {
         bail!("worker needs --listen HOST:PORT (port 0 picks a free port)\n{USAGE}");
@@ -287,7 +362,20 @@ fn cmd_worker(mut args: Args) -> Result<()> {
     println!("listening on {addr}");
     use std::io::Write;
     std::io::stdout().flush().ok();
-    serve(listener, threads)
+    match fault {
+        // `--fault` wins over HTE_FAULT (which `serve` reads itself);
+        // both rank-gate against HTE_WORKER_RANK so one spec can target
+        // a single worker of a spawned fleet
+        Some(spec) => {
+            let mut plan = FaultPlan::gate_by_rank(
+                FaultPlan::parse(&spec).context("--fault")?,
+                env_rank(),
+            );
+            plan.exit_process = true;
+            serve_conns_with_faults(listener, threads, None, plan)
+        }
+        None => serve(listener, threads),
+    }
 }
 
 fn cmd_table(mut args: Args) -> Result<()> {

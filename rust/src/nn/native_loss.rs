@@ -589,6 +589,13 @@ impl NativeEngine {
         self.backend.label()
     }
 
+    /// Drain the backend's recovery events (worker deaths, shard
+    /// reassignments, rejoins) since the last call — empty for
+    /// in-process backends.
+    pub fn take_backend_events(&mut self) -> Vec<String> {
+        self.backend.take_events()
+    }
+
     /// Residual loss and its parameter gradient (packed order) under the
     /// problem family's default operator — see
     /// [`NativeEngine::loss_and_grad_with`] for an explicit operator

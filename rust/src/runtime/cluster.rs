@@ -14,11 +14,20 @@
 //!    replay) are executor-independent by construction.  The guarantee
 //!    holds across processes on the same ISA; heterogeneous ISAs differ
 //!    in libm last bits (DESIGN.md §9).
-//! 2. **No hangs.**  Every frame is length-prefixed; a dead peer is an
-//!    EOF or reset, surfaced as a clear `anyhow` diagnostic naming the
-//!    worker, and reads carry a generous timeout
-//!    (`HTE_WORKER_TIMEOUT_SECS`, default 600) so a wedged-but-open
-//!    socket cannot block training forever.
+//! 2. **No hangs, no lost runs.**  Every frame is length-prefixed and
+//!    every socket phase carries its own deadline ([`Deadlines`]:
+//!    connect/handshake 10 s, step 600 s — `HTE_WORKER_TIMEOUT_SECS`
+//!    still works as a blanket override).  A worker that dies, wedges,
+//!    or answers garbage mid-step is marked dead and its shards are
+//!    reassigned to the survivors within the same step ([`split_range`]
+//!    over the live subset); since rank 0 merges by shard index, the
+//!    reduced bits are identical to the no-failure run.  Dead addresses
+//!    are re-dialed every [`ClusterOpts::rejoin_interval`] (a rejoin is
+//!    just a fresh HELLO — worker state rebuilds from the job spec),
+//!    and `train --workers N` respawns crashed children via
+//!    [`LocalWorkerPool::respawn_addr`].  Only zero live workers aborts
+//!    a step.  The fault-injection harness (`HTE_FAULT`, see
+//!    [`super::fault`]) drives all of these paths in tests and CI.
 //! 3. **No serde dependency.**  The container format is hand-rolled
 //!    little-endian framing (`[magic u32][tag u8][len u64][payload]`)
 //!    with f32/f64 values shipped as raw bit patterns — exactly the
@@ -44,9 +53,9 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::ops::Range;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdout, Command, Stdio};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -55,7 +64,8 @@ use crate::nn::{residual_op_for, Mlp, NativeBatch, ResidualOp, CHUNK_POINTS};
 use crate::pde::PdeProblem;
 use crate::rng::Xoshiro256pp;
 
-use super::shard::{prepare_results, ShardBackend, ShardJob, ShardPlan, ShardResult};
+use super::fault::{FaultAction, FaultPlan, FaultState};
+use super::shard::{prepare_results, split_range, ShardBackend, ShardJob, ShardPlan, ShardResult};
 
 /// Bumped whenever a frame layout changes; a version mismatch is a hard
 /// handshake error (shipping shards to a differently-planned binary
@@ -72,12 +82,109 @@ const TAG_STEP: u8 = 3;
 const TAG_RESULT: u8 = 4;
 const TAG_ERROR: u8 = 5;
 
-fn worker_timeout() -> Duration {
-    let secs = std::env::var("HTE_WORKER_TIMEOUT_SECS")
-        .ok()
-        .and_then(|s| s.parse::<u64>().ok())
-        .unwrap_or(600);
-    Duration::from_secs(secs.max(1))
+fn env_secs(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|s| s.parse::<u64>().ok())
+}
+
+/// Per-phase socket deadlines, replacing the old single
+/// `HTE_WORKER_TIMEOUT_SECS` blanket (a wedged worker should be caught
+/// in seconds at connect/handshake, while a step may legitimately take
+/// minutes on a huge shard).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Deadlines {
+    /// TCP connect (default 10 s).
+    pub connect: Duration,
+    /// HELLO → HELLO_ACK exchange (default 10 s).
+    pub handshake: Duration,
+    /// STEP → RESULT round trip (default 600 s).
+    pub step: Duration,
+}
+
+impl Deadlines {
+    /// Resolve `[connect, handshake, step]` overrides against the
+    /// legacy blanket value: an explicit per-phase value wins, then the
+    /// legacy blanket, then the per-phase default.  Zero clamps to 1 s
+    /// (a zero socket timeout means "block forever" to the OS).
+    pub fn resolve(explicit: [Option<u64>; 3], legacy: Option<u64>) -> Self {
+        let pick = |e: Option<u64>, default: u64| {
+            Duration::from_secs(e.or(legacy).unwrap_or(default).max(1))
+        };
+        Deadlines {
+            connect: pick(explicit[0], 10),
+            handshake: pick(explicit[1], 10),
+            step: pick(explicit[2], 600),
+        }
+    }
+
+    /// `HTE_CONNECT_TIMEOUT_SECS` / `HTE_HANDSHAKE_TIMEOUT_SECS` /
+    /// `HTE_STEP_TIMEOUT_SECS`, with `HTE_WORKER_TIMEOUT_SECS` still
+    /// honored as the blanket fallback.
+    pub fn from_env() -> Self {
+        Self::resolve(
+            [
+                env_secs("HTE_CONNECT_TIMEOUT_SECS"),
+                env_secs("HTE_HANDSHAKE_TIMEOUT_SECS"),
+                env_secs("HTE_STEP_TIMEOUT_SECS"),
+            ],
+            env_secs("HTE_WORKER_TIMEOUT_SECS"),
+        )
+    }
+}
+
+/// Recovery knobs for [`TcpClusterBackend`]: how hard to try to reach a
+/// worker, and how often to re-dial dead ones between steps.
+#[derive(Clone, Debug)]
+pub struct ClusterOpts {
+    pub deadlines: Deadlines,
+    /// Extra connect attempts after the first (exponential backoff with
+    /// jitter).  Only transient failures retry — a worker that *answers*
+    /// and rejects the job spec fails immediately.
+    pub max_worker_retries: u32,
+    /// How long a worker stays dead before rank 0 re-dials it at a step
+    /// boundary.
+    pub rejoin_interval: Duration,
+}
+
+impl ClusterOpts {
+    /// `HTE_MAX_WORKER_RETRIES` (default 3) and
+    /// `HTE_REJOIN_INTERVAL_SECS` (default 30) over
+    /// [`Deadlines::from_env`].
+    pub fn from_env() -> Self {
+        ClusterOpts {
+            deadlines: Deadlines::from_env(),
+            max_worker_retries: env_secs("HTE_MAX_WORKER_RETRIES").unwrap_or(3) as u32,
+            rejoin_interval: Duration::from_secs(env_secs("HTE_REJOIN_INTERVAL_SECS").unwrap_or(30)),
+        }
+    }
+}
+
+impl Default for ClusterOpts {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn addr_salt(addr: &str) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    addr.hash(&mut h);
+    h.finish()
+}
+
+/// Exponential backoff (100 ms · 2^attempt, capped at 5 s) plus up to
+/// 25% address-salted jitter so a fleet of coordinators re-dialing one
+/// restarted worker doesn't stampede it in lockstep.
+fn backoff_delay(attempt: u32, salt: u64) -> Duration {
+    let base = 100u64.saturating_mul(1 << attempt.min(6)).min(5_000);
+    let jitter = splitmix64(salt ^ ((attempt as u64) << 32)) % (base / 4 + 1);
+    Duration::from_millis(base + jitter)
 }
 
 // ---------------------------------------------------------------------------
@@ -326,10 +433,133 @@ fn encode_step_into(
 // Rank 0: the cluster backend
 // ---------------------------------------------------------------------------
 
-struct WorkerConn {
-    stream: TcpStream,
+/// One configured worker address and its connection state.  A slot with
+/// `stream: None` is dead: its shards are reassigned to the survivors
+/// and the address is re-dialed every [`ClusterOpts::rejoin_interval`].
+struct WorkerSlot {
     addr: String,
+    stream: Option<TcpStream>,
+    /// Why the last session with this worker ended (for the all-dead
+    /// diagnostic and rejoin logging).
+    last_error: Option<String>,
+    /// When the address was last dialed (throttles rejoin attempts).
+    last_dial: Option<Instant>,
 }
+
+/// Handshake failure taxonomy: a worker that *answers* and says no is a
+/// deterministic rejection (retrying cannot help, and the worker's own
+/// message must surface verbatim); anything torn at the transport layer
+/// may heal, so it retries with backoff.
+enum DialError {
+    Rejected(anyhow::Error),
+    Transient(anyhow::Error),
+}
+
+impl DialError {
+    fn into_inner(self) -> anyhow::Error {
+        match self {
+            DialError::Rejected(e) | DialError::Transient(e) => e,
+        }
+    }
+}
+
+/// Connect + HELLO handshake with one worker under the per-phase
+/// deadlines; on success the stream carries the step deadline and the
+/// worker's resolved operator name is returned.
+fn dial(addr: &str, spec: &JobSpec, dl: &Deadlines) -> std::result::Result<(TcpStream, String), DialError> {
+    let mut stream = connect_worker(addr, dl.connect).map_err(DialError::Transient)?;
+    stream.set_nodelay(true).ok();
+    // both directions: a wedged peer must error out, not block
+    // write_all forever (the read timeout alone would not cover a full
+    // TCP send buffer)
+    stream.set_read_timeout(Some(dl.handshake)).ok();
+    stream.set_write_timeout(Some(dl.handshake)).ok();
+    write_frame(&mut stream, TAG_HELLO, &encode_hello(spec)).map_err(|e| {
+        DialError::Transient(
+            anyhow::Error::from(e).context(format!("sending the job spec to worker {addr}")),
+        )
+    })?;
+    let (tag, payload) = read_frame(&mut stream)
+        .map_err(|e| DialError::Transient(e.context(format!("waiting for worker {addr}'s handshake ack"))))?;
+    match tag {
+        TAG_HELLO_ACK => {
+            let mut d = Dec::new(&payload);
+            let parsed = (|| -> Result<(String, usize)> {
+                let name = d.str()?.to_string();
+                let chunk = d.u64()? as usize;
+                let _worker_threads = d.u64()?;
+                Ok((name, chunk))
+            })();
+            let (name, chunk) = parsed.map_err(DialError::Rejected)?;
+            if chunk != CHUNK_POINTS {
+                return Err(DialError::Rejected(anyhow::anyhow!(
+                    "worker {addr} shards batches into {chunk}-point chunks but this \
+                     coordinator uses {CHUNK_POINTS} — mixed binary versions would \
+                     break the bitwise shard plan"
+                )));
+            }
+            stream.set_read_timeout(Some(dl.step)).ok();
+            stream.set_write_timeout(Some(dl.step)).ok();
+            Ok((stream, name))
+        }
+        TAG_ERROR => {
+            let mut d = Dec::new(&payload);
+            let msg = d.str().unwrap_or("(unreadable error frame)");
+            Err(DialError::Rejected(anyhow::anyhow!("worker {addr} rejected the job spec: {msg}")))
+        }
+        other => Err(DialError::Rejected(anyhow::anyhow!(
+            "worker {addr} sent unexpected frame tag {other} during handshake"
+        ))),
+    }
+}
+
+/// [`dial`] with bounded retry: transient failures back off and try
+/// again up to `opts.max_worker_retries` extra times; rejections fail
+/// immediately with the worker's own message on top.
+fn dial_retry(
+    addr: &str,
+    spec: &JobSpec,
+    opts: &ClusterOpts,
+) -> Result<(TcpStream, String)> {
+    let mut attempt = 0u32;
+    loop {
+        match dial(addr, spec, &opts.deadlines) {
+            Ok(ok) => return Ok(ok),
+            Err(DialError::Rejected(e)) => return Err(e),
+            Err(DialError::Transient(e)) => {
+                if attempt >= opts.max_worker_retries {
+                    return Err(e.context(format!(
+                        "worker {addr} unreachable after {} connect attempt(s)",
+                        attempt + 1
+                    )));
+                }
+                let delay = backoff_delay(attempt, addr_salt(addr));
+                eprintln!(
+                    "[recovery] worker {addr} connect attempt {} failed ({e:#}); \
+                     retrying in {delay:?}",
+                    attempt + 1
+                );
+                std::thread::sleep(delay);
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// How one worker's part of a step ended, when it didn't end well.
+enum StepFailure {
+    /// Transport-level loss (EOF, timeout, garbage frame): mark the
+    /// worker dead and reassign its shards to the survivors.
+    Dead(String),
+    /// The worker *answered* with a deterministic application error —
+    /// every survivor would fail the same way, so abort the step.
+    Fatal(anyhow::Error),
+}
+
+/// Hook the local worker pool installs so rank 0 can respawn a crashed
+/// child process before re-dialing its address.  Returns `Ok(true)` if
+/// a process was (re)started.
+pub type RespawnHook = Box<dyn FnMut(&str) -> Result<bool> + Send>;
 
 /// `TcpStream::connect` with the module's timeout (the OS default can
 /// block for minutes against a black-holed address); tries every
@@ -359,79 +589,206 @@ fn connect_worker(addr: &str, timeout: Duration) -> Result<TcpStream> {
 /// reduction bitwise identical to a single-process run for any worker
 /// count (same-ISA caveat: DESIGN.md §10).
 pub struct TcpClusterBackend {
-    conns: Vec<WorkerConn>,
+    slots: Vec<WorkerSlot>,
     spec: JobSpec,
     /// Operator name every worker resolved during the handshake.
     op_name: String,
+    opts: ClusterOpts,
     step: u64,
     params_buf: Vec<f32>,
     step_buf: Enc,
+    /// Recovery events (deaths, rejoins, respawns) since the last
+    /// [`ShardBackend::take_events`] drain.
+    events: Vec<String>,
+    respawner: Option<RespawnHook>,
 }
 
 impl TcpClusterBackend {
-    /// Connect to `addrs` and handshake the job spec with each worker.
+    /// Connect to `addrs` and handshake the job spec with each worker,
+    /// with recovery knobs from the environment.
     pub fn connect(addrs: &[String], spec: JobSpec) -> Result<Self> {
+        Self::connect_with(addrs, spec, ClusterOpts::default())
+    }
+
+    /// [`TcpClusterBackend::connect`] with explicit recovery knobs.
+    pub fn connect_with(addrs: &[String], spec: JobSpec, opts: ClusterOpts) -> Result<Self> {
         if addrs.is_empty() {
             bail!("a worker cluster needs at least one worker address");
         }
-        let timeout = worker_timeout();
-        let mut conns = Vec::new();
+        let mut slots = Vec::new();
         let mut op_name: Option<String> = None;
         for addr in addrs {
-            let stream = connect_worker(addr, timeout)?;
-            stream.set_nodelay(true).ok();
-            // both directions: a wedged peer must error out, not block
-            // write_all forever (the read timeout alone would not cover
-            // a full TCP send buffer)
-            stream.set_read_timeout(Some(timeout)).ok();
-            stream.set_write_timeout(Some(timeout)).ok();
-            let mut conn = WorkerConn { stream, addr: addr.clone() };
-            write_frame(&mut conn.stream, TAG_HELLO, &encode_hello(&spec))
-                .with_context(|| format!("sending the job spec to worker {addr}"))?;
-            let (tag, payload) = read_frame(&mut conn.stream)
-                .with_context(|| format!("waiting for worker {addr}'s handshake ack"))?;
-            match tag {
-                TAG_HELLO_ACK => {
-                    let mut d = Dec::new(&payload);
-                    let name = d.str()?.to_string();
-                    let chunk = d.u64()? as usize;
-                    let _worker_threads = d.u64()?;
-                    if chunk != CHUNK_POINTS {
-                        bail!(
-                            "worker {addr} shards batches into {chunk}-point chunks but this \
-                             coordinator uses {CHUNK_POINTS} — mixed binary versions would \
-                             break the bitwise shard plan"
-                        );
-                    }
-                    match &op_name {
-                        None => op_name = Some(name),
-                        Some(expect) if *expect == name => {}
-                        Some(expect) => bail!(
-                            "worker {addr} resolved operator {name} but earlier workers \
-                             resolved {expect} — mixed worker builds?"
-                        ),
-                    }
-                }
-                TAG_ERROR => {
-                    let mut d = Dec::new(&payload);
-                    bail!("worker {addr} rejected the job spec: {}", d.str()?);
-                }
-                other => bail!("worker {addr} sent unexpected frame tag {other} during handshake"),
+            let (stream, name) = dial_retry(addr, &spec, &opts)?;
+            match &op_name {
+                None => op_name = Some(name),
+                Some(expect) if *expect == name => {}
+                Some(expect) => bail!(
+                    "worker {addr} resolved operator {name} but earlier workers \
+                     resolved {expect} — mixed worker builds?"
+                ),
             }
-            conns.push(conn);
+            slots.push(WorkerSlot {
+                addr: addr.clone(),
+                stream: Some(stream),
+                last_error: None,
+                last_dial: None,
+            });
         }
         Ok(Self {
-            conns,
+            slots,
             spec,
             op_name: op_name.expect("at least one worker acked"),
+            opts,
             step: 0,
             params_buf: Vec::new(),
             step_buf: Enc::default(),
+            events: Vec::new(),
+            respawner: None,
         })
     }
 
+    /// Configured workers (live or dead — a dead one may rejoin).
     pub fn workers(&self) -> usize {
-        self.conns.len()
+        self.slots.len()
+    }
+
+    /// Workers with a live connection right now.
+    pub fn live_workers(&self) -> usize {
+        self.slots.iter().filter(|s| s.stream.is_some()).count()
+    }
+
+    /// Install the hook that restarts crashed local worker processes
+    /// before their address is re-dialed (`train --workers N`).
+    pub fn set_respawner(&mut self, hook: RespawnHook) {
+        self.respawner = Some(hook);
+    }
+
+    fn mark_dead(&mut self, si: usize, step: u64, reason: &str) {
+        let slot = &mut self.slots[si];
+        slot.stream = None;
+        slot.last_error = Some(reason.to_string());
+        slot.last_dial = Some(Instant::now());
+        let event = format!(
+            "step {step}: worker {} dead ({reason}); shards reassigned to survivors",
+            slot.addr
+        );
+        eprintln!("[recovery] {event}");
+        self.events.push(event);
+    }
+
+    /// Between steps, re-dial every dead address whose rejoin interval
+    /// has elapsed — replaying the HELLO handshake rebuilds all worker
+    /// state from the job spec, so rejoin is just a fresh session.
+    fn try_rejoin(&mut self, step: u64) {
+        for i in 0..self.slots.len() {
+            if self.slots[i].stream.is_some() {
+                continue;
+            }
+            let due = match self.slots[i].last_dial {
+                None => true,
+                Some(at) => at.elapsed() >= self.opts.rejoin_interval,
+            };
+            if !due {
+                continue;
+            }
+            self.slots[i].last_dial = Some(Instant::now());
+            let addr = self.slots[i].addr.clone();
+            if let Some(hook) = self.respawner.as_mut() {
+                match hook(&addr) {
+                    Ok(true) => {
+                        let event = format!("step {step}: respawned local worker {addr}");
+                        eprintln!("[recovery] {event}");
+                        self.events.push(event);
+                    }
+                    Ok(false) => {}
+                    Err(e) => {
+                        self.slots[i].last_error = Some(format!("respawn failed: {e:#}"));
+                        continue;
+                    }
+                }
+            }
+            match dial(&addr, &self.spec, &self.opts.deadlines) {
+                Ok((stream, name)) => {
+                    if name != self.op_name {
+                        self.slots[i].last_error = Some(format!(
+                            "rejoined resolving operator {name}, cluster runs {} — \
+                             mixed worker builds?",
+                            self.op_name
+                        ));
+                        continue;
+                    }
+                    self.slots[i].stream = Some(stream);
+                    self.slots[i].last_error = None;
+                    let event = format!("step {step}: worker {addr} rejoined");
+                    eprintln!("[recovery] {event}");
+                    self.events.push(event);
+                }
+                Err(e) => {
+                    self.slots[i].last_error =
+                        Some(format!("rejoin failed: {:#}", e.into_inner()));
+                }
+            }
+        }
+    }
+
+    fn all_dead_error(&self, step: u64) -> anyhow::Error {
+        let mut lines = String::new();
+        for s in &self.slots {
+            lines.push_str(&format!(
+                "\n  worker {}: {}",
+                s.addr,
+                s.last_error.as_deref().unwrap_or("dead")
+            ));
+        }
+        anyhow::anyhow!(
+            "all {} cluster workers are dead at step {step} — no survivors to \
+             reassign shards to:{lines}",
+            self.slots.len()
+        )
+    }
+
+    /// Read one worker's RESULT for its part of a step, classifying any
+    /// failure as [`StepFailure::Dead`] (reassign) or
+    /// [`StepFailure::Fatal`] (abort).
+    fn gather_one(
+        &mut self,
+        si: usize,
+        step: u64,
+        range: &Range<usize>,
+        out: &mut [ShardResult],
+        filled: &mut [bool],
+    ) -> std::result::Result<(), StepFailure> {
+        let slot = &mut self.slots[si];
+        let stream = slot.stream.as_mut().expect("gather from a live slot");
+        let (tag, payload) = match read_frame(stream) {
+            Ok(frame) => frame,
+            Err(e) => {
+                return Err(StepFailure::Dead(format!(
+                    "waiting for step-{step} results (shards {range:?}): {e:#}"
+                )))
+            }
+        };
+        match tag {
+            TAG_RESULT => match decode_result_into(&payload, step, range, &slot.addr, out, filled)
+            {
+                Ok(()) => Ok(()),
+                Err(e) => Err(StepFailure::Dead(format!("step-{step} results rejected: {e:#}"))),
+            },
+            TAG_ERROR => {
+                let mut d = Dec::new(&payload);
+                let msg = d
+                    .str()
+                    .map(str::to_string)
+                    .unwrap_or_else(|_| "(unreadable error frame)".into());
+                Err(StepFailure::Fatal(anyhow::anyhow!(
+                    "worker {} failed on step {step}: {msg}",
+                    slot.addr
+                )))
+            }
+            other => Err(StepFailure::Dead(format!(
+                "unexpected frame tag {other} while awaiting step-{step} results"
+            ))),
+        }
     }
 }
 
@@ -515,39 +872,64 @@ impl ShardBackend for TcpClusterBackend {
         let step = self.step;
         self.params_buf.resize(n_params, 0.0);
         job.mlp.pack_into(&mut self.params_buf);
-        let ranges = plan.assignment(self.conns.len());
-        // Broadcast first: every worker starts computing while rank 0 is
-        // still writing to the next one.
-        for (conn, range) in self.conns.iter_mut().zip(&ranges) {
-            let d = self.spec.d;
-            encode_step_into(&mut self.step_buf, step, range, &self.params_buf, job.batch, d);
-            write_frame(&mut conn.stream, TAG_STEP, &self.step_buf.buf).with_context(|| {
-                format!(
-                    "sending step {step} (shards {range:?}) to worker {} — did the worker die?",
-                    conn.addr
-                )
-            })?;
-        }
-        // Gather; merge ordering is the caller's shard-index reduction,
-        // so gather order only affects latency, never bits.
+        self.try_rejoin(step);
+        // Supervised scatter/gather over a worklist of shard ranges.
+        // Every requeue coincides with marking at least one worker dead
+        // and rejoin only happens at step start, so the loop terminates:
+        // either every shard fills or every worker is dead.  Because the
+        // caller merges by shard index, *who* computed a shard — first
+        // assignment or reassignment — never changes the reduced bits.
         let mut filled = vec![false; n_tasks];
-        for (conn, range) in self.conns.iter_mut().zip(&ranges) {
-            let (tag, payload) = read_frame(&mut conn.stream).with_context(|| {
-                format!(
-                    "waiting for step-{step} results from worker {} (shards {range:?}) — if \
-                     the worker died, restart it and rerun",
-                    conn.addr
-                )
-            })?;
-            match tag {
-                TAG_RESULT => {
-                    decode_result_into(&payload, step, range, &conn.addr, out, &mut filled)?
+        let mut todo: Vec<Range<usize>> = vec![0..n_tasks];
+        while let Some(range) = todo.pop() {
+            if range.is_empty() {
+                continue;
+            }
+            let live: Vec<usize> =
+                (0..self.slots.len()).filter(|&i| self.slots[i].stream.is_some()).collect();
+            if live.is_empty() {
+                return Err(self.all_dead_error(step));
+            }
+            let parts = split_range(&range, live.len());
+            // Broadcast first: every worker starts computing while rank 0
+            // is still writing to the next one.
+            let mut sent: Vec<(usize, Range<usize>)> = Vec::new();
+            for (&si, part) in live.iter().zip(&parts) {
+                if part.is_empty() {
+                    continue;
                 }
-                TAG_ERROR => {
-                    let mut d = Dec::new(&payload);
-                    bail!("worker {} failed on step {step}: {}", conn.addr, d.str()?);
+                let d = self.spec.d;
+                encode_step_into(&mut self.step_buf, step, part, &self.params_buf, job.batch, d);
+                let slot = &mut self.slots[si];
+                match write_frame(
+                    slot.stream.as_mut().expect("live slot"),
+                    TAG_STEP,
+                    &self.step_buf.buf,
+                ) {
+                    Ok(()) => sent.push((si, part.clone())),
+                    Err(e) => {
+                        self.mark_dead(si, step, &format!("sending step {step} (shards {part:?}): {e}"));
+                        todo.push(part.clone());
+                    }
                 }
-                other => bail!("worker {} sent unexpected frame tag {other}", conn.addr),
+            }
+            // Gather this round; merge ordering is the caller's
+            // shard-index reduction, so gather order only affects
+            // latency, never bits.
+            for (si, part) in sent {
+                match self.gather_one(si, step, &part, out, &mut filled) {
+                    Ok(()) => {}
+                    Err(StepFailure::Fatal(e)) => return Err(e),
+                    Err(StepFailure::Dead(reason)) => {
+                        // a half-decoded result may have filled a prefix
+                        // of the part; recompute the whole part
+                        for i in part.clone() {
+                            filled[i] = false;
+                        }
+                        self.mark_dead(si, step, &reason);
+                        todo.push(part);
+                    }
+                }
             }
         }
         if let Some(missing) = filled.iter().position(|f| !f) {
@@ -557,11 +939,15 @@ impl ShardBackend for TcpClusterBackend {
     }
 
     fn parallelism(&self) -> usize {
-        self.conns.len()
+        self.slots.len()
     }
 
     fn label(&self) -> String {
-        format!("tcp-cluster(workers={})", self.conns.len())
+        format!("tcp-cluster(workers={})", self.slots.len())
+    }
+
+    fn take_events(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.events)
     }
 }
 
@@ -724,17 +1110,22 @@ fn run_step(st: &mut WorkerState, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
-fn handle_coordinator(mut stream: TcpStream, threads: usize) -> Result<()> {
+/// One coordinator session.  Returns `Ok(true)` to keep accepting
+/// sessions, `Ok(false)` when fault injection says the worker dies.
+fn handle_coordinator(
+    mut stream: TcpStream,
+    threads: usize,
+    faults: &mut FaultState,
+) -> Result<bool> {
+    let dl = Deadlines::from_env();
     stream.set_nodelay(true).ok();
-    // Same generous timeout rank 0 uses, on both directions: a
-    // coordinator silent (or not reading) for that long is presumed
-    // dead (power loss, partition), the session ends with a logged
-    // error and the worker returns to accepting — a half-open
-    // connection can never wedge the worker's sequential accept loop.
-    stream.set_read_timeout(Some(worker_timeout())).ok();
-    stream.set_write_timeout(Some(worker_timeout())).ok();
+    // Handshake deadline until the session is established: a
+    // connected-but-silent peer (port scan, half-open socket) is shed
+    // in seconds and can never wedge the sequential accept loop.
+    stream.set_read_timeout(Some(dl.handshake)).ok();
+    stream.set_write_timeout(Some(dl.handshake)).ok();
     let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
-        return Ok(()); // connected and left without a word (port scan)
+        return Ok(true); // connected and left without a word (port scan)
     };
     if tag != TAG_HELLO {
         let _ = send_error(&mut stream, "expected a hello frame");
@@ -769,19 +1160,60 @@ fn handle_coordinator(mut stream: TcpStream, threads: usize) -> Result<()> {
     ack.u64(CHUNK_POINTS as u64);
     ack.u64(threads as u64);
     write_frame(&mut stream, TAG_HELLO_ACK, &ack.buf).context("sending hello ack")?;
+    // Session established: switch to the (much longer) step deadline —
+    // a coordinator may legitimately think for a while between steps.
+    stream.set_read_timeout(Some(dl.step)).ok();
+    stream.set_write_timeout(Some(dl.step)).ok();
     loop {
         let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
-            return Ok(()); // clean goodbye: coordinator closed
+            return Ok(true); // clean goodbye: coordinator closed
         };
         match tag {
-            TAG_STEP => match run_step(&mut st, &payload) {
-                Ok(()) => write_frame(&mut stream, TAG_RESULT, &st.reply.buf)
-                    .context("sending results")?,
-                Err(e) => {
-                    send_error(&mut stream, &format!("{e:#}")).context("sending error")?;
-                    return Err(e);
+            TAG_STEP => {
+                // the coordinator step id is the frame's first word —
+                // fault clauses key on it (and `stall_secs` sleeps
+                // inside `on_step`, modelling a wedged worker)
+                let step_id = payload
+                    .get(..8)
+                    .map(|b| u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+                    .unwrap_or(0);
+                match faults.on_step(step_id) {
+                    FaultAction::None => {}
+                    FaultAction::Die => {
+                        eprintln!(
+                            "worker: fault injection: dying after {} served frame(s)",
+                            faults.steps_served
+                        );
+                        if faults.plan.exit_process {
+                            std::process::exit(3);
+                        }
+                        return Ok(false);
+                    }
+                    FaultAction::DropConn => {
+                        eprintln!("worker: fault injection: dropping connection at step {step_id}");
+                        return Ok(true);
+                    }
+                    FaultAction::CorruptFrame => {
+                        eprintln!("worker: fault injection: corrupt frame at step {step_id}");
+                        // garbage magic, RESULT tag, zero length: the
+                        // coordinator must reject it and reassign
+                        let mut head = [0u8; 13];
+                        head[..4].copy_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+                        head[4] = TAG_RESULT;
+                        let _ = stream.write_all(&head);
+                        let _ = stream.flush();
+                        return Ok(true);
+                    }
                 }
-            },
+                match run_step(&mut st, &payload) {
+                    Ok(()) => write_frame(&mut stream, TAG_RESULT, &st.reply.buf)
+                        .context("sending results")?,
+                    Err(e) => {
+                        send_error(&mut stream, &format!("{e:#}")).context("sending error")?;
+                        return Err(e);
+                    }
+                }
+            }
             other => {
                 let _ = send_error(&mut stream, &format!("unexpected frame tag {other}"));
                 bail!("unexpected frame tag {other}");
@@ -793,15 +1225,34 @@ fn handle_coordinator(mut stream: TcpStream, threads: usize) -> Result<()> {
 /// Blocking worker loop behind `hte-pinn worker --listen`: accept
 /// coordinators one at a time, forever.  Each coordinator session runs
 /// its shards with `threads` in-process worker threads (the thread
-/// count never changes the bits — see [`ShardPlan`]).
+/// count never changes the bits — see [`ShardPlan`]).  Fault injection
+/// comes from `HTE_FAULT` (rank-gated by `HTE_WORKER_RANK`), and a
+/// `die_after_steps` death exits the process — a real crash.
 pub fn serve(listener: TcpListener, threads: usize) -> Result<()> {
-    serve_conns(listener, threads, None)
+    let mut plan = FaultPlan::from_env()?;
+    plan.exit_process = true;
+    serve_conns_with_faults(listener, threads, None, plan)
 }
 
 /// Like [`serve`], stopping after `max_conns` coordinator sessions
 /// when given — tests run loopback workers on in-process threads this
-/// way.
+/// way — and injecting no faults.
 pub fn serve_conns(listener: TcpListener, threads: usize, max_conns: Option<usize>) -> Result<()> {
+    serve_conns_with_faults(listener, threads, max_conns, FaultPlan::default())
+}
+
+/// The full worker accept loop: sequential coordinator sessions sharing
+/// one [`FaultState`] (so `die_after_steps` counts frames across
+/// sessions).  Session-level errors are logged and the worker keeps
+/// accepting; an injected death stops the loop (and, for real CLI
+/// workers, exits the process from inside the session handler).
+pub fn serve_conns_with_faults(
+    listener: TcpListener,
+    threads: usize,
+    max_conns: Option<usize>,
+    plan: FaultPlan,
+) -> Result<()> {
+    let mut faults = FaultState::new(plan);
     let mut served = 0usize;
     for stream in listener.incoming() {
         let stream = stream.context("accepting a coordinator connection")?;
@@ -809,8 +1260,10 @@ pub fn serve_conns(listener: TcpListener, threads: usize, max_conns: Option<usiz
             Ok(addr) => addr.to_string(),
             Err(_) => "?".into(),
         };
-        if let Err(e) = handle_coordinator(stream, threads) {
-            eprintln!("worker: session with {peer} ended with an error: {e:#}");
+        match handle_coordinator(stream, threads, &mut faults) {
+            Ok(true) => {}
+            Ok(false) => return Ok(()), // injected death: stop serving
+            Err(e) => eprintln!("worker: session with {peer} ended with an error: {e:#}"),
         }
         served += 1;
         if let Some(max) = max_conns {
@@ -835,6 +1288,48 @@ pub struct LocalWorkerPool {
     /// Kept open so a worker writing to stdout never hits a closed pipe.
     _stdouts: Vec<BufReader<ChildStdout>>,
     pub addrs: Vec<String>,
+    /// Remembered for [`LocalWorkerPool::respawn_addr`].
+    program: PathBuf,
+    threads: usize,
+}
+
+/// Spawn one worker child on `listen`, wait for its printed address.
+/// `rank` lands in `HTE_WORKER_RANK` so an inherited `HTE_FAULT` spec
+/// can target a single worker of the fleet; respawns clear `HTE_FAULT`
+/// (a restarted worker should not re-crash on schedule).
+fn spawn_worker_child(
+    program: &Path,
+    rank: usize,
+    threads: usize,
+    listen: &str,
+    fault: Option<&str>,
+    clear_fault_env: bool,
+) -> Result<(Child, BufReader<ChildStdout>, String)> {
+    let mut cmd = Command::new(program);
+    cmd.args(["worker", "--listen", listen, "--threads"])
+        .arg(threads.to_string())
+        .env("HTE_WORKER_RANK", rank.to_string())
+        .stdout(Stdio::piped());
+    if let Some(spec) = fault {
+        cmd.args(["--fault", spec]);
+    }
+    if clear_fault_env {
+        cmd.env_remove("HTE_FAULT");
+    }
+    let mut child =
+        cmd.spawn().with_context(|| format!("spawning local worker {rank} from {program:?}"))?;
+    let stdout = child.stdout.take().expect("stdout was piped");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader
+        .read_line(&mut line)
+        .with_context(|| format!("reading local worker {rank}'s listen address"))?;
+    let Some(addr) = line.trim().strip_prefix("listening on ") else {
+        let _ = child.kill();
+        let _ = child.wait();
+        bail!("local worker {rank} printed {line:?} instead of its listen address");
+    };
+    Ok((child, reader, addr.to_string()))
 }
 
 impl LocalWorkerPool {
@@ -847,42 +1342,70 @@ impl LocalWorkerPool {
     /// Spawn from an explicit binary path (tests use
     /// `env!("CARGO_BIN_EXE_hte-pinn")`).
     pub fn spawn_with(program: &Path, n: usize, threads: usize) -> Result<Self> {
+        Self::spawn_with_faults(program, n, threads, &[])
+    }
+
+    /// [`LocalWorkerPool::spawn_with`] handing child `i` the fault spec
+    /// `faults[i]` via `worker --fault` (the chaos tests).
+    pub fn spawn_with_faults(
+        program: &Path,
+        n: usize,
+        threads: usize,
+        faults: &[Option<&str>],
+    ) -> Result<Self> {
         if n == 0 {
             bail!("--workers needs at least 1 worker process");
         }
-        let mut pool =
-            LocalWorkerPool { children: Vec::new(), _stdouts: Vec::new(), addrs: Vec::new() };
+        let mut pool = LocalWorkerPool {
+            children: Vec::new(),
+            _stdouts: Vec::new(),
+            addrs: Vec::new(),
+            program: program.to_path_buf(),
+            threads,
+        };
         for i in 0..n {
-            let mut child = Command::new(program)
-                .args(["worker", "--listen", "127.0.0.1:0", "--threads"])
-                .arg(threads.to_string())
-                .stdout(Stdio::piped())
-                .spawn()
-                .with_context(|| format!("spawning local worker {i} from {program:?}"))?;
-            let stdout = child.stdout.take().expect("stdout was piped");
-            let mut reader = BufReader::new(stdout);
-            let mut line = String::new();
-            reader
-                .read_line(&mut line)
-                .with_context(|| format!("reading local worker {i}'s listen address"))?;
-            let Some(addr) = line.trim().strip_prefix("listening on ") else {
-                let _ = child.kill();
-                bail!("local worker {i} printed {line:?} instead of its listen address");
-            };
-            pool.addrs.push(addr.to_string());
+            let fault = faults.get(i).copied().flatten();
+            let (child, reader, addr) =
+                spawn_worker_child(program, i, threads, "127.0.0.1:0", fault, false)?;
+            pool.addrs.push(addr);
             pool.children.push(child);
             pool._stdouts.push(reader);
         }
         Ok(pool)
     }
 
-    /// Kill worker `i` (the error-path tests: a dead worker must surface
-    /// a clear diagnostic, not a hang).
+    /// Kill worker `i` (the chaos tests: its shards must be reassigned,
+    /// never hang the run).
     pub fn kill_one(&mut self, i: usize) {
         if let Some(child) = self.children.get_mut(i) {
             let _ = child.kill();
             let _ = child.wait();
         }
+    }
+
+    /// Respawn the child that owned `addr` if — and only if — it has
+    /// exited: `Ok(true)` when a fresh worker is listening on the same
+    /// address again, `Ok(false)` when the address isn't ours or the
+    /// child is still alive (a connection loss is not always a crash).
+    /// This is the [`RespawnHook`] `train --workers N` installs.
+    pub fn respawn_addr(&mut self, addr: &str) -> Result<bool> {
+        let Some(i) = self.addrs.iter().position(|a| a == addr) else {
+            return Ok(false);
+        };
+        match self.children[i].try_wait() {
+            Ok(None) => return Ok(false), // still running
+            Ok(Some(_)) | Err(_) => {}
+        }
+        // rebind the exact same address: SO_REUSEADDR (std's default on
+        // listeners) lets the fresh child take over the port
+        let (child, reader, new_addr) =
+            spawn_worker_child(&self.program, i, self.threads, addr, None, true)?;
+        if new_addr != addr {
+            bail!("respawned worker bound {new_addr}, expected {addr}");
+        }
+        self.children[i] = child;
+        self._stdouts[i] = reader;
+        Ok(true)
     }
 }
 
@@ -913,6 +1436,67 @@ mod tests {
             let _ = serve_conns(listener, threads, Some(conns));
         });
         addr
+    }
+
+    /// [`spawn_test_worker`] with a fault-injection spec (in-process, so
+    /// an injected death stops the serve loop instead of exiting).
+    fn spawn_faulty_worker(threads: usize, conns: usize, spec: &str) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let plan = FaultPlan::parse(spec).expect("fault spec");
+        std::thread::spawn(move || {
+            let _ = serve_conns_with_faults(listener, threads, Some(conns), plan);
+        });
+        addr
+    }
+
+    /// Chaos-test recovery knobs: short deadlines, no connect retries,
+    /// rejoin attempted at every step boundary.
+    fn fast_opts() -> ClusterOpts {
+        ClusterOpts {
+            deadlines: Deadlines {
+                connect: Duration::from_secs(2),
+                handshake: Duration::from_secs(2),
+                step: Duration::from_secs(5),
+            },
+            max_worker_retries: 0,
+            rejoin_interval: Duration::from_secs(0),
+        }
+    }
+
+    /// A reference in-process trainer and a cluster trainer over
+    /// `addrs`, identically configured.
+    fn chaos_pair(
+        cfg: &TrainConfig,
+        addrs: &[String],
+        opts: ClusterOpts,
+    ) -> (NativeTrainer, NativeTrainer) {
+        let local = NativeTrainer::with_threads(cfg.clone(), 9, 3).expect("local trainer");
+        let backend = TcpClusterBackend::connect_with(addrs, JobSpec::from_config(cfg), opts)
+            .expect("connect cluster");
+        let remote =
+            NativeTrainer::with_backend(cfg.clone(), 9, Box::new(backend)).expect("remote trainer");
+        (local, remote)
+    }
+
+    /// Step both trainers `steps` times asserting per-step loss bits,
+    /// then the full packed params|m|v|t state, are identical — the
+    /// recovery paths must change latency, never bits.
+    fn assert_bitwise_match(local: &mut NativeTrainer, remote: &mut NativeTrainer, steps: usize) {
+        for step in 0..steps {
+            local.step().expect("local step");
+            remote.step().expect("remote step");
+            assert_eq!(
+                local.last_loss.to_bits(),
+                remote.last_loss.to_bits(),
+                "loss diverged at step {step}"
+            );
+        }
+        let (a, b) = (local.state_host(), remote.state_host());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "packed params|m|v|t state diverged");
+        }
     }
 
     fn train_config(family: &str, method: &str, d: usize, epochs: usize) -> TrainConfig {
@@ -1081,10 +1665,11 @@ mod tests {
         }
     }
 
-    /// A worker that dies mid-run must surface a diagnostic naming the
-    /// worker — never hang the training loop.
+    /// A worker that dies mid-run no longer aborts training: its shards
+    /// are reassigned to the survivors within the same step and the
+    /// result is bitwise identical to the in-process run.
     #[test]
-    fn shard_cluster_dead_worker_is_a_clear_error() {
+    fn shard_cluster_dead_worker_shards_reassigned_bitwise() {
         // this "worker" acks the handshake, then drops the connection
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
@@ -1097,17 +1682,160 @@ mod tests {
             ack.u64(CHUNK_POINTS as u64);
             ack.u64(1);
             let _ = write_frame(&mut stream, TAG_HELLO_ACK, &ack.buf);
-            // connection drops here — the coordinator's next read EOFs
+            // connection drops here — the coordinator's first STEP read
+            // EOFs and the shards move to the healthy worker
         });
         let healthy = spawn_test_worker(1, 1);
-        let cfg = train_config("sg2", "probe", 4, 1);
-        let backend =
-            TcpClusterBackend::connect(&[addr.clone(), healthy], JobSpec::from_config(&cfg))
-                .unwrap();
+        let cfg = train_config("sg2", "probe", 4, 2);
+        let mut local = NativeTrainer::with_threads(cfg.clone(), 9, 3).unwrap();
+        let backend = TcpClusterBackend::connect_with(
+            &[addr.clone(), healthy],
+            JobSpec::from_config(&cfg),
+            fast_opts(),
+        )
+        .unwrap();
+        let mut remote = NativeTrainer::with_backend(cfg, 9, Box::new(backend)).unwrap();
+        assert_bitwise_match(&mut local, &mut remote, 2);
+        assert!(remote.recoveries >= 1, "the death must be recorded as a recovery");
+        let log = remote.recovery_log.join("\n");
+        assert!(log.contains(&addr), "recovery log must name the dead worker: {log}");
+    }
+
+    /// Tentpole acceptance: a 3-worker run where the middle worker is
+    /// killed mid-run (injected crash after 2 served steps) completes
+    /// with loss and state bits identical to the in-process run.
+    #[test]
+    fn shard_chaos_killed_worker_shards_reassigned_bitwise() {
+        let cfg = train_config("sg2", "probe", 5, 6);
+        let dying = spawn_faulty_worker(2, 1, "die_after_steps=2");
+        let addrs = vec![spawn_test_worker(2, 1), dying.clone(), spawn_test_worker(2, 1)];
+        let (mut local, mut remote) = chaos_pair(&cfg, &addrs, fast_opts());
+        assert_bitwise_match(&mut local, &mut remote, 6);
+        assert!(remote.recoveries >= 1, "the kill must be recorded as a recovery");
+        let log = remote.recovery_log.join("\n");
+        assert!(log.contains(&dying), "recovery log must name the dead worker: {log}");
+        assert!(log.contains("reassigned"), "{log}");
+    }
+
+    /// A wedged worker (stalls 30 s on step 2 with the socket open) is
+    /// caught by the 1 s step deadline and its shards reassigned — the
+    /// blanket-timeout design would have blocked for 10 minutes.
+    #[test]
+    fn shard_chaos_stalled_worker_times_out_and_reassigns_bitwise() {
+        let cfg = train_config("sg2", "probe", 4, 3);
+        let stalled = spawn_faulty_worker(1, 1, "stall_secs=30@2");
+        let addrs = vec![stalled.clone(), spawn_test_worker(2, 1)];
+        let mut opts = fast_opts();
+        opts.deadlines.step = Duration::from_secs(1);
+        // never re-dial the wedged worker inside this test
+        opts.rejoin_interval = Duration::from_secs(3600);
+        let (mut local, mut remote) = chaos_pair(&cfg, &addrs, opts);
+        assert_bitwise_match(&mut local, &mut remote, 3);
+        assert!(remote.recoveries >= 1);
+        let log = remote.recovery_log.join("\n");
+        assert!(log.contains(&stalled), "recovery log must name the stalled worker: {log}");
+    }
+
+    /// A worker that drops its connection mid-run rejoins via a fresh
+    /// handshake at the next step boundary — and the bits never change.
+    #[test]
+    fn shard_chaos_dropped_conn_rejoins_bitwise() {
+        let cfg = train_config("sg2", "probe", 4, 4);
+        let flaky = spawn_faulty_worker(1, 2, "drop_conn@2");
+        let addrs = vec![flaky.clone(), spawn_test_worker(2, 1)];
+        let (mut local, mut remote) = chaos_pair(&cfg, &addrs, fast_opts());
+        assert_bitwise_match(&mut local, &mut remote, 4);
+        let log = remote.recovery_log.join("\n");
+        assert!(log.contains("dead"), "the drop must be recorded: {log}");
+        assert!(log.contains("rejoined"), "the worker must rejoin after its drop: {log}");
+    }
+
+    /// A corrupt frame (garbage magic) is rejected, the worker marked
+    /// dead and its shards recomputed by the survivor; the corrupt bytes
+    /// can never leak into the merge.
+    #[test]
+    fn shard_chaos_corrupt_frame_is_rejected_and_reassigned_bitwise() {
+        let cfg = train_config("sg2", "probe", 4, 3);
+        let corrupt = spawn_faulty_worker(1, 2, "corrupt_frame@1");
+        let addrs = vec![corrupt.clone(), spawn_test_worker(2, 1)];
+        let (mut local, mut remote) = chaos_pair(&cfg, &addrs, fast_opts());
+        assert_bitwise_match(&mut local, &mut remote, 3);
+        let log = remote.recovery_log.join("\n");
+        assert!(log.contains(&corrupt) && log.contains("dead"), "{log}");
+        assert!(log.contains("rejoined"), "the corrupt worker rejoins cleanly: {log}");
+    }
+
+    /// Losing every worker is the one unsurvivable failure: it must
+    /// fail fast with a diagnostic naming each worker and why it died.
+    #[test]
+    fn shard_chaos_all_workers_dead_fails_fast_with_named_workers() {
+        let cfg = train_config("sg2", "probe", 4, 2);
+        let a = spawn_faulty_worker(1, 1, "die_after_steps=1");
+        let b = spawn_faulty_worker(1, 1, "die_after_steps=1");
+        let backend = TcpClusterBackend::connect_with(
+            &[a.clone(), b.clone()],
+            JobSpec::from_config(&cfg),
+            fast_opts(),
+        )
+        .unwrap();
         let mut trainer = NativeTrainer::with_backend(cfg, 9, Box::new(backend)).unwrap();
+        trainer.step().expect("step 1: both workers alive");
         let err = format!("{:#}", trainer.step().unwrap_err());
-        assert!(err.contains("worker"), "diagnostic must name the worker: {err}");
-        assert!(err.contains(&addr), "diagnostic must include the address: {err}");
+        assert!(err.contains("all 2 cluster workers are dead"), "{err}");
+        assert!(err.contains(&a) && err.contains(&b), "error must name every worker: {err}");
+    }
+
+    /// The rejoin primitive at the protocol level: one worker serves a
+    /// session, the coordinator disconnects, and a brand-new coordinator
+    /// re-handshakes the same worker and trains bitwise-correctly.
+    #[test]
+    fn shard_worker_serves_sequential_coordinator_sessions() {
+        let cfg = train_config("sg2", "probe", 4, 2);
+        let addr = spawn_test_worker(2, 2);
+        // session 1: one step, then goodbye (drop closes the socket)
+        {
+            let backend =
+                TcpClusterBackend::connect(&[addr.clone()], JobSpec::from_config(&cfg)).unwrap();
+            let mut first = NativeTrainer::with_backend(cfg.clone(), 9, Box::new(backend)).unwrap();
+            first.step().unwrap();
+        }
+        // session 2: a fresh coordinator re-handshakes the same worker
+        let mut local = NativeTrainer::with_threads(cfg.clone(), 9, 3).unwrap();
+        let backend = TcpClusterBackend::connect(&[addr], JobSpec::from_config(&cfg)).unwrap();
+        let mut remote = NativeTrainer::with_backend(cfg, 9, Box::new(backend)).unwrap();
+        assert_bitwise_match(&mut local, &mut remote, 2);
+    }
+
+    #[test]
+    fn cluster_deadlines_resolve_explicit_legacy_and_defaults() {
+        let d = Deadlines::resolve([None, None, None], None);
+        assert_eq!(d.connect, Duration::from_secs(10));
+        assert_eq!(d.handshake, Duration::from_secs(10));
+        assert_eq!(d.step, Duration::from_secs(600));
+        // the legacy blanket timeout backfills any phase not explicitly
+        // set; explicit per-phase values win over it
+        let d = Deadlines::resolve([None, Some(7), None], Some(42));
+        assert_eq!(d.connect, Duration::from_secs(42));
+        assert_eq!(d.handshake, Duration::from_secs(7));
+        assert_eq!(d.step, Duration::from_secs(42));
+        // zero clamps to 1 s (a zero socket timeout means "block forever")
+        let d = Deadlines::resolve([Some(0), None, None], None);
+        assert_eq!(d.connect, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn cluster_backoff_is_bounded_and_grows() {
+        let salt = addr_salt("127.0.0.1:9999");
+        let d0 = backoff_delay(0, salt);
+        assert!(d0 >= Duration::from_millis(100) && d0 <= Duration::from_millis(125), "{d0:?}");
+        let d3 = backoff_delay(3, salt);
+        assert!(d3 >= Duration::from_millis(800) && d3 <= Duration::from_millis(1000), "{d3:?}");
+        // capped: base tops out at 5 s + 25% jitter, for any attempt
+        for attempt in 0..20 {
+            assert!(backoff_delay(attempt, salt) <= Duration::from_millis(6_250));
+        }
+        // deterministic per (addr, attempt)
+        assert_eq!(backoff_delay(2, salt), backoff_delay(2, salt));
     }
 
     /// An operator whose λ differs from the handshaken job spec must

@@ -1,0 +1,255 @@
+//! Fault injection for the cluster chaos harness (DESIGN.md §10).
+//!
+//! A [`FaultPlan`] describes *when and how* a worker should misbehave:
+//! crash after serving N steps, wedge on a specific step, drop its
+//! connection, or answer with a corrupt frame.  Plans are parsed from a
+//! comma-separated spec (the `HTE_FAULT` env var or `worker --fault`),
+//! interpreted entirely on the worker side of the protocol, and exist
+//! so the coordinator's recovery paths — shard reassignment, rejoin,
+//! respawn — are exercised by tests and CI against *real* transport
+//! failures rather than mocks.
+//!
+//! Spec grammar (clauses combine):
+//!
+//! ```text
+//! rank=K                 apply only in the worker whose HTE_WORKER_RANK is K
+//! die_after_steps=N      serve N STEP frames, then die on the next one
+//! stall_secs=S@STEP      sleep S seconds before handling coordinator step STEP
+//! drop_conn@STEP         close the connection instead of answering step STEP
+//! corrupt_frame@STEP     answer step STEP with a garbage frame header
+//! ```
+//!
+//! `@STEP` clauses key on the coordinator's step counter carried in the
+//! STEP frame header; `die_after_steps` counts frames actually served,
+//! which persists across coordinator sessions (a worker that served two
+//! sessions of one step each dies on the third frame).
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed fault-injection spec.  The default plan injects nothing.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Apply only in the worker whose `HTE_WORKER_RANK` matches; `None`
+    /// applies everywhere the spec is given.
+    pub rank: Option<usize>,
+    /// Die (stop serving) after this many STEP frames were served.
+    pub die_after_steps: Option<u64>,
+    /// Sleep `.0` before handling coordinator step `.1` (a wedged-but-
+    /// open socket: the coordinator's step deadline must catch it).
+    pub stall: Option<(Duration, u64)>,
+    /// Close the connection instead of answering this coordinator step.
+    pub drop_conn_at: Option<u64>,
+    /// Answer this coordinator step with a garbage frame header (the
+    /// coordinator must reject it, mark the worker dead, and reassign).
+    pub corrupt_frame_at: Option<u64>,
+    /// Whether a `die_after_steps` death exits the whole process (real
+    /// CLI workers) or just stops the serve loop (in-process test
+    /// workers, where `process::exit` would kill the test harness).
+    pub exit_process: bool,
+}
+
+impl FaultPlan {
+    /// True when the plan injects no faults at all.
+    pub fn is_empty(&self) -> bool {
+        self.die_after_steps.is_none()
+            && self.stall.is_none()
+            && self.drop_conn_at.is_none()
+            && self.corrupt_frame_at.is_none()
+    }
+
+    /// Parse a comma-separated fault spec (see the module docs for the
+    /// grammar).  An empty spec is the no-fault plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(v) = clause.strip_prefix("rank=") {
+                plan.rank =
+                    Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+            } else if let Some(v) = clause.strip_prefix("die_after_steps=") {
+                plan.die_after_steps =
+                    Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+            } else if let Some(v) = clause.strip_prefix("stall_secs=") {
+                let (secs, step) = v
+                    .split_once('@')
+                    .with_context(|| format!("fault clause {clause:?} needs S@STEP"))?;
+                let secs: u64 =
+                    secs.parse().with_context(|| format!("fault clause {clause:?}"))?;
+                let step: u64 =
+                    step.parse().with_context(|| format!("fault clause {clause:?}"))?;
+                plan.stall = Some((Duration::from_secs(secs), step));
+            } else if let Some(v) = clause.strip_prefix("drop_conn@") {
+                plan.drop_conn_at =
+                    Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+            } else if let Some(v) = clause.strip_prefix("corrupt_frame@") {
+                plan.corrupt_frame_at =
+                    Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+            } else {
+                bail!(
+                    "unknown fault clause {clause:?} (grammar: rank=K, die_after_steps=N, \
+                     stall_secs=S@STEP, drop_conn@STEP, corrupt_frame@STEP)"
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Drop the plan unless its `rank=` clause matches `rank` (a spec
+    /// without `rank=` applies to every worker).
+    pub fn gate_by_rank(plan: FaultPlan, rank: Option<usize>) -> FaultPlan {
+        match plan.rank {
+            Some(want) if rank != Some(want) => FaultPlan::default(),
+            _ => plan,
+        }
+    }
+
+    /// Plan from the `HTE_FAULT` env var, rank-gated against
+    /// `HTE_WORKER_RANK` (set per child by the local worker pool so one
+    /// spec can target a single worker of a fleet).  Unset/empty env is
+    /// the no-fault plan.
+    pub fn from_env() -> Result<FaultPlan> {
+        let Ok(spec) = std::env::var("HTE_FAULT") else {
+            return Ok(FaultPlan::default());
+        };
+        if spec.trim().is_empty() {
+            return Ok(FaultPlan::default());
+        }
+        Ok(Self::gate_by_rank(Self::parse(&spec)?, env_rank()))
+    }
+}
+
+/// The worker's rank within a spawned pool, from `HTE_WORKER_RANK`.
+pub fn env_rank() -> Option<usize> {
+    std::env::var("HTE_WORKER_RANK").ok().and_then(|r| r.parse().ok())
+}
+
+/// What the serve loop should do with an incoming STEP frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Handle the step normally.
+    None,
+    /// Die: stop serving entirely (process exit for CLI workers).
+    Die,
+    /// Close this connection without answering.
+    DropConn,
+    /// Answer with a garbage frame header.
+    CorruptFrame,
+}
+
+/// Mutable fault state a worker carries across coordinator sessions:
+/// the plan plus the served-frame counter `die_after_steps` counts.
+#[derive(Debug, Default)]
+pub struct FaultState {
+    pub plan: FaultPlan,
+    /// STEP frames this worker has answered (normally or corruptly).
+    pub steps_served: u64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan, steps_served: 0 }
+    }
+
+    /// Decide the fate of one incoming STEP frame carrying coordinator
+    /// step id `step`.  A matching `stall_secs` clause sleeps *here*,
+    /// before the decision is returned — modelling a wedged worker the
+    /// coordinator's step deadline must detect.
+    pub fn on_step(&mut self, step: u64) -> FaultAction {
+        if let Some(n) = self.plan.die_after_steps {
+            if self.steps_served >= n {
+                return FaultAction::Die;
+            }
+        }
+        if let Some((dur, at)) = self.plan.stall {
+            if at == step {
+                std::thread::sleep(dur);
+            }
+        }
+        if self.plan.corrupt_frame_at == Some(step) {
+            self.steps_served += 1;
+            return FaultAction::CorruptFrame;
+        }
+        if self.plan.drop_conn_at == Some(step) {
+            return FaultAction::DropConn;
+        }
+        self.steps_served += 1;
+        FaultAction::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_spec_parses_every_clause() {
+        let plan = FaultPlan::parse(
+            "rank=1, die_after_steps=5, stall_secs=3@7, drop_conn@9, corrupt_frame@11",
+        )
+        .unwrap();
+        assert_eq!(plan.rank, Some(1));
+        assert_eq!(plan.die_after_steps, Some(5));
+        assert_eq!(plan.stall, Some((Duration::from_secs(3), 7)));
+        assert_eq!(plan.drop_conn_at, Some(9));
+        assert_eq!(plan.corrupt_frame_at, Some(11));
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        // a rank clause alone still injects nothing
+        assert!(FaultPlan::parse("rank=2").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_spec_rejects_unknown_and_malformed_clauses() {
+        let err = FaultPlan::parse("explode_at=3").unwrap_err().to_string();
+        assert!(err.contains("explode_at"), "{err}");
+        assert!(err.contains("grammar"), "{err}");
+        // stall without @STEP
+        assert!(FaultPlan::parse("stall_secs=5").is_err());
+        // non-numeric step
+        assert!(FaultPlan::parse("drop_conn@soon").is_err());
+    }
+
+    #[test]
+    fn fault_rank_gating_targets_one_worker() {
+        let plan = FaultPlan::parse("rank=1,die_after_steps=3").unwrap();
+        // the targeted rank keeps the plan
+        let kept = FaultPlan::gate_by_rank(plan.clone(), Some(1));
+        assert_eq!(kept.die_after_steps, Some(3));
+        // other ranks — and workers with no rank at all — get nothing
+        assert!(FaultPlan::gate_by_rank(plan.clone(), Some(0)).is_empty());
+        assert!(FaultPlan::gate_by_rank(plan, None).is_empty());
+        // a rank-less spec applies everywhere
+        let broad = FaultPlan::parse("die_after_steps=2").unwrap();
+        assert_eq!(FaultPlan::gate_by_rank(broad, Some(7)).die_after_steps, Some(2));
+    }
+
+    #[test]
+    fn fault_state_dies_after_serving_n_frames() {
+        let mut st = FaultState::new(FaultPlan::parse("die_after_steps=2").unwrap());
+        assert_eq!(st.on_step(1), FaultAction::None);
+        assert_eq!(st.on_step(2), FaultAction::None);
+        // the third frame is never served — and the state stays dead
+        assert_eq!(st.on_step(3), FaultAction::Die);
+        assert_eq!(st.on_step(4), FaultAction::Die);
+        assert_eq!(st.steps_served, 2);
+    }
+
+    #[test]
+    fn fault_state_keys_on_coordinator_step_ids() {
+        let mut st = FaultState::new(FaultPlan::parse("drop_conn@3,corrupt_frame@5").unwrap());
+        assert_eq!(st.on_step(1), FaultAction::None);
+        assert_eq!(st.on_step(3), FaultAction::DropConn);
+        // reassignment can re-deliver the same step id after a rejoin —
+        // the clause stays armed for it
+        assert_eq!(st.on_step(3), FaultAction::DropConn);
+        assert_eq!(st.on_step(4), FaultAction::None);
+        assert_eq!(st.on_step(5), FaultAction::CorruptFrame);
+        // a dropped connection does not count as served; corruption does
+        assert_eq!(st.steps_served, 3);
+    }
+}

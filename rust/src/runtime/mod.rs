@@ -11,12 +11,15 @@
 mod cluster;
 #[cfg(feature = "xla")]
 mod engine;
+mod fault;
 mod manifest;
 mod shard;
 
 pub use cluster::{
-    serve, serve_conns, JobSpec, LocalWorkerPool, TcpClusterBackend, PROTOCOL_VERSION,
+    serve, serve_conns, serve_conns_with_faults, ClusterOpts, Deadlines, JobSpec, LocalWorkerPool,
+    RespawnHook, TcpClusterBackend, PROTOCOL_VERSION,
 };
+pub use fault::{env_rank, FaultAction, FaultPlan, FaultState};
 #[cfg(feature = "xla")]
 pub use engine::Engine;
 pub use manifest::{Entry, InputSpec, Manifest, ParamEntry, StateOffsets};

@@ -95,11 +95,7 @@ impl ShardPlan {
     /// results are merged by shard index, so the *assignment* only
     /// affects who computes what, never the reduced bits.
     pub fn assignment(&self, workers: usize) -> Vec<std::ops::Range<usize>> {
-        let w = workers.max(1);
-        let per = self.len().div_ceil(w);
-        (0..w)
-            .map(|i| (i * per).min(self.len())..((i + 1) * per).min(self.len()))
-            .collect()
+        split_range(&(0..self.len()), workers)
     }
 
     /// Sub-plan holding shards `range` of this plan, *indices
@@ -112,6 +108,25 @@ impl ShardPlan {
             shards: self.shards[range].to_vec(),
         }
     }
+}
+
+/// Contiguous, disjoint, complete split of `range` across `workers`
+/// executors — the same arithmetic [`ShardPlan::assignment`] uses over
+/// the full plan, so reassigning a dead worker's range over the
+/// survivors re-derives exactly the shards the first assignment would
+/// have given a smaller cluster.  Never feeds the merge order.
+pub(crate) fn split_range(
+    range: &std::ops::Range<usize>,
+    workers: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let w = workers.max(1);
+    let len = range.len();
+    let per = len.div_ceil(w);
+    (0..w)
+        .map(|i| {
+            (range.start + (i * per).min(len))..(range.start + ((i + 1) * per).min(len))
+        })
+        .collect()
 }
 
 /// Everything a backend needs to run one step's shards.  In-process
@@ -156,6 +171,13 @@ pub trait ShardBackend {
 
     /// Human-readable executor description for run banners.
     fn label(&self) -> String;
+
+    /// Drain recovery events (worker deaths, shard reassignments,
+    /// rejoins, respawns) recorded since the last call, for the run
+    /// log.  Purely-local backends have none.
+    fn take_events(&mut self) -> Vec<String> {
+        Vec::new()
+    }
 }
 
 /// Resize `out` to `n` slots, keeping existing gradient buffers for
@@ -317,6 +339,29 @@ mod tests {
             }
             assert_eq!(next, a.len(), "assignment must cover every shard");
         }
+    }
+
+    /// Reassignment arithmetic: any sub-range splits into contiguous,
+    /// disjoint, complete parts for any survivor count — including more
+    /// survivors than shards (trailing empty parts).
+    #[test]
+    fn shard_split_range_covers_any_subrange() {
+        for (start, end) in [(0usize, 0usize), (0, 1), (0, 7), (2, 9), (5, 6)] {
+            for workers in 1..=4 {
+                let parts = split_range(&(start..end), workers);
+                assert_eq!(parts.len(), workers);
+                let mut next = start;
+                for p in &parts {
+                    assert_eq!(p.start, next.min(end));
+                    assert!(p.end >= p.start && p.end <= end);
+                    next = p.end.max(next);
+                }
+                assert_eq!(next, end, "{start}..{end} over {workers}: must cover the range");
+            }
+        }
+        // the full-plan assignment is the same arithmetic
+        let plan = ShardPlan::for_batch(11);
+        assert_eq!(plan.assignment(3), split_range(&(0..plan.len()), 3));
     }
 
     #[test]
