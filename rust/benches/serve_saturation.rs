@@ -1,0 +1,145 @@
+//! Serve-tier saturation bench: measure closed-loop capacity, then
+//! offer open-loop load at multiples of it and record how the bounded
+//! queue degrades — latency percentiles, throughput, and graceful
+//! rejections at every offered level, with the bitwise gate on (every
+//! answered query is compared bit-for-bit against the local forward;
+//! any divergence panics the bench).
+//!
+//! Writes `BENCH_serve.json` (cwd = rust/, same convention as
+//! `perf_breakdown`'s `BENCH_native.json`); CI uploads it as an
+//! artifact.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use hte_pinn::nn::Mlp;
+use hte_pinn::rng::Xoshiro256pp;
+use hte_pinn::runtime::{
+    run_loadgen, serve_queries, Arrival, Deadlines, LoadgenOpts, LoadgenReport, ServeModel,
+    ServeOpts,
+};
+use hte_pinn::util::json::{num, obj, s, Value};
+
+const D: usize = 100;
+const BATCH: usize = 256;
+const CONNS: usize = 2;
+const QUEUE_CAP: usize = 16;
+
+fn serve_opts() -> ServeOpts {
+    ServeOpts {
+        deadlines: Deadlines::resolve([Some(5), Some(5), Some(60)], None),
+        threads: 2,
+        microbatch: 256,
+        queue_cap: QUEUE_CAP,
+        max_batch: 16_384,
+        ..ServeOpts::default()
+    }
+}
+
+/// One serve session (fresh queue + stats), one loadgen run against it.
+fn run_level(
+    model: &Arc<ServeModel>,
+    arrival: Arrival,
+    rate: f64,
+    requests: usize,
+) -> LoadgenReport {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding the bench listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let server_model = Arc::clone(model);
+    let server = std::thread::spawn(move || {
+        serve_queries(listener, server_model, serve_opts(), Some(CONNS), None)
+    });
+    let opts = LoadgenOpts {
+        addr,
+        d: D,
+        arrival,
+        rate,
+        conns: CONNS,
+        batch: BATCH,
+        requests,
+        seed: 7,
+        deadlines: Deadlines::resolve([Some(5), Some(5), Some(60)], None),
+    };
+    let report = run_loadgen(&opts, Some(model)).expect("loadgen run");
+    server.join().expect("serve thread panicked").expect("serve loop errored");
+    assert!(
+        report.bitwise_ok,
+        "BITWISE GATE FAILED: served answers diverged from the local forward \
+         ({} answers checked at offered rate {rate:.1} qps)",
+        report.bitwise_checked
+    );
+    assert_eq!(report.answered, report.bitwise_checked, "every answer must be verified");
+    report
+}
+
+fn level_json(label: &str, offered_qps: f64, r: &LoadgenReport) -> Value {
+    obj(vec![
+        ("label", s(label)),
+        ("offered_qps", num(offered_qps)),
+        ("sent", num(r.sent as f64)),
+        ("answered", num(r.answered as f64)),
+        ("rejected", num(r.rejected as f64)),
+        ("qps", num(r.qps)),
+        ("p50_ms", num(r.p50_ms)),
+        ("p95_ms", num(r.p95_ms)),
+        ("p99_ms", num(r.p99_ms)),
+        ("bitwise_checked", num(r.bitwise_checked as f64)),
+        ("bitwise_ok", Value::Bool(r.bitwise_ok)),
+    ])
+}
+
+fn main() {
+    let mlp = Mlp::init(D, &mut Xoshiro256pp::new(11));
+    let model = Arc::new(ServeModel::new(mlp, "sg2", "probe").expect("bench model"));
+
+    println!("== serve saturation (d={D}, batch={BATCH}, conns={CONNS}, queue={QUEUE_CAP}) ==");
+
+    // Closed loop first: each connection keeps one query outstanding,
+    // so the measured qps is the server's capacity at this batch shape.
+    let closed = run_level(&model, Arrival::Closed, 0.0, 120);
+    let capacity = closed.qps.max(1.0);
+    println!(
+        "  closed-loop capacity: {:.1} qps (p50 {:.2} ms, p99 {:.2} ms)",
+        capacity, closed.p50_ms, closed.p99_ms
+    );
+    let mut levels = vec![level_json("closed", capacity, &closed)];
+
+    // Open loop at multiples of capacity: 0.5x cruises, 1x rides the
+    // edge, 2x and 4x overflow the bounded queue and must be answered
+    // with graceful rejections, never hangs or unbounded buffering.
+    for mult in [0.5f64, 1.0, 2.0, 4.0] {
+        let rate = capacity * mult;
+        let requests = ((rate * 0.75) as usize).clamp(60, 600);
+        let r = run_level(&model, Arrival::Open, rate, requests);
+        println!(
+            "  open {mult:>3}x ({rate:>7.1} qps offered): answered {:>4}, rejected {:>4}, \
+             qps {:>7.1}, p50 {:>8.2} ms, p99 {:>8.2} ms",
+            r.answered, r.rejected, r.qps, r.p50_ms, r.p99_ms
+        );
+        levels.push(level_json(&format!("open_{mult}x"), rate, &r));
+    }
+
+    let total_rejected: usize = levels
+        .iter()
+        .map(|l| l.get("rejected").unwrap().as_usize().unwrap())
+        .sum();
+    if total_rejected == 0 {
+        eprintln!(
+            "warning: no offered level saturated the {QUEUE_CAP}-deep queue on this \
+             machine — rejected counts are all zero"
+        );
+    }
+
+    let n_levels = levels.len();
+    let out = obj(vec![
+        ("bench", s("serve_saturation")),
+        ("d", num(D as f64)),
+        ("batch", num(BATCH as f64)),
+        ("conns", num(CONNS as f64)),
+        ("queue_cap", num(QUEUE_CAP as f64)),
+        ("capacity_qps", num(capacity)),
+        ("levels", Value::Arr(levels)),
+    ]);
+    std::fs::write("BENCH_serve.json", out.to_json()).expect("writing BENCH_serve.json");
+    println!("wrote BENCH_serve.json ({n_levels} offered-load levels)");
+}

@@ -1,5 +1,13 @@
 //! Checkpointing: packed state + run metadata, in a simple self-describing
 //! binary format (magic, JSON header, raw little-endian f32 payload).
+//!
+//! Header format v2 adds an explicit `version` field and a `model`
+//! block (family, `d`, method, `n_params`) so consumers that only need
+//! the trained model — the serving tier above all — can self-configure
+//! and reject a mismatched or hand-edited checkpoint with a named
+//! diagnostic instead of unpacking garbage weights.  v1 headers (no
+//! `version` field) still load: their model block derives from the
+//! embedded config.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -7,9 +15,36 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::TrainConfig;
-use crate::util::json::{num, obj, Value};
+use crate::nn::Mlp;
+use crate::util::json::{num, obj, s, Value};
 
 const MAGIC: &[u8; 8] = b"HTEPINN1";
+
+/// Current header format.  v1: config/step/state_len/coeff[/batch_n].
+/// v2: + `version`, + `model {family, d, method, n_params}`.
+pub const CHECKPOINT_VERSION: usize = 2;
+
+/// What the serving tier needs to rebuild the constrained model —
+/// pinned in the header (v2) so a checkpoint is self-describing even
+/// to readers that ignore the training config.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub family: String,
+    pub d: usize,
+    pub method: String,
+    pub n_params: usize,
+}
+
+impl ModelMeta {
+    fn from_config(config: &TrainConfig) -> Self {
+        ModelMeta {
+            family: config.family.clone(),
+            d: config.d,
+            method: config.method.clone(),
+            n_params: Mlp::n_params_for(config.d),
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct CheckpointMeta {
@@ -21,6 +56,12 @@ pub struct CheckpointMeta {
     /// on the artifact backend, where the batch is baked into the
     /// artifact).  The native trainer needs it to resume bit-exactly.
     pub batch_n: Option<usize>,
+    /// Header format version this file was read from (1 for legacy
+    /// headers without a `version` field).
+    pub version: usize,
+    /// Model metadata: read from the v2 header (cross-checked against
+    /// the config), derived from the config for legacy v1 files.
+    pub model: ModelMeta,
 }
 
 pub fn save(
@@ -31,8 +72,19 @@ pub fn save(
     coeff: &[f32],
     state: &[f32],
 ) -> Result<()> {
+    let model = ModelMeta::from_config(config);
     let mut header_fields = vec![
+        ("version", num(CHECKPOINT_VERSION as f64)),
         ("config", config.to_json()),
+        (
+            "model",
+            obj(vec![
+                ("family", s(model.family.clone())),
+                ("d", num(model.d as f64)),
+                ("method", s(model.method.clone())),
+                ("n_params", num(model.n_params as f64)),
+            ]),
+        ),
         ("step", num(step as f64)),
         ("state_len", num(state.len() as f64)),
         (
@@ -96,8 +148,61 @@ pub fn load(path: impl AsRef<Path>) -> Result<(CheckpointMeta, Vec<f32>)> {
         format!("truncated checkpoint: header claims {header_len} bytes but the file ends first")
     })?;
     let v = Value::parse(std::str::from_utf8(&header)?).context("corrupt checkpoint header")?;
+    let version = match v.opt("version") {
+        Some(ver) => ver.as_usize().context("corrupt checkpoint header: bad version field")?,
+        None => 1, // legacy header, pre-dates the version field
+    };
+    if version > CHECKPOINT_VERSION {
+        bail!(
+            "checkpoint header is format v{version}, this binary reads up to \
+             v{CHECKPOINT_VERSION} — written by a newer hte-pinn?"
+        );
+    }
+    let config = TrainConfig::from_json(v.get("config")?)?;
+    let model = match v.opt("model") {
+        Some(m) => {
+            let model = ModelMeta {
+                family: m.get("family")?.as_str()?.to_string(),
+                d: m.get("d")?.as_usize()?,
+                method: m.get("method")?.as_str()?.to_string(),
+                n_params: m.get("n_params")?.as_usize()?,
+            };
+            // The model block must agree with the embedded config and
+            // with the one architecture this binary builds — a mismatch
+            // means a hand-edited or mixed-up file, and unpacking it
+            // would produce silently-garbage weights.
+            if model.family != config.family || model.d != config.d {
+                bail!(
+                    "checkpoint model metadata mismatch: header model is {}/d={} but the \
+                     embedded config says {}/d={} — mixed or hand-edited checkpoint",
+                    model.family,
+                    model.d,
+                    config.family,
+                    config.d
+                );
+            }
+            let expect = Mlp::n_params_for(model.d);
+            if model.n_params != expect {
+                bail!(
+                    "checkpoint model metadata mismatch: header promises {} parameters but \
+                     the {}x{} architecture at d={} has {} — not a model this binary builds",
+                    model.n_params,
+                    crate::nn::HIDDEN,
+                    crate::nn::HIDDEN,
+                    model.d,
+                    expect
+                );
+            }
+            model
+        }
+        None if version >= 2 => bail!(
+            "checkpoint header claims format v{version} but carries no model block — \
+             corrupted or hand-edited header"
+        ),
+        None => ModelMeta::from_config(&config),
+    };
     let meta = CheckpointMeta {
-        config: TrainConfig::from_json(v.get("config")?)?,
+        config,
         step: v.get("step")?.as_usize()?,
         state_len: v.get("state_len")?.as_usize()?,
         coeff: v
@@ -110,6 +215,8 @@ pub fn load(path: impl AsRef<Path>) -> Result<(CheckpointMeta, Vec<f32>)> {
             Some(b) => Some(b.as_usize()?),
             None => None,
         },
+        version,
+        model,
     };
     let mut payload = Vec::new();
     f.read_to_end(&mut payload)?;
@@ -152,6 +259,20 @@ mod tests {
         }
     }
 
+    /// Write a checkpoint with an arbitrary header string — the lever
+    /// for the legacy-format and corrupted-metadata tests.
+    fn write_raw(path: &Path, header: &str, state: &[f32]) {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        for v in state {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, buf).unwrap();
+    }
+
     #[test]
     fn roundtrip() {
         let dir = std::env::temp_dir().join(format!("hte-ckpt-{}", std::process::id()));
@@ -166,6 +287,132 @@ mod tests {
         assert_eq!(meta.config.estimator, Estimator::HteRademacher);
         assert_eq!(meta.batch_n, Some(16));
         assert_eq!(loaded, state);
+        // a fresh save carries the v2 model block
+        assert_eq!(meta.version, CHECKPOINT_VERSION);
+        assert_eq!(meta.model.family, "sg2");
+        assert_eq!(meta.model.d, 10);
+        assert_eq!(meta.model.method, "probe");
+        assert_eq!(meta.model.n_params, Mlp::n_params_for(10));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A v1 header (no `version`, no `model` block — everything written
+    /// before this format existed) still loads; the model metadata
+    /// derives from the embedded config.
+    #[test]
+    fn legacy_v1_header_still_loads() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-v1-{}", std::process::id()));
+        let path = dir.join("legacy.ckpt");
+        let header = obj(vec![
+            ("config", config().to_json()),
+            ("step", num(5.0)),
+            ("state_len", num(2.0)),
+            ("coeff", Value::Arr(vec![num(0.5)])),
+        ])
+        .to_json();
+        write_raw(&path, &header, &[1.0, 2.0]);
+        let (meta, state) = load(&path).unwrap();
+        assert_eq!(meta.version, 1);
+        assert_eq!(meta.step, 5);
+        assert_eq!(state, vec![1.0, 2.0]);
+        assert_eq!(meta.model, ModelMeta::from_config(&config()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn model_json(family: &str, d: usize, method: &str, n_params: usize) -> Value {
+        obj(vec![
+            ("family", s(family)),
+            ("d", num(d as f64)),
+            ("method", s(method)),
+            ("n_params", num(n_params as f64)),
+        ])
+    }
+
+    fn v2_header(model: Value) -> String {
+        obj(vec![
+            ("version", num(2.0)),
+            ("config", config().to_json()),
+            ("model", model),
+            ("step", num(1.0)),
+            ("state_len", num(2.0)),
+            ("coeff", Value::Arr(vec![num(0.5)])),
+        ])
+        .to_json()
+    }
+
+    /// A model block that disagrees with the embedded config (mixed-up
+    /// or hand-edited file) is rejected with a named diagnostic — the
+    /// serving tier must never unpack weights under the wrong shape.
+    #[test]
+    fn mismatched_model_metadata_is_rejected_by_name() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-mm-{}", std::process::id()));
+        let path = dir.join("mixed.ckpt");
+        // config says d=10, model block claims d=8
+        write_raw(
+            &path,
+            &v2_header(model_json("sg2", 8, "probe", Mlp::n_params_for(8))),
+            &[1.0, 2.0],
+        );
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("model metadata mismatch"), "unexpected error: {err}");
+        assert!(err.contains("d=8") && err.contains("d=10"), "diagnostic must name both: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `n_params` that doesn't match the 4x128 architecture at the
+    /// header's `d` means the payload is not a model this binary builds.
+    #[test]
+    fn wrong_n_params_is_rejected_by_name() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-np-{}", std::process::id()));
+        let path = dir.join("np.ckpt");
+        write_raw(&path, &v2_header(model_json("sg2", 10, "probe", 12345)), &[1.0, 2.0]);
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("12345"), "diagnostic must name the bogus count: {err}");
+        assert!(err.contains(&Mlp::n_params_for(10).to_string()), "and the expected one: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A v2 header without its model block, and a header from the
+    /// future, are both clean named errors.
+    #[test]
+    fn bad_version_fields_are_clean_errors() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-ver-{}", std::process::id()));
+        let path = dir.join("ver.ckpt");
+        let no_model = obj(vec![
+            ("version", num(2.0)),
+            ("config", config().to_json()),
+            ("step", num(1.0)),
+            ("state_len", num(2.0)),
+            ("coeff", Value::Arr(vec![num(0.5)])),
+        ])
+        .to_json();
+        write_raw(&path, &no_model, &[1.0, 2.0]);
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("no model block"), "unexpected error: {err}");
+        let future = v2_header(model_json("sg2", 10, "probe", Mlp::n_params_for(10)))
+            .replace("\"version\":2", "\"version\":99");
+        write_raw(&path, &future, &[1.0, 2.0]);
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("v99") && err.contains("newer"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Truncation inside the new v2 fields (the model block sits near
+    /// the front of the header) is still the clean truncated-header
+    /// error, not a parse panic.
+    #[test]
+    fn truncation_inside_the_model_block_is_a_clean_error() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-trmm-{}", std::process::id()));
+        let path = dir.join("trmm.ckpt");
+        save(&path, &config(), 2, None, &[0.5], &[1.0, 2.0, 3.0]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let header_len = u64::from_le_bytes(full[8..16].try_into().unwrap()) as usize;
+        let header = std::str::from_utf8(&full[16..16 + header_len]).unwrap();
+        let model_at = header.find("\"model\"").expect("v2 header carries a model block");
+        // cut mid-way through the model block
+        std::fs::write(&path, &full[..16 + model_at + 12]).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("truncated"), "unexpected error: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -58,6 +58,32 @@ pub fn parse_backend(s: &str) -> Result<Backend> {
     }
 }
 
+/// Load-generator arrival processes the CLI accepts — the shared
+/// constant behind every `loadgen --arrival` error, mirroring
+/// [`KNOWN_BACKENDS`].
+pub const KNOWN_ARRIVALS: [&str; 2] = ["closed", "open"];
+
+/// A parsed `loadgen --arrival` value: closed-loop (each connection
+/// keeps exactly one query outstanding, measuring capacity) or
+/// open-loop (queries arrive on a fixed schedule regardless of
+/// completions, measuring behavior under offered load — the arrival
+/// model that actually saturates a bounded queue).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arrival {
+    Closed,
+    Open,
+}
+
+/// One place maps arrival strings onto [`Arrival`]; a typo errors with
+/// the supported set listed, exactly like [`parse_backend`].
+pub fn parse_arrival(s: &str) -> Result<Arrival> {
+    match s {
+        "closed" => Ok(Arrival::Closed),
+        "open" => Ok(Arrival::Open),
+        other => bail!("unknown arrival {other} (supported: {})", KNOWN_ARRIVALS.join(" | ")),
+    }
+}
+
 /// `table --which` values the native driver serves (tables 1-3 need the
 /// artifact backend); [`unknown_native_table`] builds the shared
 /// supported-set error.
@@ -253,6 +279,22 @@ mod tests {
         assert!(err.contains("nativ"), "{err}");
         for backend in KNOWN_BACKENDS {
             assert!(err.contains(backend), "{err} missing {backend}");
+        }
+    }
+
+    /// Both directions of the `--arrival` constant: every listed value
+    /// parses, and a typo's error quotes the whole supported set.
+    #[test]
+    fn serve_known_arrivals_parse_and_errors_list_the_set() {
+        assert_eq!(parse_arrival("closed").unwrap(), Arrival::Closed);
+        assert_eq!(parse_arrival("open").unwrap(), Arrival::Open);
+        for arrival in KNOWN_ARRIVALS {
+            assert!(parse_arrival(arrival).is_ok(), "KNOWN_ARRIVALS lists {arrival}");
+        }
+        let err = parse_arrival("poisson").unwrap_err().to_string();
+        assert!(err.contains("poisson"), "{err}");
+        for arrival in KNOWN_ARRIVALS {
+            assert!(err.contains(arrival), "{err} missing {arrival}");
         }
     }
 

@@ -61,8 +61,15 @@ impl MetricsLogger {
     }
 
     pub fn log(&mut self, record: &StepRecord) -> Result<()> {
+        self.log_line(&record.to_jsonl())
+    }
+
+    /// Append one pre-rendered JSONL line (no trailing newline).  The
+    /// serving tier logs its own snapshot schema through the same
+    /// writer; training steps go through [`MetricsLogger::log`].
+    pub fn log_line(&mut self, line: &str) -> Result<()> {
         if let Some(out) = self.out.as_mut() {
-            out.write_all(record.to_jsonl().as_bytes())?;
+            out.write_all(line.as_bytes())?;
             out.write_all(b"\n")?;
         }
         Ok(())
@@ -73,6 +80,27 @@ impl MetricsLogger {
             out.flush()?;
         }
         Ok(())
+    }
+
+    /// Flush, fsync, and release the file.  Call at the end of a run to
+    /// surface write errors (drop can only swallow them); afterwards the
+    /// logger behaves like [`MetricsLogger::null`].
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(mut out) = self.out.take() {
+            out.flush()?;
+            out.get_ref().sync_all()?;
+        }
+        Ok(())
+    }
+}
+
+/// Short runs must never lose trailing records: a logger dropped
+/// without an explicit `flush()`/`finish()` still writes everything
+/// out (errors are necessarily swallowed here — call
+/// [`MetricsLogger::finish`] to observe them).
+impl Drop for MetricsLogger {
+    fn drop(&mut self) {
+        let _ = self.finish();
     }
 }
 
@@ -135,6 +163,56 @@ mod tests {
         assert_eq!(parsed.get("step").unwrap().as_usize().unwrap(), 2);
         assert!((parsed.get("probe_var").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
         assert_eq!(parsed.get("recoveries").unwrap().as_usize().unwrap(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A logger dropped mid-buffer (no flush, no finish) leaves a
+    /// complete final line on disk — trailing records of short runs
+    /// survive.
+    #[test]
+    fn dropped_logger_leaves_a_complete_final_line() {
+        let dir = std::env::temp_dir().join(format!("hte-pinn-drop-{}", std::process::id()));
+        let path = dir.join("dropped.jsonl");
+        {
+            let mut logger = MetricsLogger::to_file(&path).unwrap();
+            for step in 0..2 {
+                logger
+                    .log(&StepRecord {
+                        step,
+                        loss: 0.5,
+                        lr: 1e-3,
+                        elapsed_s: 0.1,
+                        it_per_sec: 10.0,
+                        rss_mb: 1.0,
+                        probe_var: None,
+                        recoveries: None,
+                    })
+                    .unwrap();
+            }
+            // dropped here with bytes still buffered
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'), "final line must be newline-terminated: {text:?}");
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        let last = crate::util::json::Value::parse(lines[1]).unwrap();
+        assert_eq!(last.get("step").unwrap().as_usize().unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `finish()` releases the writer: later logs are silently dropped
+    /// (the logger degrades to a null logger, it does not error).
+    #[test]
+    fn finish_then_log_is_a_noop() {
+        let dir = std::env::temp_dir().join(format!("hte-pinn-finish-{}", std::process::id()));
+        let path = dir.join("finish.jsonl");
+        let mut logger = MetricsLogger::to_file(&path).unwrap();
+        logger.log_line("{\"a\":1}").unwrap();
+        logger.finish().unwrap();
+        logger.log_line("{\"a\":2}").unwrap();
+        logger.finish().unwrap(); // idempotent
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"a\":1}\n");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -9,6 +9,11 @@
 //! hte-pinn train --backend native --workers 2   # shard over 2 local worker
 //!                                               # processes, bitwise-identical
 //! hte-pinn worker --listen 0.0.0.0:7070   # serve shards to a remote trainer
+//! hte-pinn serve --resume ckpt.bin --listen 0.0.0.0:7071
+//!                                         # serve a trained surrogate (batched
+//!                                         # inference, bitwise the local forward)
+//! hte-pinn loadgen --connect HOST:7071 --d 100 --requests 1000
+//!                                         # drive a serve endpoint, report latency
 //! hte-pinn table --which 1 --epochs 2000  # regenerate a paper table
 //! hte-pinn memmodel                       # analytic A100-memory model
 //! ```
@@ -24,7 +29,7 @@ use anyhow::{bail, Context, Result};
 
 #[cfg(feature = "xla")]
 use hte_pinn::checkpoint;
-use hte_pinn::config::{parse_backend, unknown_native_table, Backend, FileConfig};
+use hte_pinn::config::{parse_arrival, parse_backend, unknown_native_table, Backend, FileConfig};
 #[cfg(feature = "xla")]
 use hte_pinn::coordinator::Trainer;
 use hte_pinn::coordinator::{
@@ -37,13 +42,14 @@ use hte_pinn::pde::PdeProblem;
 #[cfg(feature = "xla")]
 use hte_pinn::runtime::Engine;
 use hte_pinn::runtime::{
-    env_rank, serve, serve_conns_with_faults, ClusterOpts, FaultPlan, InProcessBackend, JobSpec,
-    LocalWorkerPool, Manifest, ShardBackend, TcpClusterBackend,
+    env_rank, run_loadgen, serve, serve_conns_with_faults, serve_queries, ClusterOpts, Deadlines,
+    FaultPlan, InProcessBackend, JobSpec, LoadgenOpts, LocalWorkerPool, Manifest, ServeModel,
+    ServeOpts, ShardBackend, TcpClusterBackend,
 };
 use hte_pinn::table;
 use hte_pinn::util::args::Args;
 
-const USAGE: &str = "usage: hte-pinn <info|train|worker|table|memmodel> [flags]
+const USAGE: &str = "usage: hte-pinn <info|train|worker|serve|loadgen|table|memmodel> [flags]
   info     --artifacts DIR
   train    --config FILE | [--family sg2|sg3|ac2|bihar
            --method probe|hte|unbiased|gpinn --estimator hte --d 100 --v 16
@@ -64,6 +70,14 @@ const USAGE: &str = "usage: hte-pinn <info|train|worker|table|memmodel> [flags]
            [--fault SPEC  (inject faults for chaos testing — grammar
            rank=K, die_after_steps=N, stall_secs=S@STEP, drop_conn@STEP,
            corrupt_frame@STEP; also read from HTE_FAULT)]
+  serve    --resume CKPT --listen HOST:PORT   (batched inference for a trained
+           checkpoint; answers are bitwise the local forward; port 0 = auto)
+           [--threads T --microbatch 256 --queue-cap 64 --max-batch 16384
+           --metrics FILE  (stream observability snapshots as JSONL)]
+  loadgen  --connect HOST:PORT --d D [--arrival closed|open --rate QPS
+           --conns C --batch N --requests R --seed S]
+           [--resume CKPT  (verify every answer bitwise vs a local forward;
+           a divergence fails the run)] [--out FILE  (write the JSON report)]
   table    --which 1..5|ac [--backend native|artifact] [--epochs N --seeds K
            --threads T --eval-points M --lr0 LR --out DIR]
            [artifact: --artifacts DIR] [native (4, 5, ac): --batch N
@@ -378,6 +392,109 @@ fn cmd_worker(mut args: Args) -> Result<()> {
     }
 }
 
+/// `hte-pinn serve --resume CKPT --listen HOST:PORT`: load a trained
+/// checkpoint, rebuild the constrained model, and answer `[n, d]` query
+/// batches over the cluster wire protocol — bitwise the answers a local
+/// forward would produce (DESIGN.md §11).  Prints `listening on <addr>`
+/// once bound, exactly like `worker`, so scripts can bind port 0.
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let resume = args.get("resume");
+    let listen = args.get("listen");
+    let threads: usize = args.get_parse("threads", nn::default_threads())?;
+    let microbatch: usize = args.get_parse("microbatch", 256usize)?;
+    let queue_cap: usize = args.get_parse("queue-cap", 64usize)?;
+    let max_batch: usize = args.get_parse("max-batch", 16_384usize)?;
+    let metrics = args.get("metrics");
+    args.finish()?;
+    let Some(resume) = resume else {
+        bail!("serve needs --resume CKPT (a checkpoint written by train --save)\n{USAGE}");
+    };
+    let Some(listen) = listen else {
+        bail!("serve needs --listen HOST:PORT (port 0 picks a free port)\n{USAGE}");
+    };
+    let model = Arc::new(ServeModel::from_checkpoint(&resume)?);
+    let listener = std::net::TcpListener::bind(&listen)
+        .with_context(|| format!("binding the serve listener on {listen}"))?;
+    let addr = listener.local_addr()?;
+    println!(
+        "serving {}/{} d={} ({} params, checkpoint step {})",
+        model.spec.family, model.spec.method, model.spec.d, model.spec.n_params, model.step
+    );
+    println!("listening on {addr}");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    let opts = ServeOpts {
+        threads: threads.max(1),
+        microbatch: microbatch.max(1),
+        queue_cap: queue_cap.max(1),
+        max_batch: max_batch.max(1),
+        ..ServeOpts::default()
+    };
+    let metrics = match metrics {
+        Some(path) => Some(MetricsLogger::to_file(path)?),
+        None => None,
+    };
+    serve_queries(listener, model, opts, None, metrics)
+}
+
+/// `hte-pinn loadgen --connect HOST:PORT --d D`: drive a serve endpoint
+/// with closed- or open-loop load, print the latency/throughput report
+/// as JSON, and (with `--resume CKPT`) verify every answer bit-for-bit
+/// against a locally reconstructed forward — a divergence fails the
+/// run, which is how CI gates the serve determinism guarantee.
+fn cmd_loadgen(mut args: Args) -> Result<()> {
+    let connect = args.get("connect");
+    let d: usize = args.get_parse("d", 100usize)?;
+    let arrival = parse_arrival(&args.get_or("arrival", "closed"))?;
+    let rate: f64 = args.get_parse("rate", 100.0f64)?;
+    let conns: usize = args.get_parse("conns", 1usize)?;
+    let batch: usize = args.get_parse("batch", 128usize)?;
+    let requests: usize = args.get_parse("requests", 100usize)?;
+    let seed: u64 = args.get_parse("seed", 0u64)?;
+    let resume = args.get("resume");
+    let out = args.get("out");
+    args.finish()?;
+    let Some(addr) = connect else {
+        bail!("loadgen needs --connect HOST:PORT (a running hte-pinn serve)\n{USAGE}");
+    };
+    let verify = match &resume {
+        Some(path) => Some(ServeModel::from_checkpoint(path)?),
+        None => None,
+    };
+    if let Some(model) = &verify {
+        if model.d() != d {
+            bail!("--d {d} does not match the --resume checkpoint's d={}", model.d());
+        }
+    }
+    let opts = LoadgenOpts {
+        addr,
+        d,
+        arrival,
+        rate,
+        conns: conns.max(1),
+        batch: batch.max(1),
+        requests,
+        seed,
+        deadlines: Deadlines::from_env(),
+    };
+    let report = run_loadgen(&opts, verify.as_ref())?;
+    let json = report.to_json();
+    println!("{json}");
+    if let Some(path) = out {
+        std::fs::write(&path, format!("{json}\n"))
+            .with_context(|| format!("writing the loadgen report to {path}"))?;
+        println!("report -> {path}");
+    }
+    if verify.is_some() && !report.bitwise_ok {
+        bail!(
+            "bitwise verification FAILED: served answers diverged from the local forward \
+             ({} answers checked)",
+            report.bitwise_checked
+        );
+    }
+    Ok(())
+}
+
 fn cmd_table(mut args: Args) -> Result<()> {
     let which = args.get_or("which", "0");
     let default_backend = if cfg!(feature = "xla") { "artifact" } else { "native" };
@@ -570,6 +687,8 @@ fn main() -> Result<()> {
         "info" => cmd_info(args),
         "train" => cmd_train(args),
         "worker" => cmd_worker(args),
+        "serve" => cmd_serve(args),
+        "loadgen" => cmd_loadgen(args),
         "table" => cmd_table(args),
         "memmodel" => cmd_memmodel(args),
         other => bail!("unknown command {other}\n{USAGE}"),

@@ -1,10 +1,21 @@
 //! The paper's 4-layer, 128-wide tanh MLP, natively.
 
 use crate::rng::Xoshiro256pp;
-use crate::tensor::Tensor;
+use crate::tensor::{matmul_into, Tensor};
 
 pub const HIDDEN: usize = 128;
 pub const DEPTH: usize = 4;
+
+/// Reusable activation buffers for [`Mlp::forward_batch`]: two
+/// ping-pong layer buffers plus the raw-output staging vector.  Owned
+/// by the caller (one per evaluator thread) so steady-state batched
+/// inference allocates nothing.
+#[derive(Default)]
+pub struct ForwardScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    raw: Vec<f32>,
+}
 
 /// MLP parameters: (W, b) per layer, d -> 128 -> 128 -> 128 -> 1.
 #[derive(Clone, Debug)]
@@ -68,6 +79,72 @@ impl Mlp {
     /// Hard-constrained model: factor(x) * mlp(x).
     pub fn forward_constrained(&self, x: &[f32], factor: f64) -> f64 {
         factor * self.forward(x) as f64
+    }
+
+    /// Batched raw forward: `xs` is `[n, d]` row-major, `out` receives
+    /// `n` scalars.  Goes through the SIMD-dispatched matmul kernels,
+    /// and is **bitwise identical per row to per-point [`forward`]** at
+    /// every dispatch level: the matmul kernels accumulate each output
+    /// row independently in a fixed k-order (row count never crosses an
+    /// accumulation chain — see `tensor::matmul`), and bias add + tanh
+    /// are elementwise in the same order as `Tensor::add_row`/`map`.
+    /// That equality is what lets the serving tier promise "a served
+    /// answer is the bits a local forward would have produced".
+    ///
+    /// [`forward`]: Mlp::forward
+    pub fn forward_batch(
+        &self,
+        xs: &[f32],
+        n: usize,
+        out: &mut Vec<f32>,
+        scratch: &mut ForwardScratch,
+    ) {
+        assert_eq!(xs.len(), n * self.d, "xs must be [n, d] row-major");
+        let last = self.layers.len() - 1;
+        for (i, (w, bias)) in self.layers.iter().enumerate() {
+            let (fan_in, fan_out) = (w.shape[0], w.shape[1]);
+            let src: &[f32] = if i == 0 { xs } else { &scratch.a };
+            debug_assert_eq!(src.len(), n * fan_in);
+            let dst = &mut scratch.b;
+            dst.clear();
+            dst.resize(n * fan_out, 0.0);
+            matmul_into(src, &w.data, dst, n, fan_in, fan_out);
+            for row in dst.chunks_mut(fan_out) {
+                for (v, &bv) in row.iter_mut().zip(&bias.data) {
+                    *v += bv;
+                }
+            }
+            if i < last {
+                for v in dst.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            std::mem::swap(&mut scratch.a, &mut scratch.b);
+        }
+        // the final layer is [n, 1]: scratch.a holds the n outputs
+        out.clear();
+        out.extend_from_slice(&scratch.a[..n]);
+    }
+
+    /// Batched hard-constrained forward: `out[i] = factors[i] *
+    /// forward(xs[i]) as f64`, the same promotion-then-scale as
+    /// [`forward_constrained`] so the two agree bitwise per point.
+    ///
+    /// [`forward_constrained`]: Mlp::forward_constrained
+    pub fn forward_constrained_batch(
+        &self,
+        xs: &[f32],
+        n: usize,
+        factors: &[f64],
+        out: &mut Vec<f64>,
+        scratch: &mut ForwardScratch,
+    ) {
+        assert_eq!(factors.len(), n, "one constraint factor per point");
+        let mut raw = std::mem::take(&mut scratch.raw);
+        self.forward_batch(xs, n, &mut raw, scratch);
+        out.clear();
+        out.extend(raw.iter().zip(factors).map(|(&u, &f)| f * u as f64));
+        scratch.raw = raw;
     }
 
     /// Flatten parameters in the artifact's packing order (w1,b1,...).
@@ -135,5 +212,81 @@ mod tests {
         let b = mlp.forward(&[-0.4, 0.0, 0.9, -0.1]);
         assert!(a.is_finite() && b.is_finite());
         assert_ne!(a, b);
+    }
+
+    fn random_points(d: usize, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..n * d).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    /// The serving-tier determinism anchor: `forward_batch` must equal
+    /// per-point `forward` to the bit at every SIMD dispatch level,
+    /// including batch sizes that leave remainder lanes in the vector
+    /// kernels (n not a multiple of 4 or 8) and d that leaves remainder
+    /// k-terms in the 4-wide unroll.
+    #[test]
+    fn serve_forward_batch_matches_per_point_bitwise_at_every_simd_level() {
+        use crate::tensor::{detect_simd_level, force_simd_level, simd_level, simd_level_guard, SimdLevel};
+        let _guard = simd_level_guard();
+        let prev = simd_level();
+        for level in [SimdLevel::Scalar, detect_simd_level()] {
+            force_simd_level(level);
+            for d in [3usize, 10] {
+                let mlp = Mlp::init(d, &mut Xoshiro256pp::new(9 + d as u64));
+                let mut scratch = ForwardScratch::default();
+                let mut out = Vec::new();
+                for n in [1usize, 2, 3, 4, 5, 7, 8, 13] {
+                    let xs = random_points(d, n, 31 * n as u64 + d as u64);
+                    mlp.forward_batch(&xs, n, &mut out, &mut scratch);
+                    assert_eq!(out.len(), n);
+                    for i in 0..n {
+                        let single = mlp.forward(&xs[i * d..(i + 1) * d]);
+                        assert_eq!(
+                            out[i].to_bits(),
+                            single.to_bits(),
+                            "level {} d={d} n={n} point {i}: batch diverged from per-point",
+                            level.name()
+                        );
+                    }
+                }
+            }
+        }
+        force_simd_level(prev);
+    }
+
+    /// Constrained variant: same promotion order (f32 forward, widen,
+    /// scale by the f64 factor) as the per-point path the trainer's
+    /// evaluate() uses.
+    #[test]
+    fn serve_forward_constrained_batch_matches_per_point_bitwise() {
+        use crate::tensor::{detect_simd_level, force_simd_level, simd_level, simd_level_guard, SimdLevel};
+        let _guard = simd_level_guard();
+        let prev = simd_level();
+        for level in [SimdLevel::Scalar, detect_simd_level()] {
+            force_simd_level(level);
+            let d = 6usize;
+            let mlp = Mlp::init(d, &mut Xoshiro256pp::new(17));
+            let mut scratch = ForwardScratch::default();
+            let mut out = Vec::new();
+            for n in [1usize, 3, 5, 8] {
+                let xs = random_points(d, n, 77 + n as u64);
+                // a hard-constraint-shaped factor (1 - |x|^2), computed in f64
+                let factors: Vec<f64> = xs
+                    .chunks_exact(d)
+                    .map(|x| 1.0 - x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
+                    .collect();
+                mlp.forward_constrained_batch(&xs, n, &factors, &mut out, &mut scratch);
+                for i in 0..n {
+                    let single = mlp.forward_constrained(&xs[i * d..(i + 1) * d], factors[i]);
+                    assert_eq!(
+                        out[i].to_bits(),
+                        single.to_bits(),
+                        "level {} n={n} point {i}",
+                        level.name()
+                    );
+                }
+            }
+        }
+        force_simd_level(prev);
     }
 }

@@ -12,7 +12,7 @@ mod mlp;
 mod native_loss;
 
 pub use jet::{factor_jet, gpinn_point_reference, jet_forward, JetStreams};
-pub use mlp::{Mlp, HIDDEN};
+pub use mlp::{ForwardScratch, Mlp, HIDDEN};
 pub use native_loss::{
     adam_step, allen_cahn_residual_loss_and_grad, allen_cahn_residual_loss_reference,
     bihar_residual_loss_and_grad, bihar_residual_loss_reference, default_residual_op,

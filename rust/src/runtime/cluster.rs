@@ -72,17 +72,24 @@ use super::shard::{prepare_results, split_range, ShardBackend, ShardJob, ShardPl
 /// would silently break the bitwise guarantee).
 pub const PROTOCOL_VERSION: u32 = 1;
 
-const FRAME_MAGIC: u32 = 0x4854_4550; // "HTEP"
+pub(crate) const FRAME_MAGIC: u32 = 0x4854_4550; // "HTEP"
 /// Hard cap against garbage peers / corrupted length words.
-const MAX_FRAME: u64 = 1 << 33;
+pub(crate) const MAX_FRAME: u64 = 1 << 33;
 
-const TAG_HELLO: u8 = 1;
-const TAG_HELLO_ACK: u8 = 2;
-const TAG_STEP: u8 = 3;
-const TAG_RESULT: u8 = 4;
-const TAG_ERROR: u8 = 5;
+pub(crate) const TAG_HELLO: u8 = 1;
+pub(crate) const TAG_HELLO_ACK: u8 = 2;
+pub(crate) const TAG_STEP: u8 = 3;
+pub(crate) const TAG_RESULT: u8 = 4;
+pub(crate) const TAG_ERROR: u8 = 5;
+// Inference tier (`runtime::serve`), same framing and HELLO handshake:
+// a batched query, its answer (or graceful rejection), and the
+// observability snapshot.  Tag values are shared across the whole
+// protocol so a frame can never be mis-read across tiers.
+pub(crate) const TAG_QUERY: u8 = 6;
+pub(crate) const TAG_ANSWER: u8 = 7;
+pub(crate) const TAG_STATS: u8 = 8;
 
-fn env_secs(name: &str) -> Option<u64> {
+pub(crate) fn env_secs(name: &str) -> Option<u64> {
     std::env::var(name).ok().and_then(|s| s.parse::<u64>().ok())
 }
 
@@ -192,43 +199,52 @@ fn backoff_delay(attempt: u32, salt: u64) -> Duration {
 // ---------------------------------------------------------------------------
 
 #[derive(Default)]
-struct Enc {
-    buf: Vec<u8>,
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
 }
 
 impl Enc {
-    fn u32(&mut self, x: u32) {
+    pub(crate) fn u32(&mut self, x: u32) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
-    fn u64(&mut self, x: u64) {
+    pub(crate) fn u64(&mut self, x: u64) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
-    fn f32(&mut self, x: f32) {
+    pub(crate) fn f32(&mut self, x: f32) {
         self.u32(x.to_bits());
     }
-    fn f64(&mut self, x: f64) {
+    pub(crate) fn f64(&mut self, x: f64) {
         self.u64(x.to_bits());
     }
-    fn str(&mut self, s: &str) {
+    pub(crate) fn str(&mut self, s: &str) {
         self.u32(s.len() as u32);
         self.buf.extend_from_slice(s.as_bytes());
     }
-    fn f32s(&mut self, xs: &[f32]) {
+    pub(crate) fn f32s(&mut self, xs: &[f32]) {
         self.u64(xs.len() as u64);
         self.buf.reserve(xs.len() * 4);
         for &x in xs {
             self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
         }
     }
+    /// f64 array, raw bit patterns (the serve tier's answers are f64 —
+    /// `forward_constrained` widens before the constraint factor).
+    pub(crate) fn f64s(&mut self, xs: &[f64]) {
+        self.u64(xs.len() as u64);
+        self.buf.reserve(xs.len() * 8);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
 }
 
-struct Dec<'a> {
+pub(crate) struct Dec<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Dec<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
     fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
@@ -243,21 +259,21 @@ impl<'a> Dec<'a> {
         self.pos += n;
         Ok(out)
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let b = self.bytes(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let b = self.bytes(8)?;
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_bits(self.u32()?))
     }
     fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_bits(self.u64()?))
     }
-    fn str(&mut self) -> Result<&'a str> {
+    pub(crate) fn str(&mut self) -> Result<&'a str> {
         let n = self.u32()? as usize;
         std::str::from_utf8(self.bytes(n)?).context("non-UTF8 string in frame")
     }
@@ -268,12 +284,23 @@ impl<'a> Dec<'a> {
     }
     /// Decode into a caller-owned buffer (the rank-0 gather reuses each
     /// shard's gradient Vec across steps — no steady-state allocation).
-    fn f32s_into(&mut self, out: &mut Vec<f32>) -> Result<()> {
+    pub(crate) fn f32s_into(&mut self, out: &mut Vec<f32>) -> Result<()> {
         let n = self.u64()? as usize;
         let raw = self.bytes(n.checked_mul(4).context("absurd f32 array length")?)?;
         out.clear();
         out.reserve(n);
         out.extend(raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+        Ok(())
+    }
+    /// f64 counterpart of [`Dec::f32s_into`] (serve answers).
+    pub(crate) fn f64s_into(&mut self, out: &mut Vec<f64>) -> Result<()> {
+        let n = self.u64()? as usize;
+        let raw = self.bytes(n.checked_mul(8).context("absurd f64 array length")?)?;
+        out.clear();
+        out.reserve(n);
+        out.extend(raw.chunks_exact(8).map(|b| {
+            f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+        }));
         Ok(())
     }
 }
@@ -282,7 +309,7 @@ impl<'a> Dec<'a> {
 // Framing
 // ---------------------------------------------------------------------------
 
-fn write_frame(stream: &mut TcpStream, tag: u8, payload: &[u8]) -> std::io::Result<()> {
+pub(crate) fn write_frame(stream: &mut TcpStream, tag: u8, payload: &[u8]) -> std::io::Result<()> {
     let mut head = [0u8; 13];
     head[..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
     head[4] = tag;
@@ -294,7 +321,7 @@ fn write_frame(stream: &mut TcpStream, tag: u8, payload: &[u8]) -> std::io::Resu
 
 /// Read one frame; `Ok(None)` on a clean EOF *between* frames (the peer
 /// said goodbye by closing), an error on anything torn mid-frame.
-fn read_frame_or_eof(stream: &mut TcpStream) -> Result<Option<(u8, Vec<u8>)>> {
+pub(crate) fn read_frame_or_eof(stream: &mut TcpStream) -> Result<Option<(u8, Vec<u8>)>> {
     let mut head = [0u8; 13];
     let mut got = 0usize;
     while got < head.len() {
@@ -337,12 +364,12 @@ fn read_frame_or_eof(stream: &mut TcpStream) -> Result<Option<(u8, Vec<u8>)>> {
 }
 
 /// Read one frame, treating EOF as an error (rank 0 waiting on results).
-fn read_frame(stream: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
+pub(crate) fn read_frame(stream: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
     read_frame_or_eof(stream)?
         .context("peer closed the connection (worker process died or was killed?)")
 }
 
-fn send_error(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+pub(crate) fn send_error(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
     let mut e = Enc::default();
     e.str(msg);
     write_frame(stream, TAG_ERROR, &e.buf)
@@ -377,7 +404,7 @@ impl JobSpec {
     }
 }
 
-fn encode_hello(spec: &JobSpec) -> Vec<u8> {
+pub(crate) fn encode_hello(spec: &JobSpec) -> Vec<u8> {
     let mut e = Enc::default();
     e.u32(PROTOCOL_VERSION);
     e.str(&spec.family);
@@ -564,7 +591,7 @@ pub type RespawnHook = Box<dyn FnMut(&str) -> Result<bool> + Send>;
 /// `TcpStream::connect` with the module's timeout (the OS default can
 /// block for minutes against a black-holed address); tries every
 /// resolved socket address.
-fn connect_worker(addr: &str, timeout: Duration) -> Result<TcpStream> {
+pub(crate) fn connect_worker(addr: &str, timeout: Duration) -> Result<TcpStream> {
     let resolved: Vec<SocketAddr> = addr
         .to_socket_addrs()
         .with_context(|| format!("resolving worker address {addr}"))?

@@ -1,18 +1,20 @@
 //! L3 runtime substrate: the shard-plan execution layer (scheduling
 //! from in-process threads to TCP worker processes, bitwise
-//! deterministic — DESIGN.md §10), plus the artifact manifest/PJRT
-//! engine.
+//! deterministic — DESIGN.md §10), the batched inference tier over the
+//! same wire protocol (`hte-pinn serve` — DESIGN.md §11), plus the
+//! artifact manifest/PJRT engine.
 //!
-//! The shard layer and the manifest are always available; the PJRT
-//! `Engine` needs the real XLA runtime and is gated behind `--features
-//! xla` (default builds resolve the dependency via the in-repo
-//! `xla-stub`).
+//! The shard layer, serve tier and the manifest are always available;
+//! the PJRT `Engine` needs the real XLA runtime and is gated behind
+//! `--features xla` (default builds resolve the dependency via the
+//! in-repo `xla-stub`).
 
 mod cluster;
 #[cfg(feature = "xla")]
 mod engine;
 mod fault;
 mod manifest;
+mod serve;
 mod shard;
 
 pub use cluster::{
@@ -20,6 +22,10 @@ pub use cluster::{
     RespawnHook, TcpClusterBackend, PROTOCOL_VERSION,
 };
 pub use fault::{env_rank, FaultAction, FaultPlan, FaultState};
+pub use serve::{
+    run_loadgen, serve_queries, Arrival, EvalScratch, LoadgenOpts, LoadgenReport, QueryReply,
+    ServeClient, ServeModel, ServeOpts, ServeSnapshot,
+};
 #[cfg(feature = "xla")]
 pub use engine::Engine;
 pub use manifest::{Entry, InputSpec, Manifest, ParamEntry, StateOffsets};

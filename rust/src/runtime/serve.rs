@@ -1,0 +1,1457 @@
+//! `hte-pinn serve`: a batched, observable inference tier for trained
+//! PINN surrogates (DESIGN.md §11).
+//!
+//! A serve process loads one checkpoint, reconstructs the constrained
+//! model (`factor(x) * mlp(x)`, the same [`Mlp::forward_constrained`]
+//! the trainer evaluates), and answers `[n, d]` query batches over the
+//! cluster's framed wire protocol — same `[magic][tag][len]` framing,
+//! same HELLO handshake, three new tags (`QUERY`/`ANSWER`/`STATS`).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bitwise determinism.**  A served answer is the bits a local
+//!    [`Mlp::forward_constrained`] call would have produced for the
+//!    same checkpoint and the same point — regardless of batch size,
+//!    microbatch boundary, evaluator-thread count, or SIMD dispatch
+//!    level.  The whole chain is row-independent: the matmul kernels
+//!    accumulate each output row in a fixed k-order (`tensor::matmul`),
+//!    so [`Mlp::forward_batch`] equals per-point `forward` to the bit,
+//!    and microbatch splits only re-group rows.
+//! 2. **No hangs, bounded memory.**  The request queue is bounded;
+//!    when it is full the server *answers* — an [`TAG_ANSWER`] frame
+//!    with a rejected status and a diagnostic string, never a silent
+//!    drop or an unbounded buffer.  Every socket phase carries the
+//!    per-phase [`Deadlines`] (PR 6): a connected-but-silent client is
+//!    shed on the handshake deadline, a wedged one on the step
+//!    deadline, and neither can stall other connections (one handler
+//!    thread per connection).
+//! 3. **Observable.**  Per-request latency, throughput, queue depth
+//!    and rejection counts are kept server-side and exported two ways:
+//!    a [`TAG_STATS`] request answers with a JSON snapshot, and
+//!    `--metrics FILE` streams the same snapshots as JSONL through the
+//!    training tier's [`MetricsLogger`].
+//!
+//! Protocol (after the shared HELLO/HELLO_ACK handshake — the client's
+//! HELLO may leave family/method empty as a wildcard; `d`/`n_params`
+//! are always cross-checked):
+//!
+//! ```text
+//! client                                server
+//!   HELLO {version, family, method,
+//!          lambda_g, d, n_params}    ->
+//!                                    <- HELLO_ACK {"serve", family, d,
+//!                                                  n_params, max_batch}
+//!                                       (or ERROR {message})
+//!   pipelined:
+//!   QUERY {id, n, xs[n*d]}          ->
+//!                                    <- ANSWER {id, status=0, u[n] f64}
+//!                                       (or ANSWER {id, status=1, why}
+//!                                        on saturation / oversize)
+//!   STATS {}                        ->
+//!                                    <- STATS {json snapshot}
+//!   (connection drop = goodbye; malformed frames are fatal: ERROR)
+//! ```
+//!
+//! Answers to pipelined queries may arrive out of submission order
+//! (the evaluator pool is concurrent) — clients match on `id`.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint;
+use crate::coordinator::{problem_for, MetricsLogger};
+use crate::nn::{ForwardScratch, Mlp};
+use crate::pde::PdeProblem;
+use crate::rng::Xoshiro256pp;
+
+use super::cluster::{
+    connect_worker, encode_hello, read_frame, read_frame_or_eof, send_error, write_frame, Deadlines,
+    Dec, Enc, JobSpec, PROTOCOL_VERSION, TAG_ANSWER, TAG_ERROR, TAG_HELLO, TAG_HELLO_ACK,
+    TAG_QUERY, TAG_STATS,
+};
+
+/// [`TAG_ANSWER`] status word: the batch was evaluated, `n` f64 values
+/// follow.
+const ANSWER_OK: u32 = 0;
+/// [`TAG_ANSWER`] status word: the batch was *not* evaluated (queue
+/// saturated or batch oversized); a diagnostic string follows.  The
+/// connection stays usable — rejection is backpressure, not an error.
+const ANSWER_REJECTED: u32 = 1;
+
+/// Latency ring capacity: percentiles are computed over the most
+/// recent `LAT_CAP` answered queries (bounded memory at any uptime).
+const LAT_CAP: usize = 1 << 16;
+
+// ---------------------------------------------------------------------------
+// The servable model
+// ---------------------------------------------------------------------------
+
+/// A trained constrained model, rebuilt from a checkpoint: the MLP
+/// weights plus the problem family's hard-constraint factor.  `Send +
+/// Sync` (the problem trait requires it), so one instance is shared by
+/// every evaluator thread behind an `Arc`.
+pub struct ServeModel {
+    pub mlp: Mlp,
+    problem: Box<dyn PdeProblem>,
+    /// The job spec served clients are validated against (family,
+    /// method, d, n_params — same struct the training handshake uses).
+    pub spec: JobSpec,
+    /// Training step the checkpoint was saved at (surfaced in logs).
+    pub step: usize,
+}
+
+/// Per-evaluator-thread scratch for [`ServeModel::eval_batch`]: the
+/// forward ping-pong buffers plus factor/value staging, so the steady
+/// state of a serving thread allocates nothing.
+#[derive(Default)]
+pub struct EvalScratch {
+    fwd: ForwardScratch,
+    factors: Vec<f64>,
+    vals: Vec<f64>,
+}
+
+impl ServeModel {
+    /// Build a servable model around explicit weights (tests, benches).
+    pub fn new(mlp: Mlp, family: &str, method: &str) -> Result<Self> {
+        let problem = problem_for(family, mlp.d)?;
+        let spec = JobSpec {
+            family: family.to_string(),
+            method: method.to_string(),
+            lambda_g: 0.0,
+            d: mlp.d,
+            n_params: mlp.n_params(),
+        };
+        Ok(Self { mlp, problem, spec, step: 0 })
+    }
+
+    /// Rebuild the constrained model from a training checkpoint: the
+    /// state payload is the optimizer layout `params|m|v|t` (3n+1
+    /// floats), and serving needs only the leading `n` parameters.
+    pub fn from_checkpoint(path: impl AsRef<Path>) -> Result<Self> {
+        let (meta, state) = checkpoint::load(&path)
+            .with_context(|| format!("loading checkpoint {:?}", path.as_ref()))?;
+        let n = meta.model.n_params;
+        if state.len() != 3 * n + 1 {
+            bail!(
+                "checkpoint state holds {} floats but the optimizer layout for {} parameters \
+                 is {} (params|m|v|t) — not a training checkpoint this binary can serve",
+                state.len(),
+                n,
+                3 * n + 1
+            );
+        }
+        let mut mlp = Mlp::init(meta.model.d, &mut Xoshiro256pp::new(meta.config.seed));
+        mlp.unpack_into(&state[..n]);
+        let problem = problem_for(&meta.model.family, meta.model.d)
+            .context("rebuilding the checkpoint's problem family")?;
+        Ok(Self {
+            mlp,
+            problem,
+            spec: JobSpec::from_config(&meta.config),
+            step: meta.step,
+        })
+    }
+
+    pub fn d(&self) -> usize {
+        self.mlp.d
+    }
+
+    /// Evaluate `[n, d]` points, *appending* `n` constrained values to
+    /// `out`.  Bitwise equal per point to
+    /// [`Mlp::forward_constrained`] — the factor is computed by the
+    /// same `PdeProblem::factor` the trainer's evaluator calls, and the
+    /// batched forward is row-independent (see the module docs).
+    pub fn eval_batch(&self, xs: &[f32], n: usize, out: &mut Vec<f64>, scratch: &mut EvalScratch) {
+        assert_eq!(xs.len(), n * self.mlp.d, "xs must be [n, d] row-major");
+        scratch.factors.clear();
+        scratch.factors.extend(xs.chunks_exact(self.mlp.d).map(|x| self.problem.factor(x)));
+        self.mlp
+            .forward_constrained_batch(xs, n, &scratch.factors, &mut scratch.vals, &mut scratch.fwd);
+        out.extend_from_slice(&scratch.vals);
+    }
+
+    /// Allocating convenience around [`ServeModel::eval_batch`] (the
+    /// loadgen verifier and tests compute expected bits through this).
+    pub fn eval(&self, xs: &[f32]) -> Vec<f64> {
+        let n = xs.len() / self.mlp.d;
+        let mut out = Vec::with_capacity(n);
+        self.eval_batch(xs, n, &mut out, &mut EvalScratch::default());
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server knobs
+// ---------------------------------------------------------------------------
+
+/// Serving knobs.  Defaults come from the environment-resolved
+/// [`Deadlines`] and conservative capacity constants; tests override
+/// everything explicitly.
+pub struct ServeOpts {
+    pub deadlines: Deadlines,
+    /// Evaluator threads draining the shared queue.
+    pub threads: usize,
+    /// Points per SIMD matmul call: a large request is split into
+    /// `microbatch`-point slices so one huge query cannot hold an
+    /// evaluator's working set beyond cache (splits never change bits —
+    /// rows are independent).
+    pub microbatch: usize,
+    /// Bounded queue capacity, in *requests*.  A full queue rejects
+    /// gracefully (status-1 ANSWER), it never buffers unboundedly.
+    pub queue_cap: usize,
+    /// Largest accepted `n` per query; larger batches are rejected
+    /// with a named diagnostic (the cap is advertised in the ACK).
+    pub max_batch: usize,
+    /// How often the metrics reporter snapshots to the JSONL stream.
+    pub metrics_interval: Duration,
+    /// Test hook: hold each evaluated request this long *before*
+    /// evaluating, making saturation deterministic in tests.  `None`
+    /// (always, outside tests) evaluates immediately.
+    pub eval_delay: Option<Duration>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            deadlines: Deadlines::from_env(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            microbatch: 256,
+            queue_cap: 64,
+            max_batch: 16_384,
+            metrics_interval: Duration::from_secs(1),
+            eval_delay: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded queue + per-connection shared write side
+// ---------------------------------------------------------------------------
+
+/// The write half of one client connection, shared between its handler
+/// thread (rejections, stats) and every evaluator thread (answers).
+/// Frames are written whole under the lock, so pipelined answers never
+/// interleave mid-frame.
+struct ConnShared {
+    stream: Mutex<TcpStream>,
+    /// Cleared on the first write error; later answers for this
+    /// connection are dropped instead of erroring every evaluator.
+    alive: AtomicBool,
+}
+
+impl ConnShared {
+    fn send(&self, tag: u8, payload: &[u8]) {
+        if !self.alive.load(Ordering::Acquire) {
+            return;
+        }
+        let mut stream = self.stream.lock().expect("conn lock poisoned");
+        if write_frame(&mut stream, tag, payload).is_err() {
+            self.alive.store(false, Ordering::Release);
+        }
+    }
+}
+
+/// One accepted query waiting for an evaluator.
+struct Job {
+    id: u64,
+    n: usize,
+    xs: Vec<f32>,
+    accepted: Instant,
+    conn: Arc<ConnShared>,
+}
+
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Bounded MPMC queue: handlers push (failing fast when full — that
+/// failure *is* the backpressure signal), evaluators block on pop.
+struct Queue {
+    inner: Mutex<QueueInner>,
+    avail: Condvar,
+    cap: usize,
+}
+
+impl Queue {
+    fn new(cap: usize) -> Self {
+        Queue {
+            inner: Mutex::new(QueueInner { jobs: VecDeque::new(), shutdown: false }),
+            avail: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Non-blocking: `Err(job)` hands the job back when the queue is
+    /// full (the handler turns it into a status-1 ANSWER).
+    fn push(&self, job: Job) -> std::result::Result<(), Job> {
+        let mut inner = self.inner.lock().expect("queue lock poisoned");
+        if inner.shutdown || inner.jobs.len() >= self.cap {
+            return Err(job);
+        }
+        inner.jobs.push_back(job);
+        drop(inner);
+        self.avail.notify_one();
+        Ok(())
+    }
+
+    /// Blocking: `None` once shut down *and* drained.
+    fn pop(&self) -> Option<Job> {
+        let mut inner = self.inner.lock().expect("queue lock poisoned");
+        loop {
+            if let Some(job) = inner.jobs.pop_front() {
+                return Some(job);
+            }
+            if inner.shutdown {
+                return None;
+            }
+            inner = self.avail.wait(inner).expect("queue lock poisoned");
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.inner.lock().expect("queue lock poisoned").jobs.len()
+    }
+
+    fn shutdown(&self) {
+        self.inner.lock().expect("queue lock poisoned").shutdown = true;
+        self.avail.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observability
+// ---------------------------------------------------------------------------
+
+struct StatsInner {
+    /// Answered queries (status 0).
+    queries: u64,
+    /// Points across answered queries.
+    points: u64,
+    /// Status-1 rejections (saturation + oversize).
+    rejected: u64,
+    /// Ring of the most recent `LAT_CAP` accept→answer latencies, µs.
+    lat_us: Vec<u64>,
+}
+
+/// Shared server-side counters; snapshots come out as
+/// [`ServeSnapshot`].
+pub struct ServeStats {
+    inner: Mutex<StatsInner>,
+    started: Instant,
+}
+
+impl ServeStats {
+    fn new() -> Self {
+        ServeStats {
+            inner: Mutex::new(StatsInner {
+                queries: 0,
+                points: 0,
+                rejected: 0,
+                lat_us: Vec::new(),
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    fn record_answer(&self, n: usize, latency: Duration) {
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        let mut st = self.inner.lock().expect("stats lock poisoned");
+        if st.lat_us.len() < LAT_CAP {
+            st.lat_us.push(us);
+        } else {
+            let at = (st.queries % LAT_CAP as u64) as usize;
+            st.lat_us[at] = us;
+        }
+        st.queries += 1;
+        st.points += n as u64;
+    }
+
+    fn record_rejection(&self) {
+        self.inner.lock().expect("stats lock poisoned").rejected += 1;
+    }
+
+    fn snapshot(&self, queue_depth: usize) -> ServeSnapshot {
+        let st = self.inner.lock().expect("stats lock poisoned");
+        let elapsed_s = self.started.elapsed().as_secs_f64().max(1e-9);
+        let (queries, points, rejected) = (st.queries, st.points, st.rejected);
+        let mut lat = st.lat_us.clone();
+        drop(st);
+        lat.sort_unstable();
+        ServeSnapshot {
+            elapsed_s,
+            queries,
+            points,
+            rejected,
+            qps: queries as f64 / elapsed_s,
+            p50_ms: percentile_ms(&lat, 0.50),
+            p95_ms: percentile_ms(&lat, 0.95),
+            p99_ms: percentile_ms(&lat, 0.99),
+            queue_depth,
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending µs slice, in ms (0 when
+/// empty — a fresh server has no latency story to tell yet).
+fn percentile_ms(sorted_us: &[u64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)] as f64 / 1_000.0
+}
+
+/// One observability snapshot: the [`TAG_STATS`] reply body and the
+/// `--metrics` JSONL line share this schema.
+#[derive(Clone, Debug)]
+pub struct ServeSnapshot {
+    pub elapsed_s: f64,
+    pub queries: u64,
+    pub points: u64,
+    pub rejected: u64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub queue_depth: usize,
+}
+
+impl ServeSnapshot {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"elapsed_s\":{:.3},\"queries\":{},\"points\":{},\"rejected\":{},\
+             \"qps\":{:.3},\"p50_ms\":{:.3},\"p95_ms\":{:.3},\"p99_ms\":{:.3},\
+             \"queue_depth\":{}}}",
+            self.elapsed_s,
+            self.queries,
+            self.points,
+            self.rejected,
+            self.qps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.queue_depth
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The serve loop
+// ---------------------------------------------------------------------------
+
+fn encode_answer_ok(id: u64, values: &[f64]) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u64(id);
+    e.u32(ANSWER_OK);
+    e.f64s(values);
+    e.buf
+}
+
+fn encode_answer_rejected(id: u64, why: &str) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u64(id);
+    e.u32(ANSWER_REJECTED);
+    e.str(why);
+    e.buf
+}
+
+/// One evaluator thread: drain the queue until shutdown, microbatching
+/// each request through the SIMD forward and answering on the
+/// request's own connection.
+fn evaluator_loop(
+    model: &ServeModel,
+    queue: &Queue,
+    stats: &ServeStats,
+    microbatch: usize,
+    eval_delay: Option<Duration>,
+) {
+    let d = model.mlp.d;
+    let mb = microbatch.max(1);
+    let mut scratch = EvalScratch::default();
+    let mut out: Vec<f64> = Vec::new();
+    while let Some(job) = queue.pop() {
+        if let Some(delay) = eval_delay {
+            std::thread::sleep(delay);
+        }
+        out.clear();
+        let mut off = 0;
+        while off < job.n {
+            let take = (job.n - off).min(mb);
+            model.eval_batch(&job.xs[off * d..(off + take) * d], take, &mut out, &mut scratch);
+            off += take;
+        }
+        // count before sending: a client that has *seen* an answer can
+        // never observe a stats snapshot that hasn't counted it yet
+        // (latency therefore excludes the answer write — negligible)
+        stats.record_answer(job.n, job.accepted.elapsed());
+        job.conn.send(TAG_ANSWER, &encode_answer_ok(job.id, &out));
+    }
+}
+
+/// Validate a serve client's HELLO against the loaded model.  Family
+/// and method act as wildcards when empty — a generic client can dial
+/// any surrogate — but `d` and `n_params` are always cross-checked (a
+/// dimension mismatch would mis-stride every query payload).
+fn check_hello(payload: &[u8], spec: &JobSpec) -> Result<()> {
+    let mut dec = Dec::new(payload);
+    let version = dec.u32()?;
+    if version != PROTOCOL_VERSION {
+        bail!("client speaks protocol v{version}, this server speaks v{PROTOCOL_VERSION}");
+    }
+    let family = dec.str()?;
+    let method = dec.str()?;
+    let _lambda_g = dec.f32()?; // training-only knob, ignored at inference
+    let d = dec.u64()? as usize;
+    let n_params = dec.u64()? as usize;
+    if d != spec.d {
+        bail!("client expects d={d} but this server loaded a d={} checkpoint", spec.d);
+    }
+    if n_params != spec.n_params {
+        bail!(
+            "client expects {n_params} parameters but the loaded checkpoint has {} — \
+             mixed binary versions?",
+            spec.n_params
+        );
+    }
+    if !family.is_empty() && family != spec.family {
+        bail!(
+            "client expects problem family {family} but this server loaded a {} checkpoint",
+            spec.family
+        );
+    }
+    if !method.is_empty() && method != spec.method {
+        bail!(
+            "client expects method {method} but this server loaded a {} checkpoint",
+            spec.method
+        );
+    }
+    Ok(())
+}
+
+/// One client session: handshake, then accept pipelined QUERY/STATS
+/// frames until the client hangs up.  Protocol violations (bad magic,
+/// absurd lengths, mis-sized payloads) are fatal to the *connection*;
+/// saturation and oversize are answered gracefully on it.
+fn handle_client(
+    mut stream: TcpStream,
+    model: &ServeModel,
+    queue: &Queue,
+    stats: &ServeStats,
+    opts_max_batch: usize,
+    dl: &Deadlines,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(dl.handshake)).ok();
+    stream.set_write_timeout(Some(dl.handshake)).ok();
+    let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
+        return Ok(()); // connected and left without a word (port scan)
+    };
+    if tag != TAG_HELLO {
+        let _ = send_error(&mut stream, "expected a hello frame");
+        bail!("expected a hello frame, got tag {tag}");
+    }
+    if let Err(e) = check_hello(&payload, &model.spec) {
+        let _ = send_error(&mut stream, &format!("{e:#}"));
+        return Err(e);
+    }
+    let mut ack = Enc::default();
+    ack.str("serve");
+    ack.str(&model.spec.family);
+    ack.u64(model.spec.d as u64);
+    ack.u64(model.spec.n_params as u64);
+    ack.u64(opts_max_batch as u64);
+    write_frame(&mut stream, TAG_HELLO_ACK, &ack.buf).context("sending serve ack")?;
+    // Session established: queries run under the (longer) step deadline.
+    stream.set_read_timeout(Some(dl.step)).ok();
+    stream.set_write_timeout(Some(dl.step)).ok();
+    let conn = Arc::new(ConnShared {
+        stream: Mutex::new(stream.try_clone().context("cloning the answer stream")?),
+        alive: AtomicBool::new(true),
+    });
+    let d = model.mlp.d;
+    loop {
+        let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
+            return Ok(()); // clean goodbye
+        };
+        match tag {
+            TAG_QUERY => {
+                let accepted = Instant::now();
+                let mut dec = Dec::new(&payload);
+                let id = dec.u64()?;
+                let n = dec.u64()? as usize;
+                let mut xs = Vec::new();
+                dec.f32s_into(&mut xs)?;
+                if xs.len() != n * d {
+                    // fatal: write through the shared side so the error
+                    // frame can't interleave with an in-flight answer
+                    let msg = format!(
+                        "query {id} claims n={n} points at d={d} but ships {} coords",
+                        xs.len()
+                    );
+                    let mut e = Enc::default();
+                    e.str(&msg);
+                    conn.send(TAG_ERROR, &e.buf);
+                    bail!("{msg}");
+                }
+                if n > opts_max_batch {
+                    stats.record_rejection();
+                    conn.send(
+                        TAG_ANSWER,
+                        &encode_answer_rejected(
+                            id,
+                            &format!(
+                                "batch of {n} points exceeds this server's max_batch \
+                                 {opts_max_batch} — split the request"
+                            ),
+                        ),
+                    );
+                    continue;
+                }
+                let job = Job { id, n, xs, accepted, conn: Arc::clone(&conn) };
+                if let Err(job) = queue.push(job) {
+                    stats.record_rejection();
+                    conn.send(
+                        TAG_ANSWER,
+                        &encode_answer_rejected(
+                            job.id,
+                            &format!(
+                                "server saturated: the {}-request queue is full — \
+                                 back off and retry",
+                                queue.cap
+                            ),
+                        ),
+                    );
+                }
+            }
+            TAG_STATS => {
+                let mut e = Enc::default();
+                e.str(&stats.snapshot(queue.depth()).to_json());
+                conn.send(TAG_STATS, &e.buf);
+            }
+            other => {
+                let mut e = Enc::default();
+                e.str(&format!("unexpected frame tag {other}"));
+                conn.send(TAG_ERROR, &e.buf);
+                bail!("unexpected frame tag {other}");
+            }
+        }
+        if !conn.alive.load(Ordering::Acquire) {
+            bail!("client write side failed — dropping the session");
+        }
+    }
+}
+
+/// The serve accept loop.  Spawns `opts.threads` evaluator threads
+/// over one bounded queue, one handler thread per accepted connection,
+/// and (when `metrics` is given) a snapshot reporter on
+/// `opts.metrics_interval`.
+///
+/// With `max_conns: Some(k)` the loop accepts exactly `k` connections,
+/// joins their handlers, drains the queue, stops the evaluators and
+/// flushes a final metrics snapshot before returning — the shape every
+/// test and bench uses.  `None` serves forever (the CLI path).
+pub fn serve_queries(
+    listener: TcpListener,
+    model: Arc<ServeModel>,
+    opts: ServeOpts,
+    max_conns: Option<usize>,
+    metrics: Option<MetricsLogger>,
+) -> Result<()> {
+    let queue = Arc::new(Queue::new(opts.queue_cap));
+    let stats = Arc::new(ServeStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut evaluators = Vec::new();
+    for _ in 0..opts.threads.max(1) {
+        let model = Arc::clone(&model);
+        let queue = Arc::clone(&queue);
+        let stats = Arc::clone(&stats);
+        let (mb, delay) = (opts.microbatch, opts.eval_delay);
+        evaluators.push(std::thread::spawn(move || {
+            evaluator_loop(&model, &queue, &stats, mb, delay);
+        }));
+    }
+
+    let reporter = metrics.map(|mut logger| {
+        let stats = Arc::clone(&stats);
+        let queue = Arc::clone(&queue);
+        let stop = Arc::clone(&stop);
+        let interval = opts.metrics_interval;
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                std::thread::sleep(interval);
+                let _ = logger.log_line(&stats.snapshot(queue.depth()).to_json());
+            }
+            // final snapshot so even sub-interval runs leave a line
+            let _ = logger.log_line(&stats.snapshot(queue.depth()).to_json());
+            let _ = logger.finish();
+        })
+    });
+
+    let mut handlers = Vec::new();
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream.context("accepting a serve connection")?;
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+        let model = Arc::clone(&model);
+        let queue = Arc::clone(&queue);
+        let stats = Arc::clone(&stats);
+        let (max_batch, dl) = (opts.max_batch, opts.deadlines);
+        let handle = std::thread::spawn(move || {
+            if let Err(e) =
+                handle_client(stream, &model, &queue, &stats, max_batch, &dl)
+            {
+                eprintln!("serve: session with {peer} ended with an error: {e:#}");
+            }
+        });
+        if max_conns.is_some() {
+            handlers.push(handle);
+        }
+        served += 1;
+        if let Some(max) = max_conns {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    queue.shutdown();
+    for h in evaluators {
+        let _ = h.join();
+    }
+    stop.store(true, Ordering::Release);
+    if let Some(r) = reporter {
+        let _ = r.join();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// What one query came back as.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryReply {
+    /// Evaluated: one f64 per point, bit-for-bit the local forward.
+    Answer(Vec<f64>),
+    /// Gracefully rejected (saturation / oversize) with the server's
+    /// diagnostic; the connection remains usable.
+    Rejected(String),
+}
+
+/// A serve-protocol client: dial, handshake, then `query` (one
+/// outstanding) or `send_query`/`read_reply` (pipelined, match on id).
+pub struct ServeClient {
+    stream: TcpStream,
+    pub d: usize,
+    /// Largest batch the server advertised in its ACK.
+    pub max_batch: usize,
+    next_id: u64,
+}
+
+impl ServeClient {
+    /// Connect and handshake.  The HELLO carries empty family/method —
+    /// the generic-client wildcard — plus `d` and the architecture's
+    /// parameter count, which the server cross-checks.
+    pub fn connect(addr: &str, d: usize, dl: &Deadlines) -> Result<Self> {
+        let spec = JobSpec {
+            family: String::new(),
+            method: String::new(),
+            lambda_g: 0.0,
+            d,
+            n_params: Mlp::n_params_for(d),
+        };
+        let mut stream = connect_worker(addr, dl.connect)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(dl.handshake)).ok();
+        stream.set_write_timeout(Some(dl.handshake)).ok();
+        write_frame(&mut stream, TAG_HELLO, &encode_hello(&spec))
+            .context("sending the serve hello")?;
+        let (tag, payload) = read_frame(&mut stream).context("waiting for the serve ack")?;
+        match tag {
+            TAG_HELLO_ACK => {
+                let mut dec = Dec::new(&payload);
+                let tier = dec.str()?;
+                if tier != "serve" {
+                    bail!(
+                        "endpoint {addr} acked as {tier:?}, not a serve tier — \
+                         dialed a training worker?"
+                    );
+                }
+                let _family = dec.str()?;
+                let got_d = dec.u64()? as usize;
+                let _n_params = dec.u64()?;
+                let max_batch = dec.u64()? as usize;
+                if got_d != d {
+                    bail!("server acked d={got_d}, expected {d}");
+                }
+                stream.set_read_timeout(Some(dl.step)).ok();
+                stream.set_write_timeout(Some(dl.step)).ok();
+                Ok(ServeClient { stream, d, max_batch, next_id: 0 })
+            }
+            TAG_ERROR => {
+                let mut dec = Dec::new(&payload);
+                let msg = dec.str().unwrap_or("(unreadable error frame)");
+                bail!("server {addr} rejected the handshake: {msg}")
+            }
+            other => bail!("server {addr} sent unexpected frame tag {other} during handshake"),
+        }
+    }
+
+    /// Fire one `[n, d]` query without waiting; returns its id.
+    /// Pipelined replies may come back in any order.
+    pub fn send_query(&mut self, xs: &[f32]) -> Result<u64> {
+        assert_eq!(xs.len() % self.d, 0, "xs must be [n, d] row-major");
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut e = Enc::default();
+        e.u64(id);
+        e.u64((xs.len() / self.d) as u64);
+        e.f32s(xs);
+        write_frame(&mut self.stream, TAG_QUERY, &e.buf).context("sending a query")?;
+        Ok(id)
+    }
+
+    /// Read one ANSWER frame (any pipelined id).
+    pub fn read_reply(&mut self) -> Result<(u64, QueryReply)> {
+        let (tag, payload) = read_frame(&mut self.stream).context("waiting for an answer")?;
+        match tag {
+            TAG_ANSWER => Self::decode_answer(&payload),
+            TAG_ERROR => {
+                let mut dec = Dec::new(&payload);
+                let msg = dec.str().unwrap_or("(unreadable error frame)");
+                bail!("server error: {msg}")
+            }
+            other => bail!("expected an answer frame, got tag {other}"),
+        }
+    }
+
+    fn decode_answer(payload: &[u8]) -> Result<(u64, QueryReply)> {
+        let mut dec = Dec::new(payload);
+        let id = dec.u64()?;
+        let status = dec.u32()?;
+        match status {
+            ANSWER_OK => {
+                let mut values = Vec::new();
+                dec.f64s_into(&mut values)?;
+                Ok((id, QueryReply::Answer(values)))
+            }
+            ANSWER_REJECTED => Ok((id, QueryReply::Rejected(dec.str()?.to_string()))),
+            other => bail!("answer {id} carries unknown status {other}"),
+        }
+    }
+
+    /// One blocking round trip (no other queries outstanding).
+    pub fn query(&mut self, xs: &[f32]) -> Result<QueryReply> {
+        let id = self.send_query(xs)?;
+        let (got, reply) = self.read_reply()?;
+        if got != id {
+            bail!("answer id {got} does not match query id {id} — pipelined? use read_reply");
+        }
+        Ok(reply)
+    }
+
+    /// Fetch the server's observability snapshot (JSON).  Call with no
+    /// queries outstanding — the reply shares the stream.
+    pub fn stats(&mut self) -> Result<String> {
+        write_frame(&mut self.stream, TAG_STATS, &[]).context("sending a stats request")?;
+        let (tag, payload) = read_frame(&mut self.stream).context("waiting for stats")?;
+        if tag != TAG_STATS {
+            bail!("expected a stats frame, got tag {tag}");
+        }
+        let mut dec = Dec::new(&payload);
+        Ok(dec.str()?.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load generator
+// ---------------------------------------------------------------------------
+
+pub use crate::config::Arrival;
+
+/// Load-generator shape: `conns` connections, `requests` total queries
+/// of `batch` points each, either closed-loop (one outstanding per
+/// connection — measures capacity) or open-loop at `rate` queries/sec
+/// total (paced arrivals regardless of completions — measures behavior
+/// under offered load, the model that actually saturates the queue).
+pub struct LoadgenOpts {
+    pub addr: String,
+    pub d: usize,
+    pub arrival: Arrival,
+    /// Open-loop only: total offered queries/sec across connections.
+    pub rate: f64,
+    pub conns: usize,
+    /// Points per query.
+    pub batch: usize,
+    /// Total queries across all connections.
+    pub requests: usize,
+    pub seed: u64,
+    pub deadlines: Deadlines,
+}
+
+/// What a loadgen run measured.  `bitwise_ok` is the determinism gate:
+/// every answered query was compared bit-for-bit against a local
+/// [`ServeModel::eval`] when a verify model was supplied.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub sent: usize,
+    pub answered: usize,
+    pub rejected: usize,
+    pub wall_s: f64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Answered queries that were bitwise-verified (0 without a model).
+    pub bitwise_checked: usize,
+    pub bitwise_ok: bool,
+}
+
+impl LoadgenReport {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"sent\":{},\"answered\":{},\"rejected\":{},\"wall_s\":{:.3},\
+             \"qps\":{:.3},\"p50_ms\":{:.3},\"p95_ms\":{:.3},\"p99_ms\":{:.3},\
+             \"bitwise_checked\":{},\"bitwise_ok\":{}}}",
+            self.sent,
+            self.answered,
+            self.rejected,
+            self.wall_s,
+            self.qps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.bitwise_checked,
+            self.bitwise_ok
+        )
+    }
+}
+
+/// What one connection's worth of load measured.
+#[derive(Default)]
+struct ConnTally {
+    sent: usize,
+    answered: usize,
+    rejected: usize,
+    lat_us: Vec<u64>,
+    bitwise_checked: usize,
+    bitwise_bad: usize,
+}
+
+fn random_batch(rng: &mut Xoshiro256pp, n: usize, d: usize) -> Vec<f32> {
+    (0..n * d).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+}
+
+/// Bit-compare an answer against the local model; returns true when
+/// every value matches exactly.
+fn bits_match(expected: &[f64], got: &[f64]) -> bool {
+    expected.len() == got.len()
+        && expected.iter().zip(got).all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+fn closed_loop_conn(
+    opts: &LoadgenOpts,
+    conn_idx: usize,
+    n_requests: usize,
+    verify: Option<&ServeModel>,
+) -> Result<ConnTally> {
+    let mut client = ServeClient::connect(&opts.addr, opts.d, &opts.deadlines)?;
+    let mut rng = Xoshiro256pp::new(opts.seed ^ (0x9E37 + conn_idx as u64));
+    let mut tally = ConnTally::default();
+    for _ in 0..n_requests {
+        let xs = random_batch(&mut rng, opts.batch, opts.d);
+        let t0 = Instant::now();
+        let reply = client.query(&xs)?;
+        tally.sent += 1;
+        match reply {
+            QueryReply::Answer(values) => {
+                tally.lat_us.push(t0.elapsed().as_micros() as u64);
+                tally.answered += 1;
+                if let Some(model) = verify {
+                    tally.bitwise_checked += 1;
+                    if !bits_match(&model.eval(&xs), &values) {
+                        tally.bitwise_bad += 1;
+                    }
+                }
+            }
+            QueryReply::Rejected(_) => tally.rejected += 1,
+        }
+    }
+    Ok(tally)
+}
+
+fn open_loop_conn(
+    opts: &LoadgenOpts,
+    conn_idx: usize,
+    n_requests: usize,
+    verify: Option<&ServeModel>,
+) -> Result<ConnTally> {
+    let mut client = ServeClient::connect(&opts.addr, opts.d, &opts.deadlines)?;
+    let mut reader = client.stream.try_clone().context("cloning the reply stream")?;
+    let mut rng = Xoshiro256pp::new(opts.seed ^ (0x9E37 + conn_idx as u64));
+    // id -> (sent-at, expected bits when verifying)
+    let pending: Mutex<HashMap<u64, (Instant, Option<Vec<f64>>)>> = Mutex::new(HashMap::new());
+    let sent = AtomicUsize::new(0);
+    let sender_done = AtomicBool::new(false);
+    let per_conn_rate = (opts.rate / opts.conns.max(1) as f64).max(1e-9);
+    let interval = Duration::from_secs_f64(1.0 / per_conn_rate);
+    let mut tally = ConnTally::default();
+    std::thread::scope(|scope| -> Result<()> {
+        let reader_thread = scope.spawn(|| -> Result<ConnTally> {
+            let mut t = ConnTally::default();
+            loop {
+                if sender_done.load(Ordering::Acquire)
+                    && t.answered + t.rejected >= sent.load(Ordering::Acquire)
+                {
+                    return Ok(t);
+                }
+                let (tag, payload) =
+                    read_frame(&mut reader).context("waiting for an open-loop answer")?;
+                if tag == TAG_STATS {
+                    continue; // the sender's end-of-run nudge: re-check above
+                }
+                if tag != TAG_ANSWER {
+                    bail!("expected an answer frame, got tag {tag}");
+                }
+                let (id, reply) = ServeClient::decode_answer(&payload)?;
+                let Some((t0, expected)) = pending.lock().expect("pending lock").remove(&id)
+                else {
+                    bail!("answer for unknown query id {id}");
+                };
+                match reply {
+                    QueryReply::Answer(values) => {
+                        t.lat_us.push(t0.elapsed().as_micros() as u64);
+                        t.answered += 1;
+                        if let Some(expected) = expected {
+                            t.bitwise_checked += 1;
+                            if !bits_match(&expected, &values) {
+                                t.bitwise_bad += 1;
+                            }
+                        }
+                    }
+                    QueryReply::Rejected(_) => t.rejected += 1,
+                }
+            }
+        });
+        let start = Instant::now();
+        for i in 0..n_requests {
+            let due = start + interval.mul_f64(i as f64);
+            if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+            let xs = random_batch(&mut rng, opts.batch, opts.d);
+            let expected = verify.map(|m| m.eval(&xs));
+            // register before sending: the reader may win the race
+            let id = client.next_id;
+            pending.lock().expect("pending lock").insert(id, (Instant::now(), expected));
+            match client.send_query(&xs) {
+                Ok(sent_id) => debug_assert_eq!(sent_id, id),
+                Err(e) => {
+                    pending.lock().expect("pending lock").remove(&id);
+                    sender_done.store(true, Ordering::Release);
+                    return Err(e);
+                }
+            }
+            sent.fetch_add(1, Ordering::Release);
+        }
+        sender_done.store(true, Ordering::Release);
+        // Wake the reader if it blocked on read *before* seeing the
+        // done flag: the stats reply is one guaranteed frame after the
+        // flag flips, closing the check-then-block race.
+        let _ = write_frame(&mut client.stream, TAG_STATS, &[]);
+        tally = reader_thread.join().expect("open-loop reader panicked")?;
+        tally.sent = sent.load(Ordering::Acquire);
+        Ok(())
+    })?;
+    Ok(tally)
+}
+
+/// Run the load generator against a serve endpoint.  With
+/// `verify: Some(model)`, every answered query is compared bit-for-bit
+/// against the local forward — the report's `bitwise_ok` is the serve
+/// tier's determinism gate.
+pub fn run_loadgen(opts: &LoadgenOpts, verify: Option<&ServeModel>) -> Result<LoadgenReport> {
+    if opts.conns == 0 || opts.requests == 0 {
+        bail!("loadgen needs at least one connection and one request");
+    }
+    let start = Instant::now();
+    let tallies: Vec<Result<ConnTally>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..opts.conns {
+            // split `requests` across connections, remainder to the low ranks
+            let n_req = opts.requests / opts.conns + usize::from(c < opts.requests % opts.conns);
+            handles.push(scope.spawn(move || match opts.arrival {
+                Arrival::Closed => closed_loop_conn(opts, c, n_req, verify),
+                Arrival::Open => open_loop_conn(opts, c, n_req, verify),
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("loadgen connection panicked")).collect()
+    });
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+    let mut total = ConnTally::default();
+    for tally in tallies {
+        let t = tally?;
+        total.sent += t.sent;
+        total.answered += t.answered;
+        total.rejected += t.rejected;
+        total.lat_us.extend(t.lat_us);
+        total.bitwise_checked += t.bitwise_checked;
+        total.bitwise_bad += t.bitwise_bad;
+    }
+    total.lat_us.sort_unstable();
+    Ok(LoadgenReport {
+        sent: total.sent,
+        answered: total.answered,
+        rejected: total.rejected,
+        wall_s,
+        qps: total.answered as f64 / wall_s,
+        p50_ms: percentile_ms(&total.lat_us, 0.50),
+        p95_ms: percentile_ms(&total.lat_us, 0.95),
+        p99_ms: percentile_ms(&total.lat_us, 0.99),
+        bitwise_checked: total.bitwise_checked,
+        bitwise_ok: total.bitwise_bad == 0,
+    })
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+    use std::io::Write;
+
+    fn test_model(d: usize, seed: u64) -> Arc<ServeModel> {
+        let mlp = Mlp::init(d, &mut Xoshiro256pp::new(seed));
+        Arc::new(ServeModel::new(mlp, "sg2", "probe").unwrap())
+    }
+
+    fn fast_deadlines() -> Deadlines {
+        Deadlines::resolve([Some(5), Some(5), Some(30)], None)
+    }
+
+    fn test_opts() -> ServeOpts {
+        ServeOpts {
+            deadlines: fast_deadlines(),
+            threads: 2,
+            microbatch: 4,
+            queue_cap: 64,
+            max_batch: 64,
+            metrics_interval: Duration::from_millis(20),
+            eval_delay: None,
+        }
+    }
+
+    /// Bind loopback, spawn the serve loop for `max_conns` sessions,
+    /// return the address and the join handle.
+    fn spawn_serve(
+        model: Arc<ServeModel>,
+        opts: ServeOpts,
+        max_conns: usize,
+        metrics: Option<MetricsLogger>,
+    ) -> (String, std::thread::JoinHandle<Result<()>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            serve_queries(listener, model, opts, Some(max_conns), metrics)
+        });
+        (addr, handle)
+    }
+
+    fn points(d: usize, n: usize, seed: u64) -> Vec<f32> {
+        random_batch(&mut Xoshiro256pp::new(seed), n, d)
+    }
+
+    /// End-to-end loopback: served answers are bitwise the local
+    /// forward, microbatch boundaries included (microbatch=4, n=9
+    /// spans three slices), STATS reflects the traffic, and the
+    /// metrics stream leaves parseable snapshot lines.
+    #[test]
+    fn serve_loopback_answers_match_local_forward_bitwise() {
+        let d = 6;
+        let model = test_model(d, 42);
+        let dir = std::env::temp_dir().join(format!("hte-serve-e2e-{}", std::process::id()));
+        let metrics_path = dir.join("serve.jsonl");
+        let metrics = MetricsLogger::to_file(&metrics_path).unwrap();
+        let (addr, handle) = spawn_serve(Arc::clone(&model), test_opts(), 1, Some(metrics));
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        assert_eq!(client.max_batch, 64);
+        for (i, n) in [1usize, 5, 9].into_iter().enumerate() {
+            let xs = points(d, n, 100 + i as u64);
+            match client.query(&xs).unwrap() {
+                QueryReply::Answer(values) => {
+                    let expected = model.eval(&xs);
+                    assert_eq!(values.len(), n);
+                    for (j, (e, g)) in expected.iter().zip(&values).enumerate() {
+                        assert_eq!(e.to_bits(), g.to_bits(), "n={n} point {j} diverged");
+                    }
+                }
+                QueryReply::Rejected(why) => panic!("unsaturated server rejected: {why}"),
+            }
+        }
+        let stats = client.stats().unwrap();
+        let parsed = Value::parse(&stats).unwrap();
+        assert_eq!(parsed.get("queries").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(parsed.get("points").unwrap().as_usize().unwrap(), 15);
+        assert_eq!(parsed.get("rejected").unwrap().as_usize().unwrap(), 0);
+        drop(client);
+        handle.join().unwrap().unwrap();
+        let text = std::fs::read_to_string(&metrics_path).unwrap();
+        let last = text.trim().lines().last().expect("metrics stream left no snapshot");
+        let snap = Value::parse(last).unwrap();
+        assert_eq!(snap.get("queries").unwrap().as_usize().unwrap(), 3);
+        assert!(snap.get("qps").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A mismatched HELLO is rejected during the handshake with the
+    /// offending field named — wrong d and wrong family both.
+    #[test]
+    fn serve_rejects_mismatched_hello_by_name() {
+        let model = test_model(6, 43);
+        let (addr, handle) = spawn_serve(Arc::clone(&model), test_opts(), 2, None);
+        let dl = fast_deadlines();
+        // wrong d: the client constructor itself surfaces the server error
+        let err = ServeClient::connect(&addr, 8, &dl).unwrap_err().to_string();
+        assert!(err.contains("d=8"), "{err}");
+        assert!(err.contains("d=6"), "{err}");
+        // wrong family, right dims: hand-rolled hello
+        let spec = JobSpec {
+            family: "bihar".into(),
+            method: String::new(),
+            lambda_g: 0.0,
+            d: 6,
+            n_params: Mlp::n_params_for(6),
+        };
+        let mut stream = connect_worker(&addr, dl.connect).unwrap();
+        stream.set_read_timeout(Some(dl.handshake)).ok();
+        write_frame(&mut stream, TAG_HELLO, &encode_hello(&spec)).unwrap();
+        let (tag, payload) = read_frame(&mut stream).unwrap();
+        assert_eq!(tag, TAG_ERROR);
+        let msg = Dec::new(&payload).str().unwrap().to_string();
+        assert!(msg.contains("bihar"), "{msg}");
+        assert!(msg.contains("sg2"), "{msg}");
+        drop(stream);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Protocol violations are fatal to the connection: garbage magic,
+    /// an absurd length word, and a mis-sized query payload each drop
+    /// the session (the last one with a named ERROR first).
+    #[test]
+    fn serve_drops_malformed_and_oversized_frames() {
+        let d = 4;
+        let model = test_model(d, 44);
+        let (addr, handle) = spawn_serve(Arc::clone(&model), test_opts(), 3, None);
+        let dl = fast_deadlines();
+        // 1: garbage magic after a good handshake
+        {
+            let mut client = ServeClient::connect(&addr, d, &dl).unwrap();
+            let mut head = [0u8; 13];
+            head[..4].copy_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+            head[4] = TAG_QUERY;
+            client.stream.write_all(&head).unwrap();
+            client.stream.flush().unwrap();
+            // server drops us: the next read sees EOF (an error)
+            assert!(client.read_reply().is_err());
+        }
+        // 2: absurd length word (> MAX_FRAME)
+        {
+            let mut client = ServeClient::connect(&addr, d, &dl).unwrap();
+            let mut head = Vec::new();
+            head.extend_from_slice(&super::super::cluster::FRAME_MAGIC.to_le_bytes());
+            head.push(TAG_QUERY);
+            head.extend_from_slice(&(u64::MAX).to_le_bytes());
+            client.stream.write_all(&head).unwrap();
+            client.stream.flush().unwrap();
+            assert!(client.read_reply().is_err());
+        }
+        // 3: query claiming n=3 but shipping 2 points
+        {
+            let mut client = ServeClient::connect(&addr, d, &dl).unwrap();
+            let mut e = Enc::default();
+            e.u64(0);
+            e.u64(3);
+            e.f32s(&points(d, 2, 7));
+            write_frame(&mut client.stream, TAG_QUERY, &e.buf).unwrap();
+            let err = client.read_reply().unwrap_err().to_string();
+            assert!(err.contains("claims n=3"), "{err}");
+        }
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Saturation is answered, not dropped: with one slow evaluator
+    /// and a one-deep queue, a burst of pipelined queries gets a
+    /// status-1 rejection for the overflow and bit-exact answers for
+    /// the rest — every id accounted for, connection still usable.
+    #[test]
+    fn serve_saturation_rejects_gracefully_and_answers_the_rest() {
+        let d = 4;
+        let model = test_model(d, 45);
+        let opts = ServeOpts {
+            threads: 1,
+            queue_cap: 1,
+            eval_delay: Some(Duration::from_millis(50)),
+            ..test_opts()
+        };
+        let (addr, handle) = spawn_serve(Arc::clone(&model), opts, 1, None);
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        let total = 10usize;
+        let mut batches = Vec::new();
+        for i in 0..total {
+            let xs = points(d, 2, 200 + i as u64);
+            let id = client.send_query(&xs).unwrap();
+            batches.push((id, xs));
+        }
+        let (mut answered, mut rejected) = (0usize, 0usize);
+        for _ in 0..total {
+            let (id, reply) = client.read_reply().unwrap();
+            let (_, xs) = batches.iter().find(|(b, _)| *b == id).expect("unknown id");
+            match reply {
+                QueryReply::Answer(values) => {
+                    answered += 1;
+                    let expected = model.eval(xs);
+                    assert!(bits_match(&expected, &values), "answer {id} diverged");
+                }
+                QueryReply::Rejected(why) => {
+                    rejected += 1;
+                    assert!(why.contains("saturated"), "{why}");
+                }
+            }
+        }
+        assert!(rejected >= 1, "a 1-deep queue under a 10-query burst must reject");
+        assert!(answered >= 1, "the queued query must still answer");
+        assert_eq!(answered + rejected, total);
+        // the connection survived saturation: one more round trip works
+        let xs = points(d, 1, 999);
+        match client.query(&xs).unwrap() {
+            QueryReply::Answer(values) => assert!(bits_match(&model.eval(&xs), &values)),
+            QueryReply::Rejected(why) => panic!("post-saturation query rejected: {why}"),
+        }
+        drop(client);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// A connected-but-stalled client (half a frame header, then
+    /// silence) is shed by the handshake deadline and cannot wedge the
+    /// server: a well-behaved client connecting afterwards is served.
+    #[test]
+    fn serve_sheds_stalled_client_by_deadline() {
+        let d = 4;
+        let model = test_model(d, 46);
+        let opts = ServeOpts {
+            deadlines: Deadlines::resolve([Some(2), Some(1), Some(5)], None),
+            ..test_opts()
+        };
+        let (addr, handle) = spawn_serve(Arc::clone(&model), opts, 2, None);
+        // the staller: half a header, then nothing
+        let mut staller = connect_worker(&addr, Duration::from_secs(2)).unwrap();
+        staller.write_all(&[0x50, 0x45, 0x54, 0x48, TAG_HELLO]).unwrap();
+        staller.flush().unwrap();
+        // a healthy client right behind it is served normally
+        let dl = Deadlines::resolve([Some(2), Some(5), Some(5)], None);
+        let mut client = ServeClient::connect(&addr, d, &dl).unwrap();
+        let xs = points(d, 3, 300);
+        match client.query(&xs).unwrap() {
+            QueryReply::Answer(values) => assert!(bits_match(&model.eval(&xs), &values)),
+            QueryReply::Rejected(why) => panic!("rejected: {why}"),
+        }
+        drop(client);
+        drop(staller); // the deadline has long since shed it server-side
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Closed-loop loadgen: every request answered, every answer
+    /// bitwise-verified, throughput measured.
+    #[test]
+    fn serve_loadgen_closed_loop_is_bitwise_clean() {
+        let d = 5;
+        let model = test_model(d, 47);
+        let (addr, handle) = spawn_serve(Arc::clone(&model), test_opts(), 2, None);
+        let opts = LoadgenOpts {
+            addr,
+            d,
+            arrival: Arrival::Closed,
+            rate: 0.0,
+            conns: 2,
+            batch: 3,
+            requests: 8,
+            seed: 9,
+            deadlines: fast_deadlines(),
+        };
+        let report = run_loadgen(&opts, Some(&model)).unwrap();
+        assert_eq!(report.sent, 8);
+        assert_eq!(report.answered, 8);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.bitwise_checked, 8);
+        assert!(report.bitwise_ok, "served bits diverged from the local forward");
+        assert!(report.qps > 0.0);
+        handle.join().unwrap().unwrap();
+        // the report serializes to parseable JSON
+        let parsed = Value::parse(&report.to_json()).unwrap();
+        assert_eq!(parsed.get("answered").unwrap().as_usize().unwrap(), 8);
+        assert!(matches!(parsed.get("bitwise_ok").unwrap(), Value::Bool(true)));
+    }
+
+    /// Open-loop loadgen: paced arrivals with pipelined out-of-order
+    /// replies — every query accounted for (answered or rejected) and
+    /// every answer bitwise-verified.
+    #[test]
+    fn serve_loadgen_open_loop_accounts_for_every_query() {
+        let d = 5;
+        let model = test_model(d, 48);
+        let (addr, handle) = spawn_serve(Arc::clone(&model), test_opts(), 2, None);
+        let opts = LoadgenOpts {
+            addr,
+            d,
+            arrival: Arrival::Open,
+            rate: 400.0,
+            conns: 2,
+            batch: 2,
+            requests: 12,
+            seed: 10,
+            deadlines: fast_deadlines(),
+        };
+        let report = run_loadgen(&opts, Some(&model)).unwrap();
+        assert_eq!(report.sent, 12);
+        assert_eq!(report.answered + report.rejected, 12);
+        assert_eq!(report.bitwise_checked, report.answered);
+        assert!(report.bitwise_ok, "served bits diverged from the local forward");
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Percentiles and snapshot serialization: known latencies come
+    /// back at the right ranks, and the JSON parses.
+    #[test]
+    fn serve_snapshot_percentiles_and_json() {
+        let stats = ServeStats::new();
+        for ms in 1..=100u64 {
+            stats.record_answer(4, Duration::from_millis(ms));
+        }
+        stats.record_rejection();
+        let snap = stats.snapshot(3);
+        assert_eq!(snap.queries, 100);
+        assert_eq!(snap.points, 400);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.queue_depth, 3);
+        assert!((snap.p50_ms - 50.0).abs() <= 1.0, "p50 {}", snap.p50_ms);
+        assert!((snap.p95_ms - 95.0).abs() <= 1.0, "p95 {}", snap.p95_ms);
+        assert!((snap.p99_ms - 99.0).abs() <= 1.0, "p99 {}", snap.p99_ms);
+        let parsed = Value::parse(&snap.to_json()).unwrap();
+        assert_eq!(parsed.get("queries").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(parsed.get("queue_depth").unwrap().as_usize().unwrap(), 3);
+        // empty stats: percentiles are 0, not NaN/panic
+        assert_eq!(percentile_ms(&[], 0.99), 0.0);
+    }
+}

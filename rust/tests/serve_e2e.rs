@@ -1,0 +1,209 @@
+//! End-to-end serve tier across real process boundaries: train a tiny
+//! checkpoint with the CLI, spawn `hte-pinn serve` on it, and gate the
+//! served answers `to_bits` against a locally reconstructed
+//! [`ServeModel`] — both through the library client and through the
+//! `hte-pinn loadgen` CLI (whose `--resume` flag runs the same gate
+//! in-process and fails the run on any divergence).
+//!
+//! The full protocol matrix (handshake rejection, malformed frames,
+//! saturation, deadline shedding, open-loop accounting) runs against
+//! in-test loopback servers in `runtime::serve`'s unit tests; this
+//! file proves the guarantees survive the CLI entry points and real
+//! process isolation.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use hte_pinn::runtime::{Deadlines, QueryReply, ServeClient, ServeModel};
+use hte_pinn::util::json::Value;
+
+fn bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_hte-pinn"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hte-serve-e2e-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("creating the test temp dir");
+    dir
+}
+
+/// Train a tiny sg2 checkpoint (d=4, 3 epochs) through the CLI.
+fn train_checkpoint(dir: &Path) -> PathBuf {
+    let ckpt = dir.join("tiny.ckpt");
+    let status = Command::new(bin())
+        .args([
+            "train",
+            "--backend",
+            "native",
+            "--family",
+            "sg2",
+            "--method",
+            "probe",
+            "--d",
+            "4",
+            "--v",
+            "2",
+            "--epochs",
+            "3",
+            "--batch",
+            "4",
+            "--eval-points",
+            "0",
+            "--seed",
+            "1",
+            "--save",
+            ckpt.to_str().unwrap(),
+        ])
+        .status()
+        .expect("running hte-pinn train");
+    assert!(status.success(), "training the tiny checkpoint failed");
+    assert!(ckpt.exists(), "train --save left no checkpoint");
+    ckpt
+}
+
+/// A spawned `hte-pinn serve` child, killed on drop so a panicking
+/// test never leaks a listener process.
+struct ServeChild {
+    child: Child,
+    addr: String,
+}
+
+impl ServeChild {
+    fn spawn(ckpt: &Path) -> Self {
+        let mut child = Command::new(bin())
+            .args([
+                "serve",
+                "--resume",
+                ckpt.to_str().unwrap(),
+                "--listen",
+                "127.0.0.1:0",
+                "--threads",
+                "2",
+            ])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawning hte-pinn serve");
+        let stdout = BufReader::new(child.stdout.take().expect("serve child stdout"));
+        let mut addr = None;
+        for line in stdout.lines() {
+            let line = line.expect("reading serve child stdout");
+            if let Some(rest) = line.strip_prefix("listening on ") {
+                addr = Some(rest.trim().to_string());
+                break;
+            }
+        }
+        let addr = addr.expect("serve child never printed its address");
+        ServeChild { child, addr }
+    }
+}
+
+impl Drop for ServeChild {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn deadlines() -> Deadlines {
+    Deadlines::resolve([Some(5), Some(5), Some(30)], None)
+}
+
+fn points(d: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = hte_pinn::rng::Xoshiro256pp::new(seed);
+    (0..n * d).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+}
+
+/// A real `hte-pinn serve` process answers with exactly the bits a
+/// locally reconstructed model produces, and rejects a mismatched
+/// client handshake by name.
+#[test]
+fn serve_process_answers_match_local_model_bitwise() {
+    let dir = temp_dir("bits");
+    let ckpt = train_checkpoint(&dir);
+    let local = ServeModel::from_checkpoint(&ckpt).expect("rebuilding the checkpoint locally");
+    assert_eq!(local.d(), 4);
+    let server = ServeChild::spawn(&ckpt);
+
+    let mut client =
+        ServeClient::connect(&server.addr, 4, &deadlines()).expect("dialing the serve child");
+    for (i, n) in [1usize, 3, 7].into_iter().enumerate() {
+        let xs = points(4, n, 50 + i as u64);
+        match client.query(&xs).expect("query round trip") {
+            QueryReply::Answer(values) => {
+                let expected = local.eval(&xs);
+                assert_eq!(values.len(), n);
+                for (j, (e, g)) in expected.iter().zip(&values).enumerate() {
+                    assert_eq!(
+                        e.to_bits(),
+                        g.to_bits(),
+                        "served answer diverged from the local forward (n={n}, point {j})"
+                    );
+                }
+            }
+            QueryReply::Rejected(why) => panic!("unsaturated server rejected: {why}"),
+        }
+    }
+    let stats = client.stats().expect("stats round trip");
+    let parsed = Value::parse(&stats).expect("stats snapshot must be JSON");
+    assert_eq!(parsed.get("queries").unwrap().as_usize().unwrap(), 3);
+
+    // a client expecting a different dimension is turned away by name
+    let err = ServeClient::connect(&server.addr, 7, &deadlines())
+        .expect_err("a d=7 client must not handshake with a d=4 server")
+        .to_string();
+    assert!(err.contains("d=7"), "{err}");
+    assert!(err.contains("d=4"), "{err}");
+
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The `hte-pinn loadgen` CLI drives the serve child, bitwise-verifies
+/// every answer against `--resume`, and reports nonzero throughput —
+/// the exact invocation CI's smoke job runs.
+#[test]
+fn serve_loadgen_cli_reports_bitwise_ok_and_nonzero_qps() {
+    let dir = temp_dir("loadgen");
+    let ckpt = train_checkpoint(&dir);
+    let server = ServeChild::spawn(&ckpt);
+    let report_path = dir.join("loadgen.json");
+
+    let status = Command::new(bin())
+        .args([
+            "loadgen",
+            "--connect",
+            &server.addr,
+            "--d",
+            "4",
+            "--arrival",
+            "closed",
+            "--conns",
+            "2",
+            "--batch",
+            "3",
+            "--requests",
+            "10",
+            "--seed",
+            "2",
+            "--resume",
+            ckpt.to_str().unwrap(),
+            "--out",
+            report_path.to_str().unwrap(),
+        ])
+        .status()
+        .expect("running hte-pinn loadgen");
+    assert!(status.success(), "loadgen failed (bitwise divergence fails the run)");
+
+    let report = std::fs::read_to_string(&report_path).expect("loadgen --out report");
+    let parsed = Value::parse(report.trim()).expect("report must be JSON");
+    assert_eq!(parsed.get("sent").unwrap().as_usize().unwrap(), 10);
+    assert_eq!(parsed.get("answered").unwrap().as_usize().unwrap(), 10);
+    assert_eq!(parsed.get("rejected").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(parsed.get("bitwise_checked").unwrap().as_usize().unwrap(), 10);
+    assert!(matches!(parsed.get("bitwise_ok").unwrap(), Value::Bool(true)));
+    assert!(parsed.get("qps").unwrap().as_f64().unwrap() > 0.0);
+
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
