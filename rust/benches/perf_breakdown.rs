@@ -26,16 +26,24 @@
 //!   `to_bits` gate on loss + gradient vs the 1-thread run (the
 //!   executor-independence guarantee) and informational scaling times
 //!   (`rows_shard`).
+//! * **plan** (always available): eager tape execution vs compiled-plan
+//!   replay (DESIGN.md §12), one step per residual family at
+//!   d ∈ {10, 100} — a hard `to_bits` gate on loss + gradient between
+//!   the two modes, a ≥1.15x replay-speedup gate on the sg2/bihar d=10
+//!   rows, and the compiler's pass statistics (constant folding, CSE,
+//!   dead-adjoint elimination, arena footprint) in `rows_plan`.
 //! * **artifact** (`--features xla` + `artifacts/`): the L3 step split
 //!   into host-side stages vs XLA execution, so the coordinator's
 //!   overhead budget (<10% of step time, DESIGN.md §8) is verifiable.
 
+use hte_pinn::autodiff::{force_plan_mode, plan_mode, PlanMode, PlanStats, Tape};
 use hte_pinn::coordinator::{problem_for, rss_mb};
 use hte_pinn::memmodel;
 use hte_pinn::nn::{
-    bihar_residual_loss_reference, default_threads, gpinn_residual_loss_reference,
-    hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, residual_op_for,
-    GpinnResidual, Mlp, NativeBatch, NativeEngine, CHUNK_POINTS,
+    bihar_residual_loss_reference, default_residual_op, default_threads,
+    gpinn_residual_loss_reference, hte_residual_loss_and_grad_pairgrid,
+    hte_residual_loss_reference, plan_key_for, residual_op_for, shard_loss_grad, GpinnResidual,
+    Mlp, NativeBatch, NativeEngine, ResidualOp, UnbiasedTrace, CHUNK_POINTS,
 };
 use hte_pinn::pde::{Domain, DomainSampler, PdeProblem};
 use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
@@ -510,6 +518,145 @@ fn shard_section(report: &mut BenchReport) -> Vec<ShardRow> {
     rows
 }
 
+/// One eager-vs-compiled-plan comparison for a residual family
+/// (DESIGN.md §12): full-step timings (the plans-on warmup compiles, so
+/// the timed calls are pure replay), a hard `to_bits` gate on loss +
+/// gradient between the two modes, plus the compiled plan's pass
+/// statistics (node counts before/after CSE + dead-adjoint elimination,
+/// fixed-arena vs pooled-eager footprint).
+struct PlanRow {
+    family: &'static str,
+    d: usize,
+    v: usize,
+    n: usize,
+    eager_ms: f64,
+    plan_ms: f64,
+    bitwise_exact: bool,
+    stats: PlanStats,
+    /// Row carries the ≥1.15x replay-speedup gate (sg2 / bihar at the
+    /// overhead-dominated d=10 shape; larger d is informational).
+    gated: bool,
+}
+
+fn plan_case(
+    report: &mut BenchReport,
+    family: &'static str,
+    d: usize,
+    v: usize,
+    n: usize,
+    gated: bool,
+) -> PlanRow {
+    use hte_pinn::runtime::ShardPlan;
+
+    let problem_name = match family {
+        "unbiased" | "gpinn" => "sg2",
+        other => other,
+    };
+    let mut rng = Xoshiro256pp::new(23 + d as u64);
+    let mlp = Mlp::init(d, &mut rng);
+    let problem = problem_for(problem_name, d).expect(problem_name);
+    let domain = if family == "bihar" { Domain::Annulus } else { Domain::UnitBall };
+    let mut sampler = DomainSampler::new(domain, d, rng.fork(1));
+    let xs = sampler.batch(n);
+    let rows_v = if family == "unbiased" { 2 * v } else { v };
+    let mut probes = vec![0.0f32; rows_v * d];
+    if family == "bihar" {
+        Normal::new().fill_f32(&mut rng, &mut probes);
+    } else {
+        fill_rademacher(&mut rng, &mut probes);
+    }
+    let mut coeff = vec![0.0f32; problem.n_coeff()];
+    Normal::new().fill_f32(&mut rng, &mut coeff);
+    let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v: rows_v };
+    let gpinn_op = GpinnResidual { lambda: 10.0 };
+    let op: &dyn ResidualOp = match family {
+        "gpinn" => &gpinn_op,
+        "unbiased" => &UnbiasedTrace,
+        _ => default_residual_op(problem.as_ref()),
+    };
+    let tag = format!("{family}/d{d}-v{rows_v}-n{n}");
+
+    let prior = plan_mode();
+    // Eager baseline — the HTE_PLAN=off path.
+    force_plan_mode(PlanMode::Off);
+    let mut engine = NativeEngine::new(1);
+    let mut grad = Vec::new();
+    let eager = time_fn(&format!("plan-step/eager/{tag}"), 2, 10, || {
+        std::hint::black_box(
+            engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap(),
+        );
+    });
+    report.push(eager.clone());
+    let loss_eager =
+        engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap();
+    let grad_eager = grad.clone();
+
+    // Compiled replay: the warmup calls record + compile, so every
+    // timed call runs the two flat instruction loops over the arena.
+    force_plan_mode(PlanMode::On);
+    let mut engine = NativeEngine::new(1);
+    let plan = time_fn(&format!("plan-step/replay/{tag}"), 2, 10, || {
+        std::hint::black_box(
+            engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap(),
+        );
+    });
+    report.push(plan.clone());
+    let loss_plan =
+        engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap();
+    let mut bitwise_exact = loss_plan.to_bits() == loss_eager.to_bits()
+        && grad.len() == grad_eager.len()
+        && grad.iter().zip(&grad_eager).all(|(a, b)| a.to_bits() == b.to_bits());
+
+    // Per-shard probe on a standalone tape: shard 0 eager, then a
+    // compile call and a pure-replay call — replay bits must match
+    // eager bits — and the compiled plan's pass statistics.
+    let shard_plan = ShardPlan::for_batch(n);
+    let shard0 = &shard_plan.shards()[0];
+    let mut sgrad = Vec::new();
+    force_plan_mode(PlanMode::Off);
+    let mut tape = Tape::new();
+    let l0 = shard_loss_grad(&mut tape, &mlp, op, problem.as_ref(), &batch, shard0, &mut sgrad);
+    let sgrad_eager = sgrad.clone();
+    force_plan_mode(PlanMode::On);
+    let mut tape = Tape::new();
+    let _ = shard_loss_grad(&mut tape, &mlp, op, problem.as_ref(), &batch, shard0, &mut sgrad);
+    let l1 = shard_loss_grad(&mut tape, &mlp, op, problem.as_ref(), &batch, shard0, &mut sgrad);
+    bitwise_exact = bitwise_exact
+        && l1.to_bits() == l0.to_bits()
+        && sgrad.len() == sgrad_eager.len()
+        && sgrad.iter().zip(&sgrad_eager).all(|(a, b)| a.to_bits() == b.to_bits());
+    let key = plan_key_for(op, &mlp, &batch, shard0.nc);
+    let stats = tape.plan_stats(&key).expect("shard 0 plan compiled");
+    force_plan_mode(prior);
+
+    PlanRow {
+        family,
+        d,
+        v: rows_v,
+        n,
+        eager_ms: eager.mean_s * 1e3,
+        plan_ms: plan.mean_s * 1e3,
+        bitwise_exact,
+        stats,
+        gated,
+    }
+}
+
+/// §12 rows: eager tape execution vs compiled-plan replay, one step per
+/// residual family at d ∈ {10, 100}.
+fn plan_section(report: &mut BenchReport) -> Vec<PlanRow> {
+    let mut rows = Vec::new();
+    for d in [10usize, 100] {
+        let gated = d == 10;
+        rows.push(plan_case(report, "sg2", d, 16, 16, gated));
+        rows.push(plan_case(report, "gpinn", d, 8, 16, false));
+        rows.push(plan_case(report, "unbiased", d, 8, 16, false));
+        rows.push(plan_case(report, "ac2", d, 16, 16, false));
+        rows.push(plan_case(report, "bihar", d, 8, 16, gated));
+    }
+    rows
+}
+
 /// One simd-vs-scalar comparison: a matmul variant or a full engine
 /// step, timed at the forced-scalar and the dispatched level, with a
 /// bitwise output comparison (the no-FMA / lane-independence gate).
@@ -686,6 +833,7 @@ fn write_bench_json(
     rows_mm: &[MatmulRow],
     rows_gp: &[GpinnRow],
     rows_shard: &[ShardRow],
+    rows_plan: &[PlanRow],
 ) {
     let json_rows: Vec<Value> = rows
         .iter()
@@ -774,6 +922,33 @@ fn write_bench_json(
             ])
         })
         .collect();
+    let json_rows_plan: Vec<Value> = rows_plan
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("family", s(r.family)),
+                ("d", num(r.d as f64)),
+                ("v", num(r.v as f64)),
+                ("n", num(r.n as f64)),
+                ("eager_ms", num(r.eager_ms)),
+                ("plan_ms", num(r.plan_ms)),
+                ("speedup_vs_eager", num(r.eager_ms / r.plan_ms.max(1e-9))),
+                ("bitwise_exact", Value::Bool(r.bitwise_exact)),
+                ("speedup_gated", Value::Bool(r.gated)),
+                ("nodes_recorded", num(r.stats.nodes as f64)),
+                ("fwd_instrs", num(r.stats.fwd_instrs as f64)),
+                ("bwd_instrs", num(r.stats.bwd_instrs as f64)),
+                ("bwd_nodes_eager", num(r.stats.bwd_nodes_eager as f64)),
+                ("bwd_nodes_plan", num(r.stats.bwd_nodes_plan as f64)),
+                ("const_folded", num(r.stats.folded as f64)),
+                ("cse_merged", num(r.stats.cse_merged as f64)),
+                ("fwd_dead", num(r.stats.fwd_dead as f64)),
+                ("fwd_slots", num(r.stats.fwd_slots as f64)),
+                ("arena_bytes", num(r.stats.arena_bytes as f64)),
+                ("eager_bytes", num(r.stats.eager_bytes as f64)),
+            ])
+        })
+        .collect();
     let json_rows_simd: Vec<Value> = rows_simd
         .iter()
         .map(|r| {
@@ -835,6 +1010,19 @@ fn write_bench_json(
                run (the executor-independence guarantee), step_ms is informational"),
         ),
         ("rows_shard", Value::Arr(json_rows_shard)),
+        (
+            "plan",
+            s("eager tape execution vs compiled-plan replay (DESIGN.md §12), one step \
+               per residual family at d in {10, 100}: bitwise_exact gates loss + \
+               gradient to_bits equality between the two modes (plus a per-shard \
+               pure-replay probe) and is never waivable; rows with speedup_gated must \
+               reach speedup_vs_eager >= 1.15 (sg2 / bihar at the overhead-dominated \
+               d=10 shape — larger d is kernel-bound and informational); node counts \
+               record what constant folding, CSE and dead-adjoint elimination removed, \
+               and arena_bytes vs eager_bytes the fixed-arena footprint vs the pooled \
+               eager graph"),
+        ),
+        ("rows_plan", Value::Arr(json_rows_plan)),
     ]);
     let path = "BENCH_native.json";
     match std::fs::write(path, doc.to_json()) {
@@ -909,6 +1097,7 @@ fn main() {
     let rows4 = order4_section(&mut report);
     let rows_gp = gpinn_section(&mut report);
     let rows_shard = shard_section(&mut report);
+    let rows_plan = plan_section(&mut report);
     let rows = native_section(&mut report);
     println!("  simd dispatch level: {}", simd_level_used.name());
     for r in &rows_simd {
@@ -983,6 +1172,29 @@ fn main() {
             r.backend, r.parallelism, r.step_ms, r.bitwise_exact
         );
     }
+    for r in &rows_plan {
+        println!(
+            "  plan-step {} d{} v{} n{}: eager {:.3} ms -> replay {:.3} ms ({:.2}x), \
+             bitwise exact: {}, nodes {} -> fwd {} / bwd {} (fold {}, cse {}, dead {}), \
+             arena {}B vs eager {}B",
+            r.family,
+            r.d,
+            r.v,
+            r.n,
+            r.eager_ms,
+            r.plan_ms,
+            r.eager_ms / r.plan_ms.max(1e-9),
+            r.bitwise_exact,
+            r.stats.nodes,
+            r.stats.fwd_instrs,
+            r.stats.bwd_nodes_plan,
+            r.stats.folded,
+            r.stats.cse_merged,
+            r.stats.fwd_dead,
+            r.stats.arena_bytes,
+            r.stats.eager_bytes
+        );
+    }
     write_bench_json(
         simd_level_used,
         &rows_simd,
@@ -991,6 +1203,7 @@ fn main() {
         &rows_mm,
         &rows_gp,
         &rows_shard,
+        &rows_plan,
     );
     #[cfg(feature = "xla")]
     artifact_section(&mut report);
@@ -1086,6 +1299,47 @@ fn main() {
                 r.backend, r.parallelism
             );
             failed = true;
+        }
+    }
+    for r in &rows_plan {
+        // the replay-equivalence invariant is never waivable: compiled
+        // plans must produce the exact bits of the eager tape
+        if !r.bitwise_exact {
+            eprintln!(
+                "FAIL: plan replay {} d{} v{} n{} is not bitwise-exact vs eager tape \
+                 execution",
+                r.family, r.d, r.v, r.n
+            );
+            failed = true;
+        }
+        // CSE + dead-adjoint elimination must actually shrink the
+        // instruction streams, or the compiler is a no-op
+        if r.stats.fwd_instrs >= r.stats.nodes || r.stats.bwd_nodes_plan > r.stats.bwd_nodes_eager
+        {
+            eprintln!(
+                "FAIL: plan {} d{} v{} n{}: no node reduction (nodes {} -> fwd {}, \
+                 bwd {} -> {})",
+                r.family,
+                r.d,
+                r.v,
+                r.n,
+                r.stats.nodes,
+                r.stats.fwd_instrs,
+                r.stats.bwd_nodes_eager,
+                r.stats.bwd_nodes_plan
+            );
+            failed = true;
+        }
+        if r.gated && enforce_speed {
+            let speedup = r.eager_ms / r.plan_ms.max(1e-9);
+            if speedup < 1.15 {
+                eprintln!(
+                    "FAIL: plan replay {} d{} v{} n{}: {speedup:.2}x < 1.15x vs eager \
+                     (set HTE_BENCH_NO_SPEEDUP_GATE=1 to report without enforcing)",
+                    r.family, r.d, r.v, r.n
+                );
+                failed = true;
+            }
         }
     }
     if let Some(gate) = rows.iter().find(|r| r.d == 100 && r.v == 16 && r.n == 16) {

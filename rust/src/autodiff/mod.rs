@@ -29,6 +29,12 @@
 
 use crate::tensor::{matmul_acc, matmul_nt_acc, matmul_tn_acc, simd, BufferPool, Tensor};
 
+mod plan;
+
+pub use plan::{
+    force_plan_mode, plan_enabled, plan_mode, plan_mode_guard, PlanKey, PlanMode, PlanStats,
+};
+
 /// Index of a node on the tape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Var(pub usize);
@@ -84,10 +90,33 @@ struct Node {
 }
 
 /// A linear tape of operations; gradients flow backwards over it.
+///
+/// Plan mode (DESIGN.md §12): the tape doubles as the recorder for the
+/// plan compiler.  After an eager build, [`Tape::compile_plan`] lowers
+/// the recorded graph into a [`plan::Plan`] cached per [`PlanKey`];
+/// [`Tape::begin_replay`] then puts the tape into *replay* — every
+/// builder call skips node construction, verifies it matches the
+/// recorded op kind, binds fresh leaf data into the plan's arena, and
+/// [`Tape::replay_run`] executes the two flat instruction loops.
 #[derive(Default)]
 pub struct Tape {
     nodes: Vec<Node>,
     pool: BufferPool,
+    /// Node ids created by [`Tape::zeros`] — the only leaves whose
+    /// values are constant across replays (constant-folding roots).
+    zero_leaves: Vec<usize>,
+    plans: plan::PlanCache,
+    active: Option<ActiveReplay>,
+}
+
+/// Cursor state while a recorded graph is replayed through a plan.
+struct ActiveReplay {
+    /// Index into `plans.entries` (stable: no insertion during replay).
+    entry: usize,
+    /// Next node id the builder sequence will claim.
+    cursor: usize,
+    /// Next entry of the plan's bind-slot list.
+    bind_cursor: usize,
 }
 
 /// Get (allocating a zeroed tensor on first touch) the gradient slot for
@@ -119,12 +148,21 @@ impl Tape {
     }
 
     pub fn value(&self, v: Var) -> &Tensor {
+        // During replay the graph is not materialized; serve per-node
+        // shape stubs (correct shape, empty data) so structural reads
+        // (shapes / numel) work and any data read fails loudly instead
+        // of seeing stale bytes.
+        if let Some(ar) = &self.active {
+            return &self.plans.entries[ar.entry].1.stubs[v.0];
+        }
         &self.nodes[v.0].value
     }
 
     /// Drop all nodes, recycling their buffers into the workspace pool.
     /// The next graph built on this tape reuses them.
     pub fn reset(&mut self) {
+        self.active = None;
+        self.zero_leaves.clear();
         for node in self.nodes.drain(..) {
             self.pool.give(node.value.data);
         }
@@ -150,31 +188,49 @@ impl Tape {
 
     /// Differentiable input (a leaf whose gradient we want).
     pub fn input(&mut self, value: Tensor) -> Var {
+        if self.active.is_some() {
+            return self.replay_bind_copy(&value.data);
+        }
         self.push(value, Op::Leaf)
     }
 
     /// Non-differentiable constant.
     pub fn constant(&mut self, value: Tensor) -> Var {
+        if self.active.is_some() {
+            return self.replay_bind_copy(&value.data);
+        }
         self.push(value, Op::Leaf)
     }
 
     /// Leaf copied from a host slice into a pooled buffer.
     pub fn leaf_from_slice(&mut self, shape: &[usize], data: &[f32]) -> Var {
+        if self.active.is_some() {
+            return self.replay_bind_copy(data);
+        }
         let mut t = self.alloc(shape);
         assert_eq!(t.data.len(), data.len(), "shape/data mismatch");
         t.data.copy_from_slice(data);
         self.push(t, Op::Leaf)
     }
 
-    /// All-zero constant leaf from the pool.
+    /// All-zero constant leaf from the pool.  These are the compiler's
+    /// constant-folding roots: their value is bit-stable across replays.
     pub fn zeros(&mut self, shape: &[usize]) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::KIND_ZERO);
+        }
         let t = self.alloc(shape);
-        self.push(t, Op::Leaf)
+        let v = self.push(t, Op::Leaf);
+        self.zero_leaves.push(v.0);
+        v
     }
 
     /// Constant leaf whose pooled (zeroed) buffer is filled by `fill` —
     /// host-side data lands on the tape without an intermediate `Vec`.
     pub fn leaf_with(&mut self, shape: &[usize], fill: impl FnOnce(&mut [f32])) -> Var {
+        if self.active.is_some() {
+            return self.replay_bind_fill(fill);
+        }
         let mut t = self.alloc(shape);
         fill(&mut t.data);
         self.push(t, Op::Leaf)
@@ -189,12 +245,18 @@ impl Tape {
         shape: &[usize],
         fill: impl FnOnce(&mut [Tensor]),
     ) -> Vec<Var> {
+        if self.active.is_some() {
+            return self.replay_bind_vec(count, shape, fill);
+        }
         let mut ts: Vec<Tensor> = (0..count).map(|_| self.alloc(shape)).collect();
         fill(&mut ts);
         ts.into_iter().map(|t| self.push(t, Op::Leaf)).collect()
     }
 
     pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::K_MATMUL);
+        }
         let (m, k) = (self.value(a).shape[0], self.value(a).shape[1]);
         let (k2, n) = (self.value(b).shape[0], self.value(b).shape[1]);
         assert_eq!(k, k2, "inner dims {k} vs {k2}");
@@ -212,6 +274,9 @@ impl Tape {
 
     /// Broadcast-add a [n] bias row to a [m, n] matrix.
     pub fn add_row(&mut self, a: Var, bias: Var) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::K_ADDROW);
+        }
         let shape = self.value(a).shape.clone();
         let n = shape[1];
         assert_eq!(self.value(bias).numel(), n);
@@ -225,6 +290,9 @@ impl Tape {
     }
 
     fn ew2(&mut self, a: Var, b: Var, op: Op, f: impl Fn(f32, f32) -> f32) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::kind_tag(&op));
+        }
         assert_eq!(self.value(a).shape, self.value(b).shape, "elementwise shape mismatch");
         let shape = self.value(a).shape.clone();
         let mut out = self.alloc(&shape);
@@ -240,6 +308,9 @@ impl Tape {
     }
 
     fn ew1(&mut self, a: Var, op: Op, f: impl Fn(f32) -> f32) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::kind_tag(&op));
+        }
         let shape = self.value(a).shape.clone();
         let mut out = self.alloc(&shape);
         for (o, &x) in out.data.iter_mut().zip(&self.nodes[a.0].value.data) {
@@ -288,6 +359,9 @@ impl Tape {
 
     /// Mean over all elements -> scalar.
     pub fn mean_all(&mut self, a: Var) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::K_MEAN_ALL);
+        }
         let n = self.value(a).numel() as f32;
         let s: f32 = self.value(a).data.iter().sum();
         let mut out = self.alloc(&[]);
@@ -297,6 +371,9 @@ impl Tape {
 
     /// Sum over all elements -> scalar.
     pub fn sum_all(&mut self, a: Var) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::K_SUM_ALL);
+        }
         let s: f32 = self.value(a).data.iter().sum();
         let mut out = self.alloc(&[]);
         out.data[0] = s;
@@ -306,6 +383,9 @@ impl Tape {
     /// Mean over consecutive groups of `group` rows: [g*k, 1] -> [k, 1].
     /// (Used to average the per-probe directional derivatives per point.)
     pub fn group_mean(&mut self, a: Var, group: usize) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::K_GROUP_MEAN);
+        }
         let total = self.value(a).numel();
         assert_eq!(total % group, 0);
         let k = total / group;
@@ -319,6 +399,9 @@ impl Tape {
     /// Repeat each row of a [n, c] matrix `group` times -> [n*group, c].
     /// Backward is the matching per-group row sum.
     pub fn broadcast_rows(&mut self, a: Var, group: usize) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::K_BROADCAST);
+        }
         let (n, c) = (self.value(a).shape[0], self.value(a).shape[1]);
         let mut out = self.alloc(&[n * group, c]);
         {
@@ -334,6 +417,9 @@ impl Tape {
     /// Repeat a whole [v, c] block `reps` times -> [reps*v, c].
     /// Backward sums the per-repetition blocks.
     pub fn tile_rows(&mut self, a: Var, reps: usize) -> Var {
+        if self.active.is_some() {
+            return self.replay_advance(plan::K_TILE);
+        }
         let (v, c) = (self.value(a).shape[0], self.value(a).shape[1]);
         let mut out = self.alloc(&[reps * v, c]);
         {
@@ -365,6 +451,23 @@ impl Tape {
     pub fn tanh_jet(&mut self, z: &[Var], group: usize) -> Vec<Var> {
         let order = z.len() - 1;
         assert!((1..=4).contains(&order), "tanh jet supports orders 1..=4, got {order}");
+        if self.active.is_some() {
+            // The fused jet is order+1 consecutive recorded nodes:
+            // t0 then o1..o_order.
+            let mut result = Vec::with_capacity(order + 1);
+            result.push(self.replay_advance(plan::K_JET_T0));
+            result.push(self.replay_advance(plan::K_JET_O1));
+            if order >= 2 {
+                result.push(self.replay_advance(plan::K_JET_O2));
+            }
+            if order >= 3 {
+                result.push(self.replay_advance(plan::K_JET_O3));
+            }
+            if order >= 4 {
+                result.push(self.replay_advance(plan::K_JET_O4));
+            }
+            return result;
+        }
         let (n, c) = (self.value(z[0]).shape[0], self.value(z[0]).shape[1]);
         let b = n * group;
         for (k, zk) in z.iter().enumerate().skip(1) {
@@ -442,11 +545,156 @@ impl Tape {
         [out[0], out[1], out[2], out[3], out[4]]
     }
 
+    // -- Plan compilation + replay (DESIGN.md §12) ------------------------
+
+    /// Claim the next recorded node during replay, checking the builder
+    /// sequence still matches the recorded op kind.
+    fn replay_advance(&mut self, kind: u8) -> Var {
+        let ar = self.active.as_mut().expect("not replaying");
+        let p = &self.plans.entries[ar.entry].1;
+        let idx = ar.cursor;
+        assert!(idx < p.kinds.len(), "replay overran the recorded graph");
+        assert_eq!(p.kinds[idx], kind, "replay op mismatch at node {idx}");
+        ar.cursor += 1;
+        Var(idx)
+    }
+
+    /// Bind a leaf during replay by copying `data` into its pinned slot.
+    fn replay_bind_copy(&mut self, data: &[f32]) -> Var {
+        let ar = self.active.as_mut().expect("not replaying");
+        let p = &mut self.plans.entries[ar.entry].1;
+        let idx = ar.cursor;
+        assert!(idx < p.kinds.len(), "replay overran the recorded graph");
+        assert_eq!(p.kinds[idx], plan::KIND_BIND, "replay op mismatch at node {idx}");
+        let slot = p.binds[ar.bind_cursor];
+        let buf = &mut p.fwd_arena[slot];
+        assert_eq!(buf.len(), data.len(), "replay bind length mismatch at node {idx}");
+        buf.copy_from_slice(data);
+        ar.cursor += 1;
+        ar.bind_cursor += 1;
+        Var(idx)
+    }
+
+    /// Bind a leaf during replay by running `fill` on its zeroed slot.
+    fn replay_bind_fill(&mut self, fill: impl FnOnce(&mut [f32])) -> Var {
+        let ar = self.active.as_mut().expect("not replaying");
+        let p = &mut self.plans.entries[ar.entry].1;
+        let idx = ar.cursor;
+        assert!(idx < p.kinds.len(), "replay overran the recorded graph");
+        assert_eq!(p.kinds[idx], plan::KIND_BIND, "replay op mismatch at node {idx}");
+        let slot = p.binds[ar.bind_cursor];
+        let buf = &mut p.fwd_arena[slot];
+        buf.fill(0.0);
+        fill(buf);
+        ar.cursor += 1;
+        ar.bind_cursor += 1;
+        Var(idx)
+    }
+
+    /// Bind `count` consecutive leaves during replay through the
+    /// `&mut [Tensor]` fill interface: the pinned slot buffers are moved
+    /// into temporary zeroed tensors, filled, and moved back.
+    fn replay_bind_vec(
+        &mut self,
+        count: usize,
+        shape: &[usize],
+        fill: impl FnOnce(&mut [Tensor]),
+    ) -> Vec<Var> {
+        let ar = self.active.as_mut().expect("not replaying");
+        let p = &mut self.plans.entries[ar.entry].1;
+        let first = ar.cursor;
+        let numel: usize = shape.iter().product();
+        let mut ts: Vec<Tensor> = Vec::with_capacity(count);
+        for k in 0..count {
+            let idx = first + k;
+            assert!(idx < p.kinds.len(), "replay overran the recorded graph");
+            assert_eq!(p.kinds[idx], plan::KIND_BIND, "replay op mismatch at node {idx}");
+            let slot = p.binds[ar.bind_cursor + k];
+            let mut data = std::mem::take(&mut p.fwd_arena[slot]);
+            assert_eq!(data.len(), numel, "replay bind length mismatch at node {idx}");
+            data.fill(0.0);
+            ts.push(Tensor { shape: shape.to_vec(), data });
+        }
+        fill(&mut ts);
+        for (k, t) in ts.into_iter().enumerate() {
+            p.fwd_arena[p.binds[ar.bind_cursor + k]] = t.data;
+        }
+        ar.cursor += count;
+        ar.bind_cursor += count;
+        (first..first + count).map(Var).collect()
+    }
+
+    /// Is a plan cached for this key on this tape?
+    pub fn has_plan(&self, key: &PlanKey) -> bool {
+        self.plans.position(key).is_some()
+    }
+
+    /// Compile-time stats of a cached plan (bench / test introspection).
+    pub fn plan_stats(&self, key: &PlanKey) -> Option<PlanStats> {
+        self.plans.position(key).map(|i| self.plans.entries[i].1.stats())
+    }
+
+    /// Compile the recorded graph (an eager build of `root` with
+    /// gradient leaves `params`, in pack order) into a cached plan.
+    pub fn compile_plan(&mut self, key: PlanKey, root: Var, params: &[Var]) {
+        assert!(self.active.is_none(), "cannot compile during replay");
+        let params: Vec<usize> = params.iter().map(|v| v.0).collect();
+        let p = plan::compile(&self.nodes, root.0, &params, &self.zero_leaves, true);
+        self.plans.insert(key, p);
+    }
+
+    /// Compile a forward-only plan (no backward schedule; serve path).
+    pub fn compile_forward_plan(&mut self, key: PlanKey, root: Var) {
+        assert!(self.active.is_none(), "cannot compile during replay");
+        let p = plan::compile(&self.nodes, root.0, &[], &self.zero_leaves, false);
+        self.plans.insert(key, p);
+    }
+
+    /// Enter replay mode for a cached plan.  The tape must be freshly
+    /// [`Tape::reset`]; the caller then re-runs the *same* builder
+    /// sequence that recorded the graph (binding fresh leaf data) and
+    /// finishes with [`Tape::replay_run`] / [`Tape::replay_forward`].
+    pub fn begin_replay(&mut self, key: &PlanKey) {
+        assert!(self.active.is_none(), "replay already active");
+        assert!(self.nodes.is_empty(), "reset the tape before replay");
+        let entry = self.plans.position(key).expect("no plan cached for key");
+        self.active = Some(ActiveReplay { entry, cursor: 0, bind_cursor: 0 });
+    }
+
+    /// Execute an active replay: forward + backward instruction loops,
+    /// pack parameter gradients into `grad_out` (appended, pack order),
+    /// return the scalar loss.  Bitwise-identical to the eager
+    /// build + [`Tape::backward`] it replaces.
+    pub fn replay_run(&mut self, root: Var, grad_out: &mut Vec<f32>) -> f64 {
+        let ar = self.active.take().expect("no active replay");
+        let p = &mut self.plans.entries[ar.entry].1;
+        assert_eq!(ar.cursor, p.kinds.len(), "replay did not cover the recorded graph");
+        assert_eq!(ar.bind_cursor, p.binds.len(), "replay bound fewer leaves than recorded");
+        assert_eq!(root.0, p.root, "replay root mismatch");
+        p.run_forward();
+        p.run_backward();
+        p.pack_grads(grad_out);
+        p.root_value()[0] as f64
+    }
+
+    /// Execute an active forward-only replay, appending the root value
+    /// to `out`.
+    pub fn replay_forward(&mut self, root: Var, out: &mut Vec<f32>) {
+        let ar = self.active.take().expect("no active replay");
+        let p = &mut self.plans.entries[ar.entry].1;
+        assert_eq!(ar.cursor, p.kinds.len(), "replay did not cover the recorded graph");
+        assert_eq!(ar.bind_cursor, p.binds.len(), "replay bound fewer leaves than recorded");
+        assert_eq!(root.0, p.root, "replay root mismatch");
+        p.run_forward();
+        out.extend_from_slice(p.root_value());
+    }
+
     /// Reverse pass from a scalar root; returns per-node gradients.
     ///
     /// The returned tensors come from the tape's pool — pass them back via
     /// [`Tape::reclaim`] in hot loops to keep the step allocation-free.
     pub fn backward(&mut self, root: Var) -> Vec<Option<Tensor>> {
+        assert!(self.active.is_none(), "eager backward is unavailable during plan replay");
         assert_eq!(self.value(root).numel(), 1, "backward root must be scalar");
         let mut grads: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
         let shape = self.value(root).shape.clone();

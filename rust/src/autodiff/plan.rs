@@ -1,0 +1,1826 @@
+//! Plan compiler: record the residual graph once, replay an optimized
+//! plan every step (DESIGN.md §12).
+//!
+//! The eager tape re-emits and re-walks the identical op sequence for
+//! every chunk of every step — only buffer pooling is amortized.  This
+//! module compiles a recorded graph once per [`PlanKey`] into a [`Plan`]:
+//! two flat instruction arrays (forward + backward) over a fixed arena of
+//! reused buffers.  Replay binds fresh leaf data and runs the two loops;
+//! no node structs, no shape recomputation, no pool lookups, no
+//! gradient-slot `Option` churn.
+//!
+//! Passes, in order:
+//!
+//! 1. **Constant folding** — a node is constant iff every transitive leaf
+//!    under it is an all-zero constant leaf (`Tape::zeros`).  Its value is
+//!    bit-stable across replays, so the recorded value is snapshotted into
+//!    a pinned arena slot and no instruction is emitted.  Equal constants
+//!    (by length + value bits) share one slot.  `scale(x, 1.0)` — the
+//!    identity the `Scale(Scale)` chains collapse through — becomes a
+//!    value alias (no forward instruction; the backward `acc_scaled` with
+//!    α = 1.0 is kept, because merging adjoint accumulation would
+//!    reassociate float sums).  A general α·β collapse is rejected: one
+//!    f32 multiply does not equal two.
+//! 2. **CSE** — structurally identical compute nodes (same kind, same
+//!    input classes, same attribute bits) merge, but only when *neither*
+//!    node's adjoint reaches a parameter: merging live nodes would merge
+//!    their adjoint accumulation chains and change summation order.
+//! 3. **Dead-adjoint elimination** — backward instructions are emitted
+//!    only for nodes whose adjoint can reach a parameter leaf
+//!    (`need`), restricted to nodes the eager sweep would actually visit
+//!    (`reach`, seeded at the root exactly like the lazy gradient slots).
+//!    Skipped gradients are never read by any emitted instruction or by
+//!    gradient packing, so parameter gradients are bit-identical.
+//! 4. **Buffer-lifetime assignment** — forward outputs get arena slots
+//!    register-allocation-style: last use per value class is precomputed,
+//!    a slot is freed after its final read and reused for later
+//!    same-length outputs.  Slots read by the backward pass, bind/const
+//!    slots, and the root stay pinned.  The output slot is always
+//!    allocated *before* dying inputs are freed, so an instruction can
+//!    never write over its own operands; `validate_lifetimes` proves
+//!    disjointness of every slot's occupancy intervals at compile time.
+//!
+//! Replay is bitwise-identical to eager execution because every emitted
+//! instruction runs the *same kernel with the same operand order* as the
+//! eager `Tape` builder / `backprop` arm it replaces, accumulation order
+//! is the exact descending node order of the eager sweep, and no pass
+//! above reassociates a float sum.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::tensor::{matmul_acc, matmul_nt_acc, matmul_tn_acc, simd, Tensor};
+
+use super::{Node, Op};
+
+// ---------------------------------------------------------------------------
+// Mode switch (mirrors `tensor::simd::simd_level` / `HTE_SIMD`)
+// ---------------------------------------------------------------------------
+
+/// Whether tape execution goes through compiled plans or stays eager.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    On,
+    Off,
+}
+
+impl PlanMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanMode::On => "on",
+            PlanMode::Off => "off",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            PlanMode::On => 1,
+            PlanMode::Off => 2,
+        }
+    }
+
+    fn from_code(code: u8) -> Self {
+        if code == 2 {
+            PlanMode::Off
+        } else {
+            PlanMode::On
+        }
+    }
+}
+
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// The mode every engine consults.  Resolved once from `HTE_PLAN`
+/// (`off` / `0` / `eager` disable plans) and cached;
+/// [`force_plan_mode`] replaces the cache.
+pub fn plan_mode() -> PlanMode {
+    match MODE.load(Ordering::Relaxed) {
+        0 => {
+            let mode = match std::env::var("HTE_PLAN").ok().as_deref() {
+                Some("off") | Some("0") | Some("eager") => PlanMode::Off,
+                _ => PlanMode::On,
+            };
+            MODE.store(mode.code(), Ordering::Relaxed);
+            mode
+        }
+        code => PlanMode::from_code(code),
+    }
+}
+
+/// True when compiled-plan execution is active.
+pub fn plan_enabled() -> bool {
+    plan_mode() == PlanMode::On
+}
+
+/// Install a mode (the programmatic equivalent of `HTE_PLAN`, for the
+/// parity tests and the eager-vs-plan bench rows).  Because plan replay
+/// is bitwise-identical to eager execution, flipping this mid-run never
+/// changes any output — but tests that *compare or time* the two paths
+/// should serialize through [`plan_mode_guard`].
+pub fn force_plan_mode(mode: PlanMode) {
+    MODE.store(mode.code(), Ordering::Relaxed);
+}
+
+/// Serializes tests/benches that flip the mode with [`force_plan_mode`]
+/// (poisoning is ignored: the guarded state is a single atomic).
+pub fn plan_mode_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Keys, cache, stats
+// ---------------------------------------------------------------------------
+
+/// Everything a recorded graph's *structure* depends on.  Same key ⇒ the
+/// builder sequence emits the identical op/shape sequence, so one plan
+/// serves every step: only leaf *data* (params, points, probes, forcing)
+/// changes, and that is rebound on each replay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanKey {
+    /// Residual-op name (or a pseudo-op like `"mlp-fwd"` for serve).
+    pub op: &'static str,
+    /// Bits of the one scalar baked into graph structure (gPINN λ);
+    /// 0 when the op has none.
+    pub scalar_bits: u32,
+    /// Chunk row count (remainder chunks get their own plans).
+    pub nc: usize,
+    /// Probe count V.
+    pub v: usize,
+    /// Input dimension.
+    pub d: usize,
+    /// Total parameter count (changes ⇒ different leaf shapes).
+    pub n_params: usize,
+}
+
+/// Per-tape (= per-thread) plan store: linear scan over at most
+/// [`PlanCache::CAP`] entries, oldest evicted first.  Entry indices stay
+/// stable while a replay is active because insertion only happens outside
+/// replay.
+#[derive(Default)]
+pub(super) struct PlanCache {
+    pub(super) entries: Vec<(PlanKey, Plan)>,
+}
+
+impl PlanCache {
+    const CAP: usize = 64;
+
+    pub(super) fn position(&self, key: &PlanKey) -> Option<usize> {
+        self.entries.iter().position(|(k, _)| k == key)
+    }
+
+    pub(super) fn insert(&mut self, key: PlanKey, plan: Plan) {
+        if self.position(&key).is_some() {
+            return;
+        }
+        if self.entries.len() >= Self::CAP {
+            self.entries.remove(0);
+        }
+        self.entries.push((key, plan));
+    }
+}
+
+/// Compile-time facts about one plan, for the bench rows and the
+/// compiler unit tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanStats {
+    /// Recorded tape nodes.
+    pub nodes: usize,
+    /// Forward instructions after folding + CSE + dead-value elimination.
+    pub fwd_instrs: usize,
+    /// Backward instructions after dead-adjoint elimination.
+    pub bwd_instrs: usize,
+    /// Nodes the eager backward sweep visits (reached, non-leaf).
+    pub bwd_nodes_eager: usize,
+    /// Nodes the plan emits backward instructions for.
+    pub bwd_nodes_plan: usize,
+    /// Constant-folded nodes (including `scale(·, 1.0)` aliases).
+    pub folded: usize,
+    /// Compute nodes merged by CSE.
+    pub cse_merged: usize,
+    /// Compute nodes whose value never reaches the root (not emitted).
+    pub fwd_dead: usize,
+    /// Distinct forward arena slots (compute outputs only).
+    pub fwd_slots: usize,
+    /// Bytes held by the plan's arenas (forward + gradient).
+    pub arena_bytes: usize,
+    /// Bytes the eager path materializes per step (all node values +
+    /// reached gradient slots).
+    pub eager_bytes: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Replay-protocol kind tags
+// ---------------------------------------------------------------------------
+
+pub(super) const KIND_BIND: u8 = 0;
+pub(super) const KIND_ZERO: u8 = 1;
+pub(super) const K_MATMUL: u8 = 2;
+pub(super) const K_ADDROW: u8 = 3;
+pub(super) const K_ADD: u8 = 4;
+pub(super) const K_SUB: u8 = 5;
+pub(super) const K_MUL: u8 = 6;
+pub(super) const K_SCALE: u8 = 7;
+pub(super) const K_CUBE: u8 = 8;
+pub(super) const K_TANH: u8 = 9;
+pub(super) const K_SIN: u8 = 10;
+pub(super) const K_COS: u8 = 11;
+pub(super) const K_MEAN_ALL: u8 = 12;
+pub(super) const K_SUM_ALL: u8 = 13;
+pub(super) const K_GROUP_MEAN: u8 = 14;
+pub(super) const K_BROADCAST: u8 = 15;
+pub(super) const K_TILE: u8 = 16;
+pub(super) const K_JET_T0: u8 = 17;
+pub(super) const K_JET_O1: u8 = 18;
+pub(super) const K_JET_O2: u8 = 19;
+pub(super) const K_JET_O3: u8 = 20;
+pub(super) const K_JET_O4: u8 = 21;
+
+/// The replay-protocol tag for an op (leaves default to bind; the tape
+/// tags `zeros()` leaves [`KIND_ZERO`] via its side list).
+pub(super) fn kind_tag(op: &Op) -> u8 {
+    match op {
+        Op::Leaf => KIND_BIND,
+        Op::Matmul { .. } => K_MATMUL,
+        Op::AddRow { .. } => K_ADDROW,
+        Op::Add { .. } => K_ADD,
+        Op::Sub { .. } => K_SUB,
+        Op::Mul { .. } => K_MUL,
+        Op::Scale { .. } => K_SCALE,
+        Op::Cube { .. } => K_CUBE,
+        Op::Tanh { .. } => K_TANH,
+        Op::Sin { .. } => K_SIN,
+        Op::Cos { .. } => K_COS,
+        Op::MeanAll { .. } => K_MEAN_ALL,
+        Op::SumAll { .. } => K_SUM_ALL,
+        Op::GroupMean { .. } => K_GROUP_MEAN,
+        Op::BroadcastRows { .. } => K_BROADCAST,
+        Op::TileRows { .. } => K_TILE,
+        Op::TanhJetT0 { .. } => K_JET_T0,
+        Op::TanhJetO1 { .. } => K_JET_O1,
+        Op::TanhJetO2 { .. } => K_JET_O2,
+        Op::TanhJetO3 { .. } => K_JET_O3,
+        Op::TanhJetO4 { .. } => K_JET_O4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instructions
+// ---------------------------------------------------------------------------
+
+/// One forward step.  All operand fields are forward-arena slot ids; all
+/// dimensions are baked in at compile time.  Each executor arm runs the
+/// *identical* loop/kernel as the eager builder it replaces.
+#[derive(Clone, Debug)]
+enum FwdInstr {
+    Matmul { a: usize, b: usize, out: usize, m: usize, k: usize, n: usize },
+    AddRow { a: usize, bias: usize, out: usize, ncols: usize },
+    Add { a: usize, b: usize, out: usize },
+    Sub { a: usize, b: usize, out: usize },
+    Mul { a: usize, b: usize, out: usize },
+    Scale { a: usize, out: usize, alpha: f32 },
+    Cube { a: usize, out: usize },
+    /// Covers both `Op::Tanh` and `Op::TanhJetT0` (identical forward).
+    Tanh { a: usize, out: usize },
+    Sin { a: usize, out: usize },
+    Cos { a: usize, out: usize },
+    MeanAll { a: usize, out: usize, numel: usize },
+    SumAll { a: usize, out: usize },
+    GroupMean { a: usize, out: usize, group: usize },
+    BroadcastRows { a: usize, out: usize, group: usize, c: usize },
+    TileRows { a: usize, out: usize, len: usize },
+    JetO1 { t0: usize, z1: usize, out: usize, group: usize, c: usize },
+    JetO2 { t0: usize, z1: usize, z2: usize, out: usize, group: usize, c: usize },
+    JetO3 { t0: usize, z1: usize, z2: usize, z3: usize, out: usize, group: usize, c: usize },
+    #[allow(clippy::too_many_arguments)]
+    JetO4 {
+        t0: usize,
+        z1: usize,
+        z2: usize,
+        z3: usize,
+        z4: usize,
+        out: usize,
+        group: usize,
+        c: usize,
+    },
+}
+
+/// One backward accumulation.  `g` (the node's own adjoint) and `t` (the
+/// target parent adjoint) are gradient-arena ids — always distinct,
+/// because gradient slots are never shared between nodes.  Value operands
+/// are forward-arena slot ids.
+#[derive(Clone, Debug)]
+enum BwdInstr {
+    AccAdd { g: usize, t: usize },
+    AccSub { g: usize, t: usize },
+    AddRowBias { g: usize, t: usize, ncols: usize },
+    MatmulDa { g: usize, bv: usize, t: usize, m: usize, n: usize, k: usize },
+    MatmulDb { av: usize, g: usize, t: usize, m: usize, k: usize, n: usize },
+    AccMul { g: usize, v: usize, t: usize },
+    AccScaled { g: usize, t: usize, alpha: f32 },
+    CubeBwd { g: usize, v: usize, t: usize },
+    SinBwd { g: usize, v: usize, t: usize },
+    CosBwd { g: usize, v: usize, t: usize },
+    MeanAllBwd { g: usize, t: usize, numel: usize },
+    SumAllBwd { g: usize, t: usize },
+    GroupMeanBwd { g: usize, t: usize, group: usize },
+    BroadcastBwd { g: usize, t: usize, group: usize, c: usize },
+    TileBwd { g: usize, t: usize, len: usize },
+    /// `jet_f1_acc` — serves `Tanh`/`TanhJetT0` (group 1, c = numel) and
+    /// the highest-stream arm of every jet output.
+    F1Acc { g: usize, t0: usize, t: usize, group: usize, c: usize },
+    F2z1Acc { g: usize, z1: usize, t0: usize, t: usize, coef: f32, group: usize, c: usize },
+    O1BwdT0 { g: usize, z1: usize, t0: usize, t: usize, group: usize, c: usize },
+    O2BwdT0 { g: usize, z1: usize, z2: usize, t0: usize, t: usize, group: usize, c: usize },
+    O3BwdZ1 { g: usize, z1: usize, z2: usize, t0: usize, t: usize, group: usize, c: usize },
+    #[allow(clippy::too_many_arguments)]
+    O3BwdT0 {
+        g: usize,
+        z1: usize,
+        z2: usize,
+        z3: usize,
+        t0: usize,
+        t: usize,
+        group: usize,
+        c: usize,
+    },
+    #[allow(clippy::too_many_arguments)]
+    O4BwdZ1 {
+        g: usize,
+        z1: usize,
+        z2: usize,
+        z3: usize,
+        t0: usize,
+        t: usize,
+        group: usize,
+        c: usize,
+    },
+    O4BwdZ2 { g: usize, z1: usize, z2: usize, t0: usize, t: usize, group: usize, c: usize },
+    #[allow(clippy::too_many_arguments)]
+    O4BwdT0 {
+        g: usize,
+        z1: usize,
+        z2: usize,
+        z3: usize,
+        z4: usize,
+        t0: usize,
+        t: usize,
+        group: usize,
+        c: usize,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// The plan
+// ---------------------------------------------------------------------------
+
+/// A compiled, replayable execution schedule for one recorded graph.
+pub(super) struct Plan {
+    /// Per-node replay-protocol tags, in record order.
+    pub(super) kinds: Vec<u8>,
+    /// Per-node shape stubs (correct shape, *empty* data) served by
+    /// `Tape::value` during replay — structure reads (shapes/numel) work,
+    /// any data read panics loudly instead of seeing stale bytes.
+    pub(super) stubs: Vec<Tensor>,
+    /// Forward-arena slots of bind leaves, in record order.
+    pub(super) binds: Vec<usize>,
+    pub(super) root: usize,
+    root_slot: usize,
+    /// Gradient-arena id of the root adjoint (seeded to 1.0).
+    root_grad: usize,
+    fwd: Vec<FwdInstr>,
+    bwd: Vec<BwdInstr>,
+    /// Gradient-arena ids of the parameter leaves, pack order.
+    packs: Vec<usize>,
+    pub(super) fwd_arena: Vec<Vec<f32>>,
+    grad_arena: Vec<Vec<f32>>,
+    stats: PlanStats,
+}
+
+impl Plan {
+    pub(super) fn stats(&self) -> PlanStats {
+        self.stats
+    }
+
+    pub(super) fn root_value(&self) -> &[f32] {
+        &self.fwd_arena[self.root_slot]
+    }
+
+    pub(super) fn pack_grads(&self, out: &mut Vec<f32>) {
+        for &gs in &self.packs {
+            out.extend_from_slice(&self.grad_arena[gs]);
+        }
+    }
+
+    /// Flat forward loop.  Each arm mirrors the eager builder exactly:
+    /// zeroed-buffer + `matmul_acc` for matmul, the same scalar zip loops
+    /// for elementwise ops, the same `tensor::simd` kernels elsewhere.
+    pub(super) fn run_forward(&mut self) {
+        let arena = &mut self.fwd_arena;
+        for ins in &self.fwd {
+            match *ins {
+                FwdInstr::Matmul { a, b, out, m, k, n } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    o.fill(0.0);
+                    matmul_acc(&arena[a], &arena[b], &mut o, m, k, n);
+                    arena[out] = o;
+                }
+                FwdInstr::AddRow { a, bias, out, ncols } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    simd::add_rows(&mut o, &arena[a], &arena[bias], ncols);
+                    arena[out] = o;
+                }
+                FwdInstr::Add { a, b, out } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for ((dst, &x), &y) in o.iter_mut().zip(&arena[a]).zip(&arena[b]) {
+                        *dst = x + y;
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::Sub { a, b, out } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for ((dst, &x), &y) in o.iter_mut().zip(&arena[a]).zip(&arena[b]) {
+                        *dst = x - y;
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::Mul { a, b, out } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for ((dst, &x), &y) in o.iter_mut().zip(&arena[a]).zip(&arena[b]) {
+                        *dst = x * y;
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::Scale { a, out, alpha } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for (dst, &x) in o.iter_mut().zip(&arena[a]) {
+                        *dst = alpha * x;
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::Cube { a, out } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for (dst, &x) in o.iter_mut().zip(&arena[a]) {
+                        *dst = x * x * x;
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::Tanh { a, out } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for (dst, &x) in o.iter_mut().zip(&arena[a]) {
+                        *dst = x.tanh();
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::Sin { a, out } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for (dst, &x) in o.iter_mut().zip(&arena[a]) {
+                        *dst = x.sin();
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::Cos { a, out } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for (dst, &x) in o.iter_mut().zip(&arena[a]) {
+                        *dst = x.cos();
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::MeanAll { a, out, numel } => {
+                    let s: f32 = arena[a].iter().sum();
+                    arena[out][0] = s / numel as f32;
+                }
+                FwdInstr::SumAll { a, out } => {
+                    let s: f32 = arena[a].iter().sum();
+                    arena[out][0] = s;
+                }
+                FwdInstr::GroupMean { a, out, group } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for (dst, chunk) in o.iter_mut().zip(arena[a].chunks(group)) {
+                        *dst = chunk.iter().sum::<f32>() / group as f32;
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::BroadcastRows { a, out, group, c } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    {
+                        let av = &arena[a];
+                        for (r, orow) in o.chunks_mut(c).enumerate() {
+                            let p = r / group;
+                            orow.copy_from_slice(&av[p * c..(p + 1) * c]);
+                        }
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::TileRows { a, out, len } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    for block in o.chunks_mut(len) {
+                        block.copy_from_slice(&arena[a]);
+                    }
+                    arena[out] = o;
+                }
+                FwdInstr::JetO1 { t0, z1, out, group, c } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    simd::jet_o1_fwd(&mut o, &arena[t0], &arena[z1], group, c);
+                    arena[out] = o;
+                }
+                FwdInstr::JetO2 { t0, z1, z2, out, group, c } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    simd::jet_o2_fwd(&mut o, &arena[t0], &arena[z1], &arena[z2], group, c);
+                    arena[out] = o;
+                }
+                FwdInstr::JetO3 { t0, z1, z2, z3, out, group, c } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    simd::jet_o3_fwd(
+                        &mut o, &arena[t0], &arena[z1], &arena[z2], &arena[z3], group, c,
+                    );
+                    arena[out] = o;
+                }
+                FwdInstr::JetO4 { t0, z1, z2, z3, z4, out, group, c } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    simd::jet_o4_fwd(
+                        &mut o, &arena[t0], &arena[z1], &arena[z2], &arena[z3], &arena[z4],
+                        group, c,
+                    );
+                    arena[out] = o;
+                }
+            }
+        }
+    }
+
+    /// Flat backward loop.  Gradient buffers are zeroed and the root
+    /// seeded to 1.0 (exactly the eager lazy-slot semantics), then each
+    /// arm runs the same kernel as the matching eager `backprop` arm, in
+    /// the same descending node / per-op arm order.
+    pub(super) fn run_backward(&mut self) {
+        for buf in &mut self.grad_arena {
+            buf.fill(0.0);
+        }
+        self.grad_arena[self.root_grad][0] = 1.0;
+        let grads = &mut self.grad_arena;
+        let vals = &self.fwd_arena;
+        for ins in &self.bwd {
+            match *ins {
+                BwdInstr::AccAdd { g, t } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::acc_add(&mut grads[t], &gb);
+                    grads[g] = gb;
+                }
+                BwdInstr::AccSub { g, t } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::acc_sub(&mut grads[t], &gb);
+                    grads[g] = gb;
+                }
+                BwdInstr::AddRowBias { g, t, ncols } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    for row in gb.chunks(ncols) {
+                        simd::acc_add(&mut grads[t], row);
+                    }
+                    grads[g] = gb;
+                }
+                BwdInstr::MatmulDa { g, bv, t, m, n, k } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    matmul_nt_acc(&gb, &vals[bv], &mut grads[t], m, n, k);
+                    grads[g] = gb;
+                }
+                BwdInstr::MatmulDb { av, g, t, m, k, n } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    matmul_tn_acc(&vals[av], &gb, &mut grads[t], m, k, n);
+                    grads[g] = gb;
+                }
+                BwdInstr::AccMul { g, v, t } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::acc_mul(&mut grads[t], &gb, &vals[v]);
+                    grads[g] = gb;
+                }
+                BwdInstr::AccScaled { g, t, alpha } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::acc_scaled(&mut grads[t], &gb, alpha);
+                    grads[g] = gb;
+                }
+                BwdInstr::CubeBwd { g, v, t } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    for ((dst, &x), &y) in grads[t].iter_mut().zip(&gb).zip(&vals[v]) {
+                        *dst += x * 3.0 * y * y;
+                    }
+                    grads[g] = gb;
+                }
+                BwdInstr::SinBwd { g, v, t } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    for ((dst, &x), &y) in grads[t].iter_mut().zip(&gb).zip(&vals[v]) {
+                        *dst += x * y.cos();
+                    }
+                    grads[g] = gb;
+                }
+                BwdInstr::CosBwd { g, v, t } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    for ((dst, &x), &y) in grads[t].iter_mut().zip(&gb).zip(&vals[v]) {
+                        *dst -= x * y.sin();
+                    }
+                    grads[g] = gb;
+                }
+                BwdInstr::MeanAllBwd { g, t, numel } => {
+                    let gv = grads[g][0] / numel as f32;
+                    simd::acc_splat(&mut grads[t], gv);
+                }
+                BwdInstr::SumAllBwd { g, t } => {
+                    let gv = grads[g][0];
+                    simd::acc_splat(&mut grads[t], gv);
+                }
+                BwdInstr::GroupMeanBwd { g, t, group } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    let inv = 1.0 / group as f32;
+                    for (idx, dst) in grads[t].iter_mut().enumerate() {
+                        *dst += gb[idx / group] * inv;
+                    }
+                    grads[g] = gb;
+                }
+                BwdInstr::BroadcastBwd { g, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::broadcast_rows_bwd(&mut grads[t], &gb, group, c);
+                    grads[g] = gb;
+                }
+                BwdInstr::TileBwd { g, t, len } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    for block in gb.chunks(len) {
+                        simd::acc_add(&mut grads[t], block);
+                    }
+                    grads[g] = gb;
+                }
+                BwdInstr::F1Acc { g, t0, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_f1_acc(&mut grads[t], &gb, &vals[t0], group, c);
+                    grads[g] = gb;
+                }
+                BwdInstr::F2z1Acc { g, z1, t0, t, coef, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_f2z1_acc(&mut grads[t], &gb, &vals[z1], &vals[t0], coef, group, c);
+                    grads[g] = gb;
+                }
+                BwdInstr::O1BwdT0 { g, z1, t0, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_o1_bwd_t0(&mut grads[t], &gb, &vals[z1], &vals[t0], group, c);
+                    grads[g] = gb;
+                }
+                BwdInstr::O2BwdT0 { g, z1, z2, t0, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_o2_bwd_t0(
+                        &mut grads[t], &gb, &vals[z1], &vals[z2], &vals[t0], group, c,
+                    );
+                    grads[g] = gb;
+                }
+                BwdInstr::O3BwdZ1 { g, z1, z2, t0, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_o3_bwd_z1(
+                        &mut grads[t], &gb, &vals[z1], &vals[z2], &vals[t0], group, c,
+                    );
+                    grads[g] = gb;
+                }
+                BwdInstr::O3BwdT0 { g, z1, z2, z3, t0, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_o3_bwd_t0(
+                        &mut grads[t], &gb, &vals[z1], &vals[z2], &vals[z3], &vals[t0], group, c,
+                    );
+                    grads[g] = gb;
+                }
+                BwdInstr::O4BwdZ1 { g, z1, z2, z3, t0, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_o4_bwd_z1(
+                        &mut grads[t], &gb, &vals[z1], &vals[z2], &vals[z3], &vals[t0], group, c,
+                    );
+                    grads[g] = gb;
+                }
+                BwdInstr::O4BwdZ2 { g, z1, z2, t0, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_o4_bwd_z2(
+                        &mut grads[t], &gb, &vals[z1], &vals[z2], &vals[t0], group, c,
+                    );
+                    grads[g] = gb;
+                }
+                BwdInstr::O4BwdT0 { g, z1, z2, z3, z4, t0, t, group, c } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::jet_o4_bwd_t0(
+                        &mut grads[t], &gb, &vals[z1], &vals[z2], &vals[z3], &vals[z4],
+                        &vals[t0], group, c,
+                    );
+                    grads[g] = gb;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The compiler
+// ---------------------------------------------------------------------------
+
+/// Parent node indices of an op, in canonical (backward-arm) order.
+fn op_inputs(op: &Op, buf: &mut Vec<usize>) {
+    buf.clear();
+    match *op {
+        Op::Leaf => {}
+        Op::Matmul { a, b } | Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } => {
+            buf.extend([a, b]);
+        }
+        Op::AddRow { a, bias } => buf.extend([a, bias]),
+        Op::Scale { a, .. }
+        | Op::Cube { a }
+        | Op::Tanh { a }
+        | Op::Sin { a }
+        | Op::Cos { a }
+        | Op::MeanAll { a }
+        | Op::SumAll { a }
+        | Op::GroupMean { a, .. }
+        | Op::BroadcastRows { a, .. }
+        | Op::TileRows { a } => buf.push(a),
+        Op::TanhJetT0 { z0 } => buf.push(z0),
+        Op::TanhJetO1 { t0, z1, .. } => buf.extend([t0, z1]),
+        Op::TanhJetO2 { t0, z1, z2, .. } => buf.extend([t0, z1, z2]),
+        Op::TanhJetO3 { t0, z1, z2, z3, .. } => buf.extend([t0, z1, z2, z3]),
+        Op::TanhJetO4 { t0, z1, z2, z3, z4, .. } => buf.extend([t0, z1, z2, z3, z4]),
+    }
+}
+
+/// CSE key: structural identity over resolved input classes.
+#[derive(Hash, PartialEq, Eq)]
+struct CseKey {
+    kind: u8,
+    inputs: Vec<usize>,
+    attr: u64,
+    out_len: usize,
+}
+
+/// How a node's value is realized.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum ValKind {
+    /// Bind leaf: pinned dedicated slot, data rebound every replay.
+    Bind,
+    /// Constant (zero leaf or folded compute): pinned shared slot with a
+    /// compile-time snapshot.
+    Const,
+    /// `scale(·, 1.0)`: value aliases its input's slot, no instruction.
+    Alias,
+    /// Merged into an earlier structural twin by CSE.
+    Cse,
+    /// Value never reaches the root: no instruction, no slot.
+    Dead,
+    /// Emitted compute node: lifetime-allocated slot + instruction.
+    Emit,
+}
+
+/// Compile a recorded graph into a [`Plan`].
+///
+/// `params` are the parameter-leaf node ids in gradient pack order;
+/// `zero_leaves` the node ids created by `Tape::zeros` (the only leaves
+/// whose values are constant across replays).  With
+/// `want_backward == false` only the forward schedule is built (serve).
+pub(super) fn compile(
+    nodes: &[Node],
+    root: usize,
+    params: &[usize],
+    zero_leaves: &[usize],
+    want_backward: bool,
+) -> Plan {
+    let n = nodes.len();
+    assert!(root < n, "plan root out of range");
+    let numel = |i: usize| nodes[i].value.numel();
+    let is_leaf = |i: usize| matches!(nodes[i].op, Op::Leaf);
+
+    let mut is_zero = vec![false; n];
+    for &z in zero_leaves {
+        is_zero[z] = true;
+    }
+    let mut is_param = vec![false; n];
+    for &p in params {
+        assert!(is_leaf(p), "parameter node {p} is not a leaf");
+        is_param[p] = true;
+    }
+
+    let mut ins_buf: Vec<usize> = Vec::new();
+
+    // Ascending: can this node's adjoint reach a parameter leaf?
+    let mut need = vec![false; n];
+    for i in 0..n {
+        if is_param[i] {
+            need[i] = true;
+            continue;
+        }
+        op_inputs(&nodes[i].op, &mut ins_buf);
+        need[i] = ins_buf.iter().any(|&p| need[p]);
+    }
+
+    // Ascending: is the value constant across replays (all transitive
+    // leaves are zero leaves)?  Constants can never need a gradient
+    // (parameters are bind leaves).
+    let mut konst = vec![false; n];
+    for i in 0..n {
+        konst[i] = if is_leaf(i) {
+            is_zero[i]
+        } else {
+            op_inputs(&nodes[i].op, &mut ins_buf);
+            ins_buf.iter().all(|&p| konst[p])
+        };
+        debug_assert!(!(konst[i] && need[i]), "constant node {i} needs a gradient");
+    }
+
+    // Descending: is the value an ancestor of the root (read by forward
+    // or, transitively, by backward value operands)?
+    let mut fwd_live = vec![false; n];
+    fwd_live[root] = true;
+    for i in (0..n).rev() {
+        if !fwd_live[i] {
+            continue;
+        }
+        op_inputs(&nodes[i].op, &mut ins_buf);
+        for &p in &ins_buf {
+            fwd_live[p] = true;
+        }
+    }
+
+    // Descending: which nodes does the eager backward sweep visit?  This
+    // must match the lazy gradient-slot semantics exactly: the root is
+    // seeded, and every parent of a visited non-leaf node is visited.
+    let mut reach = vec![false; n];
+    if want_backward {
+        reach[root] = true;
+        for i in (0..=root).rev() {
+            if !reach[i] || is_leaf(i) {
+                continue;
+            }
+            op_inputs(&nodes[i].op, &mut ins_buf);
+            for &p in &ins_buf {
+                reach[p] = true;
+            }
+        }
+    }
+
+    // -- Pass A: classify each node, fold constants, alias scale(·,1.0),
+    //    CSE structural twins. --------------------------------------------
+    let mut class: Vec<usize> = (0..n).collect();
+    let mut val_kind = vec![ValKind::Dead; n];
+    let mut slot_of = vec![usize::MAX; n];
+    let mut slot_len: Vec<usize> = Vec::new();
+    let mut slot_pinned: Vec<bool> = Vec::new();
+    let mut slot_init: Vec<Option<Vec<f32>>> = Vec::new();
+    let mut binds: Vec<usize> = Vec::new();
+    let mut kinds: Vec<u8> = Vec::with_capacity(n);
+    let mut const_map: HashMap<(usize, Vec<u32>), usize> = HashMap::new();
+    let mut cse_map: HashMap<CseKey, usize> = HashMap::new();
+    let mut emit: Vec<usize> = Vec::new();
+    let mut folded = 0usize;
+    let mut cse_merged = 0usize;
+    let mut fwd_dead = 0usize;
+
+    let mut new_slot = |len: usize,
+                        pinned: bool,
+                        init: Option<Vec<f32>>,
+                        slot_len: &mut Vec<usize>,
+                        slot_pinned: &mut Vec<bool>,
+                        slot_init: &mut Vec<Option<Vec<f32>>>| {
+        slot_len.push(len);
+        slot_pinned.push(pinned);
+        slot_init.push(init);
+        slot_len.len() - 1
+    };
+
+    for i in 0..n {
+        let op = &nodes[i].op;
+        if is_leaf(i) {
+            if is_zero[i] {
+                kinds.push(KIND_ZERO);
+                let key = (numel(i), vec![0u32; numel(i)]);
+                let slot = *const_map.entry(key).or_insert_with(|| {
+                    new_slot(
+                        numel(i),
+                        true,
+                        Some(vec![0.0; numel(i)]),
+                        &mut slot_len,
+                        &mut slot_pinned,
+                        &mut slot_init,
+                    )
+                });
+                slot_of[i] = slot;
+                val_kind[i] = ValKind::Const;
+            } else {
+                kinds.push(KIND_BIND);
+                let slot = new_slot(
+                    numel(i),
+                    true,
+                    None,
+                    &mut slot_len,
+                    &mut slot_pinned,
+                    &mut slot_init,
+                );
+                slot_of[i] = slot;
+                binds.push(slot);
+                val_kind[i] = ValKind::Bind;
+            }
+            continue;
+        }
+        kinds.push(kind_tag(op));
+        if konst[i] {
+            folded += 1;
+            if fwd_live[i] {
+                let bits: Vec<u32> = nodes[i].value.data.iter().map(|v| v.to_bits()).collect();
+                let key = (numel(i), bits);
+                let data = nodes[i].value.data.clone();
+                let slot = *const_map.entry(key).or_insert_with(|| {
+                    new_slot(
+                        numel(i),
+                        true,
+                        Some(data),
+                        &mut slot_len,
+                        &mut slot_pinned,
+                        &mut slot_init,
+                    )
+                });
+                slot_of[i] = slot;
+            }
+            val_kind[i] = ValKind::Const;
+            continue;
+        }
+        if let Op::Scale { a, alpha } = *op {
+            if alpha.to_bits() == 1.0f32.to_bits() {
+                // Value alias; the backward acc_scaled(α = 1.0) arm is
+                // kept so adjoint accumulation never reassociates.
+                class[i] = class[a];
+                slot_of[i] = slot_of[class[a]];
+                val_kind[i] = ValKind::Alias;
+                folded += 1;
+                continue;
+            }
+        }
+        if !fwd_live[i] {
+            fwd_dead += 1;
+            val_kind[i] = ValKind::Dead;
+            continue;
+        }
+        // CSE over resolved input classes; only adjoint-dead nodes merge.
+        op_inputs(op, &mut ins_buf);
+        let resolved: Vec<usize> = ins_buf.iter().map(|&p| class[p]).collect();
+        let attr: u64 = match *op {
+            Op::Scale { alpha, .. } => alpha.to_bits() as u64,
+            Op::GroupMean { group, .. }
+            | Op::BroadcastRows { group, .. }
+            | Op::TanhJetO1 { group, .. }
+            | Op::TanhJetO2 { group, .. }
+            | Op::TanhJetO3 { group, .. }
+            | Op::TanhJetO4 { group, .. } => group as u64,
+            _ => 0,
+        };
+        let key = CseKey { kind: kind_tag(op), inputs: resolved, attr, out_len: numel(i) };
+        if !need[i] {
+            if let Some(&rep) = cse_map.get(&key) {
+                debug_assert!(!need[rep]);
+                class[i] = rep;
+                slot_of[i] = slot_of[rep];
+                val_kind[i] = ValKind::Cse;
+                cse_merged += 1;
+                continue;
+            }
+            cse_map.insert(key, i);
+        }
+        val_kind[i] = ValKind::Emit;
+        emit.push(i);
+    }
+
+    // -- Pass B: lifetimes.  Pin everything the backward pass will read,
+    //    the root, and (already) binds/consts; record last forward use. --
+    let root_class = class[root];
+    if slot_of[root_class] != usize::MAX {
+        slot_pinned[slot_of[root_class]] = true;
+    }
+    let mut pinned_node = vec![false; n];
+    pinned_node[root_class] = true;
+    {
+        let mut pin = |c: usize, pinned_node: &mut Vec<bool>| {
+            pinned_node[c] = true;
+        };
+        if want_backward {
+            for i in (0..=root).rev() {
+                if is_leaf(i) || !reach[i] || !need[i] {
+                    continue;
+                }
+                match nodes[i].op {
+                    Op::Matmul { a, b } | Op::Mul { a, b } => {
+                        if need[a] {
+                            pin(class[b], &mut pinned_node);
+                        }
+                        if need[b] {
+                            pin(class[a], &mut pinned_node);
+                        }
+                    }
+                    Op::Cube { a } | Op::Sin { a } | Op::Cos { a } => {
+                        if need[a] {
+                            pin(class[a], &mut pinned_node);
+                        }
+                    }
+                    Op::Tanh { a } => {
+                        if need[a] {
+                            pin(class[i], &mut pinned_node);
+                        }
+                    }
+                    Op::TanhJetT0 { z0 } => {
+                        if need[z0] {
+                            pin(class[i], &mut pinned_node);
+                        }
+                    }
+                    Op::TanhJetO1 { t0, z1, .. } => {
+                        if need[z1] {
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[t0] {
+                            pin(class[z1], &mut pinned_node);
+                            pin(class[t0], &mut pinned_node);
+                        }
+                    }
+                    Op::TanhJetO2 { t0, z1, z2, .. } => {
+                        if need[z1] || need[t0] {
+                            pin(class[z1], &mut pinned_node);
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[z2] {
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[t0] {
+                            pin(class[z2], &mut pinned_node);
+                        }
+                    }
+                    Op::TanhJetO3 { t0, z1, z2, z3, .. } => {
+                        if need[z1] || need[t0] {
+                            pin(class[z1], &mut pinned_node);
+                            pin(class[z2], &mut pinned_node);
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[z2] {
+                            pin(class[z1], &mut pinned_node);
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[z3] {
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[t0] {
+                            pin(class[z3], &mut pinned_node);
+                        }
+                    }
+                    Op::TanhJetO4 { t0, z1, z2, z3, z4, .. } => {
+                        if need[z1] || need[t0] {
+                            pin(class[z1], &mut pinned_node);
+                            pin(class[z2], &mut pinned_node);
+                            pin(class[z3], &mut pinned_node);
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[z2] {
+                            pin(class[z1], &mut pinned_node);
+                            pin(class[z2], &mut pinned_node);
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[z3] {
+                            pin(class[z1], &mut pinned_node);
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[z4] {
+                            pin(class[t0], &mut pinned_node);
+                        }
+                        if need[t0] {
+                            pin(class[z4], &mut pinned_node);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    // Last forward read per value class (positions index `emit`).
+    let mut last_use: HashMap<usize, usize> = HashMap::new();
+    for (pos, &i) in emit.iter().enumerate() {
+        op_inputs(&nodes[i].op, &mut ins_buf);
+        for &p in &ins_buf {
+            last_use.insert(class[p], pos);
+        }
+    }
+
+    // -- Pass C: allocate slots (free-list of exact lengths; allocate
+    //    the output before freeing dying inputs) and emit forward
+    //    instructions. ---------------------------------------------------
+    let mut free: HashMap<usize, Vec<usize>> = HashMap::new();
+    let mut fwd: Vec<FwdInstr> = Vec::with_capacity(emit.len());
+    // (slot, def position, last position, pinned) for validation.
+    let mut intervals: Vec<(usize, usize, usize, bool)> = Vec::new();
+    for (pos, &i) in emit.iter().enumerate() {
+        let len = numel(i);
+        let pinned = pinned_node[i];
+        let slot = if pinned {
+            new_slot(len, true, None, &mut slot_len, &mut slot_pinned, &mut slot_init)
+        } else {
+            match free.get_mut(&len).and_then(|v| v.pop()) {
+                Some(s) => s,
+                None => {
+                    new_slot(len, false, None, &mut slot_len, &mut slot_pinned, &mut slot_init)
+                }
+            }
+        };
+        slot_of[i] = slot;
+        intervals.push((slot, pos, *last_use.get(&i).unwrap_or(&pos), pinned));
+        let vs = |x: usize| {
+            let s = slot_of[class[x]];
+            debug_assert_ne!(s, usize::MAX, "unallocated value operand");
+            s
+        };
+        let instr = match nodes[i].op {
+            Op::Leaf => unreachable!("leaves are never emitted"),
+            Op::Matmul { a, b } => FwdInstr::Matmul {
+                a: vs(a),
+                b: vs(b),
+                out: slot,
+                m: nodes[a].value.shape[0],
+                k: nodes[a].value.shape[1],
+                n: nodes[b].value.shape[1],
+            },
+            Op::AddRow { a, bias } => FwdInstr::AddRow {
+                a: vs(a),
+                bias: vs(bias),
+                out: slot,
+                ncols: nodes[bias].value.numel(),
+            },
+            Op::Add { a, b } => FwdInstr::Add { a: vs(a), b: vs(b), out: slot },
+            Op::Sub { a, b } => FwdInstr::Sub { a: vs(a), b: vs(b), out: slot },
+            Op::Mul { a, b } => FwdInstr::Mul { a: vs(a), b: vs(b), out: slot },
+            Op::Scale { a, alpha } => FwdInstr::Scale { a: vs(a), out: slot, alpha },
+            Op::Cube { a } => FwdInstr::Cube { a: vs(a), out: slot },
+            Op::Tanh { a } => FwdInstr::Tanh { a: vs(a), out: slot },
+            Op::Sin { a } => FwdInstr::Sin { a: vs(a), out: slot },
+            Op::Cos { a } => FwdInstr::Cos { a: vs(a), out: slot },
+            Op::MeanAll { a } => FwdInstr::MeanAll { a: vs(a), out: slot, numel: numel(a) },
+            Op::SumAll { a } => FwdInstr::SumAll { a: vs(a), out: slot },
+            Op::GroupMean { a, group } => FwdInstr::GroupMean { a: vs(a), out: slot, group },
+            Op::BroadcastRows { a, group } => FwdInstr::BroadcastRows {
+                a: vs(a),
+                out: slot,
+                group,
+                c: nodes[a].value.shape[1],
+            },
+            Op::TileRows { a } => FwdInstr::TileRows { a: vs(a), out: slot, len: numel(a) },
+            Op::TanhJetT0 { z0 } => FwdInstr::Tanh { a: vs(z0), out: slot },
+            Op::TanhJetO1 { t0, z1, group } => FwdInstr::JetO1 {
+                t0: vs(t0),
+                z1: vs(z1),
+                out: slot,
+                group,
+                c: nodes[t0].value.shape[1],
+            },
+            Op::TanhJetO2 { t0, z1, z2, group } => FwdInstr::JetO2 {
+                t0: vs(t0),
+                z1: vs(z1),
+                z2: vs(z2),
+                out: slot,
+                group,
+                c: nodes[t0].value.shape[1],
+            },
+            Op::TanhJetO3 { t0, z1, z2, z3, group } => FwdInstr::JetO3 {
+                t0: vs(t0),
+                z1: vs(z1),
+                z2: vs(z2),
+                z3: vs(z3),
+                out: slot,
+                group,
+                c: nodes[t0].value.shape[1],
+            },
+            Op::TanhJetO4 { t0, z1, z2, z3, z4, group } => FwdInstr::JetO4 {
+                t0: vs(t0),
+                z1: vs(z1),
+                z2: vs(z2),
+                z3: vs(z3),
+                z4: vs(z4),
+                out: slot,
+                group,
+                c: nodes[t0].value.shape[1],
+            },
+        };
+        fwd.push(instr);
+        // Free inputs whose last read is this instruction.
+        op_inputs(&nodes[i].op, &mut ins_buf);
+        ins_buf.sort_unstable();
+        ins_buf.dedup();
+        for &p in &ins_buf {
+            let c = class[p];
+            if c == i {
+                continue;
+            }
+            let s = slot_of[c];
+            if s == usize::MAX || slot_pinned[s] || pinned_node[c] {
+                continue;
+            }
+            if last_use.get(&c) == Some(&pos) {
+                free.entry(slot_len[s]).or_default().push(s);
+            }
+        }
+    }
+    validate_lifetimes(&intervals, slot_len.len());
+
+    // -- Pass D: gradient slots (one per reached+needed node, never
+    //    shared) and backward instructions in exact eager order. ---------
+    let mut grad_slot = vec![usize::MAX; n];
+    let mut grad_lens: Vec<usize> = Vec::new();
+    let mut bwd_nodes_eager = 0usize;
+    let mut bwd_nodes_plan = 0usize;
+    let mut bwd: Vec<BwdInstr> = Vec::new();
+    if want_backward {
+        for i in 0..n {
+            if reach[i] && need[i] {
+                grad_slot[i] = grad_lens.len();
+                grad_lens.push(numel(i));
+            }
+        }
+        if grad_slot[root] == usize::MAX {
+            grad_slot[root] = grad_lens.len();
+            grad_lens.push(numel(root));
+        }
+        let vs = |x: usize| slot_of[class[x]];
+        let gs = |x: usize| {
+            debug_assert_ne!(grad_slot[x], usize::MAX);
+            grad_slot[x]
+        };
+        for i in (0..=root).rev() {
+            if is_leaf(i) {
+                continue;
+            }
+            if reach[i] {
+                bwd_nodes_eager += 1;
+            }
+            if !reach[i] || !need[i] {
+                continue;
+            }
+            bwd_nodes_plan += 1;
+            let g = gs(i);
+            match nodes[i].op {
+                Op::Leaf => {}
+                Op::Matmul { a, b } => {
+                    let (m, k) = (nodes[a].value.shape[0], nodes[a].value.shape[1]);
+                    let nn = nodes[b].value.shape[1];
+                    if need[a] {
+                        bwd.push(BwdInstr::MatmulDa { g, bv: vs(b), t: gs(a), m, n: nn, k });
+                    }
+                    if need[b] {
+                        bwd.push(BwdInstr::MatmulDb { av: vs(a), g, t: gs(b), m, k, n: nn });
+                    }
+                }
+                Op::AddRow { a, bias } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::AccAdd { g, t: gs(a) });
+                    }
+                    if need[bias] {
+                        bwd.push(BwdInstr::AddRowBias {
+                            g,
+                            t: gs(bias),
+                            ncols: nodes[bias].value.numel(),
+                        });
+                    }
+                }
+                Op::Add { a, b } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::AccAdd { g, t: gs(a) });
+                    }
+                    if need[b] {
+                        bwd.push(BwdInstr::AccAdd { g, t: gs(b) });
+                    }
+                }
+                Op::Sub { a, b } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::AccAdd { g, t: gs(a) });
+                    }
+                    if need[b] {
+                        bwd.push(BwdInstr::AccSub { g, t: gs(b) });
+                    }
+                }
+                Op::Mul { a, b } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::AccMul { g, v: vs(b), t: gs(a) });
+                    }
+                    if need[b] {
+                        bwd.push(BwdInstr::AccMul { g, v: vs(a), t: gs(b) });
+                    }
+                }
+                Op::Scale { a, alpha } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::AccScaled { g, t: gs(a), alpha });
+                    }
+                }
+                Op::Cube { a } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::CubeBwd { g, v: vs(a), t: gs(a) });
+                    }
+                }
+                Op::Tanh { a } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::F1Acc {
+                            g,
+                            t0: vs(i),
+                            t: gs(a),
+                            group: 1,
+                            c: numel(a),
+                        });
+                    }
+                }
+                Op::Sin { a } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::SinBwd { g, v: vs(a), t: gs(a) });
+                    }
+                }
+                Op::Cos { a } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::CosBwd { g, v: vs(a), t: gs(a) });
+                    }
+                }
+                Op::MeanAll { a } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::MeanAllBwd { g, t: gs(a), numel: numel(a) });
+                    }
+                }
+                Op::SumAll { a } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::SumAllBwd { g, t: gs(a) });
+                    }
+                }
+                Op::GroupMean { a, group } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::GroupMeanBwd { g, t: gs(a), group });
+                    }
+                }
+                Op::BroadcastRows { a, group } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::BroadcastBwd {
+                            g,
+                            t: gs(a),
+                            group,
+                            c: nodes[a].value.shape[1],
+                        });
+                    }
+                }
+                Op::TileRows { a } => {
+                    if need[a] {
+                        bwd.push(BwdInstr::TileBwd { g, t: gs(a), len: numel(a) });
+                    }
+                }
+                Op::TanhJetT0 { z0 } => {
+                    if need[z0] {
+                        bwd.push(BwdInstr::F1Acc {
+                            g,
+                            t0: vs(i),
+                            t: gs(z0),
+                            group: 1,
+                            c: numel(z0),
+                        });
+                    }
+                }
+                Op::TanhJetO1 { t0, z1, group } => {
+                    let c = nodes[t0].value.shape[1];
+                    if need[z1] {
+                        bwd.push(BwdInstr::F1Acc { g, t0: vs(t0), t: gs(z1), group, c });
+                    }
+                    if need[t0] {
+                        bwd.push(BwdInstr::O1BwdT0 {
+                            g,
+                            z1: vs(z1),
+                            t0: vs(t0),
+                            t: gs(t0),
+                            group,
+                            c,
+                        });
+                    }
+                }
+                Op::TanhJetO2 { t0, z1, z2, group } => {
+                    let c = nodes[t0].value.shape[1];
+                    if need[z1] {
+                        bwd.push(BwdInstr::F2z1Acc {
+                            g,
+                            z1: vs(z1),
+                            t0: vs(t0),
+                            t: gs(z1),
+                            coef: 2.0,
+                            group,
+                            c,
+                        });
+                    }
+                    if need[z2] {
+                        bwd.push(BwdInstr::F1Acc { g, t0: vs(t0), t: gs(z2), group, c });
+                    }
+                    if need[t0] {
+                        bwd.push(BwdInstr::O2BwdT0 {
+                            g,
+                            z1: vs(z1),
+                            z2: vs(z2),
+                            t0: vs(t0),
+                            t: gs(t0),
+                            group,
+                            c,
+                        });
+                    }
+                }
+                Op::TanhJetO3 { t0, z1, z2, z3, group } => {
+                    let c = nodes[t0].value.shape[1];
+                    if need[z1] {
+                        bwd.push(BwdInstr::O3BwdZ1 {
+                            g,
+                            z1: vs(z1),
+                            z2: vs(z2),
+                            t0: vs(t0),
+                            t: gs(z1),
+                            group,
+                            c,
+                        });
+                    }
+                    if need[z2] {
+                        bwd.push(BwdInstr::F2z1Acc {
+                            g,
+                            z1: vs(z1),
+                            t0: vs(t0),
+                            t: gs(z2),
+                            coef: 3.0,
+                            group,
+                            c,
+                        });
+                    }
+                    if need[z3] {
+                        bwd.push(BwdInstr::F1Acc { g, t0: vs(t0), t: gs(z3), group, c });
+                    }
+                    if need[t0] {
+                        bwd.push(BwdInstr::O3BwdT0 {
+                            g,
+                            z1: vs(z1),
+                            z2: vs(z2),
+                            z3: vs(z3),
+                            t0: vs(t0),
+                            t: gs(t0),
+                            group,
+                            c,
+                        });
+                    }
+                }
+                Op::TanhJetO4 { t0, z1, z2, z3, z4, group } => {
+                    let c = nodes[t0].value.shape[1];
+                    if need[z1] {
+                        bwd.push(BwdInstr::O4BwdZ1 {
+                            g,
+                            z1: vs(z1),
+                            z2: vs(z2),
+                            z3: vs(z3),
+                            t0: vs(t0),
+                            t: gs(z1),
+                            group,
+                            c,
+                        });
+                    }
+                    if need[z2] {
+                        bwd.push(BwdInstr::O4BwdZ2 {
+                            g,
+                            z1: vs(z1),
+                            z2: vs(z2),
+                            t0: vs(t0),
+                            t: gs(z2),
+                            group,
+                            c,
+                        });
+                    }
+                    if need[z3] {
+                        bwd.push(BwdInstr::F2z1Acc {
+                            g,
+                            z1: vs(z1),
+                            t0: vs(t0),
+                            t: gs(z3),
+                            coef: 4.0,
+                            group,
+                            c,
+                        });
+                    }
+                    if need[z4] {
+                        bwd.push(BwdInstr::F1Acc { g, t0: vs(t0), t: gs(z4), group, c });
+                    }
+                    if need[t0] {
+                        bwd.push(BwdInstr::O4BwdT0 {
+                            g,
+                            z1: vs(z1),
+                            z2: vs(z2),
+                            z3: vs(z3),
+                            z4: vs(z4),
+                            t0: vs(t0),
+                            t: gs(t0),
+                            group,
+                            c,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    let packs: Vec<usize> = params
+        .iter()
+        .map(|&p| {
+            assert_ne!(
+                grad_slot[p],
+                usize::MAX,
+                "parameter leaf {p} has no gradient (dead parameter?)"
+            );
+            grad_slot[p]
+        })
+        .collect();
+
+    let stubs: Vec<Tensor> = nodes
+        .iter()
+        .map(|node| Tensor { shape: node.value.shape.clone(), data: Vec::new() })
+        .collect();
+    let fwd_arena: Vec<Vec<f32>> = slot_len
+        .iter()
+        .zip(slot_init.iter_mut())
+        .map(|(&len, init)| init.take().unwrap_or_else(|| vec![0.0; len]))
+        .collect();
+    let grad_arena: Vec<Vec<f32>> = grad_lens.iter().map(|&len| vec![0.0; len]).collect();
+
+    let arena_bytes = (slot_len.iter().sum::<usize>() + grad_lens.iter().sum::<usize>()) * 4;
+    let eager_bytes = ((0..n).map(numel).sum::<usize>()
+        + (0..n).filter(|&i| reach[i]).map(numel).sum::<usize>())
+        * 4;
+    let stats = PlanStats {
+        nodes: n,
+        fwd_instrs: fwd.len(),
+        bwd_instrs: bwd.len(),
+        bwd_nodes_eager,
+        bwd_nodes_plan,
+        folded,
+        cse_merged,
+        fwd_dead,
+        fwd_slots: fwd_arena.len() - binds.len() - const_map.len(),
+        arena_bytes,
+        eager_bytes,
+    };
+
+    Plan {
+        kinds,
+        stubs,
+        binds,
+        root,
+        root_slot: slot_of[class[root]],
+        root_grad: if want_backward { grad_slot[root] } else { usize::MAX },
+        fwd,
+        bwd,
+        packs,
+        fwd_arena,
+        grad_arena,
+        stats,
+    }
+}
+
+/// Independent proof that the lifetime allocator never puts two
+/// simultaneously-live values in one slot: for every slot, the occupancy
+/// intervals (definition position → last read, ∞ when pinned) must be
+/// pairwise disjoint.
+fn validate_lifetimes(intervals: &[(usize, usize, usize, bool)], n_slots: usize) {
+    let mut per_slot: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_slots];
+    for &(slot, def, last, pinned) in intervals {
+        let end = if pinned { usize::MAX } else { last };
+        assert!(def <= end, "definition after last use");
+        per_slot[slot].push((def, end));
+    }
+    for (slot, ivs) in per_slot.iter_mut().enumerate() {
+        ivs.sort_unstable();
+        for w in ivs.windows(2) {
+            assert!(
+                w[0].1 < w[1].0,
+                "plan lifetime aliasing in slot {slot}: [{}, {}] overlaps [{}, {}]",
+                w[0].0,
+                w[0].1,
+                w[1].0,
+                w[1].1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Tape, Var};
+    use super::*;
+
+    fn key(op: &'static str) -> PlanKey {
+        PlanKey { op, scalar_bits: 0, nc: 2, v: 0, d: 2, n_params: 4 }
+    }
+
+    /// Eager run -> (loss bits, grad bits); leaves the graph on the tape
+    /// ready for `compile_plan`.
+    fn eager_bits(
+        tape: &mut Tape,
+        build: impl Fn(&mut Tape) -> (Var, Vec<Var>),
+    ) -> (u32, Vec<u32>, Var, Vec<Var>) {
+        tape.reset();
+        let (loss, params) = build(tape);
+        let grads = tape.backward(loss);
+        let loss_bits = tape.value(loss).data[0].to_bits();
+        let mut grad_bits = Vec::new();
+        for p in &params {
+            grad_bits.extend(
+                grads[p.0].as_ref().expect("param grad").data.iter().map(|v| v.to_bits()),
+            );
+        }
+        tape.reclaim(grads);
+        (loss_bits, grad_bits, loss, params)
+    }
+
+    /// Replay the same builder sequence through the compiled plan and
+    /// assert bit-identical loss + grads.
+    fn assert_replay_matches(
+        tape: &mut Tape,
+        k: &PlanKey,
+        build: impl Fn(&mut Tape) -> (Var, Vec<Var>),
+        loss_bits: u32,
+        grad_bits: &[u32],
+    ) {
+        tape.reset();
+        tape.begin_replay(k);
+        let (loss, _) = build(tape);
+        let mut grad_out = Vec::new();
+        let loss_val = tape.replay_run(loss, &mut grad_out);
+        assert_eq!((loss_val as f32).to_bits(), loss_bits, "replay loss diverged");
+        let replay_bits: Vec<u32> = grad_out.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(replay_bits, grad_bits, "replay grads diverged");
+    }
+
+    #[test]
+    fn plan_cse_dedupes_shared_subgraph() {
+        let xs = [0.3f32, -0.7, 1.1, 0.2];
+        let ws = [0.5f32, -0.2, 0.8, 0.1];
+        let build = |tape: &mut Tape| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            let u = tape.matmul(x, w);
+            // Two structurally identical adjoint-dead forcing chains.
+            let f1 = tape.sin(x);
+            let f2 = tape.sin(x);
+            let t = tape.mul(u, f1);
+            let s = tape.add(t, f2);
+            let loss = tape.mean_all(s);
+            (loss, vec![w])
+        };
+        let mut tape = Tape::new();
+        let (loss_bits, grad_bits, loss, params) = eager_bits(&mut tape, build);
+        let k = key("test-cse");
+        tape.compile_plan(k, loss, &params);
+        let stats = tape.plan_stats(&k).unwrap();
+        assert!(stats.cse_merged >= 1, "expected CSE to merge the duplicate sin: {stats:?}");
+        assert_replay_matches(&mut tape, &k, build, loss_bits, &grad_bits);
+    }
+
+    #[test]
+    fn plan_dead_adjoint_skips_forcing_leaves() {
+        let xs = [0.3f32, -0.7, 1.1, 0.2];
+        let ws = [0.5f32, -0.2, 0.8, 0.1];
+        let gs = [0.9f32, 0.4, -0.3, 0.6];
+        let build = |tape: &mut Tape| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            let forcing = tape.leaf_from_slice(&[2, 2], &gs);
+            let u = tape.matmul(x, w);
+            // sin(forcing) is visited by the eager sweep but its adjoint
+            // cannot reach w — the plan must not emit backward for it.
+            let f = tape.sin(forcing);
+            let r = tape.sub(u, f);
+            let r2 = tape.mul(r, r);
+            let loss = tape.mean_all(r2);
+            (loss, vec![w])
+        };
+        let mut tape = Tape::new();
+        let (loss_bits, grad_bits, loss, params) = eager_bits(&mut tape, build);
+        let k = key("test-dce");
+        tape.compile_plan(k, loss, &params);
+        let stats = tape.plan_stats(&k).unwrap();
+        assert!(
+            stats.bwd_nodes_plan < stats.bwd_nodes_eager,
+            "dead-adjoint elimination had no effect: {stats:?}"
+        );
+        assert_replay_matches(&mut tape, &k, build, loss_bits, &grad_bits);
+    }
+
+    #[test]
+    fn plan_lifetime_slots_reused_without_aliasing() {
+        let xs = [0.3f32, -0.7, 1.1, 0.2];
+        let ws = [0.5f32, -0.2, 0.8, 0.1];
+        let build = |tape: &mut Tape| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            // A long adjoint-dead chain: each intermediate dies at its
+            // single use, so the allocator must recycle slots.  The
+            // compile-time interval validator proves no aliasing.
+            let mut a = tape.sin(x);
+            for _ in 0..6 {
+                a = tape.cos(a);
+            }
+            let u = tape.matmul(x, w);
+            let t = tape.mul(u, a);
+            let loss = tape.mean_all(t);
+            (loss, vec![w])
+        };
+        let mut tape = Tape::new();
+        let (loss_bits, grad_bits, loss, params) = eager_bits(&mut tape, build);
+        let k = key("test-lifetime");
+        tape.compile_plan(k, loss, &params);
+        let stats = tape.plan_stats(&k).unwrap();
+        assert!(
+            stats.fwd_slots < stats.fwd_instrs,
+            "lifetime assignment reused no slots: {stats:?}"
+        );
+        assert_replay_matches(&mut tape, &k, build, loss_bits, &grad_bits);
+    }
+
+    #[test]
+    fn plan_const_folding_zero_leaves() {
+        let xs = [0.3f32, -0.7, 1.1, 0.2];
+        let ws = [0.5f32, -0.2, 0.8, 0.1];
+        let build = |tape: &mut Tape| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            // cos(zeros) is constant across replays -> folded into a
+            // const slot; scale(·, 1.0) becomes a value alias.
+            let z = tape.zeros(&[2, 2]);
+            let c = tape.cos(z);
+            let u = tape.matmul(x, w);
+            let u1 = tape.scale(u, 1.0);
+            let t = tape.add(u1, c);
+            let loss = tape.mean_all(t);
+            (loss, vec![w])
+        };
+        let mut tape = Tape::new();
+        let (loss_bits, grad_bits, loss, params) = eager_bits(&mut tape, build);
+        let k = key("test-fold");
+        tape.compile_plan(k, loss, &params);
+        let stats = tape.plan_stats(&k).unwrap();
+        assert!(stats.folded >= 2, "expected cos(zeros) fold + scale(1.0) alias: {stats:?}");
+        assert_replay_matches(&mut tape, &k, build, loss_bits, &grad_bits);
+    }
+
+    #[test]
+    fn plan_mode_force_and_name() {
+        let _guard = plan_mode_guard();
+        let before = plan_mode();
+        force_plan_mode(PlanMode::Off);
+        assert!(!plan_enabled());
+        assert_eq!(plan_mode().name(), "off");
+        force_plan_mode(PlanMode::On);
+        assert!(plan_enabled());
+        assert_eq!(plan_mode().name(), "on");
+        force_plan_mode(before);
+    }
+
+    #[test]
+    fn plan_replay_binds_fresh_data_each_step() {
+        let ws = [0.5f32, -0.2, 0.8, 0.1];
+        let build = |tape: &mut Tape, xs: &[f32; 4]| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let x = tape.leaf_from_slice(&[2, 2], xs);
+            let u = tape.matmul(x, w);
+            let t = tape.tanh(u);
+            let t2 = tape.mul(t, t);
+            let loss = tape.mean_all(t2);
+            (loss, vec![w])
+        };
+        let xa = [0.3f32, -0.7, 1.1, 0.2];
+        let mut tape = Tape::new();
+        let (_, _, loss, params) = eager_bits(&mut tape, |t| build(t, &xa));
+        let k = key("test-rebind");
+        tape.compile_plan(k, loss, &params);
+        // Two further "steps" with fresh point data: each replay must
+        // match a from-scratch eager run on a second tape bitwise.
+        for xs in [[1.5f32, 0.1, -0.4, 0.9], [-0.2f32, 0.6, 0.3, -1.0]] {
+            let mut eager = Tape::new();
+            let (loss_bits, grad_bits, _, _) = eager_bits(&mut eager, |t| build(t, &xs));
+            assert_replay_matches(&mut tape, &k, |t| build(t, &xs), loss_bits, &grad_bits);
+        }
+    }
+
+    #[test]
+    fn plan_forward_only_replay_matches_eager() {
+        let ws = [0.5f32, -0.2, 0.8, 0.1];
+        let bs = [0.05f32, -0.03];
+        let xs = [0.3f32, -0.7, 1.1, 0.2];
+        let build = |tape: &mut Tape| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let b = tape.leaf_from_slice(&[2], &bs);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            let z = tape.matmul(x, w);
+            let h = tape.add_row(z, b);
+            tape.tanh(h)
+        };
+        let mut tape = Tape::new();
+        tape.reset();
+        let out = build(&mut tape);
+        let eager_bits: Vec<u32> = tape.value(out).data.iter().map(|v| v.to_bits()).collect();
+        let k = key("test-fwd");
+        tape.compile_forward_plan(k, out);
+        tape.reset();
+        tape.begin_replay(&k);
+        let out2 = build(&mut tape);
+        let mut vals = Vec::new();
+        tape.replay_forward(out2, &mut vals);
+        let replay_bits: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(replay_bits, eager_bits, "forward-only replay diverged");
+    }
+}

@@ -50,6 +50,8 @@ use hte_pinn::table;
 use hte_pinn::util::args::Args;
 
 const USAGE: &str = "usage: hte-pinn <info|train|worker|serve|loadgen|table|memmodel> [flags]
+  (any command: --no-plan, or HTE_PLAN=off, forces eager tape execution
+   instead of compiled-plan replay — bitwise identical, for A/B triage)
   info     --artifacts DIR
   train    --config FILE | [--family sg2|sg3|ac2|bihar
            --method probe|hte|unbiased|gpinn --estimator hte --d 100 --v 16
@@ -682,7 +684,12 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let command = raw.remove(0);
-    let args = Args::parse(raw, &[])?;
+    let mut args = Args::parse(raw, &["no-plan"])?;
+    if args.has("no-plan") {
+        // Escape hatch mirroring HTE_SIMD=scalar: force eager tape
+        // execution so any plan bug is A/B-diagnosable in one run.
+        hte_pinn::autodiff::force_plan_mode(hte_pinn::autodiff::PlanMode::Off);
+    }
     match command.as_str() {
         "info" => cmd_info(args),
         "train" => cmd_train(args),

@@ -38,7 +38,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::autodiff::{Tape, Var};
+use crate::autodiff::{plan_enabled, PlanKey, Tape, Var};
 use crate::pde::{Domain, OperatorKind, PdeProblem};
 use crate::runtime::{
     merge_shard_results, InProcessBackend, Shard, ShardBackend, ShardJob, ShardPlan, ShardResult,
@@ -735,11 +735,102 @@ pub fn shard_loss_grad(
     let (start, nc) = (shard.start, shard.nc);
     let order = op.order();
     tape.reset();
+    let key = plan_key_for(op, mlp, batch, nc);
+    let use_plan = plan_enabled();
+    if use_plan && tape.has_plan(&key) {
+        // Replay: the same builder sequence runs, but every call just
+        // binds leaf data / verifies the op kind; then two flat
+        // instruction loops execute over the plan's fixed arena.
+        // Bit-identical to the eager path below (DESIGN.md §12).
+        tape.begin_replay(&key);
+        let params = param_leaves(tape, mlp);
+        let net = jet_mlp_streams(tape, mlp, &params, batch, start, nc, order);
+        let mut ctx = ChunkCtx::new(problem, batch, start, nc, mlp.d, order, net);
+        let loss = op.chunk_loss(tape, &mut ctx);
+        grad_out.clear();
+        grad_out.reserve(mlp.n_params());
+        return tape.replay_run(loss, grad_out);
+    }
     let params = param_leaves(tape, mlp);
     let net = jet_mlp_streams(tape, mlp, &params, batch, start, nc, order);
     let mut ctx = ChunkCtx::new(problem, batch, start, nc, mlp.d, order, net);
     let loss = op.chunk_loss(tape, &mut ctx);
-    finish_chunk(tape, loss, &params, mlp.n_params(), grad_out)
+    let param_vars: Vec<Var> =
+        params.iter().flat_map(|&(w, bias)| [w, bias]).collect();
+    let loss_val = finish_chunk(tape, loss, &params, mlp.n_params(), grad_out);
+    if use_plan {
+        tape.compile_plan(key, loss, &param_vars);
+    }
+    loss_val
+}
+
+/// Plan-cache key for one residual-op shard: everything the recorded
+/// graph's *structure* depends on.  Chunk-remainder shards (`nc <
+/// CHUNK_POINTS`) get their own key, as does each probe count, input
+/// dimension, parameter count and graph-baked operator scalar (gPINN λ).
+pub fn plan_key_for(
+    op: &dyn ResidualOp,
+    mlp: &Mlp,
+    batch: &NativeBatch,
+    nc: usize,
+) -> PlanKey {
+    PlanKey {
+        op: op.name(),
+        scalar_bits: op.lambda_g().map(|l| l.to_bits()).unwrap_or(0),
+        nc,
+        v: batch.v,
+        d: mlp.d,
+        n_params: mlp.n_params(),
+    }
+}
+
+/// Forward-only planned batched MLP evaluation (the serve path): the
+/// plain `u = mlp(x)` forward is recorded once per batch shape as a tape
+/// graph, compiled to a forward-only plan, and replayed for every later
+/// batch of the same shape.  Bitwise equal to [`Mlp::forward_batch`]:
+/// `matmul_into` is exactly zero-fill + `matmul_acc` (the tape's matmul),
+/// the bias add is the same per-row elementwise addition
+/// (`simd::add_rows`), and tanh is the same scalar libm call — only the
+/// last layer skips the activation, as there.
+pub fn forward_batch_planned(
+    tape: &mut Tape,
+    mlp: &Mlp,
+    xs: &[f32],
+    n: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(xs.len(), n * mlp.d, "xs must be [n, d] row-major");
+    let key = PlanKey {
+        op: "mlp-fwd",
+        scalar_bits: 0,
+        nc: n,
+        v: 0,
+        d: mlp.d,
+        n_params: mlp.n_params(),
+    };
+    tape.reset();
+    let replay = tape.has_plan(&key);
+    if replay {
+        tape.begin_replay(&key);
+    }
+    let params = param_leaves(tape, mlp);
+    let x0 = tape.leaf_from_slice(&[n, mlp.d], xs);
+    let mut h = x0;
+    let last = params.len() - 1;
+    for (i, &(w, bias)) in params.iter().enumerate() {
+        let z = tape.matmul(h, w);
+        h = tape.add_row(z, bias);
+        if i < last {
+            h = tape.tanh(h);
+        }
+    }
+    out.clear();
+    if replay {
+        tape.replay_forward(h, out);
+        return;
+    }
+    out.extend_from_slice(&tape.value(h).data);
+    tape.compile_forward_plan(key, h);
 }
 
 // ---------------------------------------------------------------------------

@@ -66,7 +66,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::checkpoint;
 use crate::coordinator::{problem_for, MetricsLogger};
-use crate::nn::{ForwardScratch, Mlp};
+use crate::autodiff::{plan_enabled, Tape};
+use crate::nn::{forward_batch_planned, ForwardScratch, Mlp};
 use crate::pde::PdeProblem;
 use crate::rng::Xoshiro256pp;
 
@@ -114,6 +115,11 @@ pub struct EvalScratch {
     fwd: ForwardScratch,
     factors: Vec<f64>,
     vals: Vec<f64>,
+    /// Raw (unconstrained) forward values for the planned path.
+    raw: Vec<f32>,
+    /// Recorder/replayer for forward-only plans (one plan per batch
+    /// shape, cached per evaluator thread).
+    tape: Tape,
 }
 
 impl ServeModel {
@@ -171,6 +177,16 @@ impl ServeModel {
         assert_eq!(xs.len(), n * self.mlp.d, "xs must be [n, d] row-major");
         scratch.factors.clear();
         scratch.factors.extend(xs.chunks_exact(self.mlp.d).map(|x| self.problem.factor(x)));
+        if plan_enabled() {
+            // Forward-only plan replay: bitwise the eager batched
+            // forward (DESIGN.md §12), amortizing graph construction
+            // across the steady stream of same-shape microbatches.
+            forward_batch_planned(&mut scratch.tape, &self.mlp, xs, n, &mut scratch.raw);
+            out.extend(
+                scratch.raw.iter().zip(&scratch.factors).map(|(&u, &f)| f * u as f64),
+            );
+            return;
+        }
         self.mlp
             .forward_constrained_batch(xs, n, &scratch.factors, &mut scratch.vals, &mut scratch.fwd);
         out.extend_from_slice(&scratch.vals);

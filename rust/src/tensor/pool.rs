@@ -6,14 +6,27 @@
 //! for the buffers and every later step reuses them: the hot loop is
 //! allocation-free at steady state.
 //!
+//! Buffers are parked in **exact-length buckets**: a `take_zeroed(len)`
+//! is a hit only when a buffer of precisely that length was given back,
+//! so mixed-shape workloads (a primal `[n, c]` next to a tangent
+//! `[n·v, c]`) reuse each shape's own buffer instead of repeatedly
+//! resizing (and refilling) whatever was returned last.  [`BufferPool::
+//! alloc_count`] counts the misses, which is what the steady-state
+//! no-allocation tests assert on.
+//!
 //! Buffers handed out are always zeroed to `len`, so results never depend
 //! on what a recycled buffer previously held — a precondition for the
 //! bit-stable multi-threaded reduction in `nn::native_loss`.
 
-/// LIFO free-list of `Vec<f32>` buffers.
+use std::collections::HashMap;
+
+/// Size-bucketed LIFO free-list of `Vec<f32>` buffers.
 #[derive(Default)]
 pub struct BufferPool {
-    free: Vec<Vec<f32>>,
+    /// Exact length -> parked buffers of that length.
+    buckets: HashMap<usize, Vec<Vec<f32>>>,
+    /// Fresh heap allocations performed by [`BufferPool::take_zeroed`].
+    allocs: usize,
 }
 
 impl BufferPool {
@@ -23,29 +36,38 @@ impl BufferPool {
 
     /// Number of buffers currently parked in the pool.
     pub fn len(&self) -> usize {
-        self.free.len()
+        self.buckets.values().map(Vec::len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.free.is_empty()
+        self.len() == 0
     }
 
-    /// Take a buffer of exactly `len` zeroed elements (recycled if possible).
+    /// Fresh allocations made so far (bucket misses).  Steady-state hot
+    /// loops should hold this constant.
+    pub fn alloc_count(&self) -> usize {
+        self.allocs
+    }
+
+    /// Take a buffer of exactly `len` zeroed elements (recycled if a
+    /// same-length buffer is parked, freshly allocated otherwise).
     pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
-        match self.free.pop() {
+        match self.buckets.get_mut(&len).and_then(Vec::pop) {
             Some(mut buf) => {
-                buf.clear();
-                buf.resize(len, 0.0);
+                buf.fill(0.0);
                 buf
             }
-            None => vec![0.0; len],
+            None => {
+                self.allocs += 1;
+                vec![0.0; len]
+            }
         }
     }
 
-    /// Return a buffer to the pool for reuse.
+    /// Return a buffer to the pool for reuse (bucketed by its length).
     pub fn give(&mut self, buf: Vec<f32>) {
-        if buf.capacity() > 0 {
-            self.free.push(buf);
+        if !buf.is_empty() {
+            self.buckets.entry(buf.len()).or_default().push(buf);
         }
     }
 }
@@ -63,9 +85,9 @@ mod tests {
         let cap = a.capacity();
         pool.give(a);
         assert_eq!(pool.len(), 1);
-        // smaller request reuses the same allocation, fully zeroed
-        let b = pool.take_zeroed(4);
-        assert_eq!(b, vec![0.0; 4]);
+        // A same-length request reuses the same allocation, fully zeroed.
+        let b = pool.take_zeroed(8);
+        assert_eq!(b, vec![0.0; 8]);
         assert_eq!(b.capacity(), cap);
         assert!(pool.is_empty());
     }
@@ -74,8 +96,35 @@ mod tests {
     fn grows_when_needed() {
         let mut pool = BufferPool::new();
         pool.give(vec![1.0; 2]);
+        // Different length: the parked buffer stays in its bucket and a
+        // fresh one is allocated.
         let c = pool.take_zeroed(16);
         assert_eq!(c.len(), 16);
         assert!(c.iter().all(|&v| v == 0.0));
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn plan_arena_steady_state_two_sizes_do_not_allocate() {
+        let mut pool = BufferPool::new();
+        // Warm-up: first touch of each size allocates.
+        let a = pool.take_zeroed(64);
+        let b = pool.take_zeroed(640);
+        pool.give(a);
+        pool.give(b);
+        let warm = pool.alloc_count();
+        assert_eq!(warm, 2);
+        // Steady state: interleaved give/take cycles at two sizes — the
+        // mixed-shape pattern of a primal next to a tangent stream —
+        // must be all bucket hits.
+        for _ in 0..100 {
+            let a = pool.take_zeroed(64);
+            let b = pool.take_zeroed(640);
+            assert_eq!(a.len(), 64);
+            assert_eq!(b.len(), 640);
+            pool.give(b);
+            pool.give(a);
+        }
+        assert_eq!(pool.alloc_count(), warm, "steady-state cycles allocated");
     }
 }

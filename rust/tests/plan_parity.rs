@@ -1,0 +1,238 @@
+//! Compiled-plan replay parity suite (DESIGN.md §12).
+//!
+//! The plan compiler's contract is *bitwise* equality with eager tape
+//! execution: same kernels, same operand order, same accumulation order.
+//! Every test here runs the same engine step twice under plans — the
+//! first call records + compiles, the second is a pure replay through
+//! the flat instruction lists — and compares the **replayed** call
+//! against an eager (`HTE_PLAN=off`-equivalent) baseline by `to_bits`
+//! on the loss and every gradient element.
+//!
+//! Coverage axes: all five residual families, chunk-remainder batch
+//! shapes, forced SIMD levels, and 1/2/16 worker threads.
+
+use hte_pinn::autodiff::{force_plan_mode, plan_mode, plan_mode_guard, PlanMode};
+use hte_pinn::coordinator::problem_for;
+use hte_pinn::nn::{
+    GpinnResidual, Mlp, NativeBatch, NativeEngine, ResidualOp, UnbiasedTrace,
+};
+use hte_pinn::pde::{Domain, DomainSampler, PdeProblem};
+use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
+use hte_pinn::tensor::{
+    detect_simd_level, force_simd_level, simd_level, simd_level_guard, SimdLevel,
+};
+
+struct Case {
+    mlp: Mlp,
+    problem: Box<dyn PdeProblem>,
+    xs: Vec<f32>,
+    probes: Vec<f32>,
+    coeff: Vec<f32>,
+    n: usize,
+    v: usize,
+}
+
+impl Case {
+    /// sg2 case: unit-ball points, Rademacher probes.
+    fn new(d: usize, n: usize, v: usize, seed: u64) -> Self {
+        Self::for_problem("sg2", Domain::UnitBall, d, n, v, seed)
+    }
+
+    /// Allen–Cahn (`ac2`) case.
+    fn allen_cahn(d: usize, n: usize, v: usize, seed: u64) -> Self {
+        Self::for_problem("ac2", Domain::UnitBall, d, n, v, seed)
+    }
+
+    /// Biharmonic case: annulus points, Gaussian probes (Thm 3.4).
+    fn bihar(d: usize, n: usize, v: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = problem_for("bihar", d).expect("bihar");
+        let mut sampler = DomainSampler::new(Domain::Annulus, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut normal = Normal::new();
+        let mut probes = vec![0.0f32; v * d];
+        normal.fill_f32(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        normal.fill_f32(&mut rng, &mut coeff);
+        Self { mlp, problem, xs, probes, coeff, n, v }
+    }
+
+    /// Unbiased (Eq. 8) case: sg2 with two stacked probe sets.
+    fn unbiased(d: usize, n: usize, v: usize, seed: u64) -> Self {
+        let mut case = Self::new(d, n, v, seed);
+        let mut rng = Xoshiro256pp::new(seed ^ 0x5EED);
+        let mut second = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut second);
+        case.probes.extend_from_slice(&second);
+        case.v = 2 * v;
+        case
+    }
+
+    fn for_problem(
+        family: &str,
+        domain: Domain,
+        d: usize,
+        n: usize,
+        v: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mlp = Mlp::init(d, &mut rng);
+        let problem = problem_for(family, d).expect(family);
+        let mut sampler = DomainSampler::new(domain, d, rng.fork(1));
+        let xs = sampler.batch(n);
+        let mut probes = vec![0.0f32; v * d];
+        fill_rademacher(&mut rng, &mut probes);
+        let mut coeff = vec![0.0f32; problem.n_coeff()];
+        Normal::new().fill_f32(&mut rng, &mut coeff);
+        Self { mlp, problem, xs, probes, coeff, n, v }
+    }
+
+    fn batch(&self) -> NativeBatch<'_> {
+        NativeBatch {
+            xs: &self.xs,
+            probes: &self.probes,
+            coeff: &self.coeff,
+            n: self.n,
+            v: self.v,
+        }
+    }
+}
+
+/// One engine step for `case` under the given op (None = the problem's
+/// default residual operator).
+fn step(
+    case: &Case,
+    op: Option<&dyn ResidualOp>,
+    engine: &mut NativeEngine,
+) -> (f32, Vec<f32>) {
+    let mut grad = Vec::new();
+    let loss = match op {
+        Some(op) => engine
+            .loss_and_grad_with(&case.mlp, case.problem.as_ref(), op, &case.batch(), &mut grad)
+            .expect("engine step"),
+        None => engine
+            .loss_and_grad(&case.mlp, case.problem.as_ref(), &case.batch(), &mut grad)
+            .expect("engine step"),
+    };
+    (loss, grad)
+}
+
+/// Assert that compiled-plan **replay** (second call on a plans-on
+/// engine) is bitwise identical to eager tape execution.  Must be
+/// called with the plan-mode guard already held.
+fn assert_plan_replay_matches_eager(
+    case: &Case,
+    op: Option<&dyn ResidualOp>,
+    threads: usize,
+    label: &str,
+) {
+    let prior = plan_mode();
+    force_plan_mode(PlanMode::Off);
+    let (loss_eager, grad_eager) = step(case, op, &mut NativeEngine::new(threads));
+
+    force_plan_mode(PlanMode::On);
+    let mut engine = NativeEngine::new(threads);
+    // First call records the tape and compiles per-shard plans …
+    let (loss_first, grad_first) = step(case, op, &mut engine);
+    // … second call is a pure replay through the flat instruction lists.
+    let (loss_replay, grad_replay) = step(case, op, &mut engine);
+    force_plan_mode(prior);
+
+    assert_eq!(
+        loss_first.to_bits(),
+        loss_eager.to_bits(),
+        "{label}: compile-step loss diverged from eager"
+    );
+    assert_eq!(
+        loss_replay.to_bits(),
+        loss_eager.to_bits(),
+        "{label}: replayed loss diverged from eager ({loss_replay} vs {loss_eager})"
+    );
+    assert_eq!(grad_eager.len(), grad_replay.len(), "{label}: gradient length");
+    for (i, (e, r)) in grad_eager.iter().zip(&grad_replay).enumerate() {
+        assert_eq!(
+            e.to_bits(),
+            r.to_bits(),
+            "{label}: replayed grad[{i}] diverged from eager ({r} vs {e})"
+        );
+    }
+    for (i, (e, f)) in grad_eager.iter().zip(&grad_first).enumerate() {
+        assert_eq!(e.to_bits(), f.to_bits(), "{label}: compile-step grad[{i}] diverged");
+    }
+}
+
+/// All five residual families, on a chunk-remainder batch shape
+/// (n = 13 with CHUNK_POINTS = 4 leaves a 1-point tail chunk, so both
+/// the full-chunk and the remainder plan keys are exercised).
+#[test]
+fn plan_replay_bitwise_all_families() {
+    let _guard = plan_mode_guard();
+    let sg2 = Case::new(6, 13, 4, 41);
+    assert_plan_replay_matches_eager(&sg2, None, 2, "sg2");
+
+    let ac2 = Case::allen_cahn(6, 13, 4, 43);
+    assert_plan_replay_matches_eager(&ac2, None, 2, "ac2");
+
+    let bihar = Case::bihar(6, 13, 4, 47);
+    assert_plan_replay_matches_eager(&bihar, None, 2, "bihar");
+
+    let unbiased = Case::unbiased(6, 13, 4, 53);
+    assert_plan_replay_matches_eager(&unbiased, Some(&UnbiasedTrace), 2, "unbiased");
+
+    let gpinn = Case::new(6, 13, 4, 59);
+    let op = GpinnResidual { lambda: 0.8 };
+    assert_plan_replay_matches_eager(&gpinn, Some(&op), 2, "gpinn");
+}
+
+/// Chunk-shape sweep: exact multiples, single-point batches, and
+/// remainder tails all get their own plan key and must all replay
+/// bitwise.
+#[test]
+fn plan_replay_bitwise_across_chunk_shapes() {
+    let _guard = plan_mode_guard();
+    for n in [1usize, 4, 6, 13] {
+        let case = Case::new(5, n, 3, 100 + n as u64);
+        assert_plan_replay_matches_eager(&case, None, 1, &format!("sg2 n={n}"));
+        let bihar = Case::bihar(5, n, 3, 200 + n as u64);
+        assert_plan_replay_matches_eager(&bihar, None, 1, &format!("bihar n={n}"));
+    }
+}
+
+/// Thread-count sweep: per-thread plan caches must not perturb the
+/// bit-stable sharded reduction.
+#[test]
+fn plan_replay_bitwise_across_thread_counts() {
+    let _guard = plan_mode_guard();
+    for threads in [1usize, 2, 16] {
+        let sg2 = Case::new(6, 13, 4, 7);
+        assert_plan_replay_matches_eager(&sg2, None, threads, &format!("sg2 t={threads}"));
+        let ac2 = Case::allen_cahn(6, 13, 4, 11);
+        assert_plan_replay_matches_eager(&ac2, None, threads, &format!("ac2 t={threads}"));
+    }
+}
+
+/// SIMD-level sweep: replay dispatches through the same `tensor::simd`
+/// kernels as eager execution, so forcing scalar vs the detected vector
+/// level must stay bitwise-parity *within* each level.
+#[test]
+fn plan_replay_bitwise_under_forced_simd_levels() {
+    let _simd_guard = simd_level_guard();
+    let _plan_guard = plan_mode_guard();
+    let prior = simd_level();
+    let mut levels = vec![SimdLevel::Scalar];
+    let vector = detect_simd_level();
+    if vector != SimdLevel::Scalar {
+        levels.push(vector);
+    }
+    for level in levels {
+        force_simd_level(level);
+        let sg2 = Case::new(6, 13, 4, 17);
+        assert_plan_replay_matches_eager(&sg2, None, 2, &format!("sg2 simd={level:?}"));
+        let op = GpinnResidual { lambda: 0.5 };
+        let gpinn = Case::new(6, 13, 4, 19);
+        assert_plan_replay_matches_eager(&gpinn, Some(&op), 2, &format!("gpinn simd={level:?}"));
+    }
+    force_simd_level(prior);
+}
