@@ -7,16 +7,19 @@
 //!
 //! Writes `BENCH_serve.json` (cwd = rust/, same convention as
 //! `perf_breakdown`'s `BENCH_native.json`); CI uploads it as an
-//! artifact.
+//! artifact.  A second section measures the same workload through a
+//! 2-replica `router` front end — capacity, relayed accounting, and
+//! the router's overhead relative to dialing a replica directly.
 
 use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::Duration;
 
 use hte_pinn::nn::Mlp;
 use hte_pinn::rng::Xoshiro256pp;
 use hte_pinn::runtime::{
-    run_loadgen, serve_queries, Arrival, Deadlines, LoadgenOpts, LoadgenReport, ServeModel,
-    ServeOpts,
+    run_loadgen, serve_queries, serve_router, Arrival, Deadlines, LoadgenOpts, LoadgenReport,
+    Router, RouterOpts, ServeClient, ServeModel, ServeOpts, SharedModel,
 };
 use hte_pinn::util::json::{num, obj, s, Value};
 
@@ -25,15 +28,57 @@ const BATCH: usize = 256;
 const CONNS: usize = 2;
 const QUEUE_CAP: usize = 16;
 
+fn bench_deadlines() -> Deadlines {
+    Deadlines::resolve([Some(5), Some(5), Some(60)], None)
+}
+
 fn serve_opts() -> ServeOpts {
     ServeOpts {
-        deadlines: Deadlines::resolve([Some(5), Some(5), Some(60)], None),
+        deadlines: bench_deadlines(),
         threads: 2,
         microbatch: 256,
         queue_cap: QUEUE_CAP,
         max_batch: 16_384,
         ..ServeOpts::default()
     }
+}
+
+/// Bind loopback and run the serve loop for `max_conns` sessions.
+fn spawn_serve(
+    model: &Arc<ServeModel>,
+    max_conns: usize,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding the bench listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let shared = Arc::new(SharedModel::new(Arc::clone(model)));
+    let handle = std::thread::spawn(move || {
+        serve_queries(listener, shared, serve_opts(), Some(max_conns), None)
+    });
+    (addr, handle)
+}
+
+fn loadgen_opts(addr: String, arrival: Arrival, rate: f64, requests: usize) -> LoadgenOpts {
+    LoadgenOpts {
+        addrs: vec![addr],
+        d: D,
+        arrival,
+        rate,
+        conns: CONNS,
+        batch: BATCH,
+        requests,
+        seed: 7,
+        deadlines: bench_deadlines(),
+    }
+}
+
+fn assert_bitwise(report: &LoadgenReport, rate: f64) {
+    assert!(
+        report.bitwise_ok,
+        "BITWISE GATE FAILED: served answers diverged from the local forward \
+         ({} answers checked at offered rate {rate:.1} qps)",
+        report.bitwise_checked
+    );
+    assert_eq!(report.answered, report.bitwise_checked, "every answer must be verified");
 }
 
 /// One serve session (fresh queue + stats), one loadgen run against it.
@@ -43,33 +88,64 @@ fn run_level(
     rate: f64,
     requests: usize,
 ) -> LoadgenReport {
-    let listener = TcpListener::bind("127.0.0.1:0").expect("binding the bench listener");
-    let addr = listener.local_addr().unwrap().to_string();
-    let server_model = Arc::clone(model);
-    let server = std::thread::spawn(move || {
-        serve_queries(listener, server_model, serve_opts(), Some(CONNS), None)
-    });
-    let opts = LoadgenOpts {
-        addr,
-        d: D,
-        arrival,
-        rate,
-        conns: CONNS,
-        batch: BATCH,
-        requests,
-        seed: 7,
-        deadlines: Deadlines::resolve([Some(5), Some(5), Some(60)], None),
-    };
-    let report = run_loadgen(&opts, Some(model)).expect("loadgen run");
+    let (addr, server) = spawn_serve(model, CONNS);
+    let report =
+        run_loadgen(&loadgen_opts(addr, arrival, rate, requests), Some(model)).expect("loadgen");
     server.join().expect("serve thread panicked").expect("serve loop errored");
-    assert!(
-        report.bitwise_ok,
-        "BITWISE GATE FAILED: served answers diverged from the local forward \
-         ({} answers checked at offered rate {rate:.1} qps)",
-        report.bitwise_checked
-    );
-    assert_eq!(report.answered, report.bitwise_checked, "every answer must be verified");
+    assert_bitwise(&report, rate);
     report
+}
+
+/// The same workload through a 2-replica router: fresh replicas, a
+/// fresh router, one loadgen run, then the router's own accounting
+/// snapshot (fetched on an extra connection after the load completes).
+fn run_router_level(
+    model: &Arc<ServeModel>,
+    arrival: Arrival,
+    rate: f64,
+    requests: usize,
+) -> (LoadgenReport, Value) {
+    // each replica serves exactly one session: the router's
+    let (ra, ha) = spawn_serve(model, 1);
+    let (rb, hb) = spawn_serve(model, 1);
+    let router = Arc::new(
+        Router::connect(
+            &[ra, rb],
+            RouterOpts {
+                deadlines: bench_deadlines(),
+                d: D,
+                eject_after: 3,
+                rejoin_interval: Duration::from_secs(5),
+            },
+        )
+        .expect("router connects to both replicas"),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding the router listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let router_loop = Arc::clone(&router);
+    let rt = std::thread::spawn(move || serve_router(listener, router_loop, Some(CONNS + 1)));
+    let report = run_loadgen(&loadgen_opts(addr.clone(), arrival, rate, requests), Some(model))
+        .expect("router loadgen");
+    let stats = {
+        let mut conn = ServeClient::connect(&addr, D, &bench_deadlines())
+            .expect("dialing the router for stats");
+        conn.stats().expect("router stats")
+    };
+    rt.join().expect("router thread panicked").expect("router loop errored");
+    drop(router); // hang up on the replicas so their serve loops finish
+    ha.join().expect("replica thread panicked").expect("replica loop errored");
+    hb.join().expect("replica thread panicked").expect("replica loop errored");
+    assert_bitwise(&report, rate);
+    let snap = Value::parse(&stats).expect("router stats must be JSON");
+    let queries = snap.get("queries").unwrap().as_usize().unwrap();
+    let answered = snap.get("answered").unwrap().as_usize().unwrap();
+    let rejected = snap.get("rejected").unwrap().as_usize().unwrap();
+    assert_eq!(
+        queries,
+        answered + rejected,
+        "ROUTER ACCOUNTING FAILED: every query must be counted exactly once"
+    );
+    (report, snap)
 }
 
 fn level_json(label: &str, offered_qps: f64, r: &LoadgenReport) -> Value {
@@ -130,6 +206,44 @@ fn main() {
         );
     }
 
+    // The router section: the same closed-loop workload through a
+    // 2-replica front end, then open-loop at 2x the router's own
+    // capacity.  Gates: bitwise answers end to end, and the router's
+    // accounting partition (queries == answered + rejected).
+    println!("== router saturation (2 replicas, same workload) ==");
+    let (router_closed, closed_snap) = run_router_level(&model, Arrival::Closed, 0.0, 120);
+    let router_capacity = router_closed.qps.max(1.0);
+    println!(
+        "  router closed-loop capacity: {:.1} qps ({:.2}x direct; p50 {:.2} ms, p99 {:.2} ms)",
+        router_capacity,
+        router_capacity / capacity,
+        router_closed.p50_ms,
+        router_closed.p99_ms
+    );
+    let router_rate = router_capacity * 2.0;
+    let router_requests = ((router_rate * 0.75) as usize).clamp(60, 600);
+    let (router_open, open_snap) =
+        run_router_level(&model, Arrival::Open, router_rate, router_requests);
+    println!(
+        "  router open 2x ({router_rate:.1} qps offered): answered {:>4}, rejected {:>4}, \
+         qps {:>7.1}, p99 {:>8.2} ms",
+        router_open.answered, router_open.rejected, router_open.qps, router_open.p99_ms
+    );
+    let router_levels = vec![
+        obj(vec![
+            ("label", s("router_closed")),
+            ("offered_qps", num(router_capacity)),
+            ("report", level_json("router_closed", router_capacity, &router_closed)),
+            ("router_stats", closed_snap),
+        ]),
+        obj(vec![
+            ("label", s("router_open_2x")),
+            ("offered_qps", num(router_rate)),
+            ("report", level_json("router_open_2x", router_rate, &router_open)),
+            ("router_stats", open_snap),
+        ]),
+    ];
+
     let n_levels = levels.len();
     let out = obj(vec![
         ("bench", s("serve_saturation")),
@@ -139,7 +253,16 @@ fn main() {
         ("queue_cap", num(QUEUE_CAP as f64)),
         ("capacity_qps", num(capacity)),
         ("levels", Value::Arr(levels)),
+        (
+            "router",
+            obj(vec![
+                ("replicas", num(2.0)),
+                ("capacity_qps", num(router_capacity)),
+                ("capacity_vs_direct", num(router_capacity / capacity)),
+                ("levels", Value::Arr(router_levels)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve.json", out.to_json()).expect("writing BENCH_serve.json");
-    println!("wrote BENCH_serve.json ({n_levels} offered-load levels)");
+    println!("wrote BENCH_serve.json ({n_levels} direct levels + 2 router levels)");
 }

@@ -8,6 +8,13 @@
 //! diagnostic instead of unpacking garbage weights.  v1 headers (no
 //! `version` field) still load: their model block derives from the
 //! embedded config.
+//!
+//! Format v3 appends a CRC-32 of the payload after the last float, so
+//! a torn or bit-flipped file — the case hot reload and `--resume` must
+//! survive when a checkpoint is copied or synced non-atomically — is
+//! rejected by name *before* any weights are unpacked.  The length
+//! cross-check alone cannot catch a same-length corruption.  v1/v2
+//! files (no trailing checksum) still load.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -22,7 +29,33 @@ const MAGIC: &[u8; 8] = b"HTEPINN1";
 
 /// Current header format.  v1: config/step/state_len/coeff[/batch_n].
 /// v2: + `version`, + `model {family, d, method, n_params}`.
-pub const CHECKPOINT_VERSION: usize = 2;
+/// v3: + a trailing little-endian CRC-32 over the raw f32 payload.
+pub const CHECKPOINT_VERSION: usize = 3;
+
+/// IEEE CRC-32 (reflected, polynomial 0xEDB88320), hand-rolled and
+/// table-free — the offline build carries no external crates, and
+/// checkpoint payloads are a few MB at most, where the bitwise form is
+/// plenty fast.  Feed `0xFFFF_FFFF` as the initial value and finish
+/// with [`crc32_finish`].
+fn crc32_update(mut crc: u32, data: &[u8]) -> u32 {
+    for &byte in data {
+        crc ^= byte as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    crc
+}
+
+fn crc32_finish(crc: u32) -> u32 {
+    !crc
+}
+
+/// One-shot CRC-32 of a byte slice (the load-side check).
+fn crc32(data: &[u8]) -> u32 {
+    crc32_finish(crc32_update(0xFFFF_FFFF, data))
+}
 
 /// What the serving tier needs to rebuild the constrained model —
 /// pinned in the header (v2) so a checkpoint is self-describing even
@@ -117,9 +150,15 @@ pub fn save(
         f.write_all(MAGIC)?;
         f.write_all(&(header.len() as u64).to_le_bytes())?;
         f.write_all(&header)?;
+        // v3: checksum the payload as it streams out, then append it —
+        // the reader rejects a torn or bit-flipped payload by name.
+        let mut crc = 0xFFFF_FFFFu32;
         for v in state {
-            f.write_all(&v.to_le_bytes())?;
+            let bytes = v.to_le_bytes();
+            crc = crc32_update(crc, &bytes);
+            f.write_all(&bytes)?;
         }
+        f.write_all(&crc32_finish(crc).to_le_bytes())?;
         let file = f.into_inner().context("flushing checkpoint temp file")?;
         file.sync_all().context("syncing checkpoint temp file")?;
     }
@@ -222,14 +261,35 @@ pub fn load(path: impl AsRef<Path>) -> Result<(CheckpointMeta, Vec<f32>)> {
     f.read_to_end(&mut payload)?;
     // Header-vs-payload length check: a short payload is a truncated
     // write, a long one a corrupted/mismatched header — both must be
-    // clean errors, never silently-garbage parameters.
-    if payload.len() != meta.state_len * 4 {
+    // clean errors, never silently-garbage parameters.  v3 files carry
+    // a trailing CRC-32 after the floats; v1/v2 end at the last float.
+    let float_bytes = meta.state_len * 4;
+    if version >= 3 {
+        if payload.len() != float_bytes + 4 {
+            bail!(
+                "checkpoint payload is {} bytes but the v{version} header promises {} floats \
+                 ({} bytes) plus a 4-byte checksum — truncated or corrupted file",
+                payload.len(),
+                meta.state_len,
+                float_bytes
+            );
+        }
+        let stored = u32::from_le_bytes(payload[float_bytes..].try_into().unwrap());
+        let computed = crc32(&payload[..float_bytes]);
+        if stored != computed {
+            bail!(
+                "checkpoint payload checksum mismatch: the file records crc32 {stored:#010x} \
+                 but the payload hashes to {computed:#010x} — torn or bit-flipped file"
+            );
+        }
+        payload.truncate(float_bytes);
+    } else if payload.len() != float_bytes {
         bail!(
             "checkpoint payload is {} bytes but the header promises {} floats ({} bytes) — \
              truncated or corrupted file",
             payload.len(),
             meta.state_len,
-            meta.state_len * 4
+            float_bytes
         );
     }
     let state = payload
@@ -515,5 +575,75 @@ mod tests {
         let err = load(&path).unwrap_err().to_string();
         assert!(err.contains("promises"), "unexpected error: {err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The v3 gate the length check cannot provide: a same-length
+    /// corruption (one payload bit flipped, e.g. a torn copy of an
+    /// autosave) is rejected by the trailing CRC-32, by name, before
+    /// any weights are unpacked.
+    #[test]
+    fn corrupted_payload_bit_flip_fails_the_checksum() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-crc-{}", std::process::id()));
+        let path = dir.join("crc.ckpt");
+        let state: Vec<f32> = (0..128).map(|i| i as f32 * 0.25).collect();
+        save(&path, &config(), 4, Some(8), &[0.5], &state).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one bit in the middle of the float payload — the file
+        // length and every header field stay valid
+        let mid = bytes.len() - 4 - 2 * state.len();
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+        assert!(err.contains("bit-flipped"), "unexpected error: {err}");
+        // a flipped *checksum* is caught the same way
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[mid] ^= 0x10; // restore the payload
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01; // corrupt the stored crc instead
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A v3 file cut inside the trailing checksum is a clean length
+    /// error that names the missing checksum bytes.
+    #[test]
+    fn corrupted_truncated_checksum_is_a_clean_error() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-crct-{}", std::process::id()));
+        let path = dir.join("crct.ckpt");
+        save(&path, &config(), 4, None, &[0.5], &[1.0, 2.0, 3.0]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 2]).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A v2 file (header version 2, no trailing checksum) written by
+    /// the previous binary still loads — the CRC is required from v3 on.
+    #[test]
+    fn legacy_v2_header_without_checksum_still_loads() {
+        let dir = std::env::temp_dir().join(format!("hte-ckpt-v2-{}", std::process::id()));
+        let path = dir.join("v2.ckpt");
+        write_raw(
+            &path,
+            &v2_header(model_json("sg2", 10, "probe", Mlp::n_params_for(10))),
+            &[1.0, 2.0],
+        );
+        let (meta, state) = load(&path).unwrap();
+        assert_eq!(meta.version, 2);
+        assert_eq!(state, vec![1.0, 2.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Known-answer test for the hand-rolled CRC-32 (IEEE reflected):
+    /// the standard "123456789" check value is 0xCBF43926.
+    #[test]
+    fn crc32_known_answer() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
     }
 }

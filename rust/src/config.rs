@@ -84,6 +84,31 @@ pub fn parse_arrival(s: &str) -> Result<Arrival> {
     }
 }
 
+/// Signals `serve --reload-on` accepts — the shared constant behind the
+/// reload-trigger error, mirroring [`KNOWN_ARRIVALS`].  (Only SIGHUP
+/// today: the classic "re-read your config" signal; the file-watch
+/// trigger is `--watch` and needs no signal.)
+pub const KNOWN_RELOAD_SIGNALS: [&str; 1] = ["sighup"];
+
+/// A parsed `serve --reload-on` value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReloadSignal {
+    Sighup,
+}
+
+/// One place maps reload-signal strings onto [`ReloadSignal`]
+/// (case-insensitive: `SIGHUP` and `sighup` both work); a typo errors
+/// with the supported set listed, exactly like [`parse_arrival`].
+pub fn parse_reload_signal(s: &str) -> Result<ReloadSignal> {
+    match s.to_ascii_lowercase().as_str() {
+        "sighup" => Ok(ReloadSignal::Sighup),
+        other => bail!(
+            "unknown reload signal {other} (supported: {})",
+            KNOWN_RELOAD_SIGNALS.join(" | ")
+        ),
+    }
+}
+
 /// `table --which` values the native driver serves (tables 1-3 need the
 /// artifact backend); [`unknown_native_table`] builds the shared
 /// supported-set error.
@@ -295,6 +320,23 @@ mod tests {
         assert!(err.contains("poisson"), "{err}");
         for arrival in KNOWN_ARRIVALS {
             assert!(err.contains(arrival), "{err} missing {arrival}");
+        }
+    }
+
+    /// Both directions of the `--reload-on` constant: every listed
+    /// value parses (in either case), and a typo's error quotes the
+    /// whole supported set.
+    #[test]
+    fn serve_reload_signals_parse_and_errors_list_the_set() {
+        assert_eq!(parse_reload_signal("sighup").unwrap(), ReloadSignal::Sighup);
+        assert_eq!(parse_reload_signal("SIGHUP").unwrap(), ReloadSignal::Sighup);
+        for signal in KNOWN_RELOAD_SIGNALS {
+            assert!(parse_reload_signal(signal).is_ok(), "KNOWN_RELOAD_SIGNALS lists {signal}");
+        }
+        let err = parse_reload_signal("sigusr1").unwrap_err().to_string();
+        assert!(err.contains("sigusr1"), "{err}");
+        for signal in KNOWN_RELOAD_SIGNALS {
+            assert!(err.contains(signal), "{err} missing {signal}");
         }
     }
 

@@ -12,6 +12,9 @@
 //! hte-pinn serve --resume ckpt.bin --listen 0.0.0.0:7071
 //!                                         # serve a trained surrogate (batched
 //!                                         # inference, bitwise the local forward)
+//! hte-pinn router --replicas HOST:7071,HOST:7072 --listen 0.0.0.0:7070
+//!                                         # replicated serving with failover:
+//!                                         # clients dial it like a lone serve
 //! hte-pinn loadgen --connect HOST:7071 --d 100 --requests 1000
 //!                                         # drive a serve endpoint, report latency
 //! hte-pinn table --which 1 --epochs 2000  # regenerate a paper table
@@ -29,7 +32,9 @@ use anyhow::{bail, Context, Result};
 
 #[cfg(feature = "xla")]
 use hte_pinn::checkpoint;
-use hte_pinn::config::{parse_arrival, parse_backend, unknown_native_table, Backend, FileConfig};
+use hte_pinn::config::{
+    parse_arrival, parse_backend, parse_reload_signal, unknown_native_table, Backend, FileConfig,
+};
 #[cfg(feature = "xla")]
 use hte_pinn::coordinator::Trainer;
 use hte_pinn::coordinator::{
@@ -42,16 +47,21 @@ use hte_pinn::pde::PdeProblem;
 #[cfg(feature = "xla")]
 use hte_pinn::runtime::Engine;
 use hte_pinn::runtime::{
-    env_rank, run_loadgen, serve, serve_conns_with_faults, serve_queries, ClusterOpts, Deadlines,
-    FaultPlan, InProcessBackend, JobSpec, LoadgenOpts, LocalWorkerPool, Manifest, ServeModel,
-    ServeOpts, ShardBackend, TcpClusterBackend,
+    bind_reuse, env_rank, run_loadgen, serve, serve_conns_with_faults, serve_queries, serve_router,
+    ClusterOpts, Deadlines, FaultPlan, InProcessBackend, JobSpec, LoadgenOpts, LocalWorkerPool,
+    Manifest, ReloadPlan, Router, RouterOpts, ServeModel, ServeOpts, ShardBackend, SharedModel,
+    TcpClusterBackend,
 };
 use hte_pinn::table;
 use hte_pinn::util::args::Args;
 
-const USAGE: &str = "usage: hte-pinn <info|train|worker|serve|loadgen|table|memmodel> [flags]
+const USAGE: &str = "usage: hte-pinn <info|train|worker|serve|router|loadgen|table|memmodel> [flags]
   (any command: --no-plan, or HTE_PLAN=off, forces eager tape execution
    instead of compiled-plan replay — bitwise identical, for A/B triage)
+  (every socket phase honors the HTE_CONNECT_TIMEOUT_SECS /
+   HTE_HANDSHAKE_TIMEOUT_SECS / HTE_STEP_TIMEOUT_SECS env deadlines,
+   defaults 10/10/600 seconds; HTE_WORKER_TIMEOUT_SECS is the legacy
+   alias for the step deadline; per-command flags win over env)
   info     --artifacts DIR
   train    --config FILE | [--family sg2|sg3|ac2|bihar
            --method probe|hte|unbiased|gpinn --estimator hte --d 100 --v 16
@@ -76,7 +86,25 @@ const USAGE: &str = "usage: hte-pinn <info|train|worker|serve|loadgen|table|memm
            checkpoint; answers are bitwise the local forward; port 0 = auto)
            [--threads T --microbatch 256 --queue-cap 64 --max-batch 16384
            --metrics FILE  (stream observability snapshots as JSONL)]
-  loadgen  --connect HOST:PORT --d D [--arrival closed|open --rate QPS
+           [hot reload: --reload-on sighup (re-read the checkpoint on
+           SIGHUP) and/or --watch PATH (poll PATH and reload when it
+           changes); the swap is atomic between batches, a reload that
+           fails validation is rejected by name and the old model keeps
+           serving; every answer carries model_version/ckpt_step]
+           [--fault SPEC  (serve-phase chaos — grammar die_after_queries=N,
+           stall_secs=S@QUERY, drop_conn@QUERY, corrupt_frame@QUERY;
+           also read from HTE_FAULT)]
+  router   --replicas HOST:PORT,.. --listen HOST:PORT  (replicated serving
+           front end: clients dial it exactly like a lone serve; queries
+           fan across the replicas, a failed replica's queries retry on a
+           survivor — answers are bitwise interchangeable — saturation
+           rejections are relayed unretried; dead replicas are ejected
+           and probed for rejoin)
+           [--d 100 --eject-after 3 --rejoin-interval-secs 5
+           (env: HTE_REJOIN_INTERVAL_SECS)]
+  loadgen  --connect HOST:PORT[,HOST:PORT,..] --d D (connections round-robin
+           over the endpoints; the report tallies per endpoint)
+           [--arrival closed|open --rate QPS
            --conns C --batch N --requests R --seed S]
            [--resume CKPT  (verify every answer bitwise vs a local forward;
            a divergence fails the run)] [--out FILE  (write the JSON report)]
@@ -372,8 +400,10 @@ fn cmd_worker(mut args: Args) -> Result<()> {
     let Some(listen) = listen else {
         bail!("worker needs --listen HOST:PORT (port 0 picks a free port)\n{USAGE}");
     };
-    let listener = std::net::TcpListener::bind(&listen)
-        .with_context(|| format!("binding the worker listener on {listen}"))?;
+    // SO_REUSEADDR bind, so a respawned worker can take over the port
+    // its dead predecessor left in TIME_WAIT
+    let listener =
+        bind_reuse(&listen).with_context(|| format!("binding the worker listener on {listen}"))?;
     let addr = listener.local_addr()?;
     println!("listening on {addr}");
     use std::io::Write;
@@ -407,6 +437,9 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let queue_cap: usize = args.get_parse("queue-cap", 64usize)?;
     let max_batch: usize = args.get_parse("max-batch", 16_384usize)?;
     let metrics = args.get("metrics");
+    let reload_on = args.get("reload-on");
+    let watch = args.get("watch");
+    let fault = args.get("fault");
     args.finish()?;
     let Some(resume) = resume else {
         bail!("serve needs --resume CKPT (a checkpoint written by train --save)\n{USAGE}");
@@ -414,14 +447,57 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let Some(listen) = listen else {
         bail!("serve needs --listen HOST:PORT (port 0 picks a free port)\n{USAGE}");
     };
+    // Hot-reload triggers: --reload-on sighup re-reads the checkpoint
+    // on SIGHUP; --watch PATH polls PATH's mtime (usually the --resume
+    // file an autosaving trainer keeps overwriting).  Either way the
+    // swap validates first and the old model keeps serving on failure.
+    let on_sighup = match &reload_on {
+        Some(signal) => {
+            parse_reload_signal(signal)?;
+            true
+        }
+        None => false,
+    };
+    let reload = if on_sighup || watch.is_some() {
+        Some(ReloadPlan {
+            path: PathBuf::from(watch.clone().unwrap_or_else(|| resume.clone())),
+            on_sighup,
+            watch: watch.is_some(),
+            poll: Duration::from_millis(500),
+        })
+    } else {
+        None
+    };
+    // `--fault` wins over HTE_FAULT; both rank-gate against
+    // HTE_WORKER_RANK so one spec can target a single replica of a
+    // spawned fleet.  A real process should really die on Die.
+    let mut fault_plan = FaultPlan::gate_by_rank(
+        match fault {
+            Some(spec) => FaultPlan::parse(&spec).context("--fault")?,
+            None => FaultPlan::from_env()?,
+        },
+        env_rank(),
+    );
+    fault_plan.exit_process = true;
     let model = Arc::new(ServeModel::from_checkpoint(&resume)?);
-    let listener = std::net::TcpListener::bind(&listen)
-        .with_context(|| format!("binding the serve listener on {listen}"))?;
+    // SO_REUSEADDR bind: a respawned replica must take over its dead
+    // predecessor's port immediately, or the router's rejoin probe
+    // would wait out a full TIME_WAIT minute
+    let listener =
+        bind_reuse(&listen).with_context(|| format!("binding the serve listener on {listen}"))?;
     let addr = listener.local_addr()?;
     println!(
         "serving {}/{} d={} ({} params, checkpoint step {})",
         model.spec.family, model.spec.method, model.spec.d, model.spec.n_params, model.step
     );
+    if let Some(plan) = &reload {
+        println!(
+            "hot reload armed: {}{}{:?}",
+            if plan.on_sighup { "SIGHUP, " } else { "" },
+            if plan.watch { "watching " } else { "path " },
+            plan.path
+        );
+    }
     println!("listening on {addr}");
     use std::io::Write;
     std::io::stdout().flush().ok();
@@ -430,13 +506,70 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         microbatch: microbatch.max(1),
         queue_cap: queue_cap.max(1),
         max_batch: max_batch.max(1),
+        reload,
+        fault: fault_plan,
         ..ServeOpts::default()
     };
     let metrics = match metrics {
         Some(path) => Some(MetricsLogger::to_file(path)?),
         None => None,
     };
-    serve_queries(listener, model, opts, None, metrics)
+    serve_queries(listener, Arc::new(SharedModel::new(model)), opts, None, metrics)
+}
+
+/// `hte-pinn router --replicas HOST:PORT,.. --listen HOST:PORT`: the
+/// replicated serving front end (DESIGN.md §13).  Dials every replica,
+/// cross-checks they agree on the served model, then accepts clients on
+/// the same wire protocol a lone serve process speaks — fanning queries
+/// across the pool, retrying transport failures on survivors (safe:
+/// answers are bitwise interchangeable), relaying saturation rejections
+/// unretried, and ejecting/rejoining replicas as they die and return.
+fn cmd_router(mut args: Args) -> Result<()> {
+    let replicas = args.get("replicas");
+    let listen = args.get("listen");
+    let d: usize = args.get_parse("d", 100usize)?;
+    let eject_after: u32 = args.get_parse("eject-after", 3u32)?;
+    let rejoin = args.get("rejoin-interval-secs");
+    args.finish()?;
+    let Some(replicas) = replicas else {
+        bail!("router needs --replicas HOST:PORT,.. (running hte-pinn serve processes)\n{USAGE}");
+    };
+    let Some(listen) = listen else {
+        bail!("router needs --listen HOST:PORT (port 0 picks a free port)\n{USAGE}");
+    };
+    let addrs: Vec<String> = replicas
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        bail!("--replicas lists no addresses");
+    }
+    let mut opts = RouterOpts::new(d);
+    opts.eject_after = eject_after.max(1);
+    if let Some(s) = rejoin {
+        let secs = s
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("--rejoin-interval-secs: cannot parse {s:?}: {e}"))?;
+        opts.rejoin_interval = Duration::from_secs(secs.max(1));
+    }
+    let router = Arc::new(Router::connect(&addrs, opts)?);
+    let listener =
+        bind_reuse(&listen).with_context(|| format!("binding the router listener on {listen}"))?;
+    let addr = listener.local_addr()?;
+    println!(
+        "routing {} d={} ({} params, max_batch {}) across {} replicas ({} live)",
+        router.spec().family,
+        router.spec().d,
+        router.spec().n_params,
+        router.max_batch(),
+        router.replica_count(),
+        router.live_replicas()
+    );
+    println!("listening on {addr}");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    serve_router(listener, router, None)
 }
 
 /// `hte-pinn loadgen --connect HOST:PORT --d D`: drive a serve endpoint
@@ -456,9 +589,20 @@ fn cmd_loadgen(mut args: Args) -> Result<()> {
     let resume = args.get("resume");
     let out = args.get("out");
     args.finish()?;
-    let Some(addr) = connect else {
+    let Some(connect) = connect else {
         bail!("loadgen needs --connect HOST:PORT (a running hte-pinn serve)\n{USAGE}");
     };
+    // a comma list round-robins connections over several endpoints
+    // (e.g. a router and a bare replica side by side); the report
+    // tallies each endpoint separately
+    let addrs: Vec<String> = connect
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        bail!("--connect lists no addresses");
+    }
     let verify = match &resume {
         Some(path) => Some(ServeModel::from_checkpoint(path)?),
         None => None,
@@ -469,7 +613,7 @@ fn cmd_loadgen(mut args: Args) -> Result<()> {
         }
     }
     let opts = LoadgenOpts {
-        addr,
+        addrs,
         d,
         arrival,
         rate,
@@ -695,6 +839,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(args),
         "worker" => cmd_worker(args),
         "serve" => cmd_serve(args),
+        "router" => cmd_router(args),
         "loadgen" => cmd_loadgen(args),
         "table" => cmd_table(args),
         "memmodel" => cmd_memmodel(args),

@@ -70,7 +70,9 @@ use super::shard::{prepare_results, split_range, ShardBackend, ShardJob, ShardPl
 /// Bumped whenever a frame layout changes; a version mismatch is a hard
 /// handshake error (shipping shards to a differently-planned binary
 /// would silently break the bitwise guarantee).
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: ANSWER and STATS carry `model_version`/`ckpt_step` so clients
+/// can assert which weights answered across a hot checkpoint reload.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 pub(crate) const FRAME_MAGIC: u32 = 0x4854_4550; // "HTEP"
 /// Hard cap against garbage peers / corrupted length words.
@@ -178,7 +180,7 @@ fn splitmix64(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
-fn addr_salt(addr: &str) -> u64 {
+pub(crate) fn addr_salt(addr: &str) -> u64 {
     use std::hash::{Hash, Hasher};
     let mut h = std::collections::hash_map::DefaultHasher::new();
     addr.hash(&mut h);
@@ -187,8 +189,9 @@ fn addr_salt(addr: &str) -> u64 {
 
 /// Exponential backoff (100 ms · 2^attempt, capped at 5 s) plus up to
 /// 25% address-salted jitter so a fleet of coordinators re-dialing one
-/// restarted worker doesn't stampede it in lockstep.
-fn backoff_delay(attempt: u32, salt: u64) -> Duration {
+/// restarted worker doesn't stampede it in lockstep.  Shared with the
+/// serve-tier router and loadgen, which re-dial replicas the same way.
+pub(crate) fn backoff_delay(attempt: u32, salt: u64) -> Duration {
     let base = 100u64.saturating_mul(1 << attempt.min(6)).min(5_000);
     let jitter = splitmix64(salt ^ ((attempt as u64) << 32)) % (base / 4 + 1);
     Duration::from_millis(base + jitter)
@@ -1249,6 +1252,116 @@ fn handle_coordinator(
     }
 }
 
+/// Bind a TCP listener with `SO_REUSEADDR` set, so a respawned process
+/// can take over the port its predecessor died holding.  Rust's
+/// `TcpListener::bind` never sets the flag, and when a worker or serve
+/// replica dies its accepted connections sit in TIME_WAIT for ~60 s —
+/// a plain rebind of the same port gets "address already in use" for
+/// that whole minute, which is exactly the window a failover respawn
+/// needs to land in.  Linux only lets a `SO_REUSEADDR` bind fold
+/// TIME_WAIT entries whose own socket carried the flag, so the *first*
+/// incarnation must bind through here too (accepted connections
+/// inherit it from the listener); that is why every listening CLI verb
+/// (`worker`, `serve`, `router`) uses this instead of a plain bind.
+/// Non-IPv4 listen addresses fall back to the plain bind.
+pub fn bind_reuse(listen: &str) -> Result<TcpListener> {
+    let addr = listen
+        .to_socket_addrs()
+        .with_context(|| format!("resolving listen address {listen}"))?
+        .next()
+        .with_context(|| format!("listen address {listen} resolves to nothing"))?;
+    match addr {
+        SocketAddr::V4(v4) => {
+            reuseaddr::bind_v4(v4).with_context(|| format!("binding {listen} with SO_REUSEADDR"))
+        }
+        other => TcpListener::bind(other).with_context(|| format!("binding {listen}")),
+    }
+}
+
+/// The raw-socket dance behind [`bind_reuse`]: libc `socket` /
+/// `setsockopt(SO_REUSEADDR)` / `bind` / `listen`, handed to std via
+/// `FromRawFd`.  Spelled out against the C ABI (same idiom as the
+/// SIGHUP latch in `runtime::serve`) because the crate deliberately
+/// has no libc dependency.
+#[cfg(unix)]
+mod reuseaddr {
+    use std::net::{SocketAddrV4, TcpListener};
+    use std::os::unix::io::FromRawFd;
+
+    use anyhow::{bail, Result};
+
+    // Linux/BSD values, identical on x86_64 and aarch64.
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+    const BACKLOG: i32 = 128;
+
+    /// `struct sockaddr_in`: family in host order, port and address in
+    /// network byte order.
+    #[repr(C)]
+    struct SockaddrIn {
+        sin_family: u16,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, name: i32, value: *const i32, len: u32) -> i32;
+        fn bind(fd: i32, addr: *const SockaddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub(super) fn bind_v4(v4: SocketAddrV4) -> Result<TcpListener> {
+        let sa = SockaddrIn {
+            sin_family: AF_INET as u16,
+            sin_port: v4.port().to_be(),
+            // network order = the octets laid out in memory as-is
+            sin_addr: u32::from_ne_bytes(v4.ip().octets()),
+            sin_zero: [0u8; 8],
+        };
+        unsafe {
+            let fd = socket(AF_INET, SOCK_STREAM, 0);
+            if fd < 0 {
+                bail!("socket(): {}", std::io::Error::last_os_error());
+            }
+            let one: i32 = 1;
+            if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one, std::mem::size_of::<i32>() as u32)
+                != 0
+            {
+                let e = std::io::Error::last_os_error();
+                let _ = close(fd);
+                bail!("setsockopt(SO_REUSEADDR): {e}");
+            }
+            if bind(fd, &sa, std::mem::size_of::<SockaddrIn>() as u32) != 0 {
+                let e = std::io::Error::last_os_error();
+                let _ = close(fd);
+                bail!("bind(): {e}");
+            }
+            if listen(fd, BACKLOG) != 0 {
+                let e = std::io::Error::last_os_error();
+                let _ = close(fd);
+                bail!("listen(): {e}");
+            }
+            Ok(TcpListener::from_raw_fd(fd))
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod reuseaddr {
+    use std::net::{SocketAddrV4, TcpListener};
+
+    use anyhow::Result;
+
+    pub(super) fn bind_v4(v4: SocketAddrV4) -> Result<TcpListener> {
+        Ok(TcpListener::bind(v4)?)
+    }
+}
+
 /// Blocking worker loop behind `hte-pinn worker --listen`: accept
 /// coordinators one at a time, forever.  Each coordinator session runs
 /// its shards with `threads` in-process worker threads (the thread
@@ -1920,5 +2033,28 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("probe4"), "{err}");
+    }
+
+    /// A respawned listener takes over a port whose previous owner died
+    /// holding live connections.  Closing the accepted side first is an
+    /// active close, which parks the connection in TIME_WAIT on the
+    /// server's (port-owning) side — the state that makes a plain
+    /// rebind fail with "address already in use" for ~60 s.  Binding
+    /// through [`bind_reuse`] both times must succeed immediately.
+    #[test]
+    fn cluster_bind_reuse_takes_over_a_port_left_in_time_wait() {
+        let first = bind_reuse("127.0.0.1:0").expect("first bind");
+        let port = first.local_addr().unwrap().port();
+        let addr = format!("127.0.0.1:{port}");
+        let client = TcpStream::connect(&addr).expect("dialing the first listener");
+        let (accepted, _) = first.accept().expect("accepting");
+        drop(accepted); // server closes first -> server-side TIME_WAIT
+        drop(client);
+        drop(first);
+        std::thread::sleep(Duration::from_millis(100)); // let the FINs trade
+        let second = bind_reuse(&addr).expect("rebinding the dead process's port");
+        let probe = TcpStream::connect(&addr).expect("dialing the respawned listener");
+        drop(probe);
+        drop(second);
     }
 }

@@ -17,12 +17,24 @@
 //! stall_secs=S@STEP      sleep S seconds before handling coordinator step STEP
 //! drop_conn@STEP         close the connection instead of answering step STEP
 //! corrupt_frame@STEP     answer step STEP with a garbage frame header
+//! die_after_queries=N    (serve tier) answer N QUERY frames, then die
+//! stall_secs=S@QUERY     (serve tier) sleep S seconds before every QUERY
+//! drop_conn@QUERY        (serve tier) close the connection on every QUERY
+//! corrupt_frame@QUERY    (serve tier) answer every QUERY with a garbage header
 //! ```
 //!
 //! `@STEP` clauses key on the coordinator's step counter carried in the
 //! STEP frame header; `die_after_steps` counts frames actually served,
 //! which persists across coordinator sessions (a worker that served two
 //! sessions of one step each dies on the third frame).
+//!
+//! The `QUERY`-phase clauses target the inference tier (DESIGN.md §11):
+//! queries carry client-chosen ids, not a global counter, so the serve
+//! clauses are either count-based (`die_after_queries`, counting across
+//! all connections of the process) or unconditional per query.  They
+//! drive the router chaos suite (DESIGN.md §13): a replica that dies,
+//! stalls, drops, or corrupts mid-load must be ejected and its queries
+//! retried on a survivor without the client seeing a failure.
 
 use std::time::Duration;
 
@@ -44,6 +56,17 @@ pub struct FaultPlan {
     /// Answer this coordinator step with a garbage frame header (the
     /// coordinator must reject it, mark the worker dead, and reassign).
     pub corrupt_frame_at: Option<u64>,
+    /// (Serve tier) die after answering this many QUERY frames, summed
+    /// across every connection of the process.
+    pub die_after_queries: Option<u64>,
+    /// (Serve tier) sleep this long before handling every QUERY — a
+    /// wedged replica the router's step deadline must shed.
+    pub stall_query: Option<Duration>,
+    /// (Serve tier) close the connection on every QUERY instead of
+    /// answering.
+    pub drop_conn_query: bool,
+    /// (Serve tier) answer every QUERY with a garbage frame header.
+    pub corrupt_frame_query: bool,
     /// Whether a `die_after_steps` death exits the whole process (real
     /// CLI workers) or just stops the serve loop (in-process test
     /// workers, where `process::exit` would kill the test harness).
@@ -57,6 +80,10 @@ impl FaultPlan {
             && self.stall.is_none()
             && self.drop_conn_at.is_none()
             && self.corrupt_frame_at.is_none()
+            && self.die_after_queries.is_none()
+            && self.stall_query.is_none()
+            && !self.drop_conn_query
+            && !self.corrupt_frame_query
     }
 
     /// Parse a comma-separated fault spec (see the module docs for the
@@ -74,25 +101,42 @@ impl FaultPlan {
             } else if let Some(v) = clause.strip_prefix("die_after_steps=") {
                 plan.die_after_steps =
                     Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+            } else if let Some(v) = clause.strip_prefix("die_after_queries=") {
+                plan.die_after_queries =
+                    Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
             } else if let Some(v) = clause.strip_prefix("stall_secs=") {
                 let (secs, step) = v
                     .split_once('@')
                     .with_context(|| format!("fault clause {clause:?} needs S@STEP"))?;
                 let secs: u64 =
                     secs.parse().with_context(|| format!("fault clause {clause:?}"))?;
-                let step: u64 =
-                    step.parse().with_context(|| format!("fault clause {clause:?}"))?;
-                plan.stall = Some((Duration::from_secs(secs), step));
+                if step == "QUERY" {
+                    plan.stall_query = Some(Duration::from_secs(secs));
+                } else {
+                    let step: u64 =
+                        step.parse().with_context(|| format!("fault clause {clause:?}"))?;
+                    plan.stall = Some((Duration::from_secs(secs), step));
+                }
             } else if let Some(v) = clause.strip_prefix("drop_conn@") {
-                plan.drop_conn_at =
-                    Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+                if v == "QUERY" {
+                    plan.drop_conn_query = true;
+                } else {
+                    plan.drop_conn_at =
+                        Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+                }
             } else if let Some(v) = clause.strip_prefix("corrupt_frame@") {
-                plan.corrupt_frame_at =
-                    Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+                if v == "QUERY" {
+                    plan.corrupt_frame_query = true;
+                } else {
+                    plan.corrupt_frame_at =
+                        Some(v.parse().with_context(|| format!("fault clause {clause:?}"))?);
+                }
             } else {
                 bail!(
                     "unknown fault clause {clause:?} (grammar: rank=K, die_after_steps=N, \
-                     stall_secs=S@STEP, drop_conn@STEP, corrupt_frame@STEP)"
+                     stall_secs=S@STEP, drop_conn@STEP, corrupt_frame@STEP, \
+                     die_after_queries=N, stall_secs=S@QUERY, drop_conn@QUERY, \
+                     corrupt_frame@QUERY)"
                 );
             }
         }
@@ -148,11 +192,14 @@ pub struct FaultState {
     pub plan: FaultPlan,
     /// STEP frames this worker has answered (normally or corruptly).
     pub steps_served: u64,
+    /// QUERY frames this serve process has answered, across all of its
+    /// connections (`die_after_queries` counts these).
+    pub queries_served: u64,
 }
 
 impl FaultState {
     pub fn new(plan: FaultPlan) -> Self {
-        Self { plan, steps_served: 0 }
+        Self { plan, steps_served: 0, queries_served: 0 }
     }
 
     /// Decide the fate of one incoming STEP frame carrying coordinator
@@ -178,6 +225,31 @@ impl FaultState {
             return FaultAction::DropConn;
         }
         self.steps_served += 1;
+        FaultAction::None
+    }
+
+    /// Decide the fate of one incoming QUERY frame (serve tier).  Like
+    /// [`Self::on_step`], a `stall_secs=S@QUERY` clause sleeps *here*;
+    /// once a `die_after_queries` budget is spent the state stays dead,
+    /// so a replica that "died" in-process keeps refusing queries on
+    /// every connection rather than flickering back.
+    pub fn on_query(&mut self) -> FaultAction {
+        if let Some(n) = self.plan.die_after_queries {
+            if self.queries_served >= n {
+                return FaultAction::Die;
+            }
+        }
+        if let Some(dur) = self.plan.stall_query {
+            std::thread::sleep(dur);
+        }
+        if self.plan.corrupt_frame_query {
+            self.queries_served += 1;
+            return FaultAction::CorruptFrame;
+        }
+        if self.plan.drop_conn_query {
+            return FaultAction::DropConn;
+        }
+        self.queries_served += 1;
         FaultAction::None
     }
 }
@@ -251,5 +323,50 @@ mod tests {
         assert_eq!(st.on_step(5), FaultAction::CorruptFrame);
         // a dropped connection does not count as served; corruption does
         assert_eq!(st.steps_served, 3);
+    }
+
+    #[test]
+    fn fault_spec_parses_serve_phase_clauses() {
+        let plan = FaultPlan::parse(
+            "die_after_queries=4, stall_secs=2@QUERY, drop_conn@QUERY, corrupt_frame@QUERY",
+        )
+        .unwrap();
+        assert_eq!(plan.die_after_queries, Some(4));
+        assert_eq!(plan.stall_query, Some(Duration::from_secs(2)));
+        assert!(plan.drop_conn_query);
+        assert!(plan.corrupt_frame_query);
+        assert!(!plan.is_empty());
+        // the step-keyed forms are untouched by the QUERY variants
+        assert!(plan.stall.is_none());
+        assert!(plan.drop_conn_at.is_none());
+        assert!(plan.corrupt_frame_at.is_none());
+        // QUERY is the only non-numeric step accepted
+        assert!(FaultPlan::parse("drop_conn@SOMETIME").is_err());
+        assert!(FaultPlan::parse("stall_secs=1@LATER").is_err());
+    }
+
+    #[test]
+    fn fault_state_dies_after_serving_n_queries() {
+        let mut st = FaultState::new(FaultPlan::parse("die_after_queries=2").unwrap());
+        assert_eq!(st.on_query(), FaultAction::None);
+        assert_eq!(st.on_query(), FaultAction::None);
+        // dead and staying dead — every later connection sees Die too
+        assert_eq!(st.on_query(), FaultAction::Die);
+        assert_eq!(st.on_query(), FaultAction::Die);
+        assert_eq!(st.queries_served, 2);
+        // step faults and query faults keep independent counters
+        assert_eq!(st.steps_served, 0);
+    }
+
+    #[test]
+    fn fault_state_query_drop_and_corrupt_are_unconditional() {
+        let mut st = FaultState::new(FaultPlan::parse("corrupt_frame@QUERY").unwrap());
+        assert_eq!(st.on_query(), FaultAction::CorruptFrame);
+        assert_eq!(st.on_query(), FaultAction::CorruptFrame);
+        assert_eq!(st.queries_served, 2);
+        let mut st = FaultState::new(FaultPlan::parse("drop_conn@QUERY").unwrap());
+        assert_eq!(st.on_query(), FaultAction::DropConn);
+        // a dropped query was never answered
+        assert_eq!(st.queries_served, 0);
     }
 }

@@ -1,30 +1,34 @@
 //! L3 runtime substrate: the shard-plan execution layer (scheduling
 //! from in-process threads to TCP worker processes, bitwise
 //! deterministic — DESIGN.md §10), the batched inference tier over the
-//! same wire protocol (`hte-pinn serve` — DESIGN.md §11), plus the
-//! artifact manifest/PJRT engine.
+//! same wire protocol (`hte-pinn serve` — DESIGN.md §11), the
+//! replicated query router with failover (`hte-pinn router` —
+//! DESIGN.md §13), plus the artifact manifest/PJRT engine.
 //!
-//! The shard layer, serve tier and the manifest are always available;
-//! the PJRT `Engine` needs the real XLA runtime and is gated behind
-//! `--features xla` (default builds resolve the dependency via the
-//! in-repo `xla-stub`).
+//! The shard layer, serve tier, router and the manifest are always
+//! available; the PJRT `Engine` needs the real XLA runtime and is gated
+//! behind `--features xla` (default builds resolve the dependency via
+//! the in-repo `xla-stub`).
 
 mod cluster;
 #[cfg(feature = "xla")]
 mod engine;
 mod fault;
 mod manifest;
+mod router;
 mod serve;
 mod shard;
 
 pub use cluster::{
-    serve, serve_conns, serve_conns_with_faults, ClusterOpts, Deadlines, JobSpec, LocalWorkerPool,
-    RespawnHook, TcpClusterBackend, PROTOCOL_VERSION,
+    bind_reuse, serve, serve_conns, serve_conns_with_faults, ClusterOpts, Deadlines, JobSpec,
+    LocalWorkerPool, RespawnHook, TcpClusterBackend, PROTOCOL_VERSION,
 };
 pub use fault::{env_rank, FaultAction, FaultPlan, FaultState};
+pub use router::{serve_router, ReplicaSnapshot, Router, RouterOpts, RouterSnapshot};
 pub use serve::{
-    run_loadgen, serve_queries, Arrival, EvalScratch, LoadgenOpts, LoadgenReport, QueryReply,
-    ServeClient, ServeModel, ServeOpts, ServeSnapshot,
+    run_loadgen, serve_queries, Arrival, EndpointReport, EvalScratch, LoadgenOpts, LoadgenReport,
+    ModelEpoch, QueryReply, ReloadPlan, ServeClient, ServeModel, ServeOpts, ServeSnapshot,
+    SharedModel,
 };
 #[cfg(feature = "xla")]
 pub use engine::Engine;

@@ -1,0 +1,1043 @@
+//! `hte-pinn router`: a replicated serving front end with failover
+//! (DESIGN.md §13).
+//!
+//! The router speaks the serve wire protocol on *both* sides.  Clients
+//! dial it exactly like a lone serve process — same HELLO/HELLO_ACK
+//! handshake, same `QUERY`/`ANSWER`/`STATS` tags — and behind it a pool
+//! of replica serve processes answers the actual queries.  Because a
+//! served answer is bitwise the local forward for the same checkpoint
+//! (DESIGN.md §11), any replica's answer is interchangeable with any
+//! other's, which makes transparent retry *semantically free*: a query
+//! that dies with one replica is re-sent to a survivor and the client
+//! never learns.
+//!
+//! What is retried and what is not, precisely:
+//!
+//! - **Transport failures** (connect refused, read/write error, frame
+//!   desync, deadline shed) are retried on the next replica in
+//!   round-robin order.  The failing replica's connection is dropped
+//!   and its consecutive-failure count bumped.
+//! - **Saturation/oversize rejections** are *not* retried.  They are
+//!   the replica's backpressure signal; re-sending an already-rejected
+//!   query to its neighbor amplifies exactly the overload that caused
+//!   the rejection.  The rejection frame is relayed to the client
+//!   verbatim and counted separately (`saturated`).
+//!
+//! Replica health is a small state machine per replica:
+//!
+//! ```text
+//!           round trip ok            failure
+//!   LIVE ------------------> LIVE  ----------> LIVE (conn dropped,
+//!     ^                                         re-dial after backoff)
+//!     |  handshake ok                  | consecutive_failures
+//!     |  (rejoins += 1)                v reaches eject_after
+//!   EJECTED <------------------------ (ejections += 1)
+//!     (re-dial every max(rejoin_interval, backoff))
+//! ```
+//!
+//! Re-dial backoff reuses the cluster's bounded-exponential machinery
+//! with deterministic per-address jitter ([`backoff_delay`] /
+//! [`addr_salt`]), so a pool of routers hammering the same dead replica
+//! staggers its retries reproducibly.  A rejoining replica's ACK is
+//! re-validated against the agreed spec — a replica restarted with a
+//! different checkpoint family or architecture is named and kept out.
+//!
+//! Answers are relayed as **raw payload bytes** — the router never
+//! re-encodes an answer it forwards, so the bits a client sees are the
+//! bits the replica produced (the `model_version`/`ckpt_step` stamps
+//! ride along untouched).  The only answers the router mints itself are
+//! "no live replicas" rejections, stamped `model_version 0` because no
+//! model produced them.
+//!
+//! Accounting invariant, checked by the chaos suite: every query is
+//! counted exactly once — `queries == answered + rejected`, where
+//! `rejected` = relayed replica rejections + router-local "no live
+//! replicas" rejections.  `retried` and `saturated` are diagnostic
+//! overlays, not part of the partition.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::cluster::{
+    addr_salt, backoff_delay, env_secs, read_frame, read_frame_or_eof, send_error, write_frame,
+    Deadlines, Dec, Enc, JobSpec, TAG_ANSWER, TAG_HELLO, TAG_HELLO_ACK, TAG_QUERY, TAG_STATS,
+};
+use super::serve::{check_hello, encode_answer_rejected, ServeClient, ANSWER_REJECTED};
+
+/// Router configuration.  [`RouterOpts::new`] gives the CLI defaults;
+/// tests shrink the knobs for speed.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterOpts {
+    pub deadlines: Deadlines,
+    /// Input dimension the replicas must serve (fixes `n_params` too —
+    /// the architecture is a function of `d`).
+    pub d: usize,
+    /// Consecutive round-trip failures before a replica is ejected.
+    pub eject_after: u32,
+    /// Minimum interval between re-dial attempts at an *ejected*
+    /// replica (a merely-disconnected one retries on the shorter
+    /// failure backoff).
+    pub rejoin_interval: Duration,
+}
+
+impl RouterOpts {
+    /// Defaults: deadlines from the environment, eject after 3
+    /// consecutive failures, probe ejected replicas every 5 seconds
+    /// (override with `HTE_REJOIN_INTERVAL_SECS`).
+    pub fn new(d: usize) -> Self {
+        RouterOpts {
+            deadlines: Deadlines::from_env(),
+            d,
+            eject_after: 3,
+            rejoin_interval: Duration::from_secs(
+                env_secs("HTE_REJOIN_INTERVAL_SECS").unwrap_or(5).max(1),
+            ),
+        }
+    }
+}
+
+/// Mutable half of a replica: the (single, shared) connection plus the
+/// failure streak that drives ejection.  Held under a mutex — a round
+/// trip owns the connection end to end, so answers can never
+/// interleave and id-matching stays trivial.
+struct ConnState {
+    client: Option<ServeClient>,
+    consecutive_failures: u32,
+    last_attempt: Option<Instant>,
+}
+
+/// One backend serve process, with lifetime counters for the stats
+/// snapshot.
+struct Replica {
+    addr: String,
+    /// Deterministic jitter salt for re-dial backoff.
+    salt: u64,
+    conn: Mutex<ConnState>,
+    answered: AtomicU64,
+    failures: AtomicU64,
+    saturations: AtomicU64,
+    /// `false` while ejected (failure streak reached `eject_after`).
+    live: AtomicBool,
+}
+
+/// Router-level counters.  `queries == answered + rejected` always;
+/// `saturated`/`retried`/`ejections`/`rejoins` are diagnostics.
+struct RouterStats {
+    queries: AtomicU64,
+    answered: AtomicU64,
+    rejected: AtomicU64,
+    saturated: AtomicU64,
+    retried: AtomicU64,
+    ejections: AtomicU64,
+    rejoins: AtomicU64,
+    started: Instant,
+}
+
+/// Per-replica block of a [`RouterSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    pub addr: String,
+    pub live: bool,
+    pub answered: u64,
+    pub failures: u64,
+    pub saturations: u64,
+}
+
+/// The router's observability snapshot, answered on [`TAG_STATS`] as
+/// JSON (tagged `"tier":"router"` so dashboards can tell it from a
+/// replica snapshot).
+#[derive(Clone, Debug)]
+pub struct RouterSnapshot {
+    pub elapsed_s: f64,
+    pub queries: u64,
+    pub answered: u64,
+    pub rejected: u64,
+    pub saturated: u64,
+    pub retried: u64,
+    pub ejections: u64,
+    pub rejoins: u64,
+    pub replicas: Vec<ReplicaSnapshot>,
+}
+
+impl RouterSnapshot {
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"tier\":\"router\",\"elapsed_s\":{:.3},\"queries\":{},\"answered\":{},\
+             \"rejected\":{},\"saturated\":{},\"retried\":{},\"ejections\":{},\
+             \"rejoins\":{},\"replicas\":[",
+            self.elapsed_s,
+            self.queries,
+            self.answered,
+            self.rejected,
+            self.saturated,
+            self.retried,
+            self.ejections,
+            self.rejoins
+        );
+        for (i, r) in self.replicas.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"addr\":{:?},\"live\":{},\"answered\":{},\"failures\":{},\
+                 \"saturations\":{}}}",
+                r.addr, r.live, r.answered, r.failures, r.saturations
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// What one replica attempt came back as (internal to `forward`).
+enum TryOutcome {
+    /// Replica is disconnected and its backoff has not elapsed — no
+    /// bytes were sent, this replica simply did not participate.
+    Skipped,
+    /// Got a well-formed answer with the matching id; `saturated` is
+    /// the replica's own rejected status (relayed, never retried).
+    Answered { frame: Vec<u8>, saturated: bool },
+    /// Transport/protocol failure — the connection was dropped and the
+    /// failure recorded; the query may be retried elsewhere.
+    Failed,
+}
+
+/// The replicated-serving front end: an agreed model spec, a replica
+/// pool with per-replica health, and round-robin fan-out with
+/// failover.  Shared across client-handler threads behind an `Arc`.
+pub struct Router {
+    replicas: Vec<Arc<Replica>>,
+    /// The spec every replica agreed on at startup (method left empty:
+    /// the serve ACK does not carry it, and it is a training-side
+    /// concern).  Client HELLOs are validated against this.
+    spec: JobSpec,
+    /// Smallest `max_batch` any replica advertised — what the router
+    /// advertises, so an accepted batch fits every backend.
+    max_batch: usize,
+    opts: RouterOpts,
+    next: AtomicUsize,
+    stats: RouterStats,
+}
+
+impl Router {
+    /// Dial every replica, cross-check that all reachable ones agree on
+    /// the served model (family and parameter count, by name — `d` is
+    /// already enforced per-connection by the handshake), and build the
+    /// pool.  At least one replica must be reachable; unreachable ones
+    /// start ejected and are probed for rejoin on the regular schedule.
+    pub fn connect(addrs: &[String], opts: RouterOpts) -> Result<Self> {
+        if addrs.is_empty() {
+            bail!("a router needs at least one replica address");
+        }
+        let mut clients: Vec<Option<ServeClient>> = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            match ServeClient::connect(addr, opts.d, &opts.deadlines) {
+                Ok(c) => clients.push(Some(c)),
+                Err(e) => {
+                    eprintln!(
+                        "router: replica {addr} unreachable at startup (will probe for \
+                         rejoin): {e:#}"
+                    );
+                    clients.push(None);
+                }
+            }
+        }
+        let first = match clients.iter().position(|c| c.is_some()) {
+            Some(i) => i,
+            None => bail!(
+                "none of the {} replicas are reachable — is the serve tier up?",
+                addrs.len()
+            ),
+        };
+        let (agreed_family, agreed_n_params) = {
+            let c = clients[first].as_ref().expect("position() found it");
+            (c.family.clone(), c.n_params)
+        };
+        let mut max_batch = usize::MAX;
+        for (i, client) in clients.iter().enumerate() {
+            let Some(c) = client else { continue };
+            if c.family != agreed_family {
+                bail!(
+                    "replica {} serves family {} but replica {} serves {} — \
+                     the pool must serve one model",
+                    addrs[i],
+                    c.family,
+                    addrs[first],
+                    agreed_family
+                );
+            }
+            if c.n_params != agreed_n_params {
+                bail!(
+                    "replica {} serves {} parameters but replica {} serves {} — \
+                     mixed checkpoints in the pool",
+                    addrs[i],
+                    c.n_params,
+                    addrs[first],
+                    agreed_n_params
+                );
+            }
+            max_batch = max_batch.min(c.max_batch);
+        }
+        let replicas = addrs
+            .iter()
+            .zip(clients)
+            .map(|(addr, client)| {
+                let reachable = client.is_some();
+                Arc::new(Replica {
+                    addr: addr.clone(),
+                    salt: addr_salt(addr),
+                    conn: Mutex::new(ConnState {
+                        client,
+                        // unreachable slots start at the ejection
+                        // threshold: probed on the rejoin schedule, not
+                        // the hot failure backoff
+                        consecutive_failures: if reachable { 0 } else { opts.eject_after },
+                        last_attempt: Some(Instant::now()),
+                    }),
+                    answered: AtomicU64::new(0),
+                    failures: AtomicU64::new(0),
+                    saturations: AtomicU64::new(0),
+                    live: AtomicBool::new(reachable),
+                })
+            })
+            .collect();
+        Ok(Router {
+            replicas,
+            spec: JobSpec {
+                family: agreed_family,
+                method: String::new(),
+                lambda_g: 0.0,
+                d: opts.d,
+                n_params: agreed_n_params,
+            },
+            max_batch,
+            opts,
+            next: AtomicUsize::new(0),
+            stats: RouterStats {
+                queries: AtomicU64::new(0),
+                answered: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                saturated: AtomicU64::new(0),
+                retried: AtomicU64::new(0),
+                ejections: AtomicU64::new(0),
+                rejoins: AtomicU64::new(0),
+                started: Instant::now(),
+            },
+        })
+    }
+
+    /// The spec the pool agreed on (what client HELLOs are checked
+    /// against).
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    /// Largest batch the router accepts (the pool minimum).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Replicas currently live (not ejected).
+    pub fn live_replicas(&self) -> usize {
+        self.replicas.iter().filter(|r| r.live.load(Ordering::Acquire)).count()
+    }
+
+    pub fn snapshot(&self) -> RouterSnapshot {
+        RouterSnapshot {
+            elapsed_s: self.stats.started.elapsed().as_secs_f64(),
+            queries: self.stats.queries.load(Ordering::Relaxed),
+            answered: self.stats.answered.load(Ordering::Relaxed),
+            rejected: self.stats.rejected.load(Ordering::Relaxed),
+            saturated: self.stats.saturated.load(Ordering::Relaxed),
+            retried: self.stats.retried.load(Ordering::Relaxed),
+            ejections: self.stats.ejections.load(Ordering::Relaxed),
+            rejoins: self.stats.rejoins.load(Ordering::Relaxed),
+            replicas: self
+                .replicas
+                .iter()
+                .map(|r| ReplicaSnapshot {
+                    addr: r.addr.clone(),
+                    live: r.live.load(Ordering::Acquire),
+                    answered: r.answered.load(Ordering::Relaxed),
+                    failures: r.failures.load(Ordering::Relaxed),
+                    saturations: r.saturations.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+
+    /// Route one validated QUERY payload and return the ANSWER payload
+    /// to relay.  Counts the query exactly once: answered (replica
+    /// evaluated it), rejected (replica rejection relayed, or no live
+    /// replica was left to ask).
+    pub fn forward(&self, payload: &[u8]) -> Vec<u8> {
+        self.stats.queries.fetch_add(1, Ordering::Relaxed);
+        let id = Dec::new(payload).u64().unwrap_or(0);
+        let n = self.replicas.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut attempted = 0u32;
+        for k in 0..n {
+            let replica = &self.replicas[(start + k) % n];
+            let outcome = self.try_replica(replica, payload);
+            if matches!(outcome, TryOutcome::Skipped) {
+                continue;
+            }
+            attempted += 1;
+            if attempted > 1 {
+                // a re-send of a query some replica already failed —
+                // safe because answers are bitwise interchangeable
+                self.stats.retried.fetch_add(1, Ordering::Relaxed);
+            }
+            if let TryOutcome::Answered { frame, saturated } = outcome {
+                if saturated {
+                    replica.saturations.fetch_add(1, Ordering::Relaxed);
+                    self.stats.saturated.fetch_add(1, Ordering::Relaxed);
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    replica.answered.fetch_add(1, Ordering::Relaxed);
+                    self.stats.answered.fetch_add(1, Ordering::Relaxed);
+                }
+                return frame;
+            }
+        }
+        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        encode_answer_rejected(
+            id,
+            &format!(
+                "no live replicas — all {} backends are down or backing off; retry shortly",
+                n
+            ),
+            0, // minted by the router, no model produced it
+            0,
+        )
+    }
+
+    /// One attempt at one replica: re-dial if disconnected and due,
+    /// then a blocking QUERY/ANSWER round trip holding the connection
+    /// lock (so concurrent client queries to the same replica serialize
+    /// and answers cannot interleave).
+    fn try_replica(&self, replica: &Replica, payload: &[u8]) -> TryOutcome {
+        let mut conn = replica.conn.lock().expect("replica conn lock poisoned");
+        if conn.client.is_none() {
+            let ejected = conn.consecutive_failures >= self.opts.eject_after;
+            let mut wait = backoff_delay(conn.consecutive_failures, replica.salt);
+            if ejected {
+                wait = wait.max(self.opts.rejoin_interval);
+            }
+            if let Some(t) = conn.last_attempt {
+                if t.elapsed() < wait {
+                    return TryOutcome::Skipped;
+                }
+            }
+            conn.last_attempt = Some(Instant::now());
+            match ServeClient::connect(&replica.addr, self.opts.d, &self.opts.deadlines) {
+                Ok(client) => {
+                    if client.family != self.spec.family || client.n_params != self.spec.n_params {
+                        eprintln!(
+                            "router: replica {} came back serving {}/{} params but the pool \
+                             agreed on {}/{} params — keeping it out",
+                            replica.addr,
+                            client.family,
+                            client.n_params,
+                            self.spec.family,
+                            self.spec.n_params
+                        );
+                        self.record_failure(replica, &mut conn);
+                        return TryOutcome::Failed;
+                    }
+                    conn.client = Some(client);
+                    conn.consecutive_failures = 0;
+                    replica.live.store(true, Ordering::Release);
+                    if ejected {
+                        self.stats.rejoins.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("router: replica {} rejoined the pool", replica.addr);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("router: re-dial of replica {} failed: {e:#}", replica.addr);
+                    self.record_failure(replica, &mut conn);
+                    return TryOutcome::Failed;
+                }
+            }
+        }
+        let client = conn.client.as_mut().expect("connected above");
+        match round_trip(client, payload) {
+            Ok((frame, status)) => {
+                conn.consecutive_failures = 0;
+                TryOutcome::Answered { frame, saturated: status == ANSWER_REJECTED }
+            }
+            Err(e) => {
+                eprintln!(
+                    "router: query round trip with replica {} failed: {e:#}",
+                    replica.addr
+                );
+                // drop the connection whole: a half-read stream can
+                // hold stale frames, and a fresh dial resynchronizes
+                conn.client = None;
+                conn.last_attempt = Some(Instant::now());
+                self.record_failure(replica, &mut conn);
+                TryOutcome::Failed
+            }
+        }
+    }
+
+    fn record_failure(&self, replica: &Replica, conn: &mut ConnState) {
+        replica.failures.fetch_add(1, Ordering::Relaxed);
+        conn.consecutive_failures = conn.consecutive_failures.saturating_add(1);
+        if conn.consecutive_failures == self.opts.eject_after {
+            replica.live.store(false, Ordering::Release);
+            self.stats.ejections.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "router: ejecting replica {} after {} consecutive failures",
+                replica.addr, conn.consecutive_failures
+            );
+        }
+    }
+}
+
+/// One QUERY/ANSWER round trip on an established replica connection.
+/// Returns the raw answer payload (relayed bit-for-bit) plus its
+/// decoded status word.  Any protocol surprise — wrong tag, id
+/// mismatch, truncated frame — is a failure, and the caller drops the
+/// connection.
+fn round_trip(client: &mut ServeClient, payload: &[u8]) -> Result<(Vec<u8>, u32)> {
+    let id = Dec::new(payload).u64().context("reading the query id")?;
+    write_frame(&mut client.stream, TAG_QUERY, payload).context("relaying the query")?;
+    let (tag, answer) = read_frame(&mut client.stream).context("waiting for the answer")?;
+    if tag != TAG_ANSWER {
+        bail!("replica sent frame tag {tag} where an answer was expected");
+    }
+    let mut dec = Dec::new(&answer);
+    let got = dec.u64()?;
+    if got != id {
+        bail!("replica answered id {got} for query id {id} — stream desynchronized");
+    }
+    let status = dec.u32()?;
+    Ok((answer, status))
+}
+
+/// One client session at the router: the serve handshake (validated
+/// against the pool's agreed spec, acked as a `"serve"` tier so
+/// clients cannot tell a router from a lone replica), then pipelined
+/// QUERY/STATS frames.  Malformed queries are fatal to the connection
+/// — same contract as a replica — and are *not* forwarded, so a bad
+/// client cannot burn backend connections.
+fn handle_router_client(mut stream: TcpStream, router: &Router) -> Result<()> {
+    let dl = router.opts.deadlines;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(dl.handshake)).ok();
+    stream.set_write_timeout(Some(dl.handshake)).ok();
+    let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
+        return Ok(()); // connected and left without a word
+    };
+    if tag != TAG_HELLO {
+        let _ = send_error(&mut stream, "expected a hello frame");
+        bail!("expected a hello frame, got tag {tag}");
+    }
+    if let Err(e) = check_hello(&payload, &router.spec) {
+        let _ = send_error(&mut stream, &format!("{e:#}"));
+        return Err(e);
+    }
+    let mut ack = Enc::default();
+    ack.str("serve");
+    ack.str(&router.spec.family);
+    ack.u64(router.spec.d as u64);
+    ack.u64(router.spec.n_params as u64);
+    ack.u64(router.max_batch as u64);
+    write_frame(&mut stream, TAG_HELLO_ACK, &ack.buf).context("sending the router ack")?;
+    stream.set_read_timeout(Some(dl.step)).ok();
+    stream.set_write_timeout(Some(dl.step)).ok();
+    let d = router.spec.d;
+    let mut xs_scratch: Vec<f32> = Vec::new();
+    loop {
+        let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
+            return Ok(()); // clean goodbye
+        };
+        match tag {
+            TAG_QUERY => {
+                // validate shape before spending a replica on it
+                let mut dec = Dec::new(&payload);
+                let id = dec.u64()?;
+                let n = dec.u64()? as usize;
+                xs_scratch.clear();
+                dec.f32s_into(&mut xs_scratch)?;
+                if xs_scratch.len() != n * d {
+                    let msg = format!(
+                        "query {id} claims n={n} points at d={d} but ships {} coords",
+                        xs_scratch.len()
+                    );
+                    let _ = send_error(&mut stream, &msg);
+                    bail!("{msg}");
+                }
+                let answer = router.forward(&payload);
+                write_frame(&mut stream, TAG_ANSWER, &answer).context("relaying the answer")?;
+            }
+            TAG_STATS => {
+                let mut e = Enc::default();
+                e.str(&router.snapshot().to_json());
+                write_frame(&mut stream, TAG_STATS, &e.buf).context("answering stats")?;
+            }
+            other => {
+                let _ = send_error(&mut stream, &format!("unexpected frame tag {other}"));
+                bail!("unexpected frame tag {other}");
+            }
+        }
+    }
+}
+
+/// The router accept loop: one handler thread per client connection,
+/// all sharing the [`Router`] (and therefore the replica pool and its
+/// health state).  `max_conns: Some(k)` accepts exactly `k` sessions
+/// and joins them — the test shape; `None` serves forever (the CLI).
+pub fn serve_router(
+    listener: TcpListener,
+    router: Arc<Router>,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    let mut handlers = Vec::new();
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream.context("accepting a router connection")?;
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+        let router = Arc::clone(&router);
+        let handle = std::thread::spawn(move || {
+            if let Err(e) = handle_router_client(stream, &router) {
+                eprintln!("router: session with {peer} ended with an error: {e:#}");
+            }
+        });
+        if max_conns.is_some() {
+            handlers.push(handle);
+        }
+        served += 1;
+        if let Some(max) = max_conns {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::super::fault::FaultPlan;
+    use super::super::serve::{serve_queries, QueryReply, ServeModel, ServeOpts, SharedModel};
+    use super::*;
+    use crate::nn::Mlp;
+    use crate::rng::Xoshiro256pp;
+    use crate::util::json::Value;
+
+    fn fast_deadlines() -> Deadlines {
+        Deadlines::resolve([Some(5), Some(5), Some(30)], None)
+    }
+
+    fn test_model(d: usize, seed: u64, family: &str) -> Arc<ServeModel> {
+        let mlp = Mlp::init(d, &mut Xoshiro256pp::new(seed));
+        Arc::new(ServeModel::new(mlp, family, "probe").unwrap())
+    }
+
+    fn replica_opts() -> ServeOpts {
+        ServeOpts {
+            deadlines: fast_deadlines(),
+            threads: 2,
+            microbatch: 4,
+            queue_cap: 64,
+            max_batch: 64,
+            metrics_interval: Duration::from_millis(20),
+            eval_delay: None,
+            reload: None,
+            fault: FaultPlan::default(),
+        }
+    }
+
+    /// Spawn one in-process replica for `max_conns` sessions; returns
+    /// its address and join handle.
+    fn spawn_replica(
+        model: Arc<ServeModel>,
+        opts: ServeOpts,
+        max_conns: usize,
+    ) -> (String, std::thread::JoinHandle<Result<()>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let shared = Arc::new(SharedModel::new(model));
+        let handle = std::thread::spawn(move || {
+            serve_queries(listener, shared, opts, Some(max_conns), None)
+        });
+        (addr, handle)
+    }
+
+    /// Spawn the router accept loop for `max_conns` client sessions.
+    fn spawn_router(
+        router: Arc<Router>,
+        max_conns: usize,
+    ) -> (String, std::thread::JoinHandle<Result<()>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle =
+            std::thread::spawn(move || serve_router(listener, router, Some(max_conns)));
+        (addr, handle)
+    }
+
+    fn test_router_opts(d: usize) -> RouterOpts {
+        RouterOpts {
+            deadlines: fast_deadlines(),
+            d,
+            eject_after: 1,
+            rejoin_interval: Duration::from_secs(60),
+        }
+    }
+
+    fn points(d: usize, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..n * d).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn router_fans_out_bitwise_and_accounts_every_query() {
+        let d = 4;
+        let model = test_model(d, 42, "sg2");
+        let (a1, h1) = spawn_replica(Arc::clone(&model), replica_opts(), 1);
+        let (a2, h2) = spawn_replica(Arc::clone(&model), replica_opts(), 1);
+        let router = Arc::new(
+            Router::connect(&[a1, a2], test_router_opts(d)).expect("router connects"),
+        );
+        assert_eq!(router.spec().family, "sg2");
+        assert_eq!(router.live_replicas(), 2);
+        let (addr, hr) = spawn_router(Arc::clone(&router), 1);
+
+        // a client cannot tell the router from a lone serve process
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        assert_eq!(client.family, "sg2");
+        assert_eq!(client.n_params, Mlp::n_params_for(d));
+        assert_eq!(client.max_batch, 64);
+
+        let total = 6;
+        for q in 0..total {
+            let xs = points(d, 3, 100 + q);
+            let expect = model.eval(&xs);
+            match client.query(&xs).unwrap() {
+                QueryReply::Answer { values, model_version, .. } => {
+                    assert_eq!(model_version, 1);
+                    assert_eq!(values.len(), expect.len());
+                    for (got, want) in values.iter().zip(&expect) {
+                        assert_eq!(got.to_bits(), want.to_bits(), "answers must be bitwise");
+                    }
+                }
+                other => panic!("expected an answer, got {other:?}"),
+            }
+        }
+
+        let stats = client.stats().unwrap();
+        let parsed = Value::parse(&stats).unwrap();
+        assert_eq!(parsed.get("tier").unwrap().as_str().unwrap(), "router");
+        assert_eq!(parsed.get("queries").unwrap().as_usize().unwrap(), total as usize);
+        assert_eq!(parsed.get("answered").unwrap().as_usize().unwrap(), total as usize);
+        assert_eq!(parsed.get("rejected").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(parsed.get("retried").unwrap().as_usize().unwrap(), 0);
+        let reps = parsed.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        let per_replica: usize =
+            reps.iter().map(|r| r.get("answered").unwrap().as_usize().unwrap()).sum();
+        assert_eq!(per_replica, total as usize, "round-robin must account every answer");
+        for r in reps {
+            assert_eq!(r.get("live").unwrap(), &Value::Bool(true));
+            // round-robin over two live replicas splits evenly
+            assert_eq!(r.get("answered").unwrap().as_usize().unwrap(), total as usize / 2);
+        }
+
+        drop(client);
+        hr.join().unwrap().unwrap();
+        drop(router);
+        h1.join().unwrap().unwrap();
+        h2.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn router_rejects_mismatched_clients_by_name() {
+        let d = 4;
+        let model = test_model(d, 7, "sg2");
+        let (a1, h1) = spawn_replica(model, replica_opts(), 1);
+        let router =
+            Arc::new(Router::connect(&[a1], test_router_opts(d)).expect("router connects"));
+        let (addr, hr) = spawn_router(Arc::clone(&router), 1);
+
+        let err = ServeClient::connect(&addr, 6, &fast_deadlines()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("d=6"), "must name the client's d: {msg}");
+        assert!(msg.contains("d=4"), "must name the served d: {msg}");
+
+        hr.join().unwrap().unwrap();
+        drop(router);
+        h1.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn router_startup_cross_check_names_the_disagreeing_replica() {
+        let d = 4;
+        let (a1, h1) = spawn_replica(test_model(d, 1, "sg2"), replica_opts(), 1);
+        let (a2, h2) = spawn_replica(test_model(d, 2, "ac2"), replica_opts(), 1);
+        let err =
+            Router::connect(&[a1.clone(), a2.clone()], test_router_opts(d)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sg2") && msg.contains("ac2"), "must name both families: {msg}");
+        assert!(msg.contains(&a2), "must name the disagreeing replica: {msg}");
+        h1.join().unwrap().unwrap();
+        h2.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn router_starts_with_a_dead_replica_and_serves_from_the_live_one() {
+        let d = 4;
+        // a closed port: bind then drop the listener, so connects are
+        // refused immediately
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = Router::connect(
+            &[dead_addr.clone(), dead_addr.clone()],
+            test_router_opts(d),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("none of the 2 replicas"));
+
+        let model = test_model(d, 9, "sg2");
+        let (a1, h1) = spawn_replica(Arc::clone(&model), replica_opts(), 1);
+        let router = Arc::new(
+            Router::connect(&[a1, dead_addr.clone()], test_router_opts(d))
+                .expect("one live replica suffices"),
+        );
+        assert_eq!(router.live_replicas(), 1);
+        let (addr, hr) = spawn_router(Arc::clone(&router), 1);
+
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        for q in 0..4 {
+            let xs = points(d, 2, 300 + q);
+            let expect = model.eval(&xs);
+            match client.query(&xs).unwrap() {
+                QueryReply::Answer { values, .. } => {
+                    for (got, want) in values.iter().zip(&expect) {
+                        assert_eq!(got.to_bits(), want.to_bits());
+                    }
+                }
+                other => panic!("expected an answer, got {other:?}"),
+            }
+        }
+        let snap = router.snapshot();
+        assert_eq!(snap.answered, 4);
+        assert_eq!(snap.rejected, 0);
+        let dead = snap.replicas.iter().find(|r| r.addr == dead_addr).unwrap();
+        assert!(!dead.live, "the unreachable slot stays ejected");
+        assert_eq!(dead.answered, 0);
+
+        drop(client);
+        hr.join().unwrap().unwrap();
+        drop(router);
+        h1.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn router_chaos_die_after_queries_fails_over_to_survivors() {
+        let d = 4;
+        let model = test_model(d, 13, "sg2");
+        let mut faulty = replica_opts();
+        faulty.fault = FaultPlan::parse("die_after_queries=1").unwrap();
+        let (a1, h1) = spawn_replica(Arc::clone(&model), faulty, 1);
+        let (a2, h2) = spawn_replica(Arc::clone(&model), replica_opts(), 1);
+        let (a3, h3) = spawn_replica(Arc::clone(&model), replica_opts(), 1);
+        let router = Arc::new(
+            Router::connect(&[a1, a2, a3], test_router_opts(d)).expect("router connects"),
+        );
+        let (addr, hr) = spawn_router(Arc::clone(&router), 1);
+
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        let total = 12u64;
+        for q in 0..total {
+            let xs = points(d, 3, 500 + q);
+            let expect = model.eval(&xs);
+            match client.query(&xs).unwrap() {
+                QueryReply::Answer { values, .. } => {
+                    for (got, want) in values.iter().zip(&expect) {
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "failover answers must stay bitwise"
+                        );
+                    }
+                }
+                other => panic!("query {q}: expected an answer, got {other:?}"),
+            }
+        }
+
+        let snap = router.snapshot();
+        assert_eq!(snap.queries, total, "every query counted once");
+        assert_eq!(snap.answered, total, "survivors absorb the dead replica's share");
+        assert_eq!(snap.rejected, 0);
+        assert_eq!(snap.queries, snap.answered + snap.rejected);
+        assert!(snap.retried >= 1, "the failed query must have been retried: {snap:?}");
+        assert!(snap.ejections >= 1, "the dead replica must be ejected: {snap:?}");
+        assert_eq!(router.live_replicas(), 2);
+
+        drop(client);
+        hr.join().unwrap().unwrap();
+        drop(router);
+        h1.join().unwrap().unwrap();
+        h2.join().unwrap().unwrap();
+        h3.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn router_chaos_corrupt_answer_frames_are_survived() {
+        let d = 4;
+        let model = test_model(d, 21, "sg2");
+        let mut faulty = replica_opts();
+        faulty.fault = FaultPlan::parse("corrupt_frame@QUERY").unwrap();
+        let (a1, h1) = spawn_replica(Arc::clone(&model), faulty, 1);
+        let (a2, h2) = spawn_replica(Arc::clone(&model), replica_opts(), 1);
+        let router = Arc::new(
+            Router::connect(&[a1, a2], test_router_opts(d)).expect("router connects"),
+        );
+        let (addr, hr) = spawn_router(Arc::clone(&router), 1);
+
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        let total = 4u64;
+        for q in 0..total {
+            let xs = points(d, 2, 700 + q);
+            let expect = model.eval(&xs);
+            match client.query(&xs).unwrap() {
+                QueryReply::Answer { values, .. } => {
+                    for (got, want) in values.iter().zip(&expect) {
+                        assert_eq!(got.to_bits(), want.to_bits());
+                    }
+                }
+                other => panic!("expected an answer, got {other:?}"),
+            }
+        }
+        let snap = router.snapshot();
+        assert_eq!(snap.answered, total);
+        assert_eq!(snap.queries, snap.answered + snap.rejected);
+        assert!(snap.retried >= 1, "the corrupted round trip must retry: {snap:?}");
+        assert!(snap.ejections >= 1, "the corrupting replica must be ejected: {snap:?}");
+
+        drop(client);
+        hr.join().unwrap().unwrap();
+        drop(router);
+        h1.join().unwrap().unwrap();
+        h2.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn router_relays_saturation_rejections_without_retrying() {
+        let d = 4;
+        let model = test_model(d, 33, "sg2");
+        // both replicas advertise a tiny max_batch, so an oversize query
+        // comes back ANSWER_REJECTED — the same status word saturation
+        // uses, exercising the relay-don't-retry path deterministically
+        let mut small = replica_opts();
+        small.max_batch = 2;
+        let (a1, h1) = spawn_replica(Arc::clone(&model), small.clone(), 1);
+        let (a2, h2) = spawn_replica(Arc::clone(&model), small, 1);
+        let router = Arc::new(
+            Router::connect(&[a1, a2], test_router_opts(d)).expect("router connects"),
+        );
+        assert_eq!(router.max_batch(), 2, "the router advertises the pool minimum");
+        let (addr, hr) = spawn_router(Arc::clone(&router), 1);
+
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        match client.query(&points(d, 4, 900)).unwrap() {
+            QueryReply::Rejected(why) => {
+                assert!(why.contains("max_batch"), "replica diagnostic relayed verbatim: {why}")
+            }
+            other => panic!("expected the relayed rejection, got {other:?}"),
+        }
+        // the pool is still healthy and still answers
+        match client.query(&points(d, 2, 901)).unwrap() {
+            QueryReply::Answer { .. } => {}
+            other => panic!("expected an answer after the rejection, got {other:?}"),
+        }
+
+        let snap = router.snapshot();
+        assert_eq!(snap.queries, 2);
+        assert_eq!(snap.answered, 1);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.saturated, 1, "the relayed rejection is tallied: {snap:?}");
+        assert_eq!(snap.retried, 0, "rejections are backpressure, never retried");
+        assert_eq!(snap.ejections, 0);
+        assert_eq!(router.live_replicas(), 2);
+
+        drop(client);
+        hr.join().unwrap().unwrap();
+        drop(router);
+        h1.join().unwrap().unwrap();
+        h2.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn router_chaos_ejected_replica_rejoins_after_its_interval() {
+        let d = 4;
+        let model = test_model(d, 55, "sg2");
+        // dies on its 2nd query; serves 2 sessions so the router's
+        // rejoin handshake is accepted (and then dies again — the
+        // fault state is process-wide and dead stays dead)
+        let mut faulty = replica_opts();
+        faulty.fault = FaultPlan::parse("die_after_queries=1").unwrap();
+        let (a1, h1) = spawn_replica(Arc::clone(&model), faulty, 2);
+        let mut opts = test_router_opts(d);
+        opts.rejoin_interval = Duration::from_millis(1);
+        let router =
+            Arc::new(Router::connect(&[a1], opts).expect("router connects"));
+
+        // query 1: served.  query 2: the replica dies -> ejected, and
+        // with no survivor the router mints a local rejection.
+        let xs = points(d, 2, 1000);
+        let ok = router.forward(&encode_query(0, &xs, d));
+        assert_eq!(answer_status(&ok), 0);
+        let rejected = router.forward(&encode_query(1, &xs, d));
+        assert_eq!(answer_status(&rejected), ANSWER_REJECTED);
+        assert_eq!(router.live_replicas(), 0);
+
+        // wait out the failure backoff (attempt 1 ~= 200ms + jitter),
+        // then the re-dial handshakes -> a rejoin, even though the
+        // still-dead fault plan fails the query right after
+        std::thread::sleep(Duration::from_millis(400));
+        let after = router.forward(&encode_query(2, &xs, d));
+        assert_eq!(answer_status(&after), ANSWER_REJECTED);
+        let snap = router.snapshot();
+        assert!(snap.rejoins >= 1, "the restarted replica must rejoin: {snap:?}");
+        assert!(snap.ejections >= 2, "and be re-ejected when it fails again: {snap:?}");
+        assert_eq!(snap.queries, snap.answered + snap.rejected);
+
+        drop(router);
+        h1.join().unwrap().unwrap();
+    }
+
+    /// Encode a QUERY payload the way [`ServeClient::send_query`] does
+    /// (tests that drive [`Router::forward`] directly).
+    fn encode_query(id: u64, xs: &[f32], d: usize) -> Vec<u8> {
+        let mut e = Enc::default();
+        e.u64(id);
+        e.u64((xs.len() / d) as u64);
+        e.f32s(xs);
+        e.buf
+    }
+
+    /// Decode just the status word of an ANSWER payload.
+    fn answer_status(payload: &[u8]) -> u32 {
+        let mut dec = Dec::new(payload);
+        let _id = dec.u64().unwrap();
+        dec.u32().unwrap()
+    }
+}

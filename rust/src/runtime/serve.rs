@@ -44,8 +44,11 @@
 //!                                       (or ERROR {message})
 //!   pipelined:
 //!   QUERY {id, n, xs[n*d]}          ->
-//!                                    <- ANSWER {id, status=0, u[n] f64}
-//!                                       (or ANSWER {id, status=1, why}
+//!                                    <- ANSWER {id, status=0,
+//!                                               model_version, ckpt_step,
+//!                                               u[n] f64}
+//!                                       (or ANSWER {id, status=1,
+//!                                        model_version, ckpt_step, why}
 //!                                        on saturation / oversize)
 //!   STATS {}                        ->
 //!                                    <- STATS {json snapshot}
@@ -54,13 +57,22 @@
 //!
 //! Answers to pipelined queries may arrive out of submission order
 //! (the evaluator pool is concurrent) — clients match on `id`.
+//!
+//! **Hot checkpoint reload** (DESIGN.md §13): the served model lives in
+//! a [`SharedModel`] epoch cell.  A [`ReloadPlan`] (SIGHUP and/or file
+//! watch) re-reads the checkpoint off the serving path, validates the
+//! header against the live spec (family/d/n_params must match — a
+//! mismatch is rejected by name and the old model keeps serving), and
+//! swaps the `Arc<ServeModel>` atomically *between* jobs, so in-flight
+//! connections never drop and every answer names the
+//! `model_version`/`ckpt_step` that produced it.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{bail, Context, Result};
 
@@ -72,18 +84,19 @@ use crate::pde::PdeProblem;
 use crate::rng::Xoshiro256pp;
 
 use super::cluster::{
-    connect_worker, encode_hello, read_frame, read_frame_or_eof, send_error, write_frame, Deadlines,
-    Dec, Enc, JobSpec, PROTOCOL_VERSION, TAG_ANSWER, TAG_ERROR, TAG_HELLO, TAG_HELLO_ACK,
-    TAG_QUERY, TAG_STATS,
+    addr_salt, backoff_delay, connect_worker, encode_hello, read_frame, read_frame_or_eof,
+    send_error, write_frame, Deadlines, Dec, Enc, JobSpec, PROTOCOL_VERSION, TAG_ANSWER,
+    TAG_ERROR, TAG_HELLO, TAG_HELLO_ACK, TAG_QUERY, TAG_STATS,
 };
+use super::fault::{FaultAction, FaultPlan, FaultState};
 
 /// [`TAG_ANSWER`] status word: the batch was evaluated, `n` f64 values
 /// follow.
-const ANSWER_OK: u32 = 0;
+pub(crate) const ANSWER_OK: u32 = 0;
 /// [`TAG_ANSWER`] status word: the batch was *not* evaluated (queue
 /// saturated or batch oversized); a diagnostic string follows.  The
 /// connection stays usable — rejection is backpressure, not an error.
-const ANSWER_REJECTED: u32 = 1;
+pub(crate) const ANSWER_REJECTED: u32 = 1;
 
 /// Latency ring capacity: percentiles are computed over the most
 /// recent `LAT_CAP` answered queries (bounded memory at any uptime).
@@ -203,12 +216,146 @@ impl ServeModel {
 }
 
 // ---------------------------------------------------------------------------
+// Hot checkpoint reload
+// ---------------------------------------------------------------------------
+
+/// One generation of the served model: the weights plus the serving
+/// version they answer as.  Versions start at 1 and bump on every
+/// successful reload; version 0 is reserved for answers no model
+/// produced (router-local rejections).
+#[derive(Clone)]
+pub struct ModelEpoch {
+    pub model: Arc<ServeModel>,
+    pub version: u64,
+}
+
+/// The reload-atomicity cell: evaluators pin one epoch per job (an
+/// `Arc` clone under a short lock), a reload validates the incoming
+/// checkpoint completely *before* swapping, and the swap itself is one
+/// pointer store — so a batch is answered entirely by one model, a
+/// failed reload leaves the previous epoch serving, and no connection
+/// ever drops for a swap.
+pub struct SharedModel {
+    current: Mutex<ModelEpoch>,
+}
+
+impl SharedModel {
+    pub fn new(model: Arc<ServeModel>) -> Self {
+        SharedModel { current: Mutex::new(ModelEpoch { model, version: 1 }) }
+    }
+
+    /// The epoch answering right now (cheap: one `Arc` clone).
+    pub fn current(&self) -> ModelEpoch {
+        self.current.lock().expect("model lock poisoned").clone()
+    }
+
+    /// Re-read `path` and swap it in as the next epoch.  The checkpoint
+    /// is fully loaded and validated first — CRC (v3), header sanity,
+    /// and the serving invariants family/d/n_params against the live
+    /// spec, each rejected by name — so any error leaves the current
+    /// epoch untouched and still serving.
+    pub fn reload_from(&self, path: impl AsRef<Path>) -> Result<ModelEpoch> {
+        let fresh = ServeModel::from_checkpoint(&path)
+            .with_context(|| format!("reloading checkpoint {:?}", path.as_ref()))?;
+        let live = self.current();
+        let spec = &live.model.spec;
+        if fresh.spec.family != spec.family {
+            bail!(
+                "reload rejected: checkpoint {:?} is a {} model but this server is serving {}",
+                path.as_ref(),
+                fresh.spec.family,
+                spec.family
+            );
+        }
+        if fresh.spec.d != spec.d {
+            bail!(
+                "reload rejected: checkpoint {:?} has d={} but this server is serving d={}",
+                path.as_ref(),
+                fresh.spec.d,
+                spec.d
+            );
+        }
+        if fresh.spec.n_params != spec.n_params {
+            bail!(
+                "reload rejected: checkpoint {:?} has {} parameters but this server is \
+                 serving {} — mixed architectures?",
+                path.as_ref(),
+                fresh.spec.n_params,
+                spec.n_params
+            );
+        }
+        let mut cur = self.current.lock().expect("model lock poisoned");
+        let epoch = ModelEpoch { model: Arc::new(fresh), version: cur.version + 1 };
+        *cur = epoch.clone();
+        Ok(epoch)
+    }
+}
+
+/// When and from where a serve process hot-reloads its checkpoint.
+#[derive(Clone, Debug)]
+pub struct ReloadPlan {
+    /// Checkpoint file re-read on every trigger.
+    pub path: PathBuf,
+    /// Reload when the process receives SIGHUP (`serve --reload-on sighup`).
+    pub on_sighup: bool,
+    /// Reload when `path`'s mtime changes (`serve --watch` — follows a
+    /// training run's `--save-every` autosaves; the trainer's
+    /// write-then-rename keeps every observed file complete, and the v3
+    /// CRC rejects anything torn anyway).
+    pub watch: bool,
+    /// How often the reloader thread checks its triggers.
+    pub poll: Duration,
+}
+
+/// SIGHUP latch for `--reload-on sighup`: the handler only flips an
+/// atomic (async-signal-safe); the reloader thread polls and clears it.
+#[cfg(unix)]
+mod sighup {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static PENDING: AtomicBool = AtomicBool::new(false);
+    /// POSIX guarantees SIGHUP == 1 on every unix we target.
+    const SIGHUP_NO: i32 = 1;
+
+    extern "C" fn on_sighup(_sig: i32) {
+        PENDING.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGHUP_NO, on_sighup);
+        }
+    }
+
+    pub fn take_pending() -> bool {
+        PENDING.swap(false, Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sighup {
+    pub fn install() {}
+    pub fn take_pending() -> bool {
+        false
+    }
+}
+
+fn mtime_of(path: &Path) -> Option<SystemTime> {
+    std::fs::metadata(path).and_then(|m| m.modified()).ok()
+}
+
+// ---------------------------------------------------------------------------
 // Server knobs
 // ---------------------------------------------------------------------------
 
 /// Serving knobs.  Defaults come from the environment-resolved
 /// [`Deadlines`] and conservative capacity constants; tests override
 /// everything explicitly.
+#[derive(Clone)]
 pub struct ServeOpts {
     pub deadlines: Deadlines,
     /// Evaluator threads draining the shared queue.
@@ -230,6 +377,11 @@ pub struct ServeOpts {
     /// evaluating, making saturation deterministic in tests.  `None`
     /// (always, outside tests) evaluates immediately.
     pub eval_delay: Option<Duration>,
+    /// Hot checkpoint reload triggers; `None` serves one model forever.
+    pub reload: Option<ReloadPlan>,
+    /// Serve-phase fault injection (`serve --fault` / `HTE_FAULT`) for
+    /// the router chaos harness; the default plan injects nothing.
+    pub fault: FaultPlan,
 }
 
 impl Default for ServeOpts {
@@ -242,6 +394,8 @@ impl Default for ServeOpts {
             max_batch: 16_384,
             metrics_interval: Duration::from_secs(1),
             eval_delay: None,
+            reload: None,
+            fault: FaultPlan::default(),
         }
     }
 }
@@ -393,7 +547,7 @@ impl ServeStats {
         self.inner.lock().expect("stats lock poisoned").rejected += 1;
     }
 
-    fn snapshot(&self, queue_depth: usize) -> ServeSnapshot {
+    fn snapshot(&self, queue_depth: usize, model_version: u64, ckpt_step: u64) -> ServeSnapshot {
         let st = self.inner.lock().expect("stats lock poisoned");
         let elapsed_s = self.started.elapsed().as_secs_f64().max(1e-9);
         let (queries, points, rejected) = (st.queries, st.points, st.rejected);
@@ -410,6 +564,8 @@ impl ServeStats {
             p95_ms: percentile_ms(&lat, 0.95),
             p99_ms: percentile_ms(&lat, 0.99),
             queue_depth,
+            model_version,
+            ckpt_step,
         }
     }
 }
@@ -437,6 +593,11 @@ pub struct ServeSnapshot {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub queue_depth: usize,
+    /// Serving generation of the model answering when the snapshot was
+    /// taken (starts at 1, bumps on every hot reload).
+    pub model_version: u64,
+    /// Training step of that model's checkpoint.
+    pub ckpt_step: u64,
 }
 
 impl ServeSnapshot {
@@ -444,7 +605,7 @@ impl ServeSnapshot {
         format!(
             "{{\"elapsed_s\":{:.3},\"queries\":{},\"points\":{},\"rejected\":{},\
              \"qps\":{:.3},\"p50_ms\":{:.3},\"p95_ms\":{:.3},\"p99_ms\":{:.3},\
-             \"queue_depth\":{}}}",
+             \"queue_depth\":{},\"model_version\":{},\"ckpt_step\":{}}}",
             self.elapsed_s,
             self.queries,
             self.points,
@@ -453,7 +614,9 @@ impl ServeSnapshot {
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
-            self.queue_depth
+            self.queue_depth,
+            self.model_version,
+            self.ckpt_step
         )
     }
 }
@@ -462,33 +625,46 @@ impl ServeSnapshot {
 // The serve loop
 // ---------------------------------------------------------------------------
 
-fn encode_answer_ok(id: u64, values: &[f64]) -> Vec<u8> {
+fn encode_answer_ok(id: u64, values: &[f64], model_version: u64, ckpt_step: u64) -> Vec<u8> {
     let mut e = Enc::default();
     e.u64(id);
     e.u32(ANSWER_OK);
+    e.u64(model_version);
+    e.u64(ckpt_step);
     e.f64s(values);
     e.buf
 }
 
-fn encode_answer_rejected(id: u64, why: &str) -> Vec<u8> {
+/// `pub(crate)` so the router can answer "no live replicas" in the same
+/// wire shape; its locally-minted rejections carry model_version 0 —
+/// no model produced them.
+pub(crate) fn encode_answer_rejected(
+    id: u64,
+    why: &str,
+    model_version: u64,
+    ckpt_step: u64,
+) -> Vec<u8> {
     let mut e = Enc::default();
     e.u64(id);
     e.u32(ANSWER_REJECTED);
+    e.u64(model_version);
+    e.u64(ckpt_step);
     e.str(why);
     e.buf
 }
 
 /// One evaluator thread: drain the queue until shutdown, microbatching
 /// each request through the SIMD forward and answering on the
-/// request's own connection.
+/// request's own connection.  The serving epoch is pinned once per job
+/// (reload atomicity: a hot swap lands *between* jobs, so a batch is
+/// answered entirely by one model and stamped with its version).
 fn evaluator_loop(
-    model: &ServeModel,
+    shared: &SharedModel,
     queue: &Queue,
     stats: &ServeStats,
     microbatch: usize,
     eval_delay: Option<Duration>,
 ) {
-    let d = model.mlp.d;
     let mb = microbatch.max(1);
     let mut scratch = EvalScratch::default();
     let mut out: Vec<f64> = Vec::new();
@@ -496,6 +672,9 @@ fn evaluator_loop(
         if let Some(delay) = eval_delay {
             std::thread::sleep(delay);
         }
+        let epoch = shared.current();
+        let model = &*epoch.model;
+        let d = model.mlp.d;
         out.clear();
         let mut off = 0;
         while off < job.n {
@@ -507,15 +686,21 @@ fn evaluator_loop(
         // never observe a stats snapshot that hasn't counted it yet
         // (latency therefore excludes the answer write — negligible)
         stats.record_answer(job.n, job.accepted.elapsed());
-        job.conn.send(TAG_ANSWER, &encode_answer_ok(job.id, &out));
+        job.conn.send(
+            TAG_ANSWER,
+            &encode_answer_ok(job.id, &out, epoch.version, model.step as u64),
+        );
     }
 }
 
 /// Validate a serve client's HELLO against the loaded model.  Family
 /// and method act as wildcards when empty — a generic client can dial
-/// any surrogate — but `d` and `n_params` are always cross-checked (a
-/// dimension mismatch would mis-stride every query payload).
-fn check_hello(payload: &[u8], spec: &JobSpec) -> Result<()> {
+/// any surrogate, and the *server's* method is empty for a router
+/// (the serve ACK does not carry it) — but `d` and `n_params` are
+/// always cross-checked (a dimension mismatch would mis-stride every
+/// query payload).  `pub(crate)`: the router handshakes clients with
+/// the same rules against its replicas' agreed spec.
+pub(crate) fn check_hello(payload: &[u8], spec: &JobSpec) -> Result<()> {
     let mut dec = Dec::new(payload);
     let version = dec.u32()?;
     if version != PROTOCOL_VERSION {
@@ -542,7 +727,7 @@ fn check_hello(payload: &[u8], spec: &JobSpec) -> Result<()> {
             spec.family
         );
     }
-    if !method.is_empty() && method != spec.method {
+    if !method.is_empty() && !spec.method.is_empty() && method != spec.method {
         bail!(
             "client expects method {method} but this server loaded a {} checkpoint",
             spec.method
@@ -557,9 +742,10 @@ fn check_hello(payload: &[u8], spec: &JobSpec) -> Result<()> {
 /// saturation and oversize are answered gracefully on it.
 fn handle_client(
     mut stream: TcpStream,
-    model: &ServeModel,
+    shared: &SharedModel,
     queue: &Queue,
     stats: &ServeStats,
+    fault: &Mutex<FaultState>,
     opts_max_batch: usize,
     dl: &Deadlines,
 ) -> Result<()> {
@@ -573,15 +759,18 @@ fn handle_client(
         let _ = send_error(&mut stream, "expected a hello frame");
         bail!("expected a hello frame, got tag {tag}");
     }
-    if let Err(e) = check_hello(&payload, &model.spec) {
+    // family/d/n_params are reload invariants, so the handshake epoch's
+    // spec stays valid for this whole session even across hot swaps
+    let spec = shared.current().model.spec.clone();
+    if let Err(e) = check_hello(&payload, &spec) {
         let _ = send_error(&mut stream, &format!("{e:#}"));
         return Err(e);
     }
     let mut ack = Enc::default();
     ack.str("serve");
-    ack.str(&model.spec.family);
-    ack.u64(model.spec.d as u64);
-    ack.u64(model.spec.n_params as u64);
+    ack.str(&spec.family);
+    ack.u64(spec.d as u64);
+    ack.u64(spec.n_params as u64);
     ack.u64(opts_max_batch as u64);
     write_frame(&mut stream, TAG_HELLO_ACK, &ack.buf).context("sending serve ack")?;
     // Session established: queries run under the (longer) step deadline.
@@ -591,13 +780,43 @@ fn handle_client(
         stream: Mutex::new(stream.try_clone().context("cloning the answer stream")?),
         alive: AtomicBool::new(true),
     });
-    let d = model.mlp.d;
+    let d = spec.d;
     loop {
         let Some((tag, payload)) = read_frame_or_eof(&mut stream)? else {
             return Ok(()); // clean goodbye
         };
         match tag {
             TAG_QUERY => {
+                let (action, exit_process) = {
+                    let mut st = fault.lock().expect("fault lock poisoned");
+                    (st.on_query(), st.plan.exit_process)
+                };
+                match action {
+                    FaultAction::None => {}
+                    FaultAction::Die => {
+                        if exit_process {
+                            eprintln!("serve: fault injection: dying after the query budget");
+                            std::process::exit(3);
+                        }
+                        // in-process replica: the state stays dead, so
+                        // every connection from here on refuses queries
+                        bail!("fault injection: replica died after its query budget");
+                    }
+                    FaultAction::DropConn => {
+                        bail!("fault injection: dropping the connection on QUERY");
+                    }
+                    FaultAction::CorruptFrame => {
+                        use std::io::Write as _;
+                        let mut s = conn.stream.lock().expect("conn lock poisoned");
+                        let mut head = [0u8; 13];
+                        head[..4].copy_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+                        head[4] = TAG_ANSWER;
+                        let _ = s.write_all(&head);
+                        let _ = s.flush();
+                        drop(s);
+                        bail!("fault injection: corrupt answer frame on QUERY");
+                    }
+                }
                 let accepted = Instant::now();
                 let mut dec = Dec::new(&payload);
                 let id = dec.u64()?;
@@ -618,6 +837,7 @@ fn handle_client(
                 }
                 if n > opts_max_batch {
                     stats.record_rejection();
+                    let ep = shared.current();
                     conn.send(
                         TAG_ANSWER,
                         &encode_answer_rejected(
@@ -626,6 +846,8 @@ fn handle_client(
                                 "batch of {n} points exceeds this server's max_batch \
                                  {opts_max_batch} — split the request"
                             ),
+                            ep.version,
+                            ep.model.step as u64,
                         ),
                     );
                     continue;
@@ -633,6 +855,7 @@ fn handle_client(
                 let job = Job { id, n, xs, accepted, conn: Arc::clone(&conn) };
                 if let Err(job) = queue.push(job) {
                     stats.record_rejection();
+                    let ep = shared.current();
                     conn.send(
                         TAG_ANSWER,
                         &encode_answer_rejected(
@@ -642,13 +865,20 @@ fn handle_client(
                                  back off and retry",
                                 queue.cap
                             ),
+                            ep.version,
+                            ep.model.step as u64,
                         ),
                     );
                 }
             }
             TAG_STATS => {
+                let ep = shared.current();
                 let mut e = Enc::default();
-                e.str(&stats.snapshot(queue.depth()).to_json());
+                e.str(
+                    &stats
+                        .snapshot(queue.depth(), ep.version, ep.model.step as u64)
+                        .to_json(),
+                );
                 conn.send(TAG_STATS, &e.buf);
             }
             other => {
@@ -666,8 +896,9 @@ fn handle_client(
 
 /// The serve accept loop.  Spawns `opts.threads` evaluator threads
 /// over one bounded queue, one handler thread per accepted connection,
-/// and (when `metrics` is given) a snapshot reporter on
-/// `opts.metrics_interval`.
+/// (when `metrics` is given) a snapshot reporter on
+/// `opts.metrics_interval`, and (when `opts.reload` is given) a
+/// reloader thread polling the plan's triggers.
 ///
 /// With `max_conns: Some(k)` the loop accepts exactly `k` connections,
 /// joins their handlers, drains the queue, stops the evaluators and
@@ -675,7 +906,7 @@ fn handle_client(
 /// test and bench uses.  `None` serves forever (the CLI path).
 pub fn serve_queries(
     listener: TcpListener,
-    model: Arc<ServeModel>,
+    shared: Arc<SharedModel>,
     opts: ServeOpts,
     max_conns: Option<usize>,
     metrics: Option<MetricsLogger>,
@@ -683,15 +914,16 @@ pub fn serve_queries(
     let queue = Arc::new(Queue::new(opts.queue_cap));
     let stats = Arc::new(ServeStats::new());
     let stop = Arc::new(AtomicBool::new(false));
+    let fault = Arc::new(Mutex::new(FaultState::new(opts.fault.clone())));
 
     let mut evaluators = Vec::new();
     for _ in 0..opts.threads.max(1) {
-        let model = Arc::clone(&model);
+        let shared = Arc::clone(&shared);
         let queue = Arc::clone(&queue);
         let stats = Arc::clone(&stats);
         let (mb, delay) = (opts.microbatch, opts.eval_delay);
         evaluators.push(std::thread::spawn(move || {
-            evaluator_loop(&model, &queue, &stats, mb, delay);
+            evaluator_loop(&shared, &queue, &stats, mb, delay);
         }));
     }
 
@@ -699,15 +931,54 @@ pub fn serve_queries(
         let stats = Arc::clone(&stats);
         let queue = Arc::clone(&queue);
         let stop = Arc::clone(&stop);
+        let shared = Arc::clone(&shared);
         let interval = opts.metrics_interval;
+        let snap = move |stats: &ServeStats, queue: &Queue, shared: &SharedModel| {
+            let ep = shared.current();
+            stats.snapshot(queue.depth(), ep.version, ep.model.step as u64).to_json()
+        };
         std::thread::spawn(move || {
             while !stop.load(Ordering::Acquire) {
                 std::thread::sleep(interval);
-                let _ = logger.log_line(&stats.snapshot(queue.depth()).to_json());
+                let _ = logger.log_line(&snap(&stats, &queue, &shared));
             }
             // final snapshot so even sub-interval runs leave a line
-            let _ = logger.log_line(&stats.snapshot(queue.depth()).to_json());
+            let _ = logger.log_line(&snap(&stats, &queue, &shared));
             let _ = logger.finish();
+        })
+    });
+
+    let reloader = opts.reload.clone().map(|plan| {
+        let shared = Arc::clone(&shared);
+        let stop = Arc::clone(&stop);
+        if plan.on_sighup {
+            sighup::install();
+        }
+        std::thread::spawn(move || {
+            let mut last_mtime = mtime_of(&plan.path);
+            while !stop.load(Ordering::Acquire) {
+                std::thread::sleep(plan.poll);
+                let mut due = plan.on_sighup && sighup::take_pending();
+                if plan.watch {
+                    let now = mtime_of(&plan.path);
+                    if now.is_some() && now != last_mtime {
+                        last_mtime = now;
+                        due = true;
+                    }
+                }
+                if !due {
+                    continue;
+                }
+                match shared.reload_from(&plan.path) {
+                    Ok(ep) => eprintln!(
+                        "serve: reloaded checkpoint {:?} -> model_version {} (step {})",
+                        plan.path, ep.version, ep.model.step
+                    ),
+                    Err(e) => eprintln!(
+                        "serve: reload rejected — serving the previous model: {e:#}"
+                    ),
+                }
+            }
         })
     });
 
@@ -716,13 +987,14 @@ pub fn serve_queries(
     for stream in listener.incoming() {
         let stream = stream.context("accepting a serve connection")?;
         let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
-        let model = Arc::clone(&model);
+        let shared = Arc::clone(&shared);
         let queue = Arc::clone(&queue);
         let stats = Arc::clone(&stats);
+        let fault = Arc::clone(&fault);
         let (max_batch, dl) = (opts.max_batch, opts.deadlines);
         let handle = std::thread::spawn(move || {
             if let Err(e) =
-                handle_client(stream, &model, &queue, &stats, max_batch, &dl)
+                handle_client(stream, &shared, &queue, &stats, &fault, max_batch, &dl)
             {
                 eprintln!("serve: session with {peer} ended with an error: {e:#}");
             }
@@ -748,6 +1020,9 @@ pub fn serve_queries(
     if let Some(r) = reporter {
         let _ = r.join();
     }
+    if let Some(r) = reloader {
+        let _ = r.join();
+    }
     Ok(())
 }
 
@@ -758,8 +1033,11 @@ pub fn serve_queries(
 /// What one query came back as.
 #[derive(Clone, Debug, PartialEq)]
 pub enum QueryReply {
-    /// Evaluated: one f64 per point, bit-for-bit the local forward.
-    Answer(Vec<f64>),
+    /// Evaluated: one f64 per point, bit-for-bit the local forward,
+    /// stamped with the serving generation and checkpoint step that
+    /// produced it (so a client can assert *which* weights answered
+    /// across a hot reload).
+    Answer { values: Vec<f64>, model_version: u64, ckpt_step: u64 },
     /// Gracefully rejected (saturation / oversize) with the server's
     /// diagnostic; the connection remains usable.
     Rejected(String),
@@ -768,8 +1046,15 @@ pub enum QueryReply {
 /// A serve-protocol client: dial, handshake, then `query` (one
 /// outstanding) or `send_query`/`read_reply` (pipelined, match on id).
 pub struct ServeClient {
-    stream: TcpStream,
+    /// `pub(crate)`: the router relays raw QUERY/ANSWER payloads
+    /// through this stream without re-encoding (bitwise pass-through).
+    pub(crate) stream: TcpStream,
     pub d: usize,
+    /// Problem family the server acked (the router cross-checks that
+    /// all replicas agree).
+    pub family: String,
+    /// Parameter count the server acked.
+    pub n_params: usize,
     /// Largest batch the server advertised in its ACK.
     pub max_batch: usize,
     next_id: u64,
@@ -804,16 +1089,16 @@ impl ServeClient {
                          dialed a training worker?"
                     );
                 }
-                let _family = dec.str()?;
+                let family = dec.str()?.to_string();
                 let got_d = dec.u64()? as usize;
-                let _n_params = dec.u64()?;
+                let n_params = dec.u64()? as usize;
                 let max_batch = dec.u64()? as usize;
                 if got_d != d {
                     bail!("server acked d={got_d}, expected {d}");
                 }
                 stream.set_read_timeout(Some(dl.step)).ok();
                 stream.set_write_timeout(Some(dl.step)).ok();
-                Ok(ServeClient { stream, d, max_batch, next_id: 0 })
+                Ok(ServeClient { stream, d, family, n_params, max_batch, next_id: 0 })
             }
             TAG_ERROR => {
                 let mut dec = Dec::new(&payload);
@@ -852,15 +1137,17 @@ impl ServeClient {
         }
     }
 
-    fn decode_answer(payload: &[u8]) -> Result<(u64, QueryReply)> {
+    pub(crate) fn decode_answer(payload: &[u8]) -> Result<(u64, QueryReply)> {
         let mut dec = Dec::new(payload);
         let id = dec.u64()?;
         let status = dec.u32()?;
+        let model_version = dec.u64()?;
+        let ckpt_step = dec.u64()?;
         match status {
             ANSWER_OK => {
                 let mut values = Vec::new();
                 dec.f64s_into(&mut values)?;
-                Ok((id, QueryReply::Answer(values)))
+                Ok((id, QueryReply::Answer { values, model_version, ckpt_step }))
             }
             ANSWER_REJECTED => Ok((id, QueryReply::Rejected(dec.str()?.to_string()))),
             other => bail!("answer {id} carries unknown status {other}"),
@@ -902,7 +1189,10 @@ pub use crate::config::Arrival;
 /// total (paced arrivals regardless of completions — measures behavior
 /// under offered load, the model that actually saturates the queue).
 pub struct LoadgenOpts {
-    pub addr: String,
+    /// Serve/router endpoints; connection `c` dials
+    /// `addrs[c % addrs.len()]`, so one run can drive a router and a
+    /// bare replica side by side and diff their accounting.
+    pub addrs: Vec<String>,
     pub d: usize,
     pub arrival: Arrival,
     /// Open-loop only: total offered queries/sec across connections.
@@ -932,14 +1222,49 @@ pub struct LoadgenReport {
     /// Answered queries that were bitwise-verified (0 without a model).
     pub bitwise_checked: usize,
     pub bitwise_ok: bool,
+    /// Distinct `model_version` stamps seen across all answers,
+    /// ascending — a reload mid-run shows up as `[1, 2]`.
+    pub model_versions: Vec<u64>,
+    /// Per-endpoint accounting, in `addrs` order.
+    pub endpoints: Vec<EndpointReport>,
+}
+
+/// One endpoint's share of a loadgen run.
+#[derive(Clone, Debug)]
+pub struct EndpointReport {
+    pub addr: String,
+    pub sent: usize,
+    pub answered: usize,
+    pub rejected: usize,
+    /// Connect attempts retried (transient dial failures during chaos).
+    pub connect_retries: usize,
 }
 
 impl LoadgenReport {
     pub fn to_json(&self) -> String {
+        let versions = self
+            .model_versions
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        let endpoints = self
+            .endpoints
+            .iter()
+            .map(|ep| {
+                format!(
+                    "{{\"addr\":{:?},\"sent\":{},\"answered\":{},\"rejected\":{},\
+                     \"connect_retries\":{}}}",
+                    ep.addr, ep.sent, ep.answered, ep.rejected, ep.connect_retries
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "{{\"sent\":{},\"answered\":{},\"rejected\":{},\"wall_s\":{:.3},\
              \"qps\":{:.3},\"p50_ms\":{:.3},\"p95_ms\":{:.3},\"p99_ms\":{:.3},\
-             \"bitwise_checked\":{},\"bitwise_ok\":{}}}",
+             \"bitwise_checked\":{},\"bitwise_ok\":{},\
+             \"model_versions\":[{}],\"endpoints\":[{}]}}",
             self.sent,
             self.answered,
             self.rejected,
@@ -949,7 +1274,9 @@ impl LoadgenReport {
             self.p95_ms,
             self.p99_ms,
             self.bitwise_checked,
-            self.bitwise_ok
+            self.bitwise_ok,
+            versions,
+            endpoints
         )
     }
 }
@@ -963,6 +1290,40 @@ struct ConnTally {
     lat_us: Vec<u64>,
     bitwise_checked: usize,
     bitwise_bad: usize,
+    connect_retries: usize,
+    /// Distinct model versions seen in answers (tiny: one per reload).
+    versions: Vec<u64>,
+}
+
+impl ConnTally {
+    fn saw_version(&mut self, v: u64) {
+        if !self.versions.contains(&v) {
+            self.versions.push(v);
+        }
+    }
+}
+
+/// Dial with up to two backoff retries (transient listener hiccups mid
+/// chaos run are expected), tallying every retry for the report.
+fn connect_with_retry(
+    addr: &str,
+    d: usize,
+    dl: &Deadlines,
+    tally: &mut ConnTally,
+) -> Result<ServeClient> {
+    let salt = addr_salt(addr);
+    let mut attempt = 0u32;
+    loop {
+        match ServeClient::connect(addr, d, dl) {
+            Ok(client) => return Ok(client),
+            Err(_) if attempt < 2 => {
+                tally.connect_retries += 1;
+                std::thread::sleep(backoff_delay(attempt, salt));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
 }
 
 fn random_batch(rng: &mut Xoshiro256pp, n: usize, d: usize) -> Vec<f32> {
@@ -978,22 +1339,24 @@ fn bits_match(expected: &[f64], got: &[f64]) -> bool {
 
 fn closed_loop_conn(
     opts: &LoadgenOpts,
+    addr: &str,
     conn_idx: usize,
     n_requests: usize,
     verify: Option<&ServeModel>,
 ) -> Result<ConnTally> {
-    let mut client = ServeClient::connect(&opts.addr, opts.d, &opts.deadlines)?;
-    let mut rng = Xoshiro256pp::new(opts.seed ^ (0x9E37 + conn_idx as u64));
     let mut tally = ConnTally::default();
+    let mut client = connect_with_retry(addr, opts.d, &opts.deadlines, &mut tally)?;
+    let mut rng = Xoshiro256pp::new(opts.seed ^ (0x9E37 + conn_idx as u64));
     for _ in 0..n_requests {
         let xs = random_batch(&mut rng, opts.batch, opts.d);
         let t0 = Instant::now();
         let reply = client.query(&xs)?;
         tally.sent += 1;
         match reply {
-            QueryReply::Answer(values) => {
+            QueryReply::Answer { values, model_version, .. } => {
                 tally.lat_us.push(t0.elapsed().as_micros() as u64);
                 tally.answered += 1;
+                tally.saw_version(model_version);
                 if let Some(model) = verify {
                     tally.bitwise_checked += 1;
                     if !bits_match(&model.eval(&xs), &values) {
@@ -1009,11 +1372,14 @@ fn closed_loop_conn(
 
 fn open_loop_conn(
     opts: &LoadgenOpts,
+    addr: &str,
     conn_idx: usize,
     n_requests: usize,
     verify: Option<&ServeModel>,
 ) -> Result<ConnTally> {
-    let mut client = ServeClient::connect(&opts.addr, opts.d, &opts.deadlines)?;
+    let mut pre_tally = ConnTally::default();
+    let mut client = connect_with_retry(addr, opts.d, &opts.deadlines, &mut pre_tally)?;
+    let connect_retries = pre_tally.connect_retries;
     let mut reader = client.stream.try_clone().context("cloning the reply stream")?;
     let mut rng = Xoshiro256pp::new(opts.seed ^ (0x9E37 + conn_idx as u64));
     // id -> (sent-at, expected bits when verifying)
@@ -1046,9 +1412,10 @@ fn open_loop_conn(
                     bail!("answer for unknown query id {id}");
                 };
                 match reply {
-                    QueryReply::Answer(values) => {
+                    QueryReply::Answer { values, model_version, .. } => {
                         t.lat_us.push(t0.elapsed().as_micros() as u64);
                         t.answered += 1;
+                        t.saw_version(model_version);
                         if let Some(expected) = expected {
                             t.bitwise_checked += 1;
                             if !bits_match(&expected, &values) {
@@ -1088,6 +1455,7 @@ fn open_loop_conn(
         let _ = write_frame(&mut client.stream, TAG_STATS, &[]);
         tally = reader_thread.join().expect("open-loop reader panicked")?;
         tally.sent = sent.load(Ordering::Acquire);
+        tally.connect_retries = connect_retries;
         Ok(())
     })?;
     Ok(tally)
@@ -1101,22 +1469,37 @@ pub fn run_loadgen(opts: &LoadgenOpts, verify: Option<&ServeModel>) -> Result<Lo
     if opts.conns == 0 || opts.requests == 0 {
         bail!("loadgen needs at least one connection and one request");
     }
+    if opts.addrs.is_empty() {
+        bail!("loadgen needs at least one endpoint address");
+    }
     let start = Instant::now();
     let tallies: Vec<Result<ConnTally>> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for c in 0..opts.conns {
             // split `requests` across connections, remainder to the low ranks
             let n_req = opts.requests / opts.conns + usize::from(c < opts.requests % opts.conns);
+            let addr = opts.addrs[c % opts.addrs.len()].as_str();
             handles.push(scope.spawn(move || match opts.arrival {
-                Arrival::Closed => closed_loop_conn(opts, c, n_req, verify),
-                Arrival::Open => open_loop_conn(opts, c, n_req, verify),
+                Arrival::Closed => closed_loop_conn(opts, addr, c, n_req, verify),
+                Arrival::Open => open_loop_conn(opts, addr, c, n_req, verify),
             }));
         }
         handles.into_iter().map(|h| h.join().expect("loadgen connection panicked")).collect()
     });
     let wall_s = start.elapsed().as_secs_f64().max(1e-9);
     let mut total = ConnTally::default();
-    for tally in tallies {
+    let mut endpoints: Vec<EndpointReport> = opts
+        .addrs
+        .iter()
+        .map(|addr| EndpointReport {
+            addr: addr.clone(),
+            sent: 0,
+            answered: 0,
+            rejected: 0,
+            connect_retries: 0,
+        })
+        .collect();
+    for (c, tally) in tallies.into_iter().enumerate() {
         let t = tally?;
         total.sent += t.sent;
         total.answered += t.answered;
@@ -1124,8 +1507,17 @@ pub fn run_loadgen(opts: &LoadgenOpts, verify: Option<&ServeModel>) -> Result<Lo
         total.lat_us.extend(t.lat_us);
         total.bitwise_checked += t.bitwise_checked;
         total.bitwise_bad += t.bitwise_bad;
+        for v in t.versions {
+            total.saw_version(v);
+        }
+        let ep = &mut endpoints[c % opts.addrs.len()];
+        ep.sent += t.sent;
+        ep.answered += t.answered;
+        ep.rejected += t.rejected;
+        ep.connect_retries += t.connect_retries;
     }
     total.lat_us.sort_unstable();
+    total.versions.sort_unstable();
     Ok(LoadgenReport {
         sent: total.sent,
         answered: total.answered,
@@ -1137,6 +1529,8 @@ pub fn run_loadgen(opts: &LoadgenOpts, verify: Option<&ServeModel>) -> Result<Lo
         p99_ms: percentile_ms(&total.lat_us, 0.99),
         bitwise_checked: total.bitwise_checked,
         bitwise_ok: total.bitwise_bad == 0,
+        model_versions: total.versions,
+        endpoints,
     })
 }
 
@@ -1145,6 +1539,8 @@ pub fn run_loadgen(opts: &LoadgenOpts, verify: Option<&ServeModel>) -> Result<Lo
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::TrainConfig;
+    use crate::estimators::Estimator;
     use crate::util::json::Value;
     use std::io::Write;
 
@@ -1166,6 +1562,8 @@ mod tests {
             max_batch: 64,
             metrics_interval: Duration::from_millis(20),
             eval_delay: None,
+            reload: None,
+            fault: FaultPlan::default(),
         }
     }
 
@@ -1177,16 +1575,51 @@ mod tests {
         max_conns: usize,
         metrics: Option<MetricsLogger>,
     ) -> (String, std::thread::JoinHandle<Result<()>>) {
+        spawn_serve_shared(Arc::new(SharedModel::new(model)), opts, max_conns, metrics)
+    }
+
+    /// Like [`spawn_serve`] but keeps the [`SharedModel`] handle with
+    /// the caller — the lever the reload tests swap epochs through.
+    fn spawn_serve_shared(
+        shared: Arc<SharedModel>,
+        opts: ServeOpts,
+        max_conns: usize,
+        metrics: Option<MetricsLogger>,
+    ) -> (String, std::thread::JoinHandle<Result<()>>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let handle = std::thread::spawn(move || {
-            serve_queries(listener, model, opts, Some(max_conns), metrics)
+            serve_queries(listener, shared, opts, Some(max_conns), metrics)
         });
         (addr, handle)
     }
 
     fn points(d: usize, n: usize, seed: u64) -> Vec<f32> {
         random_batch(&mut Xoshiro256pp::new(seed), n, d)
+    }
+
+    /// Write a servable training checkpoint with deterministic synthetic
+    /// weights: `salt` varies the parameters so two checkpoints of the
+    /// same architecture answer with different bits.
+    fn write_test_ckpt(path: &Path, d: usize, step: usize, salt: f32) {
+        let cfg = TrainConfig {
+            family: "sg2".into(),
+            method: "probe".into(),
+            estimator: Estimator::HteRademacher,
+            d,
+            v: 4,
+            epochs: 100,
+            lr0: 1e-3,
+            seed: 7,
+            lambda_g: 0.0,
+            log_every: 10,
+        };
+        let n = Mlp::n_params_for(d);
+        let mut state = vec![0.0f32; 3 * n + 1];
+        for (i, s) in state[..n].iter_mut().enumerate() {
+            *s = (salt + i as f32 * 1e-3).sin() * 0.2;
+        }
+        checkpoint::save(path, &cfg, step, None, &[0.5], &state).unwrap();
     }
 
     /// End-to-end loopback: served answers are bitwise the local
@@ -1206,9 +1639,10 @@ mod tests {
         for (i, n) in [1usize, 5, 9].into_iter().enumerate() {
             let xs = points(d, n, 100 + i as u64);
             match client.query(&xs).unwrap() {
-                QueryReply::Answer(values) => {
+                QueryReply::Answer { values, model_version, .. } => {
                     let expected = model.eval(&xs);
                     assert_eq!(values.len(), n);
+                    assert_eq!(model_version, 1, "a never-reloaded server answers as v1");
                     for (j, (e, g)) in expected.iter().zip(&values).enumerate() {
                         assert_eq!(e.to_bits(), g.to_bits(), "n={n} point {j} diverged");
                     }
@@ -1221,6 +1655,7 @@ mod tests {
         assert_eq!(parsed.get("queries").unwrap().as_usize().unwrap(), 3);
         assert_eq!(parsed.get("points").unwrap().as_usize().unwrap(), 15);
         assert_eq!(parsed.get("rejected").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(parsed.get("model_version").unwrap().as_usize().unwrap(), 1);
         drop(client);
         handle.join().unwrap().unwrap();
         let text = std::fs::read_to_string(&metrics_path).unwrap();
@@ -1335,7 +1770,7 @@ mod tests {
             let (id, reply) = client.read_reply().unwrap();
             let (_, xs) = batches.iter().find(|(b, _)| *b == id).expect("unknown id");
             match reply {
-                QueryReply::Answer(values) => {
+                QueryReply::Answer { values, .. } => {
                     answered += 1;
                     let expected = model.eval(xs);
                     assert!(bits_match(&expected, &values), "answer {id} diverged");
@@ -1352,7 +1787,7 @@ mod tests {
         // the connection survived saturation: one more round trip works
         let xs = points(d, 1, 999);
         match client.query(&xs).unwrap() {
-            QueryReply::Answer(values) => assert!(bits_match(&model.eval(&xs), &values)),
+            QueryReply::Answer { values, .. } => assert!(bits_match(&model.eval(&xs), &values)),
             QueryReply::Rejected(why) => panic!("post-saturation query rejected: {why}"),
         }
         drop(client);
@@ -1380,7 +1815,7 @@ mod tests {
         let mut client = ServeClient::connect(&addr, d, &dl).unwrap();
         let xs = points(d, 3, 300);
         match client.query(&xs).unwrap() {
-            QueryReply::Answer(values) => assert!(bits_match(&model.eval(&xs), &values)),
+            QueryReply::Answer { values, .. } => assert!(bits_match(&model.eval(&xs), &values)),
             QueryReply::Rejected(why) => panic!("rejected: {why}"),
         }
         drop(client);
@@ -1396,7 +1831,7 @@ mod tests {
         let model = test_model(d, 47);
         let (addr, handle) = spawn_serve(Arc::clone(&model), test_opts(), 2, None);
         let opts = LoadgenOpts {
-            addr,
+            addrs: vec![addr],
             d,
             arrival: Arrival::Closed,
             rate: 0.0,
@@ -1413,11 +1848,18 @@ mod tests {
         assert_eq!(report.bitwise_checked, 8);
         assert!(report.bitwise_ok, "served bits diverged from the local forward");
         assert!(report.qps > 0.0);
+        assert_eq!(report.model_versions, vec![1]);
+        assert_eq!(report.endpoints.len(), 1);
+        assert_eq!(report.endpoints[0].sent, 8);
+        assert_eq!(report.endpoints[0].answered, 8);
+        assert_eq!(report.endpoints[0].connect_retries, 0);
         handle.join().unwrap().unwrap();
         // the report serializes to parseable JSON
         let parsed = Value::parse(&report.to_json()).unwrap();
         assert_eq!(parsed.get("answered").unwrap().as_usize().unwrap(), 8);
         assert!(matches!(parsed.get("bitwise_ok").unwrap(), Value::Bool(true)));
+        let eps = parsed.get("endpoints").unwrap().as_arr().unwrap();
+        assert_eq!(eps[0].get("sent").unwrap().as_usize().unwrap(), 8);
     }
 
     /// Open-loop loadgen: paced arrivals with pipelined out-of-order
@@ -1429,7 +1871,7 @@ mod tests {
         let model = test_model(d, 48);
         let (addr, handle) = spawn_serve(Arc::clone(&model), test_opts(), 2, None);
         let opts = LoadgenOpts {
-            addr,
+            addrs: vec![addr],
             d,
             arrival: Arrival::Open,
             rate: 400.0,
@@ -1444,6 +1886,8 @@ mod tests {
         assert_eq!(report.answered + report.rejected, 12);
         assert_eq!(report.bitwise_checked, report.answered);
         assert!(report.bitwise_ok, "served bits diverged from the local forward");
+        // per-endpoint accounting covers every query of the run
+        assert_eq!(report.endpoints.iter().map(|e| e.sent).sum::<usize>(), 12);
         handle.join().unwrap().unwrap();
     }
 
@@ -1456,18 +1900,232 @@ mod tests {
             stats.record_answer(4, Duration::from_millis(ms));
         }
         stats.record_rejection();
-        let snap = stats.snapshot(3);
+        let snap = stats.snapshot(3, 2, 450);
         assert_eq!(snap.queries, 100);
         assert_eq!(snap.points, 400);
         assert_eq!(snap.rejected, 1);
         assert_eq!(snap.queue_depth, 3);
+        assert_eq!(snap.model_version, 2);
+        assert_eq!(snap.ckpt_step, 450);
         assert!((snap.p50_ms - 50.0).abs() <= 1.0, "p50 {}", snap.p50_ms);
         assert!((snap.p95_ms - 95.0).abs() <= 1.0, "p95 {}", snap.p95_ms);
         assert!((snap.p99_ms - 99.0).abs() <= 1.0, "p99 {}", snap.p99_ms);
         let parsed = Value::parse(&snap.to_json()).unwrap();
         assert_eq!(parsed.get("queries").unwrap().as_usize().unwrap(), 100);
         assert_eq!(parsed.get("queue_depth").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(parsed.get("model_version").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("ckpt_step").unwrap().as_usize().unwrap(), 450);
         // empty stats: percentiles are 0, not NaN/panic
         assert_eq!(percentile_ms(&[], 0.99), 0.0);
+    }
+
+    /// The reload gate, in-process: one unbroken connection is answered
+    /// by checkpoint A as model_version 1, the epoch hot-swaps to
+    /// checkpoint B, and the *same* connection is answered by B as
+    /// version 2 — each answer bitwise its own checkpoint's local
+    /// forward, and the stats snapshot stays monotonic through the swap
+    /// (a client that saw k answers can never read a snapshot
+    /// undercounting them).
+    #[test]
+    fn serve_reload_hot_swaps_without_dropping_the_connection() {
+        let d = 4;
+        let dir = std::env::temp_dir().join(format!("hte-serve-reload-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt_a = dir.join("a.ckpt");
+        let ckpt_b = dir.join("b.ckpt");
+        write_test_ckpt(&ckpt_a, d, 100, 0.25);
+        write_test_ckpt(&ckpt_b, d, 200, -0.75);
+        let model_a = Arc::new(ServeModel::from_checkpoint(&ckpt_a).unwrap());
+        let model_b = ServeModel::from_checkpoint(&ckpt_b).unwrap();
+        let shared = Arc::new(SharedModel::new(Arc::clone(&model_a)));
+        let (addr, handle) = spawn_serve_shared(Arc::clone(&shared), test_opts(), 1, None);
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        let xs = points(d, 3, 500);
+        match client.query(&xs).unwrap() {
+            QueryReply::Answer { values, model_version, ckpt_step } => {
+                assert_eq!(model_version, 1);
+                assert_eq!(ckpt_step, 100);
+                assert!(bits_match(&model_a.eval(&xs), &values), "v1 answer diverged from A");
+            }
+            QueryReply::Rejected(why) => panic!("rejected: {why}"),
+        }
+        let ep = shared.reload_from(&ckpt_b).unwrap();
+        assert_eq!(ep.version, 2);
+        // two checkpoints with different weights must answer differently
+        assert!(!bits_match(&model_a.eval(&xs), &model_b.eval(&xs)));
+        match client.query(&xs).unwrap() {
+            QueryReply::Answer { values, model_version, ckpt_step } => {
+                assert_eq!(model_version, 2, "post-swap answer still stamped v1");
+                assert_eq!(ckpt_step, 200);
+                assert!(bits_match(&model_b.eval(&xs), &values), "v2 answer diverged from B");
+            }
+            QueryReply::Rejected(why) => panic!("rejected: {why}"),
+        }
+        // stats monotonicity across the swap: the client has seen 2
+        // answers, so the snapshot counts >= 2 and queries == answered
+        // (+ rejected == 0), stamped with the new version
+        let parsed = Value::parse(&client.stats().unwrap()).unwrap();
+        assert!(parsed.get("queries").unwrap().as_usize().unwrap() >= 2);
+        assert_eq!(parsed.get("rejected").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(parsed.get("model_version").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("ckpt_step").unwrap().as_usize().unwrap(), 200);
+        drop(client);
+        handle.join().unwrap().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Reload validation: a checkpoint with the wrong dimension and a
+    /// bit-flipped checkpoint are both rejected by name, and the old
+    /// model keeps serving the *same* connection afterwards.
+    #[test]
+    fn serve_reload_rejects_bad_checkpoints_and_keeps_serving() {
+        let d = 4;
+        let dir =
+            std::env::temp_dir().join(format!("hte-serve-reload-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt_a = dir.join("a.ckpt");
+        let ckpt_wrong_d = dir.join("wrong_d.ckpt");
+        let ckpt_corrupt = dir.join("corrupt.ckpt");
+        write_test_ckpt(&ckpt_a, d, 100, 0.25);
+        write_test_ckpt(&ckpt_wrong_d, 6, 100, 0.25);
+        write_test_ckpt(&ckpt_corrupt, d, 300, 0.5);
+        // flip one payload bit: same length, valid header, broken CRC
+        let mut bytes = std::fs::read(&ckpt_corrupt).unwrap();
+        let at = bytes.len() - 40;
+        bytes[at] ^= 0x08;
+        std::fs::write(&ckpt_corrupt, &bytes).unwrap();
+        let model_a = Arc::new(ServeModel::from_checkpoint(&ckpt_a).unwrap());
+        let shared = Arc::new(SharedModel::new(Arc::clone(&model_a)));
+        let (addr, handle) = spawn_serve_shared(Arc::clone(&shared), test_opts(), 1, None);
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        let err = shared.reload_from(&ckpt_wrong_d).unwrap_err().to_string();
+        assert!(err.contains("d=6"), "{err}");
+        assert!(err.contains("d=4"), "{err}");
+        let err = format!("{:#}", shared.reload_from(&ckpt_corrupt).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+        // both rejections left epoch 1 serving, connection intact
+        let xs = points(d, 2, 600);
+        match client.query(&xs).unwrap() {
+            QueryReply::Answer { values, model_version, .. } => {
+                assert_eq!(model_version, 1);
+                assert!(bits_match(&model_a.eval(&xs), &values));
+            }
+            QueryReply::Rejected(why) => panic!("rejected: {why}"),
+        }
+        drop(client);
+        handle.join().unwrap().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The `--watch` trigger end to end, in-process: replacing the
+    /// watched file swaps the epoch without any client action.
+    #[test]
+    fn serve_reload_watch_follows_the_checkpoint_file() {
+        let d = 4;
+        let dir =
+            std::env::temp_dir().join(format!("hte-serve-reload-watch-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let watched = dir.join("live.ckpt");
+        write_test_ckpt(&watched, d, 100, 0.25);
+        let model_a = Arc::new(ServeModel::from_checkpoint(&watched).unwrap());
+        let shared = Arc::new(SharedModel::new(Arc::clone(&model_a)));
+        let opts = ServeOpts {
+            reload: Some(ReloadPlan {
+                path: watched.clone(),
+                on_sighup: false,
+                watch: true,
+                poll: Duration::from_millis(10),
+            }),
+            ..test_opts()
+        };
+        let (addr, handle) = spawn_serve_shared(Arc::clone(&shared), opts, 1, None);
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        let xs = points(d, 2, 700);
+        match client.query(&xs).unwrap() {
+            QueryReply::Answer { model_version, .. } => assert_eq!(model_version, 1),
+            QueryReply::Rejected(why) => panic!("rejected: {why}"),
+        }
+        // overwrite the watched file with new weights (atomic-rename
+        // save, so the watcher never sees a torn file), wait for the
+        // reloader to pick it up
+        std::thread::sleep(Duration::from_millis(50));
+        write_test_ckpt(&watched, d, 200, -0.75);
+        let model_b = ServeModel::from_checkpoint(&watched).unwrap();
+        let mut swapped = false;
+        for _ in 0..300 {
+            if shared.current().version >= 2 {
+                swapped = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(swapped, "the watcher never reloaded the replaced checkpoint");
+        match client.query(&xs).unwrap() {
+            QueryReply::Answer { values, model_version, ckpt_step } => {
+                assert_eq!(model_version, 2);
+                assert_eq!(ckpt_step, 200);
+                assert!(bits_match(&model_b.eval(&xs), &values));
+            }
+            QueryReply::Rejected(why) => panic!("rejected: {why}"),
+        }
+        drop(client);
+        handle.join().unwrap().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The SIGHUP latch: a real `kill -HUP` to this process flips the
+    /// flag exactly once (the reload path for `--reload-on sighup`).
+    #[cfg(unix)]
+    #[test]
+    fn serve_reload_sighup_latch_catches_a_real_signal() {
+        sighup::install();
+        sighup::take_pending(); // clear anything stale
+        let status = std::process::Command::new("kill")
+            .args(["-HUP", &std::process::id().to_string()])
+            .status()
+            .expect("spawning kill");
+        assert!(status.success());
+        let mut seen = false;
+        for _ in 0..200 {
+            if sighup::take_pending() {
+                seen = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(seen, "SIGHUP latch never set");
+        // latched once: the take cleared it
+        assert!(!sighup::take_pending());
+    }
+
+    /// Serve-phase chaos clause `die_after_queries`: the first query is
+    /// answered bit-exact, the budget then kills the connection, and the
+    /// replica stays dead for later connections too (a black hole that
+    /// handshakes but never answers — what the router must eject).
+    #[test]
+    fn serve_chaos_die_after_queries_blackholes_the_replica() {
+        let d = 4;
+        let model = test_model(d, 49);
+        let opts = ServeOpts {
+            fault: FaultPlan::parse("die_after_queries=1").unwrap(),
+            ..test_opts()
+        };
+        let (addr, handle) = spawn_serve(Arc::clone(&model), opts, 2, None);
+        let mut client = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        let xs = points(d, 2, 800);
+        match client.query(&xs).unwrap() {
+            QueryReply::Answer { values, .. } => {
+                assert!(bits_match(&model.eval(&xs), &values));
+            }
+            QueryReply::Rejected(why) => panic!("rejected: {why}"),
+        }
+        // the second query exceeds the budget: the connection drops
+        assert!(client.query(&xs).is_err());
+        // a fresh connection handshakes but dies on its first query
+        let mut second = ServeClient::connect(&addr, d, &fast_deadlines()).unwrap();
+        assert!(second.query(&xs).is_err());
+        drop(client);
+        drop(second);
+        handle.join().unwrap().unwrap();
     }
 }

@@ -1,0 +1,468 @@
+//! End-to-end router + hot-reload suite across real process
+//! boundaries — the CLI half of DESIGN.md §13.  Everything here runs
+//! the shipped binaries: `hte-pinn train` makes checkpoints,
+//! `hte-pinn serve` replicas answer them, `hte-pinn router` fronts the
+//! pool, and `hte-pinn loadgen --resume` gates every answer bitwise
+//! against a locally reconstructed forward.
+//!
+//! The chaos gate kills a replica mid-load with an injected fault
+//! (`--fault die_after_queries=N`, a real `exit(3)`), requires the
+//! load run to complete with full accounting and bitwise-identical
+//! answers, then respawns the dead replica *on its original port*
+//! (exercising the `SO_REUSEADDR` takeover in `bind_reuse`) and waits
+//! for the router to report the rejoin.  The reload gates hot-swap
+//! checkpoints under a live connection — `--watch` and `--reload-on
+//! sighup` — and prove a header-mismatched checkpoint is rejected by
+//! name while the old model keeps answering.
+//!
+//! The protocol matrix (ejection arithmetic, saturation relay, retry
+//! accounting, epoch atomicity) lives in `runtime::router` and
+//! `runtime::serve` unit tests; this file proves those guarantees
+//! survive process isolation, real signals, and real port takeover.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use hte_pinn::runtime::{Deadlines, QueryReply, ServeClient, ServeModel};
+use hte_pinn::util::json::Value;
+
+fn bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_hte-pinn"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hte-router-e2e-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("creating the test temp dir");
+    dir
+}
+
+fn deadlines() -> Deadlines {
+    Deadlines::resolve([Some(5), Some(5), Some(30)], None)
+}
+
+fn points(d: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = hte_pinn::rng::Xoshiro256pp::new(seed);
+    (0..n * d).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+}
+
+/// Train a tiny sg2 checkpoint (3 epochs) through the CLI.
+fn train_checkpoint(dir: &Path, name: &str, d: usize, seed: u64) -> PathBuf {
+    let ckpt = dir.join(name);
+    let status = Command::new(bin())
+        .args([
+            "train",
+            "--backend",
+            "native",
+            "--family",
+            "sg2",
+            "--method",
+            "probe",
+            "--d",
+            &d.to_string(),
+            "--v",
+            "2",
+            "--epochs",
+            "3",
+            "--batch",
+            "4",
+            "--eval-points",
+            "0",
+            "--seed",
+            &seed.to_string(),
+            "--save",
+            ckpt.to_str().unwrap(),
+        ])
+        .status()
+        .expect("running hte-pinn train");
+    assert!(status.success(), "training checkpoint {name} failed");
+    ckpt
+}
+
+/// A spawned `hte-pinn` listener child (serve or router), killed on
+/// drop so a panicking test never leaks a process.  Stdout is read
+/// until the `listening on <addr>` line; stderr is optionally drained
+/// into a buffer the test can grep for reload/rejection messages.
+struct Proc {
+    child: Child,
+    addr: String,
+    stderr: Option<Arc<Mutex<String>>>,
+}
+
+impl Proc {
+    fn spawn(args: &[&str], capture_stderr: bool) -> Self {
+        let mut child = Command::new(bin())
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(if capture_stderr { Stdio::piped() } else { Stdio::inherit() })
+            .spawn()
+            .expect("spawning hte-pinn child");
+        let stderr = child.stderr.take().map(|pipe| {
+            let buf = Arc::new(Mutex::new(String::new()));
+            let sink = Arc::clone(&buf);
+            std::thread::spawn(move || {
+                for line in BufReader::new(pipe).lines() {
+                    let Ok(line) = line else { break };
+                    let mut b = sink.lock().unwrap();
+                    b.push_str(&line);
+                    b.push('\n');
+                }
+            });
+            buf
+        });
+        let stdout = BufReader::new(child.stdout.take().expect("child stdout"));
+        let mut addr = None;
+        for line in stdout.lines() {
+            let line = line.expect("reading child stdout");
+            if let Some(rest) = line.strip_prefix("listening on ") {
+                addr = Some(rest.trim().to_string());
+                break;
+            }
+        }
+        let addr = addr.expect("child never printed its address — did it fail to start?");
+        Proc { child, addr, stderr }
+    }
+
+    fn spawn_serve(ckpt: &Path, listen: &str, extra: &[&str]) -> Self {
+        let mut args =
+            vec!["serve", "--resume", ckpt.to_str().unwrap(), "--listen", listen, "--threads", "2"];
+        args.extend_from_slice(extra);
+        Proc::spawn(&args, false)
+    }
+
+    /// Everything this child has written to stderr so far.
+    fn stderr_so_far(&self) -> String {
+        self.stderr.as_ref().expect("stderr was not captured").lock().unwrap().clone()
+    }
+
+    /// Wait (bounded) for the child to exit on its own; panics if it
+    /// is still running after `timeout`.
+    fn wait_exit(&mut self, timeout: Duration) -> Option<i32> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(status) = self.child.try_wait().expect("try_wait") {
+                return status.code();
+            }
+            assert!(Instant::now() < deadline, "child did not exit within {timeout:?}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn assert_bits(values: &[f64], expected: &[f64], what: &str) {
+    assert_eq!(values.len(), expected.len(), "{what}: answer length");
+    for (j, (e, g)) in expected.iter().zip(values).enumerate() {
+        assert_eq!(e.to_bits(), g.to_bits(), "{what}: answer diverged at point {j}");
+    }
+}
+
+/// The chaos gate, CLI end to end: a replica dies mid-load with an
+/// injected fault, the loadgen run completes with every answer
+/// accounted for and bitwise correct, the dead replica respawns on its
+/// original (TIME_WAIT-held) port, and the router reports the rejoin.
+#[test]
+fn router_chaos_cli_failover_respawn_and_rejoin() {
+    let dir = temp_dir("chaos");
+    let ckpt = train_checkpoint(&dir, "tiny.ckpt", 4, 1);
+    let local = ServeModel::from_checkpoint(&ckpt).expect("rebuilding the checkpoint locally");
+
+    let replica_a = Proc::spawn_serve(&ckpt, "127.0.0.1:0", &[]);
+    // this one answers 2 queries then exits the process on the third
+    let replica_b =
+        Proc::spawn_serve(&ckpt, "127.0.0.1:0", &["--fault", "die_after_queries=2"]);
+    let b_addr = replica_b.addr.clone();
+    let replica_c = Proc::spawn_serve(&ckpt, "127.0.0.1:0", &[]);
+
+    let router = Proc::spawn(
+        &[
+            "router",
+            "--replicas",
+            &format!("{},{},{}", replica_a.addr, b_addr, replica_c.addr),
+            "--listen",
+            "127.0.0.1:0",
+            "--d",
+            "4",
+            "--eject-after",
+            "1",
+            "--rejoin-interval-secs",
+            "1",
+        ],
+        false,
+    );
+
+    // drive load through the router while replica B dies under it; the
+    // run must complete, fully accounted, bitwise-gated by --resume
+    let report_path = dir.join("report.json");
+    let status = Command::new(bin())
+        .args([
+            "loadgen",
+            "--connect",
+            &router.addr,
+            "--d",
+            "4",
+            "--arrival",
+            "closed",
+            "--conns",
+            "2",
+            "--batch",
+            "3",
+            "--requests",
+            "24",
+            "--seed",
+            "3",
+            "--resume",
+            ckpt.to_str().unwrap(),
+            "--out",
+            report_path.to_str().unwrap(),
+        ])
+        .status()
+        .expect("running hte-pinn loadgen");
+    assert!(status.success(), "loadgen through the router failed");
+
+    let report = std::fs::read_to_string(&report_path).expect("loadgen --out report");
+    let report = Value::parse(report.trim()).expect("report must be JSON");
+    let sent = report.get("sent").unwrap().as_usize().unwrap();
+    let answered = report.get("answered").unwrap().as_usize().unwrap();
+    let rejected = report.get("rejected").unwrap().as_usize().unwrap();
+    assert_eq!(sent, 24);
+    assert_eq!(sent, answered + rejected, "every query must be answered or rejected");
+    assert_eq!(rejected, 0, "a surviving replica makes transport failures invisible");
+    assert_eq!(report.get("bitwise_checked").unwrap().as_usize().unwrap(), answered);
+    assert!(matches!(report.get("bitwise_ok").unwrap(), Value::Bool(true)));
+
+    // the faulted replica really died — with the injected exit code
+    let mut replica_b = replica_b;
+    let code = replica_b.wait_exit(Duration::from_secs(10));
+    assert_eq!(code, Some(3), "an injected death exits with the fault status");
+
+    // respawn it on the SAME port its corpse left in TIME_WAIT — this
+    // is the bind_reuse takeover path, and what lets the router's
+    // rejoin probe find a healthy replica at the configured address
+    let replica_b2 = Proc::spawn_serve(&ckpt, &b_addr, &[]);
+    assert_eq!(replica_b2.addr, b_addr, "the respawn must land on the original port");
+
+    // keep querying through the router until it reports the rejoin
+    let mut client =
+        ServeClient::connect(&router.addr, 4, &deadlines()).expect("dialing the router");
+    let xs = points(4, 2, 99);
+    let expected = local.eval(&xs);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let snap = loop {
+        match client.query(&xs).expect("query through the router") {
+            QueryReply::Answer { values, .. } => assert_bits(&values, &expected, "post-respawn"),
+            QueryReply::Rejected(why) => panic!("router rejected a healthy query: {why}"),
+        }
+        let snap = Value::parse(&client.stats().expect("router stats")).expect("stats JSON");
+        if snap.get("rejoins").unwrap().as_usize().unwrap() >= 1 {
+            break snap;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "router never reported the rejoin: {}",
+            snap.to_json()
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    };
+
+    // full accounting survived the whole ordeal
+    let queries = snap.get("queries").unwrap().as_usize().unwrap();
+    let answered = snap.get("answered").unwrap().as_usize().unwrap();
+    let rejected = snap.get("rejected").unwrap().as_usize().unwrap();
+    assert_eq!(queries, answered + rejected, "router accounting must partition");
+    assert!(snap.get("ejections").unwrap().as_usize().unwrap() >= 1, "the death ejects");
+    assert!(snap.get("retried").unwrap().as_usize().unwrap() >= 1, "the in-flight query retried");
+    let replicas = snap.get("replicas").unwrap().as_arr().unwrap();
+    let b_entry = replicas
+        .iter()
+        .find(|r| r.get("addr").unwrap().as_str().unwrap() == b_addr)
+        .expect("the respawned replica appears in the snapshot");
+    assert_eq!(b_entry.get("live").unwrap(), &Value::Bool(true), "rejoined replicas are live");
+
+    drop(client);
+    drop(router);
+    drop(replica_a);
+    drop(replica_b2);
+    drop(replica_c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Atomically replace `live` with a copy of `src` (stage + rename), so
+/// the serve child's watcher never sees a torn file.
+fn swap_checkpoint(dir: &Path, src: &Path, live: &Path) {
+    let stage = dir.join("stage.tmp");
+    std::fs::copy(src, &stage).expect("staging the checkpoint");
+    std::fs::rename(&stage, live).expect("renaming the checkpoint into place");
+}
+
+/// The reload gate, CLI end to end: one unbroken client connection
+/// watches `--watch` swap the model from checkpoint A to checkpoint B
+/// (bitwise-correct answers under each version), then sees a
+/// header-mismatched checkpoint rejected by name on the child's stderr
+/// while the old model keeps answering.
+#[test]
+fn serve_reload_watch_hot_swaps_and_rejects_mismatch_by_name() {
+    let dir = temp_dir("reload-watch");
+    let ckpt_a = train_checkpoint(&dir, "a.ckpt", 4, 1);
+    let ckpt_b = train_checkpoint(&dir, "b.ckpt", 4, 2);
+    let ckpt_bad = train_checkpoint(&dir, "bad.ckpt", 6, 1);
+    let local_a = ServeModel::from_checkpoint(&ckpt_a).expect("local model A");
+    let local_b = ServeModel::from_checkpoint(&ckpt_b).expect("local model B");
+
+    let live = dir.join("live.ckpt");
+    std::fs::copy(&ckpt_a, &live).expect("seeding the watched checkpoint");
+    let server = Proc::spawn(
+        &[
+            "serve",
+            "--resume",
+            live.to_str().unwrap(),
+            "--listen",
+            "127.0.0.1:0",
+            "--threads",
+            "2",
+            "--watch",
+            live.to_str().unwrap(),
+        ],
+        true,
+    );
+
+    let mut client =
+        ServeClient::connect(&server.addr, 4, &deadlines()).expect("dialing the serve child");
+    let xs = points(4, 3, 7);
+    let bits_a = local_a.eval(&xs);
+    let bits_b = local_b.eval(&xs);
+    match client.query(&xs).expect("first query") {
+        QueryReply::Answer { values, model_version, .. } => {
+            assert_eq!(model_version, 1, "the boot checkpoint serves as version 1");
+            assert_bits(&values, &bits_a, "version 1");
+        }
+        QueryReply::Rejected(why) => panic!("unsaturated server rejected: {why}"),
+    }
+
+    // swap A -> B under the watcher and poll the SAME connection until
+    // the epoch flips; every in-between answer must still be model A
+    swap_checkpoint(&dir, &ckpt_b, &live);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        match client.query(&xs).expect("query across the reload") {
+            QueryReply::Answer { values, model_version, .. } => match model_version {
+                1 => assert_bits(&values, &bits_a, "still version 1"),
+                2 => {
+                    assert_bits(&values, &bits_b, "version 2");
+                    break;
+                }
+                v => panic!("impossible model_version {v}"),
+            },
+            QueryReply::Rejected(why) => panic!("server rejected mid-reload: {why}"),
+        }
+        assert!(Instant::now() < deadline, "the watcher never swapped to checkpoint B");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+
+    // a d=6 checkpoint must be rejected by name, old model still serving
+    swap_checkpoint(&dir, &ckpt_bad, &live);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let err = server.stderr_so_far();
+        if err.contains("reload rejected") {
+            assert!(err.contains("d=6"), "the rejection names the offered dimension: {err}");
+            assert!(err.contains("d=4"), "the rejection names the served dimension: {err}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "the mismatched checkpoint was never rejected");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    match client.query(&xs).expect("query after the rejected reload") {
+        QueryReply::Answer { values, model_version, .. } => {
+            assert_eq!(model_version, 2, "the rejected reload must not bump the version");
+            assert_bits(&values, &bits_b, "still version 2");
+        }
+        QueryReply::Rejected(why) => panic!("server rejected after a failed reload: {why}"),
+    }
+
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--reload-on sighup` reloads only when signaled: replacing the
+/// checkpoint alone changes nothing, a real SIGHUP swaps the epoch.
+#[test]
+fn serve_reload_on_sighup_swaps_only_when_signaled() {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGHUP: i32 = 1;
+
+    let dir = temp_dir("reload-sighup");
+    let ckpt_a = train_checkpoint(&dir, "a.ckpt", 4, 1);
+    let ckpt_b = train_checkpoint(&dir, "b.ckpt", 4, 2);
+    let local_a = ServeModel::from_checkpoint(&ckpt_a).expect("local model A");
+    let local_b = ServeModel::from_checkpoint(&ckpt_b).expect("local model B");
+
+    let live = dir.join("live.ckpt");
+    std::fs::copy(&ckpt_a, &live).expect("seeding the resumed checkpoint");
+    let server = Proc::spawn(
+        &[
+            "serve",
+            "--resume",
+            live.to_str().unwrap(),
+            "--listen",
+            "127.0.0.1:0",
+            "--threads",
+            "2",
+            "--reload-on",
+            "sighup",
+        ],
+        false,
+    );
+
+    let mut client =
+        ServeClient::connect(&server.addr, 4, &deadlines()).expect("dialing the serve child");
+    let xs = points(4, 2, 11);
+    let bits_a = local_a.eval(&xs);
+    let bits_b = local_b.eval(&xs);
+
+    // replacing the file without a signal must NOT reload (no --watch)
+    swap_checkpoint(&dir, &ckpt_b, &live);
+    std::thread::sleep(Duration::from_millis(1500)); // several poll intervals
+    match client.query(&xs).expect("query before the signal") {
+        QueryReply::Answer { values, model_version, .. } => {
+            assert_eq!(model_version, 1, "no signal, no reload");
+            assert_bits(&values, &bits_a, "pre-signal");
+        }
+        QueryReply::Rejected(why) => panic!("unsaturated server rejected: {why}"),
+    }
+
+    let rc = unsafe { kill(server.child.id() as i32, SIGHUP) };
+    assert_eq!(rc, 0, "delivering SIGHUP to the serve child");
+
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        match client.query(&xs).expect("query across the signaled reload") {
+            QueryReply::Answer { values, model_version, .. } => match model_version {
+                1 => assert_bits(&values, &bits_a, "still version 1"),
+                2 => {
+                    assert_bits(&values, &bits_b, "version 2");
+                    break;
+                }
+                v => panic!("impossible model_version {v}"),
+            },
+            QueryReply::Rejected(why) => panic!("server rejected mid-reload: {why}"),
+        }
+        assert!(Instant::now() < deadline, "SIGHUP never triggered the reload");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -130,7 +130,8 @@ fn serve_process_answers_match_local_model_bitwise() {
     for (i, n) in [1usize, 3, 7].into_iter().enumerate() {
         let xs = points(4, n, 50 + i as u64);
         match client.query(&xs).expect("query round trip") {
-            QueryReply::Answer(values) => {
+            QueryReply::Answer { values, model_version, .. } => {
+                assert_eq!(model_version, 1, "a fresh serve process answers as version 1");
                 let expected = local.eval(&xs);
                 assert_eq!(values.len(), n);
                 for (j, (e, g)) in expected.iter().zip(&values).enumerate() {
