@@ -32,11 +32,21 @@
 //!   the two modes, a ≥1.15x replay-speedup gate on the sg2/bihar d=10
 //!   rows, and the compiler's pass statistics (constant folding, CSE,
 //!   dead-adjoint elimination, arena footprint) in `rows_plan`.
+//! * **fuse** (always available): fused (Pass E) vs unfused compiled
+//!   replay vs eager, per residual family at d ∈ {10, 100} — a hard
+//!   three-way `to_bits` gate on loss + gradient, the fused plan's
+//!   superinstruction counts and shared-arena bytes, and a ≥1.15x
+//!   fused-replay-vs-eager gate on the sg2/bihar d=10 rows (the
+//!   fused-vs-unfused ratio is informational: fusion trims dispatch
+//!   and intermediate passes, a few percent at kernel-bound shapes)
+//!   in `rows_fuse`.
 //! * **artifact** (`--features xla` + `artifacts/`): the L3 step split
 //!   into host-side stages vs XLA execution, so the coordinator's
 //!   overhead budget (<10% of step time, DESIGN.md §8) is verifiable.
 
-use hte_pinn::autodiff::{force_plan_mode, plan_mode, PlanMode, PlanStats, Tape};
+use hte_pinn::autodiff::{
+    force_fuse_mode, force_plan_mode, fuse_mode, plan_mode, FuseMode, PlanMode, PlanStats, Tape,
+};
 use hte_pinn::coordinator::{problem_for, rss_mb};
 use hte_pinn::memmodel;
 use hte_pinn::nn::{
@@ -657,6 +667,153 @@ fn plan_section(report: &mut BenchReport) -> Vec<PlanRow> {
     rows
 }
 
+/// One fusion A/B for a residual family (DESIGN.md §12 Pass E): the
+/// same step timed eager, as unfused replay (`HTE_FUSE=off`), and as
+/// fused replay, with a hard three-way `to_bits` gate on loss + every
+/// gradient element, plus the fused shard-0 plan's superinstruction
+/// counts and shared-arena footprint.
+struct FuseRow {
+    family: &'static str,
+    d: usize,
+    v: usize,
+    n: usize,
+    eager_ms: f64,
+    unfused_ms: f64,
+    fused_ms: f64,
+    bitwise_exact: bool,
+    /// Stats of the fused shard-0 plan (fused_* counts, shared_bytes).
+    stats: PlanStats,
+    /// Row carries the ≥1.15x fused-replay-vs-eager gate (sg2 / bihar
+    /// at the overhead-dominated d=10 shape).
+    gated: bool,
+}
+
+fn fuse_case(
+    report: &mut BenchReport,
+    family: &'static str,
+    d: usize,
+    v: usize,
+    n: usize,
+    gated: bool,
+) -> FuseRow {
+    use hte_pinn::runtime::ShardPlan;
+
+    let problem_name = match family {
+        "unbiased" | "gpinn" => "sg2",
+        other => other,
+    };
+    let mut rng = Xoshiro256pp::new(31 + d as u64);
+    let mlp = Mlp::init(d, &mut rng);
+    let problem = problem_for(problem_name, d).expect(problem_name);
+    let domain = if family == "bihar" { Domain::Annulus } else { Domain::UnitBall };
+    let mut sampler = DomainSampler::new(domain, d, rng.fork(1));
+    let xs = sampler.batch(n);
+    let rows_v = if family == "unbiased" { 2 * v } else { v };
+    let mut probes = vec![0.0f32; rows_v * d];
+    if family == "bihar" {
+        Normal::new().fill_f32(&mut rng, &mut probes);
+    } else {
+        fill_rademacher(&mut rng, &mut probes);
+    }
+    let mut coeff = vec![0.0f32; problem.n_coeff()];
+    Normal::new().fill_f32(&mut rng, &mut coeff);
+    let batch = NativeBatch { xs: &xs, probes: &probes, coeff: &coeff, n, v: rows_v };
+    let gpinn_op = GpinnResidual { lambda: 10.0 };
+    let op: &dyn ResidualOp = match family {
+        "gpinn" => &gpinn_op,
+        "unbiased" => &UnbiasedTrace,
+        _ => default_residual_op(problem.as_ref()),
+    };
+    let tag = format!("{family}/d{d}-v{rows_v}-n{n}");
+
+    let prior_plan = plan_mode();
+    let prior_fuse = fuse_mode();
+    let mut grad = Vec::new();
+
+    // Eager baseline — independent of the fuse mode by construction.
+    force_plan_mode(PlanMode::Off);
+    let mut engine = NativeEngine::new(1);
+    let eager = time_fn(&format!("fuse-step/eager/{tag}"), 2, 10, || {
+        std::hint::black_box(
+            engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap(),
+        );
+    });
+    report.push(eager.clone());
+    let loss_eager =
+        engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap();
+    let grad_eager = grad.clone();
+
+    // Unfused replay: compiled plans, Pass E disabled.
+    force_plan_mode(PlanMode::On);
+    force_fuse_mode(FuseMode::Off);
+    let mut engine = NativeEngine::new(1);
+    let unfused = time_fn(&format!("fuse-step/replay-unfused/{tag}"), 2, 10, || {
+        std::hint::black_box(
+            engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap(),
+        );
+    });
+    report.push(unfused.clone());
+    let loss_unfused =
+        engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap();
+    let grad_unfused = grad.clone();
+
+    // Fused replay: the same plans with Pass E rewriting the streams.
+    force_fuse_mode(FuseMode::On);
+    let mut engine = NativeEngine::new(1);
+    let fused = time_fn(&format!("fuse-step/replay-fused/{tag}"), 2, 10, || {
+        std::hint::black_box(
+            engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap(),
+        );
+    });
+    report.push(fused.clone());
+    let loss_fused =
+        engine.loss_and_grad_with(&mlp, problem.as_ref(), op, &batch, &mut grad).unwrap();
+    let bitwise_exact = loss_fused.to_bits() == loss_eager.to_bits()
+        && loss_fused.to_bits() == loss_unfused.to_bits()
+        && grad.len() == grad_eager.len()
+        && grad.iter().zip(&grad_eager).all(|(a, b)| a.to_bits() == b.to_bits())
+        && grad.iter().zip(&grad_unfused).all(|(a, b)| a.to_bits() == b.to_bits());
+
+    // Fused shard-0 plan statistics on a standalone tape.
+    let shard_plan = ShardPlan::for_batch(n);
+    let shard0 = &shard_plan.shards()[0];
+    let mut sgrad = Vec::new();
+    let mut tape = Tape::new();
+    let _ = shard_loss_grad(&mut tape, &mlp, op, problem.as_ref(), &batch, shard0, &mut sgrad);
+    let key = plan_key_for(op, &mlp, &batch, shard0.nc);
+    let stats = tape.plan_stats(&key).expect("fused shard 0 plan compiled");
+    force_fuse_mode(prior_fuse);
+    force_plan_mode(prior_plan);
+
+    FuseRow {
+        family,
+        d,
+        v: rows_v,
+        n,
+        eager_ms: eager.mean_s * 1e3,
+        unfused_ms: unfused.mean_s * 1e3,
+        fused_ms: fused.mean_s * 1e3,
+        bitwise_exact,
+        stats,
+        gated,
+    }
+}
+
+/// Pass E rows: fused vs unfused replay vs eager, one step per residual
+/// family at d ∈ {10, 100}.
+fn fuse_section(report: &mut BenchReport) -> Vec<FuseRow> {
+    let mut rows = Vec::new();
+    for d in [10usize, 100] {
+        let gated = d == 10;
+        rows.push(fuse_case(report, "sg2", d, 16, 16, gated));
+        rows.push(fuse_case(report, "gpinn", d, 8, 16, false));
+        rows.push(fuse_case(report, "unbiased", d, 8, 16, false));
+        rows.push(fuse_case(report, "ac2", d, 16, 16, false));
+        rows.push(fuse_case(report, "bihar", d, 8, 16, gated));
+    }
+    rows
+}
+
 /// One simd-vs-scalar comparison: a matmul variant or a full engine
 /// step, timed at the forced-scalar and the dispatched level, with a
 /// bitwise output comparison (the no-FMA / lane-independence gate).
@@ -834,6 +991,7 @@ fn write_bench_json(
     rows_gp: &[GpinnRow],
     rows_shard: &[ShardRow],
     rows_plan: &[PlanRow],
+    rows_fuse: &[FuseRow],
 ) {
     let json_rows: Vec<Value> = rows
         .iter()
@@ -949,6 +1107,35 @@ fn write_bench_json(
             ])
         })
         .collect();
+    let json_rows_fuse: Vec<Value> = rows_fuse
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("family", s(r.family)),
+                ("d", num(r.d as f64)),
+                ("v", num(r.v as f64)),
+                ("n", num(r.n as f64)),
+                ("eager_ms", num(r.eager_ms)),
+                ("unfused_ms", num(r.unfused_ms)),
+                ("fused_ms", num(r.fused_ms)),
+                ("speedup_vs_eager", num(r.eager_ms / r.fused_ms.max(1e-9))),
+                ("speedup_vs_unfused", num(r.unfused_ms / r.fused_ms.max(1e-9))),
+                ("bitwise_exact", Value::Bool(r.bitwise_exact)),
+                ("speedup_gated", Value::Bool(r.gated)),
+                ("fused_matmul_bias", num(r.stats.fused_mb as f64)),
+                ("fused_matmul_bias_tanh", num(r.stats.fused_mbt as f64)),
+                (
+                    "fused_layer",
+                    Value::Arr(r.stats.fused_layer.iter().map(|&c| num(c as f64)).collect()),
+                ),
+                ("fused_bwd", num(r.stats.fused_bwd as f64)),
+                ("fused_away", num(r.stats.fused_away as f64)),
+                ("fwd_instrs", num(r.stats.fwd_instrs as f64)),
+                ("arena_bytes", num(r.stats.arena_bytes as f64)),
+                ("shared_bytes", num(r.stats.shared_bytes as f64)),
+            ])
+        })
+        .collect();
     let json_rows_simd: Vec<Value> = rows_simd
         .iter()
         .map(|r| {
@@ -1023,6 +1210,21 @@ fn write_bench_json(
                eager graph"),
         ),
         ("rows_plan", Value::Arr(json_rows_plan)),
+        (
+            "fuse",
+            s("fused (Pass E superinstructions, DESIGN.md §12) vs unfused compiled \
+               replay vs eager, one step per residual family at d in {10, 100}: \
+               bitwise_exact gates loss + gradient to_bits equality across all three \
+               modes and is never waivable, fused_* count the rewritten \
+               superinstructions (fused_layer is indexed by jet order - 1) and must be \
+               nonzero, shared_bytes is the arena loaned from the per-tape shared pool; \
+               rows with speedup_gated must reach speedup_vs_eager >= 1.15 and must not \
+               regress vs unfused replay (speedup_vs_unfused >= 0.8) — the \
+               fused-vs-unfused upside is informational because these shapes are \
+               kernel-bound: fusion removes dispatch and intermediate write passes, \
+               not matmul work"),
+        ),
+        ("rows_fuse", Value::Arr(json_rows_fuse)),
     ]);
     let path = "BENCH_native.json";
     match std::fs::write(path, doc.to_json()) {
@@ -1098,6 +1300,7 @@ fn main() {
     let rows_gp = gpinn_section(&mut report);
     let rows_shard = shard_section(&mut report);
     let rows_plan = plan_section(&mut report);
+    let rows_fuse = fuse_section(&mut report);
     let rows = native_section(&mut report);
     println!("  simd dispatch level: {}", simd_level_used.name());
     for r in &rows_simd {
@@ -1195,6 +1398,30 @@ fn main() {
             r.stats.eager_bytes
         );
     }
+    for r in &rows_fuse {
+        let layer_fused: usize = r.stats.fused_layer.iter().sum();
+        println!(
+            "  fuse-step {} d{} v{} n{}: eager {:.3} ms -> unfused {:.3} ms -> fused \
+             {:.3} ms ({:.2}x vs eager, {:.2}x vs unfused), bitwise exact: {}, \
+             fused instrs mb {} / mbt {} / layer {} / bwd {} (-{} instrs), shared {}B",
+            r.family,
+            r.d,
+            r.v,
+            r.n,
+            r.eager_ms,
+            r.unfused_ms,
+            r.fused_ms,
+            r.eager_ms / r.fused_ms.max(1e-9),
+            r.unfused_ms / r.fused_ms.max(1e-9),
+            r.bitwise_exact,
+            r.stats.fused_mb,
+            r.stats.fused_mbt,
+            layer_fused,
+            r.stats.fused_bwd,
+            r.stats.fused_away,
+            r.stats.shared_bytes
+        );
+    }
     write_bench_json(
         simd_level_used,
         &rows_simd,
@@ -1204,6 +1431,7 @@ fn main() {
         &rows_gp,
         &rows_shard,
         &rows_plan,
+        &rows_fuse,
     );
     #[cfg(feature = "xla")]
     artifact_section(&mut report);
@@ -1336,6 +1564,59 @@ fn main() {
                 eprintln!(
                     "FAIL: plan replay {} d{} v{} n{}: {speedup:.2}x < 1.15x vs eager \
                      (set HTE_BENCH_NO_SPEEDUP_GATE=1 to report without enforcing)",
+                    r.family, r.d, r.v, r.n
+                );
+                failed = true;
+            }
+        }
+    }
+    for r in &rows_fuse {
+        // the fusion-equivalence invariant is never waivable: fused
+        // replay must produce the exact bits of unfused replay AND eager
+        if !r.bitwise_exact {
+            eprintln!(
+                "FAIL: fused replay {} d{} v{} n{} is not bitwise-exact vs unfused \
+                 replay / eager execution",
+                r.family, r.d, r.v, r.n
+            );
+            failed = true;
+        }
+        // Pass E must actually fire on every family's training plan
+        let fused_count = r.stats.fused_mb
+            + r.stats.fused_mbt
+            + r.stats.fused_layer.iter().sum::<usize>();
+        if fused_count == 0 {
+            eprintln!(
+                "FAIL: fuse {} d{} v{} n{}: Pass E fused no instructions ({:?})",
+                r.family, r.d, r.v, r.n, r.stats
+            );
+            failed = true;
+        }
+        if r.stats.shared_bytes == 0 {
+            eprintln!(
+                "FAIL: fuse {} d{} v{} n{}: plan loans no shared-arena bytes",
+                r.family, r.d, r.v, r.n
+            );
+            failed = true;
+        }
+        if r.gated && enforce_speed {
+            let speedup = r.eager_ms / r.fused_ms.max(1e-9);
+            if speedup < 1.15 {
+                eprintln!(
+                    "FAIL: fused replay {} d{} v{} n{}: {speedup:.2}x < 1.15x vs eager \
+                     (set HTE_BENCH_NO_SPEEDUP_GATE=1 to report without enforcing)",
+                    r.family, r.d, r.v, r.n
+                );
+                failed = true;
+            }
+            // fused must not regress vs unfused replay (noise floor as
+            // elsewhere); the upside ratio is informational
+            let vs_unfused = r.unfused_ms / r.fused_ms.max(1e-9);
+            if vs_unfused < 0.8 {
+                eprintln!(
+                    "FAIL: fused replay {} d{} v{} n{} is slower than unfused replay \
+                     ({vs_unfused:.2}x; set HTE_BENCH_NO_SPEEDUP_GATE=1 to report without \
+                     enforcing)",
                     r.family, r.d, r.v, r.n
                 );
                 failed = true;

@@ -32,7 +32,9 @@ use crate::tensor::{matmul_acc, matmul_nt_acc, matmul_tn_acc, simd, BufferPool, 
 mod plan;
 
 pub use plan::{
-    force_plan_mode, plan_enabled, plan_mode, plan_mode_guard, PlanKey, PlanMode, PlanStats,
+    force_fuse_mode, force_plan_cache_cap, force_plan_mode, fuse_enabled, fuse_mode,
+    fuse_mode_guard, plan_cache_cap, plan_enabled, plan_mode, plan_mode_guard, FuseMode, PlanKey,
+    PlanMode, PlanStats,
 };
 
 /// Index of a node on the tape.
@@ -107,6 +109,13 @@ pub struct Tape {
     zero_leaves: Vec<usize>,
     plans: plan::PlanCache,
     active: Option<ActiveReplay>,
+    /// Shared forward-arena buffers loaned to whichever plan is
+    /// replaying (register-indexed).  One set per tape, so the full
+    /// chunk's plan and the remainder chunk's plan reuse the same
+    /// buffers instead of owning an arena each.
+    shared_fwd: Vec<Vec<f32>>,
+    /// Shared gradient-arena buffers, same scheme.
+    shared_grad: Vec<Vec<f32>>,
 }
 
 /// Cursor state while a recorded graph is replayed through a plan.
@@ -634,6 +643,12 @@ impl Tape {
         self.plans.position(key).map(|i| self.plans.entries[i].1.stats())
     }
 
+    /// Plans evicted from this tape's FIFO cache since construction
+    /// (surfaced in the run banner; see `HTE_PLAN_CACHE_CAP`).
+    pub fn plan_evictions(&self) -> u64 {
+        self.plans.evictions
+    }
+
     /// Compile the recorded graph (an eager build of `root` with
     /// gradient leaves `params`, in pack order) into a cached plan.
     pub fn compile_plan(&mut self, key: PlanKey, root: Var, params: &[Var]) {
@@ -667,26 +682,33 @@ impl Tape {
     /// build + [`Tape::backward`] it replaces.
     pub fn replay_run(&mut self, root: Var, grad_out: &mut Vec<f32>) -> f64 {
         let ar = self.active.take().expect("no active replay");
-        let p = &mut self.plans.entries[ar.entry].1;
+        let Tape { plans, shared_fwd, shared_grad, .. } = self;
+        let p = &mut plans.entries[ar.entry].1;
         assert_eq!(ar.cursor, p.kinds.len(), "replay did not cover the recorded graph");
         assert_eq!(ar.bind_cursor, p.binds.len(), "replay bound fewer leaves than recorded");
         assert_eq!(root.0, p.root, "replay root mismatch");
+        p.loan_shared(shared_fwd, shared_grad);
         p.run_forward();
         p.run_backward();
         p.pack_grads(grad_out);
-        p.root_value()[0] as f64
+        let loss = p.root_value()[0] as f64;
+        p.return_shared(shared_fwd, shared_grad);
+        loss
     }
 
     /// Execute an active forward-only replay, appending the root value
     /// to `out`.
     pub fn replay_forward(&mut self, root: Var, out: &mut Vec<f32>) {
         let ar = self.active.take().expect("no active replay");
-        let p = &mut self.plans.entries[ar.entry].1;
+        let Tape { plans, shared_fwd, shared_grad, .. } = self;
+        let p = &mut plans.entries[ar.entry].1;
         assert_eq!(ar.cursor, p.kinds.len(), "replay did not cover the recorded graph");
         assert_eq!(ar.bind_cursor, p.binds.len(), "replay bound fewer leaves than recorded");
         assert_eq!(root.0, p.root, "replay root mismatch");
+        p.loan_shared(shared_fwd, shared_grad);
         p.run_forward();
         out.extend_from_slice(p.root_value());
+        p.return_shared(shared_fwd, shared_grad);
     }
 
     /// Reverse pass from a scalar root; returns per-node gradients.

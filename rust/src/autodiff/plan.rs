@@ -49,7 +49,10 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU8, Ordering};
 
-use crate::tensor::{matmul_acc, matmul_nt_acc, matmul_tn_acc, simd, Tensor};
+use crate::tensor::{
+    fused_matmul_bias, fused_matmul_bias_tanh, matmul_acc, matmul_nt_acc, matmul_tn_acc, simd,
+    Tensor,
+};
 
 use super::{Node, Op};
 
@@ -128,6 +131,80 @@ pub fn plan_mode_guard() -> std::sync::MutexGuard<'static, ()> {
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Whether the compiler's fusion pass rewrites adjacent instruction
+/// windows into fused superinstructions.  Independent of [`PlanMode`]:
+/// plans can run unfused (`HTE_FUSE=off`) for A/B triage of a fusion
+/// regression without giving up replay itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuseMode {
+    On,
+    Off,
+}
+
+impl FuseMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FuseMode::On => "on",
+            FuseMode::Off => "off",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            FuseMode::On => 1,
+            FuseMode::Off => 2,
+        }
+    }
+
+    fn from_code(code: u8) -> Self {
+        if code == 2 {
+            FuseMode::Off
+        } else {
+            FuseMode::On
+        }
+    }
+}
+
+static FUSE: AtomicU8 = AtomicU8::new(0);
+
+/// The fusion mode the compiler consults.  Resolved once from `HTE_FUSE`
+/// (`off` / `0` disable fusion) and cached; [`force_fuse_mode`] replaces
+/// the cache.
+pub fn fuse_mode() -> FuseMode {
+    match FUSE.load(Ordering::Relaxed) {
+        0 => {
+            let mode = match std::env::var("HTE_FUSE").ok().as_deref() {
+                Some("off") | Some("0") => FuseMode::Off,
+                _ => FuseMode::On,
+            };
+            FUSE.store(mode.code(), Ordering::Relaxed);
+            mode
+        }
+        code => FuseMode::from_code(code),
+    }
+}
+
+/// True when the fusion pass runs at compile time.
+pub fn fuse_enabled() -> bool {
+    fuse_mode() == FuseMode::On
+}
+
+/// Install a fusion mode (the programmatic `HTE_FUSE`, for the parity
+/// tests and the fused-vs-unfused bench rows).  Only affects plans
+/// compiled *after* the call — cached plans keep the shape they were
+/// compiled with, so tests build fresh engines per mode.
+pub fn force_fuse_mode(mode: FuseMode) {
+    FUSE.store(mode.code(), Ordering::Relaxed);
+}
+
+/// Serializes tests/benches that flip the fusion mode with
+/// [`force_fuse_mode`] (poisoning is ignored: the guarded state is a
+/// single atomic).
+pub fn fuse_mode_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 // ---------------------------------------------------------------------------
 // Keys, cache, stats
 // ---------------------------------------------------------------------------
@@ -154,17 +231,47 @@ pub struct PlanKey {
 }
 
 /// Per-tape (= per-thread) plan store: linear scan over at most
-/// [`PlanCache::CAP`] entries, oldest evicted first.  Entry indices stay
+/// [`plan_cache_cap`] entries, oldest evicted first.  Entry indices stay
 /// stable while a replay is active because insertion only happens outside
 /// replay.
 #[derive(Default)]
 pub(super) struct PlanCache {
     pub(super) entries: Vec<(PlanKey, Plan)>,
+    /// FIFO evictions since this cache was created.  Chunk-size-keyed
+    /// plans double the key space, so a thrashing cap must be visible
+    /// (the run banner surfaces the sum over worker tapes) instead of
+    /// silently recompiling every step.
+    pub(super) evictions: u64,
+}
+
+static CACHE_CAP: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Per-tape plan-cache capacity.  Resolved once from
+/// `HTE_PLAN_CACHE_CAP` (default 64, floor 1) and cached;
+/// [`force_plan_cache_cap`] replaces the cache.
+pub fn plan_cache_cap() -> usize {
+    match CACHE_CAP.load(Ordering::Relaxed) {
+        0 => {
+            let cap = std::env::var("HTE_PLAN_CACHE_CAP")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(64)
+                .max(1);
+            CACHE_CAP.store(cap, Ordering::Relaxed);
+            cap
+        }
+        cap => cap,
+    }
+}
+
+/// Install a cache capacity (the programmatic `HTE_PLAN_CACHE_CAP`, for
+/// the eviction-counter tests).  Applies to the next insertion on every
+/// tape; floor 1.
+pub fn force_plan_cache_cap(cap: usize) {
+    CACHE_CAP.store(cap.max(1), Ordering::Relaxed);
 }
 
 impl PlanCache {
-    const CAP: usize = 64;
-
     pub(super) fn position(&self, key: &PlanKey) -> Option<usize> {
         self.entries.iter().position(|(k, _)| k == key)
     }
@@ -173,8 +280,9 @@ impl PlanCache {
         if self.position(&key).is_some() {
             return;
         }
-        if self.entries.len() >= Self::CAP {
+        while self.entries.len() >= plan_cache_cap() {
             self.entries.remove(0);
+            self.evictions += 1;
         }
         self.entries.push((key, plan));
     }
@@ -207,6 +315,22 @@ pub struct PlanStats {
     /// Bytes the eager path materializes per step (all node values +
     /// reached gradient slots).
     pub eager_bytes: usize,
+    /// Fused `Matmul+AddRow` superinstructions (output layer, serve
+    /// forward plans).
+    pub fused_mb: usize,
+    /// Fused `Matmul+AddRow+Tanh` superinstructions (first hidden layer,
+    /// serve forward plans).
+    pub fused_mbt: usize,
+    /// Fused whole-layer `Matmul+AddRow+Tanh+streams+JetO{1..4}`
+    /// superinstructions, indexed by jet order − 1.
+    pub fused_layer: [usize; 4],
+    /// Fused backward `AccAdd+AddRowBias` pairs.
+    pub fused_bwd: usize,
+    /// Forward instructions eliminated by the fusion pass.
+    pub fused_away: usize,
+    /// Arena bytes loaned from the tape-level shared pool at replay time
+    /// (cross-plan buffer reuse) instead of being owned by this plan.
+    pub shared_bytes: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -303,6 +427,48 @@ enum FwdInstr {
         group: usize,
         c: usize,
     },
+    // -- fused superinstructions (pass E, DESIGN.md §12).  Each runs the
+    // -- identical kernels in the identical order as the window it
+    // -- replaces; the only eliminated work is the adjoint-dead
+    // -- intermediate writes and per-instruction dispatch.
+    /// `Matmul` + `AddRow` where the matmul output was adjoint-dead:
+    /// out = a@b + bias via [`crate::tensor::fused_matmul_bias`].
+    MatmulBias { a: usize, b: usize, bias: usize, out: usize, m: usize, k: usize, n: usize },
+    /// `Matmul` + `AddRow` + `Tanh` where both intermediates were
+    /// adjoint-dead: out = tanh(a@b + bias) via
+    /// [`crate::tensor::fused_matmul_bias_tanh`].
+    #[allow(clippy::too_many_arguments)]
+    MatmulBiasTanh {
+        a: usize,
+        b: usize,
+        bias: usize,
+        out: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    },
+    /// One whole hidden layer of the jet-stream pipeline:
+    /// `MatmulBiasTanh` + the layer's `zq` derivative-stream matmuls
+    /// (each `zin[s] @ b` into `z[s]`, rows = m·group) + the surviving
+    /// `JetO{r}` outputs (`jets[r-1]`, `usize::MAX` when dead-value
+    /// elimination dropped that order).  All operand slots are pinned
+    /// (backward-read), so nothing is eliminated here beyond dispatch —
+    /// the win is one instruction decode per layer instead of 2+zq+jets.
+    #[allow(clippy::too_many_arguments)]
+    FusedLayer {
+        a: usize,
+        b: usize,
+        bias: usize,
+        t0: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        group: usize,
+        zq: usize,
+        zin: [usize; 4],
+        z: [usize; 4],
+        jets: [usize; 4],
+    },
 }
 
 /// One backward accumulation.  `g` (the node's own adjoint) and `t` (the
@@ -368,6 +534,13 @@ enum BwdInstr {
         group: usize,
         c: usize,
     },
+    /// Fused `AccAdd` + `AddRowBias` — the two adjoint arms of one
+    /// `AddRow` node, which Pass D always emits adjacently with the same
+    /// source adjoint `g`.  Runs the identical two kernels in the
+    /// identical order (matmul-input accumulation first, then the bias
+    /// row reduction), so the accumulation order is exactly the eager
+    /// adjoint order.
+    FusedAddRowBwd { g: usize, ta: usize, tb: usize, ncols: usize },
 }
 
 // ---------------------------------------------------------------------------
@@ -394,6 +567,19 @@ pub(super) struct Plan {
     packs: Vec<usize>,
     pub(super) fwd_arena: Vec<Vec<f32>>,
     grad_arena: Vec<Vec<f32>>,
+    /// `(fwd-arena slot, len)` of every compute slot served by the
+    /// tape-level shared pool at replay time (everything except binds,
+    /// constants and the root).  Position in this list = pool register,
+    /// so plans with coinciding lifetimes/lengths — the full chunk and
+    /// the remainder chunk — reuse the same buffers instead of owning a
+    /// second arena per plan.
+    shared: Vec<(usize, usize)>,
+    /// `(grad-arena id, len)` pairs served by the shared gradient pool
+    /// (every gradient buffer: all are zeroed at the top of
+    /// `run_backward` and fully consumed before the loan is returned).
+    shared_grads: Vec<(usize, usize)>,
+    /// Whether the shared slots currently hold loaned pool buffers.
+    loaned: bool,
     stats: PlanStats,
 }
 
@@ -412,10 +598,62 @@ impl Plan {
         }
     }
 
+    /// Borrow the shared compute/gradient buffers from the tape-level
+    /// pools for one replay.  Buffers are resized to the slot length;
+    /// stale contents are fine because every shared forward slot is
+    /// fully written by its producing instruction before any read, and
+    /// every gradient buffer is zeroed at the top of `run_backward`.
+    pub(super) fn loan_shared(
+        &mut self,
+        fwd_pool: &mut Vec<Vec<f32>>,
+        grad_pool: &mut Vec<Vec<f32>>,
+    ) {
+        debug_assert!(!self.loaned, "shared arena loaned twice");
+        for (reg, &(slot, len)) in self.shared.iter().enumerate() {
+            if fwd_pool.len() <= reg {
+                fwd_pool.push(Vec::new());
+            }
+            let mut buf = std::mem::take(&mut fwd_pool[reg]);
+            buf.resize(len, 0.0);
+            self.fwd_arena[slot] = buf;
+        }
+        for (reg, &(gs, len)) in self.shared_grads.iter().enumerate() {
+            if grad_pool.len() <= reg {
+                grad_pool.push(Vec::new());
+            }
+            let mut buf = std::mem::take(&mut grad_pool[reg]);
+            buf.resize(len, 0.0);
+            self.grad_arena[gs] = buf;
+        }
+        self.loaned = true;
+    }
+
+    /// Hand the loaned buffers back to the pools (they keep their
+    /// capacity for the next plan's loan).  Must run after the root
+    /// value and packed gradients have been read out.
+    pub(super) fn return_shared(
+        &mut self,
+        fwd_pool: &mut Vec<Vec<f32>>,
+        grad_pool: &mut Vec<Vec<f32>>,
+    ) {
+        debug_assert!(self.loaned, "returning a shared arena that was never loaned");
+        for (reg, &(slot, _)) in self.shared.iter().enumerate() {
+            fwd_pool[reg] = std::mem::take(&mut self.fwd_arena[slot]);
+        }
+        for (reg, &(gs, _)) in self.shared_grads.iter().enumerate() {
+            grad_pool[reg] = std::mem::take(&mut self.grad_arena[gs]);
+        }
+        self.loaned = false;
+    }
+
     /// Flat forward loop.  Each arm mirrors the eager builder exactly:
     /// zeroed-buffer + `matmul_acc` for matmul, the same scalar zip loops
     /// for elementwise ops, the same `tensor::simd` kernels elsewhere.
     pub(super) fn run_forward(&mut self) {
+        debug_assert!(
+            self.loaned || self.shared.is_empty(),
+            "run_forward on a plan whose shared arena was not loaned"
+        );
         let arena = &mut self.fwd_arena;
         for ins in &self.fwd {
             match *ins {
@@ -544,6 +782,56 @@ impl Plan {
                     );
                     arena[out] = o;
                 }
+                FwdInstr::MatmulBias { a, b, bias, out, m, k, n } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    fused_matmul_bias(&arena[a], &arena[b], &arena[bias], &mut o, m, k, n);
+                    arena[out] = o;
+                }
+                FwdInstr::MatmulBiasTanh { a, b, bias, out, m, k, n } => {
+                    let mut o = std::mem::take(&mut arena[out]);
+                    fused_matmul_bias_tanh(&arena[a], &arena[b], &arena[bias], &mut o, m, k, n);
+                    arena[out] = o;
+                }
+                FwdInstr::FusedLayer { a, b, bias, t0, m, k, n, group, zq, zin, z, jets } => {
+                    // primal activation first (the unfused Tanh ran after
+                    // the stream matmuls, but the buffers are disjoint —
+                    // every operand here is a pinned slot — so the values
+                    // are bit-identical either way)
+                    let mut t = std::mem::take(&mut arena[t0]);
+                    fused_matmul_bias_tanh(&arena[a], &arena[b], &arena[bias], &mut t, m, k, n);
+                    arena[t0] = t;
+                    for s in 0..zq {
+                        let mut zo = std::mem::take(&mut arena[z[s]]);
+                        zo.fill(0.0);
+                        matmul_acc(&arena[zin[s]], &arena[b], &mut zo, m * group, k, n);
+                        arena[z[s]] = zo;
+                    }
+                    if jets[0] != usize::MAX {
+                        let mut o = std::mem::take(&mut arena[jets[0]]);
+                        simd::jet_o1_fwd(&mut o, &arena[t0], &arena[z[0]], group, n);
+                        arena[jets[0]] = o;
+                    }
+                    if jets[1] != usize::MAX {
+                        let mut o = std::mem::take(&mut arena[jets[1]]);
+                        simd::jet_o2_fwd(&mut o, &arena[t0], &arena[z[0]], &arena[z[1]], group, n);
+                        arena[jets[1]] = o;
+                    }
+                    if jets[2] != usize::MAX {
+                        let mut o = std::mem::take(&mut arena[jets[2]]);
+                        simd::jet_o3_fwd(
+                            &mut o, &arena[t0], &arena[z[0]], &arena[z[1]], &arena[z[2]], group, n,
+                        );
+                        arena[jets[2]] = o;
+                    }
+                    if jets[3] != usize::MAX {
+                        let mut o = std::mem::take(&mut arena[jets[3]]);
+                        simd::jet_o4_fwd(
+                            &mut o, &arena[t0], &arena[z[0]], &arena[z[1]], &arena[z[2]],
+                            &arena[z[3]], group, n,
+                        );
+                        arena[jets[3]] = o;
+                    }
+                }
             }
         }
     }
@@ -553,6 +841,10 @@ impl Plan {
     /// arm runs the same kernel as the matching eager `backprop` arm, in
     /// the same descending node / per-op arm order.
     pub(super) fn run_backward(&mut self) {
+        debug_assert!(
+            self.loaned || self.shared_grads.is_empty(),
+            "run_backward on a plan whose shared gradient arena was not loaned"
+        );
         for buf in &mut self.grad_arena {
             buf.fill(0.0);
         }
@@ -703,6 +995,14 @@ impl Plan {
                         &mut grads[t], &gb, &vals[z1], &vals[z2], &vals[z3], &vals[z4],
                         &vals[t0], group, c,
                     );
+                    grads[g] = gb;
+                }
+                BwdInstr::FusedAddRowBwd { g, ta, tb, ncols } => {
+                    let gb = std::mem::take(&mut grads[g]);
+                    simd::acc_add(&mut grads[ta], &gb);
+                    for row in gb.chunks(ncols) {
+                        simd::acc_add(&mut grads[tb], row);
+                    }
                     grads[g] = gb;
                 }
             }
@@ -1514,6 +1814,14 @@ pub(super) fn compile(
         }
     }
 
+    // -- Pass E: instruction fusion over the flat streams (skipped under
+    //    HTE_FUSE=off so any fusion regression is bisectable live). ------
+    let fuse_counts = if fuse_enabled() {
+        fuse_pass(&mut fwd, &mut bwd, &slot_pinned)
+    } else {
+        FuseCounts::default()
+    };
+
     let packs: Vec<usize> = params
         .iter()
         .map(|&p| {
@@ -1530,16 +1838,57 @@ pub(super) fn compile(
         .iter()
         .map(|node| Tensor { shape: node.value.shape.clone(), data: Vec::new() })
         .collect();
+    // Every compute slot except binds, constants and the root is served
+    // by the tape-level shared pool at replay time; its arena entry stays
+    // empty until `loan_shared`.  Position in `shared` = pool register,
+    // so plans compiled against the same tape (the full chunk and the
+    // remainder chunk) reuse one set of buffers.
+    let root_slot_id = slot_of[class[root]];
+    let mut is_bind_slot = vec![false; slot_len.len()];
+    for &bs in &binds {
+        is_bind_slot[bs] = true;
+    }
+    let shared: Vec<(usize, usize)> = slot_len
+        .iter()
+        .enumerate()
+        .filter(|&(s, &len)| {
+            len > 0
+                && !is_bind_slot[s]
+                && slot_init[s].is_none()
+                && s != root_slot_id
+                // Fusion can leave an eliminated intermediate's slot with
+                // no writer at all; such slots need no buffer.
+                && fwd.iter().any(|ins| fwd_writes(ins, s))
+        })
+        .map(|(s, &len)| (s, len))
+        .collect();
     let fwd_arena: Vec<Vec<f32>> = slot_len
         .iter()
+        .enumerate()
         .zip(slot_init.iter_mut())
-        .map(|(&len, init)| init.take().unwrap_or_else(|| vec![0.0; len]))
+        .map(|((s, &len), init)| match init.take() {
+            Some(data) => data,
+            // Binds are written by `replay_bind_*` before run_forward and
+            // the root outlives the loan window; both stay owned.  Every
+            // other slot is either pool-served or fusion-dead — empty.
+            None if is_bind_slot[s] || s == root_slot_id => vec![0.0; len],
+            None => Vec::new(),
+        })
         .collect();
-    let grad_arena: Vec<Vec<f32>> = grad_lens.iter().map(|&len| vec![0.0; len]).collect();
+    let shared_grads: Vec<(usize, usize)> = grad_lens
+        .iter()
+        .enumerate()
+        .filter(|&(_, &len)| len > 0)
+        .map(|(g, &len)| (g, len))
+        .collect();
+    let grad_arena: Vec<Vec<f32>> = grad_lens.iter().map(|_| Vec::new()).collect();
 
     let arena_bytes = (slot_len.iter().sum::<usize>() + grad_lens.iter().sum::<usize>()) * 4;
     let eager_bytes = ((0..n).map(numel).sum::<usize>()
         + (0..n).filter(|&i| reach[i]).map(numel).sum::<usize>())
+        * 4;
+    let shared_bytes = (shared.iter().map(|&(_, len)| len).sum::<usize>()
+        + shared_grads.iter().map(|&(_, len)| len).sum::<usize>())
         * 4;
     let stats = PlanStats {
         nodes: n,
@@ -1553,6 +1902,12 @@ pub(super) fn compile(
         fwd_slots: fwd_arena.len() - binds.len() - const_map.len(),
         arena_bytes,
         eager_bytes,
+        fused_mb: fuse_counts.mb,
+        fused_mbt: fuse_counts.mbt,
+        fused_layer: fuse_counts.layer,
+        fused_bwd: fuse_counts.bwd,
+        fused_away: fuse_counts.away,
+        shared_bytes,
     };
 
     Plan {
@@ -1560,15 +1915,326 @@ pub(super) fn compile(
         stubs,
         binds,
         root,
-        root_slot: slot_of[class[root]],
+        root_slot: root_slot_id,
         root_grad: if want_backward { grad_slot[root] } else { usize::MAX },
         fwd,
         bwd,
         packs,
         fwd_arena,
         grad_arena,
+        shared,
+        shared_grads,
+        loaned: false,
         stats,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Pass E: instruction fusion
+// ---------------------------------------------------------------------------
+
+/// Fused-instruction counts produced by [`fuse_pass`], folded into
+/// [`PlanStats`].
+#[derive(Default)]
+struct FuseCounts {
+    mb: usize,
+    mbt: usize,
+    layer: [usize; 4],
+    bwd: usize,
+    away: usize,
+}
+
+/// Does `ins` write forward slot `s`?  Fused variants list every output.
+fn fwd_writes(ins: &FwdInstr, s: usize) -> bool {
+    match *ins {
+        FwdInstr::Matmul { out, .. }
+        | FwdInstr::AddRow { out, .. }
+        | FwdInstr::Add { out, .. }
+        | FwdInstr::Sub { out, .. }
+        | FwdInstr::Mul { out, .. }
+        | FwdInstr::Scale { out, .. }
+        | FwdInstr::Cube { out, .. }
+        | FwdInstr::Tanh { out, .. }
+        | FwdInstr::Sin { out, .. }
+        | FwdInstr::Cos { out, .. }
+        | FwdInstr::MeanAll { out, .. }
+        | FwdInstr::SumAll { out, .. }
+        | FwdInstr::GroupMean { out, .. }
+        | FwdInstr::BroadcastRows { out, .. }
+        | FwdInstr::TileRows { out, .. }
+        | FwdInstr::JetO1 { out, .. }
+        | FwdInstr::JetO2 { out, .. }
+        | FwdInstr::JetO3 { out, .. }
+        | FwdInstr::JetO4 { out, .. }
+        | FwdInstr::MatmulBias { out, .. }
+        | FwdInstr::MatmulBiasTanh { out, .. } => out == s,
+        FwdInstr::FusedLayer { t0, zq, z, jets, .. } => {
+            t0 == s || z[..zq].contains(&s) || jets.contains(&s)
+        }
+    }
+}
+
+/// Does `ins` read forward slot `s`?  `FusedLayer` conservatively counts
+/// its own intermediates (`t0`, `z`) as reads — the jet arms consume them.
+fn fwd_reads(ins: &FwdInstr, s: usize) -> bool {
+    match *ins {
+        FwdInstr::Matmul { a, b, .. } => a == s || b == s,
+        FwdInstr::AddRow { a, bias, .. } => a == s || bias == s,
+        FwdInstr::Add { a, b, .. }
+        | FwdInstr::Sub { a, b, .. }
+        | FwdInstr::Mul { a, b, .. } => a == s || b == s,
+        FwdInstr::Scale { a, .. }
+        | FwdInstr::Cube { a, .. }
+        | FwdInstr::Tanh { a, .. }
+        | FwdInstr::Sin { a, .. }
+        | FwdInstr::Cos { a, .. }
+        | FwdInstr::MeanAll { a, .. }
+        | FwdInstr::SumAll { a, .. }
+        | FwdInstr::GroupMean { a, .. }
+        | FwdInstr::BroadcastRows { a, .. }
+        | FwdInstr::TileRows { a, .. } => a == s,
+        FwdInstr::JetO1 { t0, z1, .. } => t0 == s || z1 == s,
+        FwdInstr::JetO2 { t0, z1, z2, .. } => t0 == s || z1 == s || z2 == s,
+        FwdInstr::JetO3 { t0, z1, z2, z3, .. } => {
+            t0 == s || z1 == s || z2 == s || z3 == s
+        }
+        FwdInstr::JetO4 { t0, z1, z2, z3, z4, .. } => {
+            t0 == s || z1 == s || z2 == s || z3 == s || z4 == s
+        }
+        FwdInstr::MatmulBias { a, b, bias, .. }
+        | FwdInstr::MatmulBiasTanh { a, b, bias, .. } => a == s || b == s || bias == s,
+        FwdInstr::FusedLayer { a, b, bias, t0, zq, zin, z, .. } => {
+            a == s || b == s || bias == s || t0 == s
+                || zin[..zq].contains(&s)
+                || z[..zq].contains(&s)
+        }
+    }
+}
+
+/// Is slot `s` unread from `from` until its next full overwrite (or the
+/// end of the schedule)?  This is the slot-level proof that dropping the
+/// write of `s` cannot change any later instruction's inputs — the slot
+/// may be reused later, but every instruction fully writes its output
+/// before any read, so a stale (never-written) buffer is indistinguishable
+/// from a stale (written-then-dead) one.
+fn slot_dead_until_overwrite(fwd: &[FwdInstr], from: usize, s: usize) -> bool {
+    for ins in &fwd[from..] {
+        if fwd_reads(ins, s) {
+            return false;
+        }
+        if fwd_writes(ins, s) {
+            return true;
+        }
+    }
+    true
+}
+
+/// Pass E: rewrite instruction windows into fused superinstructions
+/// (DESIGN.md §12).  Runs after slot allocation and backward emission, so
+/// every rewrite proves its eliminated intermediate is adjoint-dead
+/// (`!slot_pinned`, hence never a backward value operand) and that the
+/// rewrite cannot disturb any other occupant of a reused slot.  Every
+/// fused arm executes the identical kernels in the identical order as the
+/// window it replaces, so replay stays `to_bits`-equal by construction.
+fn fuse_pass(fwd: &mut Vec<FwdInstr>, bwd: &mut Vec<BwdInstr>, slot_pinned: &[bool]) -> FuseCounts {
+    let mut counts = FuseCounts::default();
+
+    // -- E1: adjacent Matmul + AddRow -> MatmulBias.  Fires when the
+    //    matmul output is adjoint-dead and read only by the AddRow.
+    let mut i = 0;
+    while i + 1 < fwd.len() {
+        let fused = match (&fwd[i], &fwd[i + 1]) {
+            (
+                &FwdInstr::Matmul { a, b, out, m, k, n },
+                &FwdInstr::AddRow { a: ra, bias, out: h, ncols },
+            ) if ra == out
+                && ncols == n
+                && !slot_pinned[out]
+                && bias != out
+                && h != out
+                && slot_dead_until_overwrite(fwd, i + 2, out) =>
+            {
+                Some(FwdInstr::MatmulBias { a, b, bias, out: h, m, k, n })
+            }
+            _ => None,
+        };
+        if let Some(ins) = fused {
+            fwd[i] = ins;
+            fwd.remove(i + 1);
+            counts.mb += 1;
+            counts.away += 1;
+        }
+        i += 1;
+    }
+
+    // -- E2: MatmulBias + (gap) + Tanh -> MatmulBiasTanh.  The gap (a
+    //    layer's derivative-stream matmuls) must not touch the bias-add
+    //    output `h`; and because the tanh's write moves earlier across
+    //    the gap, nothing in the gap may read or write the tanh's own
+    //    slot either (a reused slot could still hold a live previous
+    //    occupant there).  Pinned tanh slots are fresh and unaliased, so
+    //    they skip the gap scan.
+    let mut i = 0;
+    while i < fwd.len() {
+        if let FwdInstr::MatmulBias { a, b, bias, out: h, m, k, n } = fwd[i] {
+            if !slot_pinned[h] {
+                let mut j = i + 1;
+                let mut tanh_at = None;
+                while j < fwd.len() {
+                    if let FwdInstr::Tanh { a: ta, out: t } = fwd[j] {
+                        if ta == h {
+                            tanh_at = Some((j, t));
+                            break;
+                        }
+                    }
+                    if fwd_reads(&fwd[j], h) || fwd_writes(&fwd[j], h) {
+                        break;
+                    }
+                    j += 1;
+                }
+                if let Some((j, t)) = tanh_at {
+                    let gap_clear = slot_pinned[t]
+                        || fwd[i + 1..j]
+                            .iter()
+                            .all(|ins| !fwd_reads(ins, t) && !fwd_writes(ins, t));
+                    if gap_clear && slot_dead_until_overwrite(fwd, j + 1, h) {
+                        fwd[i] = FwdInstr::MatmulBiasTanh { a, b, bias, out: t, m, k, n };
+                        fwd.remove(j);
+                        counts.mb -= 1;
+                        counts.mbt += 1;
+                        counts.away += 1;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+
+    // -- E3: MatmulBiasTanh + contiguous derivative-stream matmuls (same
+    //    weight operand) + the surviving ascending JetO{r} outputs ->
+    //    FusedLayer.  Pure dispatch fusion: the window is contiguous and
+    //    the fused arm preserves its exact internal order, so no proof
+    //    obligations beyond the pattern match itself.
+    let mut i = 0;
+    while i < fwd.len() {
+        if let FwdInstr::MatmulBiasTanh { a, b, bias, out: t, m, k, n } = fwd[i] {
+            let mut zq = 0usize;
+            let mut zin = [usize::MAX; 4];
+            let mut z = [usize::MAX; 4];
+            let mut rows = 0usize;
+            while zq < 4 {
+                match fwd.get(i + 1 + zq) {
+                    Some(&FwdInstr::Matmul { a: sa, b: sb, out: so, m: sm, k: sk, n: sn })
+                        if sb == b && sk == k && sn == n && (zq == 0 || sm == rows) =>
+                    {
+                        rows = sm;
+                        zin[zq] = sa;
+                        z[zq] = so;
+                        zq += 1;
+                    }
+                    _ => break,
+                }
+            }
+            if zq > 0 && rows % m == 0 && rows / m > 0 {
+                let group = rows / m;
+                let mut jets = [usize::MAX; 4];
+                let mut order = 0usize;
+                let mut njets = 0usize;
+                let mut pos = i + 1 + zq;
+                loop {
+                    let next = match fwd.get(pos) {
+                        Some(&FwdInstr::JetO1 { t0, z1, out, group: jg, c })
+                            if order < 1 && t0 == t && z1 == z[0] && jg == group && c == n =>
+                        {
+                            jets[0] = out;
+                            Some(1)
+                        }
+                        Some(&FwdInstr::JetO2 { t0, z1, z2, out, group: jg, c })
+                            if order < 2
+                                && zq >= 2
+                                && t0 == t
+                                && z1 == z[0]
+                                && z2 == z[1]
+                                && jg == group
+                                && c == n =>
+                        {
+                            jets[1] = out;
+                            Some(2)
+                        }
+                        Some(&FwdInstr::JetO3 { t0, z1, z2, z3, out, group: jg, c })
+                            if order < 3
+                                && zq >= 3
+                                && t0 == t
+                                && z1 == z[0]
+                                && z2 == z[1]
+                                && z3 == z[2]
+                                && jg == group
+                                && c == n =>
+                        {
+                            jets[2] = out;
+                            Some(3)
+                        }
+                        Some(&FwdInstr::JetO4 { t0, z1, z2, z3, z4, out, group: jg, c })
+                            if order < 4
+                                && zq >= 4
+                                && t0 == t
+                                && z1 == z[0]
+                                && z2 == z[1]
+                                && z3 == z[2]
+                                && z4 == z[3]
+                                && jg == group
+                                && c == n =>
+                        {
+                            jets[3] = out;
+                            Some(4)
+                        }
+                        _ => None,
+                    };
+                    match next {
+                        Some(o) => {
+                            order = o;
+                            njets += 1;
+                            pos += 1;
+                        }
+                        None => break,
+                    }
+                }
+                if njets > 0 {
+                    fwd[i] =
+                        FwdInstr::FusedLayer { a, b, bias, t0: t, m, k, n, group, zq, zin, z, jets };
+                    fwd.drain(i + 1..pos);
+                    counts.mbt -= 1;
+                    counts.layer[order - 1] += 1;
+                    counts.away += pos - i - 1;
+                }
+            }
+        }
+        i += 1;
+    }
+
+    // -- E4 (backward): AccAdd + AddRowBias with the same source adjoint
+    //    are the two arms of one AddRow node, always emitted adjacently
+    //    by Pass D in that order.  Same-g is a sufficient proof: gradient
+    //    slots are never shared between nodes.
+    let mut i = 0;
+    while i + 1 < bwd.len() {
+        let fused = match (&bwd[i], &bwd[i + 1]) {
+            (&BwdInstr::AccAdd { g, t: ta }, &BwdInstr::AddRowBias { g: g2, t: tb, ncols })
+                if g2 == g =>
+            {
+                Some(BwdInstr::FusedAddRowBwd { g, ta, tb, ncols })
+            }
+            _ => None,
+        };
+        if let Some(ins) = fused {
+            bwd[i] = ins;
+            bwd.remove(i + 1);
+            counts.bwd += 1;
+        }
+        i += 1;
+    }
+
+    counts
 }
 
 /// Independent proof that the lifetime allocator never puts two
@@ -1822,5 +2488,134 @@ mod tests {
         tape.replay_forward(out2, &mut vals);
         let replay_bits: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
         assert_eq!(replay_bits, eager_bits, "forward-only replay diverged");
+    }
+
+    /// A minimal MLP layer (matmul → add_row → tanh → matmul → add_row)
+    /// fuses to `MatmulBiasTanh` + `MatmulBias` forward and two
+    /// `FusedAddRowBwd` pairs backward, and the fused plan replays the
+    /// exact bits of both the unfused plan and eager execution.
+    #[test]
+    fn fuse_pass_fuses_layer_and_preserves_bits() {
+        let _guard = fuse_mode_guard();
+        let prior = fuse_mode();
+        let xs = [0.3f32, -0.7, 1.1, 0.2];
+        let ws0 = [0.5f32, -0.2, 0.8, 0.1];
+        let bs0 = [0.04f32, -0.06];
+        let ws1 = [0.9f32, -0.3];
+        let bs1 = [0.02f32];
+        let build = |tape: &mut Tape| {
+            let w0 = tape.leaf_from_slice(&[2, 2], &ws0);
+            let b0 = tape.leaf_from_slice(&[2], &bs0);
+            let w1 = tape.leaf_from_slice(&[2, 1], &ws1);
+            let b1 = tape.leaf_from_slice(&[1], &bs1);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            let z0 = tape.matmul(x, w0);
+            let h0 = tape.add_row(z0, b0);
+            let t0 = tape.tanh(h0);
+            let z1 = tape.matmul(t0, w1);
+            let h1 = tape.add_row(z1, b1);
+            let loss = tape.mean_all(h1);
+            (loss, vec![w0, b0, w1, b1])
+        };
+
+        force_fuse_mode(FuseMode::Off);
+        let mut plain = Tape::new();
+        let (loss_bits, grad_bits, loss, params) = eager_bits(&mut plain, build);
+        let k_off = key("test-fuse-off");
+        plain.compile_plan(k_off, loss, &params);
+        let st_off = plain.plan_stats(&k_off).unwrap();
+        assert_eq!(st_off.fused_mb, 0, "HTE_FUSE=off must not fuse: {st_off:?}");
+        assert_eq!(st_off.fused_mbt, 0, "HTE_FUSE=off must not fuse: {st_off:?}");
+        assert_eq!(st_off.fused_bwd, 0, "HTE_FUSE=off must not fuse: {st_off:?}");
+        assert_replay_matches(&mut plain, &k_off, build, loss_bits, &grad_bits);
+
+        force_fuse_mode(FuseMode::On);
+        let mut fused = Tape::new();
+        let (loss_bits2, grad_bits2, loss, params) = eager_bits(&mut fused, build);
+        assert_eq!(loss_bits2, loss_bits, "eager must not depend on fuse mode");
+        assert_eq!(grad_bits2, grad_bits, "eager must not depend on fuse mode");
+        let k_on = key("test-fuse-on");
+        fused.compile_plan(k_on, loss, &params);
+        let st = fused.plan_stats(&k_on).unwrap();
+        assert_eq!(st.fused_mbt, 1, "hidden layer should fuse to MatmulBiasTanh: {st:?}");
+        assert_eq!(st.fused_mb, 1, "output layer should fuse to MatmulBias: {st:?}");
+        assert_eq!(st.fused_bwd, 2, "both AddRow backward pairs should fuse: {st:?}");
+        assert!(st.fused_away >= 3, "fusion should eliminate instructions: {st:?}");
+        assert_eq!(st.fused_layer, [0; 4], "no jet streams here: {st:?}");
+        assert_replay_matches(&mut fused, &k_on, build, loss_bits, &grad_bits);
+        force_fuse_mode(prior);
+    }
+
+    /// Plans loan their big buffers from the tape-level shared pools at
+    /// replay time: two same-tape plans reuse the same pool registers,
+    /// and interleaved replays stay bitwise stable.
+    #[test]
+    fn plans_share_arena_buffers_across_replays() {
+        let xs = [0.3f32, -0.7, 1.1, 0.2];
+        let ws = [0.5f32, -0.2, 0.8, 0.1];
+        let build_a = |tape: &mut Tape| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            let u = tape.matmul(x, w);
+            let t = tape.tanh(u);
+            let loss = tape.mean_all(t);
+            (loss, vec![w])
+        };
+        let build_b = |tape: &mut Tape| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            let u = tape.matmul(x, w);
+            let s = tape.sin(u);
+            let loss = tape.mean_all(s);
+            (loss, vec![w])
+        };
+        let mut tape = Tape::new();
+        let (la, ga, loss, params) = eager_bits(&mut tape, build_a);
+        let ka = key("test-share-a");
+        tape.compile_plan(ka, loss, &params);
+        let (lb, gb, loss, params) = eager_bits(&mut tape, build_b);
+        let kb = key("test-share-b");
+        tape.compile_plan(kb, loss, &params);
+        assert!(
+            tape.plan_stats(&ka).unwrap().shared_bytes > 0,
+            "plan should loan compute buffers from the shared pool"
+        );
+        // Interleave: each replay loans the pools, runs, and returns
+        // them; a stale buffer from the *other* plan must not leak bits.
+        for _ in 0..3 {
+            assert_replay_matches(&mut tape, &ka, build_a, la, &ga);
+            assert_replay_matches(&mut tape, &kb, build_b, lb, &gb);
+        }
+        assert!(!tape.shared_fwd.is_empty(), "pool should retain returned buffers");
+        for p in &tape.plans.entries {
+            assert!(!p.1.loaned, "every replay must return its loaned buffers");
+        }
+    }
+
+    /// The FIFO cache honors the forced cap and counts evictions.
+    #[test]
+    fn plan_cache_evicts_fifo_at_forced_cap() {
+        let prior = plan_cache_cap();
+        force_plan_cache_cap(2);
+        let xs = [0.3f32, -0.7, 1.1, 0.2];
+        let ws = [0.5f32, -0.2, 0.8, 0.1];
+        let build = |tape: &mut Tape| {
+            let w = tape.leaf_from_slice(&[2, 2], &ws);
+            let x = tape.leaf_from_slice(&[2, 2], &xs);
+            let u = tape.matmul(x, w);
+            let loss = tape.mean_all(u);
+            (loss, vec![w])
+        };
+        let mut tape = Tape::new();
+        for (i, op) in ["test-cap-1", "test-cap-2", "test-cap-3"].into_iter().enumerate() {
+            let (_, _, loss, params) = eager_bits(&mut tape, build);
+            tape.compile_plan(key(op), loss, &params);
+            assert_eq!(tape.plan_evictions(), i.saturating_sub(1) as u64);
+        }
+        assert!(!tape.has_plan(&key("test-cap-1")), "oldest plan must be evicted first");
+        assert!(tape.has_plan(&key("test-cap-2")));
+        assert!(tape.has_plan(&key("test-cap-3")));
+        assert_eq!(tape.plan_evictions(), 1);
+        force_plan_cache_cap(prior);
     }
 }

@@ -184,6 +184,14 @@ impl NativeTrainer {
         self.engine.backend_label()
     }
 
+    /// Plans evicted from the backend's per-thread FIFO plan caches so
+    /// far (surfaced in the run summary; see `HTE_PLAN_CACHE_CAP`).
+    /// Always 0 at the default cap unless a run cycles through more
+    /// distinct (op, shape) plans than the cap holds.
+    pub fn plan_evictions(&self) -> u64 {
+        self.engine.plan_evictions()
+    }
+
     /// Checkpoint to `path` every `every` steps during
     /// [`NativeTrainer::run`] — a crashed run then loses at most
     /// `every` steps, and resuming from the autosave is bitwise

@@ -57,7 +57,12 @@ use hte_pinn::util::args::Args;
 
 const USAGE: &str = "usage: hte-pinn <info|train|worker|serve|router|loadgen|table|memmodel> [flags]
   (any command: --no-plan, or HTE_PLAN=off, forces eager tape execution
-   instead of compiled-plan replay — bitwise identical, for A/B triage)
+   instead of compiled-plan replay — bitwise identical, for A/B triage;
+   --no-fuse, or HTE_FUSE=off, keeps plan replay but skips instruction
+   fusion — also bitwise identical, isolates superinstruction bugs;
+   HTE_ARENA_KB=N shrinks the per-shard chunk so a plan's arenas fit an
+   N-KB L2 budget (0 = off, default; every cluster rank must agree);
+   HTE_PLAN_CACHE_CAP=N caps the per-thread plan cache, default 64)
   (every socket phase honors the HTE_CONNECT_TIMEOUT_SECS /
    HTE_HANDSHAKE_TIMEOUT_SECS / HTE_STEP_TIMEOUT_SECS env deadlines,
    defaults 10/10/600 seconds; HTE_WORKER_TIMEOUT_SECS is the legacy
@@ -299,11 +304,12 @@ fn cmd_train(mut args: Args) -> Result<()> {
                 };
                 let summary = trainer.run(&mut logger)?;
                 println!(
-                    "steps={} final_loss={:.4e} speed={} executor={}",
+                    "steps={} final_loss={:.4e} speed={} executor={} plan_evictions={}",
                     summary.steps,
                     summary.final_loss,
                     table::fmt_speed(summary.it_per_sec),
-                    trainer.executor()
+                    trainer.executor(),
+                    trainer.plan_evictions()
                 );
                 if trainer.recoveries > 0 {
                     println!(
@@ -828,11 +834,16 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let command = raw.remove(0);
-    let mut args = Args::parse(raw, &["no-plan"])?;
+    let mut args = Args::parse(raw, &["no-plan", "no-fuse"])?;
     if args.has("no-plan") {
         // Escape hatch mirroring HTE_SIMD=scalar: force eager tape
         // execution so any plan bug is A/B-diagnosable in one run.
         hte_pinn::autodiff::force_plan_mode(hte_pinn::autodiff::PlanMode::Off);
+    }
+    if args.has("no-fuse") {
+        // Finer-grained hatch: keep plan replay but skip the fusion
+        // pass, isolating superinstruction bugs from plan bugs.
+        hte_pinn::autodiff::force_fuse_mode(hte_pinn::autodiff::FuseMode::Off);
     }
     match command.as_str() {
         "info" => cmd_info(args),

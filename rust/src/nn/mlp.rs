@@ -6,6 +6,23 @@ use crate::tensor::{matmul_into, Tensor};
 pub const HIDDEN: usize = 128;
 pub const DEPTH: usize = 4;
 
+/// Estimated compiled-plan arena floats *per residual point* for a jet
+/// evaluation of the given `order` with `v` probe directions at input
+/// dimension `d` — the sizing model behind `plan_chunk_points` /
+/// `HTE_ARENA_KB` (see DESIGN.md §12).  Each point carries, per layer,
+/// a primal row `[1, fan_out]` plus `order` derivative-stream rows
+/// `[v, fan_out]`; the plan holds roughly one pinned activation set the
+/// backward reads, one scratch set, and a matching gradient set, hence
+/// the factor 3.  An estimate, not an exact count: it only steers the
+/// budget knob.  The chunk size *does* shape the loss reduction's
+/// partial sums, which is why every rank must agree on `HTE_ARENA_KB`
+/// (the wire protocol cross-checks the derived chunk per step) — but
+/// for any fixed chunk, plan replay stays bitwise equal to eager.
+pub fn plan_arena_floats_per_point(d: usize, v: usize, order: usize) -> usize {
+    let streams = 1 + order * v;
+    Mlp::layer_dims(d).iter().map(|&(_, fan_out)| 3 * streams * fan_out).sum()
+}
+
 /// Reusable activation buffers for [`Mlp::forward_batch`]: two
 /// ping-pong layer buffers plus the raw-output staging vector.  Owned
 /// by the caller (one per evaluator thread) so steady-state batched

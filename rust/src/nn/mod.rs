@@ -12,14 +12,15 @@ mod mlp;
 mod native_loss;
 
 pub use jet::{factor_jet, gpinn_point_reference, jet_forward, JetStreams};
-pub use mlp::{ForwardScratch, Mlp, HIDDEN};
+pub use mlp::{plan_arena_floats_per_point, ForwardScratch, Mlp, HIDDEN};
 pub use native_loss::{
     adam_step, allen_cahn_residual_loss_and_grad, allen_cahn_residual_loss_reference,
-    bihar_residual_loss_and_grad, bihar_residual_loss_reference, default_residual_op,
-    default_threads, factor_jets, forward_batch_planned, gpinn_residual_loss_and_grad,
-    gpinn_residual_loss_reference, hte_residual_loss_and_grad,
-    hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference, plan_key_for,
-    residual_op_for, shard_loss_grad, unbiased_residual_loss_and_grad,
-    unbiased_residual_loss_reference, AllenCahnResidual, BiharResidual, ChunkCtx, GpinnResidual,
-    NativeBatch, NativeEngine, ResidualOp, TraceResidual, UnbiasedTrace, CHUNK_POINTS,
+    arena_budget_kb, bihar_residual_loss_and_grad, bihar_residual_loss_reference,
+    default_residual_op, default_threads, factor_jets, force_arena_budget_kb,
+    forward_batch_planned, gpinn_residual_loss_and_grad, gpinn_residual_loss_reference,
+    hte_residual_loss_and_grad, hte_residual_loss_and_grad_pairgrid, hte_residual_loss_reference,
+    plan_chunk_points, plan_key_for, residual_op_for, shard_loss_grad,
+    unbiased_residual_loss_and_grad, unbiased_residual_loss_reference, AllenCahnResidual,
+    BiharResidual, ChunkCtx, GpinnResidual, NativeBatch, NativeEngine, ResidualOp, TraceResidual,
+    UnbiasedTrace, CHUNK_POINTS,
 };

@@ -550,6 +550,57 @@ impl<'a> ChunkCtx<'a> {
 /// reason about the live tape.
 pub const CHUNK_POINTS: usize = 4;
 
+/// Resolved `HTE_ARENA_KB` budget; `usize::MAX` = not yet resolved,
+/// `0` = disabled (the default — chunk sizing is a pure opt-in).
+static ARENA_KB: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(usize::MAX);
+
+/// Per-shard plan-arena budget in KiB (`HTE_ARENA_KB`; 0 disables
+/// plan-aware chunk sizing).  Resolved once; [`force_arena_budget_kb`]
+/// overrides it for tests/benches — hold
+/// [`crate::autodiff::plan_mode_guard`] around overrides, and note that
+/// already-compiled plans keyed on the old chunk stay cached.
+pub fn arena_budget_kb() -> usize {
+    use std::sync::atomic::Ordering;
+    let cur = ARENA_KB.load(Ordering::Relaxed);
+    if cur != usize::MAX {
+        return cur;
+    }
+    let kb = std::env::var("HTE_ARENA_KB")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0);
+    ARENA_KB.store(kb, Ordering::Relaxed);
+    kb
+}
+
+/// Override the arena budget (0 disables chunk sizing).
+pub fn force_arena_budget_kb(kb: usize) {
+    ARENA_KB.store(kb.min(usize::MAX - 1), std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Effective residual points per shard for one compiled plan: the
+/// largest chunk ≤ [`CHUNK_POINTS`] whose estimated arena (fixed
+/// parameter + gradient buffers, plus
+/// [`super::mlp::plan_arena_floats_per_point`] per point) fits the
+/// `HTE_ARENA_KB` budget, floored at 1.  The budget can only *shrink*
+/// the chunk, and a smaller chunk is a pure refinement of the shard
+/// decomposition — per-chunk f32 summation orders are unchanged and the
+/// cross-chunk merge is the same ordered f64 reduction — so the loss
+/// changes bits only through chunk boundaries, exactly as a different
+/// `CHUNK_POINTS` build would.  With the budget disabled this is
+/// exactly `CHUNK_POINTS`: zero behavior change.
+pub fn plan_chunk_points(d: usize, v: usize, order: usize, n_params: usize) -> usize {
+    let kb = arena_budget_kb();
+    if kb == 0 {
+        return CHUNK_POINTS;
+    }
+    let fixed_bytes = n_params * 2 * 4;
+    let per_point_bytes = super::mlp::plan_arena_floats_per_point(d, v, order).max(1) * 4;
+    let budget = (kb * 1024).saturating_sub(fixed_bytes);
+    (budget / per_point_bytes).clamp(1, CHUNK_POINTS)
+}
+
 /// Reusable native training engine: a [`ShardPlan`] per step, a
 /// pluggable [`ShardBackend`] (in-process threads by default, a TCP
 /// worker cluster via [`NativeEngine::with_backend`]), and the
@@ -596,6 +647,12 @@ impl NativeEngine {
         self.backend.take_events()
     }
 
+    /// Total plan-cache evictions across the backend's executors (run
+    /// banner; see `HTE_PLAN_CACHE_CAP`).
+    pub fn plan_evictions(&self) -> u64 {
+        self.backend.plan_evictions()
+    }
+
     /// Residual loss and its parameter gradient (packed order) under the
     /// problem family's default operator — see
     /// [`NativeEngine::loss_and_grad_with`] for an explicit operator
@@ -624,7 +681,8 @@ impl NativeEngine {
         batch: &NativeBatch,
         grad: &mut Vec<f32>,
     ) -> Result<f32> {
-        let plan = ShardPlan::for_batch(batch.n);
+        let chunk = plan_chunk_points(mlp.d, batch.v, op.order(), mlp.n_params());
+        let plan = ShardPlan::with_chunk(batch.n, chunk);
         let job = ShardJob { mlp, problem, op, batch };
         self.backend.run_shards(&plan, &job, &mut self.results)?;
         merge_shard_results(&self.results, batch.n, mlp.n_params(), grad)

@@ -60,7 +60,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{problem_for, TrainConfig};
-use crate::nn::{residual_op_for, Mlp, NativeBatch, ResidualOp, CHUNK_POINTS};
+use crate::nn::{plan_chunk_points, residual_op_for, Mlp, NativeBatch, ResidualOp, CHUNK_POINTS};
 use crate::pde::PdeProblem;
 use crate::rng::Xoshiro256pp;
 
@@ -419,12 +419,15 @@ pub(crate) fn encode_hello(spec: &JobSpec) -> Vec<u8> {
 }
 
 /// Point span `[base, end)` of shard range `lo..hi` in an `n`-point
-/// plan.  Shared by rank 0 (to slice the xs broadcast) and the worker
-/// (to validate and rebase) so the two sides cannot disagree.
-fn point_span(lo: usize, hi: usize, n: usize) -> (usize, usize) {
-    let n_shards = n.div_ceil(CHUNK_POINTS);
-    let base = (lo * CHUNK_POINTS).min(n);
-    let end = if hi == n_shards { n } else { (hi * CHUNK_POINTS).min(n) };
+/// plan of `chunk`-point shards.  Shared by rank 0 (to slice the xs
+/// broadcast) and the worker (to validate and rebase) so the two sides
+/// cannot disagree.  `chunk` is the *effective* chunk — possibly shrunk
+/// below [`CHUNK_POINTS`] by `HTE_ARENA_KB` (see `plan_chunk_points`) —
+/// and travels in every STEP frame so a mismatch is caught per step.
+fn point_span(lo: usize, hi: usize, n: usize, chunk: usize) -> (usize, usize) {
+    let n_shards = n.div_ceil(chunk);
+    let base = (lo * chunk).min(n);
+    let end = if hi == n_shards { n } else { (hi * chunk).min(n) };
     (base, end)
 }
 
@@ -443,15 +446,16 @@ fn encode_step_into(
     params: &[f32],
     batch: &NativeBatch,
     d: usize,
+    chunk: usize,
 ) {
-    let (base, end) = point_span(range.start, range.end, batch.n);
+    let (base, end) = point_span(range.start, range.end, batch.n, chunk);
     e.buf.clear();
     e.u64(step);
     e.u64(range.start as u64);
     e.u64(range.end as u64);
     e.u64(batch.n as u64);
     e.u64(batch.v as u64);
-    e.u64(CHUNK_POINTS as u64);
+    e.u64(chunk as u64);
     e.u64(base as u64);
     e.f32s(params);
     e.f32s(&batch.xs[base * d..end * d]);
@@ -929,7 +933,15 @@ impl ShardBackend for TcpClusterBackend {
                     continue;
                 }
                 let d = self.spec.d;
-                encode_step_into(&mut self.step_buf, step, part, &self.params_buf, job.batch, d);
+                encode_step_into(
+                    &mut self.step_buf,
+                    step,
+                    part,
+                    &self.params_buf,
+                    job.batch,
+                    d,
+                    plan.chunk_points,
+                );
                 let slot = &mut self.slots[si];
                 match write_frame(
                     slot.stream.as_mut().expect("live slot"),
@@ -1072,10 +1084,17 @@ fn decode_step_into(payload: &[u8], st: &mut WorkerState) -> Result<StepHeader> 
 /// Run one STEP, leaving the RESULT payload in `st.reply`.
 fn run_step(st: &mut WorkerState, payload: &[u8]) -> Result<()> {
     let h = decode_step_into(payload, st)?;
-    if h.chunk != CHUNK_POINTS {
+    // The effective chunk is derived, not negotiated: both sides run
+    // `plan_chunk_points` over the same job spec, so they agree exactly
+    // when their `HTE_ARENA_KB` settings agree.  Recomputing it here
+    // (instead of trusting the frame) keeps a misconfigured worker from
+    // silently merging shards in a different order.
+    let expect = plan_chunk_points(st.d, h.v, st.op.order(), st.n_params);
+    if h.chunk != expect {
         bail!(
-            "coordinator shards into {}-point chunks, this worker uses {CHUNK_POINTS} — \
-             mixed binary versions would break the bitwise shard plan",
+            "coordinator shards into {}-point chunks but this worker computes {expect} — \
+             HTE_ARENA_KB must be set identically on every rank (or unset everywhere), \
+             otherwise the bitwise shard plan would diverge",
             h.chunk
         );
     }
@@ -1093,14 +1112,14 @@ fn run_step(st: &mut WorkerState, payload: &[u8]) -> Result<()> {
             st.problem.n_coeff()
         );
     }
-    let n_shards = h.n.div_ceil(CHUNK_POINTS);
+    let n_shards = h.n.div_ceil(h.chunk);
     if h.lo > h.hi || h.hi > n_shards {
         bail!("shard range {}..{} outside the {n_shards}-shard plan", h.lo, h.hi);
     }
     // The coordinator ships only this assignment's xs slice; rebase the
     // shards onto it.  Same floats in the same order as the full-batch
     // plan, so the per-shard bits are unchanged.
-    let (base, end) = point_span(h.lo, h.hi, h.n);
+    let (base, end) = point_span(h.lo, h.hi, h.n, h.chunk);
     if h.base != base {
         bail!("step's xs slice starts at point {} but the shard range implies {base}", h.base);
     }
@@ -1108,7 +1127,7 @@ fn run_step(st: &mut WorkerState, payload: &[u8]) -> Result<()> {
     if st.xs.len() != n_local * st.d {
         bail!("xs slice has {} coords for {n_local} points at d={}", st.xs.len(), st.d);
     }
-    let local_plan = ShardPlan::with_chunk(n_local, CHUNK_POINTS);
+    let local_plan = ShardPlan::with_chunk(n_local, h.chunk);
     if local_plan.len() != h.hi - h.lo {
         bail!(
             "xs slice of {n_local} points yields {} shards, assignment {}..{} expects {}",
@@ -1660,21 +1679,26 @@ mod tests {
     /// exactly: contiguous, disjoint, complete — for any worker count.
     #[test]
     fn shard_point_spans_tile_the_batch() {
-        for n in [1usize, 4, 5, 11, 16, 17] {
-            let plan = ShardPlan::for_batch(n);
-            for workers in 1..=4 {
-                let mut next = 0usize;
-                for r in plan.assignment(workers) {
-                    let (base, end) = point_span(r.start, r.end, n);
-                    if r.is_empty() {
-                        assert_eq!(base, end, "empty assignment must get an empty span");
-                    } else {
-                        assert_eq!(base, next, "n={n} workers={workers}: span gap");
-                        assert!(end > base);
-                        next = end;
+        for chunk in [1usize, 2, 3, CHUNK_POINTS] {
+            for n in [1usize, 4, 5, 11, 16, 17] {
+                let plan = ShardPlan::with_chunk(n, chunk);
+                for workers in 1..=4 {
+                    let mut next = 0usize;
+                    for r in plan.assignment(workers) {
+                        let (base, end) = point_span(r.start, r.end, n, chunk);
+                        if r.is_empty() {
+                            assert_eq!(base, end, "empty assignment must get an empty span");
+                        } else {
+                            assert_eq!(base, next, "chunk={chunk} n={n} workers={workers}: span gap");
+                            assert!(end > base);
+                            next = end;
+                        }
                     }
+                    assert_eq!(
+                        next, n,
+                        "chunk={chunk} n={n} workers={workers}: spans must cover the batch"
+                    );
                 }
-                assert_eq!(next, n, "n={n} workers={workers}: spans must cover the batch");
             }
         }
     }
@@ -1684,18 +1708,20 @@ mod tests {
     /// global slice's shards, shifted by the span base.
     #[test]
     fn shard_local_rebased_plan_matches_global_slice() {
-        for n in [1usize, 5, 11, 16] {
-            let plan = ShardPlan::for_batch(n);
-            for workers in 1..=3 {
-                for r in plan.assignment(workers) {
-                    let (base, end) = point_span(r.start, r.end, n);
-                    let local = ShardPlan::with_chunk(end - base, CHUNK_POINTS);
-                    assert_eq!(local.len(), r.len());
-                    let global = &plan.shards()[r.clone()];
-                    for (j, (ls, gs)) in local.shards().iter().zip(global).enumerate() {
-                        assert_eq!(ls.index, j, "local indices start at 0");
-                        assert_eq!(base + ls.start, gs.start, "rebased start must agree");
-                        assert_eq!(ls.nc, gs.nc, "shard sizes must agree");
+        for chunk in [2usize, CHUNK_POINTS] {
+            for n in [1usize, 5, 11, 16] {
+                let plan = ShardPlan::with_chunk(n, chunk);
+                for workers in 1..=3 {
+                    for r in plan.assignment(workers) {
+                        let (base, end) = point_span(r.start, r.end, n, chunk);
+                        let local = ShardPlan::with_chunk(end - base, chunk);
+                        assert_eq!(local.len(), r.len());
+                        let global = &plan.shards()[r.clone()];
+                        for (j, (ls, gs)) in local.shards().iter().zip(global).enumerate() {
+                            assert_eq!(ls.index, j, "local indices start at 0");
+                            assert_eq!(base + ls.start, gs.start, "rebased start must agree");
+                            assert_eq!(ls.nc, gs.nc, "shard sizes must agree");
+                        }
                     }
                 }
             }

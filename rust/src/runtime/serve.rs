@@ -194,6 +194,10 @@ impl ServeModel {
             // Forward-only plan replay: bitwise the eager batched
             // forward (DESIGN.md §12), amortizing graph construction
             // across the steady stream of same-shape microbatches.
+            // With fusion on (default), the plan compiles each hidden
+            // layer to one `MatmulBiasTanh` superinstruction and the
+            // output layer to `MatmulBias` (Pass E) — same kernels in
+            // the same order, so the served bits are unchanged.
             forward_batch_planned(&mut scratch.tape, &self.mlp, xs, n, &mut scratch.raw);
             out.extend(
                 scratch.raw.iter().zip(&scratch.factors).map(|(&u, &f)| f * u as f64),
@@ -1620,6 +1624,56 @@ mod tests {
             *s = (salt + i as f32 * 1e-3).sin() * 0.2;
         }
         checkpoint::save(path, &cfg, step, None, &[0.5], &state).unwrap();
+    }
+
+    /// The serve-tier forward plan fuses (DESIGN.md §12 Pass E): every
+    /// hidden layer becomes one `MatmulBiasTanh` superinstruction and
+    /// the output layer a `MatmulBias`, and the fused replay answers
+    /// with exactly the bits of the unfused replay.
+    #[test]
+    fn planned_eval_fuses_and_matches_unfused_bits() {
+        use crate::autodiff::{
+            force_fuse_mode, force_plan_mode, fuse_mode_guard, plan_mode_guard, FuseMode,
+            PlanKey, PlanMode,
+        };
+        let _pg = plan_mode_guard();
+        let _fg = fuse_mode_guard();
+        force_plan_mode(PlanMode::On);
+        let model = test_model(6, 11);
+        let xs = points(6, 9, 3);
+        let key = PlanKey {
+            op: "mlp-fwd",
+            scalar_bits: 0,
+            nc: 9,
+            v: 0,
+            d: 6,
+            n_params: model.mlp.n_params(),
+        };
+
+        force_fuse_mode(FuseMode::Off);
+        let mut plain = Vec::new();
+        let mut sc_plain = EvalScratch::default();
+        // twice: once to compile, once to replay the cached plan
+        model.eval_batch(&xs, 9, &mut plain, &mut sc_plain);
+        plain.clear();
+        model.eval_batch(&xs, 9, &mut plain, &mut sc_plain);
+        let st_plain = sc_plain.tape.plan_stats(&key).expect("unfused serve plan cached");
+        assert_eq!(st_plain.fused_mb + st_plain.fused_mbt, 0, "HTE_FUSE=off must not fuse");
+
+        force_fuse_mode(FuseMode::On);
+        let mut fused = Vec::new();
+        let mut sc_fused = EvalScratch::default();
+        model.eval_batch(&xs, 9, &mut fused, &mut sc_fused);
+        fused.clear();
+        model.eval_batch(&xs, 9, &mut fused, &mut sc_fused);
+        let st = sc_fused.tape.plan_stats(&key).expect("fused serve plan cached");
+        assert!(st.fused_mbt >= 1, "hidden layers should fuse to MatmulBiasTanh: {st:?}");
+        assert!(st.fused_mb >= 1, "output layer should fuse to MatmulBias: {st:?}");
+
+        assert_eq!(plain.len(), fused.len());
+        for (a, b) in plain.iter().zip(&fused) {
+            assert_eq!(a.to_bits(), b.to_bits(), "serve-path fusion changed answer bits");
+        }
     }
 
     /// End-to-end loopback: served answers are bitwise the local

@@ -178,6 +178,13 @@ pub trait ShardBackend {
     fn take_events(&mut self) -> Vec<String> {
         Vec::new()
     }
+
+    /// Total plan-cache evictions across the backend's executors
+    /// (surfaced in the run banner; see `HTE_PLAN_CACHE_CAP`).  Remote
+    /// backends that cannot observe their workers' caches report 0.
+    fn plan_evictions(&self) -> u64 {
+        0
+    }
 }
 
 /// Resize `out` to `n` slots, keeping existing gradient buffers for
@@ -255,6 +262,10 @@ impl ShardBackend for InProcessBackend {
 
     fn label(&self) -> String {
         format!("threads={}", self.threads)
+    }
+
+    fn plan_evictions(&self) -> u64 {
+        self.workers.iter().map(|t| t.plan_evictions()).sum()
     }
 }
 

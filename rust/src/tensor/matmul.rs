@@ -109,6 +109,45 @@ pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n:
     matmul_acc(a, b, out, m, k, n);
 }
 
+/// out[m, n] = a[m, k] @ b[k, n] + bias[n] — the fused `Matmul+AddRow`
+/// superinstruction (DESIGN.md §12).  Exactly [`matmul_into`] followed by
+/// the in-place row-broadcast bias add: the same kernels run in the same
+/// order, only the unfused intermediate buffer is gone, so the result is
+/// `to_bits`-identical to the two-instruction composition at every SIMD
+/// level.
+pub fn fused_matmul_bias(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    matmul_into(a, b, out, m, k, n);
+    crate::tensor::simd::add_rows_inplace(out, bias, n);
+}
+
+/// out[m, n] = tanh(a[m, k] @ b[k, n] + bias[n]) — the fused
+/// `Matmul+AddRow+Tanh` superinstruction.  The activation is the same
+/// scalar `f32::tanh` the eager tape and the unfused `Tanh` instruction
+/// apply, element by element in row-major order, so fusion changes no
+/// bits (§12's fusion contract).
+pub fn fused_matmul_bias_tanh(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    fused_matmul_bias(a, b, bias, out, m, k, n);
+    for x in out.iter_mut() {
+        *x = x.tanh();
+    }
+}
+
 /// out[m, n] += a^T @ b with a: [rows, m], b: [rows, n] (weight gradients).
 pub fn matmul_tn_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, m: usize, n: usize) {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
@@ -395,6 +434,63 @@ mod tests {
             scalar_nt_acc(&a, &b_nt, &mut want, m, k, n);
             assert_bitwise(&got, &want, &format!("matmul_nt_into ({m},{k},{n})"));
         }
+    }
+
+    /// The fused `Matmul+AddRow(+Tanh)` plan superinstructions must be
+    /// bitwise the unfused instruction composition they replace — per
+    /// fused pattern, per forced SIMD level, across remainder-lane shapes
+    /// (the §12 fusion contract at the kernel layer).
+    #[test]
+    fn fused_plan_kernels_bitwise_match_unfused_composition() {
+        use crate::tensor::simd::{
+            add_rows, detect_simd_level, force_simd_level, simd_level_guard, SimdLevel,
+        };
+        let _guard = simd_level_guard();
+        let prior = crate::tensor::simd::simd_level();
+        let mut levels = vec![SimdLevel::Scalar];
+        let vector = detect_simd_level();
+        if vector != SimdLevel::Scalar {
+            levels.push(vector);
+        }
+        let mut seed = 11u64;
+        for (m, k, n) in [
+            (1, 1, 1),
+            (2, 3, 5),
+            (4, 4, 4),
+            (5, 6, 7),
+            (3, 256, 8),
+            (6, 513, 5),
+            (4, 128, 33),
+        ] {
+            let a = fill(&mut seed, m * k);
+            let b = fill(&mut seed, k * n);
+            let bias = fill(&mut seed, n);
+            for &level in &levels {
+                force_simd_level(level);
+                // unfused: Matmul (fill + acc) into z, AddRow z -> h
+                let mut z = vec![1.0f32; m * n];
+                matmul_into(&a, &b, &mut z, m, k, n);
+                let mut h = vec![0.0f32; m * n];
+                add_rows(&mut h, &z, &bias, n);
+                let mut fused = vec![1.0f32; m * n];
+                fused_matmul_bias(&a, &b, &bias, &mut fused, m, k, n);
+                assert_bitwise(
+                    &fused,
+                    &h,
+                    &format!("fused_matmul_bias ({m},{k},{n}) level={level:?}"),
+                );
+                // …then the standalone Tanh instruction on h
+                let t: Vec<f32> = h.iter().map(|x| x.tanh()).collect();
+                let mut fused_t = vec![1.0f32; m * n];
+                fused_matmul_bias_tanh(&a, &b, &bias, &mut fused_t, m, k, n);
+                assert_bitwise(
+                    &fused_t,
+                    &t,
+                    &format!("fused_matmul_bias_tanh ({m},{k},{n}) level={level:?}"),
+                );
+            }
+        }
+        force_simd_level(prior);
     }
 
     #[test]

@@ -11,8 +11,9 @@ mod pool;
 pub mod simd;
 
 pub use matmul::{
-    matmul_acc, matmul_acc_scalar, matmul_into, matmul_nt_acc, matmul_nt_acc_scalar,
-    matmul_nt_into, matmul_tn_acc, matmul_tn_acc_scalar, matmul_tn_into,
+    fused_matmul_bias, fused_matmul_bias_tanh, matmul_acc, matmul_acc_scalar, matmul_into,
+    matmul_nt_acc, matmul_nt_acc_scalar, matmul_nt_into, matmul_tn_acc, matmul_tn_acc_scalar,
+    matmul_tn_into,
 };
 pub use pool::BufferPool;
 pub use simd::{detect_simd_level, force_simd_level, simd_level, simd_level_guard, SimdLevel};

@@ -540,6 +540,34 @@ dispatch_kernel! {
 }
 
 #[inline(always)]
+unsafe fn add_rows_inplace_body<L: Lanes>(out: &mut [f32], bias: &[f32], c: usize) {
+    debug_assert_eq!(bias.len(), c);
+    let rows = if c == 0 { 0 } else { out.len() / c };
+    let bp = bias.as_ptr();
+    for r in 0..rows {
+        let op = out.as_mut_ptr().add(r * c);
+        let mut j = 0;
+        while j + L::N <= c {
+            L::ld(op.add(j)).add(L::ld(bp.add(j))).st(op.add(j));
+            j += L::N;
+        }
+        while j < c {
+            *op.add(j) += *bp.add(j);
+            j += 1;
+        }
+    }
+}
+
+dispatch_kernel! {
+    /// out[r, ·] += bias — the in-place half of [`add_rows`], used by the
+    /// fused plan instructions (DESIGN.md §12) where the unfused `a`
+    /// operand has been eliminated.  Same per-element expression
+    /// (`a[r,j] + bias[j]`) with `a` aliased to `out`, so the result bits
+    /// match the two-buffer kernel exactly.
+    add_rows_inplace => add_rows_inplace_body(out: &mut [f32], bias: &[f32], c: usize)
+}
+
+#[inline(always)]
 unsafe fn broadcast_rows_bwd_body<L: Lanes>(ga: &mut [f32], g: &[f32], group: usize, c: usize) {
     debug_assert_eq!(g.len(), ga.len() * group);
     let rows = if c == 0 { 0 } else { g.len() / c };
@@ -1744,6 +1772,11 @@ mod tests {
                     add_rows(&mut o, &g, &bias, c);
                     o
                 })),
+                ("add_rows_inplace", Box::new(|| {
+                    let mut o = g.clone();
+                    add_rows_inplace(&mut o, &bias, c);
+                    o
+                })),
                 ("broadcast_rows_bwd", Box::new(|| {
                     let mut o = init_n.clone();
                     broadcast_rows_bwd(&mut o, &g, group, c);
@@ -1824,6 +1857,39 @@ mod tests {
                     &vectorized,
                     &scalar,
                     &format!("{name} (n={n}, group={group}, c={c}, level={})", vector.name()),
+                );
+            }
+        }
+        force_simd_level(prior);
+    }
+
+    /// The in-place bias add used by the fused plan instructions must be
+    /// bitwise the two-buffer [`add_rows`] it replaces, at every forced
+    /// SIMD level and across remainder-lane widths — the §12 fusion
+    /// contract at the kernel layer.
+    #[test]
+    fn fused_plan_bias_inplace_bitwise_matches_unfused() {
+        let _guard = simd_level_guard();
+        let prior = simd_level();
+        let mut levels = vec![SimdLevel::Scalar];
+        let vector = detect_simd_level();
+        if vector != SimdLevel::Scalar {
+            levels.push(vector);
+        }
+        let mut seed = 77u64;
+        for (rows, c) in [(1usize, 1usize), (2, 5), (3, 7), (4, 8), (2, 17), (5, 33), (2, 128)] {
+            let a = fill(&mut seed, rows * c);
+            let bias = fill(&mut seed, c);
+            for &level in &levels {
+                force_simd_level(level);
+                let mut unfused = vec![0.0f32; rows * c];
+                add_rows(&mut unfused, &a, &bias, c);
+                let mut fused = a.clone();
+                add_rows_inplace(&mut fused, &bias, c);
+                assert_bits(
+                    &fused,
+                    &unfused,
+                    &format!("add_rows_inplace vs add_rows (rows={rows}, c={c}, {})", level.name()),
                 );
             }
         }

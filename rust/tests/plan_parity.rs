@@ -11,10 +11,14 @@
 //! Coverage axes: all five residual families, chunk-remainder batch
 //! shapes, forced SIMD levels, and 1/2/16 worker threads.
 
-use hte_pinn::autodiff::{force_plan_mode, plan_mode, plan_mode_guard, PlanMode};
+use hte_pinn::autodiff::{
+    force_fuse_mode, force_plan_mode, fuse_mode, fuse_mode_guard, plan_mode, plan_mode_guard,
+    FuseMode, PlanMode,
+};
 use hte_pinn::coordinator::problem_for;
 use hte_pinn::nn::{
-    GpinnResidual, Mlp, NativeBatch, NativeEngine, ResidualOp, UnbiasedTrace,
+    force_arena_budget_kb, plan_chunk_points, GpinnResidual, Mlp, NativeBatch, NativeEngine,
+    ResidualOp, UnbiasedTrace, CHUNK_POINTS,
 };
 use hte_pinn::pde::{Domain, DomainSampler, PdeProblem};
 use hte_pinn::rng::{fill_rademacher, Normal, Xoshiro256pp};
@@ -211,6 +215,89 @@ fn plan_replay_bitwise_across_thread_counts() {
         let ac2 = Case::allen_cahn(6, 13, 4, 11);
         assert_plan_replay_matches_eager(&ac2, None, threads, &format!("ac2 t={threads}"));
     }
+}
+
+/// The fusion matrix (DESIGN.md §12 Pass E): fusion on/off ×
+/// full/shrunk chunk × 1/2/16 threads, for all five residual families,
+/// every combination gated bitwise on the loss and every gradient
+/// element against the eager baseline.  Because the eager baseline is
+/// independent of both knobs, this also proves fused replay ==
+/// unfused replay at every point of the matrix.
+#[test]
+fn fused_replay_bitwise_families_chunks_threads() {
+    let _plan_guard = plan_mode_guard();
+    let _fuse_guard = fuse_mode_guard();
+    let prior_fuse = fuse_mode();
+    // 0 KB disables the budget (full CHUNK_POINTS chunks); 1 KB can
+    // never fit an arena, so plan_chunk_points clamps to 1-point
+    // chunks — the two extremes of the chunk-shrinking hook.
+    for kb in [0usize, 1] {
+        force_arena_budget_kb(kb);
+        let expect = if kb == 0 { CHUNK_POINTS } else { 1 };
+        assert_eq!(
+            plan_chunk_points(6, 4, 2, Mlp::n_params_for(6)),
+            expect,
+            "kb={kb}: chunk hook"
+        );
+        for threads in [1usize, 2, 16] {
+            for fuse in [FuseMode::Off, FuseMode::On] {
+                force_fuse_mode(fuse);
+                let tag = |f: &str| format!("{f} kb={kb} t={threads} fuse={fuse:?}");
+
+                let sg2 = Case::new(6, 13, 4, 41);
+                assert_plan_replay_matches_eager(&sg2, None, threads, &tag("sg2"));
+                let ac2 = Case::allen_cahn(6, 13, 4, 43);
+                assert_plan_replay_matches_eager(&ac2, None, threads, &tag("ac2"));
+                let bihar = Case::bihar(6, 13, 4, 47);
+                assert_plan_replay_matches_eager(&bihar, None, threads, &tag("bihar"));
+                let unbiased = Case::unbiased(6, 13, 4, 53);
+                assert_plan_replay_matches_eager(
+                    &unbiased,
+                    Some(&UnbiasedTrace),
+                    threads,
+                    &tag("unbiased"),
+                );
+                let gpinn = Case::new(6, 13, 4, 59);
+                let op = GpinnResidual { lambda: 0.8 };
+                assert_plan_replay_matches_eager(&gpinn, Some(&op), threads, &tag("gpinn"));
+            }
+        }
+    }
+    force_arena_budget_kb(0);
+    force_fuse_mode(prior_fuse);
+}
+
+/// Fused-kernel property gate at forced SIMD levels: the fused replay
+/// must hold its bitwise contract at scalar *and* the detected vector
+/// level, on a remainder-tail batch shape (n = 13).
+#[test]
+fn fused_replay_bitwise_under_forced_simd_levels() {
+    let _simd_guard = simd_level_guard();
+    let _plan_guard = plan_mode_guard();
+    let _fuse_guard = fuse_mode_guard();
+    let prior_simd = simd_level();
+    let prior_fuse = fuse_mode();
+    let mut levels = vec![SimdLevel::Scalar];
+    let vector = detect_simd_level();
+    if vector != SimdLevel::Scalar {
+        levels.push(vector);
+    }
+    for level in levels {
+        force_simd_level(level);
+        for fuse in [FuseMode::Off, FuseMode::On] {
+            force_fuse_mode(fuse);
+            let tag = |f: &str| format!("{f} simd={level:?} fuse={fuse:?}");
+            let sg2 = Case::new(6, 13, 4, 17);
+            assert_plan_replay_matches_eager(&sg2, None, 2, &tag("sg2"));
+            let bihar = Case::bihar(6, 13, 4, 23);
+            assert_plan_replay_matches_eager(&bihar, None, 2, &tag("bihar"));
+            let op = GpinnResidual { lambda: 0.5 };
+            let gpinn = Case::new(6, 13, 4, 19);
+            assert_plan_replay_matches_eager(&gpinn, Some(&op), 2, &tag("gpinn"));
+        }
+    }
+    force_simd_level(prior_simd);
+    force_fuse_mode(prior_fuse);
 }
 
 /// SIMD-level sweep: replay dispatches through the same `tensor::simd`
